@@ -1,0 +1,87 @@
+//! Contention study: sweep the inter-device conflict probability and watch
+//! SHeTM's policies react (the §V-C phenomenology, in miniature).
+//!
+//! ```bash
+//! cargo run --release --example contention_study
+//! ```
+//!
+//! Three systems run the same conflict-injected workload:
+//!   * SHeTM with early validation,
+//!   * SHeTM without early validation,
+//!   * SHeTM with the favor-GPU policy.
+//! Reported per conflict level: throughput, round abort rate, and the GPU
+//! work wasted (discarded speculative commits).
+
+use shetm::apps::synth::SynthSpec;
+use shetm::config::{PolicyKind, Raw, SystemConfig};
+use shetm::coordinator::round::Variant;
+use shetm::gpu::Backend;
+use shetm::launch;
+
+fn run(
+    cfg: &SystemConfig,
+    conflict: f64,
+    early: bool,
+    policy: PolicyKind,
+) -> anyhow::Result<(f64, f64, u64)> {
+    let n = cfg.n_words;
+    let mut cfg = cfg.clone();
+    cfg.early_validation = early;
+    cfg.policy = policy;
+    let cpu_spec = SynthSpec::w1(n, 1.0)
+        .partitioned(0..n / 2)
+        .with_conflicts(conflict, n / 2..n);
+    let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+    let mut engine = launch::build_synth_engine(
+        &cfg,
+        Variant::Optimized,
+        cpu_spec,
+        gpu_spec,
+        1024,
+        Backend::Native,
+    );
+    engine.run_rounds(12)?;
+    Ok((
+        engine.stats.throughput(),
+        engine.stats.round_abort_rate(),
+        engine.stats.discarded_commits,
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut raw = Raw::new();
+    raw.set("stmr.n_words=65536")?;
+    raw.set("hetm.period_ms=8")?;
+    raw.set("cpu.txn_ns=2000")?;
+    raw.set("gpu.txn_ns=230")?;
+    let cfg = SystemConfig::from_raw(&raw)?;
+
+    println!(
+        "{:>9} | {:>12} {:>7} {:>9} | {:>12} {:>7} {:>9} | {:>12} {:>7}",
+        "conflict",
+        "tx/s(early)",
+        "aborts",
+        "wasted",
+        "tx/s(plain)",
+        "aborts",
+        "wasted",
+        "tx/s(f-gpu)",
+        "aborts"
+    );
+    for conflict in [0.0, 1e-5, 1e-4, 1e-3] {
+        let (t1, a1, w1) = run(&cfg, conflict, true, PolicyKind::FavorCpu)?;
+        let (t2, a2, w2) = run(&cfg, conflict, false, PolicyKind::FavorCpu)?;
+        let (t3, a3, _) = run(&cfg, conflict, false, PolicyKind::FavorGpu)?;
+        println!(
+            "{:>9.0e} | {:>12.0} {:>7.2} {:>9} | {:>12.0} {:>7.2} {:>9} | {:>12.0} {:>7.2}",
+            conflict, t1, a1, w1, t2, a2, w2, t3, a3
+        );
+    }
+    println!(
+        "\nNote: conflict here is *per CPU transaction*; a whole round \
+         aborts if any of its thousands of transactions conflicts, so tiny \
+         per-txn probabilities saturate the round abort rate — exactly why \
+         the paper studies conflict-aware dispatching (§IV-A)."
+    );
+    Ok(())
+}

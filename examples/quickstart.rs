@@ -1,0 +1,63 @@
+//! Quickstart: assemble a SHeTM platform over a synthetic workload, run a
+//! few synchronization rounds and inspect the results.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the smallest complete use of the public API: one guest TM on the
+//! CPU side, the simulated accelerator on the other, both halves of the
+//! STMR partitioned so the devices never conflict, the default favor-CPU
+//! policy and the optimized (Fig. 1b) round algorithm.
+
+use shetm::apps::synth::SynthSpec;
+use shetm::config::{Raw, SystemConfig};
+use shetm::coordinator::round::{CpuDriver, Variant};
+use shetm::gpu::Backend;
+use shetm::launch;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configuration: defaults + a couple of overrides.  Everything here
+    //    could also come from a TOML-subset file via `Raw::load`.
+    let mut raw = Raw::new();
+    raw.set("stmr.n_words=65536")?;
+    raw.set("hetm.period_ms=10")?;
+    raw.set("cpu.txn_ns=2000")?; // scaled testbed: ~4M tx/s across 8 workers
+    raw.set("gpu.txn_ns=230")?;
+    let cfg = SystemConfig::from_raw(&raw)?;
+
+    // 2. Workload: W1 (4 reads / 4 writes, 100% updates) with each device
+    //    confined to its own half of the STMR -> no inter-device conflicts.
+    let n = cfg.n_words;
+    let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+    let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+
+    // 3. Assemble and run. Backend::Native uses the Rust kernel mirrors;
+    //    pass `--set runtime.artifacts=artifacts` (see e2e_serving.rs) to
+    //    execute the AOT-compiled jax/Pallas kernels through PJRT instead.
+    let mut engine = launch::build_synth_engine(
+        &cfg,
+        Variant::Optimized,
+        cpu_spec,
+        gpu_spec,
+        1024,
+        Backend::Native,
+    );
+    engine.run_rounds(20)?;
+
+    // 4. Results.
+    let s = &engine.stats;
+    println!("rounds committed : {}/{}", s.rounds_committed, s.rounds);
+    println!("cpu commits      : {}", s.cpu_commits);
+    println!("gpu commits      : {}", s.gpu_commits);
+    println!("throughput       : {:.2} M tx/s", s.throughput() / 1e6);
+    assert_eq!(s.rounds_committed, s.rounds, "partitioned workload");
+
+    // The replicas are guaranteed to agree after draining the commits the
+    // CPU made while the last round was validating (§IV-D non-blocking).
+    engine.drain()?;
+    let cpu_view = engine.cpu.stmr().snapshot();
+    assert_eq!(&cpu_view[..], engine.device.stmr());
+    println!("replicas agree   : yes ({} words)", cpu_view.len());
+    Ok(())
+}

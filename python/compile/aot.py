@@ -1,0 +1,124 @@
+"""AOT compiler: lower the L2 jax step functions to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+resulting ``artifacts/*.hlo.txt`` through the PJRT C API and Python never
+appears on the request path again.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+A ``manifest.txt`` accompanies the artifacts: one line per kernel with
+whitespace-separated ``key=value`` fields (a deliberately dependency-free
+format — the offline Rust side has no serde).  The Rust artifact store
+(rust/src/runtime/artifacts.rs) keys executables by the ``name`` field.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# --------------------------------------------------------------------------
+# Artifact catalogue.
+#
+# Shapes are fixed at AOT time (PJRT executables are shape-monomorphic).
+# Sizes are the scaled-down defaults discussed in DESIGN.md §2: the paper's
+# 600 MB STMR becomes 2^18 words (1 MiB) for the synthetic workloads and
+# 32768 cache sets (~4.1 MiB) for memcached; benches sweep ratios, not
+# absolute footprints.
+#
+# bmp_shift 0 => 4 B granule  ("small bmp" in Fig. 2)
+# bmp_shift 8 => 1 KiB granule ("large bmp" in Fig. 2)
+# --------------------------------------------------------------------------
+
+SYNTH_N = 1 << 18          # STMR words for synthetic workloads
+BATCH = 1024               # GPU transactions per kernel activation
+CHUNK = 4096               # CPU log entries per validation chunk
+                           # (paper: 48 KB chunks = 4096 x 12 B entries)
+MC_SETS = 1 << 15          # memcached sets (paper: 1 M, scaled)
+MC_Q = 1024                # memcached requests per kernel activation
+MC_N = MC_SETS * 33        # memcached STMR words (33 words/set)
+
+
+def catalogue():
+    """Yield (name, kind, fn, specs, params) for every artifact."""
+    for r in (4, 40):
+        for g in (0, 8):
+            name = f"prstm_r{r}_g{g}"
+            fn, specs = model.make_prstm_fn(
+                n=SYNTH_N, b=BATCH, r=r, w=4, lock_shift=0, bmp_shift=g)
+            yield name, "prstm", fn, specs, dict(
+                n=SYNTH_N, b=BATCH, r=r, w=4, lock_shift=0, bmp_shift=g)
+    for g in (0, 8):
+        name = f"validate_synth_g{g}"
+        fn, specs = model.make_validate_fn(n=SYNTH_N, c=CHUNK, bmp_shift=g)
+        yield name, "validate", fn, specs, dict(
+            n=SYNTH_N, c=CHUNK, bmp_shift=g)
+    fn, specs = model.make_validate_fn(n=MC_N, c=CHUNK, bmp_shift=0)
+    yield "validate_mc_g0", "validate", fn, specs, dict(
+        n=MC_N, c=CHUNK, bmp_shift=0)
+    fn, specs = model.make_memcached_fn(n_sets=MC_SETS, q=MC_Q, bmp_shift=0)
+    yield "memcached", "memcached", fn, specs, dict(
+        n=MC_N, n_sets=MC_SETS, q=MC_Q, bmp_shift=0)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned, 32-bit)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None,
+                    help="compile only artifacts whose name contains this")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, kind, fn, specs, params in catalogue():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        fields = " ".join(f"{k}={v}" for k, v in sorted(params.items()))
+        manifest_lines.append(f"name={name} kind={kind} file={fname} {fields}")
+        print(f"[aot] {name}: {len(text)} chars -> {fname}", file=sys.stderr)
+
+    # Merge with any existing manifest so `--only` rebuilds do not drop
+    # the other artifacts' entries.
+    manifest_path = os.path.join(out_dir, "manifest.txt")
+    if args.only and os.path.exists(manifest_path):
+        new_names = {l.split()[0] for l in manifest_lines}
+        with open(manifest_path) as f:
+            for line in f:
+                line = line.strip()
+                if line and line.split()[0] not in new_names:
+                    manifest_lines.append(line)
+        manifest_lines.sort()
+    with open(manifest_path, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"[aot] wrote {len(manifest_lines)} artifacts to {out_dir}",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,56 @@
+"""Shared constants and helpers for the SHeTM kernels.
+
+All kernels operate on a word-indexed STMR (`i32[N]`).  The conventions
+here MUST stay in sync with the Rust side (`rust/src/gpu/`):
+
+- padding address sentinel is ``-1`` (entries with addr < 0 are ignored),
+- priorities are non-negative ``i32``; ``INF`` marks an unclaimed lock,
+- bitmaps are ``i32`` arrays with one entry per *granule*
+  (``granule = 1 << bmp_shift`` STMR words); an entry is 0 or 1,
+- the memcached STMR layout is 33 words per set (see ``memcached.py``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Unclaimed-lock sentinel.  i32 max.
+INF = jnp.int32(2**31 - 1)
+
+# Padding sentinel for addresses / indices.
+PAD = -1
+
+# Memcached STMR layout (words per set and intra-set offsets).
+MC_WAYS = 8
+MC_OFF_KEYS = 0
+MC_OFF_VALS = 8
+MC_OFF_TS_CPU = 16
+MC_OFF_TS_GPU = 24
+MC_OFF_SET_TS = 32
+MC_WORDS_PER_SET = 33
+
+# Knuth multiplicative hash constant (as signed i32 arithmetic).
+MC_HASH_MULT = 2654435761
+
+
+def mc_hash(key, n_sets: int):
+    """Hash a key (i32 array) to a set index in ``[0, n_sets)``.
+
+    ``n_sets`` must be a power of two.  Arithmetic wraps mod 2^32, which is
+    what both numpy int32 overflow and the Rust u32 implementation produce.
+    """
+    assert n_sets & (n_sets - 1) == 0, "n_sets must be a power of two"
+    # Parity-preserving: the set's last bit equals the key's last bit, so
+    # key-parity load balancing yields device-disjoint sets (paper §V-D:
+    # "the input queues of the CPU and GPU can never contain operations
+    # that access a common set").
+    k = key.astype(jnp.uint32)
+    h = (k * jnp.uint32(MC_HASH_MULT)) >> jnp.uint32(7)
+    s = (h << jnp.uint32(1)) | (k & jnp.uint32(1))
+    return (s & jnp.uint32(n_sets - 1)).astype(jnp.int32)
+
+
+def bmp_len(n_words: int, bmp_shift: int) -> int:
+    """Number of bitmap entries covering ``n_words`` at ``1 << bmp_shift``."""
+    gran = 1 << bmp_shift
+    return (n_words + gran - 1) // gran

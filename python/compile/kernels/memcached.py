@@ -1,0 +1,100 @@
+"""MemcachedGPU batch probe kernel (Layer 1, Pallas).
+
+Reproduces the GPU half of the paper's §V-D application: an 8-way
+set-associative object cache whose sets live inside the STMR.  The
+original MemcachedGPU searches the target set "in parallel" with a warp
+per request; here a request block probes its sets with one vectorized
+8-wide gather/compare — the TPU-shaped equivalent.
+
+STMR layout, 33 words per set (kept in sync with rust/src/apps/memcached.rs):
+
+  +0..8   keys      (-1 = empty slot)
+  +8..16  values
+  +16..24 per-slot LRU timestamps, CPU device clock
+  +24..32 per-slot LRU timestamps, GPU device clock
+  +32     per-set timestamp (common word; touched by every PUT so that
+          inter-device PUT/PUT on the same set always conflicts)
+
+Device-local LRU clocks are the paper's trick for making CPU GETs and GPU
+GETs never conflict with each other (§V-D).
+
+The kernel only *probes* (find matching slot, LRU victim, current value);
+lock arbitration, scatter application and bitmap updates are pure
+gather/scatter and live in ``model.memcached_step``.
+
+Outputs per request:
+  slot : chosen slot (match slot for hits, LRU victim for PUT misses,
+         -1 for GET misses)
+  hit  : 1 if the key was found
+  val  : current value for hits, -1 otherwise
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (MC_OFF_KEYS, MC_OFF_TS_GPU, MC_OFF_VALS, MC_WAYS,
+                     MC_WORDS_PER_SET)
+
+# Requests per grid step.
+REQ_BLOCK = 256
+
+
+def _probe_kernel(stmr_ref, set_ref, key_ref, op_ref,
+                  slot_ref, hit_ref, val_ref):
+    stmr = stmr_ref[...]                    # [n_words] resident
+    set_idx = set_ref[...]                  # [QB]
+    key = key_ref[...]                      # [QB]
+    op = op_ref[...]                        # [QB] 0=GET 1=PUT
+
+    base = set_idx * MC_WORDS_PER_SET       # [QB]
+    ways = jnp.arange(MC_WAYS, dtype=jnp.int32)
+
+    keys8 = stmr[base[:, None] + MC_OFF_KEYS + ways]       # [QB, 8]
+    match = keys8 == key[:, None]
+    hit = match.any(axis=1)
+    match_slot = jnp.argmax(match, axis=1).astype(jnp.int32)
+
+    # LRU victim under the GPU's device-local clock.  Empty slots carry
+    # timestamp 0 and are evicted first.
+    ts8 = stmr[base[:, None] + MC_OFF_TS_GPU + ways]        # [QB, 8]
+    lru_slot = jnp.argmin(ts8, axis=1).astype(jnp.int32)
+
+    slot = jnp.where(hit, match_slot,
+                     jnp.where(op == 1, lru_slot, jnp.int32(-1)))
+    val = jnp.where(hit, stmr[base + MC_OFF_VALS + match_slot], jnp.int32(-1))
+
+    slot_ref[...] = slot
+    hit_ref[...] = hit.astype(jnp.int32)
+    val_ref[...] = val
+
+
+def probe(stmr, set_idx, key, op):
+    """Probe the cache for a batch of requests (STMR resident per block)."""
+    (q,) = key.shape
+    (n_words,) = stmr.shape
+    assert q % REQ_BLOCK == 0, f"batch {q} must be a multiple of {REQ_BLOCK}"
+    grid = (q // REQ_BLOCK,)
+
+    out_shape = jax.ShapeDtypeStruct((q,), jnp.int32)
+    return pl.pallas_call(
+        _probe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_words,), lambda i: (0,)),
+            pl.BlockSpec((REQ_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((REQ_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((REQ_BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((REQ_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((REQ_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((REQ_BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[out_shape, out_shape, out_shape],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(stmr, set_idx, key, op)

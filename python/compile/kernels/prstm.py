@@ -1,0 +1,99 @@
+"""PR-STM-style batch transaction kernel (Layer 1, Pallas).
+
+Reproduces the *essence* of PR-STM [Shen et al., Euro-Par'15] — the GPU
+guest TM used by SHeTM — re-thought for the TPU execution model (see
+DESIGN.md §Hardware-Adaptation):
+
+- CUDA per-thread lock/retry loops become one vectorized *scatter-min of
+  transaction priority* into a lock table (done in the surrounding jax code,
+  ``model.prstm_step``), followed by this Pallas kernel which, for every
+  transaction, gathers the locks of its read- and write-set and decides
+  commit/abort by the priority rule.
+- The lock table stays resident (VMEM analog) across the grid while
+  transaction blocks stream through, mirroring PR-STM's shared-memory lock
+  table schedule.
+
+A transaction commits iff
+  * it owns (holds lowest priority on) the lock of every word it writes, and
+  * every word it reads is unlocked, locked by itself, or locked by a
+    LOWER-priority (numerically higher) transaction — i.e. a writer that
+    serializes after the reader.  Sorting committers by priority is then a
+    valid serial order (each reader precedes every writer of its read set),
+    which is exactly PR-STM's priority rule: the higher-priority side of a
+    read-write conflict proceeds, the other aborts.
+
+Losers abort and are retried by the host in a later kernel activation —
+the host-side retry replaces PR-STM's in-kernel retry loop.
+
+Shapes (fixed at AOT time):
+  lock      : i32[n_lock]        lock table, INF = unclaimed
+  read_idx  : i32[B, R]          word indices, -1 = padding
+  write_idx : i32[B, W]
+  prio      : i32[B]             unique, non-negative
+  out       : i32[B]             1 = commit, 0 = abort
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Unclaimed-lock sentinel as a python int: pallas kernels may not capture
+# jax array constants, and a literal folds into the HLO directly.
+INF = 2**31 - 1
+
+# Transactions per grid step.  Small enough that (block + resident lock
+# table) fits VMEM for every artifact variant we compile (see DESIGN.md §8).
+TXN_BLOCK = 256
+
+
+def _prio_check_kernel(lock_ref, read_ref, write_ref, prio_ref, out_ref,
+                       *, lock_shift: int):
+    lock = lock_ref[...]            # [n_lock] resident
+    ridx = read_ref[...]            # [TB, R]
+    widx = write_ref[...]           # [TB, W]
+    prio = prio_ref[...]            # [TB]
+
+    # Write ownership: every non-padding written word's lock holds my prio.
+    wl = jnp.where(widx >= 0, widx >> lock_shift, 0)
+    owns = jnp.where(widx >= 0, lock[wl] == prio[:, None], True).all(axis=1)
+
+    # Read visibility: the lock table holds the MIN claimant priority, and
+    # INF > any priority, so one comparison covers unclaimed / mine /
+    # claimed-by-later-writer: lock >= my priority.
+    rl = jnp.where(ridx >= 0, ridx >> lock_shift, 0)
+    lr = lock[rl]
+    read_ok = jnp.where(ridx >= 0, lr >= prio[:, None], True).all(axis=1)
+
+    out_ref[...] = (owns & read_ok).astype(jnp.int32)
+
+
+def prio_check(lock, read_idx, write_idx, prio, *, lock_shift: int):
+    """Pallas commit/abort decision for a whole batch.
+
+    The lock table is mapped whole into every grid step (BlockSpec index_map
+    pins it to block 0); transaction rows are tiled in ``TXN_BLOCK`` chunks.
+    """
+    b, r = read_idx.shape
+    _, w = write_idx.shape
+    n_lock = lock.shape[0]
+    assert b % TXN_BLOCK == 0, f"batch {b} must be a multiple of {TXN_BLOCK}"
+    grid = (b // TXN_BLOCK,)
+
+    kernel = functools.partial(_prio_check_kernel, lock_shift=lock_shift)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_lock,), lambda i: (0,)),
+            pl.BlockSpec((TXN_BLOCK, r), lambda i: (i, 0)),
+            pl.BlockSpec((TXN_BLOCK, w), lambda i: (i, 0)),
+            pl.BlockSpec((TXN_BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TXN_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(lock, read_idx, write_idx, prio)

@@ -1,0 +1,209 @@
+"""Pure-numpy sequential oracles for every SHeTM kernel.
+
+These are deliberately written as explicit python loops — slow but
+obviously-correct transcriptions of the paper's algorithms — and serve as
+the ground truth the vectorized jax/Pallas implementations in ``model.py``
+are tested against (python/tests/).  The Rust native mirrors
+(rust/src/gpu/) implement the SAME semantics; cross-language agreement is
+asserted by the Rust integration tests via golden vectors.
+
+Semantics notes mirroring model.py:
+  * a transaction commits iff it owns the lock (min priority) of every
+    granule it writes and every granule it reads is unclaimed, its own, or
+    claimed by a LOWER-priority (later-serialized) transaction;
+  * validation applies a log entry iff its timestamp is >= the freshest
+    timestamp already applied to that word, later chunk positions winning
+    timestamp ties;
+  * memcached arbitration: PUT claims the set, GET hit claims the slot and
+    loses to any PUT on the set, GET miss is read-only but still loses to a
+    PUT on the set.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (MC_HASH_MULT, MC_OFF_KEYS, MC_OFF_SET_TS, MC_OFF_TS_GPU,
+                     MC_OFF_VALS, MC_WAYS, MC_WORDS_PER_SET)
+
+INF = np.int32(2**31 - 1)
+
+
+# --------------------------------------------------------------------------
+# PR-STM batch
+# --------------------------------------------------------------------------
+
+
+def prstm_step_ref(stmr, rs_bmp, ws_bmp, read_idx, write_idx, write_val, op,
+                   prio, *, lock_shift: int, bmp_shift: int):
+    stmr = stmr.copy()
+    rs_bmp = rs_bmp.copy()
+    ws_bmp = ws_bmp.copy()
+    n = len(stmr)
+    b = len(prio)
+    n_lock = n >> lock_shift
+
+    lock = {}
+    for i in range(b):
+        for a in write_idx[i]:
+            if a >= 0:
+                g = int(a) >> lock_shift
+                assert g < n_lock
+                lock[g] = min(lock.get(g, int(INF)), int(prio[i]))
+
+    commit = np.zeros(b, np.int32)
+    for i in range(b):
+        p = int(prio[i])
+        ok = all(lock.get(int(a) >> lock_shift, int(INF)) == p
+                 for a in write_idx[i] if a >= 0)
+        if ok:
+            for a in read_idx[i]:
+                if a >= 0:
+                    holder = lock.get(int(a) >> lock_shift, int(INF))
+                    if holder < p:  # an EARLIER writer invalidates my read
+                        ok = False
+                        break
+        commit[i] = 1 if ok else 0
+
+    for i in range(b):
+        if not commit[i]:
+            continue
+        for a, v in zip(write_idx[i], write_val[i]):
+            if a < 0:
+                continue
+            if op[i] == 0:
+                total = (int(stmr[a]) + int(v) + 2**31) % 2**32 - 2**31
+                stmr[a] = np.int32(total)
+            else:
+                stmr[a] = v
+        for a in read_idx[i]:
+            if a >= 0:
+                rs_bmp[int(a) >> bmp_shift] = 1
+        for a in write_idx[i]:
+            if a >= 0:
+                rs_bmp[int(a) >> bmp_shift] = 1
+                ws_bmp[int(a) >> bmp_shift] = 1
+
+    return stmr, rs_bmp, ws_bmp, commit, np.int32(commit.sum())
+
+
+# --------------------------------------------------------------------------
+# Validation
+# --------------------------------------------------------------------------
+
+
+def validate_step_ref(stmr, ts_arr, rs_bmp, addrs, vals, ts, *,
+                      bmp_shift: int):
+    stmr = stmr.copy()
+    ts_arr = ts_arr.copy()
+    n_conf = 0
+    # Sequential replay in (timestamp, position) order: identical outcome
+    # to the vectorized freshness-guarded scatter.
+    order = sorted(range(len(addrs)), key=lambda i: (int(ts[i]), i))
+    for i in range(len(addrs)):
+        if addrs[i] >= 0 and rs_bmp[int(addrs[i]) >> bmp_shift] != 0:
+            n_conf += 1
+    for i in order:
+        a = int(addrs[i])
+        if a < 0:
+            continue
+        if int(ts[i]) >= int(ts_arr[a]):
+            ts_arr[a] = ts[i]
+            stmr[a] = vals[i]
+    return stmr, ts_arr, np.int32(n_conf)
+
+
+# --------------------------------------------------------------------------
+# Memcached batch
+# --------------------------------------------------------------------------
+
+
+def mc_hash_ref(key: int, n_sets: int) -> int:
+    k = int(key) & 0xFFFFFFFF
+    h = ((k * MC_HASH_MULT) & 0xFFFFFFFF) >> 7
+    return (((h << 1) | (k & 1)) & 0xFFFFFFFF) & (n_sets - 1)
+
+
+def memcached_step_ref(stmr, rs_bmp, ws_bmp, op, key, val, clk0, *,
+                       n_sets: int, bmp_shift: int):
+    stmr = stmr.copy()
+    rs_bmp = rs_bmp.copy()
+    ws_bmp = ws_bmp.copy()
+    q = len(key)
+    out_val = np.full(q, -1, np.int32)
+    commit = np.zeros(q, np.int32)
+
+    set_idx = [mc_hash_ref(int(k), n_sets) for k in key]
+
+    # Probe against the PRE-batch state (matches the vectorized kernel,
+    # which probes everything before applying anything).
+    probe = []
+    for i in range(q):
+        base = set_idx[i] * MC_WORDS_PER_SET
+        keys8 = stmr[base + MC_OFF_KEYS: base + MC_OFF_KEYS + MC_WAYS]
+        hit_slots = [s for s in range(MC_WAYS) if int(keys8[s]) == int(key[i])]
+        if hit_slots:
+            probe.append((True, hit_slots[0]))
+        elif op[i] == 1:
+            ts8 = stmr[base + MC_OFF_TS_GPU: base + MC_OFF_TS_GPU + MC_WAYS]
+            probe.append((False, int(np.argmin(ts8))))
+        else:
+            probe.append((False, -1))
+
+    # Arbitration.
+    set_lock = {}
+    slot_lock = {}
+    for i in range(q):
+        if op[i] == 1:
+            set_lock[set_idx[i]] = min(set_lock.get(set_idx[i], int(INF)), i)
+        elif probe[i][0]:
+            sk = set_idx[i] * MC_WAYS + probe[i][1]
+            slot_lock[sk] = min(slot_lock.get(sk, int(INF)), i)
+
+    for i in range(q):
+        s = set_idx[i]
+        hit, slot = probe[i]
+        sfree = set_lock.get(s, int(INF)) == int(INF)
+        if op[i] == 1:
+            commit[i] = 1 if set_lock.get(s) == i else 0
+        elif hit:
+            commit[i] = 1 if (sfree and
+                              slot_lock.get(s * MC_WAYS + slot) == i) else 0
+        else:
+            commit[i] = 1 if sfree else 0
+
+    def mark_r(w):
+        rs_bmp[w >> bmp_shift] = 1
+
+    def mark_w(w):
+        rs_bmp[w >> bmp_shift] = 1
+        ws_bmp[w >> bmp_shift] = 1
+
+    for i in range(q):
+        if not commit[i]:
+            continue
+        s = set_idx[i]
+        hit, slot = probe[i]
+        base = s * MC_WORDS_PER_SET
+        clk = np.int32(int(clk0) + i)
+        for w in range(MC_WAYS):
+            mark_r(base + MC_OFF_KEYS + w)
+        if op[i] == 1:                                   # PUT
+            for w in range(MC_WAYS):
+                mark_r(base + MC_OFF_TS_GPU + w)
+            stmr[base + MC_OFF_KEYS + slot] = key[i]
+            stmr[base + MC_OFF_VALS + slot] = val[i]
+            stmr[base + MC_OFF_TS_GPU + slot] = clk
+            stmr[base + MC_OFF_SET_TS] = clk
+            mark_w(base + MC_OFF_KEYS + slot)
+            mark_w(base + MC_OFF_VALS + slot)
+            mark_w(base + MC_OFF_TS_GPU + slot)
+            mark_w(base + MC_OFF_SET_TS)
+        elif hit:                                        # GET hit
+            out_val[i] = stmr[base + MC_OFF_VALS + slot]
+            stmr[base + MC_OFF_TS_GPU + slot] = clk
+            mark_r(base + MC_OFF_VALS + slot)
+            mark_w(base + MC_OFF_TS_GPU + slot)
+        # GET miss: read-only, out_val stays -1.
+
+    return stmr, rs_bmp, ws_bmp, out_val, commit, np.int32(commit.sum())

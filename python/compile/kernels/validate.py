@@ -1,0 +1,62 @@
+"""Inter-device validation kernel (Layer 1, Pallas).
+
+This is SHeTM's core GPU kernel (paper §IV-C.2): given a chunk of the CPU
+write-set log, decide whether any logged write hits the GPU's read-set
+bitmap (``WS_cpu ∩ RS_gpu ≠ ∅`` would invalidate the serialization order
+``T_cpu → T_gpu``).
+
+The check is embarrassingly parallel: one gather + compare per log entry.
+The Pallas schedule keeps the read-set bitmap resident (VMEM analog) and
+tiles the log chunk across the grid — the same shape the paper's CUDA
+kernel obtains from threadblocks over 48 KB log chunks.
+
+The *apply* half of validation (freshness-guarded scatter of the CPU
+values into the GPU STMR) lives in the surrounding jax code
+(``model.validate_step``) because it is a pure scatter.
+
+Shapes (fixed at AOT time):
+  rs_bmp : i32[n_bmp]   GPU read-set bitmap (1 << bmp_shift words/entry)
+  addrs  : i32[C]       logged word addresses, -1 = padding
+  out    : i32[C]       1 = conflicting entry
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Log entries per grid step.
+ENTRY_BLOCK = 1024
+
+
+def _bitmap_check_kernel(bmp_ref, addr_ref, out_ref, *, bmp_shift: int):
+    bmp = bmp_ref[...]            # [n_bmp] resident
+    addr = addr_ref[...]          # [EB]
+    g = jnp.where(addr >= 0, addr >> bmp_shift, 0)
+    hit = (addr >= 0) & (bmp[g] != 0)
+    out_ref[...] = hit.astype(jnp.int32)
+
+
+def bitmap_check(rs_bmp, addrs, *, bmp_shift: int):
+    """Per-entry conflict flags for a CPU write-log chunk."""
+    (c,) = addrs.shape
+    (n_bmp,) = rs_bmp.shape
+    block = min(ENTRY_BLOCK, c)
+    assert c % block == 0, f"chunk {c} must be a multiple of {block}"
+    grid = (c // block,)
+
+    kernel = functools.partial(_bitmap_check_kernel, bmp_shift=bmp_shift)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_bmp,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(rs_bmp, addrs)

@@ -1,0 +1,281 @@
+"""Layer 2 — jax compute graphs for the SHeTM GPU device.
+
+Each ``*_step`` function below is the whole computation one simulated-GPU
+"kernel activation" performs; they call the Pallas kernels in ``kernels/``
+and are AOT-lowered to HLO text by ``aot.py``.  The Rust coordinator
+(rust/src/gpu/device.rs) executes the resulting artifacts through PJRT and
+never imports Python.
+
+All functions are pure: device state (STMR replica, bitmaps, timestamp
+array) is threaded through explicitly so the Rust side owns it between
+activations.
+
+Conventions (shared with the Rust mirrors in rust/src/gpu/):
+  * STMR is i32[N] (word-indexed),
+  * address padding sentinel is -1,
+  * bitmaps are i32 per granule (1 << bmp_shift words), values 0/1,
+  * scatter mode is "drop" so padding can be routed out of range.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import memcached as mc_kernel
+from .kernels import prstm as prstm_kernel
+from .kernels import validate as validate_kernel
+from .kernels.common import (INF, MC_OFF_KEYS, MC_OFF_SET_TS, MC_OFF_TS_GPU,
+                             MC_OFF_VALS, MC_WAYS, MC_WORDS_PER_SET, bmp_len,
+                             mc_hash)
+
+# --------------------------------------------------------------------------
+# PR-STM batch step
+# --------------------------------------------------------------------------
+
+
+def prstm_step(stmr, rs_bmp, ws_bmp, read_idx, write_idx, write_val, op,
+               prio, *, lock_shift: int, bmp_shift: int):
+    """Execute one speculative GPU transaction batch (paper §IV-C.1).
+
+    ``op`` selects, per transaction, add (0) or store (1) semantics for its
+    writes.  Aborted transactions (priority-rule losers) leave no trace and
+    are retried by the host in a later activation.
+
+    Returns (stmr', rs_bmp', ws_bmp', commit_mask, n_commits).
+    """
+    n = stmr.shape[0]
+    b, w = write_idx.shape
+    n_lock = n >> lock_shift
+    nb = rs_bmp.shape[0]
+
+    # Lock acquisition: scatter-min of priority over written granules.
+    lock = jnp.full((n_lock,), INF, jnp.int32)
+    wl = jnp.where(write_idx >= 0, write_idx >> lock_shift, n_lock)
+    lock = lock.at[wl.reshape(-1)].min(
+        jnp.repeat(prio, w), mode="drop")
+
+    # Commit/abort decision (Pallas kernel).
+    commit = prstm_kernel.prio_check(
+        lock, read_idx, write_idx, prio, lock_shift=lock_shift)
+    commit_b = commit != 0
+
+    # Apply writes of committed transactions.  Committed transactions hold
+    # disjoint write locks, so scatter indices never collide across
+    # transactions; workload generators guarantee uniqueness within one.
+    live = (write_idx >= 0) & commit_b[:, None]
+    add_idx = jnp.where(live & (op[:, None] == 0), write_idx, n)
+    stmr = stmr.at[add_idx.reshape(-1)].add(write_val.reshape(-1), mode="drop")
+    set_idx = jnp.where(live & (op[:, None] == 1), write_idx, n)
+    stmr = stmr.at[set_idx.reshape(-1)].set(write_val.reshape(-1), mode="drop")
+
+    # Bitmap updates for speculatively-committed transactions.  Writes are
+    # tracked in BOTH bitmaps (WS ⊆ RS, paper §IV-C.2) so a single
+    # intersection test covers read-write and write-write conflicts.
+    r_live = (read_idx >= 0) & commit_b[:, None]
+    rg = jnp.where(r_live, read_idx >> bmp_shift, nb)
+    rs_bmp = rs_bmp.at[rg.reshape(-1)].set(1, mode="drop")
+    wg = jnp.where(live, write_idx >> bmp_shift, nb)
+    rs_bmp = rs_bmp.at[wg.reshape(-1)].set(1, mode="drop")
+    ws_bmp = ws_bmp.at[wg.reshape(-1)].set(1, mode="drop")
+
+    return stmr, rs_bmp, ws_bmp, commit, commit.sum()
+
+
+# --------------------------------------------------------------------------
+# Validation step
+# --------------------------------------------------------------------------
+
+
+def validate_step(stmr, ts_arr, rs_bmp, addrs, vals, ts, *, bmp_shift: int):
+    """Validate-and-apply one CPU write-log chunk (paper §IV-C.2).
+
+    Conflict test: does any logged address fall in a granule the GPU read?
+    Regardless of the outcome the chunk is APPLIED to the GPU STMR under a
+    per-word freshness guard (timestamp array ``ts_arr``), so that on a
+    successful round the GPU replica already contains T_cpu's effects and
+    on an aborted round undoing T_gpu suffices (paper §IV-C.2/3).
+
+    Chunks may arrive in any order; the freshness guard makes application
+    commutative: a word ends up with the value of its highest (ts, position)
+    entry, matching a sequential replay in timestamp order.
+
+    Returns (stmr', ts_arr', n_conflicts).
+    """
+    n = stmr.shape[0]
+    (c,) = addrs.shape
+
+    conflict = validate_kernel.bitmap_check(rs_bmp, addrs, bmp_shift=bmp_shift)
+    n_conf = conflict.sum()
+
+    # Freshness-guarded apply: winner per word = entry with max timestamp,
+    # ties broken by position in the chunk (later wins), and only if it is
+    # at least as fresh as what a previous chunk already applied.
+    a_eff = jnp.where(addrs >= 0, addrs, n)
+    ts_arr2 = ts_arr.at[a_eff].max(ts, mode="drop")
+    a_safe = jnp.where(addrs >= 0, addrs, 0)
+    is_max = (addrs >= 0) & (ts == ts_arr2[a_safe])
+
+    pos = jnp.arange(c, dtype=jnp.int32)
+    best_pos = jnp.full((n,), -1, jnp.int32).at[
+        jnp.where(is_max, addrs, n)].max(pos, mode="drop")
+    winner = is_max & (pos == best_pos[a_safe])
+
+    stmr2 = stmr.at[jnp.where(winner, addrs, n)].set(vals, mode="drop")
+    return stmr2, ts_arr2, n_conf
+
+
+# --------------------------------------------------------------------------
+# Memcached batch step
+# --------------------------------------------------------------------------
+
+
+def memcached_step(stmr, rs_bmp, ws_bmp, op, key, val, clk0,
+                   *, n_sets: int, bmp_shift: int):
+    """Execute one GPU batch of GET/PUT cache requests (paper §V-D).
+
+    Intra-batch conflicts follow the paper's application rules:
+      * PUTs claim their whole set (priority rule on a per-set lock),
+      * GET hits claim their slot; they abort if a PUT claimed the set,
+      * GET misses are read-only; they abort only if a PUT claimed the set.
+    Aborted requests are retried by the host.
+
+    LRU timestamps use the GPU-local clock ``clk0 + request index`` so GETs
+    never inter-device-conflict with CPU GETs (paper §V-D).
+
+    Returns (stmr', rs_bmp', ws_bmp', out_val, commit_mask, n_commits).
+    """
+    n = stmr.shape[0]
+    (q,) = key.shape
+    nb = rs_bmp.shape[0]
+    ways = jnp.arange(MC_WAYS, dtype=jnp.int32)
+
+    set_idx = mc_hash(key, n_sets)
+    prio = jnp.arange(q, dtype=jnp.int32)
+    clk = clk0 + prio
+
+    slot, hit, out_val = mc_kernel.probe(stmr, set_idx, key, op)
+    hit_b = hit != 0
+    is_put = op == 1
+    is_get = ~is_put
+
+    # Lock arbitration (set-level for PUTs, slot-level for GETs).
+    set_lock = jnp.full((n_sets,), INF, jnp.int32).at[
+        jnp.where(is_put, set_idx, n_sets)].min(prio, mode="drop")
+    slot_key = set_idx * MC_WAYS + jnp.maximum(slot, 0)
+    get_touch = is_get & hit_b
+    slot_lock = jnp.full((n_sets * MC_WAYS,), INF, jnp.int32).at[
+        jnp.where(get_touch, slot_key, n_sets * MC_WAYS)].min(prio, mode="drop")
+
+    set_free = set_lock[set_idx] == INF
+    commit_put = is_put & (set_lock[set_idx] == prio)
+    commit_get_hit = get_touch & set_free & (slot_lock[slot_key] == prio)
+    commit_get_miss = is_get & ~hit_b & set_free
+    commit = commit_put | commit_get_hit | commit_get_miss
+
+    base = set_idx * MC_WORDS_PER_SET
+    key_w = base + MC_OFF_KEYS + jnp.maximum(slot, 0)
+    val_w = base + MC_OFF_VALS + jnp.maximum(slot, 0)
+    ts_w = base + MC_OFF_TS_GPU + jnp.maximum(slot, 0)
+    set_ts_w = base + MC_OFF_SET_TS
+
+    # Apply PUTs: key, value, slot LRU ts, per-set ts (the common word).
+    stmr = stmr.at[jnp.where(commit_put, key_w, n)].set(key, mode="drop")
+    stmr = stmr.at[jnp.where(commit_put, val_w, n)].set(val, mode="drop")
+    stmr = stmr.at[jnp.where(commit_put, set_ts_w, n)].set(clk, mode="drop")
+    # Apply LRU touch for committed PUTs and GET hits.
+    touch = commit_put | commit_get_hit
+    stmr = stmr.at[jnp.where(touch, ts_w, n)].set(clk, mode="drop")
+
+    out_val = jnp.where(commit_get_hit, out_val, jnp.int32(-1))
+
+    # --- Bitmaps (committed requests only) --------------------------------
+    def mark(bmp, words, mask):
+        g = jnp.where(mask, words >> bmp_shift, nb)
+        g = g.reshape(-1)
+        return bmp.at[g].set(1, mode="drop")
+
+    # Every committed request reads the 8 key words of its set.
+    keys_words = base[:, None] + MC_OFF_KEYS + ways
+    rs_bmp = mark(rs_bmp, keys_words, commit[:, None])
+    # PUTs also read the 8 GPU LRU words (victim selection).
+    lru_words = base[:, None] + MC_OFF_TS_GPU + ways
+    rs_bmp = mark(rs_bmp, lru_words, commit_put[:, None])
+    # GET hits read their value word.
+    rs_bmp = mark(rs_bmp, val_w, commit_get_hit)
+    # Writes: tracked in both bitmaps (WS ⊆ RS).
+    for words, mask in ((key_w, commit_put), (val_w, commit_put),
+                        (set_ts_w, commit_put), (ts_w, touch)):
+        rs_bmp = mark(rs_bmp, words, mask)
+        ws_bmp = mark(ws_bmp, words, mask)
+
+    commit_i = commit.astype(jnp.int32)
+    return stmr, rs_bmp, ws_bmp, out_val, commit_i, commit_i.sum()
+
+
+# --------------------------------------------------------------------------
+# AOT entry points (shape-closed callables for aot.py)
+# --------------------------------------------------------------------------
+
+
+def make_prstm_fn(n: int, b: int, r: int, w: int, lock_shift: int,
+                  bmp_shift: int):
+    nb = bmp_len(n, bmp_shift)
+
+    def fn(stmr, rs_bmp, ws_bmp, read_idx, write_idx, write_val, op, prio):
+        return prstm_step(stmr, rs_bmp, ws_bmp, read_idx, write_idx,
+                          write_val, op, prio,
+                          lock_shift=lock_shift, bmp_shift=bmp_shift)
+
+    i32 = jnp.int32
+    specs = [
+        jax.ShapeDtypeStruct((n,), i32),        # stmr
+        jax.ShapeDtypeStruct((nb,), i32),       # rs_bmp
+        jax.ShapeDtypeStruct((nb,), i32),       # ws_bmp
+        jax.ShapeDtypeStruct((b, r), i32),      # read_idx
+        jax.ShapeDtypeStruct((b, w), i32),      # write_idx
+        jax.ShapeDtypeStruct((b, w), i32),      # write_val
+        jax.ShapeDtypeStruct((b,), i32),        # op
+        jax.ShapeDtypeStruct((b,), i32),        # prio
+    ]
+    return fn, specs
+
+
+def make_validate_fn(n: int, c: int, bmp_shift: int):
+    nb = bmp_len(n, bmp_shift)
+
+    def fn(stmr, ts_arr, rs_bmp, addrs, vals, ts):
+        return validate_step(stmr, ts_arr, rs_bmp, addrs, vals, ts,
+                             bmp_shift=bmp_shift)
+
+    i32 = jnp.int32
+    specs = [
+        jax.ShapeDtypeStruct((n,), i32),        # stmr
+        jax.ShapeDtypeStruct((n,), i32),        # ts_arr
+        jax.ShapeDtypeStruct((nb,), i32),       # rs_bmp
+        jax.ShapeDtypeStruct((c,), i32),        # addrs
+        jax.ShapeDtypeStruct((c,), i32),        # vals
+        jax.ShapeDtypeStruct((c,), i32),        # ts
+    ]
+    return fn, specs
+
+
+def make_memcached_fn(n_sets: int, q: int, bmp_shift: int):
+    n = n_sets * MC_WORDS_PER_SET
+    nb = bmp_len(n, bmp_shift)
+
+    def fn(stmr, rs_bmp, ws_bmp, op, key, val, clk0):
+        return memcached_step(stmr, rs_bmp, ws_bmp, op, key, val, clk0,
+                              n_sets=n_sets, bmp_shift=bmp_shift)
+
+    i32 = jnp.int32
+    specs = [
+        jax.ShapeDtypeStruct((n,), i32),        # stmr
+        jax.ShapeDtypeStruct((nb,), i32),       # rs_bmp
+        jax.ShapeDtypeStruct((nb,), i32),       # ws_bmp
+        jax.ShapeDtypeStruct((q,), i32),        # op
+        jax.ShapeDtypeStruct((q,), i32),        # key
+        jax.ShapeDtypeStruct((q,), i32),        # val
+        jax.ShapeDtypeStruct((), i32),          # clk0
+    ]
+    return fn, specs

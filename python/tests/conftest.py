@@ -1,0 +1,43 @@
+"""Shared fixtures/helpers for the SHeTM kernel test suite."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile` importable when pytest runs from the repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(params=[0, 1, 2, 3])
+def seed(request):
+    """Sweep seeds — cheap hypothesis-style case diversity."""
+    return request.param
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+def fresh_mc_stmr(n_sets):
+    """Empty memcached STMR: keys -1, everything else 0."""
+    from compile.kernels.common import MC_WORDS_PER_SET, MC_WAYS
+
+    stmr = np.zeros(n_sets * MC_WORDS_PER_SET, np.int32)
+    for s in range(n_sets):
+        stmr[s * MC_WORDS_PER_SET: s * MC_WORDS_PER_SET + MC_WAYS] = -1
+    return stmr
+
+
+def random_txn_batch(rng, n, b, r, w, pad_prob=0.1):
+    """Random batch with unique write indices per txn and some padding."""
+    read_idx = rng.integers(0, n, (b, r)).astype(np.int32)
+    read_idx[rng.random((b, r)) < pad_prob] = -1
+    write_idx = np.stack(
+        [rng.choice(n, w, replace=False) for _ in range(b)]).astype(np.int32)
+    write_idx[rng.random((b, w)) < pad_prob] = -1
+    write_val = rng.integers(-1000, 1000, (b, w)).astype(np.int32)
+    op = rng.integers(0, 2, b).astype(np.int32)
+    prio = np.arange(b, dtype=np.int32)
+    return read_idx, write_idx, write_val, op, prio

@@ -1,0 +1,61 @@
+"""AOT pipeline tests: catalogue consistency and HLO-text emission."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels.common import bmp_len
+
+
+def test_catalogue_shapes_are_consistent():
+    names = set()
+    for name, kind, fn, specs, params in aot.catalogue():
+        assert name not in names, f"duplicate artifact {name}"
+        names.add(name)
+        n = params["n"]
+        if kind == "prstm":
+            nb = bmp_len(n, params["bmp_shift"])
+            assert specs[0].shape == (n,)
+            assert specs[1].shape == (nb,)
+            assert specs[3].shape == (params["b"], params["r"])
+            assert specs[4].shape == (params["b"], params["w"])
+        elif kind == "validate":
+            assert specs[0].shape == (n,)
+            assert specs[3].shape == (params["c"],)
+        elif kind == "memcached":
+            assert params["n"] == params["n_sets"] * 33
+            assert specs[3].shape == (params["q"],)
+    # The full catalogue the Rust side expects.
+    assert {"prstm_r4_g0", "prstm_r4_g8", "prstm_r40_g0", "prstm_r40_g8",
+            "validate_synth_g0", "validate_synth_g8", "validate_mc_g0",
+            "memcached"} <= names
+
+
+def test_hlo_text_emission_small():
+    # Lower a small validate variant and sanity-check the HLO text: this is
+    # the exact interchange format the Rust runtime parses.
+    fn, specs = model.make_validate_fn(n=1024, c=1024, bmp_shift=0)
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "s32[1024]" in text
+    # Entry computation must return the 3-tuple (stmr, ts_arr, n_conf).
+    assert "(s32[1024]{0}, s32[1024]{0}, s32[])" in text
+
+
+def test_lowered_fn_still_executes():
+    # The shape-closed callable must be jittable and correct post-lowering.
+    fn, _ = model.make_validate_fn(n=64, c=1024, bmp_shift=0)
+    jfn = jax.jit(fn)
+    stmr = jnp.zeros(64, jnp.int32)
+    ts_arr = jnp.zeros(64, jnp.int32)
+    rs = jnp.zeros(64, jnp.int32)
+    addrs = jnp.full(1024, -1, jnp.int32)
+    addrs = addrs.at[0].set(7)
+    vals = jnp.zeros(1024, jnp.int32).at[0].set(42)
+    ts = jnp.zeros(1024, jnp.int32).at[0].set(3)
+    stmr2, ts2, conf = jfn(stmr, ts_arr, rs, addrs, vals, ts)
+    assert int(conf) == 0
+    assert int(np.asarray(stmr2)[7]) == 42
+    assert int(np.asarray(ts2)[7]) == 3

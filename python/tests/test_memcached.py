@@ -1,0 +1,129 @@
+"""Memcached batch kernel vs the sequential oracle, plus the paper's
+conflict-rule invariants (§V-D)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.common import (MC_OFF_SET_TS, MC_OFF_TS_CPU,
+                                    MC_WORDS_PER_SET)
+from conftest import fresh_mc_stmr, rng_for
+
+I32 = np.int32
+NSETS = 256
+N = NSETS * MC_WORDS_PER_SET
+Q = 256
+
+
+def run_both(stmr, rs, ws, op, key, val, clk0):
+    out_v = model.memcached_step(
+        jnp.array(stmr), jnp.array(rs), jnp.array(ws), jnp.array(op),
+        jnp.array(key), jnp.array(val), jnp.int32(clk0),
+        n_sets=NSETS, bmp_shift=0)
+    out_r = ref.memcached_step_ref(stmr, rs, ws, op, key, val,
+                                   np.int32(clk0), n_sets=NSETS, bmp_shift=0)
+    names = ["stmr", "rs", "ws", "out_val", "commit", "n"]
+    for a, b, name in zip(out_v, out_r, names):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+    return out_v
+
+
+def random_batch(rng, put_frac=0.3, key_space=2000):
+    op = (rng.random(Q) < put_frac).astype(I32)
+    key = rng.integers(0, key_space, Q).astype(I32)
+    val = rng.integers(0, 100_000, Q).astype(I32)
+    return op, key, val
+
+
+@pytest.mark.parametrize("put_frac", [0.0, 0.3, 1.0])
+def test_random_batches_match_ref(seed, put_frac):
+    rng = rng_for(seed)
+    stmr = fresh_mc_stmr(NSETS)
+    rs = np.zeros(N, I32)
+    ws = np.zeros(N, I32)
+    clk0 = 1
+    for _ in range(3):
+        op, key, val = random_batch(rng, put_frac)
+        out = run_both(stmr, rs, ws, op, key, val, clk0)
+        stmr, rs, ws = (np.asarray(out[0]), np.asarray(out[1]),
+                        np.asarray(out[2]))
+        clk0 += Q
+
+
+def test_put_get_roundtrip_across_batches(seed):
+    rng = rng_for(seed)
+    stmr = fresh_mc_stmr(NSETS)
+    rs = np.zeros(N, I32)
+    ws = np.zeros(N, I32)
+    # Batch 1: distinct-key PUTs.
+    keys = rng.choice(5000, Q, replace=False).astype(I32)
+    vals = rng.integers(0, 100_000, Q).astype(I32)
+    out = run_both(stmr, rs, ws, np.ones(Q, I32), keys, vals, 1)
+    stmr2 = np.asarray(out[0])
+    committed = np.asarray(out[4])
+    # Batch 2: GET the same keys.
+    out2 = run_both(stmr2, np.zeros(N, I32), np.zeros(N, I32),
+                    np.zeros(Q, I32), keys, np.zeros(Q, I32), 1 + Q)
+    got = np.asarray(out2[3])
+    commit2 = np.asarray(out2[4])
+    for i in range(Q):
+        if committed[i] and commit2[i]:
+            assert got[i] == vals[i], f"key {keys[i]}"
+
+
+def test_get_only_batches_never_touch_cpu_lru_words(seed):
+    # Device-local LRU: GPU GETs write only the GPU timestamp row, so the
+    # CPU's LRU row and the set_ts word stay untouched (this is what makes
+    # CPU GETs and GPU GETs conflict-free, §V-D).
+    rng = rng_for(seed)
+    stmr = fresh_mc_stmr(NSETS)
+    # Pre-populate via PUTs.
+    keys = rng.choice(3000, Q, replace=False).astype(I32)
+    out = run_both(stmr, np.zeros(N, I32), np.zeros(N, I32),
+                   np.ones(Q, I32), keys, keys * 2, 1)
+    stmr = np.asarray(out[0])
+    rs = np.zeros(N, I32)
+    ws = np.zeros(N, I32)
+    out2 = run_both(stmr, rs, ws, np.zeros(Q, I32), keys,
+                    np.zeros(Q, I32), 1000)
+    ws2 = np.asarray(out2[2])
+    for s in range(NSETS):
+        base = s * MC_WORDS_PER_SET
+        assert ws2[base + MC_OFF_TS_CPU: base + MC_OFF_TS_CPU + 8].sum() == 0
+        assert ws2[base + MC_OFF_SET_TS] == 0, "GETs never touch set_ts"
+
+
+def test_puts_always_mark_set_ts(seed):
+    # PUT marks the shared per-set word in WS, guaranteeing inter-device
+    # PUT/PUT conflicts on the same set (§V-D).
+    rng = rng_for(seed)
+    stmr = fresh_mc_stmr(NSETS)
+    op, key, val = random_batch(rng, put_frac=1.0)
+    out = run_both(stmr, np.zeros(N, I32), np.zeros(N, I32), op, key, val, 1)
+    commit = np.asarray(out[4])
+    ws = np.asarray(out[2])
+    for i in range(Q):
+        if commit[i]:
+            s = ref.mc_hash_ref(int(key[i]), NSETS)
+            assert ws[s * MC_WORDS_PER_SET + MC_OFF_SET_TS] == 1
+
+
+def test_same_key_get_storm_one_winner_per_slot():
+    stmr = fresh_mc_stmr(NSETS)
+    # Install one key.
+    out = run_both(stmr, np.zeros(N, I32), np.zeros(N, I32),
+                   np.ones(Q, I32), np.full(Q, 77, I32),
+                   np.full(Q, 770, I32), 1)
+    stmr = np.asarray(out[0])
+    # A batch of GETs for that key: exactly one commits (slot-level lock,
+    # because each GET updates the slot's LRU timestamp).
+    out2 = run_both(stmr, np.zeros(N, I32), np.zeros(N, I32),
+                    np.zeros(Q, I32), np.full(Q, 77, I32),
+                    np.zeros(Q, I32), 1000)
+    commit = np.asarray(out2[4])
+    assert commit.sum() == 1
+    assert commit[0] == 1, "lowest priority (index) wins"
+    assert np.asarray(out2[3])[0] == 770

@@ -1,0 +1,154 @@
+"""PR-STM batch kernel vs the sequential oracle (ref.py).
+
+The vectorized jax/Pallas implementation must agree bit-exactly with the
+loop oracle across shapes, granularities and adversarial batches.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from conftest import random_txn_batch, rng_for
+
+I32 = np.int32
+
+
+def run_both(stmr, rs, ws, ridx, widx, wval, op, prio, lock_shift, bmp_shift):
+    out_v = model.prstm_step(
+        jnp.array(stmr), jnp.array(rs), jnp.array(ws), jnp.array(ridx),
+        jnp.array(widx), jnp.array(wval), jnp.array(op), jnp.array(prio),
+        lock_shift=lock_shift, bmp_shift=bmp_shift)
+    out_r = ref.prstm_step_ref(
+        stmr, rs, ws, ridx, widx, wval, op, prio,
+        lock_shift=lock_shift, bmp_shift=bmp_shift)
+    return out_v, out_r
+
+
+def assert_equal(out_v, out_r):
+    names = ["stmr", "rs_bmp", "ws_bmp", "commit", "n_commits"]
+    for a, b, name in zip(out_v, out_r, names):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+@pytest.mark.parametrize("bmp_shift", [0, 4, 8])
+@pytest.mark.parametrize("r,w", [(4, 4), (8, 2), (1, 1)])
+def test_random_batches_match_ref(seed, bmp_shift, r, w):
+    rng = rng_for(seed)
+    n, b = 4096, 256
+    stmr = rng.integers(-100, 100, n).astype(I32)
+    nb = n >> bmp_shift
+    rs = np.zeros(nb, I32)
+    ws = np.zeros(nb, I32)
+    ridx, widx, wval, op, prio = random_txn_batch(rng, n, b, r, w)
+    out_v, out_r = run_both(stmr, rs, ws, ridx, widx, wval, op, prio, 0,
+                            bmp_shift)
+    assert_equal(out_v, out_r)
+
+
+def test_lock_granularity_coarsening(seed):
+    # Coarse lock stripes make more txns collide; both sides must agree.
+    rng = rng_for(seed)
+    n, b = 4096, 256
+    stmr = np.zeros(n, I32)
+    rs = np.zeros(n, I32)
+    ws = np.zeros(n, I32)
+    ridx, widx, wval, op, prio = random_txn_batch(rng, n, b, 4, 4)
+    for lock_shift in (0, 4, 8):
+        out_v, out_r = run_both(stmr, rs, ws, ridx, widx, wval, op, prio,
+                                lock_shift, 0)
+        assert_equal(out_v, out_r)
+
+
+def test_all_conflicting_only_lowest_priority_commits():
+    n, b = 4096, 256
+    stmr = np.zeros(n, I32)
+    rs = np.zeros(n, I32)
+    ws = np.zeros(n, I32)
+    ridx = np.full((b, 4), -1, I32)
+    widx = np.zeros((b, 4), I32)
+    widx[:, 0] = 7  # everyone writes word 7
+    widx[:, 1:] = -1
+    wval = np.full((b, 4), 5, I32)
+    op = np.ones(b, I32)
+    prio = np.arange(b, dtype=I32)
+    out_v, out_r = run_both(stmr, rs, ws, ridx, widx, wval, op, prio, 0, 0)
+    assert_equal(out_v, out_r)
+    commit = np.asarray(out_v[3])
+    assert commit[0] == 1 and commit[1:].sum() == 0
+    assert np.asarray(out_v[0])[7] == 5
+
+
+def test_empty_batch_is_noop():
+    n, b = 4096, 256
+    stmr = np.arange(n, dtype=I32)
+    rs = np.zeros(n, I32)
+    ws = np.zeros(n, I32)
+    ridx = np.full((b, 4), -1, I32)
+    widx = np.full((b, 4), -1, I32)
+    wval = np.zeros((b, 4), I32)
+    op = np.zeros(b, I32)
+    prio = np.arange(b, dtype=I32)
+    out_v, _ = run_both(stmr, rs, ws, ridx, widx, wval, op, prio, 0, 0)
+    np.testing.assert_array_equal(np.asarray(out_v[0]), stmr)
+    assert np.asarray(out_v[1]).sum() == 0
+    # All-padding txns trivially "commit" (they did nothing and conflict
+    # with nothing) — matching the oracle is what matters above.
+
+
+def test_ws_subset_of_rs_invariant(seed):
+    # Paper §IV-C.2: every write is also tracked in the read-set bitmap.
+    rng = rng_for(seed)
+    n, b = 4096, 256
+    stmr = np.zeros(n, I32)
+    rs = np.zeros(n, I32)
+    ws = np.zeros(n, I32)
+    ridx, widx, wval, op, prio = random_txn_batch(rng, n, b, 4, 4)
+    out_v, _ = run_both(stmr, rs, ws, ridx, widx, wval, op, prio, 0, 0)
+    rs_b, ws_b = np.asarray(out_v[1]), np.asarray(out_v[2])
+    assert np.all(ws_b <= rs_b), "WS ⊆ RS must hold"
+
+
+def test_add_overflow_wraps(seed):
+    rng = rng_for(seed)
+    n, b = 4096, 256
+    stmr = np.full(n, 2**31 - 10, I32)
+    rs = np.zeros(n, I32)
+    ws = np.zeros(n, I32)
+    ridx, widx, wval, op, prio = random_txn_batch(rng, n, b, 2, 2)
+    op[:] = 0  # all adds
+    wval = np.abs(wval) + 100  # force overflow
+    with np.errstate(over="ignore"):
+        out_v, out_r = run_both(stmr, rs, ws, ridx, widx, wval, op, prio, 0, 0)
+    assert_equal(out_v, out_r)
+
+
+def test_committed_txns_serialize_in_priority_order(seed):
+    # Serializability witness: committed txns never share a written word,
+    # and a committed txn may read a word written by another committed txn
+    # only if the writer has a HIGHER priority index (serializes later) —
+    # priority order is then a valid serial order.
+    rng = rng_for(seed)
+    n, b = 2048, 256
+    stmr = np.zeros(n, I32)
+    rs = np.zeros(n, I32)
+    ws = np.zeros(n, I32)
+    ridx, widx, wval, op, prio = random_txn_batch(rng, n, b, 4, 4)
+    out_v, _ = run_both(stmr, rs, ws, ridx, widx, wval, op, prio, 0, 0)
+    commit = np.asarray(out_v[3])
+    written = {}
+    for i in range(b):
+        if commit[i]:
+            for a in widx[i]:
+                if a >= 0:
+                    assert a not in written, "write-write overlap"
+                    written[int(a)] = i
+    for i in range(b):
+        if commit[i]:
+            for a in ridx[i]:
+                if a >= 0 and int(a) in written and written[int(a)] < i:
+                    pytest.fail(
+                        "committed txn read a word written by an "
+                        "earlier-serialized committed txn")

@@ -1,0 +1,121 @@
+"""Validation kernel vs the sequential oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from conftest import rng_for
+
+I32 = np.int32
+
+
+def run_both(stmr, ts_arr, rs, addrs, vals, ts, bmp_shift):
+    out_v = model.validate_step(
+        jnp.array(stmr), jnp.array(ts_arr), jnp.array(rs),
+        jnp.array(addrs), jnp.array(vals), jnp.array(ts),
+        bmp_shift=bmp_shift)
+    out_r = ref.validate_step_ref(stmr, ts_arr, rs, addrs, vals, ts,
+                                  bmp_shift=bmp_shift)
+    for a, b, name in zip(out_v, out_r, ["stmr", "ts_arr", "n_conf"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+    return out_v
+
+
+@pytest.mark.parametrize("bmp_shift", [0, 4, 8])
+@pytest.mark.parametrize("dup_heavy", [False, True])
+def test_random_chunks_match_ref(seed, bmp_shift, dup_heavy):
+    rng = rng_for(seed)
+    n, c = 4096, 1024
+    stmr = rng.integers(-50, 50, n).astype(I32)
+    ts_arr = rng.integers(0, 5, n).astype(I32)
+    rs = (rng.random(n >> bmp_shift) < 0.05).astype(I32)
+    addr_space = n // 32 if dup_heavy else n
+    addrs = rng.integers(-1, addr_space, c).astype(I32)
+    vals = rng.integers(0, 10_000, c).astype(I32)
+    ts = rng.integers(1, 20, c).astype(I32)  # many ties
+    run_both(stmr, ts_arr, rs, addrs, vals, ts, bmp_shift)
+
+
+def test_all_padding_chunk_is_noop():
+    n, c = 4096, 1024
+    stmr = np.arange(n, dtype=I32)
+    ts_arr = np.zeros(n, I32)
+    rs = np.ones(n, I32)
+    addrs = np.full(c, -1, I32)
+    out = run_both(stmr, ts_arr, rs, addrs, np.zeros(c, I32),
+                   np.zeros(c, I32), 0)
+    assert int(out[2]) == 0
+    np.testing.assert_array_equal(np.asarray(out[0]), stmr)
+
+
+def test_conflicting_entries_still_applied():
+    # Paper §IV-C.2: validation keeps applying after detecting a conflict so
+    # the GPU STMR always ends up containing T_cpu's effects.
+    n, c = 4096, 1024
+    stmr = np.zeros(n, I32)
+    ts_arr = np.zeros(n, I32)
+    rs = np.zeros(n, I32)
+    rs[5] = 1
+    addrs = np.full(c, -1, I32)
+    addrs[0] = 5
+    addrs[1] = 6
+    vals = np.zeros(c, I32)
+    vals[0], vals[1] = 55, 66
+    ts = np.zeros(c, I32)
+    ts[0] = ts[1] = 3
+    out = run_both(stmr, ts_arr, rs, addrs, vals, ts, 0)
+    assert int(out[2]) == 1
+    assert np.asarray(out[0])[5] == 55
+    assert np.asarray(out[0])[6] == 66
+
+
+def test_freshness_across_chunks(seed):
+    # Chunks applied out of timestamp order must converge to max-ts values.
+    rng = rng_for(seed)
+    n, c = 512, 256
+    stmr = np.zeros(n, I32)
+    ts_arr = np.zeros(n, I32)
+    rs = np.zeros(n, I32)
+
+    # A "ground truth" log: one entry per position, shuffled into chunks.
+    entries = [(int(rng.integers(0, n)), int(rng.integers(0, 10_000)), t + 1)
+               for t in range(3 * c)]
+    want = {}
+    for a, v, t in entries:
+        want[a] = (t, v)
+    order = rng.permutation(len(entries))
+
+    cur_stmr, cur_ts = jnp.array(stmr), jnp.array(ts_arr)
+    for start in range(0, len(entries), c):
+        idx = order[start:start + c]
+        addrs = np.array([entries[i][0] for i in idx], I32)
+        vals = np.array([entries[i][1] for i in idx], I32)
+        ts = np.array([entries[i][2] for i in idx], I32)
+        cur_stmr, cur_ts, _ = model.validate_step(
+            cur_stmr, cur_ts, jnp.array(rs), jnp.array(addrs),
+            jnp.array(vals), jnp.array(ts), bmp_shift=0)
+
+    got = np.asarray(cur_stmr)
+    for a, (t, v) in want.items():
+        assert got[a] == v, f"word {a}: want ts-{t} value {v}, got {got[a]}"
+
+
+def test_coarse_bitmap_false_positives(seed):
+    # A coarse bitmap must flag neighbours in the same granule (the
+    # granularity/false-abort trade-off of Fig. 2).
+    n, c = 4096, 1024
+    stmr = np.zeros(n, I32)
+    ts_arr = np.zeros(n, I32)
+    shift = 8
+    rs = np.zeros(n >> shift, I32)
+    rs[0] = 1  # granule covering words [0, 256)
+    addrs = np.full(c, -1, I32)
+    addrs[0] = 255   # inside marked granule: false-positive conflict
+    addrs[1] = 256   # outside: clean
+    vals = np.zeros(c, I32)
+    ts = np.ones(c, I32)
+    out = run_both(stmr, ts_arr, rs, addrs, vals, ts, shift)
+    assert int(out[2]) == 1

@@ -1,0 +1,180 @@
+//! Figure 2 — cost of instrumenting the guest TM libraries.
+//!
+//! Left plot (GPU): throughput of the PR-STM batch kernel with SHeTM's
+//! access-tracking bitmaps at 4 B granularity ("small bmp") and 1 KiB
+//! granularity ("large bmp"), normalized to the un-instrumented kernel.
+//! Paper result: small ≈ 0.8×, large ≈ 0.95×.
+//!
+//! Right plot (CPU): throughput of TinySTM and the HTM emulation with
+//! SHeTM's write-set logging (commit callback appending to the round log),
+//! normalized to the guest running solo.  Paper result: ≈ 0.95× for W2,
+//! ≥ 0.8× even for write-heavy W1.
+//!
+//! X axis: percentage of update transactions (10%..90%), workloads W1
+//! (4 reads) and W2 (40 reads).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use shetm::coordinator::RoundLog;
+use shetm::gpu::{native, Bitmap, TxnBatch};
+use shetm::stm::htm::HtmEmu;
+use shetm::stm::tinystm::TinyStm;
+use shetm::stm::{GlobalClock, GuestTm, SharedStmr, WriteEntry};
+use shetm::util::bench::Table;
+use shetm::util::Rng;
+
+const N: usize = 1 << 18;
+const B: usize = 1024;
+
+fn gen_batch(rng: &mut Rng, reads: usize, update_pct: u32) -> TxnBatch {
+    let mut b = TxnBatch::empty(B, reads, 4);
+    let mut widx = Vec::new();
+    for i in 0..B {
+        for j in 0..reads {
+            b.read_idx[i * reads + j] = rng.below_usize(N) as i32;
+        }
+        if rng.below(100) < update_pct as u64 {
+            rng.distinct(N, 4, &mut widx);
+            for j in 0..4 {
+                b.write_idx[i * 4 + j] = widx[j] as i32;
+                b.write_val[i * 4 + j] = rng.below(1000) as i32;
+            }
+        }
+        b.op[i] = 1;
+    }
+    b
+}
+
+/// txns/sec of the native PR-STM kernel under a bitmap mode: best of
+/// three timed repetitions over the SAME pre-generated batch set (after a
+/// warmup pass), so the small/large/uninstrumented ratios compare
+/// identical work and wall-clock noise is suppressed.
+fn gpu_rate(batches: &[TxnBatch], mode: Option<u32>) -> f64 {
+    let mut stmr = vec![0i32; N];
+    let mut best = f64::INFINITY;
+    for rep in 0..4 {
+        let t0 = Instant::now();
+        match mode {
+            None => {
+                for b in batches {
+                    std::hint::black_box(native::prstm_step_uninstrumented(&mut stmr, b, 0));
+                }
+            }
+            Some(shift) => {
+                let mut rs = Bitmap::new(N, shift);
+                let mut ws = Bitmap::new(N, shift);
+                for b in batches {
+                    std::hint::black_box(native::prstm_step(&mut stmr, &mut rs, &mut ws, b, 0));
+                }
+            }
+        }
+        if rep > 0 {
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+    }
+    (batches.len() * B) as f64 / best
+}
+
+/// txns/sec of a CPU guest, with or without SHeTM write-set logging
+/// (best of three repetitions, first discarded as warmup).
+fn cpu_rate(tm: &dyn GuestTm, reads: usize, update_pct: u32, logged: bool, n_txns: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for rep in 0..4 {
+        let dt = cpu_run_once(tm, reads, update_pct, logged, n_txns);
+        if rep > 0 {
+            best = best.min(dt);
+        }
+    }
+    n_txns as f64 / best
+}
+
+fn cpu_run_once(tm: &dyn GuestTm, reads: usize, update_pct: u32, logged: bool, n_txns: usize) -> f64 {
+    let stmr = SharedStmr::new(N);
+    let mut rng = Rng::new(9);
+    let mut log = Vec::with_capacity(64);
+    let mut round_log = RoundLog::new();
+    let t0 = Instant::now();
+    for _ in 0..n_txns {
+        let update = rng.below(100) < update_pct as u64;
+        let raddr: Vec<usize> = (0..reads).map(|_| rng.below_usize(N)).collect();
+        let mut widx = Vec::new();
+        if update {
+            rng.distinct(N, 4, &mut widx);
+        }
+        let waddr: Vec<usize> = widx.iter().map(|&w| w as usize).collect();
+        tm.execute_into(
+            &stmr,
+            &mut |tx| {
+                let mut acc = 0i32;
+                for &a in &raddr {
+                    acc = acc.wrapping_add(tx.read(a)?);
+                }
+                for &a in &waddr {
+                    tx.write(a, acc)?;
+                }
+                Ok(())
+            },
+            &mut log,
+        );
+        if logged {
+            // SHeTM instrumentation: the commit callback appends the
+            // write-set to the chunked round log.
+            round_log.append(&log);
+        }
+        log.clear();
+        if round_log.len() > 1 << 20 {
+            round_log.reset_with_carry(&[]);
+        }
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let iters = if common::fast() { 8 } else { 40 };
+    let n_txns = if common::fast() { 20_000 } else { 100_000 };
+
+    let t = Table::new(
+        "Fig.2 left — GPU instrumentation (normalized throughput vs uninstrumented PR-STM)",
+        &["workload", "update%", "small_bmp(4B)", "large_bmp(1KB)"],
+    );
+    for (wname, reads) in [("W1", 4usize), ("W2", 40)] {
+        for pct in [10u32, 30, 50, 70, 90] {
+            let mut rng = Rng::new(7);
+            let batches: Vec<TxnBatch> =
+                (0..iters).map(|_| gen_batch(&mut rng, reads, pct)).collect();
+            let base = gpu_rate(&batches, None);
+            let small = gpu_rate(&batches, Some(0));
+            let large = gpu_rate(&batches, Some(8));
+            t.row_labeled(wname, &[pct as f64, small / base, large / base]);
+        }
+    }
+
+    let clock = Arc::new(GlobalClock::new());
+    let tiny = TinyStm::with_clock(clock.clone());
+    let htm = HtmEmu::with_clock(clock);
+    let t = Table::new(
+        "Fig.2 right — CPU instrumentation (normalized throughput vs uninstrumented guest)",
+        &["workload", "update%", "tinystm", "htm_emu"],
+    );
+    for (wname, reads) in [("W1", 4usize), ("W2", 40)] {
+        for pct in [10u32, 30, 50, 70, 90] {
+            let tiny_base = cpu_rate(&tiny, reads, pct, false, n_txns);
+            let tiny_instr = cpu_rate(&tiny, reads, pct, true, n_txns);
+            let htm_base = cpu_rate(&htm, reads, pct, false, n_txns);
+            let htm_instr = cpu_rate(&htm, reads, pct, true, n_txns);
+            t.row_labeled(
+                wname,
+                &[pct as f64, tiny_instr / tiny_base, htm_instr / htm_base],
+            );
+        }
+    }
+    let _ = WriteEntry {
+        addr: 0,
+        val: 0,
+        ts: 0,
+    };
+    println!("\nfig2 done");
+}

@@ -1,0 +1,69 @@
+//! Figure 4 — breakdown of execution times (W1-100%, no contention).
+//!
+//! For each device and algorithm variant, the fraction of the round spent
+//! processing / validating / merging / blocked.  Paper shapes:
+//!   * basic: the GPU's DtH merge transfer dominates at small periods and
+//!     the CPU blocks through validation+merge;
+//!   * optimized: double buffering replaces GPU merge time with processing,
+//!     and the CPU's non-blocking log streaming shrinks its blocked share;
+//!   * both overheads amortize away as the period grows.
+
+mod common;
+
+use shetm::apps::synth::SynthSpec;
+use shetm::coordinator::round::Variant;
+use shetm::gpu::Backend;
+use shetm::launch;
+use shetm::util::bench::Table;
+
+fn main() {
+    let periods_ms: &[f64] = if common::fast() {
+        &[1.0, 16.0]
+    } else {
+        &[1.0, 4.0, 16.0, 64.0]
+    };
+
+    let t = Table::new(
+        "Fig.4 — phase-time fractions per device (W1-100%, partitioned)",
+        &[
+            "period_ms", "variant", "cpu_proc", "cpu_valid", "cpu_merge", "cpu_block",
+            "gpu_proc", "gpu_valid", "gpu_merge", "gpu_block",
+        ],
+    );
+    for &p in periods_ms {
+        for (vname, variant, vcode) in [
+            ("basic", Variant::Basic, 0.0),
+            ("shetm", Variant::Optimized, 1.0),
+        ] {
+            let mut cfg = common::base_config();
+            cfg.period_s = p / 1e3;
+            let n = cfg.n_words;
+            let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+            let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+            let mut e = launch::build_synth_engine(
+                &cfg, variant, cpu_spec, gpu_spec, 1024, Backend::Native,
+            );
+            e.run_for(common::sim_time(0.25).max(cfg.period_s * 4.0)).unwrap();
+            let s = &e.stats;
+            let c = &s.cpu_phases;
+            let g = &s.gpu_phases;
+            let ct = c.total().max(1e-12);
+            let gt = g.total().max(1e-12);
+            let _ = vname;
+            t.row(&[
+                p,
+                vcode, // 0 = basic, 1 = shetm
+                c.processing_s / ct,
+                c.validation_s / ct,
+                c.merge_s / ct,
+                c.blocked_s / ct,
+                g.processing_s / gt,
+                g.validation_s / gt,
+                g.merge_s / gt,
+                g.blocked_s / gt,
+            ]);
+        }
+    }
+    println!("\n(variant column: 0 = basic, 1 = optimized SHeTM)");
+    println!("fig4 done");
+}

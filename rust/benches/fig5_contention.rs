@@ -1,0 +1,124 @@
+//! Figure 5 — sensitivity to inter-device contention.
+//!
+//! A conflicting access is injected into the CPU write stream with a
+//! per-transaction probability chosen so that the *round* abort
+//! probability sweeps 0..100% (the paper's x axis).  Throughput is
+//! normalized to CPU-only; PR-STM solo (GPU-only) is the other reference.
+//!
+//! Paper shapes to reproduce:
+//!   * SHeTM beats both solo devices up to ~80% abort rate;
+//!   * at 50% contention SHeTM still gains ≈ +30% over the best device;
+//!   * at 100% it degrades gracefully (≈ −20% w/o early validation);
+//!   * early validation recovers most of the loss in the mid-range by
+//!     cutting the wasted GPU work.
+
+mod common;
+
+use std::sync::Arc;
+
+use shetm::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
+use shetm::coordinator::baseline;
+use shetm::coordinator::round::Variant;
+use shetm::gpu::{Backend, GpuDevice};
+use shetm::launch;
+use shetm::stm::{GlobalClock, SharedStmr};
+use shetm::util::bench::Table;
+
+const PERIOD_S: f64 = 0.008; // paper: 80 ms on the unscaled testbed
+
+fn run_shetm(conflict_per_txn: f64, early: bool, sim_s: f64) -> (f64, f64, f64) {
+    let mut cfg = common::base_config();
+    cfg.period_s = PERIOD_S;
+    cfg.early_validation = early;
+    let n = cfg.n_words;
+    let cpu_spec = SynthSpec::w1(n, 1.0)
+        .partitioned(0..n / 2)
+        .with_conflicts(conflict_per_txn, n / 2..n);
+    let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+    let mut e = launch::build_synth_engine(
+        &cfg,
+        Variant::Optimized,
+        cpu_spec,
+        gpu_spec,
+        1024,
+        Backend::Native,
+    );
+    e.run_for(sim_s).unwrap();
+    (
+        e.stats.throughput(),
+        e.stats.round_abort_rate(),
+        e.stats.discarded_commits as f64,
+    )
+}
+
+fn main() {
+    let sim = common::sim_time(0.4);
+    let cfg = common::base_config();
+    let n = cfg.n_words;
+
+    // References.
+    let stmr = Arc::new(SharedStmr::new(n));
+    let tm = launch::build_guest(cfg.guest, Arc::new(GlobalClock::new()));
+    let mut cpu = SynthCpu::new(
+        stmr,
+        tm,
+        SynthSpec::w1(n, 1.0),
+        cfg.cpu_threads,
+        cfg.cpu_txn_s,
+        cfg.seed,
+    );
+    let cpu_ref = baseline::run_cpu_only(&mut cpu, sim, 0.01).throughput();
+    let mut gpu = SynthGpu::new(
+        SynthSpec::w1(n, 1.0),
+        1024,
+        cfg.gpu_kernel_latency_s,
+        cfg.gpu_txn_s,
+        cfg.seed,
+    );
+    let mut device = GpuDevice::new(n, cfg.bmp_shift, Backend::Native);
+    let cost = launch::cost_model(&cfg);
+    let gpu_ref = baseline::run_gpu_only(&mut gpu, &mut device, &cost, sim, PERIOD_S)
+        .unwrap()
+        .throughput();
+    println!(
+        "references: cpu_only {cpu_ref:.0} tx/s (normalization), gpu_only {:.3}x",
+        gpu_ref / cpu_ref
+    );
+
+    // Per-round abort targets -> per-txn injection probability.
+    let cpu_txns_per_round = (cfg.cpu_threads as f64 / cfg.cpu_txn_s) * PERIOD_S;
+    let targets: &[f64] = if common::fast() {
+        &[0.0, 0.5, 1.0]
+    } else {
+        &[0.0, 0.1, 0.3, 0.5, 0.8, 0.95, 1.0]
+    };
+
+    let t = Table::new(
+        "Fig.5 — normalized throughput vs inter-device conflict probability",
+        &[
+            "target_abort", "measured_abort", "shetm_early", "shetm_noearly",
+            "gpu_only", "wasted_early", "wasted_noearly",
+        ],
+    );
+    for &q in targets {
+        let p_txn = if q >= 1.0 {
+            1e-3 // dense conflicts: every round certainly conflicts
+        } else if q <= 0.0 {
+            0.0
+        } else {
+            1.0 - (1.0 - q).powf(1.0 / cpu_txns_per_round)
+        };
+        let (thr_e, abort_e, wasted_e) = run_shetm(p_txn, true, sim);
+        let (thr_p, _abort_p, wasted_p) = run_shetm(p_txn, false, sim);
+        t.row(&[
+            q,
+            abort_e,
+            thr_e / cpu_ref,
+            thr_p / cpu_ref,
+            gpu_ref / cpu_ref,
+            wasted_e,
+            wasted_p,
+        ]);
+    }
+    println!("\nfig5 done");
+}

@@ -1,0 +1,89 @@
+//! Figure 6 — MemcachedGPU on SHeTM (§V-D).
+//!
+//! Left: throughput (normalized to CPU-only) vs round duration for the
+//! no-conflicts workload and the steal-20/80/100% rebalancing workloads.
+//! Right: inter-device round abort probability vs round duration.
+//!
+//! Paper shapes to reproduce:
+//!   * no-conflicts and steal-20% nearly indistinguishable, close to the
+//!     ideal ≈ 1.9× of CPU-only;
+//!   * the abort probability converges to ~the steal rate at short rounds
+//!     and to 1 as the round duration grows (more stolen, conflicting
+//!     requests per round);
+//!   * even at steal-100% the throughput stays ≈ CPU-only (robustness).
+//!
+//! Workload: 99.9% GETs, Zipf(α = 0.5) popularity, 32768 sets (paper: 1 M),
+//! key-parity affinity, 8-way sets with device-local LRU clocks.
+
+mod common;
+
+use std::sync::Arc;
+
+use shetm::apps::memcached::{init_cache_words, McConfig, McCpu, McWorld};
+use shetm::coordinator::baseline;
+use shetm::coordinator::round::Variant;
+use shetm::gpu::Backend;
+use shetm::launch;
+use shetm::stm::{GlobalClock, SharedStmr};
+use shetm::util::bench::Table;
+
+const N_SETS: usize = 1 << 15;
+
+fn cpu_only_ref(sim_s: f64) -> f64 {
+    let cfg = common::base_config();
+    let mc = McConfig::new(N_SETS);
+    let stmr = Arc::new(SharedStmr::new(mc.n_words()));
+    let mut words = vec![0; mc.n_words()];
+    init_cache_words(&mut words, mc.n_sets);
+    stmr.install_range(0, &words);
+    let world = McWorld::new(mc.clone(), cfg.seed, false);
+    let tm = launch::build_guest(cfg.guest, Arc::new(GlobalClock::new()));
+    let mut cpu = McCpu::new(stmr, tm, world, mc, cfg.cpu_threads, cfg.cpu_txn_s);
+    baseline::run_cpu_only(&mut cpu, sim_s, 0.01).throughput()
+}
+
+fn main() {
+    let sim = common::sim_time(0.3);
+    let cpu_ref = cpu_only_ref(sim);
+    println!("reference: memcached CPU-only {cpu_ref:.0} req/s (normalization)");
+
+    let periods_ms: &[f64] = if common::fast() {
+        &[1.0, 10.0]
+    } else {
+        &[1.0, 2.5, 5.0, 10.0, 25.0]
+    };
+    let steals: &[(f64, &str)] = &[
+        (0.0, "no-conflicts"),
+        (0.2, "steal-20%"),
+        (0.8, "steal-80%"),
+        (1.0, "steal-100%"),
+    ];
+
+    let t = Table::new(
+        "Fig.6 — memcached: normalized throughput (left) and round abort prob (right)",
+        &["period_ms", "no_conf", "steal20", "steal80", "steal100",
+          "ab_noconf", "ab_s20", "ab_s80", "ab_s100"],
+    );
+    for &p in periods_ms {
+        let mut thr = Vec::new();
+        let mut ab = Vec::new();
+        for &(steal, _name) in steals {
+            let mut cfg = common::base_config();
+            cfg.period_s = p / 1e3;
+            let mut mc = McConfig::new(N_SETS);
+            mc.steal_shift = steal;
+            let mut e = launch::build_memcached_engine(
+                &cfg,
+                Variant::Optimized,
+                mc,
+                1024,
+                Backend::Native,
+            );
+            e.run_for(sim.max(cfg.period_s * 4.0)).unwrap();
+            thr.push(e.stats.throughput() / cpu_ref);
+            ab.push(e.stats.round_abort_rate());
+        }
+        t.row(&[p, thr[0], thr[1], thr[2], thr[3], ab[0], ab[1], ab[2], ab[3]]);
+    }
+    println!("\nfig6 done");
+}

@@ -1,0 +1,224 @@
+//! §Perf harness — micro-benchmarks of the three hot paths the
+//! optimization pass iterates on (EXPERIMENTS.md §Perf records the log):
+//!
+//!   L3a  CPU commit path: guest-TM transaction + SHeTM log append
+//!        (per-transaction wall cost; target: allocation-free, < 1 us)
+//!   L3b  native PR-STM batch kernel (simulation backend throughput)
+//!   L3c  native validation kernel (entries/second)
+//!   L3d  round-engine orchestration overhead (zero-work rounds/second)
+//!   L1   PJRT kernel dispatch: end-to-end executable call cost
+//!        (dominates the artifact-backed path; VMEM/structure analysis is
+//!        in DESIGN.md §8 since interpret-mode wallclock is not a TPU
+//!        proxy)
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use shetm::apps::synth::SynthSpec;
+use shetm::coordinator::round::Variant;
+use shetm::coordinator::RoundLog;
+use shetm::gpu::{native, Backend, Bitmap, GpuDevice, LogChunk, TxnBatch};
+use shetm::launch;
+use shetm::runtime::ArtifactStore;
+use shetm::stm::tinystm::TinyStm;
+use shetm::stm::{GlobalClock, GuestTm, SharedStmr};
+use shetm::util::bench::{bench, report};
+use shetm::util::Rng;
+
+const N: usize = 1 << 18;
+
+fn l3a_commit_path() {
+    let stmr = SharedStmr::new(N);
+    let tm = TinyStm::with_clock(Arc::new(GlobalClock::new()));
+    let mut rng = Rng::new(1);
+    let mut log = Vec::with_capacity(64);
+    let mut round_log = RoundLog::new();
+    let mut widx = Vec::new();
+    let iters = if common::fast() { 20_000 } else { 200_000 };
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let raddr: [usize; 4] = std::array::from_fn(|_| rng.below_usize(N));
+        rng.distinct(N, 4, &mut widx);
+        tm.execute_into(
+            &stmr,
+            &mut |tx| {
+                let mut acc = 0i32;
+                for &a in &raddr {
+                    acc = acc.wrapping_add(tx.read(a)?);
+                }
+                for &a in widx.iter() {
+                    tx.write(a as usize, acc)?;
+                }
+                Ok(())
+            },
+            &mut log,
+        );
+        round_log.append(&log);
+        log.clear();
+        if round_log.len() > 1 << 20 {
+            round_log.reset_with_carry(&[]);
+        }
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "perf L3a commit-path (4R/4W + log append)      {:>10.1} ns/txn  ({:.2} M txn/s)",
+        per * 1e9,
+        1e-6 / per
+    );
+}
+
+fn l3b_prstm_kernel() {
+    let mut rng = Rng::new(2);
+    let mut stmr = vec![0i32; N];
+    let mut rs = Bitmap::new(N, 0);
+    let mut ws = Bitmap::new(N, 0);
+    let b = 1024;
+    let mut widx = Vec::new();
+    let iters = if common::fast() { 20 } else { 100 };
+    let batches: Vec<TxnBatch> = (0..iters)
+        .map(|_| {
+            let mut batch = TxnBatch::empty(b, 4, 4);
+            for i in 0..b {
+                for j in 0..4 {
+                    batch.read_idx[i * 4 + j] = rng.below_usize(N) as i32;
+                }
+                rng.distinct(N, 4, &mut widx);
+                for j in 0..4 {
+                    batch.write_idx[i * 4 + j] = widx[j] as i32;
+                }
+                batch.op[i] = 1;
+            }
+            batch
+        })
+        .collect();
+    let t0 = Instant::now();
+    for batch in &batches {
+        std::hint::black_box(native::prstm_step(&mut stmr, &mut rs, &mut ws, batch, 0));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "perf L3b native prstm batch kernel             {:>10.1} ns/txn  ({:.2} M txn/s)",
+        dt / (iters * b) as f64 * 1e9,
+        (iters * b) as f64 / dt / 1e6
+    );
+}
+
+fn l3c_validate_kernel() {
+    let mut rng = Rng::new(3);
+    let mut stmr = vec![0i32; N];
+    let mut ts_arr = vec![0i32; N];
+    let mut rs = Bitmap::new(N, 0);
+    for _ in 0..N / 20 {
+        rs.mark_word(rng.below_usize(N));
+    }
+    let c = 4096;
+    let iters = if common::fast() { 200 } else { 2000 };
+    let chunks: Vec<LogChunk> = (0..iters)
+        .map(|_| {
+            let mut ch = LogChunk::empty(c);
+            for i in 0..c {
+                ch.addrs[i] = rng.below_usize(N) as i32;
+                ch.vals[i] = rng.below(1 << 20) as i32;
+                ch.ts[i] = (i + 1) as i32;
+            }
+            ch
+        })
+        .collect();
+    let t0 = Instant::now();
+    for ch in &chunks {
+        std::hint::black_box(native::validate_step(&mut stmr, &mut ts_arr, &rs, ch));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "perf L3c native validate kernel                {:>10.2} ns/entry ({:.0} M entries/s)",
+        dt / (iters * c) as f64 * 1e9,
+        (iters * c) as f64 / dt / 1e6
+    );
+}
+
+fn l3d_round_overhead() {
+    // Zero-rate drivers: every cost left is engine orchestration.
+    let mut cfg = common::base_config();
+    cfg.period_s = 0.001;
+    cfg.cpu_txn_s = 1.0; // ~0 txns per round
+    cfg.gpu_txn_s = 1.0;
+    let n = cfg.n_words;
+    let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+    let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+    let mut e = launch::build_synth_engine(
+        &cfg,
+        Variant::Optimized,
+        cpu_spec,
+        gpu_spec,
+        1024,
+        Backend::Native,
+    );
+    let iters = if common::fast() { 2_000 } else { 20_000 };
+    let r = bench("round-engine empty round", 100, iters as u32, || {
+        e.run_round().unwrap();
+    });
+    report(&r);
+    println!(
+        "perf L3d engine orchestration                  {:>10.1} ns/round ({:.0} k rounds/s)",
+        r.mean.as_nanos() as f64,
+        r.per_sec() / 1e3
+    );
+}
+
+fn l1_pjrt_dispatch() {
+    let dir = std::env::var("SHETM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !ArtifactStore::available(&dir) {
+        println!("perf L1 pjrt dispatch: artifacts missing, skipped");
+        return;
+    }
+    let store = ArtifactStore::load(dir).unwrap();
+    let mut device = GpuDevice::new(
+        N,
+        0,
+        Backend::Pjrt {
+            store,
+            prstm: "prstm_r4_g0".into(),
+            validate: "validate_synth_g0".into(),
+            memcached: "memcached".into(),
+        },
+    );
+    device.begin_round();
+    let mut rng = Rng::new(5);
+    let mut widx = Vec::new();
+    let mut batch = TxnBatch::empty(1024, 4, 4);
+    for i in 0..1024 {
+        for j in 0..4 {
+            batch.read_idx[i * 4 + j] = rng.below_usize(N) as i32;
+        }
+        rng.distinct(N, 4, &mut widx);
+        for j in 0..4 {
+            batch.write_idx[i * 4 + j] = widx[j] as i32;
+        }
+        batch.op[i] = 1;
+    }
+    let iters = if common::fast() { 10 } else { 40 };
+    let r = bench("pjrt prstm batch (1024 txns, n=2^18)", 3, iters, || {
+        device.run_txn_batch(&batch).unwrap();
+    });
+    report(&r);
+    let mut chunk = LogChunk::empty(4096);
+    for i in 0..4096 {
+        chunk.addrs[i] = rng.below_usize(N) as i32;
+        chunk.ts[i] = i as i32;
+    }
+    let r = bench("pjrt validate chunk (4096 entries)", 3, iters, || {
+        device.validate_chunk(&chunk).unwrap();
+    });
+    report(&r);
+}
+
+fn main() {
+    l3a_commit_path();
+    l3b_prstm_kernel();
+    l3c_validate_kernel();
+    l3d_round_overhead();
+    l1_pjrt_dispatch();
+    println!("\nperf_hotpaths done");
+}

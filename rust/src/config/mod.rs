@@ -1,0 +1,348 @@
+//! Dependency-free configuration system.
+//!
+//! Offline builds carry no serde/toml, so this module implements a small
+//! TOML-subset parser ([`Raw`]) plus the typed [`SystemConfig`] the
+//! launcher and benches consume.  Supported syntax:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! int_key = 42
+//! float_key = 3.5
+//! bool_key = true
+//! string_key = "quoted"
+//! ```
+//!
+//! Keys flatten to `section.key`; CLI `--set section.key=value` overrides
+//! win over file values (see `rust/src/main.rs`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::bus::BusModel;
+
+/// Flat key-value view of a parsed config file plus overrides.
+#[derive(Debug, Clone, Default)]
+pub struct Raw {
+    values: HashMap<String, String>,
+}
+
+impl Raw {
+    /// Empty config.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw_line) in text.lines().enumerate() {
+            let line = strip_comment(raw_line).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, unquote(v.trim()).to_string());
+        }
+        Ok(Raw { values })
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Apply a `key=value` override (CLI `--set`).
+    pub fn set(&mut self, assignment: &str) -> Result<()> {
+        let (k, v) = assignment
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override must be key=value: {assignment:?}"))?;
+        self.values
+            .insert(k.trim().to_string(), unquote(v.trim()).to_string());
+        Ok(())
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("config {key} = {s:?}: {e}")),
+        }
+    }
+
+    /// Boolean lookup with default (`true`/`false`/`1`/`0`).
+    pub fn get_bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.values.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(other) => bail!("config {key} = {other:?}: expected bool"),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside quotes is content, not a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(s: &str) -> &str {
+    s.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .unwrap_or(s)
+}
+
+/// Which conflict-resolution policy a round uses (paper §IV-E).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Default: on inter-device conflict, the GPU's speculative commits are
+    /// discarded (CPU results can be externalized immediately).
+    FavorCpu,
+    /// Discard the CPU's speculative commits instead.
+    FavorGpu,
+    /// Favor-CPU plus the anti-starvation contention manager: after
+    /// `gpu_starvation_limit` consecutive GPU aborts, the next round
+    /// admits only read-only CPU transactions.
+    CpuWithStarvationGuard,
+}
+
+impl PolicyKind {
+    /// Parse a policy name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "favor-cpu" => PolicyKind::FavorCpu,
+            "favor-gpu" => PolicyKind::FavorGpu,
+            "starvation-guard" => PolicyKind::CpuWithStarvationGuard,
+            other => bail!("unknown policy {other:?} (favor-cpu|favor-gpu|starvation-guard)"),
+        })
+    }
+}
+
+/// Which CPU guest TM to instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GuestKind {
+    /// TinySTM-like (word-based, time-based).
+    Tiny,
+    /// NOrec-like (value validation).
+    Norec,
+    /// Emulated HTM (TSX envelope).
+    Htm,
+}
+
+impl GuestKind {
+    /// Parse a guest name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "tinystm" => GuestKind::Tiny,
+            "norec" => GuestKind::Norec,
+            "htm" => GuestKind::Htm,
+            other => bail!("unknown guest TM {other:?} (tinystm|norec|htm)"),
+        })
+    }
+}
+
+/// Fully-typed system configuration consumed by the coordinator.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// STMR size in words.
+    pub n_words: usize,
+    /// Bitmap granularity shift (granule = `1 << shift` words).
+    pub bmp_shift: u32,
+    /// CPU worker threads (paper: 8).
+    pub cpu_threads: usize,
+    /// CPU guest TM.
+    pub guest: GuestKind,
+    /// Conflict-resolution policy.
+    pub policy: PolicyKind,
+    /// Execution-phase duration in seconds (paper: 1 ms – 600 ms).
+    pub period_s: f64,
+    /// Enable early validation (§IV-D).
+    pub early_validation: bool,
+    /// Early-validation trigger interval, as a fraction of the period.
+    pub early_interval_frac: f64,
+    /// Consecutive GPU aborts before the starvation guard engages.
+    pub gpu_starvation_limit: u32,
+    /// Host->device bus model.
+    pub bus_h2d: BusModel,
+    /// Device->host bus model.
+    pub bus_d2h: BusModel,
+    /// GPU cost model: fixed kernel-activation latency (s).
+    pub gpu_kernel_latency_s: f64,
+    /// GPU cost model: per-transaction execution time (s).
+    pub gpu_txn_s: f64,
+    /// GPU cost model: per-log-entry validation time (s).
+    pub gpu_validate_entry_s: f64,
+    /// CPU cost model: per-transaction execution time (s) per worker.
+    /// When `calibrate_cpu` is set the launcher measures this instead.
+    pub cpu_txn_s: f64,
+    /// Artifact directory for the PJRT backend (empty = native backend).
+    pub artifacts_dir: String,
+    /// RNG seed for workload generation.
+    pub seed: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            n_words: 1 << 18,
+            bmp_shift: 0,
+            cpu_threads: 8,
+            guest: GuestKind::Tiny,
+            policy: PolicyKind::FavorCpu,
+            period_s: 0.080,
+            early_validation: true,
+            early_interval_frac: 0.25,
+            gpu_starvation_limit: 3,
+            bus_h2d: BusModel::default(),
+            bus_d2h: BusModel::default(),
+            gpu_kernel_latency_s: 20e-6,
+            gpu_txn_s: 90e-9,
+            cpu_txn_s: 90e-9,
+            gpu_validate_entry_s: 1e-9,
+            artifacts_dir: String::new(),
+            seed: 42,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Build from a raw config (file + overrides), falling back to the
+    /// defaults above for missing keys.
+    pub fn from_raw(raw: &Raw) -> Result<Self> {
+        let d = SystemConfig::default();
+        Ok(SystemConfig {
+            n_words: raw.get_or("stmr.n_words", d.n_words)?,
+            bmp_shift: raw.get_or("stmr.bmp_shift", d.bmp_shift)?,
+            cpu_threads: raw.get_or("cpu.threads", d.cpu_threads)?,
+            guest: match raw.get("cpu.guest") {
+                Some(s) => GuestKind::parse(s)?,
+                None => d.guest,
+            },
+            policy: match raw.get("hetm.policy") {
+                Some(s) => PolicyKind::parse(s)?,
+                None => d.policy,
+            },
+            period_s: raw.get_or("hetm.period_ms", d.period_s * 1e3)? / 1e3,
+            early_validation: raw.get_bool_or("hetm.early_validation", d.early_validation)?,
+            early_interval_frac: raw.get_or("hetm.early_interval_frac", d.early_interval_frac)?,
+            gpu_starvation_limit: raw.get_or("hetm.gpu_starvation_limit", d.gpu_starvation_limit)?,
+            bus_h2d: BusModel {
+                latency_s: raw.get_or("bus.latency_us", d.bus_h2d.latency_s * 1e6)? / 1e6,
+                bytes_per_s: raw.get_or("bus.gbps", d.bus_h2d.bytes_per_s / 1e9)? * 1e9,
+            },
+            bus_d2h: BusModel {
+                latency_s: raw.get_or("bus.latency_us", d.bus_d2h.latency_s * 1e6)? / 1e6,
+                bytes_per_s: raw.get_or("bus.gbps", d.bus_d2h.bytes_per_s / 1e9)? * 1e9,
+            },
+            gpu_kernel_latency_s: raw.get_or("gpu.kernel_latency_us", d.gpu_kernel_latency_s * 1e6)?
+                / 1e6,
+            gpu_txn_s: raw.get_or("gpu.txn_ns", d.gpu_txn_s * 1e9)? / 1e9,
+            gpu_validate_entry_s: raw.get_or("gpu.validate_entry_ns", d.gpu_validate_entry_s * 1e9)?
+                / 1e9,
+            cpu_txn_s: raw.get_or("cpu.txn_ns", d.cpu_txn_s * 1e9)? / 1e9,
+            artifacts_dir: raw.get("runtime.artifacts").unwrap_or("").to_string(),
+            seed: raw.get_or("seed", d.seed)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_types_and_comments() {
+        let raw = Raw::parse(
+            r#"
+# top comment
+seed = 7
+[stmr]
+n_words = 1024   # inline comment
+[cpu]
+guest = "norec"
+threads = 4
+[hetm]
+early_validation = false
+period_ms = 2.5
+"#,
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.n_words, 1024);
+        assert_eq!(cfg.guest, GuestKind::Norec);
+        assert_eq!(cfg.cpu_threads, 4);
+        assert!(!cfg.early_validation);
+        assert!((cfg.period_s - 0.0025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut raw = Raw::parse("[stmr]\nn_words = 10\n").unwrap();
+        raw.set("stmr.n_words=99").unwrap();
+        let cfg = SystemConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.n_words, 99);
+    }
+
+    #[test]
+    fn defaults_fill_missing() {
+        let cfg = SystemConfig::from_raw(&Raw::new()).unwrap();
+        assert_eq!(cfg.cpu_threads, 8);
+        assert_eq!(cfg.policy, PolicyKind::FavorCpu);
+    }
+
+    #[test]
+    fn bad_values_are_errors() {
+        assert!(Raw::parse("[x\nk=v").is_err());
+        assert!(Raw::parse("novalue\n").is_err());
+        let mut raw = Raw::new();
+        raw.set("cpu.guest=weird").unwrap();
+        assert!(SystemConfig::from_raw(&raw).is_err());
+        let mut raw = Raw::new();
+        raw.set("hetm.early_validation=maybe").unwrap();
+        assert!(SystemConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let raw = Raw::parse("name = \"a#b\"\n").unwrap();
+        assert_eq!(raw.get("name"), Some("a#b"));
+    }
+}

@@ -1,0 +1,141 @@
+//! Solo-device baselines (the paper's CPU-only and GPU-only comparators).
+//!
+//! * CPU-only: the guest TM runs alone, uninstrumented (its write-sets are
+//!   not logged for SHeTM) — the right-hand normalization of Figs. 3/5/6.
+//! * GPU-only: PR-STM runs alone, copying its STMR to the host after each
+//!   round using double buffering, i.e. compute overlaps the DtH transfer
+//!   (the paper's "GPU-only with double buffer" baseline).
+
+use anyhow::Result;
+
+use super::round::{CostModel, CpuDriver, GpuDriver};
+use super::stats::RunStats;
+use crate::bus::BusTimeline;
+use crate::gpu::GpuDevice;
+use crate::stm::WriteEntry;
+
+/// Run a CPU driver solo for `dur_s`; returns aggregate stats.
+///
+/// The log sink is drained and discarded between slices — the driver runs
+/// *uninstrumented* in the sense that nothing downstream consumes its
+/// write-sets (matching the paper's un-instrumented normalization).
+pub fn run_cpu_only<C: CpuDriver>(cpu: &mut C, dur_s: f64, slice_s: f64) -> RunStats {
+    let mut stats = RunStats::default();
+    let mut t = 0.0;
+    let mut sink: Vec<WriteEntry> = Vec::new();
+    while t < dur_s {
+        let d = slice_s.min(dur_s - t);
+        let cs = cpu.run(d, &mut sink);
+        sink.clear();
+        stats.cpu_commits += cs.commits;
+        stats.cpu_attempts += cs.attempts;
+        stats.cpu_phases.processing_s += d;
+        t += d;
+    }
+    stats.rounds = 1;
+    stats.rounds_committed = 1;
+    stats.duration_s = dur_s;
+    stats
+}
+
+/// Run a GPU driver solo for `dur_s` of device time, shipping the dirty
+/// regions to the host once per `period_s` with double buffering.
+pub fn run_gpu_only<G: GpuDriver>(
+    gpu: &mut G,
+    device: &mut GpuDevice,
+    cost: &CostModel,
+    dur_s: f64,
+    period_s: f64,
+) -> Result<RunStats> {
+    let mut stats = RunStats::default();
+    let mut d2h = BusTimeline::new();
+    let mut t = 0.0;
+    let n_bytes = (device.n_words() * 4) as u64;
+    while t < dur_s {
+        device.begin_round();
+        // Shadow copy so compute can resume while DtH streams (§IV-D).
+        let dtd = n_bytes as f64 / cost.gpu_dtd_bytes_per_s;
+        t += dtd;
+        stats.gpu_phases.merge_s += dtd;
+        let budget = period_s.min(dur_s - t).max(0.0);
+        let gs = gpu.run(device, budget)?;
+        stats.gpu_commits += gs.commits;
+        stats.gpu_attempts += gs.attempts;
+        stats.gpu_phases.processing_s += gs.busy_s;
+        stats.gpu_phases.blocked_s += budget - gs.busy_s;
+        t += budget;
+        // DtH of dirty regions overlaps the next round (double buffer):
+        // only schedule it; compute never waits on d2h.
+        let dirty_bytes = (device.ws_bmp().dirty_words() * 4) as u64;
+        if dirty_bytes > 0 {
+            let dur = cost.bus_d2h.transfer_secs(dirty_bytes);
+            d2h.schedule(t, dur);
+        }
+        gpu.on_round_end(true);
+        stats.rounds += 1;
+        stats.rounds_committed += 1;
+    }
+    // If the bus is still draining at the end, the tail is exposed.
+    stats.duration_s = t.max(d2h.free_at());
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::round::{CpuSlice, GpuSlice};
+    use crate::gpu::Backend;
+    use crate::stm::SharedStmr;
+
+    struct FixedCpu {
+        stmr: SharedStmr,
+        rate: f64,
+    }
+    impl CpuDriver for FixedCpu {
+        fn run(&mut self, dur_s: f64, _log: &mut Vec<WriteEntry>) -> CpuSlice {
+            let n = (dur_s * self.rate) as u64;
+            CpuSlice {
+                commits: n,
+                attempts: n,
+            }
+        }
+        fn stmr(&self) -> &SharedStmr {
+            &self.stmr
+        }
+    }
+
+    struct FixedGpu {
+        rate: f64,
+    }
+    impl GpuDriver for FixedGpu {
+        fn run(&mut self, _d: &mut GpuDevice, budget_s: f64) -> Result<GpuSlice> {
+            Ok(GpuSlice {
+                commits: (budget_s * self.rate) as u64,
+                attempts: (budget_s * self.rate) as u64,
+                batches: 1,
+                busy_s: budget_s,
+            })
+        }
+    }
+
+    #[test]
+    fn cpu_only_throughput_matches_rate() {
+        let mut cpu = FixedCpu {
+            stmr: SharedStmr::new(16),
+            rate: 1000.0,
+        };
+        let stats = run_cpu_only(&mut cpu, 2.0, 0.1);
+        assert!((stats.throughput() - 1000.0).abs() < 20.0);
+    }
+
+    #[test]
+    fn gpu_only_overlaps_transfers() {
+        let mut gpu = FixedGpu { rate: 1000.0 };
+        let mut device = GpuDevice::new(1 << 12, 0, Backend::Native);
+        let cost = CostModel::default();
+        let stats = run_gpu_only(&mut gpu, &mut device, &cost, 1.0, 0.05).unwrap();
+        // Shadow copies cost a little, transfers are overlapped: the
+        // throughput should stay within a few percent of the raw rate.
+        assert!(stats.throughput() > 900.0, "{}", stats.throughput());
+    }
+}

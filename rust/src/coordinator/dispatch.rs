@@ -1,0 +1,187 @@
+//! Transaction scheduling & dispatching (paper §IV-A).
+//!
+//! For every registered transaction type with both CPU and GPU
+//! implementations, SHeTM keeps three request queues — `CPU_Q`, `GPU_Q` and
+//! `SHARED_Q`.  Submitters may pass a *device affinity*; requests without
+//! affinity land in the shared queue and are consumed by either device
+//! under work stealing.  Conflict-aware dispatching is exactly this
+//! mechanism: route transactions likely to conflict to the same device so
+//! the (cheap) local TM resolves them.
+//!
+//! The queues are used by the memcached application (§V-D), including its
+//! *steal* experiments where the GPU deliberately steals requests bound
+//! for the CPU with a configurable probability.
+
+use std::collections::VecDeque;
+
+use crate::util::Rng;
+
+/// Where a submitted request should run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Affinity {
+    /// Must/should run on the CPU.
+    Cpu,
+    /// Must/should run on the GPU.
+    Gpu,
+    /// Either device (work stealing).
+    Shared,
+}
+
+/// Three-queue dispatcher for one transaction type.
+#[derive(Debug)]
+pub struct Dispatcher<T> {
+    cpu_q: VecDeque<T>,
+    gpu_q: VecDeque<T>,
+    shared_q: VecDeque<T>,
+    /// Probability that the GPU steals from `CPU_Q` when its own queues
+    /// run dry (the §V-D steal-X% workloads).
+    pub gpu_steal_prob: f64,
+    stolen: u64,
+}
+
+impl<T> Default for Dispatcher<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Dispatcher<T> {
+    /// Empty dispatcher, no stealing.
+    pub fn new() -> Self {
+        Dispatcher {
+            cpu_q: VecDeque::new(),
+            gpu_q: VecDeque::new(),
+            shared_q: VecDeque::new(),
+            gpu_steal_prob: 0.0,
+            stolen: 0,
+        }
+    }
+
+    /// Submit one request.
+    pub fn submit(&mut self, req: T, affinity: Affinity) {
+        match affinity {
+            Affinity::Cpu => self.cpu_q.push_back(req),
+            Affinity::Gpu => self.gpu_q.push_back(req),
+            Affinity::Shared => self.shared_q.push_back(req),
+        }
+    }
+
+    /// Queued requests per (cpu, gpu, shared).
+    pub fn depths(&self) -> (usize, usize, usize) {
+        (self.cpu_q.len(), self.gpu_q.len(), self.shared_q.len())
+    }
+
+    /// Total requests the GPU stole from `CPU_Q`.
+    pub fn stolen(&self) -> u64 {
+        self.stolen
+    }
+
+    /// CPU worker pull: own queue first, then the shared queue.
+    pub fn pop_cpu(&mut self) -> Option<T> {
+        self.cpu_q
+            .pop_front()
+            .or_else(|| self.shared_q.pop_front())
+    }
+
+    /// GPU-controller pull of up to `n` requests to feed a kernel batch:
+    /// `GPU_Q` first, then `SHARED_Q`, then (with `gpu_steal_prob`) `CPU_Q`.
+    pub fn pop_gpu_batch(&mut self, n: usize, rng: &mut Rng, out: &mut Vec<T>) {
+        while out.len() < n {
+            if let Some(r) = self.gpu_q.pop_front() {
+                out.push(r);
+            } else if let Some(r) = self.shared_q.pop_front() {
+                out.push(r);
+            } else if self.gpu_steal_prob > 0.0
+                && !self.cpu_q.is_empty()
+                && rng.chance(self.gpu_steal_prob)
+            {
+                out.push(self.cpu_q.pop_front().unwrap());
+                self.stolen += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Return unconsumed requests to the FRONT of the GPU queue (round
+    /// abort: the batch must be re-executed).
+    pub fn unpop_gpu(&mut self, reqs: impl DoubleEndedIterator<Item = T>) {
+        for r in reqs.rev() {
+            self.gpu_q.push_front(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affinity_routing() {
+        let mut d = Dispatcher::new();
+        d.submit(1, Affinity::Cpu);
+        d.submit(2, Affinity::Gpu);
+        d.submit(3, Affinity::Shared);
+        assert_eq!(d.depths(), (1, 1, 1));
+        assert_eq!(d.pop_cpu(), Some(1));
+        // CPU falls back to shared once its queue is dry.
+        assert_eq!(d.pop_cpu(), Some(3));
+        assert_eq!(d.pop_cpu(), None);
+    }
+
+    #[test]
+    fn gpu_batch_fills_from_gpu_then_shared() {
+        let mut d = Dispatcher::new();
+        for i in 0..3 {
+            d.submit(i, Affinity::Gpu);
+        }
+        for i in 10..12 {
+            d.submit(i, Affinity::Shared);
+        }
+        let mut rng = Rng::new(1);
+        let mut batch = Vec::new();
+        d.pop_gpu_batch(10, &mut rng, &mut batch);
+        assert_eq!(batch, vec![0, 1, 2, 10, 11]);
+    }
+
+    #[test]
+    fn gpu_never_steals_without_probability() {
+        let mut d = Dispatcher::new();
+        d.submit(7, Affinity::Cpu);
+        let mut rng = Rng::new(1);
+        let mut batch = Vec::new();
+        d.pop_gpu_batch(4, &mut rng, &mut batch);
+        assert!(batch.is_empty());
+        assert_eq!(d.stolen(), 0);
+    }
+
+    #[test]
+    fn gpu_steals_with_probability_one() {
+        let mut d = Dispatcher::new();
+        for i in 0..5 {
+            d.submit(i, Affinity::Cpu);
+        }
+        d.gpu_steal_prob = 1.0;
+        let mut rng = Rng::new(1);
+        let mut batch = Vec::new();
+        d.pop_gpu_batch(3, &mut rng, &mut batch);
+        assert_eq!(batch, vec![0, 1, 2]);
+        assert_eq!(d.stolen(), 3);
+        assert_eq!(d.depths().0, 2);
+    }
+
+    #[test]
+    fn unpop_restores_order() {
+        let mut d = Dispatcher::new();
+        for i in 0..4 {
+            d.submit(i, Affinity::Gpu);
+        }
+        let mut rng = Rng::new(1);
+        let mut batch = Vec::new();
+        d.pop_gpu_batch(4, &mut rng, &mut batch);
+        d.unpop_gpu(batch.drain(..));
+        let mut batch2 = Vec::new();
+        d.pop_gpu_batch(4, &mut rng, &mut batch2);
+        assert_eq!(batch2, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,176 @@
+//! CPU write-set log management (paper §IV-B/§IV-C.2).
+//!
+//! Guest TMs append `(addr, value, ts)` entries at commit; the coordinator
+//! periodically drains them into fixed-size [`LogChunk`]s — the 48 KB
+//! transfer units the validation phase streams to the GPU.  The last chunk
+//! of a round is padded with `addr = -1` sentinels.
+
+use crate::bus::chunking::LOG_CHUNK_ENTRIES;
+use crate::gpu::LogChunk;
+use crate::stm::WriteEntry;
+
+/// Accumulates one round's CPU write-set log and chunks it for shipping.
+#[derive(Debug, Default)]
+pub struct RoundLog {
+    entries: Vec<WriteEntry>,
+    /// Entries already drained into chunks.
+    drained: usize,
+    /// Leading entries carried over from the previous round's validation
+    /// window; they survive a favor-GPU rollback (their transactions
+    /// committed BEFORE the rolled-back round started).
+    carried: usize,
+    chunk_entries: usize,
+}
+
+impl RoundLog {
+    /// New log with the paper's 4096-entry (48 KB) chunking.
+    pub fn new() -> Self {
+        Self::with_chunk_entries(LOG_CHUNK_ENTRIES)
+    }
+
+    /// New log with custom chunk size (ablation benches).
+    pub fn with_chunk_entries(chunk_entries: usize) -> Self {
+        assert!(chunk_entries > 0);
+        RoundLog {
+            entries: Vec::new(),
+            drained: 0,
+            carried: 0,
+            chunk_entries,
+        }
+    }
+
+    /// Entries per chunk.
+    pub fn chunk_entries(&self) -> usize {
+        self.chunk_entries
+    }
+
+    /// Append a batch of committed write entries.
+    pub fn append(&mut self, entries: &[WriteEntry]) {
+        self.entries.extend_from_slice(entries);
+    }
+
+    /// Total entries logged this round.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if nothing was logged.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries not yet drained into chunks.
+    pub fn pending(&self) -> usize {
+        self.entries.len() - self.drained
+    }
+
+    /// Drain as many FULL chunks as available (streaming during the
+    /// execution phase ships only complete 48 KB units).
+    pub fn drain_full_chunks(&mut self, out: &mut Vec<LogChunk>) {
+        while self.entries.len() - self.drained >= self.chunk_entries {
+            out.push(self.make_chunk(self.chunk_entries));
+        }
+    }
+
+    /// Drain everything, padding the final partial chunk (end of round).
+    pub fn drain_all(&mut self, out: &mut Vec<LogChunk>) {
+        self.drain_full_chunks(out);
+        let rest = self.entries.len() - self.drained;
+        if rest > 0 {
+            out.push(self.make_chunk(rest));
+        }
+    }
+
+    /// Reset for the next round, seeding with `carry` (commits that
+    /// happened while the previous round was validating — §IV-D
+    /// non-blocking CPU).
+    pub fn reset_with_carry(&mut self, carry: &[WriteEntry]) {
+        self.entries.clear();
+        self.drained = 0;
+        self.entries.extend_from_slice(carry);
+        self.carried = carry.len();
+    }
+
+    /// Favor-GPU round abort (§IV-E): this round's CPU commits are rolled
+    /// back and their log entries discarded — but the carried prefix
+    /// (commits from BEFORE the round started, still unshipped to the
+    /// winning device) survives and re-ships next round.
+    pub fn truncate_to_carried(&mut self) {
+        self.entries.truncate(self.carried);
+        self.drained = 0;
+    }
+
+    /// View of all entries logged this round (rollback replay needs them).
+    pub fn entries(&self) -> &[WriteEntry] {
+        &self.entries
+    }
+
+    fn make_chunk(&mut self, n: usize) -> LogChunk {
+        debug_assert!(n <= self.chunk_entries);
+        let mut chunk = LogChunk::empty(self.chunk_entries);
+        for (i, e) in self.entries[self.drained..self.drained + n].iter().enumerate() {
+            chunk.addrs[i] = e.addr as i32;
+            chunk.vals[i] = e.val;
+            chunk.ts[i] = e.ts;
+        }
+        self.drained += n;
+        chunk
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(addr: u32, val: i32, ts: i32) -> WriteEntry {
+        WriteEntry { addr, val, ts }
+    }
+
+    #[test]
+    fn full_chunks_then_padded_tail() {
+        let mut log = RoundLog::with_chunk_entries(4);
+        log.append(&(0..10).map(|i| entry(i, i as i32, 1)).collect::<Vec<_>>());
+        let mut chunks = Vec::new();
+        log.drain_full_chunks(&mut chunks);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(log.pending(), 2);
+        log.drain_all(&mut chunks);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[2].live(), 2);
+        assert_eq!(chunks[2].addrs, vec![8, 9, -1, -1]);
+        assert_eq!(log.pending(), 0);
+    }
+
+    #[test]
+    fn entries_preserve_order_and_fields() {
+        let mut log = RoundLog::with_chunk_entries(4);
+        log.append(&[entry(7, 70, 3), entry(9, 90, 4)]);
+        let mut chunks = Vec::new();
+        log.drain_all(&mut chunks);
+        assert_eq!(chunks[0].addrs[..2], [7, 9]);
+        assert_eq!(chunks[0].vals[..2], [70, 90]);
+        assert_eq!(chunks[0].ts[..2], [3, 4]);
+    }
+
+    #[test]
+    fn carry_seeds_next_round() {
+        let mut log = RoundLog::with_chunk_entries(4);
+        log.append(&[entry(1, 1, 1)]);
+        let mut chunks = Vec::new();
+        log.drain_all(&mut chunks);
+        log.reset_with_carry(&[entry(2, 2, 2)]);
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.pending(), 1);
+        let mut chunks2 = Vec::new();
+        log.drain_all(&mut chunks2);
+        assert_eq!(chunks2[0].addrs[0], 2);
+    }
+
+    #[test]
+    fn default_chunking_is_paper_sized() {
+        let log = RoundLog::new();
+        assert_eq!(log.chunk_entries(), 4096);
+        // 4096 entries * 12 B = 48 KB.
+        assert_eq!(LogChunk::empty(log.chunk_entries()).wire_bytes(), 48 * 1024);
+    }
+}

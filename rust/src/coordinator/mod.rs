@@ -1,0 +1,28 @@
+//! The SHeTM coordinator: the paper's system contribution.
+//!
+//! * [`round`] — the synchronization-round state machine (execution /
+//!   validation / merge), both the basic and the optimized variants;
+//! * [`logs`] — CPU write-set log collection and 48 KB chunking;
+//! * [`dispatch`] — CPU_Q / GPU_Q / SHARED_Q queues with device affinity
+//!   and work stealing;
+//! * [`policy`] — conflict-resolution policies (favor-CPU / favor-GPU /
+//!   anti-starvation);
+//! * [`stats`] — round and run metrics, incl. the Fig. 4 phase breakdown;
+//! * [`baseline`] — CPU-only / GPU-only solo engines (the paper's
+//!   comparison baselines).
+//!
+//! Most users assemble a [`round::RoundEngine`] through the workload
+//! drivers in [`crate::apps`]; see `examples/quickstart.rs`.
+
+pub mod baseline;
+pub mod dispatch;
+pub mod logs;
+pub mod policy;
+pub mod round;
+pub mod stats;
+
+pub use dispatch::{Affinity, Dispatcher};
+pub use logs::RoundLog;
+pub use policy::{Loser, Policy};
+pub use round::{CostModel, CpuDriver, CpuSlice, EngineConfig, GpuDriver, GpuSlice, RoundEngine, Variant};
+pub use stats::{PhaseBreakdown, RoundStats, RunStats};

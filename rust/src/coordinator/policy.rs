@@ -1,0 +1,127 @@
+//! Conflict-resolution policies (paper §IV-E).
+//!
+//! The default policy deterministically discards the GPU's speculative
+//! commits on inter-device conflict — CPU results can then be externalized
+//! without waiting for inter-device synchronization.  Alternatives favor
+//! the GPU, or add the anti-starvation contention manager: after a number
+//! of consecutive GPU aborts, the next round restricts the CPU to
+//! read-only transactions, which guarantees the GPU validates successfully
+//! (an empty CPU write-set cannot conflict).
+
+use crate::config::PolicyKind;
+
+/// Which device loses the current round on conflict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loser {
+    /// Discard GPU speculative commits (default).
+    Gpu,
+    /// Discard CPU speculative commits.
+    Cpu,
+}
+
+/// Runtime policy state machine.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    kind: PolicyKind,
+    starvation_limit: u32,
+    consecutive_gpu_aborts: u32,
+    /// When set, the CPU must run only read-only transactions this round.
+    cpu_read_only_round: bool,
+}
+
+impl Policy {
+    /// Build from config.
+    pub fn new(kind: PolicyKind, starvation_limit: u32) -> Self {
+        Policy {
+            kind,
+            starvation_limit,
+            consecutive_gpu_aborts: 0,
+            cpu_read_only_round: false,
+        }
+    }
+
+    /// Who loses if validation fails this round.
+    pub fn loser(&self) -> Loser {
+        match self.kind {
+            PolicyKind::FavorCpu | PolicyKind::CpuWithStarvationGuard => Loser::Gpu,
+            PolicyKind::FavorGpu => Loser::Cpu,
+        }
+    }
+
+    /// Under favor-GPU, validation must NOT apply CPU values during
+    /// the checking pass (apply is conditional on success, §IV-E).
+    pub fn conditional_apply(&self) -> bool {
+        self.kind == PolicyKind::FavorGpu
+    }
+
+    /// Whether the CPU is restricted to read-only transactions this round.
+    pub fn cpu_read_only(&self) -> bool {
+        self.cpu_read_only_round
+    }
+
+    /// Record a round outcome; updates the starvation guard.
+    pub fn on_round(&mut self, committed: bool) {
+        if committed {
+            self.consecutive_gpu_aborts = 0;
+            self.cpu_read_only_round = false;
+            return;
+        }
+        if self.loser() == Loser::Gpu {
+            self.consecutive_gpu_aborts += 1;
+            if self.kind == PolicyKind::CpuWithStarvationGuard
+                && self.consecutive_gpu_aborts >= self.starvation_limit
+            {
+                // §IV-E: only read-only CPU txns next round => the GPU is
+                // guaranteed to validate successfully.
+                self.cpu_read_only_round = true;
+            }
+        }
+    }
+
+    /// Consecutive GPU-losing rounds so far.
+    pub fn gpu_abort_streak(&self) -> u32 {
+        self.consecutive_gpu_aborts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn favor_cpu_discards_gpu() {
+        let p = Policy::new(PolicyKind::FavorCpu, 3);
+        assert_eq!(p.loser(), Loser::Gpu);
+        assert!(!p.conditional_apply());
+    }
+
+    #[test]
+    fn favor_gpu_discards_cpu_and_defers_apply() {
+        let p = Policy::new(PolicyKind::FavorGpu, 3);
+        assert_eq!(p.loser(), Loser::Cpu);
+        assert!(p.conditional_apply());
+    }
+
+    #[test]
+    fn starvation_guard_engages_and_releases() {
+        let mut p = Policy::new(PolicyKind::CpuWithStarvationGuard, 2);
+        p.on_round(false);
+        assert!(!p.cpu_read_only(), "below limit");
+        p.on_round(false);
+        assert!(p.cpu_read_only(), "limit hit: next round is read-only");
+        // A read-only CPU round always validates; the streak resets.
+        p.on_round(true);
+        assert!(!p.cpu_read_only());
+        assert_eq!(p.gpu_abort_streak(), 0);
+    }
+
+    #[test]
+    fn plain_favor_cpu_never_restricts() {
+        let mut p = Policy::new(PolicyKind::FavorCpu, 1);
+        for _ in 0..5 {
+            p.on_round(false);
+        }
+        assert!(!p.cpu_read_only());
+        assert_eq!(p.gpu_abort_streak(), 5);
+    }
+}

@@ -1,0 +1,823 @@
+//! The synchronization-round state machine (paper §IV-C/§IV-D).
+//!
+//! Each round has three phases — execution, validation, merge — driven by a
+//! hybrid engine: all *data* operations are real (CPU transactions execute
+//! through a guest TM against the CPU STMR replica; GPU batches and chunk
+//! validation execute through the device backends, native or PJRT), while
+//! *time* is virtual, advanced by the cost models of DESIGN.md §2 (bus
+//! latency/bandwidth, kernel activation latency, per-transaction and
+//! per-log-entry costs).  This is what lets a machine without a discrete
+//! GPU reproduce the paper's timing phenomenology with real state.
+//!
+//! The engine implements both the basic algorithm (Fig. 1a: blocking
+//! validation and merge) and the optimized SHeTM (Fig. 1b: log streaming
+//! overlapped with CPU processing, GPU double buffering via the shadow
+//! copy, early validation, coalesced merge transfers), plus the §IV-E
+//! conflict-resolution policies.
+
+use anyhow::Result;
+
+use super::logs::RoundLog;
+use super::policy::{Loser, Policy};
+use super::stats::{RoundStats, RunStats};
+use crate::bus::{BusModel, BusTimeline};
+use crate::config::PolicyKind;
+use crate::gpu::{GpuDevice, LogChunk};
+use crate::stm::{SharedStmr, WriteEntry};
+
+/// Algorithm variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// §IV-C basic algorithm: blocking validation + merge, no shadow copy,
+    /// logs shipped only after the execution phase ends.
+    Basic,
+    /// §IV-D optimized SHeTM (the default).
+    Optimized,
+}
+
+/// Result of one CPU execution slice.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CpuSlice {
+    /// Transactions committed in the slice.
+    pub commits: u64,
+    /// Execution attempts (commits + guest-TM retries).
+    pub attempts: u64,
+}
+
+/// The CPU side of the platform, as the engine sees it: a driver that runs
+/// `dur_s` virtual seconds of transaction processing and appends committed
+/// write-sets to a log.
+pub trait CpuDriver {
+    /// Run transactions for exactly `dur_s` virtual seconds, appending
+    /// committed `(addr, val, ts)` entries to `log`.
+    fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice;
+
+    /// The CPU STMR replica (merge installs into it).
+    fn stmr(&self) -> &SharedStmr;
+
+    /// Restrict the next slices to read-only transactions (starvation
+    /// guard, §IV-E).
+    fn set_read_only(&mut self, _ro: bool) {}
+
+    /// Snapshot the CPU state (favor-GPU policy; the paper uses fork/COW).
+    fn snapshot(&mut self) {
+        unimplemented!("this CPU driver does not support the favor-GPU policy")
+    }
+
+    /// Restore the snapshot (favor-GPU round abort).
+    fn rollback(&mut self) {
+        unimplemented!("this CPU driver does not support the favor-GPU policy")
+    }
+}
+
+/// Result of one GPU execution slice.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GpuSlice {
+    /// Transactions speculatively committed.
+    pub commits: u64,
+    /// Transactions attempted (includes intra-batch priority aborts).
+    pub attempts: u64,
+    /// Kernel activations.
+    pub batches: u64,
+    /// Device compute seconds actually used (<= budget; the remainder is
+    /// idle because another whole batch does not fit).
+    pub busy_s: f64,
+}
+
+/// The GPU side: a driver that feeds batches to the device under a compute
+/// budget.
+pub trait GpuDriver {
+    /// Execute whole batches while they fit in `budget_s` device-seconds.
+    fn run(&mut self, device: &mut GpuDevice, budget_s: f64) -> Result<GpuSlice>;
+
+    /// Round ended: `committed` tells the driver whether its speculative
+    /// work survived (on `false` it must restore/requeue consumed input).
+    fn on_round_end(&mut self, _committed: bool) {}
+}
+
+/// Cost model for device compute and local copies (bus costs live in
+/// [`BusModel`]).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Host->device bus.
+    pub bus_h2d: BusModel,
+    /// Device->host bus.
+    pub bus_d2h: BusModel,
+    /// Fixed kernel-activation latency.
+    pub gpu_kernel_latency_s: f64,
+    /// Per-transaction GPU execution time.
+    pub gpu_txn_s: f64,
+    /// Per-log-entry validation/apply time on the GPU.
+    pub gpu_validate_entry_s: f64,
+    /// Device-to-device copy bandwidth (shadow snapshot).
+    pub gpu_dtd_bytes_per_s: f64,
+    /// CPU-side snapshot cost (favor-GPU fork/COW) per byte.
+    pub cpu_snapshot_bytes_per_s: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            bus_h2d: BusModel::default(),
+            bus_d2h: BusModel::default(),
+            gpu_kernel_latency_s: 20e-6,
+            gpu_txn_s: 90e-9,
+            gpu_validate_entry_s: 1.2e-9,
+            // GTX-1080-class device-to-device copy.
+            gpu_dtd_bytes_per_s: 200e9,
+            // COW fork: page-table work only, very high effective rate.
+            cpu_snapshot_bytes_per_s: 2e12,
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Execution-phase duration (s).
+    pub period_s: f64,
+    /// Algorithm variant.
+    pub variant: Variant,
+    /// Early validation enabled (§IV-D; Optimized only).
+    pub early_validation: bool,
+    /// Early validations per round (the round is split into this+1
+    /// segments).
+    pub early_points: usize,
+    /// Log entries per chunk (paper: 4096 = 48 KB).
+    pub chunk_entries: usize,
+    /// Conflict-resolution policy.
+    pub policy: PolicyKind,
+    /// Consecutive GPU aborts before the starvation guard engages.
+    pub starvation_limit: u32,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            period_s: 0.080,
+            variant: Variant::Optimized,
+            early_validation: true,
+            early_points: 3,
+            chunk_entries: crate::bus::chunking::LOG_CHUNK_ENTRIES,
+            policy: PolicyKind::FavorCpu,
+            starvation_limit: 3,
+        }
+    }
+}
+
+/// The SHeTM round engine.
+pub struct RoundEngine<C: CpuDriver, G: GpuDriver> {
+    /// Engine configuration (variant, period, policy, ...).
+    pub cfg: EngineConfig,
+    /// Cost model used to advance virtual time.
+    pub cost: CostModel,
+    /// The simulated accelerator.
+    pub device: GpuDevice,
+    /// CPU-side driver.
+    pub cpu: C,
+    /// GPU-side driver.
+    pub gpu: G,
+    /// Aggregate statistics.
+    pub stats: RunStats,
+    /// Per-round statistics (most recent rounds, ring-limited).
+    pub round_log: Vec<RoundStats>,
+
+    policy: Policy,
+    h2d: BusTimeline,
+    d2h: BusTimeline,
+    /// Virtual time of the current round's start.
+    t: f64,
+    /// When the CPU may resume processing (merge install blocks it).
+    cpu_avail: f64,
+    log: RoundLog,
+    carry: Vec<WriteEntry>,
+    scratch: Vec<WriteEntry>,
+}
+
+impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
+    /// Assemble an engine; the device's STMR must equal the CPU driver's.
+    pub fn new(cfg: EngineConfig, cost: CostModel, device: GpuDevice, cpu: C, gpu: G) -> Self {
+        assert_eq!(
+            device.n_words(),
+            cpu.stmr().len(),
+            "CPU and GPU replicas must cover the same STMR"
+        );
+        let policy = Policy::new(cfg.policy, cfg.starvation_limit);
+        let log = RoundLog::with_chunk_entries(cfg.chunk_entries);
+        RoundEngine {
+            cfg,
+            cost,
+            device,
+            cpu,
+            gpu,
+            stats: RunStats::default(),
+            round_log: Vec::new(),
+            policy,
+            h2d: BusTimeline::new(),
+            d2h: BusTimeline::new(),
+            t: 0.0,
+            cpu_avail: 0.0,
+            log,
+            carry: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.t
+    }
+
+    /// Change the log-chunk size (ablation benches). Must be called
+    /// between rounds; resets any un-drained log state.
+    pub fn set_chunk_entries(&mut self, n: usize) {
+        self.cfg.chunk_entries = n;
+        self.log = RoundLog::with_chunk_entries(n);
+        self.carry.clear();
+    }
+
+    /// Copy the CPU STMR into the device replica (initial alignment; both
+    /// replicas must start identical — a consistent snapshot, §IV-C.1).
+    pub fn align_replicas(&mut self) {
+        let snap = self.cpu.stmr().snapshot();
+        self.device.stmr_mut().copy_from_slice(&snap);
+    }
+
+    /// Run `n` synchronization rounds.
+    pub fn run_rounds(&mut self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            self.run_round()?;
+        }
+        Ok(())
+    }
+
+    /// Run rounds until at least `dur_s` of virtual time has elapsed.
+    pub fn run_for(&mut self, dur_s: f64) -> Result<()> {
+        let end = self.t + dur_s;
+        while self.t < end {
+            self.run_round()?;
+        }
+        Ok(())
+    }
+
+    /// Quiesce: run one zero-length round so that commits carried over
+    /// from the last validation window (the §IV-D non-blocking CPU) are
+    /// shipped and applied.  After a committed drain the two replicas are
+    /// guaranteed identical; between ordinary rounds the GPU legitimately
+    /// lags by the carry.
+    pub fn drain(&mut self) -> Result<()> {
+        let saved = self.cfg.clone();
+        self.cfg.period_s = 0.0;
+        self.cfg.early_validation = false;
+        let r = self.run_round();
+        self.cfg = saved;
+        r
+    }
+
+    /// Merge-phase transfer ranges: the GPU write-set rounded out to the
+    /// paper's 16 KB transfer granularity and coalesced (§IV-D).
+    fn merge_ranges(&self) -> Vec<(usize, usize)> {
+        let granule_words = (crate::bus::chunking::MERGE_GRANULE_BYTES / 4) as usize;
+        self.device.ws_bmp().dirty_word_ranges_coarse(granule_words)
+    }
+
+    /// Execute one synchronization round.
+    pub fn run_round(&mut self) -> Result<()> {
+        let optimized = self.cfg.variant == Variant::Optimized;
+        let t0 = self.t;
+        let mut rs = RoundStats {
+            t_start: t0,
+            ..Default::default()
+        };
+        let n_bytes = (self.device.n_words() * 4) as u64;
+
+        self.cpu.set_read_only(self.policy.cpu_read_only());
+        if self.policy.conditional_apply() {
+            // favor-GPU needs a CPU snapshot to roll back to (fork/COW).
+            self.cpu.snapshot();
+        }
+
+        // --- Execution phase --------------------------------------------
+        self.device.begin_round();
+        let mut gpu_cursor = t0;
+        if optimized {
+            // Shadow copy (DtD) before the GPU may process (§IV-D).
+            let dtd = n_bytes as f64 / self.cost.gpu_dtd_bytes_per_s;
+            gpu_cursor += dtd;
+            rs.gpu_phases.merge_s += dtd;
+        }
+        let exec_end_target = t0 + self.cfg.period_s;
+
+        let mut chunks: Vec<LogChunk> = Vec::new();
+        let mut arrivals: Vec<f64> = Vec::new();
+        let mut early_abort = false;
+
+        let mut cpu_cursor = self.cpu_avail.max(t0);
+        rs.cpu_phases.blocked_s += cpu_cursor - t0;
+        let segments = if optimized && self.cfg.early_validation {
+            self.cfg.early_points + 1
+        } else {
+            1
+        };
+        let seg_dur = (exec_end_target - cpu_cursor).max(0.0) / segments as f64;
+
+        for s in 0..segments {
+            // CPU slice (real transactions through the guest TM).
+            self.scratch.clear();
+            let cs = self.cpu.run(seg_dur, &mut self.scratch);
+            self.log.append(&self.scratch);
+            rs.cpu_commits += cs.commits;
+            rs.cpu_attempts += cs.attempts;
+            rs.cpu_phases.processing_s += seg_dur;
+            cpu_cursor += seg_dur;
+
+            // GPU slice covering the same virtual span.
+            let budget = (cpu_cursor - gpu_cursor).max(0.0);
+            let gs = self.gpu.run(&mut self.device, budget)?;
+            rs.gpu_commits += gs.commits;
+            rs.gpu_attempts += gs.attempts;
+            rs.gpu_batches += gs.batches;
+            rs.gpu_phases.processing_s += gs.busy_s;
+            // Drivers may carry unusable sub-batch budget across segments
+            // (a real GPU's kernel stream is not segment-quantized), so
+            // `busy_s` can slightly exceed one segment's budget.
+            rs.gpu_phases.blocked_s += (budget - gs.busy_s).max(0.0);
+            gpu_cursor = cpu_cursor;
+
+            // Non-blocking log streaming (§IV-D): ship full chunks now.
+            if optimized {
+                let n0 = chunks.len();
+                self.log.drain_full_chunks(&mut chunks);
+                for c in &chunks[n0..] {
+                    let dur = self.cost.bus_h2d.transfer_secs(c.wire_bytes());
+                    let (_, end) = self.h2d.schedule(cpu_cursor, dur);
+                    arrivals.push(end);
+                }
+            }
+
+            // Early validation between segments (§IV-D): check arrived
+            // chunks against the current read-set bitmap without applying.
+            if optimized && self.cfg.early_validation && s + 1 < segments {
+                let arrived = arrivals.iter().filter(|&&a| a <= cpu_cursor).count();
+                let mut conf = 0u32;
+                for c in chunks.iter().take(arrived) {
+                    conf += self.device.early_validate_chunk(c);
+                }
+                let cost =
+                    arrived as f64 * self.cfg.chunk_entries as f64 * self.cost.gpu_validate_entry_s;
+                gpu_cursor += cost;
+                rs.gpu_phases.validation_s += cost;
+                if conf > 0 {
+                    // Conflict already certain: finish the round now
+                    // instead of wasting the rest of the period.
+                    early_abort = true;
+                    rs.early_aborted = true;
+                    break;
+                }
+            }
+        }
+        let _ = early_abort;
+
+        // Drain the remaining (tail) chunks.
+        {
+            let n0 = chunks.len();
+            self.log.drain_all(&mut chunks);
+            for c in &chunks[n0..] {
+                let dur = self.cost.bus_h2d.transfer_secs(c.wire_bytes());
+                let (_, end) = self.h2d.schedule(cpu_cursor, dur);
+                arrivals.push(end);
+                if !optimized {
+                    // Basic: the CPU is blocked while shipping its logs.
+                    rs.cpu_phases.validation_s += dur;
+                }
+            }
+        }
+
+        // --- Validation phase --------------------------------------------
+        let conditional = self.policy.conditional_apply();
+        let mut conflicts = 0u64;
+        let chunk_cost = self.cfg.chunk_entries as f64 * self.cost.gpu_validate_entry_s;
+        for (c, &arr) in chunks.iter().zip(&arrivals) {
+            let start = arr.max(gpu_cursor);
+            rs.gpu_phases.blocked_s += start - gpu_cursor;
+            conflicts += if conditional {
+                // favor-GPU: check without applying (§IV-E).
+                u64::from(self.device.early_validate_chunk(c))
+            } else {
+                u64::from(self.device.validate_chunk(c)?)
+            };
+            gpu_cursor = start + chunk_cost;
+            rs.gpu_phases.validation_s += chunk_cost;
+        }
+        rs.chunks = chunks.len() as u64;
+        rs.conflict_entries = conflicts;
+        let tv = gpu_cursor;
+
+        // Non-blocking CPU (§IV-D): keep processing during validation;
+        // commits logged for the NEXT round.  Suppressed in zero-period
+        // drain rounds (which flush the carry, not grow it) and under the
+        // favor-GPU policy: commits made during validation postdate the
+        // round's rollback snapshot, so they could not be undone if the
+        // NEXT round aborts the CPU — the paper's fork-at-phase-start
+        // sketch (§IV-E) implies the CPU blocks there too.
+        if optimized && tv > cpu_cursor && self.cfg.period_s > 0.0 && !conditional {
+            let bonus = tv - cpu_cursor;
+            self.scratch.clear();
+            let cs = self.cpu.run(bonus, &mut self.scratch);
+            self.carry.extend_from_slice(&self.scratch);
+            rs.cpu_commits += cs.commits;
+            rs.cpu_attempts += cs.attempts;
+            rs.cpu_phases.processing_s += bonus;
+            cpu_cursor = tv;
+        } else if tv > cpu_cursor {
+            rs.cpu_phases.blocked_s += tv - cpu_cursor;
+            cpu_cursor = tv;
+        }
+
+        // --- Merge phase ---------------------------------------------------
+        let ok = conflicts == 0;
+        rs.committed = ok;
+        let round_end;
+        if ok {
+            if conditional {
+                // favor-GPU deferred apply: now that validation succeeded,
+                // apply the CPU log chunks to the device replica.
+                for c in &chunks {
+                    self.device.validate_chunk(c)?;
+                }
+                let cost = chunks.len() as f64 * chunk_cost;
+                gpu_cursor += cost;
+                rs.gpu_phases.merge_s += cost;
+            }
+            // DtH transfer of the GPU's dirty regions at the paper's 16 KB
+            // merge granularity, coalesced (§IV-D); install into the CPU
+            // replica.  (Post-validation, the GPU's words equal the CPU's
+            // everywhere the GPU did not write, so rounding ranges out to
+            // coarse granules copies only agreeing bytes.)
+            let ranges = self.merge_ranges();
+            let mut dth_end = gpu_cursor;
+            for &(s, e) in &ranges {
+                let bytes = ((e - s) * 4) as u64;
+                let dur = self.cost.bus_d2h.transfer_secs(bytes);
+                let (_, end) = self.d2h.schedule(gpu_cursor, dur);
+                dth_end = end;
+                let data = &self.device.stmr()[s..e];
+                self.cpu.stmr().install_range(s, data);
+            }
+            // Carry-window CPU commits re-win their words locally: they
+            // serialize AFTER this round's GPU transactions (see DESIGN.md).
+            for e in &self.carry {
+                self.cpu.stmr().store(e.addr as usize, e.val);
+            }
+            if optimized {
+                // GPU resumes immediately (the next round's shadow feeds
+                // nothing — the DtH reads finished state; device free at tv).
+                rs.cpu_phases.merge_s += dth_end - cpu_cursor;
+                self.cpu_avail = dth_end;
+                round_end = gpu_cursor;
+            } else {
+                // Basic: both devices blocked until the transfer completes.
+                rs.cpu_phases.merge_s += dth_end - cpu_cursor;
+                rs.gpu_phases.merge_s += dth_end - gpu_cursor;
+                self.cpu_avail = dth_end;
+                round_end = dth_end;
+            }
+        } else {
+            rs.discarded_commits = match self.policy.loser() {
+                Loser::Gpu => {
+                    let discarded = rs.gpu_commits;
+                    rs.gpu_commits = 0;
+                    if optimized {
+                        // Shadow + CPU-log replay (§IV-D rollback latency).
+                        self.device.rollback_with_logs(&chunks);
+                        let cost = chunks.len() as f64 * chunk_cost;
+                        gpu_cursor += cost;
+                        rs.gpu_phases.merge_s += cost;
+                        round_end = gpu_cursor;
+                        self.cpu_avail = cpu_cursor;
+                    } else {
+                        // Basic: re-copy every GPU-dirty region from the CPU
+                        // (16 KB merge granularity, as in the merge phase).
+                        let ranges = self.merge_ranges();
+                        let mut h2d_end = gpu_cursor;
+                        for &(s, e) in &ranges {
+                            let bytes = ((e - s) * 4) as u64;
+                            let dur = self.cost.bus_h2d.transfer_secs(bytes);
+                            let (_, end) = self.h2d.schedule(gpu_cursor, dur);
+                            h2d_end = end;
+                            for w in s..e {
+                                let v = self.cpu.stmr().load(w);
+                                self.device.stmr_mut()[w] = v;
+                            }
+                        }
+                        rs.gpu_phases.merge_s += h2d_end - gpu_cursor;
+                        rs.cpu_phases.blocked_s += h2d_end - cpu_cursor;
+                        self.cpu_avail = h2d_end;
+                        round_end = h2d_end;
+                    }
+                    discarded
+                }
+                Loser::Cpu => {
+                    // favor-GPU: roll the CPU back to its round-start
+                    // snapshot, then install the GPU's dirty regions.
+                    // Commits carried from before this round survive the
+                    // rollback (the snapshot postdates them), so their
+                    // still-unshipped log prefix is preserved; only this
+                    // round's entries (including its bonus window, held in
+                    // `carry`) are discarded.
+                    let discarded = rs.cpu_commits;
+                    self.cpu.rollback();
+                    self.carry.clear();
+                    self.log.truncate_to_carried();
+                    let snap_cost = n_bytes as f64 / self.cost.cpu_snapshot_bytes_per_s;
+                    let ranges = self.merge_ranges();
+                    let mut dth_end = gpu_cursor + snap_cost;
+                    for &(s, e) in &ranges {
+                        let bytes = ((e - s) * 4) as u64;
+                        let dur = self.cost.bus_d2h.transfer_secs(bytes);
+                        let (_, end) = self.d2h.schedule(dth_end, dur);
+                        dth_end = end;
+                        let data = &self.device.stmr()[s..e];
+                        self.cpu.stmr().install_range(s, data);
+                    }
+                    rs.cpu_commits = 0;
+                    rs.cpu_phases.merge_s += dth_end - cpu_cursor;
+                    self.cpu_avail = dth_end;
+                    round_end = gpu_cursor;
+                    discarded
+                }
+            };
+        }
+
+        // --- Round wrap-up -------------------------------------------------
+        let cpu_lost = !ok && self.policy.loser() == Loser::Cpu;
+        self.policy.on_round(ok);
+        self.gpu.on_round_end(ok);
+        if !cpu_lost {
+            self.log.reset_with_carry(&self.carry);
+        }
+        self.carry.clear();
+        rs.t_end = round_end;
+        self.t = round_end;
+        self.stats.absorb(&rs);
+        if self.round_log.len() < 10_000 {
+            self.round_log.push(rs);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::{Backend, TxnBatch};
+    use crate::stm::{GlobalClock, GuestTm, SharedStmr, WriteEntry};
+    use crate::stm::tinystm::TinyStm;
+    use std::sync::Arc;
+
+    /// Deterministic scripted CPU driver: writes `addr = round_counter`
+    /// style entries through a real TinySTM.
+    struct ScriptCpu {
+        stmr: Arc<SharedStmr>,
+        tm: Arc<TinyStm>,
+        txns_per_sec: f64,
+        addr_base: usize,
+        counter: i32,
+        ro: bool,
+        debt: f64,
+        snap: Option<Vec<i32>>,
+    }
+
+    impl ScriptCpu {
+        fn new(n: usize, txns_per_sec: f64, addr_base: usize) -> Self {
+            let clock = Arc::new(GlobalClock::new());
+            ScriptCpu {
+                stmr: Arc::new(SharedStmr::new(n)),
+                tm: Arc::new(TinyStm::with_clock(clock)),
+                txns_per_sec,
+                addr_base,
+                counter: 0,
+                ro: false,
+                debt: 0.0,
+                snap: None,
+            }
+        }
+    }
+
+    impl CpuDriver for ScriptCpu {
+        fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice {
+            let want = dur_s * self.txns_per_sec + self.debt;
+            let n = want.floor() as u64;
+            self.debt = want - n as f64;
+            let mut commits = 0;
+            for _ in 0..n {
+                if self.ro {
+                    continue;
+                }
+                let addr = self.addr_base + (self.counter as usize % 16);
+                let val = self.counter;
+                self.counter += 1;
+                self.tm.execute_into(
+                    &self.stmr,
+                    &mut |tx| {
+                        let _ = tx.read(addr)?;
+                        tx.write(addr, val)?;
+                        Ok(())
+                    },
+                    log,
+                );
+                commits += 1;
+            }
+            CpuSlice {
+                commits,
+                attempts: commits,
+            }
+        }
+
+        fn stmr(&self) -> &SharedStmr {
+            &self.stmr
+        }
+
+        fn set_read_only(&mut self, ro: bool) {
+            self.ro = ro;
+        }
+
+        fn snapshot(&mut self) {
+            self.snap = Some(self.stmr.snapshot());
+        }
+
+        fn rollback(&mut self) {
+            let snap = self.snap.take().expect("snapshot taken");
+            self.stmr.install_range(0, &snap);
+        }
+    }
+
+    /// Scripted GPU driver: each batch writes a fixed disjoint region, and
+    /// optionally reads an address the CPU writes (to force conflicts).
+    struct ScriptGpu {
+        batch_cost_s: f64,
+        write_base: usize,
+        read_conflict_addr: Option<usize>,
+        counter: i32,
+        carry: f64,
+    }
+
+    impl GpuDriver for ScriptGpu {
+        fn run(&mut self, device: &mut GpuDevice, budget_s: f64) -> Result<GpuSlice> {
+            let mut out = GpuSlice::default();
+            let mut left = budget_s + self.carry;
+            while left >= self.batch_cost_s {
+                let mut b = TxnBatch::empty(4, 1, 1);
+                for i in 0..4 {
+                    b.read_idx[i] = match self.read_conflict_addr {
+                        Some(a) if i == 0 => a as i32,
+                        _ => -1,
+                    };
+                    b.write_idx[i] = (self.write_base + i) as i32;
+                    b.write_val[i] = self.counter;
+                    b.op[i] = 1;
+                }
+                self.counter += 1;
+                let r = device.run_txn_batch(&b)?;
+                out.commits += r.n_commits as u64;
+                out.attempts += 4;
+                out.batches += 1;
+                out.busy_s += self.batch_cost_s;
+                left -= self.batch_cost_s;
+            }
+            self.carry = left;
+            Ok(out)
+        }
+
+        fn on_round_end(&mut self, _committed: bool) {
+            self.carry = 0.0;
+        }
+    }
+
+    fn engine(
+        conflict: bool,
+        variant: Variant,
+        policy: PolicyKind,
+    ) -> RoundEngine<ScriptCpu, ScriptGpu> {
+        let n = 1024;
+        let cpu = ScriptCpu::new(n, 10_000.0, 0); // writes words 0..16
+        let gpu = ScriptGpu {
+            batch_cost_s: 0.3e-3,
+            write_base: 512,
+            read_conflict_addr: conflict.then_some(3),
+            counter: 0,
+            carry: 0.0,
+        };
+        let device = GpuDevice::new(n, 0, Backend::Native);
+        let cfg = EngineConfig {
+            period_s: 0.010,
+            variant,
+            early_validation: false,
+            policy,
+            ..Default::default()
+        };
+        let mut e = RoundEngine::new(cfg, CostModel::default(), device, cpu, gpu);
+        e.align_replicas();
+        e
+    }
+
+    #[test]
+    fn clean_round_merges_replicas() {
+        for variant in [Variant::Optimized, Variant::Basic] {
+            let mut e = engine(false, variant, PolicyKind::FavorCpu);
+            e.run_rounds(3).unwrap();
+            assert_eq!(e.stats.rounds_committed, 3, "{variant:?}");
+            assert!(e.stats.cpu_commits > 0);
+            assert!(e.stats.gpu_commits > 0);
+            // Replica agreement: CPU and GPU STMRs identical after merge.
+            let cpu_snap = e.cpu.stmr().snapshot();
+            assert_eq!(&cpu_snap[..], e.device.stmr(), "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn conflicting_round_favor_cpu_discards_gpu() {
+        for variant in [Variant::Optimized, Variant::Basic] {
+            let mut e = engine(true, variant, PolicyKind::FavorCpu);
+            e.run_rounds(2).unwrap();
+            assert_eq!(e.stats.rounds_committed, 0, "{variant:?}");
+            assert_eq!(e.stats.gpu_commits, 0, "GPU work discarded");
+            assert!(e.stats.discarded_commits > 0);
+            assert!(e.stats.cpu_commits > 0, "CPU commits survive");
+            // GPU writes must not be visible anywhere.
+            assert_eq!(e.cpu.stmr().load(512), 0);
+            assert_eq!(e.device.stmr()[512], 0);
+            // CPU values must have reached the GPU replica regardless.
+            let cpu_snap = e.cpu.stmr().snapshot();
+            assert_eq!(&cpu_snap[..], e.device.stmr(), "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn conflicting_round_favor_gpu_discards_cpu() {
+        let mut e = engine(true, Variant::Optimized, PolicyKind::FavorGpu);
+        e.run_rounds(1).unwrap();
+        assert_eq!(e.stats.rounds_committed, 0);
+        assert_eq!(e.stats.cpu_commits, 0, "CPU commits discarded");
+        assert!(e.stats.gpu_commits > 0, "GPU commits survive");
+        // GPU writes visible on both replicas; CPU writes rolled back.
+        assert!(e.cpu.stmr().load(512) >= 0);
+        assert_eq!(e.cpu.stmr().load(3), 0, "CPU write rolled back");
+        assert_eq!(e.device.stmr()[3], 0);
+    }
+
+    #[test]
+    fn starvation_guard_forces_read_only_round() {
+        let mut e = engine(true, Variant::Optimized, PolicyKind::CpuWithStarvationGuard);
+        e.cfg.starvation_limit = 2;
+        e.policy = Policy::new(PolicyKind::CpuWithStarvationGuard, 2);
+        e.run_rounds(2).unwrap();
+        assert_eq!(e.stats.rounds_committed, 0);
+        // Third round: CPU runs read-only => validation must succeed.
+        e.run_rounds(1).unwrap();
+        assert_eq!(e.stats.rounds_committed, 1, "read-only round validates");
+    }
+
+    #[test]
+    fn longer_periods_amortize_sync_overhead() {
+        let mut short = engine(false, Variant::Optimized, PolicyKind::FavorCpu);
+        short.cfg.period_s = 0.002;
+        short.run_for(0.4).unwrap();
+        let mut long = engine(false, Variant::Optimized, PolicyKind::FavorCpu);
+        long.cfg.period_s = 0.050;
+        long.run_for(0.4).unwrap();
+        assert!(
+            long.stats.throughput() > short.stats.throughput(),
+            "long {} <= short {}",
+            long.stats.throughput(),
+            short.stats.throughput()
+        );
+    }
+
+    #[test]
+    fn optimized_beats_basic_on_short_rounds() {
+        let mut basic = engine(false, Variant::Basic, PolicyKind::FavorCpu);
+        basic.cfg.period_s = 0.002;
+        basic.run_for(0.4).unwrap();
+        let mut opt = engine(false, Variant::Optimized, PolicyKind::FavorCpu);
+        opt.cfg.period_s = 0.002;
+        opt.run_for(0.4).unwrap();
+        assert!(
+            opt.stats.throughput() >= basic.stats.throughput(),
+            "optimized {} < basic {}",
+            opt.stats.throughput(),
+            basic.stats.throughput()
+        );
+    }
+
+    #[test]
+    fn time_and_phases_are_accounted() {
+        let mut e = engine(false, Variant::Optimized, PolicyKind::FavorCpu);
+        e.run_rounds(5).unwrap();
+        assert!(e.now() > 0.0);
+        assert!(e.stats.duration_s > 0.0);
+        assert!(e.stats.gpu_phases.processing_s > 0.0);
+        assert!(e.stats.cpu_phases.processing_s > 0.0);
+        assert!(e.stats.chunks > 0);
+    }
+}

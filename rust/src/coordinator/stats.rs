@@ -1,0 +1,187 @@
+//! Metrics: per-round and aggregate statistics, including the phase-time
+//! breakdown the paper reports in Figure 4 (processing / validation /
+//! merge / blocked, per device).
+
+/// Where a device spent its time during rounds (virtual seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseBreakdown {
+    /// Executing transactions.
+    pub processing_s: f64,
+    /// GPU: validating CPU log chunks. CPU: shipping logs while blocked
+    /// (basic variant only).
+    pub validation_s: f64,
+    /// Merge-phase transfers / state installs.
+    pub merge_s: f64,
+    /// Blocked waiting on the other device or the bus.
+    pub blocked_s: f64,
+}
+
+impl PhaseBreakdown {
+    /// Sum of all accounted time.
+    pub fn total(&self) -> f64 {
+        self.processing_s + self.validation_s + self.merge_s + self.blocked_s
+    }
+
+    fn add(&mut self, o: &PhaseBreakdown) {
+        self.processing_s += o.processing_s;
+        self.validation_s += o.validation_s;
+        self.merge_s += o.merge_s;
+        self.blocked_s += o.blocked_s;
+    }
+}
+
+/// Statistics of one synchronization round.
+#[derive(Debug, Clone, Default)]
+pub struct RoundStats {
+    /// Virtual time at round start.
+    pub t_start: f64,
+    /// Virtual end of the round (next round's start).
+    pub t_end: f64,
+    /// CPU transactions committed (these are final under favor-CPU).
+    pub cpu_commits: u64,
+    /// CPU execution attempts (commits + intra-device retries).
+    pub cpu_attempts: u64,
+    /// GPU transactions speculatively committed this round.
+    pub gpu_commits: u64,
+    /// GPU execution attempts.
+    pub gpu_attempts: u64,
+    /// GPU kernel activations.
+    pub gpu_batches: u64,
+    /// Log chunks shipped and validated.
+    pub chunks: u64,
+    /// Conflicting log entries found by validation.
+    pub conflict_entries: u64,
+    /// Whether inter-device validation succeeded.
+    pub committed: bool,
+    /// Whether early validation aborted the round before the period ended.
+    pub early_aborted: bool,
+    /// Speculative commits discarded by the losing device.
+    pub discarded_commits: u64,
+    /// Per-device phase breakdown.
+    pub cpu_phases: PhaseBreakdown,
+    /// GPU phase breakdown.
+    pub gpu_phases: PhaseBreakdown,
+}
+
+/// Aggregate over a run of many rounds.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Rounds executed.
+    pub rounds: u64,
+    /// Rounds whose validation succeeded.
+    pub rounds_committed: u64,
+    /// Rounds aborted by early validation.
+    pub rounds_early_aborted: u64,
+    /// Total virtual duration.
+    pub duration_s: f64,
+    /// Committed CPU transactions.
+    pub cpu_commits: u64,
+    /// CPU attempts.
+    pub cpu_attempts: u64,
+    /// GPU transactions whose speculative commit survived the round.
+    pub gpu_commits: u64,
+    /// GPU attempts (includes intra-batch retries).
+    pub gpu_attempts: u64,
+    /// Speculative commits discarded on round aborts (wasted work).
+    pub discarded_commits: u64,
+    /// Total log chunks validated.
+    pub chunks: u64,
+    /// Aggregate CPU phase breakdown.
+    pub cpu_phases: PhaseBreakdown,
+    /// Aggregate GPU phase breakdown.
+    pub gpu_phases: PhaseBreakdown,
+}
+
+impl RunStats {
+    /// Fold one round into the aggregate.
+    ///
+    /// `RoundStats::{cpu,gpu}_commits` are SURVIVING commits — the engine
+    /// zeroes the losing device's count and moves it to
+    /// `discarded_commits` before absorbing.
+    pub fn absorb(&mut self, r: &RoundStats) {
+        self.rounds += 1;
+        if r.committed {
+            self.rounds_committed += 1;
+        }
+        self.gpu_commits += r.gpu_commits;
+        if r.early_aborted {
+            self.rounds_early_aborted += 1;
+        }
+        self.duration_s += r.t_end - r.t_start;
+        self.cpu_commits += r.cpu_commits;
+        self.cpu_attempts += r.cpu_attempts;
+        self.gpu_attempts += r.gpu_attempts;
+        self.discarded_commits += r.discarded_commits;
+        self.chunks += r.chunks;
+        self.cpu_phases.add(&r.cpu_phases);
+        self.gpu_phases.add(&r.gpu_phases);
+    }
+
+    /// Committed transactions (both devices) per virtual second.
+    pub fn throughput(&self) -> f64 {
+        if self.duration_s == 0.0 {
+            0.0
+        } else {
+            (self.cpu_commits + self.gpu_commits) as f64 / self.duration_s
+        }
+    }
+
+    /// Fraction of rounds that failed inter-device validation.
+    pub fn round_abort_rate(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            1.0 - self.rounds_committed as f64 / self.rounds as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_accumulates_and_rates() {
+        let mut run = RunStats::default();
+        let mut r = RoundStats {
+            t_start: 0.0,
+            t_end: 0.5,
+            cpu_commits: 100,
+            gpu_commits: 200,
+            committed: true,
+            ..Default::default()
+        };
+        run.absorb(&r);
+        r.t_start = 0.5;
+        r.t_end = 1.0;
+        r.committed = false;
+        r.gpu_commits = 0; // engine moves the losing side's commits...
+        r.discarded_commits = 200; // ...into discarded before absorbing
+        run.absorb(&r);
+        assert_eq!(run.rounds, 2);
+        assert_eq!(run.rounds_committed, 1);
+        assert_eq!(run.cpu_commits, 200);
+        assert_eq!(run.gpu_commits, 200, "failed round's GPU commits dropped");
+        assert_eq!(run.discarded_commits, 200);
+        assert!((run.round_abort_rate() - 0.5).abs() < 1e-12);
+        assert!((run.throughput() - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_run_has_zero_rates() {
+        let run = RunStats::default();
+        assert_eq!(run.throughput(), 0.0);
+        assert_eq!(run.round_abort_rate(), 0.0);
+    }
+
+    #[test]
+    fn phase_breakdown_totals() {
+        let p = PhaseBreakdown {
+            processing_s: 1.0,
+            validation_s: 2.0,
+            merge_s: 3.0,
+            blocked_s: 4.0,
+        };
+        assert!((p.total() - 10.0).abs() < 1e-12);
+    }
+}

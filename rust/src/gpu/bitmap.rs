@@ -1,0 +1,226 @@
+//! Access-tracking bitmaps with configurable granularity (paper §IV-B/V-A).
+//!
+//! The GPU guest TM records, per committed transaction, which *granules*
+//! (`1 << shift` STMR words) were read (`RS_bmp`) and written (`WS_bmp`).
+//! Coarser granules shrink the bitmap (better locality, ~5% overhead in the
+//! paper) at the price of false-positive conflicts — the trade-off Figure 2
+//! and our `ablate_granularity` bench quantify.
+//!
+//! Entries are `i32` 0/1 (not packed bits) to stay layout-identical with
+//! the PJRT kernel tensors, letting the device hand its bitmap to the
+//! artifact without conversion.
+
+/// A granule-tracking bitmap over an STMR of `n_words` words.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitmap {
+    shift: u32,
+    n_words: usize,
+    bits: Vec<i32>,
+}
+
+impl Bitmap {
+    /// Create an empty bitmap; granularity is `1 << shift` words.
+    pub fn new(n_words: usize, shift: u32) -> Self {
+        let len = n_words.div_ceil(1 << shift);
+        Bitmap {
+            shift,
+            n_words,
+            bits: vec![0; len],
+        }
+    }
+
+    /// Granularity shift (granule = `1 << shift` words).
+    pub fn shift(&self) -> u32 {
+        self.shift
+    }
+
+    /// Number of granule entries.
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// True if no granule is marked.
+    pub fn is_empty(&self) -> bool {
+        self.bits.iter().all(|&b| b == 0)
+    }
+
+    /// Mark the granule containing `word`.
+    #[inline]
+    pub fn mark_word(&mut self, word: usize) {
+        debug_assert!(word < self.n_words);
+        self.bits[word >> self.shift] = 1;
+    }
+
+    /// Test the granule containing `word`.
+    #[inline]
+    pub fn test_word(&self, word: usize) -> bool {
+        self.bits[word >> self.shift] != 0
+    }
+
+    /// Mark a granule directly.
+    #[inline]
+    pub fn mark_granule(&mut self, g: usize) {
+        self.bits[g] = 1;
+    }
+
+    /// Clear all marks (start of a new synchronization round).
+    pub fn clear(&mut self) {
+        self.bits.fill(0);
+    }
+
+    /// Count of marked granules.
+    pub fn count(&self) -> usize {
+        self.bits.iter().filter(|&&b| b != 0).count()
+    }
+
+    /// Raw tensor view (for the PJRT kernels).
+    pub fn as_slice(&self) -> &[i32] {
+        &self.bits
+    }
+
+    /// Replace contents from a kernel output tensor.
+    pub fn set_from_slice(&mut self, data: &[i32]) {
+        assert_eq!(data.len(), self.bits.len(), "bitmap tensor shape");
+        self.bits.copy_from_slice(data);
+    }
+
+    /// Word range `[start, end)` covered by granule `g`, clamped to the STMR.
+    pub fn granule_words(&self, g: usize) -> (usize, usize) {
+        let start = g << self.shift;
+        let end = ((g + 1) << self.shift).min(self.n_words);
+        (start, end)
+    }
+
+    /// Iterate maximal runs of consecutive marked granules as word ranges
+    /// `[start, end)` — the transfer-coalescing the paper's GPU-controller
+    /// performs in the merge phase (§IV-D).
+    pub fn dirty_word_ranges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut i = 0usize;
+        while i < self.bits.len() {
+            if self.bits[i] != 0 {
+                let run_start = i;
+                while i < self.bits.len() && self.bits[i] != 0 {
+                    i += 1;
+                }
+                let (s, _) = self.granule_words(run_start);
+                let (_, e) = self.granule_words(i - 1);
+                out.push((s, e));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Total words covered by marked granules.
+    pub fn dirty_words(&self) -> usize {
+        self.dirty_word_ranges().iter().map(|(s, e)| e - s).sum()
+    }
+
+    /// Dirty word ranges rounded out to `granule_words` boundaries and
+    /// re-coalesced — the paper's merge-phase transfer granularity
+    /// (16 KB, §IV-D): fine-grained conflict tracking would otherwise
+    /// shatter the DtH copy into thousands of latency-dominated DMAs.
+    pub fn dirty_word_ranges_coarse(&self, granule_words: usize) -> Vec<(usize, usize)> {
+        assert!(granule_words > 0);
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for (s, e) in self.dirty_word_ranges() {
+            let s = (s / granule_words) * granule_words;
+            let e = e.div_ceil(granule_words) * granule_words;
+            let e = e.min(self.n_words);
+            match out.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => out.push((s, e)),
+            }
+        }
+        out
+    }
+
+    /// Whether any marked granule of `self` is also marked in `other`
+    /// (bitmap-level intersection; used by early-validation fast paths).
+    pub fn intersects(&self, other: &Bitmap) -> bool {
+        assert_eq!(self.bits.len(), other.bits.len(), "bitmap shapes differ");
+        self.bits
+            .iter()
+            .zip(&other.bits)
+            .any(|(&a, &b)| a != 0 && b != 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mark_and_test_word_granularity() {
+        let mut b = Bitmap::new(1024, 0);
+        assert!(!b.test_word(5));
+        b.mark_word(5);
+        assert!(b.test_word(5));
+        assert!(!b.test_word(6));
+        assert_eq!(b.count(), 1);
+    }
+
+    #[test]
+    fn coarse_granule_aliases_words() {
+        let mut b = Bitmap::new(1024, 4); // 16-word granules
+        b.mark_word(17);
+        assert!(b.test_word(16));
+        assert!(b.test_word(31));
+        assert!(!b.test_word(32));
+        assert_eq!(b.len(), 64);
+    }
+
+    #[test]
+    fn non_power_of_two_tail() {
+        let b = Bitmap::new(100, 5); // 32-word granules -> 4 entries
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.granule_words(3), (96, 100));
+    }
+
+    #[test]
+    fn coarse_ranges_round_out_and_merge() {
+        let mut b = Bitmap::new(1 << 14, 0);
+        b.mark_word(10);
+        b.mark_word(4100); // next 4096-granule
+        b.mark_word(9000);
+        // 10 -> [0,4096), 4100 -> [4096,8192), 9000 -> [8192,12288):
+        // adjacent granule ranges coalesce into one DMA.
+        assert_eq!(b.dirty_word_ranges_coarse(4096), vec![(0, 12288)]);
+        // Tail clamps to n_words.
+        let mut c = Bitmap::new(5000, 0);
+        c.mark_word(4999);
+        assert_eq!(c.dirty_word_ranges_coarse(4096), vec![(4096, 5000)]);
+    }
+
+    #[test]
+    fn dirty_ranges_coalesce() {
+        let mut b = Bitmap::new(320, 5); // granules of 32 words, 10 entries
+        b.mark_granule(1);
+        b.mark_granule(2);
+        b.mark_granule(5);
+        assert_eq!(b.dirty_word_ranges(), vec![(32, 96), (160, 192)]);
+        assert_eq!(b.dirty_words(), 96);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut b = Bitmap::new(64, 0);
+        b.mark_word(3);
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.dirty_word_ranges(), vec![]);
+    }
+
+    #[test]
+    fn intersects_detects_overlap() {
+        let mut a = Bitmap::new(64, 1);
+        let mut b = Bitmap::new(64, 1);
+        a.mark_word(10);
+        b.mark_word(40);
+        assert!(!a.intersects(&b));
+        b.mark_word(11); // same granule as 10 (shift 1)
+        assert!(a.intersects(&b));
+    }
+}

@@ -1,0 +1,402 @@
+//! The device object: replica state + kernel execution backends.
+//!
+//! A [`GpuDevice`] owns the GPU-side replica of the STMR, the access
+//! bitmaps, the validation timestamp array and the shadow copy used for
+//! double buffering and rollback (paper §IV-D).  Batch compute runs either
+//! through the PJRT artifacts ([`Backend::Pjrt`]) or the native mirrors
+//! ([`Backend::Native`]); both produce identical results (asserted by
+//! integration tests), so callers never care which backend is active.
+
+use anyhow::{bail, Context, Result};
+
+use super::bitmap::Bitmap;
+use super::native;
+use super::{LogChunk, McBatch, TxnBatch};
+use crate::runtime::{ArtifactStore, KernelExec, TensorI32};
+
+/// Compute backend selection for a device.
+#[derive(Clone)]
+pub enum Backend {
+    /// Native Rust mirrors (oracle + fast simulation backend).
+    Native,
+    /// AOT-compiled jax/Pallas kernels through PJRT.
+    Pjrt {
+        /// Compiled-artifact store.
+        store: ArtifactStore,
+        /// Artifact name for the transaction-batch kernel (synthetic
+        /// workloads), e.g. `prstm_r4_g0`. Empty if unused.
+        prstm: String,
+        /// Artifact name for the validation kernel, e.g. `validate_synth_g0`.
+        validate: String,
+        /// Artifact name for the memcached kernel. Empty if unused.
+        memcached: String,
+    },
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Native => write!(f, "Native"),
+            Backend::Pjrt {
+                prstm,
+                validate,
+                memcached,
+                ..
+            } => write!(f, "Pjrt(prstm={prstm}, validate={validate}, mc={memcached})"),
+        }
+    }
+}
+
+/// Outcome of one transaction-batch kernel activation.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    /// Per-transaction commit flags (1 = speculatively committed).
+    pub commit: Vec<i32>,
+    /// Commits in this activation.
+    pub n_commits: u32,
+}
+
+/// Outcome of one memcached kernel activation.
+#[derive(Debug, Clone)]
+pub struct McOutcome {
+    /// GET results (-1 for misses/aborts/PUTs).
+    pub out_val: Vec<i32>,
+    /// Per-request commit flags.
+    pub commit: Vec<i32>,
+    /// Commits in this activation.
+    pub n_commits: u32,
+}
+
+/// The simulated accelerator: STMR replica, bitmaps, TS array, shadow copy.
+pub struct GpuDevice {
+    backend: Backend,
+    stmr: Vec<i32>,
+    shadow: Vec<i32>,
+    ts_arr: Vec<i32>,
+    rs_bmp: Bitmap,
+    ws_bmp: Bitmap,
+    lock_shift: u32,
+    /// Count of kernel activations (diagnostics / cost accounting).
+    pub activations: u64,
+}
+
+impl GpuDevice {
+    /// Create a device over an `n_words` STMR with the given bitmap
+    /// granularity shift and backend.
+    pub fn new(n_words: usize, bmp_shift: u32, backend: Backend) -> Self {
+        GpuDevice {
+            backend,
+            stmr: vec![0; n_words],
+            shadow: vec![0; n_words],
+            ts_arr: vec![0; n_words],
+            rs_bmp: Bitmap::new(n_words, bmp_shift),
+            ws_bmp: Bitmap::new(n_words, bmp_shift),
+            lock_shift: 0,
+            activations: 0,
+        }
+    }
+
+    /// STMR length in words.
+    pub fn n_words(&self) -> usize {
+        self.stmr.len()
+    }
+
+    /// Read access to the device STMR replica.
+    pub fn stmr(&self) -> &[i32] {
+        &self.stmr
+    }
+
+    /// Mutable access to the device STMR replica (host-initiated state
+    /// install, e.g. initial snapshot or merge-phase overwrite).
+    pub fn stmr_mut(&mut self) -> &mut Vec<i32> {
+        &mut self.stmr
+    }
+
+    /// The GPU read-set bitmap of the current round.
+    pub fn rs_bmp(&self) -> &Bitmap {
+        &self.rs_bmp
+    }
+
+    /// The GPU write-set bitmap of the current round.
+    pub fn ws_bmp(&self) -> &Bitmap {
+        &self.ws_bmp
+    }
+
+    /// Begin a synchronization round: snapshot the shadow copy (the
+    /// device-to-device copy of §IV-D) and clear the access bitmaps.
+    pub fn begin_round(&mut self) {
+        self.shadow.copy_from_slice(&self.stmr);
+        self.rs_bmp.clear();
+        self.ws_bmp.clear();
+    }
+
+    /// Execute one speculative transaction batch.
+    pub fn run_txn_batch(&mut self, batch: &TxnBatch) -> Result<BatchOutcome> {
+        self.activations += 1;
+        match &self.backend {
+            Backend::Native => {
+                let out = native::prstm_step(
+                    &mut self.stmr,
+                    &mut self.rs_bmp,
+                    &mut self.ws_bmp,
+                    batch,
+                    self.lock_shift,
+                );
+                Ok(BatchOutcome {
+                    commit: out.commit,
+                    n_commits: out.n_commits,
+                })
+            }
+            Backend::Pjrt { store, prstm, .. } => {
+                let exec = store.get(prstm)?;
+                self.check_prstm_shape(exec, batch)?;
+                let outs = exec.run(&[
+                    TensorI32::vec(&self.stmr),
+                    TensorI32::vec(self.rs_bmp.as_slice()),
+                    TensorI32::vec(self.ws_bmp.as_slice()),
+                    TensorI32::mat(&batch.read_idx, batch.b, batch.r),
+                    TensorI32::mat(&batch.write_idx, batch.b, batch.w),
+                    TensorI32::mat(&batch.write_val, batch.b, batch.w),
+                    TensorI32::vec(&batch.op),
+                    TensorI32::vec(&batch.prio),
+                ])?;
+                // Outputs: stmr', rs_bmp', ws_bmp', commit, n_commits.
+                let [stmr, rs, ws, commit, n]: [Vec<i32>; 5] = outs
+                    .try_into()
+                    .map_err(|v: Vec<_>| anyhow::anyhow!("prstm arity {}", v.len()))?;
+                self.stmr = stmr;
+                self.rs_bmp.set_from_slice(&rs);
+                self.ws_bmp.set_from_slice(&ws);
+                Ok(BatchOutcome {
+                    commit,
+                    n_commits: u32::try_from(n[0]).context("negative commit count")?,
+                })
+            }
+        }
+    }
+
+    /// Validate-and-apply one CPU write-log chunk; returns conflict count.
+    pub fn validate_chunk(&mut self, chunk: &LogChunk) -> Result<u32> {
+        self.activations += 1;
+        match &self.backend {
+            Backend::Native => Ok(native::validate_step(
+                &mut self.stmr,
+                &mut self.ts_arr,
+                &self.rs_bmp,
+                chunk,
+            )),
+            Backend::Pjrt {
+                store, validate, ..
+            } => {
+                let exec = store.get(validate)?;
+                let c = exec.meta().param_usize("c")?;
+                if chunk.addrs.len() != c {
+                    bail!(
+                        "validate chunk len {} != artifact c {}",
+                        chunk.addrs.len(),
+                        c
+                    );
+                }
+                let outs = exec.run(&[
+                    TensorI32::vec(&self.stmr),
+                    TensorI32::vec(&self.ts_arr),
+                    TensorI32::vec(self.rs_bmp.as_slice()),
+                    TensorI32::vec(&chunk.addrs),
+                    TensorI32::vec(&chunk.vals),
+                    TensorI32::vec(&chunk.ts),
+                ])?;
+                let [stmr, ts_arr, n]: [Vec<i32>; 3] = outs
+                    .try_into()
+                    .map_err(|v: Vec<_>| anyhow::anyhow!("validate arity {}", v.len()))?;
+                self.stmr = stmr;
+                self.ts_arr = ts_arr;
+                Ok(u32::try_from(n[0]).context("negative conflict count")?)
+            }
+        }
+    }
+
+    /// Validate a chunk WITHOUT applying it (early validation, §IV-D):
+    /// pure bitmap intersection against the current read-set bitmap.
+    pub fn early_validate_chunk(&self, chunk: &LogChunk) -> u32 {
+        let mut n = 0u32;
+        for &a in &chunk.addrs {
+            if a >= 0 && self.rs_bmp.test_word(a as usize) {
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Execute one memcached request batch.
+    pub fn run_mc_batch(&mut self, batch: &McBatch, n_sets: usize) -> Result<McOutcome> {
+        self.activations += 1;
+        match &self.backend {
+            Backend::Native => {
+                let out = native::memcached_step(
+                    &mut self.stmr,
+                    &mut self.rs_bmp,
+                    &mut self.ws_bmp,
+                    batch,
+                    n_sets,
+                );
+                Ok(McOutcome {
+                    out_val: out.out_val,
+                    commit: out.commit,
+                    n_commits: out.n_commits,
+                })
+            }
+            Backend::Pjrt {
+                store, memcached, ..
+            } => {
+                let exec = store.get(memcached)?;
+                if exec.meta().param_usize("n_sets")? != n_sets {
+                    bail!("memcached artifact n_sets mismatch");
+                }
+                let clk0 = [batch.clk0];
+                let outs = exec.run(&[
+                    TensorI32::vec(&self.stmr),
+                    TensorI32::vec(self.rs_bmp.as_slice()),
+                    TensorI32::vec(self.ws_bmp.as_slice()),
+                    TensorI32::vec(&batch.op),
+                    TensorI32::vec(&batch.key),
+                    TensorI32::vec(&batch.val),
+                    TensorI32::scalar(&clk0),
+                ])?;
+                let [stmr, rs, ws, out_val, commit, n]: [Vec<i32>; 6] = outs
+                    .try_into()
+                    .map_err(|v: Vec<_>| anyhow::anyhow!("memcached arity {}", v.len()))?;
+                self.stmr = stmr;
+                self.rs_bmp.set_from_slice(&rs);
+                self.ws_bmp.set_from_slice(&ws);
+                Ok(McOutcome {
+                    out_val,
+                    commit,
+                    n_commits: u32::try_from(n[0]).context("negative commit count")?,
+                })
+            }
+        }
+    }
+
+    /// Roll back a failed round (favor-CPU policy, §IV-C.3 optimized with
+    /// the §IV-D shadow copy): re-align the shadow to the CPU by replaying
+    /// the round's CPU logs onto it, then promote it to the working copy.
+    ///
+    /// `cpu_logs` must be the full set of chunks the CPU shipped this round.
+    pub fn rollback_with_logs(&mut self, cpu_logs: &[LogChunk]) {
+        std::mem::swap(&mut self.stmr, &mut self.shadow);
+        // Freshness array: the swap discarded validation-phase applies on
+        // the working copy; replay brings both the values and the ts_arr
+        // to the CPU-aligned state (ts entries are monotonic, so replay
+        // with >= reproduces them).
+        for chunk in cpu_logs {
+            for (i, &a) in chunk.addrs.iter().enumerate() {
+                if a < 0 {
+                    continue;
+                }
+                let a = a as usize;
+                if chunk.ts[i] >= self.ts_arr[a] {
+                    self.ts_arr[a] = chunk.ts[i];
+                    self.stmr[a] = chunk.vals[i];
+                }
+            }
+        }
+    }
+
+    /// Sanity-check the batch shape against the PJRT artifact metadata.
+    fn check_prstm_shape(&self, exec: &KernelExec, batch: &TxnBatch) -> Result<()> {
+        let m = exec.meta();
+        if m.param_usize("b")? != batch.b
+            || m.param_usize("r")? != batch.r
+            || m.param_usize("w")? != batch.w
+            || m.param_usize("n")? != self.stmr.len()
+        {
+            bail!(
+                "batch shape (b={}, r={}, w={}, n={}) does not match artifact {}",
+                batch.b,
+                batch.r,
+                batch.w,
+                self.stmr.len(),
+                m.name
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn device(n: usize) -> GpuDevice {
+        GpuDevice::new(n, 0, Backend::Native)
+    }
+
+    fn batch_writing(addr: i32, val: i32) -> TxnBatch {
+        let mut b = TxnBatch::empty(1, 1, 1);
+        b.read_idx = vec![-1];
+        b.write_idx = vec![addr];
+        b.write_val = vec![val];
+        b.op = vec![1];
+        b
+    }
+
+    #[test]
+    fn begin_round_snapshots_shadow_and_clears_bitmaps() {
+        let mut d = device(32);
+        d.run_txn_batch(&batch_writing(3, 7)).unwrap();
+        assert!(d.ws_bmp().test_word(3));
+        d.begin_round();
+        assert!(d.ws_bmp().is_empty());
+        assert_eq!(d.shadow[3], 7);
+    }
+
+    #[test]
+    fn rollback_discards_gpu_writes_keeps_cpu_logs() {
+        let mut d = device(32);
+        d.begin_round();
+        d.run_txn_batch(&batch_writing(3, 99)).unwrap();
+        // CPU log says word 10 = 55 at ts 4.
+        let mut chunk = LogChunk::empty(4);
+        chunk.addrs[0] = 10;
+        chunk.vals[0] = 55;
+        chunk.ts[0] = 4;
+        d.validate_chunk(&chunk).unwrap();
+        d.rollback_with_logs(&[chunk]);
+        assert_eq!(d.stmr()[3], 0, "GPU speculative write undone");
+        assert_eq!(d.stmr()[10], 55, "CPU write preserved");
+        assert_eq!(d.ts_arr[10], 4);
+    }
+
+    #[test]
+    fn early_validate_counts_without_applying() {
+        let mut d = device(32);
+        d.begin_round();
+        let mut rb = TxnBatch::empty(1, 1, 1);
+        rb.read_idx = vec![5];
+        rb.write_idx = vec![-1];
+        d.run_txn_batch(&rb).unwrap();
+        let mut chunk = LogChunk::empty(2);
+        chunk.addrs = vec![5, 9];
+        chunk.vals = vec![1, 2];
+        chunk.ts = vec![1, 1];
+        assert_eq!(d.early_validate_chunk(&chunk), 1);
+        assert_eq!(d.stmr()[5], 0, "early validation must not apply");
+    }
+
+    #[test]
+    fn validate_after_read_conflict_still_applies() {
+        let mut d = device(16);
+        d.begin_round();
+        let mut rb = TxnBatch::empty(1, 1, 1);
+        rb.read_idx = vec![2];
+        rb.write_idx = vec![-1];
+        d.run_txn_batch(&rb).unwrap();
+        let mut chunk = LogChunk::empty(1);
+        chunk.addrs = vec![2];
+        chunk.vals = vec![77];
+        chunk.ts = vec![3];
+        let conf = d.validate_chunk(&chunk).unwrap();
+        assert_eq!(conf, 1);
+        assert_eq!(d.stmr()[2], 77, "paper §IV-C.2: apply despite conflict");
+    }
+}

@@ -1,0 +1,136 @@
+//! The simulated discrete accelerator ("GPU") device.
+//!
+//! The paper runs its GPU side on an NVIDIA GTX 1080 with PR-STM as the
+//! guest TM.  Here the device is a software construct that preserves the
+//! architectural role the SHeTM design depends on (DESIGN.md §2):
+//!
+//! * it executes transactions **in large batches**, data-parallel, with
+//!   PR-STM-style priority-rule conflict resolution;
+//! * it owns a **full local replica** of the STMR plus the read/write-set
+//!   bitmaps and the validation timestamp array;
+//! * it is reachable only through the [`crate::bus`] model, never by direct
+//!   memory access.
+//!
+//! Batch compute has two interchangeable backends:
+//! [`Backend::Pjrt`] executes the AOT-compiled jax/Pallas artifacts through
+//! the PJRT runtime (the production path), and [`Backend::Native`] is a
+//! bit-exact Rust mirror used as a correctness oracle and as the fast path
+//! for large simulation sweeps.  Integration tests assert the two agree.
+
+pub mod bitmap;
+pub mod device;
+pub mod native;
+
+pub use bitmap::Bitmap;
+pub use device::{Backend, BatchOutcome, GpuDevice, McOutcome};
+
+/// One batch of synthetic transactions, laid out exactly like the PJRT
+/// kernel inputs: row-major `[b, r]` / `[b, w]` index matrices with `-1`
+/// padding.
+#[derive(Debug, Clone)]
+pub struct TxnBatch {
+    /// Transactions in the batch.
+    pub b: usize,
+    /// Reads per transaction (matrix width; pad unused slots with -1).
+    pub r: usize,
+    /// Writes per transaction (matrix width; pad unused slots with -1).
+    pub w: usize,
+    /// Read word-indices, `b * r` row-major.
+    pub read_idx: Vec<i32>,
+    /// Write word-indices, `b * w` row-major; within one transaction the
+    /// non-padding entries must be distinct (scatter determinism).
+    pub write_idx: Vec<i32>,
+    /// Values for each write slot, `b * w` row-major.
+    pub write_val: Vec<i32>,
+    /// Per-transaction write mode: 0 = add, 1 = store.
+    pub op: Vec<i32>,
+    /// Per-transaction priority; must be unique and non-negative.
+    pub prio: Vec<i32>,
+}
+
+impl TxnBatch {
+    /// An empty (all-padding) batch of the given shape.
+    pub fn empty(b: usize, r: usize, w: usize) -> Self {
+        TxnBatch {
+            b,
+            r,
+            w,
+            read_idx: vec![-1; b * r],
+            write_idx: vec![-1; b * w],
+            write_val: vec![0; b * w],
+            op: vec![0; b],
+            prio: (0..b as i32).collect(),
+        }
+    }
+
+    /// Number of non-padding transactions (those with at least one access).
+    pub fn live_txns(&self) -> usize {
+        (0..self.b)
+            .filter(|&i| {
+                self.read_idx[i * self.r..(i + 1) * self.r]
+                    .iter()
+                    .chain(&self.write_idx[i * self.w..(i + 1) * self.w])
+                    .any(|&a| a >= 0)
+            })
+            .count()
+    }
+}
+
+/// One chunk of the CPU write-set log, as shipped to the device for
+/// validation (paper §IV-C.2). Fixed length; pad with `addr = -1`.
+#[derive(Debug, Clone)]
+pub struct LogChunk {
+    /// Logged word addresses (-1 = padding).
+    pub addrs: Vec<i32>,
+    /// Values written.
+    pub vals: Vec<i32>,
+    /// Commit timestamps (global CPU clock).
+    pub ts: Vec<i32>,
+}
+
+impl LogChunk {
+    /// An all-padding chunk of length `c`.
+    pub fn empty(c: usize) -> Self {
+        LogChunk {
+            addrs: vec![-1; c],
+            vals: vec![0; c],
+            ts: vec![0; c],
+        }
+    }
+
+    /// Number of live (non-padding) entries.
+    pub fn live(&self) -> usize {
+        self.addrs.iter().filter(|&&a| a >= 0).count()
+    }
+
+    /// Bytes this chunk occupies on the bus (addr + val + ts per entry —
+    /// the paper's 12-byte log record).
+    pub fn wire_bytes(&self) -> u64 {
+        (self.addrs.len() * 12) as u64
+    }
+}
+
+/// One batch of memcached GET/PUT requests (paper §V-D).
+#[derive(Debug, Clone)]
+pub struct McBatch {
+    /// 0 = GET, 1 = PUT, per request.
+    pub op: Vec<i32>,
+    /// Request keys.
+    pub key: Vec<i32>,
+    /// PUT values (ignored for GETs).
+    pub val: Vec<i32>,
+    /// Device-local LRU clock base for this activation.
+    pub clk0: i32,
+}
+
+impl McBatch {
+    /// An all-GET batch with sentinel keys (used for padding).
+    pub fn empty(q: usize) -> Self {
+        McBatch {
+            op: vec![0; q],
+            key: vec![0; q],
+            val: vec![0; q],
+            clk0: 0,
+        }
+    }
+}

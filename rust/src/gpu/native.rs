@@ -1,0 +1,580 @@
+//! Native Rust mirrors of the three device kernels.
+//!
+//! These implement EXACTLY the semantics of the jax/Pallas kernels in
+//! `python/compile/` (and of `kernels/ref.py`): integration tests execute
+//! both backends on identical inputs and assert bit-equality.  They also
+//! serve as the fast backend for large simulation sweeps.
+//!
+//! Keep every semantic detail in sync with `python/compile/model.py`:
+//! wrap-around i32 adds, `WS ⊆ RS` bitmap marking, freshness `>=` with
+//! later-position tie-break, and the memcached arbitration rules.
+
+use super::bitmap::Bitmap;
+use super::{LogChunk, McBatch, TxnBatch};
+
+/// Unclaimed-lock sentinel (i32::MAX), matching the kernels' `INF`.
+pub const INF: i32 = i32::MAX;
+
+/// Memcached layout constants (keep in sync with `kernels/common.py`).
+pub mod mc {
+    /// Slots per set (8-way associative, as in the paper).
+    pub const WAYS: usize = 8;
+    /// Word offset of the key row inside a set.
+    pub const OFF_KEYS: usize = 0;
+    /// Word offset of the value row.
+    pub const OFF_VALS: usize = 8;
+    /// Word offset of the CPU-device LRU timestamp row.
+    pub const OFF_TS_CPU: usize = 16;
+    /// Word offset of the GPU-device LRU timestamp row.
+    pub const OFF_TS_GPU: usize = 24;
+    /// Word offset of the per-set timestamp (the shared conflict word).
+    pub const OFF_SET_TS: usize = 32;
+    /// Words per set.
+    pub const WORDS_PER_SET: usize = 33;
+    /// Knuth multiplicative hash constant.
+    pub const HASH_MULT: u32 = 2654435761;
+
+    /// Hash a key to its set index (`n_sets` must be a power of two).
+    ///
+    /// Parity-preserving: the set's last bit equals the key's last bit,
+    /// so key-parity load balancing yields device-disjoint sets (§V-D).
+    #[inline]
+    pub fn hash(key: i32, n_sets: usize) -> usize {
+        debug_assert!(n_sets.is_power_of_two());
+        let h = (key as u32).wrapping_mul(HASH_MULT) >> 7;
+        let s = (h << 1) | (key as u32 & 1);
+        (s as usize) & (n_sets - 1)
+    }
+}
+
+/// Outcome of a native PR-STM batch step.
+#[derive(Debug, Clone)]
+pub struct PrstmOutput {
+    /// 1 = transaction committed, 0 = priority-rule abort.
+    pub commit: Vec<i32>,
+    /// Number of commits.
+    pub n_commits: u32,
+}
+
+/// PR-STM batch step: priority-rule arbitration, apply, bitmap updates.
+/// Mirrors `model.prstm_step`.
+pub fn prstm_step(
+    stmr: &mut [i32],
+    rs_bmp: &mut Bitmap,
+    ws_bmp: &mut Bitmap,
+    batch: &TxnBatch,
+    lock_shift: u32,
+) -> PrstmOutput {
+    prstm_step_inner(stmr, Some((rs_bmp, ws_bmp)), batch, lock_shift)
+}
+
+/// PR-STM batch step WITHOUT SHeTM's bitmap instrumentation — the
+/// "un-instrumented PR-STM" baseline of Figure 2 (left): the guest GPU TM
+/// running solo, with no access tracking for inter-device validation.
+pub fn prstm_step_uninstrumented(
+    stmr: &mut [i32],
+    batch: &TxnBatch,
+    lock_shift: u32,
+) -> PrstmOutput {
+    prstm_step_inner(stmr, None, batch, lock_shift)
+}
+
+// Per-thread epoch-stamped lock table: a dense array reused across every
+// batch on the thread.  Entries are `(epoch << 32) | prio`; a stale epoch
+// means "unclaimed", so the table never needs clearing — replacing the old
+// per-batch HashMap cut the native kernel cost ~2x (§Perf L3b,
+// EXPERIMENTS.md).
+thread_local! {
+    static LOCK_TBL: std::cell::RefCell<(Vec<u64>, u32)> =
+        const { std::cell::RefCell::new((Vec::new(), 0)) };
+}
+
+fn prstm_step_inner(
+    stmr: &mut [i32],
+    bitmaps: Option<(&mut Bitmap, &mut Bitmap)>,
+    batch: &TxnBatch,
+    lock_shift: u32,
+) -> PrstmOutput {
+    let (b, r, w) = (batch.b, batch.r, batch.w);
+    debug_assert_eq!(batch.read_idx.len(), b * r);
+    debug_assert_eq!(batch.write_idx.len(), b * w);
+
+    let n_lock = stmr.len() >> lock_shift;
+    let (mut tbl, epoch) = LOCK_TBL.with(|t| {
+        let mut t = t.borrow_mut();
+        if t.0.len() < n_lock + 1 {
+            t.0 = vec![0u64; n_lock + 1];
+            t.1 = 0;
+        }
+        t.1 = t.1.wrapping_add(1);
+        if t.1 == 0 {
+            t.0.fill(0);
+            t.1 = 1;
+        }
+        (std::mem::take(&mut t.0), t.1)
+    });
+
+    // Lock acquisition: min priority per written granule.
+    let stamp = (epoch as u64) << 32;
+    for i in 0..b {
+        let p = batch.prio[i] as u32 as u64;
+        for &a in &batch.write_idx[i * w..(i + 1) * w] {
+            if a >= 0 {
+                let g = (a as usize) >> lock_shift;
+                let cur = tbl[g];
+                if cur >> 32 != epoch as u64 || (cur & 0xFFFF_FFFF) > p {
+                    tbl[g] = stamp | p;
+                }
+            }
+        }
+    }
+
+    let tbl_ref = &tbl;
+    let holder = move |a: i32| -> i32 {
+        let cur = tbl_ref[(a as usize) >> lock_shift];
+        if cur >> 32 == epoch as u64 {
+            (cur & 0xFFFF_FFFF) as i32
+        } else {
+            INF
+        }
+    };
+
+    let mut commit = vec![0i32; b];
+    let mut n_commits = 0u32;
+    for i in 0..b {
+        let p = batch.prio[i];
+        let owns = batch.write_idx[i * w..(i + 1) * w]
+            .iter()
+            .all(|&a| a < 0 || holder(a) == p);
+        // PR-STM priority rule: a read is valid unless an EARLIER
+        // (lower-priority) transaction writes it; INF covers "unclaimed".
+        let reads_ok = batch.read_idx[i * r..(i + 1) * r]
+            .iter()
+            .all(|&a| a < 0 || holder(a) >= p);
+        if owns && reads_ok {
+            commit[i] = 1;
+            n_commits += 1;
+        }
+    }
+
+    let mut bitmaps = bitmaps;
+    for i in 0..b {
+        if commit[i] == 0 {
+            continue;
+        }
+        for j in 0..w {
+            let a = batch.write_idx[i * w + j];
+            if a < 0 {
+                continue;
+            }
+            let v = batch.write_val[i * w + j];
+            let cell = &mut stmr[a as usize];
+            *cell = if batch.op[i] == 0 { cell.wrapping_add(v) } else { v };
+        }
+        if let Some((rs_bmp, ws_bmp)) = bitmaps.as_mut() {
+            for &a in &batch.read_idx[i * r..(i + 1) * r] {
+                if a >= 0 {
+                    rs_bmp.mark_word(a as usize);
+                }
+            }
+            for &a in &batch.write_idx[i * w..(i + 1) * w] {
+                if a >= 0 {
+                    // WS ⊆ RS: one test covers WW and RW conflicts.
+                    rs_bmp.mark_word(a as usize);
+                    ws_bmp.mark_word(a as usize);
+                }
+            }
+        }
+    }
+
+    LOCK_TBL.with(|t| t.borrow_mut().0 = tbl);
+    PrstmOutput { commit, n_commits }
+}
+
+/// Validate-and-apply one CPU log chunk against the device state.
+/// Mirrors `model.validate_step`; returns the number of conflicting entries.
+pub fn validate_step(
+    stmr: &mut [i32],
+    ts_arr: &mut [i32],
+    rs_bmp: &Bitmap,
+    chunk: &LogChunk,
+) -> u32 {
+    let mut n_conf = 0u32;
+    for (i, &a) in chunk.addrs.iter().enumerate() {
+        if a < 0 {
+            continue;
+        }
+        let a = a as usize;
+        if rs_bmp.test_word(a) {
+            n_conf += 1;
+        }
+        // Freshness guard: apply iff at least as fresh as what previous
+        // chunks applied; in-order `>=` reproduces max-(ts, position).
+        if chunk.ts[i] >= ts_arr[a] {
+            ts_arr[a] = chunk.ts[i];
+            stmr[a] = chunk.vals[i];
+        }
+    }
+    n_conf
+}
+
+/// Outcome of a native memcached batch step.
+#[derive(Debug, Clone)]
+pub struct McOutput {
+    /// GET results (-1 for misses, aborts and PUTs).
+    pub out_val: Vec<i32>,
+    /// 1 = request committed, 0 = arbitration abort (host retries).
+    pub commit: Vec<i32>,
+    /// Number of commits.
+    pub n_commits: u32,
+}
+
+/// Memcached batch step. Mirrors `model.memcached_step`.
+pub fn memcached_step(
+    stmr: &mut [i32],
+    rs_bmp: &mut Bitmap,
+    ws_bmp: &mut Bitmap,
+    batch: &McBatch,
+    n_sets: usize,
+) -> McOutput {
+    use mc::*;
+    let q = batch.key.len();
+    let mut out_val = vec![-1i32; q];
+    let mut commit = vec![0i32; q];
+
+    // Probe against the pre-batch state.
+    let set_idx: Vec<usize> = batch.key.iter().map(|&k| hash(k, n_sets)).collect();
+    let mut probe_hit = vec![false; q];
+    let mut probe_slot = vec![-1i32; q];
+    let mut probe_val = vec![-1i32; q];
+    for i in 0..q {
+        let base = set_idx[i] * WORDS_PER_SET;
+        let keys = &stmr[base + OFF_KEYS..base + OFF_KEYS + WAYS];
+        if let Some(s) = keys.iter().position(|&k| k == batch.key[i]) {
+            probe_hit[i] = true;
+            probe_slot[i] = s as i32;
+            probe_val[i] = stmr[base + OFF_VALS + s];
+        } else if batch.op[i] == 1 {
+            // LRU victim under the GPU-local clock; empties (ts 0) first.
+            let ts = &stmr[base + OFF_TS_GPU..base + OFF_TS_GPU + WAYS];
+            let lru = ts
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &t)| t)
+                .map(|(s, _)| s)
+                .unwrap();
+            probe_slot[i] = lru as i32;
+        }
+    }
+
+    // Arbitration: PUT claims its set, GET hit claims its slot.
+    let mut set_lock: std::collections::HashMap<usize, i32> = std::collections::HashMap::new();
+    let mut slot_lock: std::collections::HashMap<usize, i32> = std::collections::HashMap::new();
+    for i in 0..q {
+        if batch.op[i] == 1 {
+            let e = set_lock.entry(set_idx[i]).or_insert(INF);
+            if (i as i32) < *e {
+                *e = i as i32;
+            }
+        } else if probe_hit[i] {
+            let sk = set_idx[i] * WAYS + probe_slot[i] as usize;
+            let e = slot_lock.entry(sk).or_insert(INF);
+            if (i as i32) < *e {
+                *e = i as i32;
+            }
+        }
+    }
+
+    let mut n_commits = 0u32;
+    for i in 0..q {
+        let s = set_idx[i];
+        let set_free = !set_lock.contains_key(&s);
+        let c = if batch.op[i] == 1 {
+            set_lock.get(&s) == Some(&(i as i32))
+        } else if probe_hit[i] {
+            set_free && slot_lock.get(&(s * WAYS + probe_slot[i] as usize)) == Some(&(i as i32))
+        } else {
+            set_free
+        };
+        if c {
+            commit[i] = 1;
+            n_commits += 1;
+        }
+    }
+
+    // Apply committed requests; their footprints are disjoint by
+    // construction of the locks, so order does not matter.
+    for i in 0..q {
+        if commit[i] == 0 {
+            continue;
+        }
+        let base = set_idx[i] * WORDS_PER_SET;
+        let clk = batch.clk0.wrapping_add(i as i32);
+        for wd in 0..WAYS {
+            rs_bmp.mark_word(base + OFF_KEYS + wd);
+        }
+        let mark_w = |bmp_r: &mut Bitmap, bmp_w: &mut Bitmap, word: usize| {
+            bmp_r.mark_word(word);
+            bmp_w.mark_word(word);
+        };
+        if batch.op[i] == 1 {
+            let slot = probe_slot[i] as usize;
+            for wd in 0..WAYS {
+                rs_bmp.mark_word(base + OFF_TS_GPU + wd);
+            }
+            stmr[base + OFF_KEYS + slot] = batch.key[i];
+            stmr[base + OFF_VALS + slot] = batch.val[i];
+            stmr[base + OFF_TS_GPU + slot] = clk;
+            stmr[base + OFF_SET_TS] = clk;
+            mark_w(rs_bmp, ws_bmp, base + OFF_KEYS + slot);
+            mark_w(rs_bmp, ws_bmp, base + OFF_VALS + slot);
+            mark_w(rs_bmp, ws_bmp, base + OFF_TS_GPU + slot);
+            mark_w(rs_bmp, ws_bmp, base + OFF_SET_TS);
+        } else if probe_hit[i] {
+            let slot = probe_slot[i] as usize;
+            out_val[i] = probe_val[i];
+            stmr[base + OFF_TS_GPU + slot] = clk;
+            rs_bmp.mark_word(base + OFF_VALS + slot);
+            mark_w(rs_bmp, ws_bmp, base + OFF_TS_GPU + slot);
+        }
+        // GET miss: read-only (key row already marked).
+    }
+
+    McOutput {
+        out_val,
+        commit,
+        n_commits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bmp(n: usize) -> Bitmap {
+        Bitmap::new(n, 0)
+    }
+
+    #[test]
+    fn prstm_disjoint_txns_all_commit() {
+        let n = 64;
+        let mut stmr = vec![0i32; n];
+        let (mut rs, mut ws) = (bmp(n), bmp(n));
+        let mut b = TxnBatch::empty(2, 2, 2);
+        // txn 0 reads {0,1} writes {2,3}; txn 1 reads {10,11} writes {12,13}
+        b.read_idx = vec![0, 1, 10, 11];
+        b.write_idx = vec![2, 3, 12, 13];
+        b.write_val = vec![5, 6, 7, 8];
+        b.op = vec![1, 1];
+        let out = prstm_step(&mut stmr, &mut rs, &mut ws, &b, 0);
+        assert_eq!(out.commit, vec![1, 1]);
+        assert_eq!(stmr[2], 5);
+        assert_eq!(stmr[13], 8);
+        assert!(rs.test_word(0) && rs.test_word(2) && ws.test_word(12));
+        assert!(!ws.test_word(0), "reads are not in WS");
+    }
+
+    #[test]
+    fn prstm_write_write_conflict_low_prio_wins() {
+        let n = 16;
+        let mut stmr = vec![0i32; n];
+        let (mut rs, mut ws) = (bmp(n), bmp(n));
+        let mut b = TxnBatch::empty(2, 1, 1);
+        b.read_idx = vec![-1, -1];
+        b.write_idx = vec![4, 4];
+        b.write_val = vec![100, 200];
+        b.op = vec![1, 1];
+        let out = prstm_step(&mut stmr, &mut rs, &mut ws, &b, 0);
+        assert_eq!(out.commit, vec![1, 0], "priority 0 beats priority 1");
+        assert_eq!(stmr[4], 100);
+    }
+
+    #[test]
+    fn prstm_read_write_conflict_aborts_reader() {
+        let n = 16;
+        let mut stmr = vec![0i32; n];
+        let (mut rs, mut ws) = (bmp(n), bmp(n));
+        let mut b = TxnBatch::empty(2, 1, 1);
+        // txn 0 (high prio) writes 4; txn 1 reads 4 and writes elsewhere.
+        b.read_idx = vec![-1, 4];
+        b.write_idx = vec![4, 8];
+        b.write_val = vec![1, 1];
+        b.op = vec![0, 0];
+        let out = prstm_step(&mut stmr, &mut rs, &mut ws, &b, 0);
+        assert_eq!(out.commit, vec![1, 0]);
+        assert_eq!(stmr[8], 0, "aborted txn leaves no trace");
+        assert!(!rs.test_word(8));
+    }
+
+    #[test]
+    fn prstm_add_wraps_like_jnp() {
+        let n = 4;
+        let mut stmr = vec![i32::MAX; n];
+        let (mut rs, mut ws) = (bmp(n), bmp(n));
+        let mut b = TxnBatch::empty(1, 1, 1);
+        b.read_idx = vec![-1];
+        b.write_idx = vec![0];
+        b.write_val = vec![1];
+        b.op = vec![0];
+        prstm_step(&mut stmr, &mut rs, &mut ws, &b, 0);
+        assert_eq!(stmr[0], i32::MIN);
+    }
+
+    #[test]
+    fn validate_counts_conflicts_and_applies_freshest() {
+        let n = 16;
+        let mut stmr = vec![0i32; n];
+        let mut ts_arr = vec![0i32; n];
+        let mut rs = bmp(n);
+        rs.mark_word(3);
+        let chunk = LogChunk {
+            addrs: vec![3, 5, 5, -1],
+            vals: vec![30, 50, 51, 0],
+            ts: vec![10, 7, 5, 0],
+        };
+        let conf = validate_step(&mut stmr, &mut ts_arr, &rs, &chunk);
+        assert_eq!(conf, 1, "only addr 3 hits RS");
+        assert_eq!(stmr[3], 30, "applied even though conflicting");
+        assert_eq!(stmr[5], 50, "ts 7 beats ts 5 regardless of order");
+        assert_eq!(ts_arr[5], 7);
+    }
+
+    #[test]
+    fn validate_respects_prior_chunk_freshness() {
+        let n = 8;
+        let mut stmr = vec![0i32; n];
+        let mut ts_arr = vec![0i32; n];
+        let rs = bmp(n);
+        let c1 = LogChunk {
+            addrs: vec![2],
+            vals: vec![20],
+            ts: vec![9],
+        };
+        let c2 = LogChunk {
+            addrs: vec![2],
+            vals: vec![21],
+            ts: vec![4],
+        };
+        validate_step(&mut stmr, &mut ts_arr, &rs, &c1);
+        validate_step(&mut stmr, &mut ts_arr, &rs, &c2);
+        assert_eq!(stmr[2], 20, "stale value from later chunk must not win");
+    }
+
+    #[test]
+    fn memcached_put_then_get_roundtrip() {
+        let n_sets = 16;
+        let n = n_sets * mc::WORDS_PER_SET;
+        let mut stmr = vec![0i32; n];
+        for s in 0..n_sets {
+            for wd in 0..mc::WAYS {
+                stmr[s * mc::WORDS_PER_SET + wd] = -1; // empty keys
+            }
+        }
+        let (mut rs, mut ws) = (bmp(n), bmp(n));
+        let put = McBatch {
+            op: vec![1],
+            key: vec![42],
+            val: vec![4242],
+            clk0: 100,
+        };
+        let o1 = memcached_step(&mut stmr, &mut rs, &mut ws, &put, n_sets);
+        assert_eq!(o1.commit, vec![1]);
+        let get = McBatch {
+            op: vec![0],
+            key: vec![42],
+            val: vec![0],
+            clk0: 200,
+        };
+        let o2 = memcached_step(&mut stmr, &mut rs, &mut ws, &get, n_sets);
+        assert_eq!(o2.commit, vec![1]);
+        assert_eq!(o2.out_val, vec![4242]);
+    }
+
+    #[test]
+    fn memcached_put_put_same_set_arbitrates() {
+        let n_sets = 4;
+        let n = n_sets * mc::WORDS_PER_SET;
+        let mut stmr = vec![0i32; n];
+        for s in 0..n_sets {
+            for wd in 0..mc::WAYS {
+                stmr[s * mc::WORDS_PER_SET + wd] = -1;
+            }
+        }
+        let (mut rs, mut ws) = (bmp(n), bmp(n));
+        // Two PUTs with keys hashing to the same set (same key => same set).
+        let b = McBatch {
+            op: vec![1, 1],
+            key: vec![7, 7],
+            val: vec![1, 2],
+            clk0: 0,
+        };
+        let o = memcached_step(&mut stmr, &mut rs, &mut ws, &b, n_sets);
+        assert_eq!(o.commit, vec![1, 0], "first PUT wins the set");
+    }
+
+    #[test]
+    fn memcached_get_miss_is_read_only() {
+        let n_sets = 4;
+        let n = n_sets * mc::WORDS_PER_SET;
+        let mut stmr = vec![0i32; n];
+        for s in 0..n_sets {
+            for wd in 0..mc::WAYS {
+                stmr[s * mc::WORDS_PER_SET + wd] = -1;
+            }
+        }
+        let (mut rs, mut ws) = (bmp(n), bmp(n));
+        let b = McBatch {
+            op: vec![0],
+            key: vec![9],
+            val: vec![0],
+            clk0: 0,
+        };
+        let o = memcached_step(&mut stmr, &mut rs, &mut ws, &b, n_sets);
+        assert_eq!(o.commit, vec![1]);
+        assert_eq!(o.out_val, vec![-1]);
+        assert!(ws.is_empty(), "miss writes nothing");
+        assert!(!rs.is_empty(), "but reads the key row");
+    }
+
+    #[test]
+    fn memcached_lru_evicts_oldest() {
+        let n_sets = 1;
+        let n = mc::WORDS_PER_SET;
+        let mut stmr = vec![0i32; n];
+        for wd in 0..mc::WAYS {
+            stmr[wd] = -1;
+        }
+        let (mut rs, mut ws) = (bmp(n), bmp(n));
+        // Fill all 8 slots with distinct keys (one batch each to avoid
+        // set-level arbitration aborts).
+        for k in 0..8 {
+            let b = McBatch {
+                op: vec![1],
+                key: vec![k],
+                val: vec![k * 10],
+                clk0: 10 + k,
+            };
+            let o = memcached_step(&mut stmr, &mut rs, &mut ws, &b, n_sets);
+            assert_eq!(o.commit, vec![1]);
+        }
+        // Touch key 0 so key 1 becomes LRU, then insert a 9th key.
+        let g = McBatch {
+            op: vec![0],
+            key: vec![0],
+            val: vec![0],
+            clk0: 100,
+        };
+        memcached_step(&mut stmr, &mut rs, &mut ws, &g, n_sets);
+        let p = McBatch {
+            op: vec![1],
+            key: vec![99],
+            val: vec![990],
+            clk0: 200,
+        };
+        memcached_step(&mut stmr, &mut rs, &mut ws, &p, n_sets);
+        let keys: Vec<i32> = stmr[0..8].to_vec();
+        assert!(keys.contains(&99));
+        assert!(keys.contains(&0), "recently-touched key survives");
+        assert!(!keys.contains(&1), "LRU key evicted");
+    }
+}

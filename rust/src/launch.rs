@@ -1,0 +1,214 @@
+//! Launcher helpers: assemble engines from a [`SystemConfig`].
+//!
+//! Used by the `shetm` binary, the examples and the benches so that every
+//! entry point builds the platform the same way: pick the guest TM, pick
+//! the device backend (PJRT artifacts when available, native mirrors
+//! otherwise), wire the workload drivers into a [`RoundEngine`].
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::apps::memcached::{init_cache_words, McConfig, McCpu, McGpu, McWorld};
+use crate::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
+use crate::config::{GuestKind, SystemConfig};
+use crate::coordinator::round::{CostModel, EngineConfig, RoundEngine, Variant};
+use crate::gpu::{Backend, GpuDevice};
+use crate::runtime::ArtifactStore;
+use crate::stm::htm::HtmEmu;
+use crate::stm::norec::NorecStm;
+use crate::stm::tinystm::TinyStm;
+use crate::stm::{GlobalClock, GuestTm, SharedStmr};
+
+/// Instantiate a guest TM over a shared commit clock.
+pub fn build_guest(kind: GuestKind, clock: Arc<GlobalClock>) -> Arc<dyn GuestTm> {
+    match kind {
+        GuestKind::Tiny => Arc::new(TinyStm::with_clock(clock)),
+        GuestKind::Norec => Arc::new(NorecStm::with_clock(clock)),
+        GuestKind::Htm => Arc::new(HtmEmu::with_clock(clock)),
+    }
+}
+
+/// Pick the device backend: PJRT when an artifact directory is configured
+/// and loadable, native mirrors otherwise.
+///
+/// `prstm`, `validate`, `memcached` are artifact names (empty = unused).
+pub fn build_backend(
+    cfg: &SystemConfig,
+    prstm: &str,
+    validate: &str,
+    memcached: &str,
+) -> Result<Backend> {
+    if cfg.artifacts_dir.is_empty() {
+        return Ok(Backend::Native);
+    }
+    if !ArtifactStore::available(&cfg.artifacts_dir) {
+        bail!(
+            "artifacts dir {:?} has no manifest.txt — run `make artifacts` \
+             or unset runtime.artifacts",
+            cfg.artifacts_dir
+        );
+    }
+    let store = ArtifactStore::load(&cfg.artifacts_dir)?;
+    Ok(Backend::Pjrt {
+        store,
+        prstm: prstm.to_string(),
+        validate: validate.to_string(),
+        memcached: memcached.to_string(),
+    })
+}
+
+/// Engine config derived from the system config.
+pub fn engine_config(cfg: &SystemConfig, variant: Variant) -> EngineConfig {
+    EngineConfig {
+        period_s: cfg.period_s,
+        variant,
+        early_validation: cfg.early_validation,
+        early_points: ((1.0 / cfg.early_interval_frac).round() as usize).max(1) - 1,
+        chunk_entries: crate::bus::chunking::LOG_CHUNK_ENTRIES,
+        policy: cfg.policy,
+        starvation_limit: cfg.gpu_starvation_limit,
+    }
+}
+
+/// Cost model derived from the system config.
+pub fn cost_model(cfg: &SystemConfig) -> CostModel {
+    CostModel {
+        bus_h2d: cfg.bus_h2d,
+        bus_d2h: cfg.bus_d2h,
+        gpu_kernel_latency_s: cfg.gpu_kernel_latency_s,
+        gpu_txn_s: cfg.gpu_txn_s,
+        gpu_validate_entry_s: cfg.gpu_validate_entry_s,
+        ..CostModel::default()
+    }
+}
+
+/// Assemble a synthetic-workload engine (paper §V-A..§V-C shapes).
+///
+/// `cpu_spec` and `gpu_spec` carry the per-device partitions / conflict
+/// injection; `gpu_batch` must match the compiled artifact's `b` when the
+/// PJRT backend is selected.
+pub fn build_synth_engine(
+    cfg: &SystemConfig,
+    variant: Variant,
+    cpu_spec: SynthSpec,
+    gpu_spec: SynthSpec,
+    gpu_batch: usize,
+    backend: Backend,
+) -> RoundEngine<SynthCpu, SynthGpu> {
+    let clock = Arc::new(GlobalClock::new());
+    let stmr = Arc::new(SharedStmr::new(cfg.n_words));
+    let tm = build_guest(cfg.guest, clock);
+    let cpu = SynthCpu::new(
+        stmr,
+        tm,
+        cpu_spec,
+        cfg.cpu_threads,
+        cfg.cpu_txn_s,
+        cfg.seed,
+    );
+    let gpu = SynthGpu::new(
+        gpu_spec,
+        gpu_batch,
+        cfg.gpu_kernel_latency_s,
+        cfg.gpu_txn_s,
+        cfg.seed ^ 0x9E37_79B9,
+    );
+    let device = GpuDevice::new(cfg.n_words, cfg.bmp_shift, backend);
+    let mut engine = RoundEngine::new(engine_config(cfg, variant), cost_model(cfg), device, cpu, gpu);
+    engine.align_replicas();
+    engine
+}
+
+/// Assemble a memcached engine (paper §V-D).
+pub fn build_memcached_engine(
+    cfg: &SystemConfig,
+    variant: Variant,
+    mc: McConfig,
+    gpu_batch: usize,
+    backend: Backend,
+) -> RoundEngine<McCpu, McGpu> {
+    let clock = Arc::new(GlobalClock::new());
+    let stmr = Arc::new(SharedStmr::new(mc.n_words()));
+    let mut words = vec![0; mc.n_words()];
+    init_cache_words(&mut words, mc.n_sets);
+    stmr.install_range(0, &words);
+
+    let tm = build_guest(cfg.guest, clock);
+    let world = McWorld::new(mc.clone(), cfg.seed, mc.steal_shift > 0.0);
+    let cpu = McCpu::new(
+        stmr,
+        tm,
+        world.clone(),
+        mc.clone(),
+        cfg.cpu_threads,
+        cfg.cpu_txn_s,
+    );
+    let gpu = McGpu::new(
+        world,
+        mc.clone(),
+        gpu_batch,
+        cfg.gpu_kernel_latency_s,
+        cfg.gpu_txn_s,
+    );
+    let device = GpuDevice::new(mc.n_words(), cfg.bmp_shift, backend);
+    let mut engine = RoundEngine::new(engine_config(cfg, variant), cost_model(cfg), device, cpu, gpu);
+    engine.align_replicas();
+    engine
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+
+    fn cfg() -> SystemConfig {
+        let mut c = SystemConfig::from_raw(&crate::config::Raw::new()).unwrap();
+        c.n_words = 1 << 14;
+        c.cpu_txn_s = 2e-6;
+        c.period_s = 0.004;
+        c
+    }
+
+    #[test]
+    fn synth_engine_round_trips() {
+        let c = cfg();
+        let n = c.n_words;
+        let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+        let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+        let mut e = build_synth_engine(
+            &c,
+            Variant::Optimized,
+            cpu_spec,
+            gpu_spec,
+            256,
+            Backend::Native,
+        );
+        e.run_rounds(2).unwrap();
+        assert_eq!(e.stats.rounds_committed, 2, "partitioned => no conflicts");
+        assert!(e.stats.throughput() > 0.0);
+    }
+
+    #[test]
+    fn memcached_engine_round_trips() {
+        let mut c = cfg();
+        c.policy = PolicyKind::FavorCpu;
+        let mc = McConfig::new(1 << 10);
+        let mut e =
+            build_memcached_engine(&c, Variant::Optimized, mc, 256, Backend::Native);
+        e.run_rounds(2).unwrap();
+        assert!(e.stats.cpu_commits > 0);
+        assert!(e.stats.gpu_attempts > 0);
+        // Balanced parity workload: rounds should commit.
+        assert_eq!(e.stats.rounds_committed, 2);
+    }
+
+    #[test]
+    fn engine_config_maps_early_points() {
+        let mut c = cfg();
+        c.early_interval_frac = 0.25;
+        assert_eq!(engine_config(&c, Variant::Optimized).early_points, 3);
+        c.early_interval_frac = 1.0;
+        assert_eq!(engine_config(&c, Variant::Optimized).early_points, 0);
+    }
+}

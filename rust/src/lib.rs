@@ -1,0 +1,32 @@
+//! SHeTM — Speculative Heterogeneous Transactional Memory.
+//!
+//! A reproduction of "HeTM: Transactional Memory for Heterogeneous Systems"
+//! (Castro, Romano, Ilic, Khan — PACT 2019) as a three-layer Rust + JAX +
+//! Pallas system: the Rust coordinator implements the paper's contribution
+//! (speculative synchronization rounds, hierarchical conflict detection,
+//! non-blocking inter-device synchronization, conflict-aware dispatching),
+//! while the simulated accelerator's batch compute runs AOT-compiled
+//! jax/Pallas kernels through PJRT.
+//!
+//! Start with [`coordinator::HetmBuilder`] (see `examples/quickstart.rs`) or
+//! the `shetm` binary (`rust/src/main.rs`).
+//!
+//! Layout (see DESIGN.md for the full inventory):
+//! - [`stm`] — CPU guest TMs (TinySTM-like, NOrec-like, HTM emulation)
+//! - [`gpu`] — the simulated accelerator device + kernel backends
+//! - [`bus`] — the PCIe interconnect model
+//! - [`runtime`] — PJRT artifact loading/execution
+//! - [`coordinator`] — SHeTM itself: rounds, validation, merge, dispatch
+//! - [`apps`] — memcached cache + synthetic workloads
+//! - [`config`] — dependency-free config system
+//! - [`util`] — RNG / Zipf / stats / property-test / bench harnesses
+
+pub mod apps;
+pub mod bus;
+pub mod config;
+pub mod coordinator;
+pub mod gpu;
+pub mod runtime;
+pub mod stm;
+pub mod util;
+pub mod launch;

@@ -1,0 +1,248 @@
+//! `shetm` — the SHeTM leader binary.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! shetm info      [--artifacts DIR]          list compiled PJRT artifacts
+//! shetm synth     [OPTS]                     run the synthetic workload
+//! shetm memcached [OPTS]                     run the memcached application
+//! shetm baselines [OPTS]                     CPU-only / GPU-only reference
+//! ```
+//!
+//! Common options:
+//!   --config FILE        TOML-subset config file (see config/mod.rs)
+//!   --set key=value      override any config key (repeatable)
+//!   --rounds N           synchronization rounds to run (default 50)
+//!   --basic              use the basic (unoptimized) algorithm variant
+//!   --pjrt               force the PJRT backend from ./artifacts
+//!
+//! Example:
+//!   shetm synth --set hetm.period_ms=80 --set cpu.guest=norec --rounds 100
+//!   shetm memcached --set hetm.period_ms=10 --set seed=7 --pjrt
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use shetm::apps::memcached::McConfig;
+use shetm::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
+use shetm::config::{Raw, SystemConfig};
+use shetm::coordinator::baseline;
+use shetm::coordinator::round::Variant;
+use shetm::coordinator::RunStats;
+use shetm::gpu::{Backend, GpuDevice};
+use shetm::launch;
+use shetm::runtime::ArtifactStore;
+use shetm::stm::{GlobalClock, SharedStmr};
+
+struct Cli {
+    cmd: String,
+    raw: Raw,
+    rounds: usize,
+    basic: bool,
+    pjrt: bool,
+}
+
+fn parse_cli() -> Result<Cli> {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".to_string());
+    let mut raw = Raw::new();
+    let mut rounds = 50;
+    let mut basic = false;
+    let mut pjrt = false;
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--config" => {
+                let path = args.next().context("--config needs a file")?;
+                raw = Raw::load(&path)?;
+            }
+            "--set" => {
+                let kv = args.next().context("--set needs key=value")?;
+                raw.set(&kv)?;
+            }
+            "--rounds" => {
+                rounds = args
+                    .next()
+                    .context("--rounds needs a number")?
+                    .parse()
+                    .context("--rounds")?;
+            }
+            "--basic" => basic = true,
+            "--pjrt" => pjrt = true,
+            other => bail!("unknown argument {other:?} (try `shetm help`)"),
+        }
+    }
+    Ok(Cli {
+        cmd,
+        raw,
+        rounds,
+        basic,
+        pjrt,
+    })
+}
+
+fn print_stats(label: &str, s: &RunStats) {
+    println!("== {label} ==");
+    println!(
+        "  rounds            : {} ({} committed, {} early-aborted)",
+        s.rounds, s.rounds_committed, s.rounds_early_aborted
+    );
+    println!("  virtual duration  : {:.4} s", s.duration_s);
+    println!("  cpu commits       : {} ({} attempts)", s.cpu_commits, s.cpu_attempts);
+    println!("  gpu commits       : {} ({} attempts)", s.gpu_commits, s.gpu_attempts);
+    println!("  discarded commits : {}", s.discarded_commits);
+    println!("  log chunks        : {}", s.chunks);
+    println!("  throughput        : {:.0} tx/s", s.throughput());
+    println!("  round abort rate  : {:.3}", s.round_abort_rate());
+    let c = &s.cpu_phases;
+    let g = &s.gpu_phases;
+    println!(
+        "  cpu phases (s)    : proc {:.4} validate {:.4} merge {:.4} blocked {:.4}",
+        c.processing_s, c.validation_s, c.merge_s, c.blocked_s
+    );
+    println!(
+        "  gpu phases (s)    : proc {:.4} validate {:.4} merge {:.4} blocked {:.4}",
+        g.processing_s, g.validation_s, g.merge_s, g.blocked_s
+    );
+}
+
+fn variant(cli: &Cli) -> Variant {
+    if cli.basic {
+        Variant::Basic
+    } else {
+        Variant::Optimized
+    }
+}
+
+fn system_config(cli: &Cli) -> Result<SystemConfig> {
+    let mut cfg = SystemConfig::from_raw(&cli.raw)?;
+    if cli.pjrt && cfg.artifacts_dir.is_empty() {
+        cfg.artifacts_dir = "artifacts".to_string();
+    }
+    Ok(cfg)
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let cfg = system_config(cli)?;
+    let dir = if cfg.artifacts_dir.is_empty() {
+        "artifacts".to_string()
+    } else {
+        cfg.artifacts_dir.clone()
+    };
+    println!("config: {cfg:#?}");
+    if ArtifactStore::available(&dir) {
+        let store = ArtifactStore::load(&dir)?;
+        println!("artifacts in {dir}:");
+        for name in store.names() {
+            let meta = store.get(name)?.meta();
+            println!("  {name:<22} kind={:?} params={:?}", meta.kind, meta.params);
+        }
+    } else {
+        println!("no artifacts in {dir} (run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn cmd_synth(cli: &Cli) -> Result<()> {
+    let cfg = system_config(cli)?;
+    let n = cfg.n_words;
+    // Partitioned halves (the paper's no-contention configuration); use
+    // --set to explore other shapes.
+    let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+    let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+    let backend = launch::build_backend(&cfg, "prstm_r4_g0", "validate_synth_g0", "")?;
+    if matches!(backend, Backend::Pjrt { .. }) && (n != 1 << 18 || cfg.bmp_shift != 0) {
+        bail!("PJRT artifacts are compiled for stmr.n_words=262144, bmp_shift=0");
+    }
+    let mut engine =
+        launch::build_synth_engine(&cfg, variant(cli), cpu_spec, gpu_spec, 1024, backend);
+    engine.run_rounds(cli.rounds)?;
+    print_stats("synthetic W1-100%, partitioned", &engine.stats);
+    Ok(())
+}
+
+fn cmd_memcached(cli: &Cli) -> Result<()> {
+    let cfg = system_config(cli)?;
+    let n_sets = cli
+        .raw
+        .get_or("memcached.n_sets", 1usize << 15)
+        .context("memcached.n_sets")?;
+    let mut mc = McConfig::new(n_sets);
+    mc.steal_shift = cli.raw.get_or("memcached.steal", 0.0)?;
+    let backend = launch::build_backend(&cfg, "prstm_r4_g0", "validate_mc_g0", "memcached")?;
+    if matches!(backend, Backend::Pjrt { .. }) && (n_sets != 1 << 15 || cfg.bmp_shift != 0) {
+        bail!("PJRT memcached artifact is compiled for memcached.n_sets=32768, bmp_shift=0");
+    }
+    let mut engine = launch::build_memcached_engine(&cfg, variant(cli), mc, 1024, backend);
+    engine.run_rounds(cli.rounds)?;
+    print_stats("memcachedGPU on SHeTM", &engine.stats);
+    let world = &engine.cpu;
+    let _ = world;
+    Ok(())
+}
+
+fn cmd_baselines(cli: &Cli) -> Result<()> {
+    let cfg = system_config(cli)?;
+    let n = cfg.n_words;
+    let dur = cfg.period_s * cli.rounds as f64;
+
+    let clock = Arc::new(GlobalClock::new());
+    let stmr = Arc::new(SharedStmr::new(n));
+    let tm = launch::build_guest(cfg.guest, clock);
+    let mut cpu = SynthCpu::new(
+        stmr,
+        tm,
+        SynthSpec::w1(n, 1.0),
+        cfg.cpu_threads,
+        cfg.cpu_txn_s,
+        cfg.seed,
+    );
+    let cpu_stats = baseline::run_cpu_only(&mut cpu, dur, cfg.period_s);
+    print_stats("CPU-only (uninstrumented guest)", &cpu_stats);
+
+    let mut gpu = SynthGpu::new(
+        SynthSpec::w1(n, 1.0),
+        1024,
+        cfg.gpu_kernel_latency_s,
+        cfg.gpu_txn_s,
+        cfg.seed,
+    );
+    let mut device = GpuDevice::new(n, cfg.bmp_shift, Backend::Native);
+    let cost = launch::cost_model(&cfg);
+    let gpu_stats = baseline::run_gpu_only(&mut gpu, &mut device, &cost, dur, cfg.period_s)?;
+    print_stats("GPU-only (double buffering)", &gpu_stats);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let cli = parse_cli()?;
+    match cli.cmd.as_str() {
+        "info" => cmd_info(&cli),
+        "synth" => cmd_synth(&cli),
+        "memcached" => cmd_memcached(&cli),
+        "baselines" => cmd_baselines(&cli),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+shetm — Speculative Heterogeneous Transactional Memory (PACT'19 reproduction)
+
+USAGE: shetm <info|synth|memcached|baselines> [OPTIONS]
+
+OPTIONS:
+  --config FILE     load a TOML-subset config file
+  --set key=value   override a config key (repeatable)
+  --rounds N        synchronization rounds (default 50)
+  --basic           basic algorithm variant (Fig. 1a)
+  --pjrt            use PJRT artifacts from ./artifacts
+
+KEYS (defaults): stmr.n_words=262144 stmr.bmp_shift=0 cpu.threads=8
+  cpu.guest=tinystm|norec|htm cpu.txn_ns hetm.period_ms=80
+  hetm.policy=favor-cpu|favor-gpu|starvation-guard hetm.early_validation
+  bus.latency_us bus.gbps gpu.kernel_latency_us gpu.txn_ns
+  memcached.n_sets memcached.steal runtime.artifacts seed";

@@ -1,0 +1,212 @@
+//! Artifact manifest parsing and the compiled-executable store.
+//!
+//! `artifacts/manifest.txt` is one line per kernel of whitespace-separated
+//! `key=value` fields (a deliberately dependency-free format: this build is
+//! fully offline and carries no serde).  Required keys: `name`, `kind`,
+//! `file`; every other key is an integer parameter recorded in
+//! [`ArtifactMeta::params`] (shapes, bitmap shift, ...).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::exec::KernelExec;
+
+/// Which Layer-2 step function an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// PR-STM batch transaction step (`model.prstm_step`).
+    Prstm,
+    /// CPU-log validation + freshness-guarded apply (`model.validate_step`).
+    Validate,
+    /// Memcached GET/PUT batch step (`model.memcached_step`).
+    Memcached,
+}
+
+impl KernelKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "prstm" => KernelKind::Prstm,
+            "validate" => KernelKind::Validate,
+            "memcached" => KernelKind::Memcached,
+            other => bail!("unknown kernel kind {other:?} in manifest"),
+        })
+    }
+}
+
+/// One manifest entry: a named, shape-monomorphic compiled kernel.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Unique artifact name, e.g. `prstm_r4_g0`.
+    pub name: String,
+    /// Step-function family.
+    pub kind: KernelKind,
+    /// HLO text file, relative to the artifact directory.
+    pub file: PathBuf,
+    /// Integer shape/config parameters (`n`, `b`, `r`, `w`, `bmp_shift`, ...).
+    pub params: HashMap<String, i64>,
+}
+
+impl ArtifactMeta {
+    /// Parse one manifest line. Returns `None` for blank/comment lines.
+    fn parse_line(line: &str) -> Result<Option<Self>> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(None);
+        }
+        let mut name = None;
+        let mut kind = None;
+        let mut file = None;
+        let mut params = HashMap::new();
+        for field in line.split_whitespace() {
+            let (k, v) = field
+                .split_once('=')
+                .ok_or_else(|| anyhow!("malformed manifest field {field:?}"))?;
+            match k {
+                "name" => name = Some(v.to_string()),
+                "kind" => kind = Some(KernelKind::parse(v)?),
+                "file" => file = Some(PathBuf::from(v)),
+                _ => {
+                    let n: i64 = v
+                        .parse()
+                        .with_context(|| format!("non-integer manifest value {field:?}"))?;
+                    params.insert(k.to_string(), n);
+                }
+            }
+        }
+        Ok(Some(ArtifactMeta {
+            name: name.ok_or_else(|| anyhow!("manifest line missing name: {line:?}"))?,
+            kind: kind.ok_or_else(|| anyhow!("manifest line missing kind: {line:?}"))?,
+            file: file.ok_or_else(|| anyhow!("manifest line missing file: {line:?}"))?,
+            params,
+        }))
+    }
+
+    /// Fetch a required integer parameter.
+    pub fn param(&self, key: &str) -> Result<i64> {
+        self.params
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("artifact {} missing param {key:?}", self.name))
+    }
+
+    /// Fetch a required parameter as `usize`.
+    pub fn param_usize(&self, key: &str) -> Result<usize> {
+        Ok(usize::try_from(self.param(key)?)?)
+    }
+}
+
+/// Parse a whole manifest file body.
+pub fn parse_manifest(body: &str) -> Result<Vec<ArtifactMeta>> {
+    let mut out = Vec::new();
+    for (i, line) in body.lines().enumerate() {
+        if let Some(meta) =
+            ArtifactMeta::parse_line(line).with_context(|| format!("manifest line {}", i + 1))?
+        {
+            out.push(meta);
+        }
+    }
+    Ok(out)
+}
+
+/// Store of compiled PJRT executables, keyed by artifact name.
+///
+/// Compilation happens eagerly at construction (one-time cost, so the hot
+/// path never compiles); the store is cheap to clone across threads.
+#[derive(Clone)]
+pub struct ArtifactStore {
+    inner: Arc<StoreInner>,
+}
+
+struct StoreInner {
+    dir: PathBuf,
+    kernels: HashMap<String, KernelExec>,
+}
+
+impl ArtifactStore {
+    /// Load `manifest.txt` from `dir`, compile every artifact on a fresh
+    /// PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let metas = parse_manifest(&manifest)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+
+        let mut kernels = HashMap::new();
+        for meta in metas {
+            let path = dir.join(&meta.file);
+            let exec = KernelExec::compile(&client, &path, meta.clone())
+                .with_context(|| format!("compiling artifact {}", meta.name))?;
+            kernels.insert(meta.name.clone(), exec);
+        }
+        Ok(ArtifactStore {
+            inner: Arc::new(StoreInner { dir, kernels }),
+        })
+    }
+
+    /// Whether an artifact directory looks loadable (has a manifest).
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.txt").is_file()
+    }
+
+    /// Look up a compiled kernel by artifact name.
+    pub fn get(&self, name: &str) -> Result<&KernelExec> {
+        self.inner
+            .kernels
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?} in {}", self.inner.dir.display()))
+    }
+
+    /// All loaded kernel names (sorted, for diagnostics).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.inner.kernels.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Artifact directory this store was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.inner.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_well_formed_manifest() {
+        let body = "\
+# comment
+name=prstm_r4_g0 kind=prstm file=p.hlo.txt b=1024 n=262144
+
+name=validate_synth_g0 kind=validate file=v.hlo.txt c=4096 n=262144
+";
+        let metas = parse_manifest(body).unwrap();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(metas[0].name, "prstm_r4_g0");
+        assert_eq!(metas[0].kind, KernelKind::Prstm);
+        assert_eq!(metas[0].param("b").unwrap(), 1024);
+        assert_eq!(metas[1].kind, KernelKind::Validate);
+        assert_eq!(metas[1].param_usize("c").unwrap(), 4096);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(parse_manifest("kind=prstm file=x.hlo.txt").is_err());
+        assert!(parse_manifest("name=a file=x.hlo.txt").is_err());
+        assert!(parse_manifest("name=a kind=prstm").is_err());
+        assert!(parse_manifest("name=a kind=bogus file=x").is_err());
+        assert!(parse_manifest("name=a kind=prstm file=x n=abc").is_err());
+    }
+
+    #[test]
+    fn missing_param_is_error() {
+        let metas = parse_manifest("name=a kind=prstm file=x.hlo.txt n=4").unwrap();
+        assert!(metas[0].param("b").is_err());
+        assert_eq!(metas[0].param("n").unwrap(), 4);
+    }
+}

@@ -1,0 +1,125 @@
+//! Thin, typed wrapper around one compiled PJRT executable.
+//!
+//! All SHeTM kernels exchange only `i32` tensors (the STMR is word-indexed),
+//! so the interface is deliberately narrow: callers hand in `&[i32]` slices
+//! plus shapes, get back `Vec<Vec<i32>>` (the lowered jax functions return
+//! tuples — `aot.py` lowers with `return_tuple=True`).
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::ArtifactMeta;
+
+/// An input tensor: flat `i32` data plus its dimensions.
+#[derive(Debug, Clone)]
+pub struct TensorI32<'a> {
+    /// Row-major flat data.
+    pub data: &'a [i32],
+    /// Dimensions; empty means scalar.
+    pub dims: Vec<i64>,
+}
+
+impl<'a> TensorI32<'a> {
+    /// 1-D tensor covering the whole slice.
+    pub fn vec(data: &'a [i32]) -> Self {
+        TensorI32 {
+            data,
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// 2-D tensor; `data.len()` must equal `rows * cols`.
+    pub fn mat(data: &'a [i32], rows: usize, cols: usize) -> Self {
+        debug_assert_eq!(data.len(), rows * cols);
+        TensorI32 {
+            data,
+            dims: vec![rows as i64, cols as i64],
+        }
+    }
+
+    /// Scalar tensor (slice of length 1).
+    pub fn scalar(data: &'a [i32]) -> Self {
+        debug_assert_eq!(data.len(), 1);
+        TensorI32 { data, dims: vec![] }
+    }
+}
+
+/// One compiled PJRT executable plus its manifest metadata.
+///
+/// `xla::PjRtLoadedExecutable` is not `Sync`, and the simulated GPU device
+/// serializes kernel activations anyway (a real GPU stream would too), so
+/// executions are guarded by a mutex.
+pub struct KernelExec {
+    meta: ArtifactMeta,
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+}
+
+impl KernelExec {
+    /// Compile HLO text at `path` on `client`.
+    pub fn compile(client: &xla::PjRtClient, path: &Path, meta: ArtifactMeta) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("XLA compile of {}: {e:?}", path.display()))?;
+        Ok(KernelExec {
+            meta,
+            exe: Mutex::new(exe),
+        })
+    }
+
+    /// Manifest metadata for this kernel.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Execute with `i32` tensors; returns every tuple element as a flat vec.
+    pub fn run(&self, inputs: &[TensorI32<'_>]) -> Result<Vec<Vec<i32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            // Build each literal directly with its final shape: going
+            // through `vec1(..).reshape(..)` copies the buffer twice
+            // (§Perf L1 optimization, EXPERIMENTS.md).
+            let dims: Vec<usize> = t.dims.iter().map(|&d| d as usize).collect();
+            let bytes = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                &dims,
+                bytes,
+            )
+            .map_err(|e| anyhow!("literal create {:?}: {e:?}", t.dims))?;
+            literals.push(lit);
+        }
+
+        let exe = self.exe.lock().expect("executable mutex poisoned");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.meta.name))?;
+        drop(exe);
+
+        let out = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("{}: empty execution result", self.meta.name))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: device->host: {e:?}", self.meta.name))?;
+
+        let elems = out
+            .to_tuple()
+            .map_err(|e| anyhow!("{}: untuple: {e:?}", self.meta.name))?;
+        let mut vecs = Vec::with_capacity(elems.len());
+        for (i, el) in elems.into_iter().enumerate() {
+            let v = el
+                .to_vec::<i32>()
+                .with_context(|| format!("{}: output {i} as i32", self.meta.name))?;
+            vecs.push(v);
+        }
+        Ok(vecs)
+    }
+}

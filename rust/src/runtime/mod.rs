@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from Rust.
+//!
+//! This is the only boundary between the Rust coordinator and the XLA world.
+//! `python/compile/aot.py` lowers the Layer-2 jax step functions to HLO
+//! *text* under `artifacts/` together with a `manifest.txt`; at startup the
+//! coordinator builds an [`ArtifactStore`] which compiles each module once
+//! on a shared [`xla::PjRtClient`] and hands out [`KernelExec`] handles that
+//! the hot path calls with plain `&[i32]` slices.
+//!
+//! Python never runs at request time: after `make artifacts` the Rust binary
+//! is self-contained.
+
+mod artifacts;
+mod exec;
+
+pub use artifacts::{ArtifactMeta, ArtifactStore, KernelKind};
+pub use exec::{KernelExec, TensorI32};

@@ -1,0 +1,308 @@
+//! Emulated hardware TM ("TSX"): bounded speculation with a serial
+//! fallback, standing in for the Intel TSX guest the paper runs on its
+//! Xeon (DESIGN.md §2 substitution table).
+//!
+//! The emulation reproduces the *behavioural envelope* SHeTM cares about:
+//!
+//! * **capacity aborts** — a transaction whose footprint exceeds
+//!   [`HtmEmu::capacity`] tracked locations aborts unconditionally, like a
+//!   TSX transaction overflowing L1 (the paper's W2 workload, 40 reads,
+//!   stays well inside; pathological transactions fall back);
+//! * **interference aborts** — any concurrent committing writer aborts
+//!   running speculative transactions (eager conflict detection, no
+//!   value-based tolerance), which emulates cache-line invalidation
+//!   killing a TSX transaction — strictly more abort-prone than NOrec;
+//! * **serial fallback** — after [`HtmEmu::max_htm_retries`] aborts the
+//!   transaction takes a global fallback lock and runs non-speculatively
+//!   (the standard TSX lock-elision pattern);
+//! * **RDTSCP-style timestamps** — commit timestamps come from the global
+//!   clock, mirroring the paper's use of RDTSCP to order HTM commits, and
+//!   the write-set is gathered by software instrumentation of writes
+//!   (§IV-B: "for HTM, SHeTM requires the software instrumentation of
+//!   write operations").
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::{Abort, GlobalClock, GuestTm, SharedStmr, TxOps, TxnResult, WriteEntry};
+
+/// Emulated HTM guest.
+pub struct HtmEmu {
+    /// Global sequence lock: even = free; odd = committer or fallback holder.
+    seq: AtomicU64,
+    clock: Arc<GlobalClock>,
+    /// Max tracked locations (reads + writes) before a capacity abort.
+    pub capacity: usize,
+    /// Speculative attempts before taking the serial fallback.
+    pub max_htm_retries: u32,
+}
+
+impl HtmEmu {
+    /// Defaults: 448-location capacity (≈ L1 associativity budget),
+    /// 8 speculative attempts.
+    pub fn with_clock(clock: Arc<GlobalClock>) -> Self {
+        HtmEmu {
+            seq: AtomicU64::new(0),
+            clock,
+            capacity: 448,
+            max_htm_retries: 8,
+        }
+    }
+
+    #[inline]
+    fn wait_even(&self) -> u64 {
+        loop {
+            let s = self.seq.load(Ordering::Acquire);
+            if s & 1 == 0 {
+                return s;
+            }
+            std::hint::spin_loop();
+        }
+    }
+}
+
+struct Tx<'a> {
+    stm: &'a HtmEmu,
+    stmr: &'a SharedStmr,
+    rv: u64,
+    footprint: usize,
+    reads: Vec<(usize, i32)>,
+    writes: Vec<(usize, i32)>,
+    /// Fallback mode: holds the lock, executes directly.
+    serial: bool,
+}
+
+impl<'a> Tx<'a> {
+    fn check_capacity(&mut self) -> Result<(), Abort> {
+        self.footprint += 1;
+        if !self.serial && self.footprint > self.stm.capacity {
+            Err(Abort) // capacity abort
+        } else {
+            Ok(())
+        }
+    }
+
+    fn commit(&mut self, out: &mut Vec<WriteEntry>) -> Result<i32, Abort> {
+        if self.serial {
+            // Fallback: we already hold the lock; write back and release.
+            let wv = if self.writes.is_empty() {
+                0
+            } else {
+                let wv = self.stm.clock.tick();
+                for &(addr, val) in &self.writes {
+                    self.stmr.store(addr, val);
+                    out.push(WriteEntry {
+                        addr: addr as u32,
+                        val,
+                        ts: wv,
+                    });
+                }
+                wv
+            };
+            self.stm.seq.store(self.rv + 2, Ordering::Release);
+            return Ok(wv);
+        }
+        if self.writes.is_empty() {
+            // Eager detection: any interference already aborted us.
+            if self.stm.seq.load(Ordering::Acquire) != self.rv {
+                return Err(Abort);
+            }
+            return Ok(0);
+        }
+        // HTM-style commit: succeed only if NOTHING committed since we
+        // started (eager interference emulation — no value validation).
+        if self
+            .stm
+            .seq
+            .compare_exchange(self.rv, self.rv + 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return Err(Abort);
+        }
+        let wv = self.stm.clock.tick();
+        for &(addr, val) in &self.writes {
+            self.stmr.store(addr, val);
+            out.push(WriteEntry {
+                addr: addr as u32,
+                val,
+                ts: wv,
+            });
+        }
+        self.stm.seq.store(self.rv + 2, Ordering::Release);
+        Ok(wv)
+    }
+}
+
+impl TxOps for Tx<'_> {
+    fn read(&mut self, addr: usize) -> Result<i32, Abort> {
+        if let Some(&(_, v)) = self.writes.iter().rev().find(|&&(a, _)| a == addr) {
+            return Ok(v);
+        }
+        if !self.serial && self.stm.seq.load(Ordering::Acquire) != self.rv {
+            return Err(Abort); // interference: someone committed
+        }
+        self.check_capacity()?;
+        let val = self.stmr.load(addr);
+        self.reads.push((addr, val));
+        Ok(val)
+    }
+
+    fn write(&mut self, addr: usize, val: i32) -> Result<(), Abort> {
+        if !self.serial && self.stm.seq.load(Ordering::Acquire) != self.rv {
+            return Err(Abort);
+        }
+        if let Some(e) = self.writes.iter_mut().find(|e| e.0 == addr) {
+            e.1 = val;
+            return Ok(());
+        }
+        self.check_capacity()?;
+        self.writes.push((addr, val));
+        Ok(())
+    }
+}
+
+impl GuestTm for HtmEmu {
+    fn name(&self) -> &'static str {
+        "htm-emu"
+    }
+
+    fn execute_into(
+        &self,
+        stmr: &SharedStmr,
+        body: &mut dyn FnMut(&mut dyn TxOps) -> Result<(), Abort>,
+        writes: &mut Vec<WriteEntry>,
+    ) -> TxnResult {
+        let mut retries = 0u32;
+        loop {
+            let serial = retries >= self.max_htm_retries;
+            let rv = if serial {
+                // Acquire the fallback lock (spin on CAS even -> odd).
+                loop {
+                    let s = self.wait_even();
+                    if self
+                        .seq
+                        .compare_exchange(s, s + 1, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        break s;
+                    }
+                }
+            } else {
+                self.wait_even()
+            };
+            let mut tx = Tx {
+                stm: self,
+                stmr,
+                rv,
+                footprint: 0,
+                reads: Vec::new(),
+                writes: Vec::new(),
+                serial,
+            };
+            let ran = body(&mut tx);
+            let committed = match ran {
+                Ok(()) => tx.commit(writes),
+                Err(Abort) => {
+                    if serial {
+                        // A body-level abort inside the fallback must
+                        // release the lock before retrying.
+                        self.seq.store(rv + 2, Ordering::Release);
+                    }
+                    Err(Abort)
+                }
+            };
+            match committed {
+                Ok(ts) => return TxnResult { ts, retries },
+                Err(Abort) => {
+                    retries += 1;
+                    for _ in 0..retries.min(8) {
+                        std::hint::spin_loop();
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn setup(n: usize) -> (Arc<HtmEmu>, Arc<SharedStmr>) {
+        let clock = Arc::new(GlobalClock::new());
+        (
+            Arc::new(HtmEmu::with_clock(clock)),
+            Arc::new(SharedStmr::new(n)),
+        )
+    }
+
+    #[test]
+    fn basic_commit() {
+        let (stm, stmr) = setup(8);
+        let mut log = Vec::new();
+        let r = stm.execute_into(
+            &stmr,
+            &mut |tx| {
+                let v = tx.read(0)?;
+                tx.write(0, v + 1)?;
+                Ok(())
+            },
+            &mut log,
+        );
+        assert!(r.ts > 0);
+        assert_eq!(stmr.load(0), 1);
+    }
+
+    #[test]
+    fn capacity_abort_falls_back_to_serial_and_commits() {
+        let clock = Arc::new(GlobalClock::new());
+        let mut stm = HtmEmu::with_clock(clock);
+        stm.capacity = 8;
+        stm.max_htm_retries = 2;
+        let stm = Arc::new(stm);
+        let stmr = Arc::new(SharedStmr::new(64));
+        let mut log = Vec::new();
+        // Footprint of 32 > capacity 8: must succeed via fallback.
+        let r = stm.execute_into(
+            &stmr,
+            &mut |tx| {
+                for a in 0..32 {
+                    let v = tx.read(a)?;
+                    tx.write(a, v + 1)?;
+                }
+                Ok(())
+            },
+            &mut log,
+        );
+        assert!(r.retries >= 2, "needed the fallback");
+        assert!((0..32).all(|a| stmr.load(a) == 1));
+        assert_eq!(log.len(), 32);
+    }
+
+    #[test]
+    fn concurrent_increments_lose_no_updates() {
+        let (stm, stmr) = setup(4);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let stm = stm.clone();
+                let stmr = stmr.clone();
+                s.spawn(move || {
+                    let mut log = Vec::new();
+                    for _ in 0..250 {
+                        stm.execute_into(
+                            &stmr,
+                            &mut |tx| {
+                                let v = tx.read(0)?;
+                                tx.write(0, v + 1)?;
+                                Ok(())
+                            },
+                            &mut log,
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(stmr.load(0), 1000);
+    }
+}

@@ -1,0 +1,218 @@
+//! CPU guest transactional memories (paper §IV-B).
+//!
+//! SHeTM is modular over the per-device TM: any implementation that (a)
+//! ensures opacity for intra-device concurrency and (b) reports, at commit
+//! time, its write-set as `(addr, value, timestamp)` with totally-ordered
+//! timestamps can be plugged in.  This module provides the integration
+//! contract ([`GuestTm`]) and three guests:
+//!
+//! * [`tinystm::TinyStm`] — word-based, lazy-versioning, time-based STM with
+//!   timestamp extension (the TinySTM/TL2 family the paper uses);
+//! * [`norec::NorecStm`] — single-sequence-lock, value-validation STM
+//!   (NOrec), demonstrating guest modularity;
+//! * [`htm::HtmEmu`] — a bounded-speculation emulation of Intel TSX:
+//!   capacity and interference aborts with a serial fallback, RDTSCP-style
+//!   commit timestamps (DESIGN.md §2 substitution table).
+//!
+//! The write-set callback is exactly the paper's: timestamps come from a
+//! [`GlobalClock`] shared by every CPU guest so that the GPU's validation
+//! freshness check (§IV-C.2) sees one total order of CPU commits.
+
+pub mod htm;
+pub mod norec;
+pub mod tinystm;
+
+use std::sync::atomic::{AtomicI32, AtomicI64, Ordering};
+
+/// One committed write, as handed to SHeTM's commit callback (§IV-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WriteEntry {
+    /// STMR word index.
+    pub addr: u32,
+    /// Value written.
+    pub val: i32,
+    /// Commit timestamp (global CPU clock; totally ordered).
+    pub ts: i32,
+}
+
+/// Marker for a doomed transaction; bodies propagate it with `?`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Abort;
+
+/// Outcome of [`GuestTm::execute_into`].
+#[derive(Debug, Clone, Copy)]
+pub struct TxnResult {
+    /// Commit timestamp (0 for read-only transactions, which do not
+    /// advance the clock and leave no log entries).
+    pub ts: i32,
+    /// Times the body was re-run due to intra-device conflicts.
+    pub retries: u32,
+}
+
+/// Transactional operations exposed to a transaction body.
+pub trait TxOps {
+    /// Transactional read of one STMR word.
+    fn read(&mut self, addr: usize) -> Result<i32, Abort>;
+    /// Transactional write of one STMR word.
+    fn write(&mut self, addr: usize, val: i32) -> Result<(), Abort>;
+}
+
+/// A CPU guest TM: runs transaction bodies to commit over a [`SharedStmr`].
+pub trait GuestTm: Send + Sync {
+    /// Human-readable guest name (diagnostics, bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Execute `body` as a transaction, retrying on conflict until commit.
+    ///
+    /// On commit, the transaction's write-set — `(addr, value, ts)` exactly
+    /// as the paper's callback specifies — is appended to `writes` (which
+    /// is NOT cleared: the caller owns batching, so commit log appends are
+    /// allocation-free once warm).
+    fn execute_into(
+        &self,
+        stmr: &SharedStmr,
+        body: &mut dyn FnMut(&mut dyn TxOps) -> Result<(), Abort>,
+        writes: &mut Vec<WriteEntry>,
+    ) -> TxnResult;
+}
+
+/// The CPU-side STMR replica: word-addressed shared memory.
+///
+/// Guests access it through atomics; SHeTM itself performs the
+/// merge-phase bulk updates non-transactionally (§IV-B "additional
+/// assumptions": all TM metadata lives outside the STMR, and merge runs
+/// while no transaction executes).
+pub struct SharedStmr {
+    words: Box<[AtomicI32]>,
+}
+
+impl SharedStmr {
+    /// Zero-initialized STMR of `n` words.
+    pub fn new(n: usize) -> Self {
+        let mut v = Vec::with_capacity(n);
+        v.resize_with(n, || AtomicI32::new(0));
+        SharedStmr {
+            words: v.into_boxed_slice(),
+        }
+    }
+
+    /// Length in words.
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    /// True if the region is empty.
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Raw atomic load.
+    #[inline]
+    pub fn load(&self, addr: usize) -> i32 {
+        self.words[addr].load(Ordering::Acquire)
+    }
+
+    /// Raw atomic store (non-transactional; merge/init paths only).
+    #[inline]
+    pub fn store(&self, addr: usize, val: i32) {
+        self.words[addr].store(val, Ordering::Release);
+    }
+
+    /// Copy the whole region out (round-start snapshot for the GPU).
+    pub fn snapshot(&self) -> Vec<i32> {
+        self.words
+            .iter()
+            .map(|w| w.load(Ordering::Acquire))
+            .collect()
+    }
+
+    /// Install a word range non-transactionally (merge phase).
+    pub fn install_range(&self, start: usize, data: &[i32]) {
+        for (i, &v) in data.iter().enumerate() {
+            self.words[start + i].store(v, Ordering::Release);
+        }
+    }
+}
+
+impl std::fmt::Debug for SharedStmr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SharedStmr({} words)", self.words.len())
+    }
+}
+
+/// Global logical commit clock shared by every CPU guest (§IV-B: "a logical
+/// timestamp to totally order the commits of all transactions").
+#[derive(Debug, Default)]
+pub struct GlobalClock {
+    t: AtomicI64,
+}
+
+impl GlobalClock {
+    /// Clock starting at 0 (first commit gets ts 1).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current value without advancing.
+    #[inline]
+    pub fn now(&self) -> i64 {
+        self.t.load(Ordering::Acquire)
+    }
+
+    /// Advance and return the new timestamp.
+    ///
+    /// Panics if the i32 range the device kernels use is exhausted — at
+    /// one commit per 100 ns that is ~3.5 minutes of saturated commits,
+    /// far beyond any bench round; a production build would epoch-reset
+    /// between rounds.
+    #[inline]
+    pub fn tick(&self) -> i32 {
+        let v = self.t.fetch_add(1, Ordering::AcqRel) + 1;
+        i32::try_from(v).expect("global clock exceeded i32 (epoch reset needed)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stmr_load_store_roundtrip() {
+        let m = SharedStmr::new(8);
+        assert_eq!(m.load(3), 0);
+        m.store(3, 42);
+        assert_eq!(m.load(3), 42);
+        assert_eq!(m.len(), 8);
+    }
+
+    #[test]
+    fn stmr_snapshot_and_install() {
+        let m = SharedStmr::new(4);
+        m.store(1, 5);
+        let snap = m.snapshot();
+        assert_eq!(snap, vec![0, 5, 0, 0]);
+        m.install_range(2, &[7, 8]);
+        assert_eq!(m.snapshot(), vec![0, 5, 7, 8]);
+    }
+
+    #[test]
+    fn clock_monotonic_across_threads() {
+        use std::sync::Arc;
+        let clock = Arc::new(GlobalClock::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = clock.clone();
+            handles.push(std::thread::spawn(move || {
+                (0..1000).map(|_| c.tick()).collect::<Vec<i32>>()
+            }));
+        }
+        let mut all: Vec<i32> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 4000, "timestamps must be unique");
+        assert_eq!(clock.now(), 4000);
+    }
+}

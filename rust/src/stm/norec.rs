@@ -1,0 +1,254 @@
+//! NOrec-like guest: a single global sequence lock plus value-based
+//! validation (Dalessandro, Spear & Scott, PPoPP'10 — cited by the paper
+//! as a representative software guest).
+//!
+//! NOrec keeps no per-location metadata: reads log `(addr, value)` pairs
+//! and are revalidated by value whenever the global sequence number moves;
+//! commits serialize on the sequence lock.  Low single-thread overhead and
+//! graceful behaviour at modest thread counts — a good contrast to the
+//! orec-based [`super::tinystm::TinyStm`] for SHeTM's modularity story.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::{Abort, GlobalClock, GuestTm, SharedStmr, TxOps, TxnResult, WriteEntry};
+
+/// NOrec guest TM.
+pub struct NorecStm {
+    /// Global sequence lock: even = free, odd = a writer is committing.
+    seq: AtomicU64,
+    clock: Arc<GlobalClock>,
+    max_retries: u32,
+}
+
+impl NorecStm {
+    /// Build over the shared CPU commit clock.
+    pub fn with_clock(clock: Arc<GlobalClock>) -> Self {
+        NorecStm {
+            seq: AtomicU64::new(0),
+            clock,
+            max_retries: 1_000_000,
+        }
+    }
+
+    /// Spin until the sequence number is even, returning it.
+    #[inline]
+    fn wait_even(&self) -> u64 {
+        loop {
+            let s = self.seq.load(Ordering::Acquire);
+            if s & 1 == 0 {
+                return s;
+            }
+            std::hint::spin_loop();
+        }
+    }
+}
+
+struct Tx<'a> {
+    stm: &'a NorecStm,
+    stmr: &'a SharedStmr,
+    rv: u64,
+    /// Value-validation read log.
+    reads: Vec<(usize, i32)>,
+    writes: Vec<(usize, i32)>,
+}
+
+impl<'a> Tx<'a> {
+    fn new(stm: &'a NorecStm, stmr: &'a SharedStmr) -> Self {
+        let rv = stm.wait_even();
+        Tx {
+            stm,
+            stmr,
+            rv,
+            reads: Vec::new(),
+            writes: Vec::new(),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.rv = self.stm.wait_even();
+        self.reads.clear();
+        self.writes.clear();
+    }
+
+    /// Value-based revalidation; returns the new consistent snapshot seq.
+    fn revalidate(&mut self) -> Result<u64, Abort> {
+        loop {
+            let s = self.stm.wait_even();
+            for &(a, v) in &self.reads {
+                if self.stmr.load(a) != v {
+                    return Err(Abort);
+                }
+            }
+            if self.stm.seq.load(Ordering::Acquire) == s {
+                return Ok(s);
+            }
+        }
+    }
+
+    fn commit(&mut self, out: &mut Vec<WriteEntry>) -> Result<i32, Abort> {
+        if self.writes.is_empty() {
+            return Ok(0);
+        }
+        // Acquire the sequence lock, revalidating whenever we lose a race.
+        loop {
+            match self.stm.seq.compare_exchange(
+                self.rv,
+                self.rv + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(_) => self.rv = self.revalidate()?,
+            }
+        }
+        let wv = self.stm.clock.tick();
+        for &(addr, val) in &self.writes {
+            self.stmr.store(addr, val);
+            out.push(WriteEntry {
+                addr: addr as u32,
+                val,
+                ts: wv,
+            });
+        }
+        self.stm.seq.store(self.rv + 2, Ordering::Release);
+        Ok(wv)
+    }
+}
+
+impl TxOps for Tx<'_> {
+    fn read(&mut self, addr: usize) -> Result<i32, Abort> {
+        if let Some(&(_, v)) = self.writes.iter().rev().find(|&&(a, _)| a == addr) {
+            return Ok(v);
+        }
+        let mut val = self.stmr.load(addr);
+        while self.stm.seq.load(Ordering::Acquire) != self.rv {
+            self.rv = self.revalidate()?;
+            val = self.stmr.load(addr);
+        }
+        self.reads.push((addr, val));
+        Ok(val)
+    }
+
+    fn write(&mut self, addr: usize, val: i32) -> Result<(), Abort> {
+        if let Some(e) = self.writes.iter_mut().find(|e| e.0 == addr) {
+            e.1 = val;
+        } else {
+            self.writes.push((addr, val));
+        }
+        Ok(())
+    }
+}
+
+impl GuestTm for NorecStm {
+    fn name(&self) -> &'static str {
+        "norec"
+    }
+
+    fn execute_into(
+        &self,
+        stmr: &SharedStmr,
+        body: &mut dyn FnMut(&mut dyn TxOps) -> Result<(), Abort>,
+        writes: &mut Vec<WriteEntry>,
+    ) -> TxnResult {
+        let mut tx = Tx::new(self, stmr);
+        let mut retries = 0u32;
+        loop {
+            let ran = body(&mut tx);
+            let committed = match ran {
+                Ok(()) => tx.commit(writes),
+                Err(Abort) => Err(Abort),
+            };
+            match committed {
+                Ok(ts) => return TxnResult { ts, retries },
+                Err(Abort) => {
+                    retries += 1;
+                    assert!(
+                        retries < self.max_retries,
+                        "norec: txn livelocked after {retries} retries"
+                    );
+                    tx.reset();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn setup(n: usize) -> (Arc<NorecStm>, Arc<SharedStmr>) {
+        let clock = Arc::new(GlobalClock::new());
+        (
+            Arc::new(NorecStm::with_clock(clock)),
+            Arc::new(SharedStmr::new(n)),
+        )
+    }
+
+    #[test]
+    fn commit_applies_and_logs() {
+        let (stm, stmr) = setup(8);
+        let mut log = Vec::new();
+        let r = stm.execute_into(
+            &stmr,
+            &mut |tx| {
+                let v = tx.read(0)?;
+                tx.write(0, v + 7)?;
+                Ok(())
+            },
+            &mut log,
+        );
+        assert_eq!(stmr.load(0), 7);
+        assert_eq!(log.len(), 1);
+        assert_eq!(log[0], WriteEntry { addr: 0, val: 7, ts: r.ts });
+    }
+
+    #[test]
+    fn concurrent_increments_lose_no_updates() {
+        let (stm, stmr) = setup(4);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let stm = stm.clone();
+                let stmr = stmr.clone();
+                s.spawn(move || {
+                    let mut log = Vec::new();
+                    for _ in 0..300 {
+                        stm.execute_into(
+                            &stmr,
+                            &mut |tx| {
+                                let v = tx.read(1)?;
+                                tx.write(1, v + 1)?;
+                                Ok(())
+                            },
+                            &mut log,
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(stmr.load(1), 1200);
+    }
+
+    #[test]
+    fn value_validation_tolerates_silent_rewrites() {
+        // NOrec validates by value: a concurrent writer writing the SAME
+        // value does not abort the reader.
+        let (stm, stmr) = setup(2);
+        stmr.store(0, 5);
+        let mut log = Vec::new();
+        let r = stm.execute_into(
+            &stmr,
+            &mut |tx| {
+                let a = tx.read(0)?;
+                let b = tx.read(1)?;
+                tx.write(1, a + b)?;
+                Ok(())
+            },
+            &mut log,
+        );
+        assert!(r.ts > 0);
+        assert_eq!(stmr.load(1), 5);
+    }
+}

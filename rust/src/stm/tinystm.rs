@@ -1,0 +1,436 @@
+//! TinySTM-like guest: word-based, lazy-versioning, time-based STM with
+//! timestamp extension (the LSA/TL2 algorithm family of Felber et al.,
+//! which the paper uses as its software CPU guest).
+//!
+//! * Ownership records (orecs): a striped table of versioned locks; word
+//!   `a` maps to orec `a & (table_len - 1)`.
+//! * Reads are invisible and validated against a read version `rv`; when a
+//!   too-new orec version is observed the read version is *extended* by
+//!   revalidating the read-set against the current clock (TinySTM's
+//!   incremental extension).
+//! * Writes are buffered (lazy versioning) and written back at commit
+//!   under 2-phase orec locking, then stamped with a fresh global-clock
+//!   timestamp — which doubles as the SHeTM callback timestamp (§IV-B).
+//!
+//! Opacity: standard time-based argument — every read observes a snapshot
+//! consistent at `rv`, and commit revalidates before write-back.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::{Abort, GlobalClock, GuestTm, SharedStmr, TxOps, TxnResult, WriteEntry};
+
+const LOCKED: u64 = 1;
+
+#[inline]
+fn version_of(orec: u64) -> u64 {
+    orec >> 1
+}
+
+#[inline]
+fn is_locked(orec: u64) -> bool {
+    orec & LOCKED != 0
+}
+
+/// TinySTM-like guest TM. Cheap to share via `Arc`.
+pub struct TinyStm {
+    orecs: Box<[AtomicU64]>,
+    mask: usize,
+    clock: Arc<GlobalClock>,
+    /// Max body re-runs before panicking (livelock guard in tests).
+    max_retries: u32,
+}
+
+impl TinyStm {
+    /// Build with a `2^log2_orecs`-entry orec table over `clock`.
+    pub fn new(log2_orecs: u32, clock: Arc<GlobalClock>) -> Self {
+        let n = 1usize << log2_orecs;
+        let mut v = Vec::with_capacity(n);
+        v.resize_with(n, || AtomicU64::new(0));
+        TinyStm {
+            orecs: v.into_boxed_slice(),
+            mask: n - 1,
+            clock,
+            max_retries: 1_000_000,
+        }
+    }
+
+    /// Default sizing: 2^16 orecs.
+    pub fn with_clock(clock: Arc<GlobalClock>) -> Self {
+        Self::new(16, clock)
+    }
+
+    #[inline]
+    fn orec_index(&self, addr: usize) -> usize {
+        addr & self.mask
+    }
+
+    #[inline]
+    fn orec(&self, idx: usize) -> &AtomicU64 {
+        &self.orecs[idx]
+    }
+}
+
+// Per-thread transaction scratch: read/write sets are reused across every
+// transaction on the thread, keeping the commit path allocation-free once
+// warm (§Perf L3a optimization, EXPERIMENTS.md).
+thread_local! {
+    static TX_SCRATCH: RefCell<(Vec<(usize, u64)>, Vec<(usize, i32)>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+struct Tx<'a> {
+    stm: &'a TinyStm,
+    stmr: &'a SharedStmr,
+    rv: u64,
+    /// (orec index, observed orec value) per first read of a stripe.
+    reads: Vec<(usize, u64)>,
+    /// (addr, value) write buffer, latest-wins on rewrite.
+    writes: Vec<(usize, i32)>,
+}
+
+impl<'a> Tx<'a> {
+    fn new(stm: &'a TinyStm, stmr: &'a SharedStmr) -> Self {
+        let (mut reads, mut writes) = TX_SCRATCH.with(|s| std::mem::take(&mut *s.borrow_mut()));
+        reads.clear();
+        writes.clear();
+        Tx {
+            stm,
+            stmr,
+            rv: stm.clock.now() as u64,
+            reads,
+            writes,
+        }
+    }
+
+    /// Return the scratch buffers to the thread-local pool.
+    fn recycle(self) {
+        TX_SCRATCH.with(|s| {
+            *s.borrow_mut() = (self.reads, self.writes);
+        });
+    }
+
+    fn reset(&mut self) {
+        self.rv = self.stm.clock.now() as u64;
+        self.reads.clear();
+        self.writes.clear();
+    }
+
+    /// Revalidate the read-set against the current clock (extension).
+    fn extend(&mut self) -> Result<(), Abort> {
+        let new_rv = self.stm.clock.now() as u64;
+        for &(oi, seen) in &self.reads {
+            let cur = self.stm.orec(oi).load(Ordering::Acquire);
+            if cur != seen {
+                return Err(Abort);
+            }
+        }
+        self.rv = new_rv;
+        Ok(())
+    }
+
+    fn commit(&mut self, out: &mut Vec<WriteEntry>) -> Result<i32, Abort> {
+        if self.writes.is_empty() {
+            return Ok(0); // read-only: snapshot already consistent at rv
+        }
+
+        // Phase 1: lock written orecs (sorted to avoid deadlock; deduped).
+        let mut lock_idx: Vec<usize> = self
+            .writes
+            .iter()
+            .map(|&(a, _)| self.stm.orec_index(a))
+            .collect();
+        lock_idx.sort_unstable();
+        lock_idx.dedup();
+
+        let mut locked: Vec<(usize, u64)> = Vec::with_capacity(lock_idx.len());
+        for &oi in &lock_idx {
+            let o = self.stm.orec(oi);
+            let cur = o.load(Ordering::Acquire);
+            if is_locked(cur)
+                || o.compare_exchange(cur, cur | LOCKED, Ordering::AcqRel, Ordering::Acquire)
+                    .is_err()
+            {
+                for &(li, lv) in &locked {
+                    self.stm.orec(li).store(lv, Ordering::Release);
+                }
+                return Err(Abort);
+            }
+            locked.push((oi, cur));
+        }
+
+        // Phase 2: validate the read-set (our own locks are fine).
+        for &(oi, seen) in &self.reads {
+            let cur = self.stm.orec(oi).load(Ordering::Acquire);
+            let mine = lock_idx.binary_search(&oi).is_ok();
+            let ok = if mine { cur == seen | LOCKED } else { cur == seen };
+            if !ok {
+                for &(li, lv) in &locked {
+                    self.stm.orec(li).store(lv, Ordering::Release);
+                }
+                return Err(Abort);
+            }
+        }
+
+        // Phase 3: write back, stamp, release.
+        let wv = self.stm.clock.tick();
+        for &(addr, val) in &self.writes {
+            self.stmr.store(addr, val);
+            out.push(WriteEntry {
+                addr: addr as u32,
+                val,
+                ts: wv,
+            });
+        }
+        for &(oi, _) in &locked {
+            self.stm.orec(oi).store((wv as u64) << 1, Ordering::Release);
+        }
+        Ok(wv)
+    }
+}
+
+impl TxOps for Tx<'_> {
+    fn read(&mut self, addr: usize) -> Result<i32, Abort> {
+        // Read-after-write serves from the buffer (latest entry wins).
+        if let Some(&(_, v)) = self.writes.iter().rev().find(|&&(a, _)| a == addr) {
+            return Ok(v);
+        }
+        let oi = self.stm.orec_index(addr);
+        let o = self.stm.orec(oi);
+        loop {
+            let v1 = o.load(Ordering::Acquire);
+            if is_locked(v1) {
+                // Writer in progress on this stripe: abort (simple policy).
+                return Err(Abort);
+            }
+            let val = self.stmr.load(addr);
+            let v2 = o.load(Ordering::Acquire);
+            if v1 != v2 {
+                continue; // raced a writer; retry the read
+            }
+            if version_of(v1) > self.rv {
+                self.extend()?; // TinySTM timestamp extension
+                continue;
+            }
+            if !self.reads.iter().any(|&(i, _)| i == oi) {
+                self.reads.push((oi, v1));
+            }
+            return Ok(val);
+        }
+    }
+
+    fn write(&mut self, addr: usize, val: i32) -> Result<(), Abort> {
+        if let Some(e) = self.writes.iter_mut().find(|e| e.0 == addr) {
+            e.1 = val;
+        } else {
+            self.writes.push((addr, val));
+        }
+        Ok(())
+    }
+}
+
+impl GuestTm for TinyStm {
+    fn name(&self) -> &'static str {
+        "tinystm"
+    }
+
+    fn execute_into(
+        &self,
+        stmr: &SharedStmr,
+        body: &mut dyn FnMut(&mut dyn TxOps) -> Result<(), Abort>,
+        writes: &mut Vec<WriteEntry>,
+    ) -> TxnResult {
+        let mut tx = Tx::new(self, stmr);
+        let mut retries = 0u32;
+        loop {
+            let ran = body(&mut tx);
+            let committed = match ran {
+                Ok(()) => tx.commit(writes),
+                Err(Abort) => Err(Abort),
+            };
+            match committed {
+                Ok(ts) => {
+                    tx.recycle();
+                    return TxnResult { ts, retries };
+                }
+                Err(Abort) => {
+                    retries += 1;
+                    assert!(
+                        retries < self.max_retries,
+                        "tinystm: txn livelocked after {retries} retries"
+                    );
+                    // Bounded exponential backoff keeps writers from
+                    // colliding repeatedly under contention.
+                    for _ in 0..(retries.min(6)) {
+                        std::hint::spin_loop();
+                    }
+                    tx.reset();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn setup(n: usize) -> (Arc<TinyStm>, Arc<SharedStmr>) {
+        let clock = Arc::new(GlobalClock::new());
+        (
+            Arc::new(TinyStm::with_clock(clock)),
+            Arc::new(SharedStmr::new(n)),
+        )
+    }
+
+    #[test]
+    fn read_write_commit_and_callback() {
+        let (stm, stmr) = setup(16);
+        let mut log = Vec::new();
+        let r = stm.execute_into(
+            &stmr,
+            &mut |tx| {
+                let v = tx.read(3)?;
+                tx.write(3, v + 5)?;
+                tx.write(7, 9)?;
+                Ok(())
+            },
+            &mut log,
+        );
+        assert!(r.ts > 0);
+        assert_eq!(stmr.load(3), 5);
+        assert_eq!(stmr.load(7), 9);
+        assert_eq!(log.len(), 2);
+        assert!(log.iter().all(|e| e.ts == r.ts));
+    }
+
+    #[test]
+    fn read_only_txn_has_no_log_and_ts_zero() {
+        let (stm, stmr) = setup(8);
+        stmr.store(2, 11);
+        let mut log = Vec::new();
+        let mut seen = 0;
+        let r = stm.execute_into(
+            &stmr,
+            &mut |tx| {
+                seen = tx.read(2)?;
+                Ok(())
+            },
+            &mut log,
+        );
+        assert_eq!(seen, 11);
+        assert_eq!(r.ts, 0);
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn read_after_write_sees_own_write() {
+        let (stm, stmr) = setup(8);
+        let mut log = Vec::new();
+        stm.execute_into(
+            &stmr,
+            &mut |tx| {
+                tx.write(1, 42)?;
+                assert_eq!(tx.read(1)?, 42);
+                tx.write(1, 43)?;
+                assert_eq!(tx.read(1)?, 43);
+                Ok(())
+            },
+            &mut log,
+        );
+        assert_eq!(stmr.load(1), 43);
+        // Latest-wins buffering: a single log entry for addr 1.
+        assert_eq!(log.len(), 1);
+        assert_eq!(log[0].val, 43);
+    }
+
+    #[test]
+    fn concurrent_increments_lose_no_updates() {
+        let (stm, stmr) = setup(4);
+        let threads = 4;
+        let per = 500;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let stm = stm.clone();
+                let stmr = stmr.clone();
+                s.spawn(move || {
+                    let mut log = Vec::new();
+                    for _ in 0..per {
+                        stm.execute_into(
+                            &stmr,
+                            &mut |tx| {
+                                let v = tx.read(0)?;
+                                tx.write(0, v + 1)?;
+                                Ok(())
+                            },
+                            &mut log,
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(stmr.load(0), (threads * per) as i32);
+    }
+
+    #[test]
+    fn timestamps_order_writes_to_same_word() {
+        let (stm, stmr) = setup(4);
+        let mut log = Vec::new();
+        for i in 0..10 {
+            stm.execute_into(
+                &stmr,
+                &mut |tx| {
+                    tx.write(2, i)?;
+                    Ok(())
+                },
+                &mut log,
+            );
+        }
+        let ts: Vec<i32> = log.iter().map(|e| e.ts).collect();
+        let mut sorted = ts.clone();
+        sorted.sort_unstable();
+        assert_eq!(ts, sorted, "commit order == timestamp order");
+        assert_eq!(stmr.load(2), 9);
+    }
+
+    #[test]
+    fn bank_transfer_invariant_under_concurrency() {
+        // Classic serializability smoke: total balance is conserved.
+        let (stm, stmr) = setup(8);
+        for a in 0..8 {
+            stmr.store(a, 100);
+        }
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let stm = stm.clone();
+                let stmr = stmr.clone();
+                s.spawn(move || {
+                    let mut log = Vec::new();
+                    let mut rng = crate::util::Rng::new(t as u64);
+                    for _ in 0..400 {
+                        let from = rng.below_usize(8);
+                        let to = rng.below_usize(8);
+                        if from == to {
+                            continue;
+                        }
+                        stm.execute_into(
+                            &stmr,
+                            &mut |tx| {
+                                let f = tx.read(from)?;
+                                let g = tx.read(to)?;
+                                tx.write(from, f - 1)?;
+                                tx.write(to, g + 1)?;
+                                Ok(())
+                            },
+                            &mut log,
+                        );
+                    }
+                });
+            }
+        });
+        let total: i32 = (0..8).map(|a| stmr.load(a)).sum();
+        assert_eq!(total, 800);
+    }
+}

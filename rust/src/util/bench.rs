@@ -1,0 +1,126 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Every `benches/*.rs` target uses this: warm-up, timed iterations,
+//! mean/stddev reporting and a tabular printer whose rows mirror the
+//! corresponding paper table/figure series (EXPERIMENTS.md records them).
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Label, e.g. `shetm/period=80ms`.
+    pub name: String,
+    /// Per-iteration wall time.
+    pub mean: Duration,
+    /// Standard deviation across iterations.
+    pub stddev: Duration,
+    /// Iterations measured.
+    pub iters: u32,
+}
+
+impl BenchResult {
+    /// Iterations per second implied by the mean.
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            0.0
+        } else {
+            1.0 / self.mean.as_secs_f64()
+        }
+    }
+}
+
+/// Time `f` with `iters` measured iterations after `warmup` unmeasured ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.add(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        mean: Duration::from_secs_f64(s.mean()),
+        stddev: Duration::from_secs_f64(s.stddev()),
+        iters,
+    }
+}
+
+/// Print one benchmark line in a stable, grep-friendly format.
+pub fn report(r: &BenchResult) {
+    println!(
+        "bench {:<44} {:>12.3?} ±{:>10.3?}  ({} iters)",
+        r.name, r.mean, r.stddev, r.iters
+    );
+}
+
+/// A table printer for figure-series output: fixed column widths, one
+/// header, rows of f64 cells. The benches print paper-figure series with it.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+}
+
+impl Table {
+    /// Build a table with the given column headers and print the header row.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        println!("\n== {title} ==");
+        let widths: Vec<usize> = headers.iter().map(|h| h.len().max(12)).collect();
+        let mut line = String::new();
+        for (h, w) in headers.iter().zip(&widths) {
+            line.push_str(&format!("{h:>w$}  "));
+        }
+        println!("{line}");
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths,
+        }
+    }
+
+    /// Print one row; cells are formatted with 4 significant decimals.
+    pub fn row(&self, cells: &[f64]) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{c:>w$.4}  "));
+        }
+        println!("{line}");
+    }
+
+    /// Print a row whose first cell is a string label.
+    pub fn row_labeled(&self, label: &str, cells: &[f64]) {
+        assert_eq!(cells.len() + 1, self.headers.len(), "table row arity");
+        let mut line = format!("{label:>w$}  ", w = self.widths[0]);
+        for (c, w) in cells.iter().zip(&self.widths[1..]) {
+            line.push_str(&format!("{c:>w$.4}  "));
+        }
+        println!("{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.per_sec() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "table row arity")]
+    fn table_checks_arity() {
+        let t = Table::new("t", &["a", "b"]);
+        t.row(&[1.0]);
+    }
+}

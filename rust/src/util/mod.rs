@@ -1,0 +1,15 @@
+//! Dependency-free utilities: deterministic RNG, Zipf sampling, statistics,
+//! a property-test harness and a micro-bench timer.
+//!
+//! The offline build vendors only the `xla` crate closure, so the usual
+//! ecosystem crates (rand / proptest / criterion) are replaced by the small,
+//! well-tested implementations in this module (DESIGN.md §4).
+
+pub mod bench;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod zipf;
+
+pub use rng::Rng;
+pub use zipf::Zipf;

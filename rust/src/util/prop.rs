@@ -1,0 +1,134 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! Runs a property over many deterministically-seeded random cases and, on
+//! failure, retries the failing case with "smaller" size parameters to aid
+//! debugging (linear shrinking of the case's size knob).
+//!
+//! ```rust,no_run
+//! use shetm::util::prop::{forall, Cases};
+//! forall(Cases::new("sum_commutes", 200), |rng, size| {
+//!     let a = rng.below(size.max(1) as u64);
+//!     let b = rng.below(size.max(1) as u64);
+//!     if a + b != b + a { return Err(format!("{a} {b}")); }
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Configuration for one property run.
+#[derive(Debug, Clone)]
+pub struct Cases {
+    /// Property name (printed on failure).
+    pub name: &'static str,
+    /// Number of random cases.
+    pub count: u32,
+    /// Base RNG seed; each case derives `seed + case_index`.
+    pub seed: u64,
+    /// Maximum "size" hint handed to the property (cases ramp up to it).
+    pub max_size: usize,
+}
+
+impl Cases {
+    /// Standard configuration: `count` cases, sizes ramping to 256.
+    pub fn new(name: &'static str, count: u32) -> Self {
+        Cases {
+            name,
+            count,
+            seed: 0x5EED_0BAD_F00D,
+            max_size: 256,
+        }
+    }
+
+    /// Override the size ramp's maximum.
+    pub fn max_size(mut self, s: usize) -> Self {
+        self.max_size = s;
+        self
+    }
+
+    /// Override the seed (for reproducing failures).
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `property` over random cases; panics with diagnostics on failure.
+///
+/// The property receives a seeded RNG and a size hint that grows from 1 to
+/// `max_size` across cases, and returns `Err(description)` to signal a
+/// counterexample.
+pub fn forall<F>(cases: Cases, mut property: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for i in 0..cases.count {
+        let size = 1 + (i as usize * cases.max_size) / cases.count.max(1) as usize;
+        let case_seed = cases.seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = property(&mut rng, size) {
+            // Shrink: retry the same seed at smaller sizes, reporting the
+            // smallest size that still fails.
+            let mut min_fail = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(case_seed);
+                match property(&mut rng, s) {
+                    Err(m) => {
+                        min_fail = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property {:?} failed (case {}, seed {:#x}):\n  at size {}: {}\n  \
+                 minimal failing size {}: {}\n  reproduce with Cases::new(..).seed({:#x})",
+                cases.name, i, case_seed, size, msg, min_fail.0, min_fail.1, case_seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(Cases::new("add_comm", 100), |rng, size| {
+            let a = rng.below(size.max(1) as u64);
+            let b = rng.below(size.max(1) as u64);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a}+{b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always_fails\" failed")]
+    fn failing_property_panics_with_shrink_info() {
+        forall(Cases::new("always_fails", 10), |_rng, size| {
+            if size >= 1 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_seen = 0usize;
+        forall(Cases::new("ramp", 50).max_size(128), |_rng, size| {
+            max_seen = max_seen.max(size);
+            Ok(())
+        });
+        assert!(max_seen > 64, "sizes should approach max: {max_seen}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Zipfian sampling over `[0, n)` with parameter alpha, used by the
+//! memcached workload (paper §V-D: object popularity Zipf with alpha = 0.5).
+//!
+//! Uses the rejection-inversion method of Hörmann & Derflinger, which needs
+//! no O(n) table and is exact for any alpha >= 0 (alpha = 0 degenerates to
+//! uniform).
+
+use super::rng::Rng;
+
+/// Zipf(n, alpha) sampler: `P(k) ∝ (k+1)^-alpha` for `k in [0, n)`.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    alpha: f64,
+    // Precomputed constants of the rejection-inversion scheme.
+    h_x1: f64,
+    h_n: f64,
+    s: f64,
+}
+
+impl Zipf {
+    /// Construct a sampler; `n > 0`, `alpha >= 0`.
+    pub fn new(n: u64, alpha: f64) -> Self {
+        assert!(n > 0, "Zipf needs n > 0");
+        assert!(alpha >= 0.0, "Zipf needs alpha >= 0");
+        let h = |x: f64| -> f64 {
+            if (alpha - 1.0).abs() < 1e-12 {
+                (1.0 + x).ln()
+            } else {
+                ((1.0 + x).powf(1.0 - alpha) - 1.0) / (1.0 - alpha)
+            }
+        };
+        let h_x1 = h(1.5) - 1.0;
+        let h_n = h(n as f64 + 0.5);
+        let s = 2.0 - Self::h_inv_static(alpha, h(2.5) - (2.0f64).powf(-alpha));
+        Zipf {
+            n,
+            alpha,
+            h_x1,
+            h_n,
+            s,
+        }
+    }
+
+    fn h_inv_static(alpha: f64, x: f64) -> f64 {
+        if (alpha - 1.0).abs() < 1e-12 {
+            x.exp() - 1.0
+        } else {
+            ((1.0 - alpha) * x + 1.0).powf(1.0 / (1.0 - alpha)) - 1.0
+        }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        Self::h_inv_static(self.alpha, x)
+    }
+
+    /// Draw one sample in `[0, n)` (0 is the most popular rank).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if self.alpha == 0.0 {
+            return rng.below(self.n);
+        }
+        loop {
+            let u = self.h_x1 + rng.f64() * (self.h_n - self.h_x1);
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            let h_k = {
+                let a = self.alpha;
+                if (a - 1.0).abs() < 1e-12 {
+                    (k + 0.5).ln()
+                } else {
+                    ((k + 0.5).powf(1.0 - a) - 1.0) / (1.0 - a)
+                }
+            };
+            if k - x <= self.s || u >= h_k - k.powf(-self.alpha) {
+                return k as u64 - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_zero_is_uniformish() {
+        let z = Zipf::new(100, 0.0);
+        let mut r = Rng::new(3);
+        let mut counts = [0u32; 100];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min < 2.0, "uniform spread (max {max}, min {min})");
+    }
+
+    #[test]
+    fn skew_orders_ranks() {
+        let z = Zipf::new(1000, 0.99);
+        let mut r = Rng::new(4);
+        let mut head = 0u32;
+        let mut tail = 0u32;
+        for _ in 0..20_000 {
+            let k = z.sample(&mut r);
+            if k < 10 {
+                head += 1;
+            } else if k >= 500 {
+                tail += 1;
+            }
+        }
+        assert!(
+            head > tail,
+            "popular head should dominate: head={head} tail={tail}"
+        );
+    }
+
+    #[test]
+    fn samples_in_range() {
+        for &alpha in &[0.0, 0.5, 1.0, 1.5] {
+            let z = Zipf::new(37, alpha);
+            let mut r = Rng::new(5);
+            for _ in 0..2000 {
+                assert!(z.sample(&mut r) < 37);
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_half_matches_paper_workload_shape() {
+        // alpha = 0.5 (the paper's memcached workload): mild skew — the top
+        // 1% of ranks should get noticeably more than 1% of the mass, but
+        // far from a heavy-tail majority.
+        let z = Zipf::new(10_000, 0.5);
+        let mut r = Rng::new(6);
+        let mut top = 0u32;
+        let n = 50_000;
+        for _ in 0..n {
+            if z.sample(&mut r) < 100 {
+                top += 1;
+            }
+        }
+        let frac = top as f64 / n as f64;
+        assert!(frac > 0.02 && frac < 0.25, "top-1% mass {frac}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Whole-engine integration tests, including the PJRT production path:
+//! the coordinator driving the compiled jax/Pallas artifacts end to end,
+//! cross-checked against the native backend.
+
+use shetm::apps::memcached::McConfig;
+use shetm::apps::synth::SynthSpec;
+use shetm::config::{PolicyKind, Raw, SystemConfig};
+use shetm::coordinator::round::{CpuDriver, Variant};
+use shetm::gpu::Backend;
+use shetm::launch;
+use shetm::runtime::ArtifactStore;
+
+fn cfg(n: usize) -> SystemConfig {
+    let mut raw = Raw::new();
+    raw.set("cpu.txn_ns=2000").unwrap();
+    raw.set("gpu.txn_ns=230").unwrap();
+    raw.set("hetm.period_ms=2").unwrap();
+    raw.set("seed=99").unwrap();
+    let mut c = SystemConfig::from_raw(&raw).unwrap();
+    c.n_words = n;
+    c
+}
+
+fn pjrt_backend(prstm: &str, validate: &str) -> Option<Backend> {
+    let dir = std::env::var("SHETM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if !ArtifactStore::available(&dir) {
+        eprintln!("NOTE: artifacts/ missing; PJRT engine tests skipped");
+        return None;
+    }
+    Some(Backend::Pjrt {
+        store: ArtifactStore::load(dir).expect("store loads"),
+        prstm: prstm.to_string(),
+        validate: validate.to_string(),
+        memcached: "memcached".to_string(),
+    })
+}
+
+#[test]
+fn synth_engine_pjrt_matches_native_run() {
+    let n = 1 << 18; // must match the compiled artifacts
+    let Some(backend) = pjrt_backend("prstm_r4_g0", "validate_synth_g0") else {
+        return;
+    };
+    let c = cfg(n);
+    let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+    let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+
+    let mut pjrt = launch::build_synth_engine(
+        &c,
+        Variant::Optimized,
+        cpu_spec.clone(),
+        gpu_spec.clone(),
+        1024,
+        backend,
+    );
+    pjrt.run_rounds(3).unwrap();
+
+    let mut native = launch::build_synth_engine(
+        &c,
+        Variant::Optimized,
+        cpu_spec,
+        gpu_spec,
+        1024,
+        Backend::Native,
+    );
+    native.run_rounds(3).unwrap();
+
+    assert_eq!(pjrt.stats.cpu_commits, native.stats.cpu_commits);
+    assert_eq!(pjrt.stats.gpu_commits, native.stats.gpu_commits);
+    assert_eq!(pjrt.stats.rounds_committed, 3);
+    assert_eq!(pjrt.device.stmr(), native.device.stmr());
+    assert_eq!(
+        pjrt.cpu.stmr().snapshot(),
+        native.cpu.stmr().snapshot(),
+        "CPU replicas"
+    );
+}
+
+#[test]
+fn synth_engine_pjrt_conflicting_round_rolls_back() {
+    let n = 1 << 18;
+    let Some(backend) = pjrt_backend("prstm_r4_g0", "validate_synth_g0") else {
+        return;
+    };
+    let c = cfg(n);
+    let cpu_spec = SynthSpec::w1(n, 1.0)
+        .partitioned(0..n / 2)
+        .with_conflicts(0.01, n / 2..n);
+    let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+    let mut e = launch::build_synth_engine(&c, Variant::Optimized, cpu_spec, gpu_spec, 1024, backend);
+    e.run_rounds(2).unwrap();
+    assert_eq!(e.stats.rounds_committed, 0, "dense conflicts abort rounds");
+    assert_eq!(e.stats.gpu_commits, 0);
+    assert!(e.stats.discarded_commits > 0);
+    // Rollback correctness: after a drain the replicas agree again.
+    e.drain().unwrap();
+    assert_eq!(e.cpu.stmr().snapshot(), e.device.stmr().to_vec());
+}
+
+#[test]
+fn memcached_engine_pjrt_three_policies() {
+    let Some(backend) = pjrt_backend("prstm_r4_g0", "validate_mc_g0") else {
+        return;
+    };
+    for policy in [
+        PolicyKind::FavorCpu,
+        PolicyKind::FavorGpu,
+        PolicyKind::CpuWithStarvationGuard,
+    ] {
+        let mut c = cfg(1 << 18);
+        c.policy = policy;
+        let mc = McConfig::new(1 << 15);
+        let mut e = launch::build_memcached_engine(
+            &c,
+            Variant::Optimized,
+            mc,
+            1024,
+            backend.clone(),
+        );
+        e.run_rounds(2).unwrap();
+        assert!(
+            e.stats.cpu_commits + e.stats.gpu_commits > 0,
+            "{policy:?}: some requests must be served"
+        );
+        assert_eq!(
+            e.stats.rounds_committed, 2,
+            "{policy:?}: parity workload must not conflict"
+        );
+    }
+}
+
+#[test]
+fn basic_variant_pjrt_round_trips() {
+    let n = 1 << 18;
+    let Some(backend) = pjrt_backend("prstm_r4_g0", "validate_synth_g0") else {
+        return;
+    };
+    let c = cfg(n);
+    let cpu_spec = SynthSpec::w1(n, 0.1).partitioned(0..n / 2);
+    let gpu_spec = SynthSpec::w1(n, 0.1).partitioned(n / 2..n);
+    let mut e = launch::build_synth_engine(&c, Variant::Basic, cpu_spec, gpu_spec, 1024, backend);
+    e.run_rounds(2).unwrap();
+    assert_eq!(e.stats.rounds_committed, 2);
+    e.drain().unwrap();
+    assert_eq!(e.cpu.stmr().snapshot(), e.device.stmr().to_vec());
+}
+
+#[test]
+fn wide_read_artifact_drives_w2_workload() {
+    let n = 1 << 18;
+    let Some(backend) = pjrt_backend("prstm_r40_g0", "validate_synth_g0") else {
+        return;
+    };
+    let c = cfg(n);
+    let cpu_spec = SynthSpec::w2(n, 0.5).partitioned(0..n / 2);
+    let gpu_spec = SynthSpec::w2(n, 0.5).partitioned(n / 2..n);
+    let mut e = launch::build_synth_engine(&c, Variant::Optimized, cpu_spec, gpu_spec, 1024, backend);
+    e.run_rounds(2).unwrap();
+    assert_eq!(e.stats.rounds_committed, 2);
+    assert!(e.stats.gpu_commits > 0);
+}

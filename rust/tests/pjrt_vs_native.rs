@@ -1,0 +1,189 @@
+//! Cross-backend integration tests: the PJRT-executed jax/Pallas artifacts
+//! must agree BIT-EXACTLY with the native Rust mirrors on identical inputs.
+//!
+//! This is the load-bearing correctness check of the three-layer stack:
+//! python/tests already pins the jax models to the sequential oracles
+//! (ref.py); these tests pin the Rust mirrors to the compiled artifacts,
+//! closing the loop.
+//!
+//! Skipped (with a notice) when `artifacts/` has not been built — run
+//! `make artifacts` first.
+
+use shetm::gpu::{Backend, GpuDevice, LogChunk, McBatch, TxnBatch};
+use shetm::runtime::ArtifactStore;
+use shetm::util::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("SHETM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if ArtifactStore::available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("NOTE: artifacts/ missing; run `make artifacts` to enable PJRT tests");
+        None
+    }
+}
+
+fn store() -> Option<ArtifactStore> {
+    artifacts_dir().map(|d| ArtifactStore::load(d).expect("artifact store loads"))
+}
+
+/// Random batch matching the `prstm_r4_g0` artifact shape (b=1024, r=4, w=4,
+/// n=2^18) with unique write indices per transaction.
+fn random_batch(rng: &mut Rng, n: usize, b: usize, r: usize, w: usize) -> TxnBatch {
+    let mut batch = TxnBatch::empty(b, r, w);
+    let mut widx = Vec::new();
+    for i in 0..b {
+        for j in 0..r {
+            batch.read_idx[i * r + j] = rng.below_usize(n) as i32;
+        }
+        rng.distinct(n, w, &mut widx);
+        for j in 0..w {
+            batch.write_idx[i * w + j] = widx[j] as i32;
+            batch.write_val[i * w + j] = rng.below(1000) as i32;
+        }
+        batch.op[i] = rng.below(2) as i32;
+    }
+    batch
+}
+
+fn pjrt_device(store: &ArtifactStore, n: usize, bmp_shift: u32, prstm: &str, validate: &str) -> GpuDevice {
+    GpuDevice::new(
+        n,
+        bmp_shift,
+        Backend::Pjrt {
+            store: store.clone(),
+            prstm: prstm.to_string(),
+            validate: validate.to_string(),
+            memcached: "memcached".to_string(),
+        },
+    )
+}
+
+#[test]
+fn prstm_batch_pjrt_matches_native() {
+    let Some(store) = store() else { return };
+    let n = 1 << 18;
+    for (art, shift) in [("prstm_r4_g0", 0u32), ("prstm_r4_g8", 8u32)] {
+        let mut rng = Rng::new(0xBEEF);
+        let mut native = GpuDevice::new(n, shift, Backend::Native);
+        let mut pjrt = pjrt_device(&store, n, shift, art, "validate_synth_g0");
+        native.begin_round();
+        pjrt.begin_round();
+
+        for round in 0..3 {
+            let batch = random_batch(&mut rng, n, 1024, 4, 4);
+            let on = native.run_txn_batch(&batch).expect("native");
+            let op = pjrt.run_txn_batch(&batch).expect("pjrt");
+            assert_eq!(on.commit, op.commit, "{art} round {round}: commit masks");
+            assert_eq!(on.n_commits, op.n_commits);
+            assert_eq!(native.stmr(), pjrt.stmr(), "{art} round {round}: STMR");
+            assert_eq!(
+                native.rs_bmp().as_slice(),
+                pjrt.rs_bmp().as_slice(),
+                "{art} round {round}: RS bitmap"
+            );
+            assert_eq!(
+                native.ws_bmp().as_slice(),
+                pjrt.ws_bmp().as_slice(),
+                "{art} round {round}: WS bitmap"
+            );
+        }
+    }
+}
+
+#[test]
+fn prstm_wide_reads_pjrt_matches_native() {
+    let Some(store) = store() else { return };
+    let n = 1 << 18;
+    let mut rng = Rng::new(0xCAFE);
+    let mut native = GpuDevice::new(n, 0, Backend::Native);
+    let mut pjrt = pjrt_device(&store, n, 0, "prstm_r40_g0", "validate_synth_g0");
+    native.begin_round();
+    pjrt.begin_round();
+    let batch = random_batch(&mut rng, n, 1024, 40, 4);
+    let on = native.run_txn_batch(&batch).expect("native");
+    let op = pjrt.run_txn_batch(&batch).expect("pjrt");
+    assert_eq!(on.commit, op.commit);
+    assert_eq!(native.stmr(), pjrt.stmr());
+}
+
+#[test]
+fn validate_chunk_pjrt_matches_native() {
+    let Some(store) = store() else { return };
+    let n = 1 << 18;
+    let c = 4096;
+    let mut rng = Rng::new(0xD00D);
+
+    let mut native = GpuDevice::new(n, 0, Backend::Native);
+    let mut pjrt = pjrt_device(&store, n, 0, "prstm_r4_g0", "validate_synth_g0");
+    native.begin_round();
+    pjrt.begin_round();
+
+    // Populate the read-set bitmap via a real batch so conflicts can occur.
+    let batch = random_batch(&mut rng, n, 1024, 4, 4);
+    native.run_txn_batch(&batch).unwrap();
+    pjrt.run_txn_batch(&batch).unwrap();
+
+    for _ in 0..3 {
+        let mut chunk = LogChunk::empty(c);
+        // ~75% live entries, duplicated addresses and timestamp collisions
+        // on purpose (exercises the freshness tie-break).
+        for i in 0..c {
+            if rng.chance(0.75) {
+                chunk.addrs[i] = rng.below((n / 64) as u64) as i32; // dup-heavy
+                chunk.vals[i] = rng.below(10_000) as i32;
+                chunk.ts[i] = rng.below(50) as i32;
+            }
+        }
+        let cn = native.validate_chunk(&chunk).expect("native");
+        let cp = pjrt.validate_chunk(&chunk).expect("pjrt");
+        assert_eq!(cn, cp, "conflict counts");
+        assert_eq!(native.stmr(), pjrt.stmr(), "STMR after apply");
+    }
+}
+
+#[test]
+fn memcached_batch_pjrt_matches_native() {
+    let Some(store) = store() else { return };
+    let n_sets = 1 << 15;
+    let n = n_sets * shetm::gpu::native::mc::WORDS_PER_SET;
+    let q = 1024;
+    let mut rng = Rng::new(0xF00D);
+
+    let mut native = GpuDevice::new(n, 0, Backend::Native);
+    let mut pjrt = pjrt_device(&store, n, 0, "prstm_r4_g0", "validate_mc_g0");
+
+    // Empty cache: keys = -1 everywhere.
+    for s in 0..n_sets {
+        for wslot in 0..8 {
+            let w = s * shetm::gpu::native::mc::WORDS_PER_SET + wslot;
+            native.stmr_mut()[w] = -1;
+            pjrt.stmr_mut()[w] = -1;
+        }
+    }
+    native.begin_round();
+    pjrt.begin_round();
+
+    let mut clk = 1i32;
+    for round in 0..3 {
+        let mut b = McBatch::empty(q);
+        for i in 0..q {
+            b.op[i] = if rng.chance(0.3) { 1 } else { 0 };
+            b.key[i] = rng.below(5_000) as i32;
+            b.val[i] = rng.below(100_000) as i32;
+        }
+        b.clk0 = clk;
+        clk += q as i32;
+
+        let on = native.run_mc_batch(&b, n_sets).expect("native");
+        let op = pjrt.run_mc_batch(&b, n_sets).expect("pjrt");
+        assert_eq!(on.commit, op.commit, "round {round}: commit masks");
+        assert_eq!(on.out_val, op.out_val, "round {round}: GET results");
+        assert_eq!(native.stmr(), pjrt.stmr(), "round {round}: STMR");
+        assert_eq!(
+            native.rs_bmp().as_slice(),
+            pjrt.rs_bmp().as_slice(),
+            "round {round}: RS bitmap"
+        );
+    }
+}

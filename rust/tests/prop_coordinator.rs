@@ -1,0 +1,367 @@
+//! Property tests over the coordinator's core invariants (hand-rolled
+//! harness, `shetm::util::prop` — proptest is unavailable offline).
+//!
+//! These are the safety arguments of the paper, checked mechanically:
+//!   P1  — committed state is a serial merge: after a quiesced run the two
+//!         replicas are bit-identical, under every policy/variant mix;
+//!   P2† — speculative GPU work never leaks: a failed round leaves no GPU
+//!         write visible on either replica (favor-CPU), and vice versa;
+//!   PR-STM — intra-batch committers are conflict-free in priority order;
+//!   validation — freshness-guarded apply equals a timestamp-ordered replay.
+
+use shetm::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
+use shetm::config::{PolicyKind, SystemConfig};
+use shetm::coordinator::round::CpuDriver;
+use shetm::coordinator::round::Variant;
+use shetm::coordinator::{Affinity, Dispatcher, RoundLog};
+use shetm::gpu::{native, Backend, Bitmap, GpuDevice, LogChunk, TxnBatch};
+use shetm::launch;
+use shetm::stm::WriteEntry;
+use shetm::util::prop::{forall, Cases};
+use shetm::util::Rng;
+
+fn base_cfg(n: usize, seed: u64) -> SystemConfig {
+    let mut cfg = SystemConfig::from_raw(&shetm::config::Raw::new()).unwrap();
+    cfg.n_words = n;
+    cfg.cpu_txn_s = 2e-6;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn prop_replicas_converge_after_drain() {
+    forall(Cases::new("replicas_converge", 24).max_size(64), |rng, size| {
+        let n = 1 << (12 + rng.below_usize(3)); // 4K..16K words
+        let mut cfg = base_cfg(n, rng.next_u64());
+        cfg.period_s = 0.001 + 0.001 * (size % 8) as f64;
+        cfg.early_validation = rng.chance(0.5);
+        cfg.policy = match rng.below(3) {
+            0 => PolicyKind::FavorCpu,
+            1 => PolicyKind::FavorGpu,
+            _ => PolicyKind::CpuWithStarvationGuard,
+        };
+        let variant = if rng.chance(0.5) {
+            Variant::Optimized
+        } else {
+            Variant::Basic
+        };
+        let conflict = if rng.chance(0.4) { 1e-4 } else { 0.0 };
+        let cpu_spec = SynthSpec::w1(n, 0.5)
+            .partitioned(0..n / 2)
+            .with_conflicts(conflict, n / 2..n);
+        let gpu_spec = SynthSpec::w1(n, 0.5).partitioned(n / 2..n);
+        let mut e = launch::build_synth_engine(
+            &cfg, variant, cpu_spec, gpu_spec, 256, Backend::Native,
+        );
+        let rounds = 1 + size % 4;
+        e.run_rounds(rounds).map_err(|e| e.to_string())?;
+        e.drain().map_err(|e| e.to_string())?;
+        // After the drain, the last round committed (the drain round has no
+        // GPU work, so it cannot conflict) and the replicas must agree.
+        let cpu = e.cpu.stmr().snapshot();
+        if cpu != e.device.stmr() {
+            let bad = (0..n).find(|&i| cpu[i] != e.device.stmr()[i]).unwrap();
+            return Err(format!(
+                "replicas diverge at word {bad} (policy {:?}, variant {:?}, \
+                 conflict {conflict}): cpu={} gpu={}",
+                cfg.policy, variant, cpu[bad], e.device.stmr()[bad]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_failed_rounds_leak_no_loser_state() {
+    forall(Cases::new("no_loser_leaks", 16).max_size(32), |rng, _size| {
+        let n = 1 << 12;
+        let mut cfg = base_cfg(n, rng.next_u64());
+        cfg.period_s = 0.002;
+        cfg.early_validation = rng.chance(0.5);
+        cfg.policy = PolicyKind::FavorCpu;
+        // Certain conflict: every CPU update writes into the GPU half.
+        let cpu_spec = SynthSpec::w1(n, 1.0)
+            .partitioned(0..n / 2)
+            .with_conflicts(1.0, n / 2..n);
+        let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+        let variant = if rng.chance(0.5) {
+            Variant::Optimized
+        } else {
+            Variant::Basic
+        };
+        let mut e = launch::build_synth_engine(
+            &cfg, variant, cpu_spec, gpu_spec, 256, Backend::Native,
+        );
+        e.run_rounds(2).map_err(|e| e.to_string())?;
+        if e.stats.rounds_committed != 0 {
+            return Err("conflict injection must abort every round".into());
+        }
+        if e.stats.gpu_commits != 0 {
+            return Err("discarded GPU commits leaked into stats".into());
+        }
+        if e.stats.discarded_commits == 0 {
+            return Err("wasted work not accounted".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prstm_committers_serialize_by_priority() {
+    forall(Cases::new("prstm_serializable", 60).max_size(128), |rng, size| {
+        let n = 256 + size * 4;
+        let b = 16 + size;
+        let (r, w) = (1 + rng.below_usize(4), 1 + rng.below_usize(4));
+        let mut batch = TxnBatch::empty(b, r, w);
+        let mut widx = Vec::new();
+        for i in 0..b {
+            for j in 0..r {
+                batch.read_idx[i * r + j] = if rng.chance(0.1) {
+                    -1
+                } else {
+                    rng.below_usize(n) as i32
+                };
+            }
+            rng.distinct(n, w, &mut widx);
+            for j in 0..w {
+                batch.write_idx[i * w + j] = widx[j] as i32;
+                batch.write_val[i * w + j] = rng.below(1000) as i32;
+            }
+            batch.op[i] = rng.below(2) as i32;
+        }
+        let mut stmr = vec![0i32; n];
+        let mut rs = Bitmap::new(n, 0);
+        let mut ws = Bitmap::new(n, 0);
+        let out = native::prstm_step(&mut stmr, &mut rs, &mut ws, &batch, 0);
+
+        // Committed write-sets must be pairwise disjoint.
+        let mut writer: std::collections::HashMap<i32, usize> = Default::default();
+        for i in 0..b {
+            if out.commit[i] == 0 {
+                continue;
+            }
+            for &a in &batch.write_idx[i * w..(i + 1) * w] {
+                if a >= 0 {
+                    if let Some(&j) = writer.get(&a) {
+                        return Err(format!("txns {j} and {i} both wrote {a}"));
+                    }
+                    writer.insert(a, i);
+                }
+            }
+        }
+        // A committer may read another committer's written word only if
+        // the writer serializes later (higher priority index).
+        for i in 0..b {
+            if out.commit[i] == 0 {
+                continue;
+            }
+            for &a in &batch.read_idx[i * r..(i + 1) * r] {
+                if a >= 0 {
+                    if let Some(&j) = writer.get(&a) {
+                        if j < i {
+                            return Err(format!(
+                                "committer {i} read word {a} written by earlier committer {j}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        // WS ⊆ RS on the bitmaps.
+        for (g, (&wbit, &rbit)) in ws.as_slice().iter().zip(rs.as_slice()).enumerate() {
+            if wbit != 0 && rbit == 0 {
+                return Err(format!("granule {g}: WS set but RS clear"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_validation_equals_ts_ordered_replay() {
+    forall(Cases::new("validation_replay", 60).max_size(128), |rng, size| {
+        let n = 128 + size;
+        let mut stmr = vec![0i32; n];
+        let mut ts_arr = vec![0i32; n];
+        let rs = Bitmap::new(n, 0);
+        // Several chunks with duplicate addresses and colliding timestamps.
+        let chunks = 1 + rng.below_usize(4);
+        let mut all: Vec<LogChunk> = Vec::new();
+        for _ in 0..chunks {
+            let c = 16 + rng.below_usize(48);
+            let mut chunk = LogChunk::empty(c);
+            for i in 0..c {
+                if rng.chance(0.85) {
+                    chunk.addrs[i] = rng.below_usize(n / 4) as i32; // dup-heavy
+                    chunk.vals[i] = rng.below(10_000) as i32;
+                    chunk.ts[i] = rng.below(30) as i32;
+                }
+            }
+            all.push(chunk);
+        }
+        // Oracle: max-(ts, global position) value per word.
+        let mut pos = 0i64;
+        let mut best: std::collections::HashMap<usize, (i32, i64, i32)> = Default::default();
+        for chunk in &all {
+            for i in 0..chunk.addrs.len() {
+                let a = chunk.addrs[i];
+                if a < 0 {
+                    continue;
+                }
+                let e = best.entry(a as usize).or_insert((i32::MIN, -1, 0));
+                if (chunk.ts[i], pos) >= (e.0, e.1) {
+                    *e = (chunk.ts[i], pos, chunk.vals[i]);
+                }
+                pos += 1;
+            }
+        }
+        for chunk in &all {
+            native::validate_step(&mut stmr, &mut ts_arr, &rs, chunk);
+        }
+        for (a, (_ts, _pos, v)) in &best {
+            if stmr[*a] != *v {
+                return Err(format!("word {a}: got {} want {v}", stmr[*a]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dispatcher_conserves_requests() {
+    forall(Cases::new("dispatcher_conserves", 60).max_size(256), |rng, size| {
+        let mut d: Dispatcher<u32> = Dispatcher::new();
+        d.gpu_steal_prob = if rng.chance(0.5) { 1.0 } else { 0.0 };
+        let n = size + 1;
+        for i in 0..n as u32 {
+            let aff = match rng.below(3) {
+                0 => Affinity::Cpu,
+                1 => Affinity::Gpu,
+                _ => Affinity::Shared,
+            };
+            d.submit(i, aff);
+        }
+        let mut seen = Vec::new();
+        let mut batch = Vec::new();
+        let mut rng2 = Rng::new(rng.next_u64());
+        loop {
+            let before = seen.len();
+            if rng2.chance(0.5) {
+                if let Some(x) = d.pop_cpu() {
+                    seen.push(x);
+                }
+            } else {
+                batch.clear();
+                d.pop_gpu_batch(1 + rng2.below_usize(8), &mut rng2, &mut batch);
+                seen.append(&mut batch);
+            }
+            let (c, g, s) = d.depths();
+            if c + g + s == 0 {
+                break;
+            }
+            if seen.len() == before {
+                // Whatever remains is only reachable through the CPU side
+                // (or the GPU side, under stealing): drain both.
+                while let Some(x) = d.pop_cpu() {
+                    seen.push(x);
+                }
+                batch.clear();
+                d.pop_gpu_batch(usize::MAX - 1, &mut rng2, &mut batch);
+                seen.append(&mut batch);
+            }
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        if seen.len() != n {
+            return Err(format!("lost/duplicated requests: {} of {n}", seen.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_log_chunks_reconstruct_entries() {
+    forall(Cases::new("roundlog_roundtrip", 60).max_size(300), |rng, size| {
+        let chunk_entries = 1 + rng.below_usize(16);
+        let mut log = RoundLog::with_chunk_entries(chunk_entries);
+        let n = size;
+        let entries: Vec<WriteEntry> = (0..n)
+            .map(|i| WriteEntry {
+                addr: rng.below(1000) as u32,
+                val: rng.below(1 << 20) as i32,
+                ts: i as i32 + 1,
+            })
+            .collect();
+        // Append in random-sized batches, draining full chunks sometimes.
+        let mut chunks = Vec::new();
+        let mut off = 0;
+        while off < n {
+            let k = 1 + rng.below_usize(8).min(n - off - 1 + 1);
+            log.append(&entries[off..(off + k).min(n)]);
+            off = (off + k).min(n);
+            if rng.chance(0.3) {
+                log.drain_full_chunks(&mut chunks);
+            }
+        }
+        log.drain_all(&mut chunks);
+        // Reconstruct.
+        let mut got = Vec::new();
+        for c in &chunks {
+            for i in 0..c.addrs.len() {
+                if c.addrs[i] >= 0 {
+                    got.push(WriteEntry {
+                        addr: c.addrs[i] as u32,
+                        val: c.vals[i],
+                        ts: c.ts[i],
+                    });
+                }
+            }
+        }
+        if got != entries {
+            return Err(format!(
+                "roundtrip mismatch: {} in, {} out (chunk={chunk_entries})",
+                entries.len(),
+                got.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solo_baselines_bound_shetm() {
+    // SHeTM on a clean partitioned workload must land between the best
+    // single device and the ideal sum (sanity bound used by Fig. 3).
+    forall(Cases::new("shetm_bounded", 6).max_size(8), |rng, _| {
+        let n = 1 << 13;
+        let mut cfg = base_cfg(n, rng.next_u64());
+        cfg.period_s = 0.004;
+        let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+        let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+        let mut e = launch::build_synth_engine(
+            &cfg,
+            Variant::Optimized,
+            cpu_spec,
+            gpu_spec,
+            256,
+            Backend::Native,
+        );
+        e.run_rounds(6).map_err(|e| e.to_string())?;
+        let thr = e.stats.throughput();
+        let cpu_rate = e.cpu.rate();
+        let gpu_rate = e.gpu.rate();
+        if thr < cpu_rate.max(gpu_rate) * 0.8 {
+            return Err(format!(
+                "SHeTM {thr:.0} below 0.8x best device {:.0}",
+                cpu_rate.max(gpu_rate)
+            ));
+        }
+        if thr > (cpu_rate + gpu_rate) * 1.05 {
+            return Err(format!(
+                "SHeTM {thr:.0} above ideal {:.0}",
+                cpu_rate + gpu_rate
+            ));
+        }
+        Ok(())
+    });
+}

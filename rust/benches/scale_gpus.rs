@@ -1,0 +1,108 @@
+//! Multi-GPU scaling — throughput and cross-shard behavior vs cluster size.
+//!
+//! Sweeps the cluster engine over N ∈ {1, 2, 4, 8} sharded devices on the
+//! W1-100% synthetic workload (CPU on the lower half, GPUs homed onto
+//! their shards of the upper half):
+//!
+//! * **clean scaling**: no cross-shard traffic — GPU-side throughput
+//!   should grow with N while the shared CPU contribution stays flat, and
+//!   the cross-shard abort rate stays 0;
+//! * **contended scaling**: `cluster.cross_shard_prob` of GPU update
+//!   transactions redirect one write into a random other shard — the
+//!   pairwise bitmap checks catch them, and the cross-shard abort rate
+//!   climbs with N (more pairs, more collisions), quantifying the
+//!   coherence cost that motivates hierarchical/batched detection.
+//!
+//! Reported per point: committed tx/s, round abort rate, cross-shard
+//! abort rate, refresh traffic, and the GPU-side per-phase breakdown
+//! (processing / validation / merge / blocked, summed over devices).
+//!
+//! `SHETM_BENCH_FAST=1` shortens the simulated horizon.
+
+mod common;
+
+use shetm::apps::synth::SynthSpec;
+use shetm::coordinator::round::Variant;
+use shetm::gpu::Backend;
+use shetm::launch;
+use shetm::util::bench::Table;
+
+struct Point {
+    throughput: f64,
+    abort_rate: f64,
+    cross_abort_rate: f64,
+    refresh_kib: f64,
+    proc_s: f64,
+    val_s: f64,
+    merge_s: f64,
+    blocked_s: f64,
+}
+
+fn run_cluster(n_gpus: usize, cross_shard_prob: f64, sim_s: f64) -> Point {
+    let mut cfg = common::base_config();
+    cfg.period_s = 0.008;
+    cfg.n_gpus = n_gpus;
+    cfg.cross_shard_prob = cross_shard_prob;
+    let n = cfg.n_words;
+    let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+    let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+    let mut e = launch::build_synth_cluster_engine(
+        &cfg,
+        Variant::Optimized,
+        cpu_spec,
+        gpu_spec,
+        1024,
+        Backend::Native,
+    );
+    e.run_for(sim_s).expect("cluster run");
+    let s = &e.stats;
+    let c = &e.cluster;
+    Point {
+        throughput: s.throughput(),
+        abort_rate: s.round_abort_rate(),
+        cross_abort_rate: c.cross_shard_abort_rate(s.rounds),
+        refresh_kib: c.refresh_bytes as f64 / 1024.0,
+        proc_s: s.gpu_phases.processing_s,
+        val_s: s.gpu_phases.validation_s,
+        merge_s: s.gpu_phases.merge_s,
+        blocked_s: s.gpu_phases.blocked_s,
+    }
+}
+
+fn sweep(title: &str, cross_shard_prob: f64, sim_s: f64) {
+    let t = Table::new(
+        title,
+        &[
+            "n_gpus",
+            "tx_per_s",
+            "abort_rate",
+            "xshard_abort",
+            "refresh_KiB",
+            "gpu_proc_s",
+            "gpu_val_s",
+            "gpu_merge_s",
+            "gpu_block_s",
+        ],
+    );
+    for n_gpus in [1usize, 2, 4, 8] {
+        let p = run_cluster(n_gpus, cross_shard_prob, sim_s);
+        t.row(&[
+            n_gpus as f64,
+            p.throughput,
+            p.abort_rate,
+            p.cross_abort_rate,
+            p.refresh_kib,
+            p.proc_s,
+            p.val_s,
+            p.merge_s,
+            p.blocked_s,
+        ]);
+    }
+}
+
+fn main() {
+    let sim_s = common::sim_time(0.25);
+    sweep("scale_gpus: clean (no cross-shard traffic)", 0.0, sim_s);
+    sweep("scale_gpus: 2% cross-shard writes", 0.02, sim_s);
+    sweep("scale_gpus: 10% cross-shard writes", 0.10, sim_s);
+}

@@ -21,6 +21,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::cluster::shard::ShardMap;
 use crate::coordinator::dispatch::{Affinity, Dispatcher};
 use crate::coordinator::round::{CpuDriver, CpuSlice, GpuDriver, GpuSlice};
 use crate::gpu::native::mc;
@@ -85,11 +86,15 @@ pub fn init_cache_words(words: &mut [i32], n_sets: usize) {
 
 /// Shared request world: generator + the three dispatch queues.
 pub struct McWorld {
-    /// The CPU_Q / GPU_Q / SHARED_Q dispatcher.
+    /// The CPU_Q / per-device GPU_Q / SHARED_Q dispatcher.
     pub dispatcher: Dispatcher<McRequest>,
     cfg: McConfig,
     rng: Rng,
     zipf: Zipf,
+    /// Cluster sharding: GPU-bound arrivals route to the device owning
+    /// the request's cache set (shard-aware batch generation). `None` (or
+    /// a one-shard map) is the single-device behavior, unchanged.
+    shard: Option<ShardMap>,
     /// GETs answered with a value (hit) — liveness diagnostics.
     pub get_hits: u64,
     /// Requests generated so far.
@@ -99,14 +104,36 @@ pub struct McWorld {
 impl McWorld {
     /// New world; `gpu_steal` enables GPU work stealing from CPU_Q.
     pub fn new(cfg: McConfig, seed: u64, gpu_steal: bool) -> Arc<Mutex<Self>> {
+        Self::build(cfg, seed, gpu_steal, None)
+    }
+
+    /// New world over a sharded cluster: one GPU queue per device, and
+    /// GPU-bound arrivals route by set ownership.
+    pub fn new_sharded(
+        cfg: McConfig,
+        seed: u64,
+        gpu_steal: bool,
+        map: ShardMap,
+    ) -> Arc<Mutex<Self>> {
+        Self::build(cfg, seed, gpu_steal, Some(map))
+    }
+
+    fn build(
+        cfg: McConfig,
+        seed: u64,
+        gpu_steal: bool,
+        shard: Option<ShardMap>,
+    ) -> Arc<Mutex<Self>> {
         let zipf = Zipf::new(cfg.key_space, cfg.zipf_alpha);
-        let mut dispatcher = Dispatcher::new();
+        let n_queues = shard.as_ref().map(|m| m.n_shards()).unwrap_or(1);
+        let mut dispatcher = Dispatcher::with_gpu_queues(n_queues);
         dispatcher.gpu_steal_prob = if gpu_steal { 1.0 } else { 0.0 };
         Arc::new(Mutex::new(McWorld {
             dispatcher,
             cfg,
             rng: Rng::new(seed),
             zipf,
+            shard,
             get_hits: 0,
             generated: 0,
         }))
@@ -130,7 +157,17 @@ impl McWorld {
             if aff == Affinity::Gpu && self.rng.chance(self.cfg.steal_shift) {
                 aff = Affinity::Cpu;
             }
-            self.dispatcher.submit(McRequest { op, key, val }, aff);
+            let req = McRequest { op, key, val };
+            match (&self.shard, aff) {
+                (Some(map), Affinity::Gpu) => {
+                    // Shard-aware routing: the device owning the request's
+                    // set serves it (its replica is authoritative there).
+                    let set = mc::hash(key, self.cfg.n_sets);
+                    let dev = map.owner(set * mc::WORDS_PER_SET);
+                    self.dispatcher.submit_gpu(req, dev);
+                }
+                _ => self.dispatcher.submit(req, aff),
+            }
             self.generated += 1;
         }
     }
@@ -144,11 +181,11 @@ impl McWorld {
         }
     }
 
-    fn pop_gpu(&mut self, n: usize, out: &mut Vec<McRequest>) {
+    fn pop_gpu(&mut self, dev: usize, n: usize, out: &mut Vec<McRequest>) {
         let mut rng = self.rng.fork();
         loop {
-            // `pop_gpu_batch` fills `out` up to a TOTAL of `n` entries.
-            self.dispatcher.pop_gpu_batch(n, &mut rng, out);
+            // `pop_gpu_batch_on` fills `out` up to a TOTAL of `n` entries.
+            self.dispatcher.pop_gpu_batch_on(dev, n, &mut rng, out);
             if out.len() >= n {
                 return;
             }
@@ -324,6 +361,9 @@ pub struct McGpu {
     pub kernel_latency_s: f64,
     /// Per-request device time (virtual seconds).
     pub txn_s: f64,
+    /// Which cluster device this driver feeds (0 in the single-device
+    /// system; selects the dispatcher GPU queue to pull from).
+    pub dev: usize,
     clk0: i32,
     retry: Vec<McRequest>,
     round_committed: Vec<McRequest>,
@@ -346,11 +386,18 @@ impl McGpu {
             batch,
             kernel_latency_s,
             txn_s,
+            dev: 0,
             clk0: 1,
             retry: Vec::new(),
             round_committed: Vec::new(),
             budget_carry: 0.0,
         }
+    }
+
+    /// Bind this driver to cluster device `dev` (queue selection).
+    pub fn on_device(mut self, dev: usize) -> Self {
+        self.dev = dev;
+        self
     }
 
     /// Device seconds one kernel activation costs.
@@ -383,7 +430,7 @@ impl GpuDriver for McGpu {
                 self.world
                     .lock()
                     .unwrap()
-                    .pop_gpu(self.batch, &mut reqs);
+                    .pop_gpu(self.dev, self.batch, &mut reqs);
             }
             let mut b = McBatch::empty(self.batch);
             for (i, r) in reqs.iter().enumerate() {
@@ -525,6 +572,25 @@ mod tests {
         let (c, g, s) = world.lock().unwrap().dispatcher.depths();
         assert_eq!(g, 0, "all GPU-bound arrivals shifted to CPU_Q");
         assert!(c > 9_000);
+        assert_eq!(s, 0);
+    }
+
+    #[test]
+    fn sharded_world_routes_gpu_arrivals_to_owner_queues() {
+        let cfg = McConfig::new(256);
+        let map = ShardMap::new(cfg.n_words(), 2, 7); // 128-word blocks
+        let world = McWorld::new_sharded(cfg, 7, false, map);
+        world.lock().unwrap().generate(5_000);
+        let w = world.lock().unwrap();
+        assert_eq!(w.dispatcher.n_gpu_queues(), 2);
+        assert!(
+            w.dispatcher.depth_gpu(0) > 0 && w.dispatcher.depth_gpu(1) > 0,
+            "both owner queues fed: {} / {}",
+            w.dispatcher.depth_gpu(0),
+            w.dispatcher.depth_gpu(1)
+        );
+        let (c, g, s) = w.dispatcher.depths();
+        assert!(c > 0 && g > 0);
         assert_eq!(s, 0);
     }
 

@@ -1,0 +1,815 @@
+//! The multi-device synchronization-round engine.
+//!
+//! [`ClusterEngine`] generalizes [`RoundEngine`] from one simulated
+//! accelerator to `N` devices over a sharded STMR:
+//!
+//! * one CPU side, unchanged: a single guest TM, one commit clock, one
+//!   write-entry stream — scattered per-shard by the [`LogRouter`];
+//! * per-device round pipelines: each device has its own H2D/D2H
+//!   [`BusTimeline`] pair, its own virtual-time cursor, and validates only
+//!   the CPU chunks routed to the words it owns, reusing the exact
+//!   validation/merge machinery of the single-device engine
+//!   ([`GpuDevice::validate_chunk`], shadow rollback, coarse-granule DtH);
+//! * cross-shard conflict detection, hierarchical and batched (the
+//!   Hechtman & Sorin cost lesson: never per-access): per-pair granule
+//!   bitmap intersections first, escalating to a word-level scan only on a
+//!   hit — CPU-written granules vs every non-owner device's read-set, and
+//!   device write-sets vs every other device's read/write-sets;
+//! * delta-coherence refresh: each device tracks which granules OTHER
+//!   actors dirtied since it last saw them and pulls just those (coalesced
+//!   at the 16 KB merge granule) from the post-merge CPU truth at round
+//!   start — batched traffic instead of per-access coherence.
+//!
+//! **`n_gpus = 1` invariant**: with a [`ShardMap::solo`] map every
+//! cluster-only mechanism is provably a no-op (no pairs, empty stale maps,
+//! identity routing) and the remaining arithmetic is the same sequence of
+//! operations as `RoundEngine::run_round`, so final state and [`RunStats`]
+//! are bit-identical on the same seed — asserted by
+//! `rust/tests/cluster_equivalence.rs`.
+//!
+//! MAINTENANCE: `run_round` deliberately *mirrors* (rather than replaces)
+//! `RoundEngine::run_round` — the untouched single-device engine is the
+//! independent oracle that gives the equivalence test its teeth. A change
+//! to either round state machine must be mirrored in the other; the
+//! equivalence suite fails loudly when the mirror drifts.
+//!
+//! [`RoundEngine`]: crate::coordinator::round::RoundEngine
+
+use anyhow::Result;
+
+use super::router::LogRouter;
+use super::shard::ShardMap;
+use super::stats::ClusterStats;
+use crate::bus::BusTimeline;
+use crate::coordinator::policy::{Loser, Policy};
+use crate::coordinator::round::{CostModel, CpuDriver, EngineConfig, GpuDriver, Variant};
+use crate::coordinator::stats::{RoundStats, RunStats};
+use crate::gpu::{Bitmap, GpuDevice, LogChunk};
+use crate::stm::WriteEntry;
+
+/// The sharded SHeTM cluster engine.
+pub struct ClusterEngine<C: CpuDriver, G: GpuDriver> {
+    /// Engine configuration (variant, period, policy, ...), shared by all
+    /// per-device pipelines.
+    pub cfg: EngineConfig,
+    /// Cost model used to advance virtual time (same for every device).
+    pub cost: CostModel,
+    /// Word-range → device ownership.
+    pub map: ShardMap,
+    /// The simulated accelerators, indexed by shard id.
+    pub devices: Vec<GpuDevice>,
+    /// The (single) CPU-side driver.
+    pub cpu: C,
+    /// Per-device GPU drivers, indexed by shard id.
+    pub gpus: Vec<G>,
+    /// Aggregate statistics, single-device-compatible (totals across
+    /// devices; bit-identical to `RoundEngine` at `n_gpus = 1`).
+    pub stats: RunStats,
+    /// Cluster-only statistics (per-device + cross-shard accounting).
+    pub cluster: ClusterStats,
+    /// Per-round statistics (most recent rounds, ring-limited).
+    pub round_log: Vec<RoundStats>,
+
+    policy: Policy,
+    h2d: Vec<BusTimeline>,
+    d2h: Vec<BusTimeline>,
+    /// Virtual time of the current round's start.
+    t: f64,
+    /// When the CPU may resume processing (merge install blocks it).
+    cpu_avail: f64,
+    router: LogRouter,
+    carry: Vec<WriteEntry>,
+    scratch: Vec<WriteEntry>,
+    /// Every entry routed this round (cross-shard merge reconciliation).
+    round_entries: Vec<WriteEntry>,
+    /// Per-device map of granules dirtied elsewhere since the device last
+    /// saw them (drives the round-start delta refresh).
+    stale: Vec<Bitmap>,
+    /// Per-shard bitmaps of this round's routed CPU writes (cross-shard
+    /// probe operands; rebuilt each round).
+    cpu_ws: Vec<Bitmap>,
+}
+
+impl<C: CpuDriver, G: GpuDriver> ClusterEngine<C, G> {
+    /// Assemble a cluster engine; every device's replica must cover the
+    /// same STMR as the CPU driver's, and `devices`/`gpus` are indexed by
+    /// shard id of `map`.
+    pub fn new(
+        cfg: EngineConfig,
+        cost: CostModel,
+        map: ShardMap,
+        devices: Vec<GpuDevice>,
+        cpu: C,
+        gpus: Vec<G>,
+    ) -> Self {
+        assert!(!devices.is_empty(), "need at least one device");
+        assert_eq!(devices.len(), map.n_shards(), "one device per shard");
+        assert_eq!(gpus.len(), map.n_shards(), "one GPU driver per shard");
+        assert_eq!(
+            map.n_words(),
+            cpu.stmr().len(),
+            "shard map must cover the CPU STMR"
+        );
+        for d in &devices {
+            assert_eq!(
+                d.n_words(),
+                cpu.stmr().len(),
+                "CPU and device replicas must cover the same STMR"
+            );
+        }
+        let n = devices.len();
+        let bmp_shift = devices[0].rs_bmp().shift();
+        let policy = Policy::new(cfg.policy, cfg.starvation_limit);
+        let router = LogRouter::new(map.clone(), cfg.chunk_entries);
+        ClusterEngine {
+            cfg,
+            cost,
+            devices,
+            cpu,
+            gpus,
+            stats: RunStats::default(),
+            cluster: ClusterStats::new(n),
+            round_log: Vec::new(),
+            policy,
+            h2d: (0..n).map(|_| BusTimeline::new()).collect(),
+            d2h: (0..n).map(|_| BusTimeline::new()).collect(),
+            t: 0.0,
+            cpu_avail: 0.0,
+            router,
+            carry: Vec::new(),
+            scratch: Vec::new(),
+            round_entries: Vec::new(),
+            stale: (0..n).map(|_| Bitmap::new(map.n_words(), bmp_shift)).collect(),
+            cpu_ws: (0..n).map(|_| Bitmap::new(map.n_words(), bmp_shift)).collect(),
+            map,
+        }
+    }
+
+    /// Number of devices in the cluster.
+    pub fn n_gpus(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.t
+    }
+
+    /// Copy the CPU STMR into every device replica (initial alignment —
+    /// all replicas must start from one consistent snapshot, §IV-C.1).
+    pub fn align_replicas(&mut self) {
+        let snap = self.cpu.stmr().snapshot();
+        for d in &mut self.devices {
+            d.stmr_mut().copy_from_slice(&snap);
+        }
+    }
+
+    /// Run `n` synchronization rounds.
+    pub fn run_rounds(&mut self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            self.run_round()?;
+        }
+        Ok(())
+    }
+
+    /// Run rounds until at least `dur_s` of virtual time has elapsed.
+    pub fn run_for(&mut self, dur_s: f64) -> Result<()> {
+        let end = self.t + dur_s;
+        while self.t < end {
+            self.run_round()?;
+        }
+        Ok(())
+    }
+
+    /// Quiesce: one zero-length round so carried commits ship and apply
+    /// (see `RoundEngine::drain`).
+    pub fn drain(&mut self) -> Result<()> {
+        let saved = self.cfg.clone();
+        self.cfg.period_s = 0.0;
+        self.cfg.early_validation = false;
+        let r = self.run_round();
+        self.cfg = saved;
+        r
+    }
+
+    /// Execute one synchronization round across all devices.
+    pub fn run_round(&mut self) -> Result<()> {
+        let optimized = self.cfg.variant == Variant::Optimized;
+        let n_dev = self.devices.len();
+        let t0 = self.t;
+        let mut rs = RoundStats {
+            t_start: t0,
+            ..Default::default()
+        };
+        let n_bytes = (self.map.n_words() * 4) as u64;
+        let granule_words = (crate::bus::chunking::MERGE_GRANULE_BYTES / 4) as usize;
+
+        self.cpu.set_read_only(self.policy.cpu_read_only());
+        if self.policy.conditional_apply() {
+            // favor-GPU needs a CPU snapshot to roll back to (fork/COW).
+            self.cpu.snapshot();
+        }
+
+        // --- Execution phase --------------------------------------------
+        let mut gpu_cursor = vec![t0; n_dev];
+        for d in 0..n_dev {
+            // Delta-coherence refresh (empty at n_gpus = 1): pull granules
+            // other actors dirtied, coalesced at the merge granule, from
+            // the post-merge CPU truth, over this device's own H2D channel.
+            let ranges = self.stale[d].dirty_word_ranges_coarse(granule_words);
+            let mut refresh_end = t0;
+            for &(s, e) in &ranges {
+                let bytes = ((e - s) * 4) as u64;
+                let dur = self.cost.bus_h2d.transfer_secs(bytes);
+                let (_, end) = self.h2d[d].schedule(t0, dur);
+                refresh_end = end;
+                let fresh: Vec<i32> = (s..e).map(|w| self.cpu.stmr().load(w)).collect();
+                self.devices[d].stmr_mut()[s..e].copy_from_slice(&fresh);
+                self.cluster.refresh_bytes += bytes;
+                self.cluster.refresh_transfers += 1;
+                self.cluster.per_device[d].refresh_bytes += bytes;
+                self.cluster.per_device[d].refresh_transfers += 1;
+            }
+            self.stale[d].clear();
+
+            // Shadow snapshot AFTER the refresh so rollback keeps it.
+            self.devices[d].begin_round();
+            rs.gpu_phases.merge_s += refresh_end - t0;
+            self.cluster.per_device[d].phases.merge_s += refresh_end - t0;
+            gpu_cursor[d] = refresh_end;
+            if optimized {
+                // Shadow copy (DtD) before the device may process (§IV-D).
+                let dtd = n_bytes as f64 / self.cost.gpu_dtd_bytes_per_s;
+                gpu_cursor[d] += dtd;
+                rs.gpu_phases.merge_s += dtd;
+                self.cluster.per_device[d].phases.merge_s += dtd;
+            }
+        }
+        let exec_end_target = t0 + self.cfg.period_s;
+
+        let mut chunks: Vec<Vec<LogChunk>> = vec![Vec::new(); n_dev];
+        let mut arrivals: Vec<Vec<f64>> = vec![Vec::new(); n_dev];
+        let mut early_abort = false;
+
+        let mut cpu_cursor = self.cpu_avail.max(t0);
+        rs.cpu_phases.blocked_s += cpu_cursor - t0;
+        let segments = if optimized && self.cfg.early_validation {
+            self.cfg.early_points + 1
+        } else {
+            1
+        };
+        let seg_dur = (exec_end_target - cpu_cursor).max(0.0) / segments as f64;
+
+        for s in 0..segments {
+            // CPU slice (real transactions through the guest TM), routed
+            // to owner shards as it is logged.
+            self.scratch.clear();
+            let cs = self.cpu.run(seg_dur, &mut self.scratch);
+            self.router.append(&self.scratch);
+            if n_dev > 1 {
+                // Kept for cross-shard merge reconciliation; never read
+                // (so never copied) on the single-device path.
+                self.round_entries.extend_from_slice(&self.scratch);
+            }
+            rs.cpu_commits += cs.commits;
+            rs.cpu_attempts += cs.attempts;
+            rs.cpu_phases.processing_s += seg_dur;
+            cpu_cursor += seg_dur;
+
+            // Per-device GPU slices covering the same virtual span.
+            for d in 0..n_dev {
+                let budget = (cpu_cursor - gpu_cursor[d]).max(0.0);
+                let gs = self.gpus[d].run(&mut self.devices[d], budget)?;
+                rs.gpu_commits += gs.commits;
+                rs.gpu_attempts += gs.attempts;
+                rs.gpu_batches += gs.batches;
+                rs.gpu_phases.processing_s += gs.busy_s;
+                rs.gpu_phases.blocked_s += (budget - gs.busy_s).max(0.0);
+                gpu_cursor[d] = cpu_cursor;
+                let dev = &mut self.cluster.per_device[d];
+                dev.commits += gs.commits;
+                dev.attempts += gs.attempts;
+                dev.batches += gs.batches;
+                dev.phases.processing_s += gs.busy_s;
+                dev.phases.blocked_s += (budget - gs.busy_s).max(0.0);
+
+                // Non-blocking log streaming (§IV-D): ship this shard's
+                // full chunks now, on its own bus channel.
+                if optimized {
+                    let n0 = chunks[d].len();
+                    self.router.drain_full_chunks(d, &mut chunks[d]);
+                    for c in &chunks[d][n0..] {
+                        let dur = self.cost.bus_h2d.transfer_secs(c.wire_bytes());
+                        let (_, end) = self.h2d[d].schedule(cpu_cursor, dur);
+                        arrivals[d].push(end);
+                    }
+                }
+            }
+
+            // Early validation between segments (§IV-D), per device.
+            if optimized && self.cfg.early_validation && s + 1 < segments {
+                let mut conf = 0u32;
+                for d in 0..n_dev {
+                    let arrived = arrivals[d].iter().filter(|&&a| a <= cpu_cursor).count();
+                    for c in chunks[d].iter().take(arrived) {
+                        conf += self.devices[d].early_validate_chunk(c);
+                    }
+                    let cost = arrived as f64
+                        * self.cfg.chunk_entries as f64
+                        * self.cost.gpu_validate_entry_s;
+                    gpu_cursor[d] += cost;
+                    rs.gpu_phases.validation_s += cost;
+                    self.cluster.per_device[d].phases.validation_s += cost;
+                }
+                if conf > 0 {
+                    early_abort = true;
+                    rs.early_aborted = true;
+                    break;
+                }
+            }
+        }
+        let _ = early_abort;
+
+        // Drain the remaining (tail) chunks of every shard.
+        for d in 0..n_dev {
+            let n0 = chunks[d].len();
+            self.router.drain_all(d, &mut chunks[d]);
+            for c in &chunks[d][n0..] {
+                let dur = self.cost.bus_h2d.transfer_secs(c.wire_bytes());
+                let (_, end) = self.h2d[d].schedule(cpu_cursor, dur);
+                arrivals[d].push(end);
+                if !optimized {
+                    // Basic: the CPU is blocked while shipping its logs.
+                    rs.cpu_phases.validation_s += dur;
+                }
+            }
+        }
+
+        // --- Validation phase: own shard -----------------------------------
+        let conditional = self.policy.conditional_apply();
+        let mut own_conflicts = 0u64;
+        let chunk_cost = self.cfg.chunk_entries as f64 * self.cost.gpu_validate_entry_s;
+        for d in 0..n_dev {
+            let mut dev_conf = 0u64;
+            for (c, &arr) in chunks[d].iter().zip(&arrivals[d]) {
+                let start = arr.max(gpu_cursor[d]);
+                rs.gpu_phases.blocked_s += start - gpu_cursor[d];
+                self.cluster.per_device[d].phases.blocked_s += start - gpu_cursor[d];
+                dev_conf += if conditional {
+                    // favor-GPU: check without applying (§IV-E).
+                    u64::from(self.devices[d].early_validate_chunk(c))
+                } else {
+                    u64::from(self.devices[d].validate_chunk(c)?)
+                };
+                gpu_cursor[d] = start + chunk_cost;
+                rs.gpu_phases.validation_s += chunk_cost;
+                self.cluster.per_device[d].phases.validation_s += chunk_cost;
+            }
+            self.cluster.per_device[d].chunks += chunks[d].len() as u64;
+            self.cluster.per_device[d].conflict_entries += dev_conf;
+            own_conflicts += dev_conf;
+        }
+        rs.chunks = chunks.iter().map(|c| c.len() as u64).sum();
+
+        // --- Validation phase: cross-shard ---------------------------------
+        // Hierarchical and batched (never per-access): granule bitmap
+        // probes first, word-level scans only on a hit — exactly the
+        // existing scheme's escalation, applied pairwise.
+        let mut cross_conflicts = 0u64;
+        if n_dev > 1 {
+            for b in &mut self.cpu_ws {
+                b.clear();
+            }
+            for (o, shard_chunks) in chunks.iter().enumerate() {
+                for c in shard_chunks {
+                    for &a in &c.addrs {
+                        if a >= 0 {
+                            self.cpu_ws[o].mark_word(a as usize);
+                        }
+                    }
+                }
+            }
+            // CPU writes applied on shard `o` vs every other device's
+            // read-set (a cross-shard GPU read of a CPU-written word).
+            for o in 0..n_dev {
+                if chunks[o].is_empty() {
+                    continue;
+                }
+                for d in 0..n_dev {
+                    if d == o {
+                        continue;
+                    }
+                    self.cluster.cross_checks += 1;
+                    let probe =
+                        self.cpu_ws[o].len() as f64 * self.cost.gpu_validate_entry_s;
+                    gpu_cursor[d] += probe;
+                    rs.gpu_phases.validation_s += probe;
+                    self.cluster.per_device[d].phases.validation_s += probe;
+                    if self.cpu_ws[o].intersects(self.devices[d].rs_bmp()) {
+                        self.cluster.cross_escalations += 1;
+                        let mut n_conf = 0u64;
+                        for c in &chunks[o] {
+                            n_conf += u64::from(self.devices[d].early_validate_chunk(c));
+                        }
+                        let cost = chunks[o].len() as f64 * chunk_cost;
+                        gpu_cursor[d] += cost;
+                        rs.gpu_phases.validation_s += cost;
+                        self.cluster.per_device[d].phases.validation_s += cost;
+                        cross_conflicts += n_conf;
+                    }
+                }
+            }
+            // Device write-sets vs every other device's read/write-sets
+            // (cross-shard transactions touching another shard's words).
+            for i in 0..n_dev {
+                for j in (i + 1)..n_dev {
+                    self.cluster.cross_checks += 1;
+                    let probe =
+                        self.devices[i].ws_bmp().len() as f64 * self.cost.gpu_validate_entry_s;
+                    gpu_cursor[i] += probe;
+                    gpu_cursor[j] += probe;
+                    rs.gpu_phases.validation_s += 2.0 * probe;
+                    self.cluster.per_device[i].phases.validation_s += probe;
+                    self.cluster.per_device[j].phases.validation_s += probe;
+                    let wr = self.devices[i].ws_bmp().intersect_count(self.devices[j].rs_bmp())
+                        + self.devices[j].ws_bmp().intersect_count(self.devices[i].rs_bmp());
+                    let ww =
+                        self.devices[i].ws_bmp().intersect_count(self.devices[j].ws_bmp());
+                    if wr + ww > 0 {
+                        self.cluster.cross_escalations += 1;
+                        cross_conflicts += (wr + ww) as u64;
+                        // Escalation tier: the word-level exchange rescans
+                        // both devices' bitmaps — charge it, like the
+                        // CPU-vs-device escalation above.
+                        gpu_cursor[i] += probe;
+                        gpu_cursor[j] += probe;
+                        rs.gpu_phases.validation_s += 2.0 * probe;
+                        self.cluster.per_device[i].phases.validation_s += probe;
+                        self.cluster.per_device[j].phases.validation_s += probe;
+                    }
+                }
+            }
+            self.cluster.cross_conflict_entries += cross_conflicts;
+        }
+
+        let conflicts = own_conflicts + cross_conflicts;
+        rs.conflict_entries = conflicts;
+        if own_conflicts == 0 && cross_conflicts > 0 {
+            self.cluster.rounds_aborted_cross_shard += 1;
+        }
+        let tv = gpu_cursor.iter().copied().fold(t0, f64::max);
+
+        // Non-blocking CPU (§IV-D): keep processing during validation;
+        // commits logged for the NEXT round (same rules as RoundEngine).
+        if optimized && tv > cpu_cursor && self.cfg.period_s > 0.0 && !conditional {
+            let bonus = tv - cpu_cursor;
+            self.scratch.clear();
+            let cs = self.cpu.run(bonus, &mut self.scratch);
+            self.carry.extend_from_slice(&self.scratch);
+            rs.cpu_commits += cs.commits;
+            rs.cpu_attempts += cs.attempts;
+            rs.cpu_phases.processing_s += bonus;
+            cpu_cursor = tv;
+        } else if tv > cpu_cursor {
+            rs.cpu_phases.blocked_s += tv - cpu_cursor;
+            cpu_cursor = tv;
+        }
+
+        // --- Merge phase ---------------------------------------------------
+        let ok = conflicts == 0;
+        rs.committed = ok;
+        let round_end;
+        if ok {
+            if conditional {
+                // favor-GPU deferred apply, per owner shard.
+                for d in 0..n_dev {
+                    for c in &chunks[d] {
+                        self.devices[d].validate_chunk(c)?;
+                    }
+                    let cost = chunks[d].len() as f64 * chunk_cost;
+                    gpu_cursor[d] += cost;
+                    rs.gpu_phases.merge_s += cost;
+                    self.cluster.per_device[d].phases.merge_s += cost;
+                }
+            }
+            // Per-device DtH install of the GPU write-sets. The DMA cost
+            // keeps the paper's 16 KB coalesced granularity on every
+            // device's own channel. Data granularity differs by cluster
+            // size: a lone device's replica agrees with the CPU everywhere
+            // it did not write (all chunks applied locally), so coarse
+            // ranges copy only agreeing bytes — the RoundEngine merge.
+            // With n > 1 a replica is only authoritative for what it
+            // wrote, so values install at exact dirty granularity.
+            let mut dth_end_max = cpu_cursor;
+            for d in 0..n_dev {
+                let coarse = self.devices[d].ws_bmp().dirty_word_ranges_coarse(granule_words);
+                let mut dth_end = gpu_cursor[d];
+                for &(s, e) in &coarse {
+                    let bytes = ((e - s) * 4) as u64;
+                    let dur = self.cost.bus_d2h.transfer_secs(bytes);
+                    let (_, end) = self.d2h[d].schedule(gpu_cursor[d], dur);
+                    dth_end = end;
+                }
+                if n_dev == 1 {
+                    for &(s, e) in &coarse {
+                        let data = &self.devices[d].stmr()[s..e];
+                        self.cpu.stmr().install_range(s, data);
+                    }
+                } else {
+                    let exact = self.devices[d].ws_bmp().dirty_word_ranges();
+                    for &(s, e) in &exact {
+                        let data = &self.devices[d].stmr()[s..e];
+                        self.cpu.stmr().install_range(s, data);
+                    }
+                }
+                dth_end_max = dth_end_max.max(dth_end);
+            }
+            if n_dev > 1 {
+                // Cross-shard reconciliation: a device replica is stale for
+                // CPU writes routed to OTHER owners, so after the installs
+                // the CPU's committed values re-win their words (CPU
+                // commits serialize after the GPUs', like the carry).
+                for e in &self.round_entries {
+                    self.cpu.stmr().store(e.addr as usize, e.val);
+                }
+            }
+            // Carry-window CPU commits re-win their words locally: they
+            // serialize AFTER this round's GPU transactions.
+            for e in &self.carry {
+                self.cpu.stmr().store(e.addr as usize, e.val);
+            }
+            if optimized {
+                // Devices resume immediately; the CPU waits for the last
+                // install to land.
+                rs.cpu_phases.merge_s += dth_end_max - cpu_cursor;
+                self.cpu_avail = dth_end_max;
+                round_end = gpu_cursor.iter().copied().fold(t0, f64::max);
+            } else {
+                // Basic: everyone blocked until the transfers complete.
+                rs.cpu_phases.merge_s += dth_end_max - cpu_cursor;
+                for d in 0..n_dev {
+                    rs.gpu_phases.merge_s += dth_end_max - gpu_cursor[d];
+                    self.cluster.per_device[d].phases.merge_s += dth_end_max - gpu_cursor[d];
+                }
+                self.cpu_avail = dth_end_max;
+                round_end = dth_end_max;
+            }
+        } else {
+            rs.discarded_commits = match self.policy.loser() {
+                Loser::Gpu => {
+                    let discarded = rs.gpu_commits;
+                    rs.gpu_commits = 0;
+                    if optimized {
+                        // Shadow + per-shard CPU-log replay (§IV-D).
+                        for d in 0..n_dev {
+                            self.devices[d].rollback_with_logs(&chunks[d]);
+                            let cost = chunks[d].len() as f64 * chunk_cost;
+                            gpu_cursor[d] += cost;
+                            rs.gpu_phases.merge_s += cost;
+                            self.cluster.per_device[d].phases.merge_s += cost;
+                        }
+                        round_end = gpu_cursor.iter().copied().fold(t0, f64::max);
+                        self.cpu_avail = cpu_cursor;
+                    } else {
+                        // Basic: re-copy every GPU-dirty region from the
+                        // CPU truth, per device over its own channel.
+                        let mut h2d_end_max = cpu_cursor;
+                        for d in 0..n_dev {
+                            let ranges =
+                                self.devices[d].ws_bmp().dirty_word_ranges_coarse(granule_words);
+                            let mut h2d_end = gpu_cursor[d];
+                            for &(s, e) in &ranges {
+                                let bytes = ((e - s) * 4) as u64;
+                                let dur = self.cost.bus_h2d.transfer_secs(bytes);
+                                let (_, end) = self.h2d[d].schedule(gpu_cursor[d], dur);
+                                h2d_end = end;
+                                for w in s..e {
+                                    let v = self.cpu.stmr().load(w);
+                                    self.devices[d].stmr_mut()[w] = v;
+                                }
+                            }
+                            rs.gpu_phases.merge_s += h2d_end - gpu_cursor[d];
+                            self.cluster.per_device[d].phases.merge_s += h2d_end - gpu_cursor[d];
+                            h2d_end_max = h2d_end_max.max(h2d_end);
+                        }
+                        rs.cpu_phases.blocked_s += h2d_end_max - cpu_cursor;
+                        self.cpu_avail = h2d_end_max;
+                        round_end = h2d_end_max;
+                    }
+                    discarded
+                }
+                Loser::Cpu => {
+                    // favor-GPU: roll the CPU back to its round-start
+                    // snapshot, then install every device's dirty regions.
+                    // Inter-GPU write/write overlaps (possible only with
+                    // cross-shard traffic) arbitrate deterministically by
+                    // device order on install; every loser device is marked
+                    // stale there and converges to the CPU truth at its
+                    // next refresh.
+                    let discarded = rs.cpu_commits;
+                    self.cpu.rollback();
+                    self.carry.clear();
+                    self.router.truncate_to_carried();
+                    let snap_cost = n_bytes as f64 / self.cost.cpu_snapshot_bytes_per_s;
+                    let mut dth_end_max = cpu_cursor;
+                    for d in 0..n_dev {
+                        let coarse =
+                            self.devices[d].ws_bmp().dirty_word_ranges_coarse(granule_words);
+                        let mut dth_end = gpu_cursor[d] + snap_cost;
+                        for &(s, e) in &coarse {
+                            let bytes = ((e - s) * 4) as u64;
+                            let dur = self.cost.bus_d2h.transfer_secs(bytes);
+                            let (_, end) = self.d2h[d].schedule(dth_end, dur);
+                            dth_end = end;
+                        }
+                        if n_dev == 1 {
+                            for &(s, e) in &coarse {
+                                let data = &self.devices[d].stmr()[s..e];
+                                self.cpu.stmr().install_range(s, data);
+                            }
+                        } else {
+                            let exact = self.devices[d].ws_bmp().dirty_word_ranges();
+                            for &(s, e) in &exact {
+                                let data = &self.devices[d].stmr()[s..e];
+                                self.cpu.stmr().install_range(s, data);
+                            }
+                        }
+                        dth_end_max = dth_end_max.max(dth_end);
+                    }
+                    rs.cpu_commits = 0;
+                    rs.cpu_phases.merge_s += dth_end_max - cpu_cursor;
+                    self.cpu_avail = dth_end_max;
+                    round_end = gpu_cursor.iter().copied().fold(t0, f64::max);
+                    discarded
+                }
+            };
+        }
+
+        // --- Round wrap-up -------------------------------------------------
+        let cpu_lost = !ok && self.policy.loser() == Loser::Cpu;
+        self.policy.on_round(ok);
+        for d in 0..n_dev {
+            self.gpus[d].on_round_end(ok);
+        }
+
+        // Delta-coherence bookkeeping: record what each device must pull
+        // from the CPU truth before its next round. No-op at n_gpus = 1.
+        if n_dev > 1 {
+            if ok || cpu_lost {
+                // Surviving device writes: every OTHER device is stale.
+                for d in 0..n_dev {
+                    let exact = self.devices[d].ws_bmp().dirty_word_ranges();
+                    for &(s, e) in &exact {
+                        for o in 0..n_dev {
+                            if o == d {
+                                continue;
+                            }
+                            let shift = self.stale[o].shift();
+                            for g in (s >> shift)..=((e - 1) >> shift) {
+                                self.stale[o].mark_granule(g);
+                            }
+                        }
+                    }
+                }
+            }
+            if !cpu_lost {
+                // CPU writes applied on their owner: non-owners are stale.
+                for e in &self.round_entries {
+                    let owner = self.map.owner(e.addr as usize);
+                    for d in 0..n_dev {
+                        if d != owner {
+                            self.stale[d].mark_word(e.addr as usize);
+                        }
+                    }
+                }
+                // Carry values land on the CPU only; every device is stale
+                // until the carry re-ships through next round's validation.
+                for e in &self.carry {
+                    for bmp in &mut self.stale {
+                        bmp.mark_word(e.addr as usize);
+                    }
+                }
+            }
+        }
+
+        if !cpu_lost {
+            self.router.reset_with_carry(&self.carry);
+        }
+        self.carry.clear();
+        self.round_entries.clear();
+        rs.t_end = round_end;
+        self.t = round_end;
+        self.stats.absorb(&rs);
+        if self.round_log.len() < 10_000 {
+            self.round_log.push(rs);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
+    use crate::config::PolicyKind;
+    use crate::gpu::Backend;
+    use crate::stm::tinystm::TinyStm;
+    use crate::stm::{GlobalClock, SharedStmr};
+    use std::sync::Arc;
+
+    fn cluster(n_gpus: usize, cross_shard_prob: f64) -> ClusterEngine<SynthCpu, SynthGpu> {
+        let n = 1 << 14;
+        let map = ShardMap::new(n, n_gpus, 8); // 256-word blocks
+        let stmr = Arc::new(SharedStmr::new(n));
+        let tm = Arc::new(TinyStm::with_clock(Arc::new(GlobalClock::new())));
+        let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+        let cpu = SynthCpu::new(stmr, tm, cpu_spec, 8, 2e-6, 42);
+        let mut devices = Vec::new();
+        let mut gpus = Vec::new();
+        for d in 0..n_gpus {
+            let spec = SynthSpec::w1(n, 1.0)
+                .partitioned(n / 2..n)
+                .homed(map.clone(), d)
+                .with_cross_shard(cross_shard_prob);
+            devices.push(GpuDevice::new(n, 0, Backend::Native));
+            gpus.push(SynthGpu::new(spec, 256, 20e-6, 230e-9, 7 + d as u64));
+        }
+        let cfg = EngineConfig {
+            period_s: 0.004,
+            early_validation: false,
+            policy: PolicyKind::FavorCpu,
+            ..Default::default()
+        };
+        let mut e = ClusterEngine::new(cfg, CostModel::default(), map, devices, cpu, gpus);
+        e.align_replicas();
+        e
+    }
+
+    #[test]
+    fn partitioned_cluster_commits_cleanly() {
+        for n_gpus in [1, 2, 4] {
+            let mut e = cluster(n_gpus, 0.0);
+            e.run_rounds(3).unwrap();
+            assert_eq!(e.stats.rounds_committed, 3, "n_gpus={n_gpus}");
+            assert!(e.stats.cpu_commits > 0);
+            assert!(e.stats.gpu_commits > 0);
+            assert_eq!(e.cluster.rounds_aborted_cross_shard, 0);
+            // Every device produced work.
+            for (d, dev) in e.cluster.per_device.iter().enumerate() {
+                assert!(dev.commits > 0, "device {d} idle at n_gpus={n_gpus}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_homing_keeps_writes_on_owned_granules() {
+        let mut e = cluster(4, 0.0);
+        e.run_rounds(1).unwrap();
+        // Inspect each device's write bitmap: every dirty word must be
+        // owned by that device (bmp_shift = 0 → word-exact).
+        for (d, dev) in e.devices.iter().enumerate() {
+            for (s, end) in dev.ws_bmp().dirty_word_ranges() {
+                for w in s..end {
+                    assert_eq!(e.map.owner(w), d, "device {d} wrote foreign word {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cross_shard_injection_aborts_rounds() {
+        let mut e = cluster(2, 0.5);
+        e.run_rounds(2).unwrap();
+        assert!(e.stats.rounds_committed < 2, "cross-shard writes conflict");
+        assert!(e.cluster.cross_checks > 0);
+        assert!(e.cluster.cross_conflict_entries > 0);
+        assert!(e.cluster.rounds_aborted_cross_shard > 0);
+    }
+
+    #[test]
+    fn clean_cluster_replicas_converge_after_drain() {
+        let mut e = cluster(2, 0.0);
+        e.run_rounds(2).unwrap();
+        e.drain().unwrap();
+        // After a committed drain the CPU holds the global truth; each
+        // device agrees on every granule it is NOT marked stale for.
+        let truth = e.cpu.stmr().snapshot();
+        for (d, dev) in e.devices.iter().enumerate() {
+            for (w, &v) in truth.iter().enumerate() {
+                if !e.stale[d].test_word(w) {
+                    assert_eq!(dev.stmr()[w], v, "device {d} word {w} diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_moves_bytes_only_in_real_clusters() {
+        let mut solo = cluster(1, 0.0);
+        solo.run_rounds(3).unwrap();
+        assert_eq!(solo.cluster.refresh_bytes, 0, "no coherence traffic solo");
+        let mut duo = cluster(2, 0.0);
+        duo.run_rounds(3).unwrap();
+        assert!(duo.cluster.refresh_bytes > 0, "cluster pulls deltas");
+    }
+}

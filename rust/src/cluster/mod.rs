@@ -1,0 +1,34 @@
+//! Multi-GPU cluster coordinator: a sharded STM region across N devices.
+//!
+//! The paper's SHeTM runs one CPU against one discrete GPU and names
+//! multi-GPU support as its key scaling direction; this subsystem is that
+//! step.  The STMR is cut into blocks striped across `N` simulated
+//! devices, and the single-device synchronization round generalizes to a
+//! per-device pipeline fleet under one CPU:
+//!
+//! * [`shard::ShardMap`] — word-range → device ownership (configurable via
+//!   `cluster.n_gpus` / `cluster.shard_bits`);
+//! * [`router::LogRouter`] — scatters the CPU write-set stream to owner
+//!   shards, chunking per device over per-device bus channels;
+//! * [`engine::ClusterEngine`] — drives the per-device round pipelines,
+//!   reusing the single-device validation/merge machinery per shard and
+//!   adding pairwise cross-shard conflict detection (granule bitmaps
+//!   first, word-level escalation on a hit) plus a batched
+//!   delta-coherence refresh — cross-device coherence is expensive
+//!   (Hechtman & Sorin), so everything stays hierarchical and batched;
+//! * [`stats::ClusterStats`] — per-device breakdowns and cross-shard
+//!   abort accounting.
+//!
+//! `n_gpus = 1` degenerates to the existing single-device behavior
+//! bit-for-bit (asserted by `rust/tests/cluster_equivalence.rs`), so all
+//! paper-reproduction results are preserved.  See DESIGN.md §6.
+
+pub mod engine;
+pub mod router;
+pub mod shard;
+pub mod stats;
+
+pub use engine::ClusterEngine;
+pub use router::LogRouter;
+pub use shard::ShardMap;
+pub use stats::{ClusterStats, DeviceStats};

@@ -1,0 +1,190 @@
+//! Scatter the CPU write-set log across shard owners.
+//!
+//! The CPU side of the cluster is unchanged from the single-device system:
+//! one guest TM, one global commit clock, one stream of `(addr, val, ts)`
+//! write entries.  The router splits that stream by [`ShardMap::owner`]
+//! into per-device [`RoundLog`]s, each of which chunks independently into
+//! the paper's 48 KB transfer units and ships over that device's own
+//! host-to-device bus channel.  Order is preserved within each device's
+//! log, so the per-shard validation sees CPU commits in timestamp order
+//! exactly as the single-device validation does.
+//!
+//! With one shard the router is a plain [`RoundLog`] wrapper: every entry
+//! routes to device 0 in arrival order, producing bit-identical chunks.
+
+use super::shard::ShardMap;
+use crate::coordinator::logs::RoundLog;
+use crate::gpu::LogChunk;
+use crate::stm::WriteEntry;
+
+/// Routes committed CPU write entries to their owner shard's round log.
+#[derive(Debug)]
+pub struct LogRouter {
+    map: ShardMap,
+    logs: Vec<RoundLog>,
+    /// Entries routed since construction (diagnostics).
+    routed: u64,
+    /// Scratch: per-shard slices of a carry batch (avoids reallocating).
+    carry_buf: Vec<Vec<WriteEntry>>,
+}
+
+impl LogRouter {
+    /// Build a router with one `chunk_entries`-sized log per shard.
+    pub fn new(map: ShardMap, chunk_entries: usize) -> Self {
+        let n = map.n_shards();
+        LogRouter {
+            map,
+            logs: (0..n)
+                .map(|_| RoundLog::with_chunk_entries(chunk_entries))
+                .collect(),
+            routed: 0,
+            carry_buf: (0..n).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// The ownership map.
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    /// Number of shards routed to.
+    pub fn n_shards(&self) -> usize {
+        self.logs.len()
+    }
+
+    /// Total entries routed since construction.
+    pub fn routed(&self) -> u64 {
+        self.routed
+    }
+
+    /// One shard's round log (tests / diagnostics).
+    pub fn log(&self, shard: usize) -> &RoundLog {
+        &self.logs[shard]
+    }
+
+    /// Route a batch of committed entries to their owners, in order.
+    pub fn append(&mut self, entries: &[WriteEntry]) {
+        for e in entries {
+            self.logs[self.map.owner(e.addr as usize)].push(*e);
+        }
+        self.routed += entries.len() as u64;
+    }
+
+    /// Drain complete chunks from one shard's log (streaming, §IV-D).
+    pub fn drain_full_chunks(&mut self, shard: usize, out: &mut Vec<LogChunk>) {
+        self.logs[shard].drain_full_chunks(out);
+    }
+
+    /// Drain everything from one shard's log, padding the tail chunk.
+    pub fn drain_all(&mut self, shard: usize, out: &mut Vec<LogChunk>) {
+        self.logs[shard].drain_all(out);
+    }
+
+    /// Entries logged this round across all shards.
+    pub fn len_total(&self) -> usize {
+        self.logs.iter().map(|l| l.len()).sum()
+    }
+
+    /// Entries not yet drained into chunks, across all shards.
+    pub fn pending_total(&self) -> usize {
+        self.logs.iter().map(|l| l.pending()).sum()
+    }
+
+    /// Reset every shard log for the next round, seeding each with its
+    /// share of the carry (commits made during the previous round's
+    /// validation window).
+    pub fn reset_with_carry(&mut self, carry: &[WriteEntry]) {
+        for buf in &mut self.carry_buf {
+            buf.clear();
+        }
+        for e in carry {
+            self.carry_buf[self.map.owner(e.addr as usize)].push(*e);
+        }
+        for (log, buf) in self.logs.iter_mut().zip(&self.carry_buf) {
+            log.reset_with_carry(buf);
+        }
+    }
+
+    /// Favor-GPU round abort: drop this round's entries everywhere, keep
+    /// each shard's carried prefix for re-shipping.
+    pub fn truncate_to_carried(&mut self) {
+        for log in &mut self.logs {
+            log.truncate_to_carried();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(addr: u32, val: i32, ts: i32) -> WriteEntry {
+        WriteEntry { addr, val, ts }
+    }
+
+    #[test]
+    fn routes_every_entry_to_its_owner_in_order() {
+        let map = ShardMap::new(64, 2, 2); // 4-word blocks
+        let mut r = LogRouter::new(map.clone(), 4);
+        let entries: Vec<WriteEntry> =
+            (0..32).map(|i| entry((i * 2) % 64, i as i32, i as i32 + 1)).collect();
+        r.append(&entries);
+        assert_eq!(r.routed(), 32);
+        assert_eq!(r.len_total(), 32);
+        for shard in 0..2 {
+            let mut chunks = Vec::new();
+            r.drain_all(shard, &mut chunks);
+            let mut last_ts = 0;
+            for c in &chunks {
+                for (i, &a) in c.addrs.iter().enumerate() {
+                    if a < 0 {
+                        continue;
+                    }
+                    assert_eq!(map.owner(a as usize), shard, "entry on wrong shard");
+                    assert!(c.ts[i] > last_ts, "order preserved per shard");
+                    last_ts = c.ts[i];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn solo_router_matches_single_round_log() {
+        let entries: Vec<WriteEntry> = (0..10).map(|i| entry(i, i as i32, 1)).collect();
+        let mut solo = RoundLog::with_chunk_entries(4);
+        solo.append(&entries);
+        let mut want = Vec::new();
+        solo.drain_all(&mut want);
+
+        let mut r = LogRouter::new(ShardMap::solo(64), 4);
+        r.append(&entries);
+        let mut got = Vec::new();
+        r.drain_all(0, &mut got);
+
+        assert_eq!(want.len(), got.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.addrs, g.addrs);
+            assert_eq!(w.vals, g.vals);
+            assert_eq!(w.ts, g.ts);
+        }
+    }
+
+    #[test]
+    fn carry_routes_and_survives_truncate() {
+        let map = ShardMap::new(64, 2, 2);
+        let mut r = LogRouter::new(map.clone(), 4);
+        // Carry one entry per shard.
+        let carry = vec![entry(0, 10, 5), entry(4, 11, 6)];
+        r.reset_with_carry(&carry);
+        assert_eq!(r.len_total(), 2);
+        // New-round entries then a favor-GPU abort:
+        r.append(&[entry(1, 99, 7), entry(5, 98, 8)]);
+        assert_eq!(r.len_total(), 4);
+        r.truncate_to_carried();
+        assert_eq!(r.len_total(), 2, "carried prefix survives");
+        let mut c0 = Vec::new();
+        r.drain_all(0, &mut c0);
+        assert_eq!(c0[0].addrs[0], 0);
+        assert_eq!(c0[0].vals[0], 10);
+    }
+}

@@ -1,0 +1,204 @@
+//! Word-range → device ownership map for the sharded STMR.
+//!
+//! The region is cut into fixed blocks of `1 << shard_bits` words and the
+//! blocks are striped round-robin across the `n_shards` devices —
+//! `owner(word) = (word >> shard_bits) % n_shards`.  Striping (rather than
+//! one contiguous slab per device) keeps every device's share of a
+//! partitioned workload balanced no matter how the apps partition the
+//! region, and the block size aligns with the paper's 16 KB transfer
+//! granule when `shard_bits = 12` (4096 words = 16 KB), so ownership
+//! boundaries and merge-DMA boundaries coincide.
+//!
+//! With `n_shards = 1` every helper degenerates to the identity — the
+//! single-device configuration is bit-for-bit the existing coordinator.
+
+/// Ownership map: word index → shard (device) id.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMap {
+    n_words: usize,
+    n_shards: usize,
+    shard_bits: u32,
+}
+
+impl ShardMap {
+    /// Build a map over `n_words` with `n_shards` devices and
+    /// `1 << shard_bits`-word blocks.
+    ///
+    /// Panics unless every shard owns at least one full block
+    /// (`n_words >= n_shards << shard_bits`) — a thinner region cannot be
+    /// meaningfully sharded at this granularity.
+    pub fn new(n_words: usize, n_shards: usize, shard_bits: u32) -> Self {
+        assert!(n_shards >= 1, "need at least one shard");
+        assert!(shard_bits < usize::BITS, "shard_bits out of range");
+        assert!(
+            n_words >= n_shards << shard_bits,
+            "STMR of {n_words} words cannot give {n_shards} shards a \
+             {}-word block each (lower cluster.shard_bits)",
+            1usize << shard_bits
+        );
+        ShardMap {
+            n_words,
+            n_shards,
+            shard_bits,
+        }
+    }
+
+    /// The single-device identity map.
+    pub fn solo(n_words: usize) -> Self {
+        Self::new(n_words, 1, 0)
+    }
+
+    /// STMR size in words.
+    pub fn n_words(&self) -> usize {
+        self.n_words
+    }
+
+    /// Number of shards (devices).
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Block-size shift (block = `1 << shard_bits` words).
+    pub fn shard_bits(&self) -> u32 {
+        self.shard_bits
+    }
+
+    /// Words per ownership block.
+    pub fn block_words(&self) -> usize {
+        1usize << self.shard_bits
+    }
+
+    /// Number of ownership blocks (last one may be partial).
+    pub fn n_blocks(&self) -> usize {
+        self.n_words.div_ceil(self.block_words())
+    }
+
+    /// The device owning `word`.
+    #[inline]
+    pub fn owner(&self, word: usize) -> usize {
+        debug_assert!(word < self.n_words);
+        (word >> self.shard_bits) % self.n_shards
+    }
+
+    /// Remap `word` to the nearest word (same in-block offset) owned by
+    /// `shard` — the shard-aware workload generators draw uniformly over
+    /// the whole region and rehome each access, which keeps their RNG
+    /// streams identical across cluster sizes.  Identity when the map is
+    /// [`ShardMap::solo`]-shaped.
+    pub fn rehome(&self, word: usize, shard: usize) -> usize {
+        debug_assert!(word < self.n_words);
+        debug_assert!(shard < self.n_shards);
+        let block = word >> self.shard_bits;
+        let mut b = block - block % self.n_shards + shard;
+        // The rounded block may start past the region's end (tail stripe):
+        // step back one whole stripe. At most one step is ever needed —
+        // the aligned base block starts in-range by construction.
+        while (b << self.shard_bits) >= self.n_words {
+            b -= self.n_shards;
+        }
+        let start = b << self.shard_bits;
+        let len = (self.n_words - start).min(self.block_words());
+        start + (word & (self.block_words() - 1)) % len
+    }
+
+    /// Words owned by `shard`.
+    pub fn owned_words(&self, shard: usize) -> usize {
+        self.owned_ranges(shard).iter().map(|(s, e)| e - s).sum()
+    }
+
+    /// Maximal word ranges `[start, end)` owned by `shard`, ascending.
+    pub fn owned_ranges(&self, shard: usize) -> Vec<(usize, usize)> {
+        assert!(shard < self.n_shards);
+        let mut out = Vec::new();
+        let mut b = shard;
+        while b < self.n_blocks() {
+            let s = b << self.shard_bits;
+            let e = ((b + 1) << self.shard_bits).min(self.n_words);
+            // Consecutive blocks coalesce only when n_shards == 1.
+            match out.last_mut() {
+                Some(last) if last.1 == s => last.1 = e,
+                _ => out.push((s, e)),
+            }
+            b += self.n_shards;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solo_owns_everything_and_rehome_is_identity() {
+        let m = ShardMap::solo(1000);
+        for w in [0usize, 1, 500, 999] {
+            assert_eq!(m.owner(w), 0);
+            assert_eq!(m.rehome(w, 0), w);
+        }
+        assert_eq!(m.owned_words(0), 1000);
+        assert_eq!(m.owned_ranges(0), vec![(0, 1000)]);
+    }
+
+    #[test]
+    fn striping_is_round_robin() {
+        let m = ShardMap::new(64, 4, 2); // 4-word blocks, 16 blocks
+        assert_eq!(m.owner(0), 0);
+        assert_eq!(m.owner(3), 0);
+        assert_eq!(m.owner(4), 1);
+        assert_eq!(m.owner(8), 2);
+        assert_eq!(m.owner(12), 3);
+        assert_eq!(m.owner(16), 0);
+        for d in 0..4 {
+            assert_eq!(m.owned_words(d), 16, "balanced stripes");
+        }
+    }
+
+    #[test]
+    fn rehome_lands_on_target_shard_preserving_offset() {
+        let m = ShardMap::new(64, 4, 2);
+        for w in 0..64 {
+            for d in 0..4 {
+                let r = m.rehome(w, d);
+                assert!(r < 64);
+                assert_eq!(m.owner(r), d, "word {w} -> shard {d} gave {r}");
+                assert_eq!(r & 3, w & 3, "in-block offset preserved");
+            }
+        }
+    }
+
+    #[test]
+    fn rehome_handles_partial_tail_block() {
+        // 70 words, 2 shards, 16-word blocks: blocks 0..4, block 4 has
+        // 6 words (64..70) and is owned by shard 0.
+        let m = ShardMap::new(70, 2, 4);
+        for w in 0..70 {
+            for d in 0..2 {
+                let r = m.rehome(w, d);
+                assert!(r < 70, "word {w} shard {d} gave {r}");
+                assert_eq!(m.owner(r), d);
+            }
+        }
+    }
+
+    #[test]
+    fn owned_ranges_cover_exactly_once() {
+        let m = ShardMap::new(100, 3, 3); // 8-word blocks
+        let mut seen = vec![0u32; 100];
+        for d in 0..3 {
+            for (s, e) in m.owned_ranges(d) {
+                for w in s..e {
+                    seen[w] += 1;
+                    assert_eq!(m.owner(w), d);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "partition of the region");
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot give")]
+    fn too_small_region_is_rejected() {
+        ShardMap::new(16, 4, 4);
+    }
+}

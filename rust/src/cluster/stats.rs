@@ -1,0 +1,94 @@
+//! Cluster-level metrics: per-device breakdowns and cross-shard accounting.
+//!
+//! The cluster engine keeps the single-device [`RunStats`] semantics for
+//! everything the existing tooling consumes (totals across devices land in
+//! `ClusterEngine::stats`, bit-identical to `RoundEngine` at `n_gpus = 1`),
+//! and adds the numbers that only exist once the region is sharded: which
+//! device did the work, how often the pairwise cross-shard checks fired
+//! and escalated, how many aborts were caused purely by cross-shard
+//! traffic, and what the delta-coherence refresh cost on the buses.
+//!
+//! [`RunStats`]: crate::coordinator::stats::RunStats
+
+use crate::coordinator::stats::PhaseBreakdown;
+
+/// Aggregate statistics for one device of the cluster.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceStats {
+    /// Transactions whose speculative commit survived, on this device.
+    pub commits: u64,
+    /// Execution attempts on this device.
+    pub attempts: u64,
+    /// Kernel activations on this device.
+    pub batches: u64,
+    /// CPU log chunks routed to and validated on this device.
+    pub chunks: u64,
+    /// Conflicting entries its own-shard validation found.
+    pub conflict_entries: u64,
+    /// Phase breakdown for this device.
+    pub phases: PhaseBreakdown,
+    /// Bytes pulled by the delta-coherence refresh.
+    pub refresh_bytes: u64,
+    /// Refresh DMAs issued.
+    pub refresh_transfers: u64,
+}
+
+/// Aggregate cluster statistics over a run.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterStats {
+    /// Per-device aggregates, indexed by shard id.
+    pub per_device: Vec<DeviceStats>,
+    /// Pairwise cross-shard probes performed (bitmap-level, cheap).
+    pub cross_checks: u64,
+    /// Probes whose granule bitmaps intersected, escalating to the
+    /// word-level scan (the hierarchical scheme's expensive tier).
+    pub cross_escalations: u64,
+    /// Conflicting entries/granules found by cross-shard detection.
+    pub cross_conflict_entries: u64,
+    /// Rounds aborted ONLY because of cross-shard conflicts (their
+    /// own-shard validations were clean).
+    pub rounds_aborted_cross_shard: u64,
+    /// Total bytes moved by the delta-coherence refresh.
+    pub refresh_bytes: u64,
+    /// Total refresh DMAs issued.
+    pub refresh_transfers: u64,
+}
+
+impl ClusterStats {
+    /// Zeroed stats for an `n_shards`-device cluster.
+    pub fn new(n_shards: usize) -> Self {
+        ClusterStats {
+            per_device: vec![DeviceStats::default(); n_shards],
+            ..Default::default()
+        }
+    }
+
+    /// Fraction of `rounds` aborted purely by cross-shard conflicts.
+    pub fn cross_shard_abort_rate(&self, rounds: u64) -> f64 {
+        if rounds == 0 {
+            0.0
+        } else {
+            self.rounds_aborted_cross_shard as f64 / rounds as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_sizes_per_device() {
+        let s = ClusterStats::new(4);
+        assert_eq!(s.per_device.len(), 4);
+        assert_eq!(s.cross_checks, 0);
+    }
+
+    #[test]
+    fn cross_shard_abort_rate_guards_zero() {
+        let mut s = ClusterStats::new(2);
+        assert_eq!(s.cross_shard_abort_rate(0), 0.0);
+        s.rounds_aborted_cross_shard = 3;
+        assert!((s.cross_shard_abort_rate(12) - 0.25).abs() < 1e-12);
+    }
+}

@@ -216,6 +216,15 @@ pub struct SystemConfig {
     pub artifacts_dir: String,
     /// RNG seed for workload generation.
     pub seed: u64,
+    /// Simulated GPU devices the STMR is sharded across (1 = the
+    /// single-device SHeTM of the paper; >1 enables the cluster engine).
+    pub n_gpus: usize,
+    /// Shard-block size shift: ownership blocks are `1 << shard_bits`
+    /// words (default 12 → 4096 words = 16 KB, the merge granule).
+    pub shard_bits: u32,
+    /// Probability that a GPU update transaction redirects one write into
+    /// another shard (cross-shard traffic injection; cluster only).
+    pub cross_shard_prob: f64,
 }
 
 impl Default for SystemConfig {
@@ -238,6 +247,9 @@ impl Default for SystemConfig {
             gpu_validate_entry_s: 1e-9,
             artifacts_dir: String::new(),
             seed: 42,
+            n_gpus: 1,
+            shard_bits: 12,
+            cross_shard_prob: 0.0,
         }
     }
 }
@@ -279,6 +291,9 @@ impl SystemConfig {
             cpu_txn_s: raw.get_or("cpu.txn_ns", d.cpu_txn_s * 1e9)? / 1e9,
             artifacts_dir: raw.get("runtime.artifacts").unwrap_or("").to_string(),
             seed: raw.get_or("seed", d.seed)?,
+            n_gpus: raw.get_or("cluster.n_gpus", d.n_gpus)?,
+            shard_bits: raw.get_or("cluster.shard_bits", d.shard_bits)?,
+            cross_shard_prob: raw.get_or("cluster.cross_shard_prob", d.cross_shard_prob)?,
         })
     }
 }
@@ -326,6 +341,21 @@ period_ms = 2.5
         let cfg = SystemConfig::from_raw(&Raw::new()).unwrap();
         assert_eq!(cfg.cpu_threads, 8);
         assert_eq!(cfg.policy, PolicyKind::FavorCpu);
+        assert_eq!(cfg.n_gpus, 1, "single device by default");
+        assert_eq!(cfg.shard_bits, 12, "16 KB ownership blocks");
+        assert_eq!(cfg.cross_shard_prob, 0.0);
+    }
+
+    #[test]
+    fn cluster_keys_parse() {
+        let raw = Raw::parse(
+            "[cluster]\nn_gpus = 4\nshard_bits = 8\ncross_shard_prob = 0.05\n",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.n_gpus, 4);
+        assert_eq!(cfg.shard_bits, 8);
+        assert!((cfg.cross_shard_prob - 0.05).abs() < 1e-12);
     }
 
     #[test]

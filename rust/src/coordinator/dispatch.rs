@@ -28,10 +28,14 @@ pub enum Affinity {
 }
 
 /// Three-queue dispatcher for one transaction type.
+///
+/// The GPU side holds one queue **per device** (a cluster shards `GPU_Q`
+/// by owner device); the single-device system is simply the one-queue
+/// special case, and the historical single-queue API delegates to device 0.
 #[derive(Debug)]
 pub struct Dispatcher<T> {
     cpu_q: VecDeque<T>,
-    gpu_q: VecDeque<T>,
+    gpu_qs: Vec<VecDeque<T>>,
     shared_q: VecDeque<T>,
     /// Probability that the GPU steals from `CPU_Q` when its own queues
     /// run dry (the §V-D steal-X% workloads).
@@ -46,29 +50,55 @@ impl<T> Default for Dispatcher<T> {
 }
 
 impl<T> Dispatcher<T> {
-    /// Empty dispatcher, no stealing.
+    /// Empty dispatcher, one GPU queue, no stealing.
     pub fn new() -> Self {
+        Self::with_gpu_queues(1)
+    }
+
+    /// Empty dispatcher with one GPU queue per device.
+    pub fn with_gpu_queues(n_gpus: usize) -> Self {
+        assert!(n_gpus >= 1);
         Dispatcher {
             cpu_q: VecDeque::new(),
-            gpu_q: VecDeque::new(),
+            gpu_qs: (0..n_gpus).map(|_| VecDeque::new()).collect(),
             shared_q: VecDeque::new(),
             gpu_steal_prob: 0.0,
             stolen: 0,
         }
     }
 
-    /// Submit one request.
+    /// Number of per-device GPU queues.
+    pub fn n_gpu_queues(&self) -> usize {
+        self.gpu_qs.len()
+    }
+
+    /// Submit one request (GPU affinity lands on device 0's queue; use
+    /// [`Self::submit_gpu`] to target a specific device).
     pub fn submit(&mut self, req: T, affinity: Affinity) {
         match affinity {
             Affinity::Cpu => self.cpu_q.push_back(req),
-            Affinity::Gpu => self.gpu_q.push_back(req),
+            Affinity::Gpu => self.gpu_qs[0].push_back(req),
             Affinity::Shared => self.shared_q.push_back(req),
         }
     }
 
-    /// Queued requests per (cpu, gpu, shared).
+    /// Submit one GPU-bound request to a specific device's queue.
+    pub fn submit_gpu(&mut self, req: T, dev: usize) {
+        self.gpu_qs[dev].push_back(req);
+    }
+
+    /// Queued requests per (cpu, gpu-total, shared).
     pub fn depths(&self) -> (usize, usize, usize) {
-        (self.cpu_q.len(), self.gpu_q.len(), self.shared_q.len())
+        (
+            self.cpu_q.len(),
+            self.gpu_qs.iter().map(|q| q.len()).sum(),
+            self.shared_q.len(),
+        )
+    }
+
+    /// Queue depth of one device's GPU queue.
+    pub fn depth_gpu(&self, dev: usize) -> usize {
+        self.gpu_qs[dev].len()
     }
 
     /// Total requests the GPU stole from `CPU_Q`.
@@ -83,11 +113,18 @@ impl<T> Dispatcher<T> {
             .or_else(|| self.shared_q.pop_front())
     }
 
-    /// GPU-controller pull of up to `n` requests to feed a kernel batch:
-    /// `GPU_Q` first, then `SHARED_Q`, then (with `gpu_steal_prob`) `CPU_Q`.
+    /// Device-0 GPU pull (single-device API; see
+    /// [`Self::pop_gpu_batch_on`]).
     pub fn pop_gpu_batch(&mut self, n: usize, rng: &mut Rng, out: &mut Vec<T>) {
+        self.pop_gpu_batch_on(0, n, rng, out);
+    }
+
+    /// GPU-controller pull of up to `n` requests to feed device `dev`'s
+    /// kernel batch: the device's own queue first, then `SHARED_Q`, then
+    /// (with `gpu_steal_prob`) `CPU_Q`.
+    pub fn pop_gpu_batch_on(&mut self, dev: usize, n: usize, rng: &mut Rng, out: &mut Vec<T>) {
         while out.len() < n {
-            if let Some(r) = self.gpu_q.pop_front() {
+            if let Some(r) = self.gpu_qs[dev].pop_front() {
                 out.push(r);
             } else if let Some(r) = self.shared_q.pop_front() {
                 out.push(r);
@@ -103,11 +140,16 @@ impl<T> Dispatcher<T> {
         }
     }
 
-    /// Return unconsumed requests to the FRONT of the GPU queue (round
-    /// abort: the batch must be re-executed).
+    /// Return unconsumed requests to the FRONT of device 0's GPU queue
+    /// (round abort: the batch must be re-executed).
     pub fn unpop_gpu(&mut self, reqs: impl DoubleEndedIterator<Item = T>) {
+        self.unpop_gpu_on(0, reqs);
+    }
+
+    /// Return unconsumed requests to the FRONT of one device's GPU queue.
+    pub fn unpop_gpu_on(&mut self, dev: usize, reqs: impl DoubleEndedIterator<Item = T>) {
         for r in reqs.rev() {
-            self.gpu_q.push_front(r);
+            self.gpu_qs[dev].push_front(r);
         }
     }
 }
@@ -168,6 +210,23 @@ mod tests {
         assert_eq!(batch, vec![0, 1, 2]);
         assert_eq!(d.stolen(), 3);
         assert_eq!(d.depths().0, 2);
+    }
+
+    #[test]
+    fn per_device_queues_route_and_pop_independently() {
+        let mut d = Dispatcher::with_gpu_queues(3);
+        d.submit_gpu(10, 0);
+        d.submit_gpu(21, 1);
+        d.submit_gpu(22, 1);
+        d.submit_gpu(30, 2);
+        assert_eq!(d.depths().1, 4, "gpu total sums devices");
+        assert_eq!(d.depth_gpu(1), 2);
+        let mut rng = Rng::new(1);
+        let mut batch = Vec::new();
+        d.pop_gpu_batch_on(1, 8, &mut rng, &mut batch);
+        assert_eq!(batch, vec![21, 22], "device 1 sees only its queue");
+        assert_eq!(d.depth_gpu(0), 1);
+        assert_eq!(d.depth_gpu(2), 1);
     }
 
     #[test]

@@ -49,6 +49,12 @@ impl RoundLog {
         self.entries.extend_from_slice(entries);
     }
 
+    /// Append a single committed write entry (the cluster log router
+    /// scatters entry-by-entry).
+    pub fn push(&mut self, entry: WriteEntry) {
+        self.entries.push(entry);
+    }
+
     /// Total entries logged this round.
     pub fn len(&self) -> usize {
         self.entries.len()

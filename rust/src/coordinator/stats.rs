@@ -22,7 +22,9 @@ impl PhaseBreakdown {
         self.processing_s + self.validation_s + self.merge_s + self.blocked_s
     }
 
-    fn add(&mut self, o: &PhaseBreakdown) {
+    /// Accumulate another breakdown (used by [`RunStats::absorb`] and the
+    /// cluster engine's per-device accounting).
+    pub fn add(&mut self, o: &PhaseBreakdown) {
         self.processing_s += o.processing_s;
         self.validation_s += o.validation_s;
         self.merge_s += o.merge_s;

@@ -137,6 +137,18 @@ impl Bitmap {
         out
     }
 
+    /// Number of granules marked in BOTH bitmaps — the word-level
+    /// escalation of the cluster's pairwise cross-shard check (exact at
+    /// `shift = 0`, where one granule is one word).
+    pub fn intersect_count(&self, other: &Bitmap) -> usize {
+        assert_eq!(self.bits.len(), other.bits.len(), "bitmap shapes differ");
+        self.bits
+            .iter()
+            .zip(&other.bits)
+            .filter(|&(&a, &b)| a != 0 && b != 0)
+            .count()
+    }
+
     /// Whether any marked granule of `self` is also marked in `other`
     /// (bitmap-level intersection; used by early-validation fast paths).
     pub fn intersects(&self, other: &Bitmap) -> bool {
@@ -211,6 +223,21 @@ mod tests {
         b.clear();
         assert!(b.is_empty());
         assert_eq!(b.dirty_word_ranges(), vec![]);
+    }
+
+    #[test]
+    fn intersect_count_counts_shared_granules() {
+        let mut a = Bitmap::new(64, 0);
+        let mut b = Bitmap::new(64, 0);
+        for w in [1, 5, 9] {
+            a.mark_word(w);
+        }
+        for w in [5, 9, 30] {
+            b.mark_word(w);
+        }
+        assert_eq!(a.intersect_count(&b), 2);
+        assert_eq!(b.intersect_count(&a), 2);
+        assert_eq!(Bitmap::new(64, 0).intersect_count(&a), 0);
     }
 
     #[test]

@@ -11,6 +11,7 @@ use anyhow::{bail, Result};
 
 use crate::apps::memcached::{init_cache_words, McConfig, McCpu, McGpu, McWorld};
 use crate::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
+use crate::cluster::{ClusterEngine, ShardMap};
 use crate::config::{GuestKind, SystemConfig};
 use crate::coordinator::round::{CostModel, EngineConfig, RoundEngine, Variant};
 use crate::gpu::{Backend, GpuDevice};
@@ -44,8 +45,8 @@ pub fn build_backend(
     }
     if !ArtifactStore::available(&cfg.artifacts_dir) {
         bail!(
-            "artifacts dir {:?} has no manifest.txt — run `make artifacts` \
-             or unset runtime.artifacts",
+            "artifacts dir {:?} is unavailable — run `make artifacts`, build \
+             with the `pjrt` cargo feature, or unset runtime.artifacts",
             cfg.artifacts_dir
         );
     }
@@ -157,6 +158,136 @@ pub fn build_memcached_engine(
     engine
 }
 
+/// Shard map derived from the system config over an `n_words` region.
+///
+/// `cluster.shard_bits` is clamped down until every device owns at least
+/// one block (tiny test regions stay usable at any `n_gpus`), and
+/// `n_gpus` itself is capped at the region size — one word per device is
+/// the hard floor — so absurd `--gpus` values degrade instead of
+/// panicking in `ShardMap::new`.
+pub fn shard_map(cfg: &SystemConfig, n_words: usize) -> ShardMap {
+    let n_gpus = cfg.n_gpus.clamp(1, n_words.max(1));
+    let mut bits = cfg.shard_bits;
+    while bits > 0 && n_words < n_gpus << bits {
+        bits -= 1;
+    }
+    ShardMap::new(n_words, n_gpus, bits)
+}
+
+/// Assemble a synthetic-workload cluster engine over `cluster.n_gpus`
+/// devices.
+///
+/// `gpu_spec` is the per-device template: each device gets it
+/// [`SynthSpec::homed`] onto its own shard (plus `cluster.cross_shard_prob`
+/// injection when the cluster has more than one device). With
+/// `cluster.n_gpus = 1` construction is element-for-element the same as
+/// [`build_synth_engine`] — same seeds, same specs — so the run is
+/// bit-identical to the single-device engine.
+pub fn build_synth_cluster_engine(
+    cfg: &SystemConfig,
+    variant: Variant,
+    cpu_spec: SynthSpec,
+    gpu_spec: SynthSpec,
+    gpu_batch: usize,
+    backend: Backend,
+) -> ClusterEngine<SynthCpu, SynthGpu> {
+    let map = shard_map(cfg, cfg.n_words);
+    let clock = Arc::new(GlobalClock::new());
+    let stmr = Arc::new(SharedStmr::new(cfg.n_words));
+    let tm = build_guest(cfg.guest, clock);
+    let cpu = SynthCpu::new(
+        stmr,
+        tm,
+        cpu_spec,
+        cfg.cpu_threads,
+        cfg.cpu_txn_s,
+        cfg.seed,
+    );
+    let mut devices = Vec::with_capacity(map.n_shards());
+    let mut gpus = Vec::with_capacity(map.n_shards());
+    for d in 0..map.n_shards() {
+        let mut spec = gpu_spec.clone().homed(map.clone(), d);
+        if map.n_shards() > 1 {
+            spec = spec.with_cross_shard(cfg.cross_shard_prob);
+        }
+        // Device 0 keeps the single-engine seed; later devices derive.
+        let seed = cfg.seed ^ 0x9E37_79B9 ^ (d as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        gpus.push(SynthGpu::new(
+            spec,
+            gpu_batch,
+            cfg.gpu_kernel_latency_s,
+            cfg.gpu_txn_s,
+            seed,
+        ));
+        devices.push(GpuDevice::new(cfg.n_words, cfg.bmp_shift, backend.clone()));
+    }
+    let mut engine = ClusterEngine::new(
+        engine_config(cfg, variant),
+        cost_model(cfg),
+        map,
+        devices,
+        cpu,
+        gpus,
+    );
+    engine.align_replicas();
+    engine
+}
+
+/// Assemble a memcached cluster engine over `cluster.n_gpus` devices with
+/// shard-aware request routing (arrivals go to the device owning their
+/// cache set). Bit-identical to [`build_memcached_engine`] at
+/// `cluster.n_gpus = 1`.
+pub fn build_memcached_cluster_engine(
+    cfg: &SystemConfig,
+    variant: Variant,
+    mc: McConfig,
+    gpu_batch: usize,
+    backend: Backend,
+) -> ClusterEngine<McCpu, McGpu> {
+    let map = shard_map(cfg, mc.n_words());
+    let clock = Arc::new(GlobalClock::new());
+    let stmr = Arc::new(SharedStmr::new(mc.n_words()));
+    let mut words = vec![0; mc.n_words()];
+    init_cache_words(&mut words, mc.n_sets);
+    stmr.install_range(0, &words);
+
+    let tm = build_guest(cfg.guest, clock);
+    let world = McWorld::new_sharded(mc.clone(), cfg.seed, mc.steal_shift > 0.0, map.clone());
+    let cpu = McCpu::new(
+        stmr,
+        tm,
+        world.clone(),
+        mc.clone(),
+        cfg.cpu_threads,
+        cfg.cpu_txn_s,
+    );
+    let mut devices = Vec::with_capacity(map.n_shards());
+    let mut gpus = Vec::with_capacity(map.n_shards());
+    for d in 0..map.n_shards() {
+        gpus.push(
+            McGpu::new(
+                world.clone(),
+                mc.clone(),
+                gpu_batch,
+                cfg.gpu_kernel_latency_s,
+                cfg.gpu_txn_s,
+            )
+            .on_device(d),
+        );
+        devices.push(GpuDevice::new(mc.n_words(), cfg.bmp_shift, backend.clone()));
+    }
+    let mut engine = ClusterEngine::new(
+        engine_config(cfg, variant),
+        cost_model(cfg),
+        map,
+        devices,
+        cpu,
+        gpus,
+    );
+    engine.align_replicas();
+    engine
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +332,55 @@ mod tests {
         assert!(e.stats.gpu_attempts > 0);
         // Balanced parity workload: rounds should commit.
         assert_eq!(e.stats.rounds_committed, 2);
+    }
+
+    #[test]
+    fn synth_cluster_engine_round_trips() {
+        let mut c = cfg();
+        c.n_gpus = 2;
+        let n = c.n_words;
+        let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+        let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+        let mut e = build_synth_cluster_engine(
+            &c,
+            Variant::Optimized,
+            cpu_spec,
+            gpu_spec,
+            256,
+            Backend::Native,
+        );
+        assert_eq!(e.n_gpus(), 2);
+        e.run_rounds(2).unwrap();
+        assert_eq!(e.stats.rounds_committed, 2, "partitioned => no conflicts");
+        assert!(e.stats.throughput() > 0.0);
+        assert!(e.cluster.per_device.iter().all(|d| d.commits > 0));
+    }
+
+    #[test]
+    fn memcached_cluster_engine_round_trips() {
+        let mut c = cfg();
+        c.policy = PolicyKind::FavorCpu;
+        c.n_gpus = 2;
+        let mc = McConfig::new(1 << 10);
+        let mut e =
+            build_memcached_cluster_engine(&c, Variant::Optimized, mc, 256, Backend::Native);
+        e.run_rounds(2).unwrap();
+        assert!(e.stats.cpu_commits > 0);
+        assert!(e.stats.gpu_attempts > 0);
+        assert!(e.cluster.per_device.iter().all(|d| d.attempts > 0));
+    }
+
+    #[test]
+    fn shard_map_clamps_bits_for_tiny_regions() {
+        let mut c = cfg();
+        c.n_gpus = 8;
+        c.n_words = 1 << 10; // 8 << 12 would not fit
+        let m = shard_map(&c, c.n_words);
+        assert_eq!(m.n_shards(), 8);
+        assert!(c.n_words >= 8 << m.shard_bits());
+        for d in 0..8 {
+            assert!(m.owned_words(d) > 0);
+        }
     }
 
     #[test]

@@ -17,12 +17,14 @@
 //! - [`bus`] — the PCIe interconnect model
 //! - [`runtime`] — PJRT artifact loading/execution
 //! - [`coordinator`] — SHeTM itself: rounds, validation, merge, dispatch
+//! - [`cluster`] — the multi-GPU coordinator: sharded STMR across N devices
 //! - [`apps`] — memcached cache + synthetic workloads
 //! - [`config`] — dependency-free config system
 //! - [`util`] — RNG / Zipf / stats / property-test / bench harnesses
 
 pub mod apps;
 pub mod bus;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod gpu;

@@ -26,6 +26,7 @@ use anyhow::{bail, Context, Result};
 
 use shetm::apps::memcached::McConfig;
 use shetm::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
+use shetm::cluster::ClusterStats;
 use shetm::config::{Raw, SystemConfig};
 use shetm::coordinator::baseline;
 use shetm::coordinator::round::Variant;
@@ -41,6 +42,7 @@ struct Cli {
     rounds: usize,
     basic: bool,
     pjrt: bool,
+    gpus: Option<usize>,
 }
 
 fn parse_cli() -> Result<Cli> {
@@ -50,6 +52,7 @@ fn parse_cli() -> Result<Cli> {
     let mut rounds = 50;
     let mut basic = false;
     let mut pjrt = false;
+    let mut gpus = None;
     while let Some(a) = args.next() {
         match a.as_str() {
             "--config" => {
@@ -67,6 +70,14 @@ fn parse_cli() -> Result<Cli> {
                     .parse()
                     .context("--rounds")?;
             }
+            "--gpus" => {
+                gpus = Some(
+                    args.next()
+                        .context("--gpus needs a number")?
+                        .parse()
+                        .context("--gpus")?,
+                );
+            }
             "--basic" => basic = true,
             "--pjrt" => pjrt = true,
             other => bail!("unknown argument {other:?} (try `shetm help`)"),
@@ -78,6 +89,7 @@ fn parse_cli() -> Result<Cli> {
         rounds,
         basic,
         pjrt,
+        gpus,
     })
 }
 
@@ -106,6 +118,36 @@ fn print_stats(label: &str, s: &RunStats) {
     );
 }
 
+fn print_cluster_stats(s: &RunStats, c: &ClusterStats) {
+    println!(
+        "  cross-shard       : {} checks, {} escalations, {} conflict entries",
+        c.cross_checks, c.cross_escalations, c.cross_conflict_entries
+    );
+    println!(
+        "  cross-shard aborts: {} rounds ({:.3} of all rounds)",
+        c.rounds_aborted_cross_shard,
+        c.cross_shard_abort_rate(s.rounds)
+    );
+    println!(
+        "  refresh traffic   : {} KiB in {} DMAs",
+        c.refresh_bytes / 1024,
+        c.refresh_transfers
+    );
+    for (d, dev) in c.per_device.iter().enumerate() {
+        println!(
+            "  gpu[{d}]            : {} commits {} batches {} chunks | \
+             proc {:.4} validate {:.4} merge {:.4} blocked {:.4}",
+            dev.commits,
+            dev.batches,
+            dev.chunks,
+            dev.phases.processing_s,
+            dev.phases.validation_s,
+            dev.phases.merge_s,
+            dev.phases.blocked_s
+        );
+    }
+}
+
 fn variant(cli: &Cli) -> Variant {
     if cli.basic {
         Variant::Basic
@@ -118,6 +160,12 @@ fn system_config(cli: &Cli) -> Result<SystemConfig> {
     let mut cfg = SystemConfig::from_raw(&cli.raw)?;
     if cli.pjrt && cfg.artifacts_dir.is_empty() {
         cfg.artifacts_dir = "artifacts".to_string();
+    }
+    if let Some(g) = cli.gpus {
+        if g == 0 {
+            bail!("--gpus must be at least 1");
+        }
+        cfg.n_gpus = g;
     }
     Ok(cfg)
 }
@@ -137,8 +185,13 @@ fn cmd_info(cli: &Cli) -> Result<()> {
             let meta = store.get(name)?.meta();
             println!("  {name:<22} kind={:?} params={:?}", meta.kind, meta.params);
         }
-    } else {
+    } else if cfg!(feature = "pjrt") {
         println!("no artifacts in {dir} (run `make artifacts`)");
+    } else {
+        println!(
+            "artifacts unavailable: this build has no `pjrt` feature \
+             (native backend only; see DESIGN.md §4)"
+        );
     }
     Ok(())
 }
@@ -153,6 +206,24 @@ fn cmd_synth(cli: &Cli) -> Result<()> {
     let backend = launch::build_backend(&cfg, "prstm_r4_g0", "validate_synth_g0", "")?;
     if matches!(backend, Backend::Pjrt { .. }) && (n != 1 << 18 || cfg.bmp_shift != 0) {
         bail!("PJRT artifacts are compiled for stmr.n_words=262144, bmp_shift=0");
+    }
+    if cfg.n_gpus > 1 {
+        if matches!(backend, Backend::Pjrt { .. }) {
+            bail!("cluster mode (--gpus > 1) supports the native backend only");
+        }
+        let mut engine = launch::build_synth_cluster_engine(
+            &cfg,
+            variant(cli),
+            cpu_spec,
+            gpu_spec,
+            1024,
+            backend,
+        );
+        engine.run_rounds(cli.rounds)?;
+        let label = format!("synthetic W1-100% on {} sharded GPUs", cfg.n_gpus);
+        print_stats(&label, &engine.stats);
+        print_cluster_stats(&engine.stats, &engine.cluster);
+        return Ok(());
     }
     let mut engine =
         launch::build_synth_engine(&cfg, variant(cli), cpu_spec, gpu_spec, 1024, backend);
@@ -172,6 +243,18 @@ fn cmd_memcached(cli: &Cli) -> Result<()> {
     let backend = launch::build_backend(&cfg, "prstm_r4_g0", "validate_mc_g0", "memcached")?;
     if matches!(backend, Backend::Pjrt { .. }) && (n_sets != 1 << 15 || cfg.bmp_shift != 0) {
         bail!("PJRT memcached artifact is compiled for memcached.n_sets=32768, bmp_shift=0");
+    }
+    if cfg.n_gpus > 1 {
+        if matches!(backend, Backend::Pjrt { .. }) {
+            bail!("cluster mode (--gpus > 1) supports the native backend only");
+        }
+        let mut engine =
+            launch::build_memcached_cluster_engine(&cfg, variant(cli), mc, 1024, backend);
+        engine.run_rounds(cli.rounds)?;
+        let label = format!("memcachedGPU on {} sharded GPUs", cfg.n_gpus);
+        print_stats(&label, &engine.stats);
+        print_cluster_stats(&engine.stats, &engine.cluster);
+        return Ok(());
     }
     let mut engine = launch::build_memcached_engine(&cfg, variant(cli), mc, 1024, backend);
     engine.run_rounds(cli.rounds)?;
@@ -238,6 +321,7 @@ OPTIONS:
   --config FILE     load a TOML-subset config file
   --set key=value   override a config key (repeatable)
   --rounds N        synchronization rounds (default 50)
+  --gpus N          shard the STMR across N simulated devices (cluster)
   --basic           basic algorithm variant (Fig. 1a)
   --pjrt            use PJRT artifacts from ./artifacts
 
@@ -245,4 +329,5 @@ KEYS (defaults): stmr.n_words=262144 stmr.bmp_shift=0 cpu.threads=8
   cpu.guest=tinystm|norec|htm cpu.txn_ns hetm.period_ms=80
   hetm.policy=favor-cpu|favor-gpu|starvation-guard hetm.early_validation
   bus.latency_us bus.gbps gpu.kernel_latency_us gpu.txn_ns
+  cluster.n_gpus=1 cluster.shard_bits=12 cluster.cross_shard_prob=0
   memcached.n_sets memcached.steal runtime.artifacts seed";

@@ -1,0 +1,256 @@
+//! Cluster ↔ single-device equivalence and cluster behavior tests.
+//!
+//! The load-bearing guarantee of the multi-GPU subsystem: with
+//! `cluster.n_gpus = 1` the [`ClusterEngine`] must be **bit-identical** to
+//! the existing [`RoundEngine`] on the same seed — same final replica
+//! state on both sides of the bus AND the same `RunStats` down to every
+//! f64 (compared through their `Debug` rendering, which prints full
+//! precision).  That is what makes the cluster a strict generalization:
+//! all paper-reproduction results are preserved.
+//!
+//! [`ClusterEngine`]: shetm::cluster::ClusterEngine
+//! [`RoundEngine`]: shetm::coordinator::round::RoundEngine
+
+use shetm::apps::synth::SynthSpec;
+use shetm::config::{PolicyKind, Raw, SystemConfig};
+use shetm::coordinator::round::{CpuDriver, Variant};
+use shetm::gpu::Backend;
+use shetm::launch;
+
+fn cfg(n: usize, policy: PolicyKind) -> SystemConfig {
+    let mut raw = Raw::new();
+    raw.set("cpu.txn_ns=2000").unwrap();
+    raw.set("gpu.txn_ns=230").unwrap();
+    raw.set("hetm.period_ms=2").unwrap();
+    raw.set("seed=99").unwrap();
+    let mut c = SystemConfig::from_raw(&raw).unwrap();
+    c.n_words = n;
+    c.policy = policy;
+    c
+}
+
+fn specs(n: usize, conflict: f64) -> (SynthSpec, SynthSpec) {
+    let cpu = SynthSpec::w1(n, 1.0)
+        .partitioned(0..n / 2)
+        .with_conflicts(conflict, n / 2..n);
+    let gpu = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+    (cpu, gpu)
+}
+
+/// Run both engines over the same seed/config and assert bit-identity.
+fn assert_equivalent(variant: Variant, policy: PolicyKind, conflict: f64, rounds: usize) {
+    let n = 1 << 14;
+    let c = cfg(n, policy);
+    assert_eq!(c.n_gpus, 1, "default config is single-device");
+    let (cpu_spec, gpu_spec) = specs(n, conflict);
+
+    let mut single = launch::build_synth_engine(
+        &c,
+        variant,
+        cpu_spec.clone(),
+        gpu_spec.clone(),
+        256,
+        Backend::Native,
+    );
+    single.run_rounds(rounds).unwrap();
+    single.drain().unwrap();
+
+    let mut cluster = launch::build_synth_cluster_engine(
+        &c,
+        variant,
+        cpu_spec,
+        gpu_spec,
+        256,
+        Backend::Native,
+    );
+    assert_eq!(cluster.n_gpus(), 1);
+    cluster.run_rounds(rounds).unwrap();
+    cluster.drain().unwrap();
+
+    let label = format!("{variant:?}/{policy:?}/conflict={conflict}");
+
+    // Virtual time and aggregate stats, every field at full precision.
+    assert_eq!(
+        format!("{:?}", single.stats),
+        format!("{:?}", cluster.stats),
+        "{label}: RunStats must be bit-identical"
+    );
+    assert!(
+        (single.now() - cluster.now()).abs() == 0.0,
+        "{label}: virtual clocks diverged: {} vs {}",
+        single.now(),
+        cluster.now()
+    );
+    // Per-round history too.
+    assert_eq!(
+        single.round_log.len(),
+        cluster.round_log.len(),
+        "{label}: round counts"
+    );
+    for (i, (a, b)) in single.round_log.iter().zip(&cluster.round_log).enumerate() {
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "{label}: round {i} stats diverged"
+        );
+    }
+    // Final state: both replicas, word for word.
+    assert_eq!(
+        single.cpu.stmr().snapshot(),
+        cluster.cpu.stmr().snapshot(),
+        "{label}: CPU replicas diverged"
+    );
+    assert_eq!(
+        single.device.stmr(),
+        cluster.devices[0].stmr(),
+        "{label}: device replicas diverged"
+    );
+    // Cluster-only machinery must have stayed inert.
+    assert_eq!(cluster.cluster.cross_checks, 0, "{label}");
+    assert_eq!(cluster.cluster.refresh_bytes, 0, "{label}");
+    assert_eq!(cluster.cluster.rounds_aborted_cross_shard, 0, "{label}");
+}
+
+#[test]
+fn n1_matches_round_engine_clean_optimized() {
+    assert_equivalent(Variant::Optimized, PolicyKind::FavorCpu, 0.0, 4);
+}
+
+#[test]
+fn n1_matches_round_engine_clean_basic() {
+    assert_equivalent(Variant::Basic, PolicyKind::FavorCpu, 0.0, 4);
+}
+
+#[test]
+fn n1_matches_round_engine_conflicting_favor_cpu() {
+    // Dense enough that rounds abort and the rollback paths run.
+    assert_equivalent(Variant::Optimized, PolicyKind::FavorCpu, 0.01, 4);
+    assert_equivalent(Variant::Basic, PolicyKind::FavorCpu, 0.01, 3);
+}
+
+#[test]
+fn n1_matches_round_engine_conflicting_favor_gpu() {
+    assert_equivalent(Variant::Optimized, PolicyKind::FavorGpu, 0.01, 4);
+}
+
+#[test]
+fn n1_matches_round_engine_starvation_guard() {
+    assert_equivalent(
+        Variant::Optimized,
+        PolicyKind::CpuWithStarvationGuard,
+        0.05,
+        5,
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Real-cluster behavior (n_gpus > 1).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_cluster_scales_gpu_side_cleanly() {
+    let n = 1 << 16;
+    let (cpu_spec, gpu_spec) = specs(n, 0.0);
+    let mut thr1 = 0.0;
+    let mut gpu1 = 0;
+    for n_gpus in [1usize, 4] {
+        let mut c = cfg(n, PolicyKind::FavorCpu);
+        c.n_gpus = n_gpus;
+        let mut e = launch::build_synth_cluster_engine(
+            &c,
+            Variant::Optimized,
+            cpu_spec.clone(),
+            gpu_spec.clone(),
+            256,
+            Backend::Native,
+        );
+        e.run_rounds(4).unwrap();
+        assert_eq!(
+            e.stats.rounds_committed, 4,
+            "partitioned + homed => clean rounds at n_gpus={n_gpus}"
+        );
+        if n_gpus == 1 {
+            thr1 = e.stats.throughput();
+            gpu1 = e.stats.gpu_commits;
+        } else {
+            assert!(
+                e.stats.gpu_commits > 2 * gpu1,
+                "4 devices must beat 2x one device's commits: {} vs {}",
+                e.stats.gpu_commits,
+                gpu1
+            );
+            assert!(
+                e.stats.throughput() > thr1,
+                "cluster throughput {} <= single {}",
+                e.stats.throughput(),
+                thr1
+            );
+        }
+    }
+}
+
+#[test]
+fn cpu_writes_route_to_owners_and_validate_there() {
+    let n = 1 << 16;
+    let mut c = cfg(n, PolicyKind::FavorCpu);
+    c.n_gpus = 4;
+    let (cpu_spec, gpu_spec) = specs(n, 0.0);
+    let mut e = launch::build_synth_cluster_engine(
+        &c,
+        Variant::Optimized,
+        cpu_spec,
+        gpu_spec,
+        256,
+        Backend::Native,
+    );
+    e.run_rounds(3).unwrap();
+    // The CPU writes its half; entries spread across all owner devices.
+    let with_chunks = e
+        .cluster
+        .per_device
+        .iter()
+        .filter(|d| d.chunks > 0)
+        .count();
+    assert_eq!(with_chunks, 4, "every owner shard validated CPU chunks");
+}
+
+#[test]
+fn cross_shard_cpu_conflicts_abort_cluster_rounds() {
+    let n = 1 << 16;
+    let mut c = cfg(n, PolicyKind::FavorCpu);
+    c.n_gpus = 2;
+    // CPU injects writes into the GPU half: they land on words the GPUs
+    // read, and the owner-shard validation catches them exactly as the
+    // single-device engine does.
+    let (cpu_spec, gpu_spec) = specs(n, 0.02);
+    let mut e = launch::build_synth_cluster_engine(
+        &c,
+        Variant::Optimized,
+        cpu_spec,
+        gpu_spec,
+        256,
+        Backend::Native,
+    );
+    e.run_rounds(3).unwrap();
+    assert!(e.stats.rounds_committed < 3, "dense conflicts abort rounds");
+    assert!(e.stats.discarded_commits > 0);
+    // After a committed drain the CPU replica is the global truth and the
+    // engine keeps running.
+    e.drain().unwrap();
+}
+
+#[test]
+fn cluster_memcached_serves_from_all_devices() {
+    use shetm::apps::memcached::McConfig;
+    let mut c = cfg(1 << 14, PolicyKind::FavorCpu);
+    c.n_gpus = 2;
+    let mc = McConfig::new(1 << 10);
+    let mut e =
+        launch::build_memcached_cluster_engine(&c, Variant::Optimized, mc, 256, Backend::Native);
+    e.run_rounds(3).unwrap();
+    assert!(e.stats.cpu_commits > 0);
+    for (d, dev) in e.cluster.per_device.iter().enumerate() {
+        assert!(dev.batches > 0, "device {d} never activated");
+        assert!(dev.commits > 0, "device {d} never committed");
+    }
+}

@@ -1,0 +1,193 @@
+//! Property tests for the cluster sharding layer (ShardMap / LogRouter),
+//! on the repo's own `util::prop` harness.
+//!
+//! Invariants:
+//! * the shard map is a partition — every word has exactly one owner, and
+//!   `owned_ranges` tiles the region without overlap;
+//! * `rehome` always lands on the requested shard, in range;
+//! * routing a write-entry stream and reassembling the per-shard chunks is
+//!   lossless (same multiset of entries), places every entry on its
+//!   owner's log, and preserves per-shard arrival order.
+
+use shetm::cluster::{LogRouter, ShardMap};
+use shetm::stm::WriteEntry;
+use shetm::util::prop::{forall, Cases};
+use shetm::util::Rng;
+
+/// Draw a valid (n_words, n_shards, shard_bits) triple for the size hint.
+fn draw_map(rng: &mut Rng, size: usize) -> ShardMap {
+    let n_shards = 1 + rng.below_usize(8);
+    let shard_bits = rng.below(5) as u32; // blocks of 1..16 words
+    let min = n_shards << shard_bits;
+    let n_words = min + rng.below_usize(min * (1 + size % 16) + 7);
+    ShardMap::new(n_words, n_shards, shard_bits)
+}
+
+#[test]
+fn shard_map_is_a_partition() {
+    forall(Cases::new("shard_map_partition", 200), |rng, size| {
+        let map = draw_map(rng, size);
+        let mut owners = vec![usize::MAX; map.n_words()];
+        for shard in 0..map.n_shards() {
+            for (s, e) in map.owned_ranges(shard) {
+                if e > map.n_words() || s >= e {
+                    return Err(format!("bad range ({s},{e}) of {map:?}"));
+                }
+                for w in s..e {
+                    if owners[w] != usize::MAX {
+                        return Err(format!("word {w} owned twice in {map:?}"));
+                    }
+                    owners[w] = shard;
+                }
+            }
+        }
+        for (w, &o) in owners.iter().enumerate() {
+            if o == usize::MAX {
+                return Err(format!("word {w} unowned in {map:?}"));
+            }
+            if o != map.owner(w) {
+                return Err(format!(
+                    "word {w}: ranges say {o}, owner() says {} in {map:?}",
+                    map.owner(w)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rehome_lands_on_shard_in_range() {
+    forall(Cases::new("rehome_on_shard", 300), |rng, size| {
+        let map = draw_map(rng, size);
+        for _ in 0..32 {
+            let w = rng.below_usize(map.n_words());
+            let d = rng.below_usize(map.n_shards());
+            let r = map.rehome(w, d);
+            if r >= map.n_words() {
+                return Err(format!("rehome({w},{d}) = {r} out of range in {map:?}"));
+            }
+            if map.owner(r) != d {
+                return Err(format!(
+                    "rehome({w},{d}) = {r} owned by {} in {map:?}",
+                    map.owner(r)
+                ));
+            }
+            if map.n_shards() == 1 && r != w {
+                return Err(format!("solo rehome must be identity: {w} -> {r}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn key(e: &WriteEntry) -> (u32, i32, i32) {
+    (e.addr, e.val, e.ts)
+}
+
+#[test]
+fn routing_then_reassembly_is_lossless() {
+    forall(Cases::new("router_lossless", 150), |rng, size| {
+        let map = draw_map(rng, size);
+        let chunk_entries = 1 + rng.below_usize(16);
+        let mut router = LogRouter::new(map.clone(), chunk_entries);
+
+        // A ts-ordered entry stream over random words.
+        let n_entries = rng.below_usize(4 * size + 8);
+        let entries: Vec<WriteEntry> = (0..n_entries)
+            .map(|i| WriteEntry {
+                addr: rng.below_usize(map.n_words()) as u32,
+                val: rng.below(1 << 20) as i32,
+                ts: i as i32 + 1,
+            })
+            .collect();
+        router.append(&entries);
+        if router.len_total() != entries.len() {
+            return Err(format!(
+                "routed {} of {} entries",
+                router.len_total(),
+                entries.len()
+            ));
+        }
+
+        // Reassemble from the per-shard chunks.
+        let mut got: Vec<WriteEntry> = Vec::new();
+        for shard in 0..map.n_shards() {
+            let mut chunks = Vec::new();
+            router.drain_all(shard, &mut chunks);
+            let mut last_ts = 0;
+            for c in &chunks {
+                for (i, &a) in c.addrs.iter().enumerate() {
+                    if a < 0 {
+                        continue;
+                    }
+                    let e = WriteEntry {
+                        addr: a as u32,
+                        val: c.vals[i],
+                        ts: c.ts[i],
+                    };
+                    // Exactly one shard: the owner.
+                    if map.owner(e.addr as usize) != shard {
+                        return Err(format!(
+                            "entry at word {} on shard {shard}, owner {}",
+                            e.addr,
+                            map.owner(e.addr as usize)
+                        ));
+                    }
+                    // Per-shard order preserved (ts strictly increases).
+                    if e.ts <= last_ts {
+                        return Err(format!(
+                            "shard {shard}: ts {} after {}",
+                            e.ts, last_ts
+                        ));
+                    }
+                    last_ts = e.ts;
+                    got.push(e);
+                }
+            }
+        }
+
+        // Lossless: same multiset of entries.
+        let mut want: Vec<_> = entries.iter().map(key).collect();
+        let mut have: Vec<_> = got.iter().map(key).collect();
+        want.sort_unstable();
+        have.sort_unstable();
+        if want != have {
+            return Err(format!(
+                "lost or invented entries: {} in, {} out",
+                want.len(),
+                have.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn carry_reroutes_after_reset() {
+    forall(Cases::new("router_carry", 100), |rng, size| {
+        let map = draw_map(rng, size);
+        let mut router = LogRouter::new(map.clone(), 4);
+        let carry: Vec<WriteEntry> = (0..rng.below_usize(size + 2))
+            .map(|i| WriteEntry {
+                addr: rng.below_usize(map.n_words()) as u32,
+                val: i as i32,
+                ts: i as i32 + 1,
+            })
+            .collect();
+        router.reset_with_carry(&carry);
+        if router.len_total() != carry.len() {
+            return Err(format!(
+                "carry of {} produced {} logged entries",
+                carry.len(),
+                router.len_total()
+            ));
+        }
+        // A favor-GPU abort right after: the carried prefix must survive.
+        router.truncate_to_carried();
+        if router.len_total() != carry.len() {
+            return Err("truncate dropped carried entries".to_string());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,113 @@
+//! Application-suite sweep: update ratio × cluster size, oracle-checked.
+//!
+//! Sweeps the [`Workload`] applications (bank, zipf-kv across update
+//! ratios; kmeans across cluster sizes) over `n_gpus ∈ {1, 2, 4}` and
+//! reports committed throughput, abort rate and the discarded-commit
+//! share.  After every point the workload's built-in correctness oracle
+//! runs against the quiesced state — **a bench run that breaks an
+//! invariant panics**, so performance sweeps double as correctness tests.
+//!
+//! `SHETM_BENCH_FAST=1` switches every point to a 2-round smoke run (CI).
+
+mod common;
+
+use shetm::apps::workload::{self, Workload};
+use shetm::config::Raw;
+use shetm::coordinator::round::{CpuDriver, Variant};
+use shetm::gpu::Backend;
+use shetm::launch;
+use shetm::util::bench::Table;
+
+struct Point {
+    throughput: f64,
+    abort_rate: f64,
+    discarded: u64,
+    gpu_commits: u64,
+}
+
+fn run_point(name: &str, update_frac: f64, n_gpus: usize, sim_s: f64) -> Point {
+    let mut cfg = common::base_config();
+    cfg.period_s = 0.004;
+    cfg.n_gpus = n_gpus;
+    let mut raw = Raw::new();
+    // Per-app sections; each app reads only its own keys.
+    raw.set(&format!("bank.update_frac={update_frac}")).unwrap();
+    raw.set("bank.accounts=65536").unwrap();
+    raw.set(&format!("zipfkv.update_frac={update_frac}"))
+        .unwrap();
+    raw.set("zipfkv.keys=32768").unwrap();
+    raw.set("kmeans.points=32768").unwrap();
+    let w = workload::from_raw(name, &raw, &cfg).expect("workload");
+    let mut e = launch::build_workload_cluster_engine(
+        &cfg,
+        Variant::Optimized,
+        w.as_ref(),
+        1024,
+        Backend::Native,
+    );
+    if common::fast() {
+        e.run_rounds(2).expect("bench rounds");
+    } else {
+        e.run_for(sim_s).expect("bench run");
+    }
+    e.drain().expect("drain");
+    w.check_invariants(e.cpu.stmr())
+        .unwrap_or_else(|err| panic!("{name} oracle violated: {err}"));
+    Point {
+        throughput: e.stats.throughput(),
+        abort_rate: e.stats.round_abort_rate(),
+        discarded: e.stats.discarded_commits,
+        gpu_commits: e.stats.gpu_commits,
+    }
+}
+
+fn sweep_ratios(name: &str, sim_s: f64) {
+    let t = Table::new(
+        &format!("workloads: {name} — update ratio × n_gpus (oracle-checked)"),
+        &[
+            "update_frac",
+            "n_gpus",
+            "tx_per_s",
+            "abort_rate",
+            "discarded",
+            "gpu_commits",
+        ],
+    );
+    for &update_frac in &[0.1, 0.5, 1.0] {
+        for &n_gpus in &[1usize, 2, 4] {
+            let p = run_point(name, update_frac, n_gpus, sim_s);
+            t.row(&[
+                update_frac,
+                n_gpus as f64,
+                p.throughput,
+                p.abort_rate,
+                p.discarded as f64,
+                p.gpu_commits as f64,
+            ]);
+        }
+    }
+}
+
+fn sweep_kmeans(sim_s: f64) {
+    let t = Table::new(
+        "workloads: kmeans — cluster scaling (oracle-checked)",
+        &["n_gpus", "tx_per_s", "abort_rate", "discarded", "gpu_commits"],
+    );
+    for &n_gpus in &[1usize, 2, 4] {
+        let p = run_point("kmeans", 1.0, n_gpus, sim_s);
+        t.row(&[
+            n_gpus as f64,
+            p.throughput,
+            p.abort_rate,
+            p.discarded as f64,
+            p.gpu_commits as f64,
+        ]);
+    }
+}
+
+fn main() {
+    let sim_s = common::sim_time(0.2);
+    sweep_ratios("bank", sim_s);
+    sweep_ratios("zipfkv", sim_s);
+    sweep_kmeans(sim_s);
+}

@@ -1,0 +1,610 @@
+//! Bank: STAMP-style transfer workload with a conservation oracle.
+//!
+//! The classic TM correctness probe: `n_accounts` balances live in the
+//! STMR (one word each) and every update transaction atomically moves an
+//! amount between two accounts, so the **total balance is invariant** —
+//! under every conflict-resolution policy, algorithm variant and cluster
+//! size.  Any lost or double-applied write (a broken merge, rollback or
+//! refresh path) shows up as created or destroyed money.
+//!
+//! Partitioning follows the synthetic workload: the CPU transfers within
+//! the lower half, each GPU within its shard-homed slice of the upper
+//! half.  Two contention knobs exist purely to stress the inter-device
+//! machinery without ever breaking conservation:
+//!
+//! * `cross_prob` — a CPU transfer credits an account in the GPU half
+//!   (the §V-C-style conflict injection; aborts rounds, conserves money);
+//! * `cross_read_prob` — a GPU transfer additionally **reads** an account
+//!   on another shard (exercises cross-shard detection; reads cannot
+//!   unbalance anything, unlike cross-shard writes racing under favor-GPU
+//!   install arbitration).
+//!
+//! GPU transfers use the device kernel's add mode (`op = 0`): the write
+//! values are the transfer deltas (`-amt` / `+amt`), which commute with
+//! any serializable interleaving and stay valid across host-side retries.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::workload::{gpu_seed, Workload};
+use crate::cluster::shard::ShardMap;
+use crate::config::{Raw, SystemConfig};
+use crate::coordinator::round::{CpuDriver, CpuSlice, GpuDriver, GpuSlice};
+use crate::gpu::{GpuDevice, TxnBatch};
+use crate::stm::{GuestTm, SharedStmr, WriteEntry};
+use crate::util::Rng;
+
+/// Bank workload configuration (`[bank]` config section).
+#[derive(Debug, Clone)]
+pub struct BankConfig {
+    /// Accounts (= STMR words).
+    pub n_accounts: usize,
+    /// Starting balance per account.
+    pub initial_balance: i32,
+    /// Transfer amounts are uniform in `1..=max_transfer`.
+    pub max_transfer: i32,
+    /// Fraction of transfer transactions (the rest are read-only audits).
+    pub update_frac: f64,
+    /// Accounts read per audit transaction.
+    pub audit_reads: usize,
+    /// Probability a CPU transfer credits an account in the GPU half
+    /// (inter-device conflict injection).
+    pub cross_prob: f64,
+    /// Probability a GPU transfer reads an account on another shard
+    /// (cross-shard detection stressor; cluster only).
+    pub cross_read_prob: f64,
+}
+
+impl BankConfig {
+    /// Defaults over `n_accounts`.
+    pub fn new(n_accounts: usize) -> Self {
+        BankConfig {
+            n_accounts,
+            initial_balance: 1_000,
+            max_transfer: 100,
+            update_frac: 0.9,
+            audit_reads: 8,
+            cross_prob: 0.0,
+            cross_read_prob: 0.0,
+        }
+    }
+
+    /// Parse the `[bank]` section.
+    pub fn from_raw(raw: &Raw) -> Result<Self> {
+        let d = BankConfig::new(raw.get_or("bank.accounts", 1usize << 14)?);
+        Ok(BankConfig {
+            n_accounts: d.n_accounts,
+            initial_balance: raw.get_or("bank.balance", d.initial_balance)?,
+            max_transfer: raw.get_or("bank.max_transfer", d.max_transfer)?,
+            update_frac: raw.get_or("bank.update_frac", d.update_frac)?,
+            audit_reads: raw.get_or("bank.audit_reads", d.audit_reads)?,
+            cross_prob: raw.get_or("bank.cross_prob", d.cross_prob)?,
+            cross_read_prob: raw.get_or("bank.cross_read_prob", d.cross_read_prob)?,
+        })
+    }
+
+    /// The conserved quantity.
+    pub fn total(&self) -> i64 {
+        self.n_accounts as i64 * self.initial_balance as i64
+    }
+}
+
+/// CPU-side bank driver: transfers + audits through the guest TM.
+pub struct BankCpu {
+    stmr: Arc<SharedStmr>,
+    tm: Arc<dyn GuestTm>,
+    cfg: BankConfig,
+    /// Accounts this side transfers between.
+    partition: Range<usize>,
+    /// The other side's accounts (cross-injection targets).
+    other: Range<usize>,
+    /// Modeled worker threads.
+    pub threads: usize,
+    /// Per-transaction execution time per worker (virtual seconds).
+    pub txn_s: f64,
+    rng: Rng,
+    read_only: bool,
+    debt: f64,
+}
+
+impl BankCpu {
+    /// Build a CPU driver over an initialized bank STMR.
+    pub fn new(
+        stmr: Arc<SharedStmr>,
+        tm: Arc<dyn GuestTm>,
+        cfg: BankConfig,
+        partition: Range<usize>,
+        other: Range<usize>,
+        threads: usize,
+        txn_s: f64,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(stmr.len(), cfg.n_accounts);
+        assert!(partition.len() >= 2, "need two accounts to transfer");
+        BankCpu {
+            stmr,
+            tm,
+            cfg,
+            partition,
+            other,
+            threads,
+            txn_s,
+            rng: Rng::new(seed),
+            read_only: false,
+            debt: 0.0,
+        }
+    }
+
+    /// Transactions per virtual second at full tilt.
+    pub fn rate(&self) -> f64 {
+        self.threads as f64 / self.txn_s
+    }
+
+    fn run_one(&mut self, log: &mut Vec<WriteEntry>) -> u32 {
+        let part_len = self.partition.len();
+        let base = self.partition.start;
+        let transfer = !self.read_only && self.rng.chance(self.cfg.update_frac);
+
+        if transfer {
+            // Pre-draw the access set (retries must replay it).
+            let a = base + self.rng.below_usize(part_len);
+            let b = if self.cfg.cross_prob > 0.0 && self.rng.chance(self.cfg.cross_prob) {
+                self.other.start + self.rng.below_usize(self.other.len())
+            } else {
+                let mut b = base + self.rng.below_usize(part_len);
+                while b == a {
+                    b = base + self.rng.below_usize(part_len);
+                }
+                b
+            };
+            let amt = 1 + self.rng.below(self.cfg.max_transfer as u64) as i32;
+            let r = self.tm.execute_into(
+                &self.stmr,
+                &mut |tx| {
+                    let ra = tx.read(a)?;
+                    let rb = tx.read(b)?;
+                    tx.write(a, ra.wrapping_sub(amt))?;
+                    tx.write(b, rb.wrapping_add(amt))?;
+                    Ok(())
+                },
+                log,
+            );
+            r.retries + 1
+        } else {
+            // Audit: sum a handful of balances, write nothing.
+            let reads: Vec<usize> = (0..self.cfg.audit_reads)
+                .map(|_| base + self.rng.below_usize(part_len))
+                .collect();
+            let r = self.tm.execute_into(
+                &self.stmr,
+                &mut |tx| {
+                    let mut acc = 0i64;
+                    for &w in &reads {
+                        acc += tx.read(w)? as i64;
+                    }
+                    let _ = acc;
+                    Ok(())
+                },
+                log,
+            );
+            r.retries + 1
+        }
+    }
+}
+
+impl CpuDriver for BankCpu {
+    fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice {
+        let want = dur_s * self.rate() + self.debt;
+        let n = want.floor() as u64;
+        self.debt = want - n as f64;
+        let mut attempts = 0u64;
+        for _ in 0..n {
+            attempts += self.run_one(log) as u64;
+        }
+        CpuSlice {
+            commits: n,
+            attempts,
+        }
+    }
+
+    fn stmr(&self) -> &SharedStmr {
+        &self.stmr
+    }
+
+    fn set_read_only(&mut self, ro: bool) {
+        self.read_only = ro;
+    }
+    // snapshot/rollback: the trait's default SharedStmr path — this driver
+    // is the favor-GPU regression coverage for it.
+}
+
+#[derive(Debug, Clone)]
+struct BankTxn {
+    reads: Vec<i32>,
+    writes: Vec<i32>,
+    deltas: Vec<i32>,
+    update: bool,
+}
+
+/// GPU-side bank driver: add-mode transfer batches over shard-homed
+/// accounts, with host-side retry of priority-rule losers (deltas stay
+/// valid across retries — adds commute).
+pub struct BankGpu {
+    cfg: BankConfig,
+    partition: Range<usize>,
+    map: ShardMap,
+    dev: usize,
+    /// Batch size.
+    pub batch: usize,
+    /// Kernel-activation latency (virtual seconds).
+    pub kernel_latency_s: f64,
+    /// Per-transaction device time (virtual seconds).
+    pub txn_s: f64,
+    rng: Rng,
+    retry: Vec<BankTxn>,
+    budget_carry: f64,
+}
+
+impl BankGpu {
+    /// Build a GPU driver for shard `dev` of `map`.
+    pub fn new(
+        cfg: BankConfig,
+        partition: Range<usize>,
+        map: ShardMap,
+        dev: usize,
+        batch: usize,
+        kernel_latency_s: f64,
+        txn_s: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(dev < map.n_shards());
+        assert!(partition.len() >= 2);
+        BankGpu {
+            cfg,
+            partition,
+            map,
+            dev,
+            batch,
+            kernel_latency_s,
+            txn_s,
+            rng: Rng::new(seed),
+            retry: Vec::new(),
+            budget_carry: 0.0,
+        }
+    }
+
+    /// Device seconds one kernel activation costs.
+    pub fn batch_cost(&self) -> f64 {
+        self.kernel_latency_s + self.batch as f64 * self.txn_s
+    }
+
+    /// Peak transactions per device second.
+    pub fn rate(&self) -> f64 {
+        self.batch as f64 / self.batch_cost()
+    }
+
+    fn home(&self, w: usize) -> usize {
+        self.map.rehome(w, self.dev)
+    }
+
+    fn gen_txn(&mut self) -> BankTxn {
+        let part_len = self.partition.len();
+        let base = self.partition.start;
+        let update = self.rng.chance(self.cfg.update_frac);
+        if update {
+            let a = self.home(base + self.rng.below_usize(part_len));
+            // Rehoming can alias two draws onto one word; a == b would put
+            // the same word twice in the scatter set, so redraw.
+            let mut b = self.home(base + self.rng.below_usize(part_len));
+            let mut guard = 0;
+            while b == a && guard < 64 {
+                b = self.home(base + self.rng.below_usize(part_len));
+                guard += 1;
+            }
+            if b == a {
+                // Pathologically tiny shard: degrade to a no-op transfer
+                // on one account pair rather than corrupting the batch.
+                return BankTxn {
+                    reads: vec![a as i32],
+                    writes: Vec::new(),
+                    deltas: Vec::new(),
+                    update: false,
+                };
+            }
+            let amt = 1 + self.rng.below(self.cfg.max_transfer as u64) as i32;
+            let mut reads = vec![a as i32, b as i32];
+            if self.map.n_shards() > 1
+                && self.cfg.cross_read_prob > 0.0
+                && self.rng.chance(self.cfg.cross_read_prob)
+            {
+                // Cross-shard read: audit an account owned elsewhere.
+                let r = self.rng.below((self.map.n_shards() - 1) as u64) as usize;
+                let other = if r >= self.dev { r + 1 } else { r };
+                reads.push(self.map.rehome(a as usize, other) as i32);
+            }
+            BankTxn {
+                reads,
+                writes: vec![a as i32, b as i32],
+                deltas: vec![-amt, amt],
+                update: true,
+            }
+        } else {
+            let reads = (0..self.cfg.audit_reads)
+                .map(|_| self.home(base + self.rng.below_usize(part_len)) as i32)
+                .collect();
+            BankTxn {
+                reads,
+                writes: Vec::new(),
+                deltas: Vec::new(),
+                update: false,
+            }
+        }
+    }
+
+    fn fill_batch(&mut self) -> (TxnBatch, Vec<BankTxn>) {
+        let r = self.cfg.audit_reads.max(3);
+        let w = 2;
+        let mut batch = TxnBatch::empty(self.batch, r, w);
+        let mut txns = Vec::with_capacity(self.batch);
+        for i in 0..self.batch {
+            let t = if let Some(t) = self.retry.pop() {
+                t
+            } else {
+                self.gen_txn()
+            };
+            for (j, &a) in t.reads.iter().take(r).enumerate() {
+                batch.read_idx[i * r + j] = a;
+            }
+            for (j, (&a, &d)) in t.writes.iter().zip(&t.deltas).enumerate() {
+                batch.write_idx[i * w + j] = a;
+                batch.write_val[i * w + j] = d;
+            }
+            batch.op[i] = 0; // add semantics: values are transfer deltas
+            txns.push(t);
+        }
+        (batch, txns)
+    }
+}
+
+impl GpuDriver for BankGpu {
+    fn run(&mut self, device: &mut GpuDevice, budget_s: f64) -> Result<GpuSlice> {
+        let mut out = GpuSlice::default();
+        let cost = self.batch_cost();
+        let mut left = budget_s + self.budget_carry;
+        while left >= cost {
+            let (batch, txns) = self.fill_batch();
+            let r = device.run_txn_batch(&batch)?;
+            for (i, t) in txns.into_iter().enumerate() {
+                if r.commit[i] == 0 && t.update {
+                    self.retry.push(t); // PR-STM loser: host-side retry
+                }
+            }
+            out.commits += r.n_commits as u64;
+            out.attempts += self.batch as u64;
+            out.batches += 1;
+            out.busy_s += cost;
+            left -= cost;
+        }
+        self.budget_carry = left;
+        Ok(out)
+    }
+
+    fn on_round_end(&mut self, _committed: bool) {
+        self.budget_carry = 0.0;
+        // Round aborts undo the adds wholesale (shadow rollback), so the
+        // conserved total is untouched either way; queued intra-batch
+        // losers remain valid (deltas, not absolute values).
+    }
+}
+
+/// Bank as a [`Workload`]: conservation oracle over the committed state.
+pub struct BankWorkload {
+    /// Workload configuration.
+    pub cfg: BankConfig,
+    seed: u64,
+}
+
+impl BankWorkload {
+    /// Wrap a config; `seed` feeds the per-driver RNGs.
+    pub fn new(cfg: BankConfig, seed: u64) -> Self {
+        BankWorkload { cfg, seed }
+    }
+}
+
+impl Workload for BankWorkload {
+    fn name(&self) -> &str {
+        "bank"
+    }
+
+    fn n_words(&self) -> usize {
+        self.cfg.n_accounts
+    }
+
+    fn init_words(&self, words: &mut [i32]) {
+        words.fill(self.cfg.initial_balance);
+    }
+
+    fn build(
+        &self,
+        stmr: Arc<SharedStmr>,
+        tm: Arc<dyn GuestTm>,
+        map: &ShardMap,
+        gpu_batch: usize,
+        cfg: &SystemConfig,
+    ) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>) {
+        let n = self.cfg.n_accounts;
+        let cpu = BankCpu::new(
+            stmr,
+            tm,
+            self.cfg.clone(),
+            0..n / 2,
+            n / 2..n,
+            cfg.cpu_threads,
+            cfg.cpu_txn_s,
+            self.seed,
+        );
+        let mut gpus: Vec<Box<dyn GpuDriver>> = Vec::with_capacity(map.n_shards());
+        for d in 0..map.n_shards() {
+            gpus.push(Box::new(BankGpu::new(
+                self.cfg.clone(),
+                n / 2..n,
+                map.clone(),
+                d,
+                gpu_batch,
+                cfg.gpu_kernel_latency_s,
+                cfg.gpu_txn_s,
+                gpu_seed(self.seed, d),
+            )));
+        }
+        (Box::new(cpu), gpus)
+    }
+
+    fn check_invariants(&self, stmr: &SharedStmr) -> Result<()> {
+        if stmr.len() != self.cfg.n_accounts {
+            bail!(
+                "bank: STMR has {} words, expected {} accounts",
+                stmr.len(),
+                self.cfg.n_accounts
+            );
+        }
+        let mut sum = 0i64;
+        for w in 0..stmr.len() {
+            sum += stmr.load(w) as i64;
+        }
+        let want = self.cfg.total();
+        if sum != want {
+            bail!(
+                "bank: conservation violated — total balance {sum}, expected \
+                 {want} (delta {})",
+                sum - want
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::Backend;
+    use crate::stm::tinystm::TinyStm;
+    use crate::stm::GlobalClock;
+
+    fn bank_stmr(cfg: &BankConfig) -> Arc<SharedStmr> {
+        let stmr = Arc::new(SharedStmr::new(cfg.n_accounts));
+        let mut words = vec![0; cfg.n_accounts];
+        words.fill(cfg.initial_balance);
+        stmr.install_range(0, &words);
+        stmr
+    }
+
+    #[test]
+    fn cpu_transfers_conserve_total() {
+        let cfg = BankConfig::new(1 << 10);
+        let stmr = bank_stmr(&cfg);
+        let tm = Arc::new(TinyStm::with_clock(Arc::new(GlobalClock::new())));
+        let n = cfg.n_accounts;
+        let total = cfg.total();
+        let mut cpu = BankCpu::new(stmr.clone(), tm, cfg, 0..n / 2, n / 2..n, 8, 2e-6, 1);
+        let mut log = Vec::new();
+        let s = cpu.run(0.005, &mut log);
+        assert!(s.commits > 1_000);
+        assert!(!log.is_empty(), "transfers must log write-sets");
+        let sum: i64 = (0..n).map(|w| stmr.load(w) as i64).sum();
+        assert_eq!(sum, total);
+        // No cross injection: all writes in the CPU half.
+        assert!(log.iter().all(|e| (e.addr as usize) < n / 2));
+    }
+
+    #[test]
+    fn cpu_read_only_mode_audits_without_logging() {
+        let cfg = BankConfig::new(1 << 10);
+        let stmr = bank_stmr(&cfg);
+        let tm = Arc::new(TinyStm::with_clock(Arc::new(GlobalClock::new())));
+        let n = cfg.n_accounts;
+        let mut cpu = BankCpu::new(stmr, tm, cfg, 0..n / 2, n / 2..n, 8, 2e-6, 1);
+        cpu.set_read_only(true);
+        let mut log = Vec::new();
+        let s = cpu.run(0.002, &mut log);
+        assert!(s.commits > 0);
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn cross_injection_writes_into_other_half() {
+        let mut cfg = BankConfig::new(1 << 10);
+        cfg.cross_prob = 1.0;
+        let stmr = bank_stmr(&cfg);
+        let tm = Arc::new(TinyStm::with_clock(Arc::new(GlobalClock::new())));
+        let n = cfg.n_accounts;
+        let mut cpu = BankCpu::new(stmr, tm, cfg, 0..n / 2, n / 2..n, 8, 2e-6, 2);
+        let mut log = Vec::new();
+        cpu.run(0.002, &mut log);
+        assert!(log.iter().any(|e| (e.addr as usize) >= n / 2));
+    }
+
+    #[test]
+    fn gpu_transfers_conserve_total_on_device() {
+        let cfg = BankConfig::new(1 << 10);
+        let n = cfg.n_accounts;
+        let total = cfg.total();
+        let map = ShardMap::solo(n);
+        let mut gpu = BankGpu::new(cfg.clone(), n / 2..n, map, 0, 128, 20e-6, 230e-9, 3);
+        let mut d = GpuDevice::new(n, 0, Backend::Native);
+        for w in 0..n {
+            d.stmr_mut()[w] = cfg.initial_balance;
+        }
+        d.begin_round();
+        let s = gpu.run(&mut d, 0.01).unwrap();
+        assert!(s.batches > 0 && s.commits > 0);
+        let sum: i64 = d.stmr().iter().map(|&v| v as i64).sum();
+        assert_eq!(sum, total, "device-side adds conserve the total");
+        // All GPU writes stay in the upper half.
+        for (w, &v) in d.ws_bmp().as_slice().iter().enumerate() {
+            if v != 0 {
+                assert!(w >= n / 2);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_gpu_writes_only_owned_accounts() {
+        let cfg = BankConfig::new(1 << 12);
+        let n = cfg.n_accounts;
+        let map = ShardMap::new(n, 4, 8);
+        for dev in 0..4 {
+            let mut gpu = BankGpu::new(
+                cfg.clone(),
+                n / 2..n,
+                map.clone(),
+                dev,
+                128,
+                20e-6,
+                230e-9,
+                7 + dev as u64,
+            );
+            let mut d = GpuDevice::new(n, 0, Backend::Native);
+            d.begin_round();
+            gpu.run(&mut d, 0.005).unwrap();
+            for (s, e) in d.ws_bmp().dirty_word_ranges() {
+                for w in s..e {
+                    assert_eq!(map.owner(w), dev, "device {dev} wrote foreign word {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workload_oracle_catches_lost_money() {
+        let wl = BankWorkload::new(BankConfig::new(64), 1);
+        let stmr = SharedStmr::new(64);
+        let mut words = vec![0; 64];
+        wl.init_words(&mut words);
+        stmr.install_range(0, &words);
+        wl.check_invariants(&stmr).unwrap();
+        stmr.store(5, stmr.load(5) - 1);
+        assert!(wl.check_invariants(&stmr).is_err());
+    }
+}

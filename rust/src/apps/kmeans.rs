@@ -1,0 +1,698 @@
+//! K-means-lite: read-dominated centroid reassignment with conservation
+//! oracles.
+//!
+//! A fixed set of points (coordinates derived deterministically from the
+//! seed, held outside the STMR like STAMP's read-only input arrays) is
+//! partitioned over the devices; the STMR holds the clustering state:
+//!
+//! ```text
+//! word c                      count[c]   — points assigned to centroid c
+//! word k + c*dim + j          acc[c][j]  — per-dimension coordinate sums
+//! word k*(1+dim) + p          assign[p]  — point p's current centroid
+//! ```
+//!
+//! Every move transaction probes a handful of candidate centroids (the
+//! read-dominated part), picks the least-loaded one, and atomically moves
+//! its point: rewrite `assign[p]`, shift one unit of count and the point's
+//! coordinates between the two centroids.  Because each move is a
+//! transfer, two quantities are **invariant**: `Σ count[c] = n_points`
+//! and, per dimension, `Σ acc[c][j] = Σ coord(p, j)` — the oracle.
+//!
+//! Partitioning: CPU points move among centroids `[0, k/2)`; GPU points
+//! among `[k/2, k)`, statically striped so that at `n_gpus = N` device `d`
+//! moves its points only among its own centroid sub-range — single-writer
+//! per count word, like the other homed workloads.  `hot_prob` makes a
+//! GPU transaction additionally *read* a CPU-side count word, which turns
+//! CPU count updates into inter-device conflicts (abort-path stressor that
+//! cannot unbalance anything).
+//!
+//! The GPU driver builds its batches by reading the device replica
+//! host-side and emitting store-mode writes with precomputed absolute
+//! values.  That is sound because every read-modify-write source word is
+//! in the transaction's read set: PR-STM's priority rule aborts any
+//! transaction whose read overlaps an earlier committer's write, so every
+//! committed transaction's inputs equal the pre-batch state its values
+//! were computed from (asserted by `prop_prstm_committers_serialize_by_
+//! priority`).  Aborted losers are simply regenerated from fresh replica
+//! state instead of being retried verbatim — their precomputed values
+//! would be stale.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::workload::{gpu_seed, Workload};
+use crate::cluster::shard::ShardMap;
+use crate::config::{Raw, SystemConfig};
+use crate::coordinator::round::{CpuDriver, CpuSlice, GpuDriver, GpuSlice};
+use crate::gpu::{GpuDevice, TxnBatch};
+use crate::stm::{GuestTm, SharedStmr, WriteEntry};
+use crate::util::Rng;
+
+/// K-means workload configuration (`[kmeans]` config section).
+#[derive(Debug, Clone)]
+pub struct KmeansConfig {
+    /// Centroids (even; CPU gets the lower half, GPUs the upper).
+    pub k: usize,
+    /// Coordinate dimensions.
+    pub dim: usize,
+    /// Points (multiple of `k`; half per side).
+    pub n_points: usize,
+    /// Candidate centroids probed per transaction.
+    pub probe: usize,
+    /// Fraction of transactions allowed to move their point (the rest are
+    /// pure probes).
+    pub move_frac: f64,
+    /// Probability a GPU transaction reads a CPU-side count word
+    /// (inter-device conflict stressor).
+    pub hot_prob: f64,
+}
+
+impl KmeansConfig {
+    /// Defaults over `n_points`.
+    pub fn new(n_points: usize) -> Self {
+        KmeansConfig {
+            k: 64,
+            dim: 2,
+            n_points,
+            probe: 4,
+            move_frac: 1.0,
+            hot_prob: 0.0,
+        }
+    }
+
+    /// Parse the `[kmeans]` section.
+    pub fn from_raw(raw: &Raw) -> Result<Self> {
+        let d = KmeansConfig::new(raw.get_or("kmeans.points", 1usize << 13)?);
+        let cfg = KmeansConfig {
+            k: raw.get_or("kmeans.k", d.k)?,
+            dim: raw.get_or("kmeans.dim", d.dim)?,
+            n_points: d.n_points,
+            probe: raw.get_or("kmeans.probe", d.probe)?,
+            move_frac: raw.get_or("kmeans.move_frac", d.move_frac)?,
+            hot_prob: raw.get_or("kmeans.hot_prob", d.hot_prob)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Reject shapes the striping cannot partition cleanly.
+    pub fn validate(&self) -> Result<()> {
+        if self.k < 4 || self.k % 2 != 0 {
+            bail!("kmeans.k must be even and >= 4 (got {})", self.k);
+        }
+        if self.n_points % self.k != 0 {
+            bail!(
+                "kmeans.points ({}) must be a multiple of kmeans.k ({})",
+                self.n_points,
+                self.k
+            );
+        }
+        if self.dim == 0 || self.probe == 0 {
+            bail!("kmeans.dim and kmeans.probe must be positive");
+        }
+        Ok(())
+    }
+
+    /// STMR words: counts, accumulators, assignments.
+    pub fn n_words(&self) -> usize {
+        self.k * (1 + self.dim) + self.n_points
+    }
+
+    /// Word holding `count[c]`.
+    pub fn count_w(&self, c: usize) -> usize {
+        c
+    }
+
+    /// Word holding `acc[c][j]`.
+    pub fn acc_w(&self, c: usize, j: usize) -> usize {
+        self.k + c * self.dim + j
+    }
+
+    /// Word holding `assign[p]`.
+    pub fn assign_w(&self, p: usize) -> usize {
+        self.k * (1 + self.dim) + p
+    }
+
+    /// Initial centroid of point `p` (group striping within each side).
+    pub fn initial_centroid(&self, p: usize) -> usize {
+        let half_p = self.n_points / 2;
+        let half_c = self.k / 2;
+        if p < half_p {
+            p % half_c
+        } else {
+            half_c + (p - half_p) % half_c
+        }
+    }
+}
+
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Point `p`'s coordinate in dimension `j` (deterministic in the seed;
+/// small values keep the accumulators far from overflow).
+pub fn point_coord(seed: u64, p: usize, j: usize) -> i32 {
+    (mix(seed ^ (((p as u64) << 8) | j as u64)) & 63) as i32
+}
+
+/// CPU-side k-means driver: probe-and-move through the guest TM.
+pub struct KmeansCpu {
+    stmr: Arc<SharedStmr>,
+    tm: Arc<dyn GuestTm>,
+    cfg: KmeansConfig,
+    seed: u64,
+    /// Modeled worker threads.
+    pub threads: usize,
+    /// Per-transaction execution time per worker (virtual seconds).
+    pub txn_s: f64,
+    rng: Rng,
+    read_only: bool,
+    debt: f64,
+    widx: Vec<u32>,
+}
+
+impl KmeansCpu {
+    /// Build a CPU driver over an initialized k-means STMR.
+    pub fn new(
+        stmr: Arc<SharedStmr>,
+        tm: Arc<dyn GuestTm>,
+        cfg: KmeansConfig,
+        coord_seed: u64,
+        threads: usize,
+        txn_s: f64,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(stmr.len(), cfg.n_words());
+        KmeansCpu {
+            stmr,
+            tm,
+            cfg,
+            seed: coord_seed,
+            threads,
+            txn_s,
+            rng: Rng::new(seed),
+            read_only: false,
+            debt: 0.0,
+            widx: Vec::new(),
+        }
+    }
+
+    /// Transactions per virtual second at full tilt.
+    pub fn rate(&self) -> f64 {
+        self.threads as f64 / self.txn_s
+    }
+
+    fn run_one(&mut self, log: &mut Vec<WriteEntry>) -> u32 {
+        let cfg = self.cfg.clone();
+        let half_c = cfg.k / 2;
+        // Pre-draw point and probe set (retries must replay them).
+        let p = self.rng.below_usize(cfg.n_points / 2);
+        self.rng
+            .distinct(half_c, cfg.probe.min(half_c), &mut self.widx);
+        let candidates: Vec<usize> = self.widx.iter().map(|&c| c as usize).collect();
+        let may_move = !self.read_only && self.rng.chance(cfg.move_frac);
+        let seed = self.seed;
+
+        let r = self.tm.execute_into(
+            &self.stmr,
+            &mut |tx| {
+                let old = tx.read(cfg.assign_w(p))? as usize;
+                assert!(old < half_c, "CPU point {p} assigned to foreign centroid {old}");
+                // Probe candidates (the read-dominated part); the move
+                // target is the least-loaded candidate other than `old`.
+                let mut new = None;
+                let mut new_cnt = i32::MAX;
+                for &c in &candidates {
+                    let cnt = tx.read(cfg.count_w(c))?;
+                    if c != old && cnt < new_cnt {
+                        new_cnt = cnt;
+                        new = Some(c);
+                    }
+                }
+                let (new, new_cnt) = match (may_move, new) {
+                    (true, Some(n)) => (n, new_cnt),
+                    _ => return Ok(()), // pure probe
+                };
+                let old_cnt = tx.read(cfg.count_w(old))?;
+                tx.write(cfg.assign_w(p), new as i32)?;
+                tx.write(cfg.count_w(old), old_cnt - 1)?;
+                tx.write(cfg.count_w(new), new_cnt + 1)?;
+                for j in 0..cfg.dim {
+                    let x = point_coord(seed, p, j);
+                    let co = tx.read(cfg.acc_w(old, j))?;
+                    tx.write(cfg.acc_w(old, j), co - x)?;
+                    let cn = tx.read(cfg.acc_w(new, j))?;
+                    tx.write(cfg.acc_w(new, j), cn + x)?;
+                }
+                Ok(())
+            },
+            log,
+        );
+        r.retries + 1
+    }
+}
+
+impl CpuDriver for KmeansCpu {
+    fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice {
+        let want = dur_s * self.rate() + self.debt;
+        let n = want.floor() as u64;
+        self.debt = want - n as f64;
+        let mut attempts = 0u64;
+        for _ in 0..n {
+            attempts += self.run_one(log) as u64;
+        }
+        CpuSlice {
+            commits: n,
+            attempts,
+        }
+    }
+
+    fn stmr(&self) -> &SharedStmr {
+        &self.stmr
+    }
+
+    fn set_read_only(&mut self, ro: bool) {
+        self.read_only = ro;
+    }
+    // snapshot/rollback: the trait's default SharedStmr path.
+}
+
+/// GPU-side k-means driver: batched assignment phases with host-side
+/// read-modify-write (see the module docs for the soundness argument).
+pub struct KmeansGpu {
+    cfg: KmeansConfig,
+    seed: u64,
+    /// This device's index and the cluster size (centroid striping).
+    dev: usize,
+    n_dev: usize,
+    /// Batch size.
+    pub batch: usize,
+    /// Kernel-activation latency (virtual seconds).
+    pub kernel_latency_s: f64,
+    /// Per-transaction device time (virtual seconds).
+    pub txn_s: f64,
+    rng: Rng,
+    widx: Vec<u32>,
+    budget_carry: f64,
+}
+
+impl KmeansGpu {
+    /// Build the driver for device `dev` of `n_dev`.
+    pub fn new(
+        cfg: KmeansConfig,
+        coord_seed: u64,
+        dev: usize,
+        n_dev: usize,
+        batch: usize,
+        kernel_latency_s: f64,
+        txn_s: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(dev < n_dev);
+        assert!(
+            cfg.k / 2 >= n_dev,
+            "kmeans needs at least one GPU centroid per device"
+        );
+        // A non-divisible split would silently freeze the tail centroids
+        // (and their points) out of the workload; reject it instead.
+        assert!(
+            (cfg.k / 2) % n_dev == 0,
+            "kmeans.k/2 ({}) must be divisible by the GPU count ({n_dev}) so \
+             every centroid is covered",
+            cfg.k / 2
+        );
+        KmeansGpu {
+            cfg,
+            seed: coord_seed,
+            dev,
+            n_dev,
+            batch,
+            kernel_latency_s,
+            txn_s,
+            rng: Rng::new(seed),
+            widx: Vec::new(),
+            budget_carry: 0.0,
+        }
+    }
+
+    /// Device seconds one kernel activation costs.
+    pub fn batch_cost(&self) -> f64 {
+        self.kernel_latency_s + self.batch as f64 * self.txn_s
+    }
+
+    /// This device's centroid sub-range within the GPU half.
+    fn my_centroids(&self) -> (usize, usize) {
+        let half_c = self.cfg.k / 2;
+        let sub = half_c / self.n_dev;
+        (half_c + self.dev * sub, sub)
+    }
+
+    /// Batch shape: reads = assign + probes + old count + accs + hot word.
+    fn widths(&self) -> (usize, usize) {
+        let r = 2 + self.cfg.probe + 2 * self.cfg.dim + 1;
+        let w = 3 + 2 * self.cfg.dim;
+        (r, w)
+    }
+
+    fn fill_batch(&mut self, stmr: &[i32]) -> TxnBatch {
+        let cfg = self.cfg.clone();
+        let (r, w) = self.widths();
+        let (base_c, sub) = self.my_centroids();
+        let half_c = cfg.k / 2;
+        let half_p = cfg.n_points / 2;
+        let inst = half_p / half_c; // points per centroid group
+        let mut batch = TxnBatch::empty(self.batch, r, w);
+        for i in 0..self.batch {
+            // A point whose centroid group belongs to this device.
+            let g = base_c - half_c + self.rng.below_usize(sub);
+            let q = g + half_c * self.rng.below_usize(inst);
+            let p = half_p + q;
+            let assign_w = cfg.assign_w(p);
+            let old = stmr[assign_w] as usize;
+            assert!(
+                old >= base_c && old < base_c + sub,
+                "GPU point {p} assigned to foreign centroid {old}"
+            );
+            self.rng.distinct(sub, cfg.probe.min(sub), &mut self.widx);
+            let candidates: Vec<usize> =
+                self.widx.iter().map(|&c| base_c + c as usize).collect();
+            let may_move = self.rng.chance(cfg.move_frac);
+            let hot = cfg.hot_prob > 0.0 && self.rng.chance(cfg.hot_prob);
+
+            // Reads: every word feeding the host-side computation.
+            let mut reads = vec![assign_w as i32];
+            for &c in &candidates {
+                reads.push(cfg.count_w(c) as i32);
+            }
+            let mut new = None;
+            let mut new_cnt = i32::MAX;
+            for &c in &candidates {
+                let cnt = stmr[cfg.count_w(c)];
+                if c != old && cnt < new_cnt {
+                    new_cnt = cnt;
+                    new = Some(c);
+                }
+            }
+            if hot {
+                // Probe a CPU-side count word (conflict stressor).
+                reads.push(cfg.count_w(self.rng.below_usize(half_c)) as i32);
+            }
+            if let (true, Some(new)) = (may_move, new) {
+                let old_cnt = stmr[cfg.count_w(old)];
+                reads.push(cfg.count_w(old) as i32);
+                let mut writes = vec![
+                    (cfg.assign_w(p), new as i32),
+                    (cfg.count_w(old), old_cnt - 1),
+                    (cfg.count_w(new), new_cnt + 1),
+                ];
+                for j in 0..cfg.dim {
+                    let x = point_coord(self.seed, p, j);
+                    reads.push(cfg.acc_w(old, j) as i32);
+                    reads.push(cfg.acc_w(new, j) as i32);
+                    writes.push((cfg.acc_w(old, j), stmr[cfg.acc_w(old, j)] - x));
+                    writes.push((cfg.acc_w(new, j), stmr[cfg.acc_w(new, j)] + x));
+                }
+                for (j, (a, v)) in writes.into_iter().enumerate() {
+                    batch.write_idx[i * w + j] = a as i32;
+                    batch.write_val[i * w + j] = v;
+                }
+            }
+            for (j, &a) in reads.iter().take(r).enumerate() {
+                batch.read_idx[i * r + j] = a;
+            }
+            batch.op[i] = 1; // store: absolute precomputed values
+        }
+        batch
+    }
+}
+
+impl GpuDriver for KmeansGpu {
+    fn run(&mut self, device: &mut GpuDevice, budget_s: f64) -> Result<GpuSlice> {
+        let mut out = GpuSlice::default();
+        let cost = self.batch_cost();
+        let mut left = budget_s + self.budget_carry;
+        while left >= cost {
+            let batch = self.fill_batch(device.stmr());
+            let r = device.run_txn_batch(&batch)?;
+            // Losers are NOT retried verbatim: their precomputed absolute
+            // values are stale; fresh batches regenerate from the replica.
+            out.commits += r.n_commits as u64;
+            out.attempts += self.batch as u64;
+            out.batches += 1;
+            out.busy_s += cost;
+            left -= cost;
+        }
+        self.budget_carry = left;
+        Ok(out)
+    }
+
+    fn on_round_end(&mut self, _committed: bool) {
+        self.budget_carry = 0.0;
+        // No host-side clustering state: the replica is the only truth the
+        // generator reads, so rollbacks need no driver bookkeeping.
+    }
+}
+
+/// K-means as a [`Workload`]: count and coordinate-sum conservation.
+pub struct KmeansWorkload {
+    /// Workload configuration.
+    pub cfg: KmeansConfig,
+    seed: u64,
+    /// Per-dimension coordinate totals (the conserved quantities).
+    acc_totals: Vec<i64>,
+}
+
+impl KmeansWorkload {
+    /// Wrap a config; `seed` fixes the point coordinates.
+    pub fn new(cfg: KmeansConfig, seed: u64) -> Self {
+        cfg.validate().expect("invalid kmeans config");
+        let mut acc_totals = vec![0i64; cfg.dim];
+        for p in 0..cfg.n_points {
+            for (j, t) in acc_totals.iter_mut().enumerate() {
+                *t += point_coord(seed, p, j) as i64;
+            }
+        }
+        KmeansWorkload {
+            cfg,
+            seed,
+            acc_totals,
+        }
+    }
+}
+
+impl Workload for KmeansWorkload {
+    fn name(&self) -> &str {
+        "kmeans"
+    }
+
+    fn n_words(&self) -> usize {
+        self.cfg.n_words()
+    }
+
+    fn init_words(&self, words: &mut [i32]) {
+        assert_eq!(words.len(), self.cfg.n_words());
+        words.fill(0);
+        for p in 0..self.cfg.n_points {
+            let c = self.cfg.initial_centroid(p);
+            words[self.cfg.count_w(c)] += 1;
+            for j in 0..self.cfg.dim {
+                words[self.cfg.acc_w(c, j)] += point_coord(self.seed, p, j);
+            }
+            words[self.cfg.assign_w(p)] = c as i32;
+        }
+    }
+
+    fn build(
+        &self,
+        stmr: Arc<SharedStmr>,
+        tm: Arc<dyn GuestTm>,
+        map: &ShardMap,
+        gpu_batch: usize,
+        cfg: &SystemConfig,
+    ) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>) {
+        let n_dev = map.n_shards();
+        let cpu = KmeansCpu::new(
+            stmr,
+            tm,
+            self.cfg.clone(),
+            self.seed,
+            cfg.cpu_threads,
+            cfg.cpu_txn_s,
+            cfg.seed,
+        );
+        let mut gpus: Vec<Box<dyn GpuDriver>> = Vec::with_capacity(n_dev);
+        for d in 0..n_dev {
+            gpus.push(Box::new(KmeansGpu::new(
+                self.cfg.clone(),
+                self.seed,
+                d,
+                n_dev,
+                gpu_batch,
+                cfg.gpu_kernel_latency_s,
+                cfg.gpu_txn_s,
+                gpu_seed(cfg.seed, d),
+            )));
+        }
+        (Box::new(cpu), gpus)
+    }
+
+    fn check_invariants(&self, stmr: &SharedStmr) -> Result<()> {
+        let cfg = &self.cfg;
+        if stmr.len() != cfg.n_words() {
+            bail!("kmeans: STMR size mismatch");
+        }
+        let mut count_sum = 0i64;
+        for c in 0..cfg.k {
+            let cnt = stmr.load(cfg.count_w(c));
+            if cnt < 0 {
+                bail!("kmeans: centroid {c} count went negative ({cnt})");
+            }
+            count_sum += cnt as i64;
+        }
+        if count_sum != cfg.n_points as i64 {
+            bail!(
+                "kmeans: count conservation violated — {count_sum} assigned, \
+                 {} points exist",
+                cfg.n_points
+            );
+        }
+        for j in 0..cfg.dim {
+            let sum: i64 = (0..cfg.k).map(|c| stmr.load(cfg.acc_w(c, j)) as i64).sum();
+            if sum != self.acc_totals[j] {
+                bail!(
+                    "kmeans: accumulator conservation violated in dim {j}: \
+                     {sum} vs {}",
+                    self.acc_totals[j]
+                );
+            }
+        }
+        let half_c = cfg.k / 2;
+        for p in 0..cfg.n_points {
+            let a = stmr.load(cfg.assign_w(p));
+            let ok = if p < cfg.n_points / 2 {
+                (0..half_c as i32).contains(&a)
+            } else {
+                (half_c as i32..cfg.k as i32).contains(&a)
+            };
+            if !ok {
+                bail!("kmeans: point {p} assigned outside its side ({a})");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::Backend;
+    use crate::stm::tinystm::TinyStm;
+    use crate::stm::GlobalClock;
+
+    fn small() -> KmeansConfig {
+        let mut c = KmeansConfig::new(1 << 10);
+        c.k = 16;
+        c
+    }
+
+    fn init(wl: &KmeansWorkload) -> Arc<SharedStmr> {
+        let stmr = Arc::new(SharedStmr::new(wl.n_words()));
+        let mut words = vec![0; wl.n_words()];
+        wl.init_words(&mut words);
+        stmr.install_range(0, &words);
+        stmr
+    }
+
+    #[test]
+    fn initial_image_satisfies_oracle() {
+        let wl = KmeansWorkload::new(small(), 7);
+        let stmr = init(&wl);
+        wl.check_invariants(&stmr).unwrap();
+    }
+
+    #[test]
+    fn cpu_moves_conserve_counts_and_accs() {
+        let wl = KmeansWorkload::new(small(), 7);
+        let stmr = init(&wl);
+        let tm = Arc::new(TinyStm::with_clock(Arc::new(GlobalClock::new())));
+        let mut cpu = KmeansCpu::new(stmr.clone(), tm, wl.cfg.clone(), 7, 8, 2e-6, 1);
+        let mut log = Vec::new();
+        let s = cpu.run(0.005, &mut log);
+        assert!(s.commits > 1_000);
+        assert!(!log.is_empty(), "moves must log write-sets");
+        wl.check_invariants(&stmr).unwrap();
+    }
+
+    #[test]
+    fn cpu_read_only_mode_probes_without_logging() {
+        let wl = KmeansWorkload::new(small(), 7);
+        let stmr = init(&wl);
+        let tm = Arc::new(TinyStm::with_clock(Arc::new(GlobalClock::new())));
+        let mut cpu = KmeansCpu::new(stmr, tm, wl.cfg.clone(), 7, 8, 2e-6, 1);
+        cpu.set_read_only(true);
+        let mut log = Vec::new();
+        let s = cpu.run(0.002, &mut log);
+        assert!(s.commits > 0);
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn gpu_moves_conserve_on_device() {
+        let wl = KmeansWorkload::new(small(), 7);
+        let mut d = GpuDevice::new(wl.n_words(), 0, Backend::Native);
+        let mut words = vec![0; wl.n_words()];
+        wl.init_words(&mut words);
+        d.stmr_mut().copy_from_slice(&words);
+        d.begin_round();
+        let mut gpu = KmeansGpu::new(wl.cfg.clone(), 7, 0, 1, 128, 20e-6, 230e-9, 3);
+        let s = gpu.run(&mut d, 0.01).unwrap();
+        assert!(s.batches > 0 && s.commits > 0);
+        let stmr = SharedStmr::new(wl.n_words());
+        stmr.install_range(0, d.stmr());
+        wl.check_invariants(&stmr).unwrap();
+    }
+
+    #[test]
+    fn sharded_gpu_stays_in_its_centroid_slice() {
+        let mut cfg = small();
+        cfg.k = 16; // GPU half = centroids 8..16; 2 devices => 4 each
+        let wl = KmeansWorkload::new(cfg.clone(), 9);
+        for dev in 0..2 {
+            let mut d = GpuDevice::new(wl.n_words(), 0, Backend::Native);
+            let mut words = vec![0; wl.n_words()];
+            wl.init_words(&mut words);
+            d.stmr_mut().copy_from_slice(&words);
+            d.begin_round();
+            let mut gpu =
+                KmeansGpu::new(cfg.clone(), 9, dev, 2, 128, 20e-6, 230e-9, 11 + dev as u64);
+            gpu.run(&mut d, 0.005).unwrap();
+            let (base_c, sub) = (8 + dev * 4, 4);
+            for (s, e) in d.ws_bmp().dirty_word_ranges() {
+                for w in s..e {
+                    let owned_count = w >= base_c && w < base_c + sub;
+                    let owned_acc = (cfg.k..cfg.k * (1 + cfg.dim)).contains(&w) && {
+                        let c = (w - cfg.k) / cfg.dim;
+                        c >= base_c && c < base_c + sub
+                    };
+                    let owned_assign = w >= cfg.k * (1 + cfg.dim);
+                    assert!(
+                        owned_count || owned_acc || owned_assign,
+                        "device {dev} wrote foreign word {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_catches_count_drift() {
+        let wl = KmeansWorkload::new(small(), 7);
+        let stmr = init(&wl);
+        stmr.store(0, stmr.load(0) + 1);
+        assert!(wl.check_invariants(&stmr).is_err());
+    }
+}

@@ -208,7 +208,6 @@ pub struct McCpu {
     read_only: bool,
     deferred: Vec<McRequest>,
     debt: f64,
-    snap: Option<Vec<i32>>,
 }
 
 impl McCpu {
@@ -233,7 +232,6 @@ impl McCpu {
             read_only: false,
             deferred: Vec::new(),
             debt: 0.0,
-            snap: None,
         }
     }
 
@@ -338,15 +336,7 @@ impl CpuDriver for McCpu {
     fn set_read_only(&mut self, ro: bool) {
         self.read_only = ro;
     }
-
-    fn snapshot(&mut self) {
-        self.snap = Some(self.stmr.snapshot());
-    }
-
-    fn rollback(&mut self) {
-        let snap = self.snap.take().expect("snapshot must precede rollback");
-        self.stmr.install_range(0, &snap);
-    }
+    // snapshot/rollback: the trait's default SharedStmr path.
 }
 
 /// GPU-side memcached driver: fills kernel batches from GPU_Q (stealing

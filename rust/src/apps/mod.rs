@@ -1,12 +1,27 @@
 //! Applications on top of the HeTM abstraction.
 //!
+//! Every application implements [`workload::Workload`] — generation for
+//! both device sides, shard-aware homing, and a built-in correctness
+//! oracle checked after every run (see `workload.rs`):
+//!
 //! * [`synth`] — the paper's synthetic workloads W1/W2 (§V-A..§V-C):
 //!   uniform random reads/updates with tunable update ratio, STMR
 //!   partitioning (no-contention studies) and inter-device conflict
 //!   injection (sensitivity studies);
 //! * [`memcached`] — the MemcachedGPU reproduction (§V-D): an 8-way
 //!   set-associative object cache with per-device LRU clocks, key-parity
-//!   load balancing and steal-based rebalancing.
+//!   load balancing and steal-based rebalancing;
+//! * [`bank`] — STAMP-style transfers; oracle: balance conservation;
+//! * [`kmeans`] — read-dominated centroid reassignment; oracle: count and
+//!   coordinate-sum conservation;
+//! * [`zipfkv`] — Zipf-skewed KV updates with cross-shard hot keys;
+//!   oracle: per-key version monotonicity over the CPU write log.
 
+pub mod bank;
+pub mod kmeans;
 pub mod memcached;
 pub mod synth;
+pub mod workload;
+pub mod zipfkv;
+
+pub use workload::Workload;

@@ -1,0 +1,357 @@
+//! The [`Workload`] trait: one plug for every application.
+//!
+//! A workload owns everything the engines do not: the STMR layout and its
+//! initial image, the CPU- and GPU-side transaction generators (shard-aware
+//! on clusters), and — crucially — a **correctness oracle**: a semantic
+//! invariant of the application (bank-balance conservation, k-means count
+//! conservation, per-key version monotonicity) that must hold on the
+//! committed state after any run, under every policy, variant and cluster
+//! size.  Benches and the `shetm run` command call the oracle after every
+//! run, so every performance experiment doubles as a correctness check.
+//!
+//! Implementations:
+//!
+//! * [`SynthWorkload`] / [`MemcachedWorkload`] — the paper's original
+//!   applications ([`super::synth`], [`super::memcached`]) refitted onto
+//!   the trait;
+//! * [`super::bank`] — STAMP-style transfers; oracle: total balance is
+//!   conserved;
+//! * [`super::kmeans`] — read-dominated centroid reassignment; oracle:
+//!   counts and coordinate accumulators are conserved;
+//! * [`super::zipfkv`] — skewed KV store; oracle: per-key version
+//!   monotonicity over the surviving CPU write log.
+//!
+//! A `Workload` instance drives **one** engine run: oracles may accumulate
+//! run-local evidence (e.g. the zipf-kv write-log trace), so build a fresh
+//! instance per engine.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::bank::{BankConfig, BankWorkload};
+use super::kmeans::{KmeansConfig, KmeansWorkload};
+use super::memcached::{init_cache_words, McConfig, McCpu, McGpu, McWorld};
+use super::synth::{SynthCpu, SynthGpu, SynthSpec};
+use super::zipfkv::{ZipfKvConfig, ZipfKvWorkload};
+use crate::cluster::shard::ShardMap;
+use crate::config::{Raw, SystemConfig};
+use crate::coordinator::round::{CpuDriver, GpuDriver};
+use crate::gpu::native::mc;
+use crate::stm::{GuestTm, SharedStmr};
+
+/// An application pluggable into both `RoundEngine` and `ClusterEngine`.
+pub trait Workload {
+    /// Workload name (labels, diagnostics).
+    fn name(&self) -> &str;
+
+    /// STMR words this workload needs.
+    fn n_words(&self) -> usize;
+
+    /// Initial STMR image (defaults to all-zero).
+    fn init_words(&self, _words: &mut [i32]) {}
+
+    /// Build the CPU driver and one GPU driver per shard of `map`.
+    ///
+    /// All drivers of one call share generator state where the app needs
+    /// it (queues, logs); `map` carries the cluster's shard homing — with
+    /// a one-shard map generation must match the single-device stream.
+    fn build(
+        &self,
+        stmr: Arc<SharedStmr>,
+        tm: Arc<dyn GuestTm>,
+        map: &ShardMap,
+        gpu_batch: usize,
+        cfg: &SystemConfig,
+    ) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>);
+
+    /// The correctness oracle, checked against the post-run CPU truth
+    /// (quiesce with `drain()` first so carried commits have landed).
+    fn check_invariants(&self, stmr: &SharedStmr) -> Result<()>;
+
+    /// Optional run-level summary line (hit rates, recorded updates, ...).
+    fn stats_summary(&self) -> String {
+        String::new()
+    }
+}
+
+/// Per-device GPU seed derivation: device 0 keeps the single-engine seed
+/// (`seed ^ 0x9E37_79B9`), later devices derive — the same scheme as the
+/// synth cluster builder, so n_gpus = 1 stays bit-identical.
+pub fn gpu_seed(seed: u64, dev: usize) -> u64 {
+    seed ^ 0x9E37_79B9 ^ (dev as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Build a workload from its config name plus the raw per-app sections.
+///
+/// Accepted names: `synth`, `memcached`, `bank`, `kmeans`, `zipfkv`
+/// (alias `zipf-kv`).
+pub fn from_raw(name: &str, raw: &Raw, cfg: &SystemConfig) -> Result<Box<dyn Workload>> {
+    Ok(match name {
+        "synth" => Box::new(SynthWorkload::from_raw(raw, cfg)?),
+        "memcached" => Box::new(MemcachedWorkload::from_raw(raw, cfg)?),
+        "bank" => Box::new(BankWorkload::new(BankConfig::from_raw(raw)?, cfg.seed)),
+        "kmeans" => Box::new(KmeansWorkload::new(KmeansConfig::from_raw(raw)?, cfg.seed)),
+        "zipfkv" | "zipf-kv" => {
+            Box::new(ZipfKvWorkload::new(ZipfKvConfig::from_raw(raw)?, cfg))
+        }
+        other => bail!("unknown workload {other:?} (synth|memcached|bank|kmeans|zipfkv)"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The paper's applications, refitted onto the trait.
+// ---------------------------------------------------------------------------
+
+/// The synthetic W1/W2 workload as a [`Workload`]: CPU on the lower half,
+/// GPU on the upper half (the paper's partitioned configuration), with the
+/// usual conflict-injection and cluster cross-shard knobs.
+pub struct SynthWorkload {
+    /// CPU-side spec.
+    pub cpu_spec: SynthSpec,
+    /// GPU-side template spec (homed per device at build time).
+    pub gpu_spec: SynthSpec,
+    n_words: usize,
+}
+
+impl SynthWorkload {
+    /// Partitioned W1/W2 over `cfg.n_words` from the `[synth]` section:
+    /// `reads` (4 = W1, 40 = W2), `update_frac`, `conflict_prob`.
+    pub fn from_raw(raw: &Raw, cfg: &SystemConfig) -> Result<Self> {
+        let n = cfg.n_words;
+        let reads: usize = raw.get_or("synth.reads", 4)?;
+        let update_frac: f64 = raw.get_or("synth.update_frac", 1.0)?;
+        let conflict: f64 = raw.get_or("synth.conflict_prob", 0.0)?;
+        let mut cpu_spec = SynthSpec::w1(n, update_frac)
+            .partitioned(0..n / 2)
+            .with_conflicts(conflict, n / 2..n);
+        cpu_spec.reads = reads;
+        let mut gpu_spec = SynthSpec::w1(n, update_frac).partitioned(n / 2..n);
+        gpu_spec.reads = reads;
+        Ok(SynthWorkload {
+            cpu_spec,
+            gpu_spec,
+            n_words: n,
+        })
+    }
+}
+
+impl Workload for SynthWorkload {
+    fn name(&self) -> &str {
+        "synth"
+    }
+
+    fn n_words(&self) -> usize {
+        self.n_words
+    }
+
+    fn build(
+        &self,
+        stmr: Arc<SharedStmr>,
+        tm: Arc<dyn GuestTm>,
+        map: &ShardMap,
+        gpu_batch: usize,
+        cfg: &SystemConfig,
+    ) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>) {
+        let cpu = SynthCpu::new(
+            stmr,
+            tm,
+            self.cpu_spec.clone(),
+            cfg.cpu_threads,
+            cfg.cpu_txn_s,
+            cfg.seed,
+        );
+        let mut gpus: Vec<Box<dyn GpuDriver>> = Vec::with_capacity(map.n_shards());
+        for d in 0..map.n_shards() {
+            let mut spec = self.gpu_spec.clone().homed(map.clone(), d);
+            if map.n_shards() > 1 {
+                spec = spec.with_cross_shard(cfg.cross_shard_prob);
+            }
+            gpus.push(Box::new(SynthGpu::new(
+                spec,
+                gpu_batch,
+                cfg.gpu_kernel_latency_s,
+                cfg.gpu_txn_s,
+                gpu_seed(cfg.seed, d),
+            )));
+        }
+        (Box::new(cpu), gpus)
+    }
+
+    fn check_invariants(&self, stmr: &SharedStmr) -> Result<()> {
+        // The generators only ever write values in [0, 1 << 20] (a uniform
+        // draw below 2^20 plus a 1-bit read dependency), so any word
+        // outside that range means a corrupted merge/rollback.
+        for w in 0..stmr.len() {
+            let v = stmr.load(w);
+            if !(0..=1 << 20).contains(&v) {
+                bail!("synth: word {w} = {v} outside the generated value domain");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// MemcachedGPU as a [`Workload`]; the oracle checks the structural cache
+/// invariants of the set-associative table.
+pub struct MemcachedWorkload {
+    /// Cache configuration.
+    pub mc: McConfig,
+    seed: u64,
+}
+
+impl MemcachedWorkload {
+    /// From the `[memcached]` section: `n_sets`, `steal`.
+    pub fn from_raw(raw: &Raw, cfg: &SystemConfig) -> Result<Self> {
+        let n_sets: usize = raw.get_or("memcached.n_sets", 1usize << 12)?;
+        let mut mc = McConfig::new(n_sets);
+        mc.steal_shift = raw.get_or("memcached.steal", 0.0)?;
+        Ok(MemcachedWorkload { mc, seed: cfg.seed })
+    }
+}
+
+impl Workload for MemcachedWorkload {
+    fn name(&self) -> &str {
+        "memcached"
+    }
+
+    fn n_words(&self) -> usize {
+        self.mc.n_words()
+    }
+
+    fn init_words(&self, words: &mut [i32]) {
+        init_cache_words(words, self.mc.n_sets);
+    }
+
+    fn build(
+        &self,
+        stmr: Arc<SharedStmr>,
+        tm: Arc<dyn GuestTm>,
+        map: &ShardMap,
+        gpu_batch: usize,
+        cfg: &SystemConfig,
+    ) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>) {
+        let world = McWorld::new_sharded(
+            self.mc.clone(),
+            self.seed,
+            self.mc.steal_shift > 0.0,
+            map.clone(),
+        );
+        let cpu = McCpu::new(
+            stmr,
+            tm,
+            world.clone(),
+            self.mc.clone(),
+            cfg.cpu_threads,
+            cfg.cpu_txn_s,
+        );
+        let mut gpus: Vec<Box<dyn GpuDriver>> = Vec::with_capacity(map.n_shards());
+        for d in 0..map.n_shards() {
+            gpus.push(Box::new(
+                McGpu::new(
+                    world.clone(),
+                    self.mc.clone(),
+                    gpu_batch,
+                    cfg.gpu_kernel_latency_s,
+                    cfg.gpu_txn_s,
+                )
+                .on_device(d),
+            ));
+        }
+        (Box::new(cpu), gpus)
+    }
+
+    fn check_invariants(&self, stmr: &SharedStmr) -> Result<()> {
+        // Structural cache invariants: within every set, live keys are
+        // distinct and hash to that set. Any violation means a merge mixed
+        // two devices' inserts without the set-timestamp conflict firing.
+        let n_sets = self.mc.n_sets;
+        for s in 0..n_sets {
+            let base = s * mc::WORDS_PER_SET;
+            let mut keys = Vec::with_capacity(mc::WAYS);
+            for w in 0..mc::WAYS {
+                let k = stmr.load(base + mc::OFF_KEYS + w);
+                if k == -1 {
+                    continue;
+                }
+                if k < 0 {
+                    bail!("memcached: set {s} way {w} holds invalid key {k}");
+                }
+                if mc::hash(k, n_sets) != s {
+                    bail!("memcached: key {k} stored in set {s}, hashes elsewhere");
+                }
+                if keys.contains(&k) {
+                    bail!("memcached: key {k} duplicated within set {s}");
+                }
+                keys.push(k);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Raw;
+
+    fn cfg() -> SystemConfig {
+        let mut c = SystemConfig::from_raw(&Raw::new()).unwrap();
+        c.n_words = 1 << 12;
+        c
+    }
+
+    #[test]
+    fn factory_builds_every_workload() {
+        let c = cfg();
+        let raw = Raw::new();
+        for name in ["synth", "memcached", "bank", "kmeans", "zipfkv", "zipf-kv"] {
+            let w = from_raw(name, &raw, &c).unwrap();
+            assert!(w.n_words() > 0, "{name}");
+            let mut words = vec![0; w.n_words()];
+            w.init_words(&mut words);
+            // A fresh image must satisfy the oracle.
+            let stmr = SharedStmr::new(w.n_words());
+            stmr.install_range(0, &words);
+            w.check_invariants(&stmr).unwrap();
+        }
+        assert!(from_raw("nope", &raw, &c).is_err());
+    }
+
+    #[test]
+    fn per_app_sections_parse() {
+        let c = cfg();
+        let raw = Raw::parse(
+            "[bank]\naccounts = 512\n[kmeans]\npoints = 256\n[zipfkv]\nkeys = 128\n",
+        )
+        .unwrap();
+        assert_eq!(from_raw("bank", &raw, &c).unwrap().n_words(), 512);
+        assert_eq!(from_raw("zipfkv", &raw, &c).unwrap().n_words(), 256);
+        assert!(from_raw("kmeans", &raw, &c).unwrap().n_words() >= 256);
+    }
+
+    #[test]
+    fn synth_oracle_flags_out_of_domain_words() {
+        let c = cfg();
+        let w = from_raw("synth", &Raw::new(), &c).unwrap();
+        let stmr = SharedStmr::new(w.n_words());
+        stmr.store(7, -3);
+        assert!(w.check_invariants(&stmr).is_err());
+    }
+
+    #[test]
+    fn memcached_oracle_flags_misplaced_key() {
+        let c = cfg();
+        let raw = Raw::parse("[memcached]\nn_sets = 64\n").unwrap();
+        let w = from_raw("memcached", &raw, &c).unwrap();
+        let mut words = vec![0; w.n_words()];
+        w.init_words(&mut words);
+        let stmr = SharedStmr::new(w.n_words());
+        stmr.install_range(0, &words);
+        // Plant a key in a set it does not hash to.
+        let k = 10i32;
+        let wrong_set = (mc::hash(k, 64) + 1) % 64;
+        stmr.store(wrong_set * mc::WORDS_PER_SET + mc::OFF_KEYS, k);
+        assert!(w.check_invariants(&stmr).is_err());
+    }
+}

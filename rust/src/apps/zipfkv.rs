@@ -1,0 +1,721 @@
+//! Zipf-KV: skewed read/update key-value store with a version-monotonicity
+//! oracle over the CPU write log.
+//!
+//! Each key owns two adjacent STMR words — `value` at `2k`, `version` at
+//! `2k + 1` — and every update transaction bumps the version while
+//! rewriting the value.  Key popularity is Zipfian with tunable `theta`,
+//! so a handful of hot keys absorb most of the traffic (the pointer-ish,
+//! skewed shape uniform synthetics cannot produce).  Keys are split
+//! CPU-low / GPU-high like the other apps, GPU keys shard-homed through
+//! the cluster's [`ShardMap`]; `hot_prob` sends a GPU update to a **hot
+//! key of the GPU half regardless of owner** — deliberate cross-shard
+//! write traffic for the inter-device detection machinery.
+//!
+//! **Oracle.** The CPU side records every write-log entry it generates
+//! into a shared trace; at round end the trace's pending tail is promoted
+//! iff the round's CPU commits survived (they always do except under
+//! favor-GPU aborts, where the engine rolls the CPU back and truncates
+//! the very same entries from its shipping log).  `check_invariants`
+//! replays the surviving trace: for every version word the recorded
+//! values must be non-decreasing in commit order, and the final committed
+//! state must be at least as fresh as the last surviving record.  Any
+//! misordered merge, lost rollback or stale-replica increment surfaces as
+//! a version that went backwards.
+//!
+//! GPU updates precompute `version + 1` host-side from the device replica
+//! (store mode) with both key words in the read set — sound per the
+//! PR-STM priority-rule argument in [`super::kmeans`]'s module docs;
+//! losers are regenerated, never replayed.
+
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::workload::{gpu_seed, Workload};
+use crate::cluster::shard::ShardMap;
+use crate::config::{PolicyKind, Raw, SystemConfig};
+use crate::coordinator::round::{CpuDriver, CpuSlice, GpuDriver, GpuSlice};
+use crate::gpu::{GpuDevice, TxnBatch};
+use crate::stm::{GuestTm, SharedStmr, WriteEntry};
+use crate::util::{Rng, Zipf};
+
+/// Zipf-KV workload configuration (`[zipfkv]` config section).
+#[derive(Debug, Clone)]
+pub struct ZipfKvConfig {
+    /// Keys (two STMR words each).
+    pub n_keys: usize,
+    /// Zipf exponent over each side's key ranks (0 = uniform).
+    pub theta: f64,
+    /// Fraction of update transactions.
+    pub update_frac: f64,
+    /// Keys read per read-only transaction.
+    pub reads: usize,
+    /// Hot-key pool: the `hot_keys` most popular keys of the GPU half.
+    pub hot_keys: usize,
+    /// Probability a GPU update targets a hot key regardless of its owner
+    /// shard (cross-shard write traffic; cluster only).
+    pub hot_prob: f64,
+}
+
+impl ZipfKvConfig {
+    /// Defaults over `n_keys`.
+    pub fn new(n_keys: usize) -> Self {
+        ZipfKvConfig {
+            n_keys,
+            theta: 0.8,
+            update_frac: 0.2,
+            reads: 4,
+            hot_keys: 16,
+            hot_prob: 0.0,
+        }
+    }
+
+    /// Parse the `[zipfkv]` section.
+    pub fn from_raw(raw: &Raw) -> Result<Self> {
+        let d = ZipfKvConfig::new(raw.get_or("zipfkv.keys", 1usize << 13)?);
+        Ok(ZipfKvConfig {
+            n_keys: d.n_keys,
+            theta: raw.get_or("zipfkv.theta", d.theta)?,
+            update_frac: raw.get_or("zipfkv.update_frac", d.update_frac)?,
+            reads: raw.get_or("zipfkv.reads", d.reads)?,
+            hot_keys: raw.get_or("zipfkv.hot_keys", d.hot_keys)?,
+            hot_prob: raw.get_or("zipfkv.hot_prob", d.hot_prob)?,
+        })
+    }
+
+    /// STMR words.
+    pub fn n_words(&self) -> usize {
+        2 * self.n_keys
+    }
+
+    /// Word holding key `k`'s value.
+    pub fn val_w(&self, k: usize) -> usize {
+        2 * k
+    }
+
+    /// Word holding key `k`'s version.
+    pub fn ver_w(&self, k: usize) -> usize {
+        2 * k + 1
+    }
+}
+
+/// The shared write-log trace behind the monotonicity oracle.
+pub struct ZkTrace {
+    /// Entries of the round in flight (fate unknown).
+    pending: Vec<WriteEntry>,
+    /// Entries whose round outcome kept the CPU's commits.
+    committed: Vec<WriteEntry>,
+    /// Under favor-GPU a failed round rolls the CPU back, so the pending
+    /// tail must be discarded exactly when the engine truncates its log.
+    cpu_loses_on_abort: bool,
+    /// Rounds whose tail was promoted / discarded (diagnostics).
+    pub rounds_promoted: u64,
+    /// Rounds whose tail was discarded.
+    pub rounds_discarded: u64,
+}
+
+impl ZkTrace {
+    fn new(cpu_loses_on_abort: bool) -> Self {
+        ZkTrace {
+            pending: Vec::new(),
+            committed: Vec::new(),
+            cpu_loses_on_abort,
+            rounds_promoted: 0,
+            rounds_discarded: 0,
+        }
+    }
+
+    fn record(&mut self, entries: &[WriteEntry]) {
+        self.pending.extend_from_slice(entries);
+    }
+
+    /// Round boundary: promote or discard the pending tail.
+    fn round_end(&mut self, committed: bool) {
+        if committed || !self.cpu_loses_on_abort {
+            self.committed.append(&mut self.pending);
+            self.rounds_promoted += 1;
+        } else {
+            self.pending.clear();
+            self.rounds_discarded += 1;
+        }
+    }
+
+    /// Surviving entries recorded so far (pending tail excluded).
+    pub fn surviving(&self) -> &[WriteEntry] {
+        &self.committed
+    }
+}
+
+/// CPU-side zipf-kv driver.
+pub struct ZipfKvCpu {
+    stmr: Arc<SharedStmr>,
+    tm: Arc<dyn GuestTm>,
+    cfg: ZipfKvConfig,
+    trace: Arc<Mutex<ZkTrace>>,
+    /// Key range this side serves.
+    partition: Range<usize>,
+    /// Modeled worker threads.
+    pub threads: usize,
+    /// Per-transaction execution time per worker (virtual seconds).
+    pub txn_s: f64,
+    rng: Rng,
+    zipf: Zipf,
+    read_only: bool,
+    debt: f64,
+}
+
+impl ZipfKvCpu {
+    /// Build a CPU driver over a zeroed zipf-kv STMR.
+    pub fn new(
+        stmr: Arc<SharedStmr>,
+        tm: Arc<dyn GuestTm>,
+        cfg: ZipfKvConfig,
+        trace: Arc<Mutex<ZkTrace>>,
+        partition: Range<usize>,
+        threads: usize,
+        txn_s: f64,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(stmr.len(), cfg.n_words());
+        assert!(!partition.is_empty());
+        let zipf = Zipf::new(partition.len() as u64, cfg.theta);
+        ZipfKvCpu {
+            stmr,
+            tm,
+            cfg,
+            trace,
+            partition,
+            threads,
+            txn_s,
+            rng: Rng::new(seed),
+            zipf,
+            read_only: false,
+            debt: 0.0,
+        }
+    }
+
+    /// Transactions per virtual second at full tilt.
+    pub fn rate(&self) -> f64 {
+        self.threads as f64 / self.txn_s
+    }
+
+    fn sample_key(&mut self) -> usize {
+        self.partition.start + self.zipf.sample(&mut self.rng) as usize
+    }
+
+    fn run_one(&mut self, log: &mut Vec<WriteEntry>) -> u32 {
+        let update = !self.read_only && self.rng.chance(self.cfg.update_frac);
+        if update {
+            let k = self.sample_key();
+            let (vw, verw) = (self.cfg.val_w(k), self.cfg.ver_w(k));
+            let val = self.rng.below(1 << 20) as i32;
+            let r = self.tm.execute_into(
+                &self.stmr,
+                &mut |tx| {
+                    let _old = tx.read(vw)?;
+                    let ver = tx.read(verw)?;
+                    tx.write(vw, val)?;
+                    tx.write(verw, ver.wrapping_add(1))?;
+                    Ok(())
+                },
+                log,
+            );
+            r.retries + 1
+        } else {
+            let keys: Vec<usize> = (0..self.cfg.reads).map(|_| self.sample_key()).collect();
+            let r = self.tm.execute_into(
+                &self.stmr,
+                &mut |tx| {
+                    for &k in &keys {
+                        let _v = tx.read(self.cfg.val_w(k))?;
+                        let _ver = tx.read(self.cfg.ver_w(k))?;
+                    }
+                    Ok(())
+                },
+                log,
+            );
+            r.retries + 1
+        }
+    }
+}
+
+impl CpuDriver for ZipfKvCpu {
+    fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice {
+        let before = log.len();
+        let want = dur_s * self.rate() + self.debt;
+        let n = want.floor() as u64;
+        self.debt = want - n as f64;
+        let mut attempts = 0u64;
+        for _ in 0..n {
+            attempts += self.run_one(log) as u64;
+        }
+        // Feed the oracle's trace with exactly what this slice logged.
+        if log.len() > before {
+            self.trace.lock().unwrap().record(&log[before..]);
+        }
+        CpuSlice {
+            commits: n,
+            attempts,
+        }
+    }
+
+    fn stmr(&self) -> &SharedStmr {
+        &self.stmr
+    }
+
+    fn set_read_only(&mut self, ro: bool) {
+        self.read_only = ro;
+    }
+    // snapshot/rollback: the trait's default SharedStmr path.
+}
+
+/// GPU-side zipf-kv driver (device `dev`, shard-homed keys).
+pub struct ZipfKvGpu {
+    cfg: ZipfKvConfig,
+    trace: Arc<Mutex<ZkTrace>>,
+    map: ShardMap,
+    dev: usize,
+    /// Key range the GPU side serves (before homing).
+    partition: Range<usize>,
+    /// Batch size.
+    pub batch: usize,
+    /// Kernel-activation latency (virtual seconds).
+    pub kernel_latency_s: f64,
+    /// Per-transaction device time (virtual seconds).
+    pub txn_s: f64,
+    rng: Rng,
+    zipf: Zipf,
+    budget_carry: f64,
+}
+
+impl ZipfKvGpu {
+    /// Build the driver for shard `dev` of `map`.
+    pub fn new(
+        cfg: ZipfKvConfig,
+        trace: Arc<Mutex<ZkTrace>>,
+        map: ShardMap,
+        dev: usize,
+        partition: Range<usize>,
+        batch: usize,
+        kernel_latency_s: f64,
+        txn_s: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(dev < map.n_shards());
+        assert!(
+            map.n_shards() == 1 || map.shard_bits() >= 1,
+            "zipfkv needs >= 2-word shard blocks to keep key pairs whole"
+        );
+        let zipf = Zipf::new(partition.len() as u64, cfg.theta);
+        ZipfKvGpu {
+            cfg,
+            trace,
+            map,
+            dev,
+            partition,
+            batch,
+            kernel_latency_s,
+            txn_s,
+            rng: Rng::new(seed),
+            zipf,
+            budget_carry: 0.0,
+        }
+    }
+
+    /// Device seconds one kernel activation costs.
+    pub fn batch_cost(&self) -> f64 {
+        self.kernel_latency_s + self.batch as f64 * self.txn_s
+    }
+
+    /// Home a key onto this device's shard (pairs stay whole because
+    /// shard blocks are at least two words and stripe-aligned).
+    fn home_key(&self, k: usize) -> usize {
+        self.map.rehome(self.cfg.val_w(k), self.dev) / 2
+    }
+
+    fn sample_key(&mut self) -> usize {
+        let k = self.partition.start + self.zipf.sample(&mut self.rng) as usize;
+        self.home_key(k)
+    }
+
+    fn fill_batch(&mut self, stmr: &[i32]) -> TxnBatch {
+        let r = (2 * self.cfg.reads).max(2);
+        let w = 2;
+        let mut batch = TxnBatch::empty(self.batch, r, w);
+        for i in 0..self.batch {
+            if self.rng.chance(self.cfg.update_frac) {
+                let hot = self.map.n_shards() > 1
+                    && self.cfg.hot_prob > 0.0
+                    && self.rng.chance(self.cfg.hot_prob);
+                let k = if hot {
+                    // A hot key of the GPU half, wherever it is homed:
+                    // deliberate cross-shard write traffic.
+                    self.partition.start
+                        + self
+                            .rng
+                            .below_usize(self.cfg.hot_keys.min(self.partition.len()))
+                } else {
+                    self.sample_key()
+                };
+                let (vw, verw) = (self.cfg.val_w(k), self.cfg.ver_w(k));
+                batch.read_idx[i * r] = vw as i32;
+                batch.read_idx[i * r + 1] = verw as i32;
+                batch.write_idx[i * w] = vw as i32;
+                batch.write_val[i * w] = self.rng.below(1 << 20) as i32;
+                batch.write_idx[i * w + 1] = verw as i32;
+                // Host-side RMW from the replica; the read-set entry above
+                // makes PR-STM abort us if an earlier committer bumps it.
+                batch.write_val[i * w + 1] = stmr[verw].wrapping_add(1);
+            } else {
+                for j in 0..self.cfg.reads {
+                    let k = self.sample_key();
+                    batch.read_idx[i * r + 2 * j] = self.cfg.val_w(k) as i32;
+                    batch.read_idx[i * r + 2 * j + 1] = self.cfg.ver_w(k) as i32;
+                }
+            }
+            batch.op[i] = 1; // store: absolute precomputed values
+        }
+        batch
+    }
+}
+
+impl GpuDriver for ZipfKvGpu {
+    fn run(&mut self, device: &mut GpuDevice, budget_s: f64) -> Result<GpuSlice> {
+        let mut out = GpuSlice::default();
+        let cost = self.batch_cost();
+        let mut left = budget_s + self.budget_carry;
+        while left >= cost {
+            let batch = self.fill_batch(device.stmr());
+            let r = device.run_txn_batch(&batch)?;
+            // Losers regenerate from fresh replica state (no verbatim
+            // retry: their precomputed versions are stale).
+            out.commits += r.n_commits as u64;
+            out.attempts += self.batch as u64;
+            out.batches += 1;
+            out.busy_s += cost;
+            left -= cost;
+        }
+        self.budget_carry = left;
+        Ok(out)
+    }
+
+    fn on_round_end(&mut self, committed: bool) {
+        self.budget_carry = 0.0;
+        // Device 0 owns the round boundary of the oracle trace (every
+        // device sees the same `committed` for a given round).
+        if self.dev == 0 {
+            self.trace.lock().unwrap().round_end(committed);
+        }
+    }
+}
+
+/// Zipf-KV as a [`Workload`].
+pub struct ZipfKvWorkload {
+    /// Workload configuration.
+    pub cfg: ZipfKvConfig,
+    seed: u64,
+    trace: Arc<Mutex<ZkTrace>>,
+}
+
+impl ZipfKvWorkload {
+    /// Wrap a config; the system config supplies the seed and the policy
+    /// (which decides whether aborted rounds discard CPU log entries).
+    pub fn new(cfg: ZipfKvConfig, sys: &SystemConfig) -> Self {
+        let cpu_loses = sys.policy == PolicyKind::FavorGpu;
+        ZipfKvWorkload {
+            cfg,
+            seed: sys.seed,
+            trace: Arc::new(Mutex::new(ZkTrace::new(cpu_loses))),
+        }
+    }
+
+    /// The shared oracle trace (tests peek at promotion counters).
+    pub fn trace(&self) -> Arc<Mutex<ZkTrace>> {
+        self.trace.clone()
+    }
+}
+
+impl Workload for ZipfKvWorkload {
+    fn name(&self) -> &str {
+        "zipfkv"
+    }
+
+    fn n_words(&self) -> usize {
+        self.cfg.n_words()
+    }
+
+    fn build(
+        &self,
+        stmr: Arc<SharedStmr>,
+        tm: Arc<dyn GuestTm>,
+        map: &ShardMap,
+        gpu_batch: usize,
+        cfg: &SystemConfig,
+    ) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>) {
+        let nk = self.cfg.n_keys;
+        let cpu = ZipfKvCpu::new(
+            stmr,
+            tm,
+            self.cfg.clone(),
+            self.trace.clone(),
+            0..nk / 2,
+            cfg.cpu_threads,
+            cfg.cpu_txn_s,
+            self.seed,
+        );
+        let mut gpus: Vec<Box<dyn GpuDriver>> = Vec::with_capacity(map.n_shards());
+        for d in 0..map.n_shards() {
+            gpus.push(Box::new(ZipfKvGpu::new(
+                self.cfg.clone(),
+                self.trace.clone(),
+                map.clone(),
+                d,
+                nk / 2..nk,
+                gpu_batch,
+                cfg.gpu_kernel_latency_s,
+                cfg.gpu_txn_s,
+                gpu_seed(self.seed, d),
+            )));
+        }
+        (Box::new(cpu), gpus)
+    }
+
+    fn check_invariants(&self, stmr: &SharedStmr) -> Result<()> {
+        if stmr.len() != self.cfg.n_words() {
+            bail!("zipfkv: STMR size mismatch");
+        }
+        let trace = self.trace.lock().unwrap();
+        // Per-key version monotonicity over the surviving CPU write log
+        // (record order == the guest TM's commit order).
+        let mut last: std::collections::HashMap<u32, (i32, i32)> = Default::default();
+        for e in trace.surviving() {
+            if e.addr as usize % 2 == 0 {
+                continue; // value word
+            }
+            if let Some(&(prev, prev_ts)) = last.get(&e.addr) {
+                if e.val < prev {
+                    bail!(
+                        "zipfkv: version of word {} went backwards: {} (ts {}) \
+                         after {} (ts {})",
+                        e.addr,
+                        e.val,
+                        e.ts,
+                        prev,
+                        prev_ts
+                    );
+                }
+            }
+            last.insert(e.addr, (e.val, e.ts));
+        }
+        // Committed state must be at least as fresh as the last surviving
+        // record for every CPU-side key (no other writer touches them).
+        for (addr, (ver, _)) in &last {
+            let a = *addr as usize;
+            if a < self.cfg.n_keys {
+                // CPU half: version words below n_keys (= 2 * (n_keys/2)).
+                let cur = stmr.load(a);
+                if cur < *ver {
+                    bail!(
+                        "zipfkv: committed version {cur} at word {a} older than \
+                         surviving log record {ver}"
+                    );
+                }
+            }
+        }
+        // Versions never go negative (they start at 0 and only increment).
+        for k in 0..self.cfg.n_keys {
+            let v = stmr.load(self.cfg.ver_w(k));
+            if v < 0 {
+                bail!("zipfkv: key {k} version is negative ({v})");
+            }
+        }
+        Ok(())
+    }
+
+    fn stats_summary(&self) -> String {
+        let t = self.trace.lock().unwrap();
+        format!(
+            "zipfkv trace: {} surviving entries, {} rounds promoted, {} discarded",
+            t.surviving().len(),
+            t.rounds_promoted,
+            t.rounds_discarded
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Raw;
+    use crate::gpu::Backend;
+    use crate::stm::tinystm::TinyStm;
+    use crate::stm::GlobalClock;
+
+    fn sys() -> SystemConfig {
+        SystemConfig::from_raw(&Raw::new()).unwrap()
+    }
+
+    fn wl(n_keys: usize) -> ZipfKvWorkload {
+        ZipfKvWorkload::new(ZipfKvConfig::new(n_keys), &sys())
+    }
+
+    #[test]
+    fn cpu_updates_bump_versions_and_record_trace() {
+        let w = wl(1 << 10);
+        let stmr = Arc::new(SharedStmr::new(w.n_words()));
+        let tm = Arc::new(TinyStm::with_clock(Arc::new(GlobalClock::new())));
+        let mut cfg = w.cfg.clone();
+        cfg.update_frac = 1.0;
+        let mut cpu = ZipfKvCpu::new(
+            stmr.clone(),
+            tm,
+            cfg,
+            w.trace(),
+            0..512,
+            8,
+            2e-6,
+            1,
+        );
+        let mut log = Vec::new();
+        let s = cpu.run(0.002, &mut log);
+        assert!(s.commits > 1_000);
+        {
+            let mut t = w.trace.lock().unwrap();
+            assert_eq!(t.pending.len(), log.len(), "every entry recorded");
+            t.round_end(true);
+        }
+        w.check_invariants(&stmr).unwrap();
+        // The hottest key saw many updates.
+        assert!(stmr.load(w.cfg.ver_w(0)) > 10, "zipf head gets traffic");
+    }
+
+    #[test]
+    fn discarded_rounds_drop_pending_entries() {
+        let mut s = sys();
+        s.policy = PolicyKind::FavorGpu;
+        let w = ZipfKvWorkload::new(ZipfKvConfig::new(64), &s);
+        {
+            let mut t = w.trace.lock().unwrap();
+            t.record(&[WriteEntry {
+                addr: 1,
+                val: 5,
+                ts: 1,
+            }]);
+            t.round_end(false);
+            assert_eq!(t.surviving().len(), 0, "favor-GPU abort discards");
+            t.record(&[WriteEntry {
+                addr: 1,
+                val: 1,
+                ts: 2,
+            }]);
+            t.round_end(true);
+            assert_eq!(t.surviving().len(), 1);
+        }
+        // The v=5 entry is gone, so v=1 after it is NOT a violation.
+        let stmr = SharedStmr::new(w.n_words());
+        stmr.store(1, 1);
+        w.check_invariants(&stmr).unwrap();
+    }
+
+    #[test]
+    fn oracle_catches_version_regression() {
+        let w = wl(64);
+        {
+            let mut t = w.trace.lock().unwrap();
+            t.record(&[
+                WriteEntry {
+                    addr: 3,
+                    val: 7,
+                    ts: 1,
+                },
+                WriteEntry {
+                    addr: 3,
+                    val: 6,
+                    ts: 2,
+                },
+            ]);
+            t.round_end(true);
+        }
+        let stmr = SharedStmr::new(w.n_words());
+        assert!(w.check_invariants(&stmr).is_err());
+    }
+
+    #[test]
+    fn gpu_updates_bump_device_versions() {
+        let w = wl(1 << 10);
+        let nk = w.cfg.n_keys;
+        let mut cfg = w.cfg.clone();
+        cfg.update_frac = 1.0;
+        let map = ShardMap::solo(w.n_words());
+        let mut gpu = ZipfKvGpu::new(
+            cfg,
+            w.trace(),
+            map,
+            0,
+            nk / 2..nk,
+            128,
+            20e-6,
+            230e-9,
+            3,
+        );
+        let mut d = GpuDevice::new(w.n_words(), 0, Backend::Native);
+        d.begin_round();
+        let s = gpu.run(&mut d, 0.01).unwrap();
+        assert!(s.commits > 0);
+        // Versions on the device replica are consistent: ver word for the
+        // GPU half only, each >= 0, and the hot head was touched.
+        let mut bumped = 0;
+        for k in nk / 2..nk {
+            let v = d.stmr()[w.cfg.ver_w(k)];
+            assert!(v >= 0);
+            if v > 0 {
+                bumped += 1;
+            }
+        }
+        assert!(bumped > 0, "some versions bumped");
+        // No writes below the partition.
+        for (st, e) in d.ws_bmp().dirty_word_ranges() {
+            for word in st..e {
+                assert!(word >= nk, "wrote CPU-half word {word}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_gpu_homes_normal_keys_but_hot_keys_cross() {
+        let n_keys = 1 << 12;
+        let mut cfg = ZipfKvConfig::new(n_keys);
+        cfg.update_frac = 1.0;
+        cfg.hot_prob = 0.5;
+        let map = ShardMap::new(2 * n_keys, 2, 4); // 16-word blocks
+        let s = sys();
+        let w = ZipfKvWorkload::new(cfg.clone(), &s);
+        let mut gpu = ZipfKvGpu::new(
+            cfg,
+            w.trace(),
+            map.clone(),
+            1,
+            n_keys / 2..n_keys,
+            128,
+            20e-6,
+            230e-9,
+            5,
+        );
+        let mut d = GpuDevice::new(2 * n_keys, 0, Backend::Native);
+        d.begin_round();
+        gpu.run(&mut d, 0.01).unwrap();
+        let (mut own, mut foreign) = (0u32, 0u32);
+        for (st, e) in d.ws_bmp().dirty_word_ranges() {
+            for word in st..e {
+                if map.owner(word) == 1 {
+                    own += 1;
+                } else {
+                    foreign += 1;
+                }
+            }
+        }
+        assert!(own > 0, "homed traffic stays owned");
+        assert!(foreign > 0, "hot keys generate cross-shard writes");
+    }
+}

@@ -225,6 +225,12 @@ pub struct SystemConfig {
     /// Probability that a GPU update transaction redirects one write into
     /// another shard (cross-shard traffic injection; cluster only).
     pub cross_shard_prob: f64,
+    /// Application driven by `shetm run` / the workload builders:
+    /// `synth | memcached | bank | kmeans | zipfkv`.  Per-app knobs live in
+    /// their own config sections (`[bank]`, `[kmeans]`, `[zipfkv]`,
+    /// `[synth]`, `[memcached]`) and are parsed by
+    /// [`crate::apps::workload::from_raw`].
+    pub workload: String,
 }
 
 impl Default for SystemConfig {
@@ -250,6 +256,7 @@ impl Default for SystemConfig {
             n_gpus: 1,
             shard_bits: 12,
             cross_shard_prob: 0.0,
+            workload: "synth".to_string(),
         }
     }
 }
@@ -294,6 +301,7 @@ impl SystemConfig {
             n_gpus: raw.get_or("cluster.n_gpus", d.n_gpus)?,
             shard_bits: raw.get_or("cluster.shard_bits", d.shard_bits)?,
             cross_shard_prob: raw.get_or("cluster.cross_shard_prob", d.cross_shard_prob)?,
+            workload: raw.get("workload").unwrap_or(&d.workload).to_string(),
         })
     }
 }
@@ -344,6 +352,14 @@ period_ms = 2.5
         assert_eq!(cfg.n_gpus, 1, "single device by default");
         assert_eq!(cfg.shard_bits, 12, "16 KB ownership blocks");
         assert_eq!(cfg.cross_shard_prob, 0.0);
+        assert_eq!(cfg.workload, "synth");
+    }
+
+    #[test]
+    fn workload_key_parses() {
+        let raw = Raw::parse("workload = \"bank\"\n").unwrap();
+        let cfg = SystemConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.workload, "bank");
     }
 
     #[test]

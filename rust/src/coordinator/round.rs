@@ -60,13 +60,40 @@ pub trait CpuDriver {
     fn set_read_only(&mut self, _ro: bool) {}
 
     /// Snapshot the CPU state (favor-GPU policy; the paper uses fork/COW).
+    ///
+    /// The default stores a full-region copy inside the driver's
+    /// [`SharedStmr`], so `PolicyKind::FavorGpu` works with every driver
+    /// out of the box; drivers with extra host-side state must override
+    /// this (and [`Self::rollback`]) to save it alongside.
     fn snapshot(&mut self) {
-        unimplemented!("this CPU driver does not support the favor-GPU policy")
+        self.stmr().save_snapshot();
     }
 
     /// Restore the snapshot (favor-GPU round abort).
     fn rollback(&mut self) {
-        unimplemented!("this CPU driver does not support the favor-GPU policy")
+        self.stmr().restore_snapshot();
+    }
+}
+
+impl CpuDriver for Box<dyn CpuDriver> {
+    fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice {
+        (**self).run(dur_s, log)
+    }
+
+    fn stmr(&self) -> &SharedStmr {
+        (**self).stmr()
+    }
+
+    fn set_read_only(&mut self, ro: bool) {
+        (**self).set_read_only(ro)
+    }
+
+    fn snapshot(&mut self) {
+        (**self).snapshot()
+    }
+
+    fn rollback(&mut self) {
+        (**self).rollback()
     }
 }
 
@@ -93,6 +120,16 @@ pub trait GpuDriver {
     /// Round ended: `committed` tells the driver whether its speculative
     /// work survived (on `false` it must restore/requeue consumed input).
     fn on_round_end(&mut self, _committed: bool) {}
+}
+
+impl GpuDriver for Box<dyn GpuDriver> {
+    fn run(&mut self, device: &mut GpuDevice, budget_s: f64) -> Result<GpuSlice> {
+        (**self).run(device, budget_s)
+    }
+
+    fn on_round_end(&mut self, committed: bool) {
+        (**self).on_round_end(committed)
+    }
 }
 
 /// Cost model for device compute and local copies (bus costs live in
@@ -585,7 +622,6 @@ mod tests {
         counter: i32,
         ro: bool,
         debt: f64,
-        snap: Option<Vec<i32>>,
     }
 
     impl ScriptCpu {
@@ -599,7 +635,6 @@ mod tests {
                 counter: 0,
                 ro: false,
                 debt: 0.0,
-                snap: None,
             }
         }
     }
@@ -641,15 +676,8 @@ mod tests {
         fn set_read_only(&mut self, ro: bool) {
             self.ro = ro;
         }
-
-        fn snapshot(&mut self) {
-            self.snap = Some(self.stmr.snapshot());
-        }
-
-        fn rollback(&mut self) {
-            let snap = self.snap.take().expect("snapshot taken");
-            self.stmr.install_range(0, &snap);
-        }
+        // snapshot/rollback: the trait's default SharedStmr path — the
+        // favor-GPU tests below are its regression coverage.
     }
 
     /// Scripted GPU driver: each batch writes a fixed disjoint region, and

@@ -11,9 +11,12 @@ use anyhow::{bail, Result};
 
 use crate::apps::memcached::{init_cache_words, McConfig, McCpu, McGpu, McWorld};
 use crate::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
+use crate::apps::workload::Workload;
 use crate::cluster::{ClusterEngine, ShardMap};
 use crate::config::{GuestKind, SystemConfig};
-use crate::coordinator::round::{CostModel, EngineConfig, RoundEngine, Variant};
+use crate::coordinator::round::{
+    CostModel, CpuDriver, EngineConfig, GpuDriver, RoundEngine, Variant,
+};
 use crate::gpu::{Backend, GpuDevice};
 use crate::runtime::ArtifactStore;
 use crate::stm::htm::HtmEmu;
@@ -288,6 +291,84 @@ pub fn build_memcached_cluster_engine(
     engine
 }
 
+/// A single-device engine over boxed workload drivers.
+pub type WorkloadEngine = RoundEngine<Box<dyn CpuDriver>, Box<dyn GpuDriver>>;
+
+/// A cluster engine over boxed workload drivers.
+pub type WorkloadClusterEngine = ClusterEngine<Box<dyn CpuDriver>, Box<dyn GpuDriver>>;
+
+/// Shared workload-engine scaffolding: initialized STMR + guest TM +
+/// drivers built through the [`Workload`] trait for `map`'s shard count.
+fn workload_parts(
+    cfg: &SystemConfig,
+    w: &dyn Workload,
+    map: &ShardMap,
+    gpu_batch: usize,
+) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>) {
+    let n = w.n_words();
+    let stmr = Arc::new(SharedStmr::new(n));
+    let mut words = vec![0; n];
+    w.init_words(&mut words);
+    stmr.install_range(0, &words);
+    let tm = build_guest(cfg.guest, Arc::new(GlobalClock::new()));
+    let (cpu, gpus) = w.build(stmr, tm, map, gpu_batch, cfg);
+    assert_eq!(
+        gpus.len(),
+        map.n_shards(),
+        "workload {} built {} GPU drivers for {} shards",
+        w.name(),
+        gpus.len(),
+        map.n_shards()
+    );
+    (cpu, gpus)
+}
+
+/// Assemble a single-device engine for any [`Workload`].
+pub fn build_workload_engine(
+    cfg: &SystemConfig,
+    variant: Variant,
+    w: &dyn Workload,
+    gpu_batch: usize,
+    backend: Backend,
+) -> WorkloadEngine {
+    let map = ShardMap::solo(w.n_words());
+    let (cpu, mut gpus) = workload_parts(cfg, w, &map, gpu_batch);
+    let gpu = gpus.remove(0);
+    let device = GpuDevice::new(w.n_words(), cfg.bmp_shift, backend);
+    let mut engine =
+        RoundEngine::new(engine_config(cfg, variant), cost_model(cfg), device, cpu, gpu);
+    engine.align_replicas();
+    engine
+}
+
+/// Assemble a cluster engine for any [`Workload`] over `cluster.n_gpus`
+/// devices (bit-identical to [`build_workload_engine`] at `n_gpus = 1`:
+/// a one-shard map makes every rehoming the identity and the cluster
+/// machinery provably inert).
+pub fn build_workload_cluster_engine(
+    cfg: &SystemConfig,
+    variant: Variant,
+    w: &dyn Workload,
+    gpu_batch: usize,
+    backend: Backend,
+) -> WorkloadClusterEngine {
+    let map = shard_map(cfg, w.n_words());
+    let (cpu, gpus) = workload_parts(cfg, w, &map, gpu_batch);
+    let devices = (0..map.n_shards())
+        .map(|_| GpuDevice::new(w.n_words(), cfg.bmp_shift, backend.clone()))
+        .collect();
+    let mut engine = ClusterEngine::new(
+        engine_config(cfg, variant),
+        cost_model(cfg),
+        map,
+        devices,
+        cpu,
+        gpus,
+    );
+    engine.align_replicas();
+    engine
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -368,6 +449,47 @@ mod tests {
         assert!(e.stats.cpu_commits > 0);
         assert!(e.stats.gpu_attempts > 0);
         assert!(e.cluster.per_device.iter().all(|d| d.attempts > 0));
+    }
+
+    #[test]
+    fn workload_engines_run_and_pass_oracles() {
+        use crate::apps::workload::from_raw;
+        use crate::config::Raw;
+        let mut c = cfg();
+        c.seed = 5;
+        // Small regions: align shard stripes with the CPU/GPU half-split
+        // so homed GPU traffic stays in its half.
+        c.shard_bits = 6;
+        for name in ["bank", "kmeans", "zipfkv"] {
+            let raw = Raw::parse(
+                "[bank]\naccounts = 4096\n[kmeans]\npoints = 2048\n[zipfkv]\nkeys = 2048\n",
+            )
+            .unwrap();
+            // Single device.
+            let w = from_raw(name, &raw, &c).unwrap();
+            let mut e =
+                build_workload_engine(&c, Variant::Optimized, w.as_ref(), 128, Backend::Native);
+            e.run_rounds(2).unwrap();
+            e.drain().unwrap();
+            assert!(e.stats.cpu_commits > 0, "{name}");
+            assert!(e.stats.gpu_attempts > 0, "{name}");
+            w.check_invariants(e.cpu.stmr()).unwrap();
+            // Two sharded devices.
+            let mut c2 = c.clone();
+            c2.n_gpus = 2;
+            let w = from_raw(name, &raw, &c2).unwrap();
+            let mut e = build_workload_cluster_engine(
+                &c2,
+                Variant::Optimized,
+                w.as_ref(),
+                128,
+                Backend::Native,
+            );
+            assert_eq!(e.n_gpus(), 2, "{name}");
+            e.run_rounds(2).unwrap();
+            e.drain().unwrap();
+            w.check_invariants(e.cpu.stmr()).unwrap();
+        }
     }
 
     #[test]

@@ -26,10 +26,11 @@ use anyhow::{bail, Context, Result};
 
 use shetm::apps::memcached::McConfig;
 use shetm::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
+use shetm::apps::Workload;
 use shetm::cluster::ClusterStats;
 use shetm::config::{Raw, SystemConfig};
 use shetm::coordinator::baseline;
-use shetm::coordinator::round::Variant;
+use shetm::coordinator::round::{CpuDriver, Variant};
 use shetm::coordinator::RunStats;
 use shetm::gpu::{Backend, GpuDevice};
 use shetm::launch;
@@ -43,16 +44,32 @@ struct Cli {
     basic: bool,
     pjrt: bool,
     gpus: Option<usize>,
+    workload: Option<String>,
 }
 
 fn parse_cli() -> Result<Cli> {
-    let mut args = std::env::args().skip(1);
-    let cmd = args.next().unwrap_or_else(|| "help".to_string());
+    let mut all: Vec<String> = std::env::args().skip(1).collect();
+    // `shetm --workload bank ...` is sugar for `shetm run --workload ...`
+    // (but `--help`/`-h` keep printing help, as ever).
+    let is_help = matches!(all.first().map(|a| a.as_str()), Some("--help") | Some("-h"));
+    let is_flag = all.first().map(|a| a.starts_with('-')).unwrap_or(false);
+    let cmd = if all.is_empty() {
+        "help".to_string()
+    } else if is_help {
+        all.remove(0);
+        "help".to_string()
+    } else if is_flag {
+        "run".to_string()
+    } else {
+        all.remove(0)
+    };
+    let mut args = all.into_iter();
     let mut raw = Raw::new();
     let mut rounds = 50;
     let mut basic = false;
     let mut pjrt = false;
     let mut gpus = None;
+    let mut workload = None;
     while let Some(a) = args.next() {
         match a.as_str() {
             "--config" => {
@@ -78,6 +95,9 @@ fn parse_cli() -> Result<Cli> {
                         .context("--gpus")?,
                 );
             }
+            "--workload" => {
+                workload = Some(args.next().context("--workload needs a name")?);
+            }
             "--basic" => basic = true,
             "--pjrt" => pjrt = true,
             other => bail!("unknown argument {other:?} (try `shetm help`)"),
@@ -90,6 +110,7 @@ fn parse_cli() -> Result<Cli> {
         basic,
         pjrt,
         gpus,
+        workload,
     })
 }
 
@@ -264,6 +285,56 @@ fn cmd_memcached(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `shetm run [--workload NAME] [--gpus N]`: drive any [`shetm::apps`]
+/// workload through its `Workload` implementation and verify its
+/// correctness oracle afterwards — the run FAILS if the invariant breaks.
+fn cmd_run(cli: &Cli) -> Result<()> {
+    let cfg = system_config(cli)?;
+    if cli.pjrt || !cfg.artifacts_dir.is_empty() {
+        bail!("`shetm run` drives the native backend only (drop --pjrt)");
+    }
+    let name = cli
+        .workload
+        .clone()
+        .unwrap_or_else(|| cfg.workload.clone());
+    let w = shetm::apps::workload::from_raw(&name, &cli.raw, &cfg)?;
+    let label = format!("workload {name} on {} device(s)", cfg.n_gpus.max(1));
+    if cfg.n_gpus > 1 {
+        let mut engine = launch::build_workload_cluster_engine(
+            &cfg,
+            variant(cli),
+            w.as_ref(),
+            1024,
+            Backend::Native,
+        );
+        engine.run_rounds(cli.rounds)?;
+        engine.drain()?;
+        print_stats(&label, &engine.stats);
+        print_cluster_stats(&engine.stats, &engine.cluster);
+        w.check_invariants(engine.cpu.stmr())
+            .context("correctness oracle FAILED")?;
+    } else {
+        let mut engine = launch::build_workload_engine(
+            &cfg,
+            variant(cli),
+            w.as_ref(),
+            1024,
+            Backend::Native,
+        );
+        engine.run_rounds(cli.rounds)?;
+        engine.drain()?;
+        print_stats(&label, &engine.stats);
+        w.check_invariants(engine.cpu.stmr())
+            .context("correctness oracle FAILED")?;
+    }
+    let summary = w.stats_summary();
+    if !summary.is_empty() {
+        println!("  {summary}");
+    }
+    println!("  invariants        : OK ({name} oracle passed)");
+    Ok(())
+}
+
 fn cmd_baselines(cli: &Cli) -> Result<()> {
     let cfg = system_config(cli)?;
     let n = cfg.n_words;
@@ -301,6 +372,7 @@ fn main() -> Result<()> {
     let cli = parse_cli()?;
     match cli.cmd.as_str() {
         "info" => cmd_info(&cli),
+        "run" | "workload" => cmd_run(&cli),
         "synth" => cmd_synth(&cli),
         "memcached" => cmd_memcached(&cli),
         "baselines" => cmd_baselines(&cli),
@@ -315,11 +387,16 @@ fn main() -> Result<()> {
 const HELP: &str = "\
 shetm — Speculative Heterogeneous Transactional Memory (PACT'19 reproduction)
 
-USAGE: shetm <info|synth|memcached|baselines> [OPTIONS]
+USAGE: shetm <info|run|synth|memcached|baselines> [OPTIONS]
+
+  run runs any application through the Workload trait and verifies its
+  built-in correctness oracle afterwards; `shetm --workload bank --gpus 2`
+  is shorthand for `shetm run --workload bank --gpus 2`.
 
 OPTIONS:
   --config FILE     load a TOML-subset config file
   --set key=value   override a config key (repeatable)
+  --workload NAME   synth|memcached|bank|kmeans|zipfkv (run command)
   --rounds N        synchronization rounds (default 50)
   --gpus N          shard the STMR across N simulated devices (cluster)
   --basic           basic algorithm variant (Fig. 1a)
@@ -330,4 +407,9 @@ KEYS (defaults): stmr.n_words=262144 stmr.bmp_shift=0 cpu.threads=8
   hetm.policy=favor-cpu|favor-gpu|starvation-guard hetm.early_validation
   bus.latency_us bus.gbps gpu.kernel_latency_us gpu.txn_ns
   cluster.n_gpus=1 cluster.shard_bits=12 cluster.cross_shard_prob=0
-  memcached.n_sets memcached.steal runtime.artifacts seed";
+  memcached.n_sets memcached.steal runtime.artifacts seed
+  workload=synth|memcached|bank|kmeans|zipfkv plus per-app sections:
+  bank.accounts bank.balance bank.max_transfer bank.update_frac
+  bank.cross_prob kmeans.k kmeans.dim kmeans.points kmeans.probe
+  kmeans.hot_prob zipfkv.keys zipfkv.theta zipfkv.update_frac
+  zipfkv.hot_keys zipfkv.hot_prob";

@@ -23,6 +23,7 @@ pub mod norec;
 pub mod tinystm;
 
 use std::sync::atomic::{AtomicI32, AtomicI64, Ordering};
+use std::sync::Mutex;
 
 /// One committed write, as handed to SHeTM's commit callback (§IV-B).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -84,6 +85,10 @@ pub trait GuestTm: Send + Sync {
 /// while no transaction executes).
 pub struct SharedStmr {
     words: Box<[AtomicI32]>,
+    /// Round-start snapshot slot for the favor-GPU policy (the paper uses
+    /// fork/COW); filled by [`Self::save_snapshot`], consumed by
+    /// [`Self::restore_snapshot`].
+    snap: Mutex<Option<Vec<i32>>>,
 }
 
 impl SharedStmr {
@@ -93,6 +98,7 @@ impl SharedStmr {
         v.resize_with(n, || AtomicI32::new(0));
         SharedStmr {
             words: v.into_boxed_slice(),
+            snap: Mutex::new(None),
         }
     }
 
@@ -131,6 +137,24 @@ impl SharedStmr {
         for (i, &v) in data.iter().enumerate() {
             self.words[start + i].store(v, Ordering::Release);
         }
+    }
+
+    /// Save an internal full-region snapshot (favor-GPU round start; the
+    /// engine charges the fork/COW cost separately via its cost model).
+    pub fn save_snapshot(&self) {
+        *self.snap.lock().unwrap() = Some(self.snapshot());
+    }
+
+    /// Restore and consume the snapshot saved by [`Self::save_snapshot`]
+    /// (favor-GPU round abort). Panics if no snapshot is pending.
+    pub fn restore_snapshot(&self) {
+        let snap = self
+            .snap
+            .lock()
+            .unwrap()
+            .take()
+            .expect("save_snapshot must precede restore_snapshot");
+        self.install_range(0, &snap);
     }
 }
 
@@ -193,6 +217,23 @@ mod tests {
         assert_eq!(snap, vec![0, 5, 0, 0]);
         m.install_range(2, &[7, 8]);
         assert_eq!(m.snapshot(), vec![0, 5, 7, 8]);
+    }
+
+    #[test]
+    fn snapshot_slot_roundtrips_and_consumes() {
+        let m = SharedStmr::new(4);
+        m.store(2, 9);
+        m.save_snapshot();
+        m.store(2, 11);
+        m.store(0, 1);
+        m.restore_snapshot();
+        assert_eq!(m.snapshot(), vec![0, 0, 9, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "save_snapshot must precede")]
+    fn restore_without_save_panics() {
+        SharedStmr::new(2).restore_snapshot();
     }
 
     #[test]

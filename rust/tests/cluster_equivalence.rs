@@ -144,6 +144,83 @@ fn n1_matches_round_engine_starvation_guard() {
 }
 
 // ---------------------------------------------------------------------------
+// Golden-trace determinism: same seed ⇒ identical RunStats (and state),
+// across variants and cluster sizes. The whole virtual-time machinery is
+// deterministic by construction; this pins it so refactors cannot
+// accidentally introduce platform or ordering dependence.
+// ---------------------------------------------------------------------------
+
+fn run_trace(variant: Variant, n_gpus: usize, rounds: usize) -> (String, String, Vec<i32>) {
+    let n = 1 << 14;
+    let mut c = cfg(n, PolicyKind::FavorCpu);
+    c.n_gpus = n_gpus;
+    let (cpu_spec, gpu_spec) = specs(n, 0.005);
+    let mut e = launch::build_synth_cluster_engine(
+        &c,
+        variant,
+        cpu_spec,
+        gpu_spec,
+        256,
+        Backend::Native,
+    );
+    e.run_rounds(rounds).unwrap();
+    e.drain().unwrap();
+    let rounds_dbg = e
+        .round_log
+        .iter()
+        .map(|r| format!("{r:?}"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    (format!("{:?}", e.stats), rounds_dbg, e.cpu.stmr().snapshot())
+}
+
+#[test]
+fn golden_trace_same_seed_same_stats() {
+    for variant in [Variant::Basic, Variant::Optimized] {
+        for n_gpus in [1usize, 2] {
+            let a = run_trace(variant, n_gpus, 4);
+            let b = run_trace(variant, n_gpus, 4);
+            assert_eq!(
+                a.0, b.0,
+                "{variant:?}/n_gpus={n_gpus}: RunStats must be identical"
+            );
+            assert_eq!(
+                a.1, b.1,
+                "{variant:?}/n_gpus={n_gpus}: per-round stats must be identical"
+            );
+            assert_eq!(
+                a.2, b.2,
+                "{variant:?}/n_gpus={n_gpus}: final CPU state must be identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_trace_different_seeds_differ() {
+    // The determinism test would pass vacuously if the seed were ignored.
+    let n = 1 << 14;
+    let (cpu_spec, gpu_spec) = specs(n, 0.0);
+    let mut snaps = Vec::new();
+    for seed in [99u64, 100] {
+        let mut c = cfg(n, PolicyKind::FavorCpu);
+        c.seed = seed;
+        let mut e = launch::build_synth_cluster_engine(
+            &c,
+            Variant::Optimized,
+            cpu_spec.clone(),
+            gpu_spec.clone(),
+            256,
+            Backend::Native,
+        );
+        e.run_rounds(2).unwrap();
+        e.drain().unwrap();
+        snaps.push(e.cpu.stmr().snapshot());
+    }
+    assert_ne!(snaps[0], snaps[1], "seed must steer the trace");
+}
+
+// ---------------------------------------------------------------------------
 // Real-cluster behavior (n_gpus > 1).
 // ---------------------------------------------------------------------------
 

@@ -13,7 +13,7 @@ use shetm::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
 use shetm::config::{PolicyKind, SystemConfig};
 use shetm::coordinator::round::CpuDriver;
 use shetm::coordinator::round::Variant;
-use shetm::coordinator::{Affinity, Dispatcher, RoundLog};
+use shetm::coordinator::{Affinity, Dispatcher, Loser, Policy, RoundLog};
 use shetm::gpu::{native, Backend, Bitmap, GpuDevice, LogChunk, TxnBatch};
 use shetm::launch;
 use shetm::stm::WriteEntry;
@@ -101,6 +101,100 @@ fn prop_failed_rounds_leak_no_loser_state() {
         }
         if e.stats.discarded_commits == 0 {
             return Err("wasted work not accounted".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_policy_starvation_machine_matches_model() {
+    // The Policy state machine against a transparent model: the streak
+    // counts consecutive GPU-losing rounds, resets on ANY commit, and the
+    // read-only restriction engages exactly when the streak reaches the
+    // limit (and not one round earlier).
+    forall(Cases::new("policy_machine", 120).max_size(64), |rng, size| {
+        let limit = 1 + rng.below(6) as u32;
+        let mut p = Policy::new(PolicyKind::CpuWithStarvationGuard, limit);
+        if p.loser() != Loser::Gpu || p.conditional_apply() {
+            return Err("starvation guard must favor the CPU".into());
+        }
+        let mut streak = 0u32;
+        for round in 0..size {
+            let committed = rng.chance(0.5);
+            p.on_round(committed);
+            streak = if committed { 0 } else { streak + 1 };
+            if p.gpu_abort_streak() != streak {
+                return Err(format!(
+                    "round {round}: streak {} != model {streak} (limit {limit})",
+                    p.gpu_abort_streak()
+                ));
+            }
+            let expect_ro = streak >= limit;
+            if p.cpu_read_only() != expect_ro {
+                return Err(format!(
+                    "round {round}: read_only {} != model {expect_ro} \
+                     (streak {streak}, limit {limit})",
+                    p.cpu_read_only()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plain_policies_never_restrict_the_cpu() {
+    forall(Cases::new("policy_no_restrict", 60).max_size(64), |rng, size| {
+        for kind in [PolicyKind::FavorCpu, PolicyKind::FavorGpu] {
+            let mut p = Policy::new(kind, 1);
+            for _ in 0..size {
+                p.on_round(rng.chance(0.5));
+                if p.cpu_read_only() {
+                    return Err(format!("{kind:?} restricted the CPU"));
+                }
+            }
+            // Favor-GPU never loses GPU rounds, so its streak stays zero.
+            if kind == PolicyKind::FavorGpu && p.gpu_abort_streak() != 0 {
+                return Err("favor-GPU accumulated a GPU abort streak".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_empty_cpu_write_set_always_validates() {
+    // §IV-E's guarantee behind the starvation guard: a round in which the
+    // CPU commits no writes cannot fail inter-device validation, whatever
+    // the GPU does — there are no log entries to conflict.
+    forall(Cases::new("empty_ws_validates", 12).max_size(16), |rng, size| {
+        let n = 1 << 12;
+        let mut cfg = base_cfg(n, rng.next_u64());
+        cfg.period_s = 0.002;
+        cfg.early_validation = rng.chance(0.5);
+        let variant = if rng.chance(0.5) {
+            Variant::Optimized
+        } else {
+            Variant::Basic
+        };
+        // Read-only CPU (update_frac = 0) spanning the WHOLE region, GPU
+        // updating the whole region too: maximal overlap, zero CPU writes.
+        let cpu_spec = SynthSpec::w1(n, 0.0);
+        let gpu_spec = SynthSpec::w1(n, 1.0);
+        let mut e = launch::build_synth_engine(
+            &cfg, variant, cpu_spec, gpu_spec, 256, Backend::Native,
+        );
+        let rounds = 1 + size % 4;
+        e.run_rounds(rounds).map_err(|e| e.to_string())?;
+        if e.stats.rounds_committed != e.stats.rounds {
+            return Err(format!(
+                "{} of {} rounds failed validation with an empty CPU write-set",
+                e.stats.rounds - e.stats.rounds_committed,
+                e.stats.rounds
+            ));
+        }
+        if e.stats.chunks != 0 {
+            return Err("read-only CPU must ship no log chunks".into());
         }
         Ok(())
     });

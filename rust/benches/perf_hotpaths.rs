@@ -8,7 +8,7 @@
 //!   L3d  round-engine orchestration overhead (zero-work rounds/second)
 //!   L1   PJRT kernel dispatch: end-to-end executable call cost
 //!        (dominates the artifact-backed path; VMEM/structure analysis is
-//!        in DESIGN.md §8 since interpret-mode wallclock is not a TPU
+//!        in the design notes since interpret-mode wallclock is not a TPU
 //!        proxy)
 
 mod common;

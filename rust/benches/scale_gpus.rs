@@ -1,25 +1,36 @@
-//! Multi-GPU scaling — throughput and cross-shard behavior vs cluster size.
+//! Multi-GPU scaling — virtual-time behavior AND real wall-clock speedup.
 //!
 //! Sweeps the cluster engine over N ∈ {1, 2, 4, 8} sharded devices on the
 //! W1-100% synthetic workload (CPU on the lower half, GPUs homed onto
-//! their shards of the upper half):
+//! their shards of the upper half), each point run twice: with the
+//! per-device pipelines on one OS thread (`cluster.threads = 1`, the
+//! sequential oracle) and on N OS threads.  Both runs must produce
+//! bit-identical `RunStats` (asserted here — the bench doubles as a
+//! determinism check), so the tables separate cleanly:
 //!
-//! * **clean scaling**: no cross-shard traffic — GPU-side throughput
-//!   should grow with N while the shared CPU contribution stays flat, and
-//!   the cross-shard abort rate stays 0;
-//! * **contended scaling**: `cluster.cross_shard_prob` of GPU update
-//!   transactions redirect one write into a random other shard — the
-//!   pairwise bitmap checks catch them, and the cross-shard abort rate
-//!   climbs with N (more pairs, more collisions), quantifying the
-//!   coherence cost that motivates hierarchical/batched detection.
+//! * **virtual behavior** (threads-independent): committed tx/s, round
+//!   abort rate, cross-shard abort rate, refresh traffic, and the
+//!   GPU-side per-phase breakdown — the paper-phenomenology evidence;
+//! * **wall clock** (threads-dependent): seconds of real compute per
+//!   point and the threads=N vs threads=1 speedup — the evidence that
+//!   the engine now exploits the parallelism PR 1's decomposition
+//!   exposed, instead of growing wall time with `n_gpus`.
 //!
-//! Reported per point: committed tx/s, round abort rate, cross-shard
-//! abort rate, refresh traffic, and the GPU-side per-phase breakdown
-//! (processing / validation / merge / blocked, summed over devices).
+//! Sweep flavors: clean (no cross-shard traffic), then 2% and 10%
+//! cross-shard write injection (the pairwise bitmap checks catch them;
+//! the cross-shard abort rate climbs with N, quantifying the coherence
+//! cost that motivates hierarchical/batched detection).
+//!
+//! Every point is appended to `BENCH_scale.json` (written to the working
+//! directory, i.e. the repo root under `cargo bench`) so the performance
+//! trajectory has machine-readable data; see docs/BENCHMARKS.md for the
+//! schema and how to read it.
 //!
 //! `SHETM_BENCH_FAST=1` shortens the simulated horizon.
 
 mod common;
+
+use std::time::Instant;
 
 use shetm::apps::synth::SynthSpec;
 use shetm::coordinator::round::Variant;
@@ -28,6 +39,10 @@ use shetm::launch;
 use shetm::util::bench::Table;
 
 struct Point {
+    n_gpus: usize,
+    threads: usize,
+    cross_shard_prob: f64,
+    wall_s: f64,
     throughput: f64,
     abort_rate: f64,
     cross_abort_rate: f64,
@@ -36,42 +51,88 @@ struct Point {
     val_s: f64,
     merge_s: f64,
     blocked_s: f64,
+    /// Full-precision RunStats rendering (cross-thread-count identity).
+    stats_sig: String,
 }
 
-fn run_cluster(n_gpus: usize, cross_shard_prob: f64, sim_s: f64) -> Point {
+fn run_cluster(n_gpus: usize, threads: usize, cross_shard_prob: f64, sim_s: f64) -> Point {
+    run_cluster_cfg(n_gpus, threads, cross_shard_prob, false, sim_s)
+}
+
+fn run_cluster_cfg(
+    n_gpus: usize,
+    threads: usize,
+    cross_shard_prob: f64,
+    cpu_parallel: bool,
+    sim_s: f64,
+) -> Point {
     let mut cfg = common::base_config();
     cfg.period_s = 0.008;
     cfg.n_gpus = n_gpus;
+    cfg.cluster_threads = threads;
     cfg.cross_shard_prob = cross_shard_prob;
+    cfg.cpu_parallel = cpu_parallel;
     let n = cfg.n_words;
     let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
     let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
-    let mut e = launch::build_synth_cluster_engine(
-        &cfg,
-        Variant::Optimized,
-        cpu_spec,
-        gpu_spec,
-        1024,
-        Backend::Native,
-    );
-    e.run_for(sim_s).expect("cluster run");
-    let s = &e.stats;
-    let c = &e.cluster;
-    Point {
-        throughput: s.throughput(),
-        abort_rate: s.round_abort_rate(),
-        cross_abort_rate: c.cross_shard_abort_rate(s.rounds),
-        refresh_kib: c.refresh_bytes as f64 / 1024.0,
-        proc_s: s.gpu_phases.processing_s,
-        val_s: s.gpu_phases.validation_s,
-        merge_s: s.gpu_phases.merge_s,
-        blocked_s: s.gpu_phases.blocked_s,
+    let point = |wall_s: f64, s: &shetm::coordinator::RunStats, c: &shetm::cluster::ClusterStats| {
+        Point {
+            n_gpus,
+            threads,
+            cross_shard_prob,
+            wall_s,
+            throughput: s.throughput(),
+            abort_rate: s.round_abort_rate(),
+            cross_abort_rate: c.cross_shard_abort_rate(s.rounds),
+            refresh_kib: c.refresh_bytes as f64 / 1024.0,
+            proc_s: s.gpu_phases.processing_s,
+            val_s: s.gpu_phases.validation_s,
+            merge_s: s.gpu_phases.merge_s,
+            blocked_s: s.gpu_phases.blocked_s,
+            stats_sig: format!("{s:?}"),
+        }
+    };
+    if cpu_parallel {
+        let mut e = launch::build_parallel_synth_cluster_engine(
+            &cfg,
+            Variant::Optimized,
+            cpu_spec,
+            gpu_spec,
+            1024,
+            Backend::Native,
+        );
+        let t0 = Instant::now();
+        e.run_for(sim_s).expect("cluster run");
+        point(t0.elapsed().as_secs_f64(), &e.stats, &e.cluster)
+    } else {
+        let mut e = launch::build_synth_cluster_engine(
+            &cfg,
+            Variant::Optimized,
+            cpu_spec,
+            gpu_spec,
+            1024,
+            Backend::Native,
+        );
+        let t0 = Instant::now();
+        e.run_for(sim_s).expect("cluster run");
+        point(t0.elapsed().as_secs_f64(), &e.stats, &e.cluster)
     }
 }
 
-fn sweep(title: &str, cross_shard_prob: f64, sim_s: f64) {
-    let t = Table::new(
-        title,
+fn json_point(sweep: &str, p: &Point, speedup: f64) -> String {
+    format!(
+        "{{\"sweep\": \"{}\", \"n_gpus\": {}, \"threads\": {}, \
+         \"cross_shard_prob\": {}, \"wall_s\": {:.6}, \
+         \"virtual_tx_per_s\": {:.3}, \"round_abort_rate\": {:.6}, \
+         \"speedup_vs_threads1\": {:.4}}}",
+        sweep, p.n_gpus, p.threads, p.cross_shard_prob, p.wall_s, p.throughput,
+        p.abort_rate, speedup
+    )
+}
+
+fn sweep(title: &str, key: &str, cross_shard_prob: f64, sim_s: f64, json: &mut Vec<String>) {
+    let behavior = Table::new(
+        &format!("{title} — virtual behavior (threads-independent)"),
         &[
             "n_gpus",
             "tx_per_s",
@@ -84,25 +145,98 @@ fn sweep(title: &str, cross_shard_prob: f64, sim_s: f64) {
             "gpu_block_s",
         ],
     );
+    let mut points: Vec<(Point, Option<Point>)> = Vec::new();
     for n_gpus in [1usize, 2, 4, 8] {
-        let p = run_cluster(n_gpus, cross_shard_prob, sim_s);
-        t.row(&[
+        let seq = run_cluster(n_gpus, 1, cross_shard_prob, sim_s);
+        behavior.row(&[
             n_gpus as f64,
-            p.throughput,
-            p.abort_rate,
-            p.cross_abort_rate,
-            p.refresh_kib,
-            p.proc_s,
-            p.val_s,
-            p.merge_s,
-            p.blocked_s,
+            seq.throughput,
+            seq.abort_rate,
+            seq.cross_abort_rate,
+            seq.refresh_kib,
+            seq.proc_s,
+            seq.val_s,
+            seq.merge_s,
+            seq.blocked_s,
         ]);
+        let thr = if n_gpus > 1 {
+            let thr = run_cluster(n_gpus, n_gpus, cross_shard_prob, sim_s);
+            assert_eq!(
+                seq.stats_sig, thr.stats_sig,
+                "threads={n_gpus} diverged from the sequential engine at \
+                 n_gpus={n_gpus} — determinism broken"
+            );
+            Some(thr)
+        } else {
+            None
+        };
+        points.push((seq, thr));
+    }
+
+    let wall = Table::new(
+        &format!("{title} — wall clock (threads=N vs threads=1)"),
+        &["n_gpus", "t1_wall_s", "tN_wall_s", "speedup"],
+    );
+    for (seq, thr) in &points {
+        let (tn_wall, speedup) = match thr {
+            Some(t) => (t.wall_s, seq.wall_s / t.wall_s),
+            None => (seq.wall_s, 1.0),
+        };
+        wall.row(&[seq.n_gpus as f64, seq.wall_s, tn_wall, speedup]);
+        json.push(json_point(key, seq, 1.0));
+        if let Some(t) = thr {
+            json.push(json_point(key, t, seq.wall_s / t.wall_s));
+        }
+    }
+}
+
+/// CPU-side threading (`cpu.parallel`): wall clock with the CPU slice on
+/// real worker threads vs the single rate-modeled driver, at matched
+/// `cluster.threads`.  Different (equally deterministic) traces, so only
+/// wall clock is compared across the off/on pair; within the on-pair,
+/// threads=1 vs threads=N must still be bit-identical.
+fn sweep_cpu_par(sim_s: f64, json: &mut Vec<String>) {
+    let t = Table::new(
+        "scale_gpus: cpu.parallel (real CPU worker threads)",
+        &["n_gpus", "off_wall_s", "on_wall_s", "off/on"],
+    );
+    for n_gpus in [1usize, 8] {
+        let off = run_cluster_cfg(n_gpus, n_gpus, 0.0, false, sim_s);
+        let on_seq = run_cluster_cfg(n_gpus, 1, 0.0, true, sim_s);
+        let on = run_cluster_cfg(n_gpus, n_gpus, 0.0, true, sim_s);
+        assert_eq!(
+            on_seq.stats_sig, on.stats_sig,
+            "cpu.parallel run diverged across cluster.threads at n_gpus={n_gpus}"
+        );
+        t.row(&[n_gpus as f64, off.wall_s, on.wall_s, off.wall_s / on.wall_s]);
+        json.push(json_point("cpupar", &on_seq, 1.0));
+        json.push(json_point("cpupar", &on, on_seq.wall_s / on.wall_s));
     }
 }
 
 fn main() {
     let sim_s = common::sim_time(0.25);
-    sweep("scale_gpus: clean (no cross-shard traffic)", 0.0, sim_s);
-    sweep("scale_gpus: 2% cross-shard writes", 0.02, sim_s);
-    sweep("scale_gpus: 10% cross-shard writes", 0.10, sim_s);
+    let mut json: Vec<String> = Vec::new();
+    sweep(
+        "scale_gpus: clean (no cross-shard traffic)",
+        "clean",
+        0.0,
+        sim_s,
+        &mut json,
+    );
+    sweep("scale_gpus: 2% cross-shard writes", "cross2", 0.02, sim_s, &mut json);
+    sweep("scale_gpus: 10% cross-shard writes", "cross10", 0.10, sim_s, &mut json);
+    sweep_cpu_par(sim_s, &mut json);
+
+    let body = format!(
+        "{{\n  \"bench\": \"scale_gpus\",\n  \"fast\": {},\n  \"sim_s\": {},\n  \
+         \"points\": [\n    {}\n  ]\n}}\n",
+        common::fast(),
+        sim_s,
+        json.join(",\n    ")
+    );
+    match std::fs::write("BENCH_scale.json", &body) {
+        Ok(()) => println!("\nwrote BENCH_scale.json ({} points)", json.len()),
+        Err(e) => eprintln!("\ncould not write BENCH_scale.json: {e}"),
+    }
 }

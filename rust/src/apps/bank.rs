@@ -433,7 +433,7 @@ impl Workload for BankWorkload {
         map: &ShardMap,
         gpu_batch: usize,
         cfg: &SystemConfig,
-    ) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>) {
+    ) -> (Box<dyn CpuDriver + Send>, Vec<Box<dyn GpuDriver + Send>>) {
         let n = self.cfg.n_accounts;
         let cpu = BankCpu::new(
             stmr,
@@ -445,7 +445,7 @@ impl Workload for BankWorkload {
             cfg.cpu_txn_s,
             self.seed,
         );
-        let mut gpus: Vec<Box<dyn GpuDriver>> = Vec::with_capacity(map.n_shards());
+        let mut gpus: Vec<Box<dyn GpuDriver + Send>> = Vec::with_capacity(map.n_shards());
         for d in 0..map.n_shards() {
             gpus.push(Box::new(BankGpu::new(
                 self.cfg.clone(),

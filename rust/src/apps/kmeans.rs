@@ -513,7 +513,7 @@ impl Workload for KmeansWorkload {
         map: &ShardMap,
         gpu_batch: usize,
         cfg: &SystemConfig,
-    ) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>) {
+    ) -> (Box<dyn CpuDriver + Send>, Vec<Box<dyn GpuDriver + Send>>) {
         let n_dev = map.n_shards();
         let cpu = KmeansCpu::new(
             stmr,
@@ -524,7 +524,7 @@ impl Workload for KmeansWorkload {
             cfg.cpu_txn_s,
             cfg.seed,
         );
-        let mut gpus: Vec<Box<dyn GpuDriver>> = Vec::with_capacity(n_dev);
+        let mut gpus: Vec<Box<dyn GpuDriver + Send>> = Vec::with_capacity(n_dev);
         for d in 0..n_dev {
             gpus.push(Box::new(KmeansGpu::new(
                 self.cfg.clone(),

@@ -342,6 +342,15 @@ impl CpuDriver for McCpu {
 /// GPU-side memcached driver: fills kernel batches from GPU_Q (stealing
 /// from CPU_Q per the workload), retries arbitration losers, and requeues
 /// speculatively-committed requests when a round aborts.
+///
+/// The dispatcher draw is split across the [`GpuDriver`] hooks: `prepare`
+/// (coordinator thread, device-index order) pulls enough requests for the
+/// coming slice into a driver-local prefetch queue, and `run` consumes
+/// only local state — which is what lets the threaded cluster engine run
+/// this driver's slices concurrently and stay deterministic (the shared
+/// RNG and steal decisions advance at one fixed point of the round).
+/// Callers that never call `prepare` (direct driver tests) fall back to
+/// pulling lazily inside `run`, exactly as before.
 pub struct McGpu {
     world: Arc<Mutex<McWorld>>,
     cfg: McConfig,
@@ -357,6 +366,8 @@ pub struct McGpu {
     clk0: i32,
     retry: Vec<McRequest>,
     round_committed: Vec<McRequest>,
+    /// Requests pulled ahead by `prepare`, consumed FIFO by `run`.
+    prefetch: std::collections::VecDeque<McRequest>,
     /// Sub-batch budget carried across segments of one round.
     budget_carry: f64,
 }
@@ -380,6 +391,7 @@ impl McGpu {
             clk0: 1,
             retry: Vec::new(),
             round_committed: Vec::new(),
+            prefetch: std::collections::VecDeque::new(),
             budget_carry: 0.0,
         }
     }
@@ -402,6 +414,26 @@ impl McGpu {
 }
 
 impl GpuDriver for McGpu {
+    fn prepare(&mut self, budget_s: f64) {
+        let cost = self.batch_cost();
+        if cost <= 0.0 {
+            return;
+        }
+        // Upper bound on the batches `run` will execute from this budget
+        // (+1 guards the floor-vs-iterated-subtraction edge), minus what
+        // the retry and prefetch queues already cover.  Over-pulling is
+        // harmless: prefetched requests persist and are consumed first.
+        let n_batches = ((budget_s + self.budget_carry) / cost).floor() as usize + 1;
+        let need = (n_batches * self.batch)
+            .saturating_sub(self.retry.len() + self.prefetch.len());
+        if need == 0 {
+            return;
+        }
+        let mut pulled: Vec<McRequest> = Vec::with_capacity(need);
+        self.world.lock().unwrap().pop_gpu(self.dev, need, &mut pulled);
+        self.prefetch.extend(pulled);
+    }
+
     fn run(&mut self, device: &mut GpuDevice, budget_s: f64) -> Result<GpuSlice> {
         let mut out = GpuSlice::default();
         let cost = self.batch_cost();
@@ -409,9 +441,17 @@ impl GpuDriver for McGpu {
         let mut reqs: Vec<McRequest> = Vec::with_capacity(self.batch);
         while left >= cost {
             reqs.clear();
-            // Retry queue first (arbitration losers), then the dispatcher.
+            // Retry queue first (arbitration losers), then the prefetch
+            // filled by `prepare`, then — only if `prepare` was never
+            // called — the dispatcher itself.
             while reqs.len() < self.batch {
                 match self.retry.pop() {
+                    Some(r) => reqs.push(r),
+                    None => break,
+                }
+            }
+            while reqs.len() < self.batch {
+                match self.prefetch.pop_front() {
                     Some(r) => reqs.push(r),
                     None => break,
                 }

@@ -41,6 +41,109 @@ use crate::gpu::native::mc;
 use crate::stm::{GuestTm, SharedStmr};
 
 /// An application pluggable into both `RoundEngine` and `ClusterEngine`.
+///
+/// # Example: a minimal end-to-end workload
+///
+/// Layout (one counter word) → drivers (a CPU incrementer through the
+/// provided guest TM; an idle GPU per shard) → oracle (the counter never
+/// goes negative and nothing else is written):
+///
+/// ```
+/// use std::sync::Arc;
+/// use anyhow::{bail, Result};
+/// use shetm::apps::workload::Workload;
+/// use shetm::cluster::ShardMap;
+/// use shetm::config::{Raw, SystemConfig};
+/// use shetm::coordinator::round::{CpuDriver, CpuSlice, GpuDriver, GpuSlice, Variant};
+/// use shetm::gpu::{Backend, GpuDevice};
+/// use shetm::stm::{GuestTm, SharedStmr, WriteEntry};
+///
+/// struct CountCpu {
+///     stmr: Arc<SharedStmr>,
+///     tm: Arc<dyn GuestTm>,
+///     debt: f64,
+/// }
+///
+/// impl CpuDriver for CountCpu {
+///     fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice {
+///         let want = dur_s * 100_000.0 + self.debt; // 100k tx/s modeled
+///         let n = want.floor() as u64;
+///         self.debt = want - n as f64;
+///         for _ in 0..n {
+///             self.tm.execute_into(
+///                 &self.stmr,
+///                 &mut |tx| {
+///                     let v = tx.read(0)?;
+///                     tx.write(0, v + 1)
+///                 },
+///                 log,
+///             );
+///         }
+///         CpuSlice { commits: n, attempts: n }
+///     }
+///
+///     fn stmr(&self) -> &SharedStmr {
+///         &self.stmr
+///     }
+/// }
+///
+/// struct IdleGpu;
+///
+/// impl GpuDriver for IdleGpu {
+///     fn run(&mut self, _dev: &mut GpuDevice, _budget_s: f64) -> Result<GpuSlice> {
+///         Ok(GpuSlice::default())
+///     }
+/// }
+///
+/// struct CounterWorkload;
+///
+/// impl Workload for CounterWorkload {
+///     fn name(&self) -> &str {
+///         "counter"
+///     }
+///
+///     fn n_words(&self) -> usize {
+///         64
+///     }
+///
+///     fn build(
+///         &self,
+///         stmr: Arc<SharedStmr>,
+///         tm: Arc<dyn GuestTm>,
+///         map: &ShardMap,
+///         _gpu_batch: usize,
+///         _cfg: &SystemConfig,
+///     ) -> (Box<dyn CpuDriver + Send>, Vec<Box<dyn GpuDriver + Send>>) {
+///         let cpu = CountCpu { stmr, tm, debt: 0.0 };
+///         let gpus = (0..map.n_shards())
+///             .map(|_| Box::new(IdleGpu) as Box<dyn GpuDriver + Send>)
+///             .collect();
+///         (Box::new(cpu), gpus)
+///     }
+///
+///     fn check_invariants(&self, stmr: &SharedStmr) -> Result<()> {
+///         if stmr.load(0) < 0 {
+///             bail!("counter went negative");
+///         }
+///         for w in 1..stmr.len() {
+///             if stmr.load(w) != 0 {
+///                 bail!("stray write at word {w}");
+///             }
+///         }
+///         Ok(())
+///     }
+/// }
+///
+/// let mut cfg = SystemConfig::from_raw(&Raw::new()).unwrap();
+/// cfg.period_s = 0.001;
+/// let w = CounterWorkload;
+/// let mut engine =
+///     shetm::launch::build_workload_engine(&cfg, Variant::Optimized, &w, 32, Backend::Native);
+/// engine.run_rounds(2).unwrap();
+/// engine.drain().unwrap();
+/// w.check_invariants(engine.cpu.stmr()).unwrap();
+/// assert!(engine.cpu.stmr().load(0) > 0, "the counter advanced");
+/// ```
 pub trait Workload {
     /// Workload name (labels, diagnostics).
     fn name(&self) -> &str;
@@ -63,7 +166,7 @@ pub trait Workload {
         map: &ShardMap,
         gpu_batch: usize,
         cfg: &SystemConfig,
-    ) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>);
+    ) -> (Box<dyn CpuDriver + Send>, Vec<Box<dyn GpuDriver + Send>>);
 
     /// The correctness oracle, checked against the post-run CPU truth
     /// (quiesce with `drain()` first so carried commits have landed).
@@ -152,7 +255,7 @@ impl Workload for SynthWorkload {
         map: &ShardMap,
         gpu_batch: usize,
         cfg: &SystemConfig,
-    ) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>) {
+    ) -> (Box<dyn CpuDriver + Send>, Vec<Box<dyn GpuDriver + Send>>) {
         let cpu = SynthCpu::new(
             stmr,
             tm,
@@ -161,7 +264,7 @@ impl Workload for SynthWorkload {
             cfg.cpu_txn_s,
             cfg.seed,
         );
-        let mut gpus: Vec<Box<dyn GpuDriver>> = Vec::with_capacity(map.n_shards());
+        let mut gpus: Vec<Box<dyn GpuDriver + Send>> = Vec::with_capacity(map.n_shards());
         for d in 0..map.n_shards() {
             let mut spec = self.gpu_spec.clone().homed(map.clone(), d);
             if map.n_shards() > 1 {
@@ -230,7 +333,7 @@ impl Workload for MemcachedWorkload {
         map: &ShardMap,
         gpu_batch: usize,
         cfg: &SystemConfig,
-    ) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>) {
+    ) -> (Box<dyn CpuDriver + Send>, Vec<Box<dyn GpuDriver + Send>>) {
         let world = McWorld::new_sharded(
             self.mc.clone(),
             self.seed,
@@ -245,7 +348,7 @@ impl Workload for MemcachedWorkload {
             cfg.cpu_threads,
             cfg.cpu_txn_s,
         );
-        let mut gpus: Vec<Box<dyn GpuDriver>> = Vec::with_capacity(map.n_shards());
+        let mut gpus: Vec<Box<dyn GpuDriver + Send>> = Vec::with_capacity(map.n_shards());
         for d in 0..map.n_shards() {
             gpus.push(Box::new(
                 McGpu::new(

@@ -452,7 +452,7 @@ impl Workload for ZipfKvWorkload {
         map: &ShardMap,
         gpu_batch: usize,
         cfg: &SystemConfig,
-    ) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>) {
+    ) -> (Box<dyn CpuDriver + Send>, Vec<Box<dyn GpuDriver + Send>>) {
         let nk = self.cfg.n_keys;
         let cpu = ZipfKvCpu::new(
             stmr,
@@ -464,7 +464,7 @@ impl Workload for ZipfKvWorkload {
             cfg.cpu_txn_s,
             self.seed,
         );
-        let mut gpus: Vec<Box<dyn GpuDriver>> = Vec::with_capacity(map.n_shards());
+        let mut gpus: Vec<Box<dyn GpuDriver + Send>> = Vec::with_capacity(map.n_shards());
         for d in 0..map.n_shards() {
             gpus.push(Box::new(ZipfKvGpu::new(
                 self.cfg.clone(),

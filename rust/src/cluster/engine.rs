@@ -20,32 +20,167 @@
 //!   at the 16 KB merge granule) from the post-merge CPU truth at round
 //!   start — batched traffic instead of per-access coherence.
 //!
+//! # Threaded execution
+//!
+//! Each per-device pipeline is grouped into a `Lane`: the device, its
+//! GPU driver, its bus timelines, its coherence bitmaps, its virtual-time
+//! cursor and its *private partial* of the round statistics.  Lanes are
+//! data-disjoint, so the engine can run the per-lane phases of a round
+//! (refresh, execution slices, log shipping, own-shard validation, merge
+//! transfers, rollback) either sequentially or on a pool of scoped OS
+//! threads ([`ClusterEngine::set_threads`], config `cluster.threads`).
+//! Everything that touches shared round state — the CPU slice, the log
+//! router, cross-shard detection, merge installs into the CPU STMR, the
+//! stale-map bookkeeping — runs on the coordinator thread at the barriers
+//! between lane phases, in device-index order.  Shared-state *driver*
+//! draws (e.g. the memcached dispatcher) happen in the
+//! [`GpuDriver::prepare`] hook, also on the coordinator thread in index
+//! order.  Because lane arithmetic is identical in both modes and every
+//! reduction folds in device-index order, the threaded engine is
+//! **bit-identical** to the sequential engine on the same seed — asserted
+//! for every workload × policy by `rust/tests/cluster_equivalence.rs`, and
+//! argued in DESIGN.md §8.
+//!
 //! **`n_gpus = 1` invariant**: with a [`ShardMap::solo`] map every
 //! cluster-only mechanism is provably a no-op (no pairs, empty stale maps,
 //! identity routing) and the remaining arithmetic is the same sequence of
-//! operations as `RoundEngine::run_round`, so final state and [`RunStats`]
-//! are bit-identical on the same seed — asserted by
-//! `rust/tests/cluster_equivalence.rs`.
+//! operations as `RoundEngine::run_round` — the single lane accumulates
+//! each statistic through exactly the chain of additions the single-device
+//! engine performs, and the end-of-round fold adds that chain to a zeroed
+//! field (`0.0 + x == x` bitwise for the non-negative phase times) — so
+//! final state and [`RunStats`] are bit-identical on the same seed,
+//! asserted by `rust/tests/cluster_equivalence.rs`.
 //!
 //! MAINTENANCE: `run_round` deliberately *mirrors* (rather than replaces)
 //! `RoundEngine::run_round` — the untouched single-device engine is the
-//! independent oracle that gives the equivalence test its teeth. A change
+//! independent oracle that gives the equivalence test its teeth.  A change
 //! to either round state machine must be mirrored in the other; the
-//! equivalence suite fails loudly when the mirror drifts.
+//! equivalence suite fails loudly when the mirror drifts.  Within a lane,
+//! keep the order of floating-point accumulations exactly as the
+//! single-device engine performs them.
 //!
 //! [`RoundEngine`]: crate::coordinator::round::RoundEngine
+//! [`GpuDriver::prepare`]: crate::coordinator::round::GpuDriver::prepare
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::router::LogRouter;
 use super::shard::ShardMap;
-use super::stats::ClusterStats;
+use super::stats::{ClusterStats, DeviceStats};
 use crate::bus::BusTimeline;
 use crate::coordinator::policy::{Loser, Policy};
 use crate::coordinator::round::{CostModel, CpuDriver, EngineConfig, GpuDriver, Variant};
-use crate::coordinator::stats::{RoundStats, RunStats};
+use crate::coordinator::stats::{PhaseBreakdown, RoundStats, RunStats};
 use crate::gpu::{Bitmap, GpuDevice, LogChunk};
 use crate::stm::WriteEntry;
+
+/// One device's pipeline state for the round in flight: disjoint mutable
+/// borrows of the per-device engine state plus lane-private partials of
+/// the shared [`RoundStats`].  Lanes never touch each other's fields, so a
+/// phase over all lanes can run on worker threads (see the module docs).
+struct Lane<'a, G> {
+    /// The simulated accelerator (replica, bitmaps, shadow).
+    dev: &'a mut GpuDevice,
+    /// This device's GPU driver.
+    gpu: &'a mut G,
+    /// Host-to-device bus channel.
+    h2d: &'a mut BusTimeline,
+    /// Device-to-host bus channel.
+    d2h: &'a mut BusTimeline,
+    /// Granules dirtied elsewhere since this device last saw them.
+    stale: &'a mut Bitmap,
+    /// This round's routed CPU writes on this shard (cross-shard operand).
+    cpu_ws: &'a mut Bitmap,
+    /// Persistent per-device aggregate statistics.
+    per_dev: &'a mut DeviceStats,
+    /// This device's virtual-time cursor through the round.
+    cursor: f64,
+    /// Chunks routed and shipped to this shard this round.
+    chunks: Vec<LogChunk>,
+    /// Bus arrival time of each chunk in `chunks`.
+    arrivals: Vec<f64>,
+    /// Chunks drained from the router on the coordinator thread but not
+    /// yet shipped (consumed inside the lane's next parallel phase).
+    inbox: Vec<LogChunk>,
+    /// Lane partial of `RoundStats::gpu_commits`.
+    gpu_commits: u64,
+    /// Lane partial of `RoundStats::gpu_attempts`.
+    gpu_attempts: u64,
+    /// Lane partial of `RoundStats::gpu_batches`.
+    gpu_batches: u64,
+    /// Lane partial of `RoundStats::gpu_phases` (folded at round end in
+    /// device-index order).
+    gpu_phases: PhaseBreakdown,
+    /// Lane partial of `RoundStats::cpu_phases.validation_s` (basic
+    /// variant: CPU blocked shipping this shard's logs).
+    cpu_validation_s: f64,
+    /// Own-shard conflicting entries this lane's validation found.
+    own_conflicts: u64,
+    /// Early-validation conflicts seen in the current segment.
+    early_conf: u32,
+    /// Coarse merge ranges computed while scheduling DtH transfers
+    /// (reused by the coordinator-thread install).
+    coarse: Vec<(usize, usize)>,
+    /// Phase output: completion time of this lane's last bus transfer.
+    dth_end: f64,
+    /// First error raised inside a parallel phase (deferred to the next
+    /// barrier; stored as a message so lanes stay `Send` regardless of
+    /// the error type's auto traits).
+    err: Option<String>,
+    /// Refresh traffic of this round (folded into `ClusterStats`).
+    refresh_bytes: u64,
+    /// Refresh DMAs of this round (folded into `ClusterStats`).
+    refresh_transfers: u64,
+}
+
+/// Run `f` over every lane — sequentially when `threads <= 1`, otherwise
+/// on `min(threads, n_lanes)` scoped OS threads, each owning a balanced
+/// contiguous block of lanes (`n = q·t + r` ⇒ `r` blocks of `q + 1` and
+/// `t − r` of `q`, so no requested thread idles while another holds two
+/// lanes).  A single lane with `threads > 1` still runs on a spawned
+/// worker, so threaded configurations cross a real thread boundary even
+/// at `n_gpus = 1`.  Grouping does not affect results: lanes are
+/// data-disjoint and `f` receives the same lane index either way, so
+/// this is purely a wall-clock lever.
+fn run_lanes<'a, G, F>(threads: usize, lanes: &mut [Lane<'a, G>], f: F)
+where
+    G: GpuDriver + Send,
+    F: Fn(usize, &mut Lane<'a, G>) + Sync,
+{
+    let n = lanes.len();
+    if threads <= 1 || n == 0 {
+        for (d, lane) in lanes.iter_mut().enumerate() {
+            f(d, lane);
+        }
+        return;
+    }
+    let t = threads.min(n);
+    let (q, r) = (n / t, n % t);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest: &mut [Lane<'a, G>] = lanes;
+        let mut base = 0usize;
+        for g in 0..t {
+            let take = q + usize::from(g < r);
+            // Move the full-lifetime slice out before splitting, so the
+            // halves live long enough for the scoped spawn.
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            s.spawn(move || {
+                for (i, lane) in head.iter_mut().enumerate() {
+                    f(base + i, lane);
+                }
+            });
+            rest = tail;
+            base += take;
+        }
+    });
+}
+
+/// First deferred lane error, by device index (mirrors the sequential
+/// engine's propagation order).
+fn first_lane_err<G>(lanes: &mut [Lane<'_, G>]) -> Option<String> {
+    lanes.iter_mut().find_map(|l| l.err.take())
+}
 
 /// The sharded SHeTM cluster engine.
 pub struct ClusterEngine<C: CpuDriver, G: GpuDriver> {
@@ -88,9 +223,12 @@ pub struct ClusterEngine<C: CpuDriver, G: GpuDriver> {
     /// Per-shard bitmaps of this round's routed CPU writes (cross-shard
     /// probe operands; rebuilt each round).
     cpu_ws: Vec<Bitmap>,
+    /// OS worker threads driving the per-device lane phases (1 = fully
+    /// sequential; results are identical at any setting).
+    threads: usize,
 }
 
-impl<C: CpuDriver, G: GpuDriver> ClusterEngine<C, G> {
+impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
     /// Assemble a cluster engine; every device's replica must cover the
     /// same STMR as the CPU driver's, and `devices`/`gpus` are indexed by
     /// shard id of `map`.
@@ -142,6 +280,7 @@ impl<C: CpuDriver, G: GpuDriver> ClusterEngine<C, G> {
             stale: (0..n).map(|_| Bitmap::new(map.n_words(), bmp_shift)).collect(),
             cpu_ws: (0..n).map(|_| Bitmap::new(map.n_words(), bmp_shift)).collect(),
             map,
+            threads: 1,
         }
     }
 
@@ -153,6 +292,20 @@ impl<C: CpuDriver, G: GpuDriver> ClusterEngine<C, G> {
     /// Current virtual time.
     pub fn now(&self) -> f64 {
         self.t
+    }
+
+    /// Set the number of OS worker threads driving the per-device lane
+    /// phases (config key `cluster.threads`, CLI `--threads`).  Clamped to
+    /// at least 1; values above `n_gpus` spawn one thread per device.
+    /// Purely a wall-clock lever: results are bit-identical at any
+    /// setting (DESIGN.md §8).
+    pub fn set_threads(&mut self, n: usize) {
+        self.threads = n.max(1);
+    }
+
+    /// Current worker-thread setting (see [`Self::set_threads`]).
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Copy the CPU STMR into every device replica (initial alignment —
@@ -193,68 +346,142 @@ impl<C: CpuDriver, G: GpuDriver> ClusterEngine<C, G> {
     }
 
     /// Execute one synchronization round across all devices.
+    ///
+    /// Per-lane phases run sequentially or on worker threads (see
+    /// [`Self::set_threads`]); all shared-state work happens at the
+    /// barriers between them, on this thread, in device-index order.  On a
+    /// device-backend error the round is abandoned mid-flight (state is
+    /// poisoned exactly as in the sequential engine); the lowest-index
+    /// lane's error is returned.
     pub fn run_round(&mut self) -> Result<()> {
-        let optimized = self.cfg.variant == Variant::Optimized;
-        let n_dev = self.devices.len();
-        let t0 = self.t;
+        let ClusterEngine {
+            cfg,
+            cost,
+            map,
+            devices,
+            cpu,
+            gpus,
+            stats,
+            cluster,
+            round_log,
+            policy,
+            h2d,
+            d2h,
+            t,
+            cpu_avail,
+            router,
+            carry,
+            scratch,
+            round_entries,
+            stale,
+            cpu_ws,
+            threads,
+        } = self;
+        let threads = *threads;
+        let cost = *cost;
+        let optimized = cfg.variant == Variant::Optimized;
+        let n_dev = devices.len();
+        let t0 = *t;
         let mut rs = RoundStats {
             t_start: t0,
             ..Default::default()
         };
-        let n_bytes = (self.map.n_words() * 4) as u64;
+        let n_bytes = (map.n_words() * 4) as u64;
         let granule_words = (crate::bus::chunking::MERGE_GRANULE_BYTES / 4) as usize;
+        let chunk_entries = cfg.chunk_entries;
+        let chunk_cost = chunk_entries as f64 * cost.gpu_validate_entry_s;
 
-        self.cpu.set_read_only(self.policy.cpu_read_only());
-        if self.policy.conditional_apply() {
+        cpu.set_read_only(policy.cpu_read_only());
+        let conditional = policy.conditional_apply();
+        if conditional {
             // favor-GPU needs a CPU snapshot to roll back to (fork/COW).
-            self.cpu.snapshot();
+            cpu.snapshot();
         }
+
+        let mut lanes: Vec<Lane<'_, G>> = devices
+            .iter_mut()
+            .zip(gpus.iter_mut())
+            .zip(h2d.iter_mut())
+            .zip(d2h.iter_mut())
+            .zip(stale.iter_mut())
+            .zip(cpu_ws.iter_mut())
+            .zip(cluster.per_device.iter_mut())
+            .map(|((((((dev, gpu), h2d), d2h), stale), cpu_ws), per_dev)| Lane {
+                dev,
+                gpu,
+                h2d,
+                d2h,
+                stale,
+                cpu_ws,
+                per_dev,
+                cursor: t0,
+                chunks: Vec::new(),
+                arrivals: Vec::new(),
+                inbox: Vec::new(),
+                gpu_commits: 0,
+                gpu_attempts: 0,
+                gpu_batches: 0,
+                gpu_phases: PhaseBreakdown::default(),
+                cpu_validation_s: 0.0,
+                own_conflicts: 0,
+                early_conf: 0,
+                coarse: Vec::new(),
+                dth_end: 0.0,
+                err: None,
+                refresh_bytes: 0,
+                refresh_transfers: 0,
+            })
+            .collect();
 
         // --- Execution phase --------------------------------------------
-        let mut gpu_cursor = vec![t0; n_dev];
-        for d in 0..n_dev {
-            // Delta-coherence refresh (empty at n_gpus = 1): pull granules
-            // other actors dirtied, coalesced at the merge granule, from
-            // the post-merge CPU truth, over this device's own H2D channel.
-            let ranges = self.stale[d].dirty_word_ranges_coarse(granule_words);
-            let mut refresh_end = t0;
-            for &(s, e) in &ranges {
-                let bytes = ((e - s) * 4) as u64;
-                let dur = self.cost.bus_h2d.transfer_secs(bytes);
-                let (_, end) = self.h2d[d].schedule(t0, dur);
-                refresh_end = end;
-                let fresh: Vec<i32> = (s..e).map(|w| self.cpu.stmr().load(w)).collect();
-                self.devices[d].stmr_mut()[s..e].copy_from_slice(&fresh);
-                self.cluster.refresh_bytes += bytes;
-                self.cluster.refresh_transfers += 1;
-                self.cluster.per_device[d].refresh_bytes += bytes;
-                self.cluster.per_device[d].refresh_transfers += 1;
-            }
-            self.stale[d].clear();
+        // Delta-coherence refresh (empty at n_gpus = 1) + shadow snapshot,
+        // per lane: pull granules other actors dirtied, coalesced at the
+        // merge granule, from the post-merge CPU truth, over this device's
+        // own H2D channel.  The CPU truth is read-only here.
+        {
+            let cpu_stmr = cpu.stmr();
+            run_lanes(threads, &mut lanes, |_, lane| {
+                let ranges = lane.stale.dirty_word_ranges_coarse(granule_words);
+                let mut refresh_end = t0;
+                for &(s, e) in &ranges {
+                    let bytes = ((e - s) * 4) as u64;
+                    let dur = cost.bus_h2d.transfer_secs(bytes);
+                    let (_, end) = lane.h2d.schedule(t0, dur);
+                    refresh_end = end;
+                    let fresh: Vec<i32> = (s..e).map(|w| cpu_stmr.load(w)).collect();
+                    lane.dev.stmr_mut()[s..e].copy_from_slice(&fresh);
+                    lane.refresh_bytes += bytes;
+                    lane.refresh_transfers += 1;
+                    lane.per_dev.refresh_bytes += bytes;
+                    lane.per_dev.refresh_transfers += 1;
+                }
+                lane.stale.clear();
 
-            // Shadow snapshot AFTER the refresh so rollback keeps it.
-            self.devices[d].begin_round();
-            rs.gpu_phases.merge_s += refresh_end - t0;
-            self.cluster.per_device[d].phases.merge_s += refresh_end - t0;
-            gpu_cursor[d] = refresh_end;
-            if optimized {
-                // Shadow copy (DtD) before the device may process (§IV-D).
-                let dtd = n_bytes as f64 / self.cost.gpu_dtd_bytes_per_s;
-                gpu_cursor[d] += dtd;
-                rs.gpu_phases.merge_s += dtd;
-                self.cluster.per_device[d].phases.merge_s += dtd;
-            }
+                // Shadow snapshot AFTER the refresh so rollback keeps it.
+                lane.dev.begin_round();
+                lane.gpu_phases.merge_s += refresh_end - t0;
+                lane.per_dev.phases.merge_s += refresh_end - t0;
+                lane.cursor = refresh_end;
+                if optimized {
+                    // Shadow copy (DtD) before the device may process (§IV-D).
+                    let dtd = n_bytes as f64 / cost.gpu_dtd_bytes_per_s;
+                    lane.cursor += dtd;
+                    lane.gpu_phases.merge_s += dtd;
+                    lane.per_dev.phases.merge_s += dtd;
+                }
+            });
         }
-        let exec_end_target = t0 + self.cfg.period_s;
-
-        let mut chunks: Vec<Vec<LogChunk>> = vec![Vec::new(); n_dev];
-        let mut arrivals: Vec<Vec<f64>> = vec![Vec::new(); n_dev];
+        for lane in &mut lanes {
+            cluster.refresh_bytes += lane.refresh_bytes;
+            cluster.refresh_transfers += lane.refresh_transfers;
+        }
+        let exec_end_target = t0 + cfg.period_s;
         let mut early_abort = false;
 
-        let mut cpu_cursor = self.cpu_avail.max(t0);
+        let mut cpu_cursor = cpu_avail.max(t0);
         rs.cpu_phases.blocked_s += cpu_cursor - t0;
-        let segments = if optimized && self.cfg.early_validation {
-            self.cfg.early_points + 1
+        let segments = if optimized && cfg.early_validation {
+            cfg.early_points + 1
         } else {
             1
         };
@@ -263,63 +490,89 @@ impl<C: CpuDriver, G: GpuDriver> ClusterEngine<C, G> {
         for s in 0..segments {
             // CPU slice (real transactions through the guest TM), routed
             // to owner shards as it is logged.
-            self.scratch.clear();
-            let cs = self.cpu.run(seg_dur, &mut self.scratch);
-            self.router.append(&self.scratch);
+            scratch.clear();
+            let cs = cpu.run(seg_dur, scratch);
+            router.append(scratch);
             if n_dev > 1 {
                 // Kept for cross-shard merge reconciliation; never read
                 // (so never copied) on the single-device path.
-                self.round_entries.extend_from_slice(&self.scratch);
+                round_entries.extend_from_slice(scratch);
             }
             rs.cpu_commits += cs.commits;
             rs.cpu_attempts += cs.attempts;
             rs.cpu_phases.processing_s += seg_dur;
             cpu_cursor += seg_dur;
 
-            // Per-device GPU slices covering the same virtual span.
-            for d in 0..n_dev {
-                let budget = (cpu_cursor - gpu_cursor[d]).max(0.0);
-                let gs = self.gpus[d].run(&mut self.devices[d], budget)?;
-                rs.gpu_commits += gs.commits;
-                rs.gpu_attempts += gs.attempts;
-                rs.gpu_batches += gs.batches;
-                rs.gpu_phases.processing_s += gs.busy_s;
-                rs.gpu_phases.blocked_s += (budget - gs.busy_s).max(0.0);
-                gpu_cursor[d] = cpu_cursor;
-                let dev = &mut self.cluster.per_device[d];
-                dev.commits += gs.commits;
-                dev.attempts += gs.attempts;
-                dev.batches += gs.batches;
-                dev.phases.processing_s += gs.busy_s;
-                dev.phases.blocked_s += (budget - gs.busy_s).max(0.0);
-
-                // Non-blocking log streaming (§IV-D): ship this shard's
-                // full chunks now, on its own bus channel.
+            // Deterministic pre-slice, coordinator thread, index order:
+            // shared-state driver draws (GpuDriver::prepare) and router
+            // drains — so the parallel slice below is data-disjoint.
+            for (d, lane) in lanes.iter_mut().enumerate() {
+                let budget = (cpu_cursor - lane.cursor).max(0.0);
+                lane.gpu.prepare(budget);
                 if optimized {
-                    let n0 = chunks[d].len();
-                    self.router.drain_full_chunks(d, &mut chunks[d]);
-                    for c in &chunks[d][n0..] {
-                        let dur = self.cost.bus_h2d.transfer_secs(c.wire_bytes());
-                        let (_, end) = self.h2d[d].schedule(cpu_cursor, dur);
-                        arrivals[d].push(end);
-                    }
+                    router.drain_full_chunks(d, &mut lane.inbox);
                 }
             }
 
-            // Early validation between segments (§IV-D), per device.
-            if optimized && self.cfg.early_validation && s + 1 < segments {
-                let mut conf = 0u32;
-                for d in 0..n_dev {
-                    let arrived = arrivals[d].iter().filter(|&&a| a <= cpu_cursor).count();
-                    for c in chunks[d].iter().take(arrived) {
-                        conf += self.devices[d].early_validate_chunk(c);
+            // Per-device GPU slices covering the same virtual span, plus
+            // non-blocking log streaming (§IV-D) on each shard's own bus
+            // channel, plus per-device early validation — one lane phase.
+            let do_early = optimized && cfg.early_validation && s + 1 < segments;
+            run_lanes(threads, &mut lanes, |_, lane| {
+                let budget = (cpu_cursor - lane.cursor).max(0.0);
+                let gs = match lane.gpu.run(lane.dev, budget) {
+                    Ok(gs) => gs,
+                    Err(e) => {
+                        lane.err = Some(format!("gpu slice: {e}"));
+                        return;
                     }
-                    let cost = arrived as f64
-                        * self.cfg.chunk_entries as f64
-                        * self.cost.gpu_validate_entry_s;
-                    gpu_cursor[d] += cost;
-                    rs.gpu_phases.validation_s += cost;
-                    self.cluster.per_device[d].phases.validation_s += cost;
+                };
+                lane.gpu_commits += gs.commits;
+                lane.gpu_attempts += gs.attempts;
+                lane.gpu_batches += gs.batches;
+                lane.gpu_phases.processing_s += gs.busy_s;
+                lane.gpu_phases.blocked_s += (budget - gs.busy_s).max(0.0);
+                lane.per_dev.commits += gs.commits;
+                lane.per_dev.attempts += gs.attempts;
+                lane.per_dev.batches += gs.batches;
+                lane.per_dev.phases.processing_s += gs.busy_s;
+                lane.per_dev.phases.blocked_s += (budget - gs.busy_s).max(0.0);
+                lane.cursor = cpu_cursor;
+
+                // Ship this shard's full chunks now (§IV-D streaming).
+                if optimized {
+                    for c in lane.inbox.drain(..) {
+                        let dur = cost.bus_h2d.transfer_secs(c.wire_bytes());
+                        let (_, end) = lane.h2d.schedule(cpu_cursor, dur);
+                        lane.arrivals.push(end);
+                        lane.chunks.push(c);
+                    }
+                }
+
+                // Early validation between segments (§IV-D), per device.
+                if do_early {
+                    let arrived =
+                        lane.arrivals.iter().filter(|&&a| a <= cpu_cursor).count();
+                    let mut conf = 0u32;
+                    for c in lane.chunks.iter().take(arrived) {
+                        conf += lane.dev.early_validate_chunk(c);
+                    }
+                    let vcost = arrived as f64
+                        * chunk_entries as f64
+                        * cost.gpu_validate_entry_s;
+                    lane.cursor += vcost;
+                    lane.gpu_phases.validation_s += vcost;
+                    lane.per_dev.phases.validation_s += vcost;
+                    lane.early_conf = conf;
+                }
+            });
+            if let Some(e) = first_lane_err(&mut lanes) {
+                return Err(anyhow!("{e}"));
+            }
+            if do_early {
+                let conf: u32 = lanes.iter().map(|l| l.early_conf).sum();
+                for lane in &mut lanes {
+                    lane.early_conf = 0;
                 }
                 if conf > 0 {
                     early_abort = true;
@@ -330,91 +583,102 @@ impl<C: CpuDriver, G: GpuDriver> ClusterEngine<C, G> {
         }
         let _ = early_abort;
 
-        // Drain the remaining (tail) chunks of every shard.
-        for d in 0..n_dev {
-            let n0 = chunks[d].len();
-            self.router.drain_all(d, &mut chunks[d]);
-            for c in &chunks[d][n0..] {
-                let dur = self.cost.bus_h2d.transfer_secs(c.wire_bytes());
-                let (_, end) = self.h2d[d].schedule(cpu_cursor, dur);
-                arrivals[d].push(end);
-                if !optimized {
-                    // Basic: the CPU is blocked while shipping its logs.
-                    rs.cpu_phases.validation_s += dur;
-                }
-            }
+        // Drain the remaining (tail) chunks of every shard (coordinator
+        // thread), then ship them and run own-shard validation per lane.
+        for (d, lane) in lanes.iter_mut().enumerate() {
+            router.drain_all(d, &mut lane.inbox);
         }
 
         // --- Validation phase: own shard -----------------------------------
-        let conditional = self.policy.conditional_apply();
-        let mut own_conflicts = 0u64;
-        let chunk_cost = self.cfg.chunk_entries as f64 * self.cost.gpu_validate_entry_s;
-        for d in 0..n_dev {
+        run_lanes(threads, &mut lanes, |_, lane| {
+            for c in lane.inbox.drain(..) {
+                let dur = cost.bus_h2d.transfer_secs(c.wire_bytes());
+                let (_, end) = lane.h2d.schedule(cpu_cursor, dur);
+                lane.arrivals.push(end);
+                lane.chunks.push(c);
+                if !optimized {
+                    // Basic: the CPU is blocked while shipping its logs.
+                    lane.cpu_validation_s += dur;
+                }
+            }
+
             let mut dev_conf = 0u64;
-            for (c, &arr) in chunks[d].iter().zip(&arrivals[d]) {
-                let start = arr.max(gpu_cursor[d]);
-                rs.gpu_phases.blocked_s += start - gpu_cursor[d];
-                self.cluster.per_device[d].phases.blocked_s += start - gpu_cursor[d];
+            for i in 0..lane.chunks.len() {
+                let arr = lane.arrivals[i];
+                let start = arr.max(lane.cursor);
+                lane.gpu_phases.blocked_s += start - lane.cursor;
+                lane.per_dev.phases.blocked_s += start - lane.cursor;
                 dev_conf += if conditional {
                     // favor-GPU: check without applying (§IV-E).
-                    u64::from(self.devices[d].early_validate_chunk(c))
+                    u64::from(lane.dev.early_validate_chunk(&lane.chunks[i]))
                 } else {
-                    u64::from(self.devices[d].validate_chunk(c)?)
+                    match lane.dev.validate_chunk(&lane.chunks[i]) {
+                        Ok(n) => u64::from(n),
+                        Err(e) => {
+                            lane.err = Some(format!("validate: {e}"));
+                            return;
+                        }
+                    }
                 };
-                gpu_cursor[d] = start + chunk_cost;
-                rs.gpu_phases.validation_s += chunk_cost;
-                self.cluster.per_device[d].phases.validation_s += chunk_cost;
+                lane.cursor = start + chunk_cost;
+                lane.gpu_phases.validation_s += chunk_cost;
+                lane.per_dev.phases.validation_s += chunk_cost;
             }
-            self.cluster.per_device[d].chunks += chunks[d].len() as u64;
-            self.cluster.per_device[d].conflict_entries += dev_conf;
-            own_conflicts += dev_conf;
-        }
-        rs.chunks = chunks.iter().map(|c| c.len() as u64).sum();
+            lane.per_dev.chunks += lane.chunks.len() as u64;
+            lane.per_dev.conflict_entries += dev_conf;
+            lane.own_conflicts = dev_conf;
 
-        // --- Validation phase: cross-shard ---------------------------------
-        // Hierarchical and batched (never per-access): granule bitmap
-        // probes first, word-level scans only on a hit — exactly the
-        // existing scheme's escalation, applied pairwise.
-        let mut cross_conflicts = 0u64;
-        if n_dev > 1 {
-            for b in &mut self.cpu_ws {
-                b.clear();
-            }
-            for (o, shard_chunks) in chunks.iter().enumerate() {
-                for c in shard_chunks {
+            // Cross-shard probe operand: this shard's routed CPU writes.
+            if n_dev > 1 {
+                lane.cpu_ws.clear();
+                for c in &lane.chunks {
                     for &a in &c.addrs {
                         if a >= 0 {
-                            self.cpu_ws[o].mark_word(a as usize);
+                            lane.cpu_ws.mark_word(a as usize);
                         }
                     }
                 }
             }
+        });
+        if let Some(e) = first_lane_err(&mut lanes) {
+            return Err(anyhow!("{e}"));
+        }
+        rs.chunks = lanes.iter().map(|l| l.chunks.len() as u64).sum();
+        let own_conflicts: u64 = lanes.iter().map(|l| l.own_conflicts).sum();
+
+        // --- Validation phase: cross-shard ---------------------------------
+        // Hierarchical and batched (never per-access): granule bitmap
+        // probes first, word-level scans only on a hit — exactly the
+        // existing scheme's escalation, applied pairwise.  Runs on the
+        // coordinator thread: it is O(pairs) and needs cross-lane reads.
+        let mut cross_conflicts = 0u64;
+        if n_dev > 1 {
             // CPU writes applied on shard `o` vs every other device's
             // read-set (a cross-shard GPU read of a CPU-written word).
             for o in 0..n_dev {
-                if chunks[o].is_empty() {
+                if lanes[o].chunks.is_empty() {
                     continue;
                 }
                 for d in 0..n_dev {
                     if d == o {
                         continue;
                     }
-                    self.cluster.cross_checks += 1;
-                    let probe =
-                        self.cpu_ws[o].len() as f64 * self.cost.gpu_validate_entry_s;
-                    gpu_cursor[d] += probe;
-                    rs.gpu_phases.validation_s += probe;
-                    self.cluster.per_device[d].phases.validation_s += probe;
-                    if self.cpu_ws[o].intersects(self.devices[d].rs_bmp()) {
-                        self.cluster.cross_escalations += 1;
+                    cluster.cross_checks += 1;
+                    let (lo, ld) = pair_mut(&mut lanes, o, d);
+                    let probe = lo.cpu_ws.len() as f64 * cost.gpu_validate_entry_s;
+                    ld.cursor += probe;
+                    ld.gpu_phases.validation_s += probe;
+                    ld.per_dev.phases.validation_s += probe;
+                    if lo.cpu_ws.intersects(ld.dev.rs_bmp()) {
+                        cluster.cross_escalations += 1;
                         let mut n_conf = 0u64;
-                        for c in &chunks[o] {
-                            n_conf += u64::from(self.devices[d].early_validate_chunk(c));
+                        for c in &lo.chunks {
+                            n_conf += u64::from(ld.dev.early_validate_chunk(c));
                         }
-                        let cost = chunks[o].len() as f64 * chunk_cost;
-                        gpu_cursor[d] += cost;
-                        rs.gpu_phases.validation_s += cost;
-                        self.cluster.per_device[d].phases.validation_s += cost;
+                        let vcost = lo.chunks.len() as f64 * chunk_cost;
+                        ld.cursor += vcost;
+                        ld.gpu_phases.validation_s += vcost;
+                        ld.per_dev.phases.validation_s += vcost;
                         cross_conflicts += n_conf;
                     }
                 }
@@ -423,49 +687,58 @@ impl<C: CpuDriver, G: GpuDriver> ClusterEngine<C, G> {
             // (cross-shard transactions touching another shard's words).
             for i in 0..n_dev {
                 for j in (i + 1)..n_dev {
-                    self.cluster.cross_checks += 1;
-                    let probe =
-                        self.devices[i].ws_bmp().len() as f64 * self.cost.gpu_validate_entry_s;
-                    gpu_cursor[i] += probe;
-                    gpu_cursor[j] += probe;
-                    rs.gpu_phases.validation_s += 2.0 * probe;
-                    self.cluster.per_device[i].phases.validation_s += probe;
-                    self.cluster.per_device[j].phases.validation_s += probe;
-                    let wr = self.devices[i].ws_bmp().intersect_count(self.devices[j].rs_bmp())
-                        + self.devices[j].ws_bmp().intersect_count(self.devices[i].rs_bmp());
-                    let ww =
-                        self.devices[i].ws_bmp().intersect_count(self.devices[j].ws_bmp());
+                    cluster.cross_checks += 1;
+                    let (li, lj) = pair_mut(&mut lanes, i, j);
+                    let probe = li.dev.ws_bmp().len() as f64 * cost.gpu_validate_entry_s;
+                    li.cursor += probe;
+                    lj.cursor += probe;
+                    li.gpu_phases.validation_s += probe;
+                    lj.gpu_phases.validation_s += probe;
+                    li.per_dev.phases.validation_s += probe;
+                    lj.per_dev.phases.validation_s += probe;
+                    let wr = li.dev.ws_bmp().intersect_count(lj.dev.rs_bmp())
+                        + lj.dev.ws_bmp().intersect_count(li.dev.rs_bmp());
+                    let ww = li.dev.ws_bmp().intersect_count(lj.dev.ws_bmp());
                     if wr + ww > 0 {
-                        self.cluster.cross_escalations += 1;
+                        cluster.cross_escalations += 1;
                         cross_conflicts += (wr + ww) as u64;
                         // Escalation tier: the word-level exchange rescans
                         // both devices' bitmaps — charge it, like the
                         // CPU-vs-device escalation above.
-                        gpu_cursor[i] += probe;
-                        gpu_cursor[j] += probe;
-                        rs.gpu_phases.validation_s += 2.0 * probe;
-                        self.cluster.per_device[i].phases.validation_s += probe;
-                        self.cluster.per_device[j].phases.validation_s += probe;
+                        li.cursor += probe;
+                        lj.cursor += probe;
+                        li.gpu_phases.validation_s += probe;
+                        lj.gpu_phases.validation_s += probe;
+                        li.per_dev.phases.validation_s += probe;
+                        lj.per_dev.phases.validation_s += probe;
                     }
                 }
             }
-            self.cluster.cross_conflict_entries += cross_conflicts;
+            cluster.cross_conflict_entries += cross_conflicts;
         }
 
         let conflicts = own_conflicts + cross_conflicts;
         rs.conflict_entries = conflicts;
         if own_conflicts == 0 && cross_conflicts > 0 {
-            self.cluster.rounds_aborted_cross_shard += 1;
+            cluster.rounds_aborted_cross_shard += 1;
         }
-        let tv = gpu_cursor.iter().copied().fold(t0, f64::max);
+        let tv = lanes.iter().fold(t0, |m, l| m.max(l.cursor));
+
+        // GPU-side counters fold here (u64, order-free): the loser branch
+        // below reads rs.gpu_commits, and no lane commits accrue later.
+        for lane in &lanes {
+            rs.gpu_commits += lane.gpu_commits;
+            rs.gpu_attempts += lane.gpu_attempts;
+            rs.gpu_batches += lane.gpu_batches;
+        }
 
         // Non-blocking CPU (§IV-D): keep processing during validation;
         // commits logged for the NEXT round (same rules as RoundEngine).
-        if optimized && tv > cpu_cursor && self.cfg.period_s > 0.0 && !conditional {
+        if optimized && tv > cpu_cursor && cfg.period_s > 0.0 && !conditional {
             let bonus = tv - cpu_cursor;
-            self.scratch.clear();
-            let cs = self.cpu.run(bonus, &mut self.scratch);
-            self.carry.extend_from_slice(&self.scratch);
+            scratch.clear();
+            let cs = cpu.run(bonus, scratch);
+            carry.extend_from_slice(scratch);
             rs.cpu_commits += cs.commits;
             rs.cpu_attempts += cs.attempts;
             rs.cpu_phases.processing_s += bonus;
@@ -482,118 +755,139 @@ impl<C: CpuDriver, G: GpuDriver> ClusterEngine<C, G> {
         if ok {
             if conditional {
                 // favor-GPU deferred apply, per owner shard.
-                for d in 0..n_dev {
-                    for c in &chunks[d] {
-                        self.devices[d].validate_chunk(c)?;
+                run_lanes(threads, &mut lanes, |_, lane| {
+                    for i in 0..lane.chunks.len() {
+                        if let Err(e) = lane.dev.validate_chunk(&lane.chunks[i]) {
+                            lane.err = Some(format!("deferred apply: {e}"));
+                            return;
+                        }
                     }
-                    let cost = chunks[d].len() as f64 * chunk_cost;
-                    gpu_cursor[d] += cost;
-                    rs.gpu_phases.merge_s += cost;
-                    self.cluster.per_device[d].phases.merge_s += cost;
+                    let mcost = lane.chunks.len() as f64 * chunk_cost;
+                    lane.cursor += mcost;
+                    lane.gpu_phases.merge_s += mcost;
+                    lane.per_dev.phases.merge_s += mcost;
+                });
+                if let Some(e) = first_lane_err(&mut lanes) {
+                    return Err(anyhow!("{e}"));
                 }
             }
-            // Per-device DtH install of the GPU write-sets. The DMA cost
-            // keeps the paper's 16 KB coalesced granularity on every
-            // device's own channel. Data granularity differs by cluster
-            // size: a lone device's replica agrees with the CPU everywhere
-            // it did not write (all chunks applied locally), so coarse
-            // ranges copy only agreeing bytes — the RoundEngine merge.
-            // With n > 1 a replica is only authoritative for what it
-            // wrote, so values install at exact dirty granularity.
-            let mut dth_end_max = cpu_cursor;
-            for d in 0..n_dev {
-                let coarse = self.devices[d].ws_bmp().dirty_word_ranges_coarse(granule_words);
-                let mut dth_end = gpu_cursor[d];
-                for &(s, e) in &coarse {
+            // Per-device DtH scheduling of the GPU write-sets (parallel;
+            // the DMA cost keeps the paper's 16 KB coalesced granularity
+            // on every device's own channel), then the install into the
+            // CPU truth on the coordinator thread in device-index order —
+            // the deterministic serialization point of the merge.
+            run_lanes(threads, &mut lanes, |_, lane| {
+                lane.coarse = lane.dev.ws_bmp().dirty_word_ranges_coarse(granule_words);
+                let mut dth_end = lane.cursor;
+                for &(s, e) in &lane.coarse {
                     let bytes = ((e - s) * 4) as u64;
-                    let dur = self.cost.bus_d2h.transfer_secs(bytes);
-                    let (_, end) = self.d2h[d].schedule(gpu_cursor[d], dur);
+                    let dur = cost.bus_d2h.transfer_secs(bytes);
+                    let (_, end) = lane.d2h.schedule(lane.cursor, dur);
                     dth_end = end;
                 }
+                lane.dth_end = dth_end;
+            });
+            // Data granularity differs by cluster size: a lone device's
+            // replica agrees with the CPU everywhere it did not write (all
+            // chunks applied locally), so coarse ranges copy only agreeing
+            // bytes — the RoundEngine merge.  With n > 1 a replica is only
+            // authoritative for what it wrote, so values install at exact
+            // dirty granularity.
+            let mut dth_end_max = cpu_cursor;
+            for lane in &mut lanes {
                 if n_dev == 1 {
-                    for &(s, e) in &coarse {
-                        let data = &self.devices[d].stmr()[s..e];
-                        self.cpu.stmr().install_range(s, data);
+                    for &(s, e) in &lane.coarse {
+                        let data = &lane.dev.stmr()[s..e];
+                        cpu.stmr().install_range(s, data);
                     }
                 } else {
-                    let exact = self.devices[d].ws_bmp().dirty_word_ranges();
+                    let exact = lane.dev.ws_bmp().dirty_word_ranges();
                     for &(s, e) in &exact {
-                        let data = &self.devices[d].stmr()[s..e];
-                        self.cpu.stmr().install_range(s, data);
+                        let data = &lane.dev.stmr()[s..e];
+                        cpu.stmr().install_range(s, data);
                     }
                 }
-                dth_end_max = dth_end_max.max(dth_end);
+                dth_end_max = dth_end_max.max(lane.dth_end);
             }
             if n_dev > 1 {
                 // Cross-shard reconciliation: a device replica is stale for
                 // CPU writes routed to OTHER owners, so after the installs
                 // the CPU's committed values re-win their words (CPU
                 // commits serialize after the GPUs', like the carry).
-                for e in &self.round_entries {
-                    self.cpu.stmr().store(e.addr as usize, e.val);
+                for e in round_entries.iter() {
+                    cpu.stmr().store(e.addr as usize, e.val);
                 }
             }
             // Carry-window CPU commits re-win their words locally: they
             // serialize AFTER this round's GPU transactions.
-            for e in &self.carry {
-                self.cpu.stmr().store(e.addr as usize, e.val);
+            for e in carry.iter() {
+                cpu.stmr().store(e.addr as usize, e.val);
             }
             if optimized {
                 // Devices resume immediately; the CPU waits for the last
                 // install to land.
                 rs.cpu_phases.merge_s += dth_end_max - cpu_cursor;
-                self.cpu_avail = dth_end_max;
-                round_end = gpu_cursor.iter().copied().fold(t0, f64::max);
+                *cpu_avail = dth_end_max;
+                round_end = lanes.iter().fold(t0, |m, l| m.max(l.cursor));
             } else {
                 // Basic: everyone blocked until the transfers complete.
                 rs.cpu_phases.merge_s += dth_end_max - cpu_cursor;
-                for d in 0..n_dev {
-                    rs.gpu_phases.merge_s += dth_end_max - gpu_cursor[d];
-                    self.cluster.per_device[d].phases.merge_s += dth_end_max - gpu_cursor[d];
+                for lane in &mut lanes {
+                    lane.gpu_phases.merge_s += dth_end_max - lane.cursor;
+                    lane.per_dev.phases.merge_s += dth_end_max - lane.cursor;
                 }
-                self.cpu_avail = dth_end_max;
+                *cpu_avail = dth_end_max;
                 round_end = dth_end_max;
             }
         } else {
-            rs.discarded_commits = match self.policy.loser() {
+            rs.discarded_commits = match policy.loser() {
                 Loser::Gpu => {
                     let discarded = rs.gpu_commits;
                     rs.gpu_commits = 0;
                     if optimized {
                         // Shadow + per-shard CPU-log replay (§IV-D).
-                        for d in 0..n_dev {
-                            self.devices[d].rollback_with_logs(&chunks[d]);
-                            let cost = chunks[d].len() as f64 * chunk_cost;
-                            gpu_cursor[d] += cost;
-                            rs.gpu_phases.merge_s += cost;
-                            self.cluster.per_device[d].phases.merge_s += cost;
-                        }
-                        round_end = gpu_cursor.iter().copied().fold(t0, f64::max);
-                        self.cpu_avail = cpu_cursor;
+                        run_lanes(threads, &mut lanes, |_, lane| {
+                            lane.dev.rollback_with_logs(&lane.chunks);
+                            let mcost = lane.chunks.len() as f64 * chunk_cost;
+                            lane.cursor += mcost;
+                            lane.gpu_phases.merge_s += mcost;
+                            lane.per_dev.phases.merge_s += mcost;
+                        });
+                        round_end = lanes.iter().fold(t0, |m, l| m.max(l.cursor));
+                        *cpu_avail = cpu_cursor;
                     } else {
                         // Basic: re-copy every GPU-dirty region from the
-                        // CPU truth, per device over its own channel.
-                        let mut h2d_end_max = cpu_cursor;
-                        for d in 0..n_dev {
-                            let ranges =
-                                self.devices[d].ws_bmp().dirty_word_ranges_coarse(granule_words);
-                            let mut h2d_end = gpu_cursor[d];
-                            for &(s, e) in &ranges {
-                                let bytes = ((e - s) * 4) as u64;
-                                let dur = self.cost.bus_h2d.transfer_secs(bytes);
-                                let (_, end) = self.h2d[d].schedule(gpu_cursor[d], dur);
-                                h2d_end = end;
-                                for w in s..e {
-                                    let v = self.cpu.stmr().load(w);
-                                    self.devices[d].stmr_mut()[w] = v;
+                        // CPU truth, per device over its own channel (the
+                        // CPU truth is read-only during this phase).
+                        {
+                            let cpu_stmr = cpu.stmr();
+                            run_lanes(threads, &mut lanes, |_, lane| {
+                                let ranges = lane
+                                    .dev
+                                    .ws_bmp()
+                                    .dirty_word_ranges_coarse(granule_words);
+                                let mut h2d_end = lane.cursor;
+                                for &(s, e) in &ranges {
+                                    let bytes = ((e - s) * 4) as u64;
+                                    let dur = cost.bus_h2d.transfer_secs(bytes);
+                                    let (_, end) = lane.h2d.schedule(lane.cursor, dur);
+                                    h2d_end = end;
+                                    for w in s..e {
+                                        let v = cpu_stmr.load(w);
+                                        lane.dev.stmr_mut()[w] = v;
+                                    }
                                 }
-                            }
-                            rs.gpu_phases.merge_s += h2d_end - gpu_cursor[d];
-                            self.cluster.per_device[d].phases.merge_s += h2d_end - gpu_cursor[d];
-                            h2d_end_max = h2d_end_max.max(h2d_end);
+                                lane.gpu_phases.merge_s += h2d_end - lane.cursor;
+                                lane.per_dev.phases.merge_s += h2d_end - lane.cursor;
+                                lane.dth_end = h2d_end;
+                            });
+                        }
+                        let mut h2d_end_max = cpu_cursor;
+                        for lane in &lanes {
+                            h2d_end_max = h2d_end_max.max(lane.dth_end);
                         }
                         rs.cpu_phases.blocked_s += h2d_end_max - cpu_cursor;
-                        self.cpu_avail = h2d_end_max;
+                        *cpu_avail = h2d_end_max;
                         round_end = h2d_end_max;
                     }
                     discarded
@@ -607,49 +901,52 @@ impl<C: CpuDriver, G: GpuDriver> ClusterEngine<C, G> {
                     // stale there and converges to the CPU truth at its
                     // next refresh.
                     let discarded = rs.cpu_commits;
-                    self.cpu.rollback();
-                    self.carry.clear();
-                    self.router.truncate_to_carried();
-                    let snap_cost = n_bytes as f64 / self.cost.cpu_snapshot_bytes_per_s;
-                    let mut dth_end_max = cpu_cursor;
-                    for d in 0..n_dev {
-                        let coarse =
-                            self.devices[d].ws_bmp().dirty_word_ranges_coarse(granule_words);
-                        let mut dth_end = gpu_cursor[d] + snap_cost;
-                        for &(s, e) in &coarse {
+                    cpu.rollback();
+                    carry.clear();
+                    router.truncate_to_carried();
+                    let snap_cost = n_bytes as f64 / cost.cpu_snapshot_bytes_per_s;
+                    run_lanes(threads, &mut lanes, |_, lane| {
+                        lane.coarse =
+                            lane.dev.ws_bmp().dirty_word_ranges_coarse(granule_words);
+                        let mut dth_end = lane.cursor + snap_cost;
+                        for &(s, e) in &lane.coarse {
                             let bytes = ((e - s) * 4) as u64;
-                            let dur = self.cost.bus_d2h.transfer_secs(bytes);
-                            let (_, end) = self.d2h[d].schedule(dth_end, dur);
+                            let dur = cost.bus_d2h.transfer_secs(bytes);
+                            let (_, end) = lane.d2h.schedule(dth_end, dur);
                             dth_end = end;
                         }
+                        lane.dth_end = dth_end;
+                    });
+                    let mut dth_end_max = cpu_cursor;
+                    for lane in &mut lanes {
                         if n_dev == 1 {
-                            for &(s, e) in &coarse {
-                                let data = &self.devices[d].stmr()[s..e];
-                                self.cpu.stmr().install_range(s, data);
+                            for &(s, e) in &lane.coarse {
+                                let data = &lane.dev.stmr()[s..e];
+                                cpu.stmr().install_range(s, data);
                             }
                         } else {
-                            let exact = self.devices[d].ws_bmp().dirty_word_ranges();
+                            let exact = lane.dev.ws_bmp().dirty_word_ranges();
                             for &(s, e) in &exact {
-                                let data = &self.devices[d].stmr()[s..e];
-                                self.cpu.stmr().install_range(s, data);
+                                let data = &lane.dev.stmr()[s..e];
+                                cpu.stmr().install_range(s, data);
                             }
                         }
-                        dth_end_max = dth_end_max.max(dth_end);
+                        dth_end_max = dth_end_max.max(lane.dth_end);
                     }
                     rs.cpu_commits = 0;
                     rs.cpu_phases.merge_s += dth_end_max - cpu_cursor;
-                    self.cpu_avail = dth_end_max;
-                    round_end = gpu_cursor.iter().copied().fold(t0, f64::max);
+                    *cpu_avail = dth_end_max;
+                    round_end = lanes.iter().fold(t0, |m, l| m.max(l.cursor));
                     discarded
                 }
             };
         }
 
         // --- Round wrap-up -------------------------------------------------
-        let cpu_lost = !ok && self.policy.loser() == Loser::Cpu;
-        self.policy.on_round(ok);
-        for d in 0..n_dev {
-            self.gpus[d].on_round_end(ok);
+        let cpu_lost = !ok && policy.loser() == Loser::Cpu;
+        policy.on_round(ok);
+        for lane in &mut lanes {
+            lane.gpu.on_round_end(ok);
         }
 
         // Delta-coherence bookkeeping: record what each device must pull
@@ -657,16 +954,19 @@ impl<C: CpuDriver, G: GpuDriver> ClusterEngine<C, G> {
         if n_dev > 1 {
             if ok || cpu_lost {
                 // Surviving device writes: every OTHER device is stale.
-                for d in 0..n_dev {
-                    let exact = self.devices[d].ws_bmp().dirty_word_ranges();
-                    for &(s, e) in &exact {
-                        for o in 0..n_dev {
+                let all_exact: Vec<Vec<(usize, usize)>> = lanes
+                    .iter()
+                    .map(|l| l.dev.ws_bmp().dirty_word_ranges())
+                    .collect();
+                for (d, exact) in all_exact.iter().enumerate() {
+                    for &(s, e) in exact {
+                        for (o, lane) in lanes.iter_mut().enumerate() {
                             if o == d {
                                 continue;
                             }
-                            let shift = self.stale[o].shift();
+                            let shift = lane.stale.shift();
                             for g in (s >> shift)..=((e - 1) >> shift) {
-                                self.stale[o].mark_granule(g);
+                                lane.stale.mark_granule(g);
                             }
                         }
                     }
@@ -674,36 +974,65 @@ impl<C: CpuDriver, G: GpuDriver> ClusterEngine<C, G> {
             }
             if !cpu_lost {
                 // CPU writes applied on their owner: non-owners are stale.
-                for e in &self.round_entries {
-                    let owner = self.map.owner(e.addr as usize);
-                    for d in 0..n_dev {
+                for e in round_entries.iter() {
+                    let owner = map.owner(e.addr as usize);
+                    for (d, lane) in lanes.iter_mut().enumerate() {
                         if d != owner {
-                            self.stale[d].mark_word(e.addr as usize);
+                            lane.stale.mark_word(e.addr as usize);
                         }
                     }
                 }
                 // Carry values land on the CPU only; every device is stale
                 // until the carry re-ships through next round's validation.
-                for e in &self.carry {
-                    for bmp in &mut self.stale {
-                        bmp.mark_word(e.addr as usize);
+                for e in carry.iter() {
+                    for lane in lanes.iter_mut() {
+                        lane.stale.mark_word(e.addr as usize);
                     }
                 }
             }
         }
 
         if !cpu_lost {
-            self.router.reset_with_carry(&self.carry);
+            router.reset_with_carry(carry);
         }
-        self.carry.clear();
-        self.round_entries.clear();
+        carry.clear();
+        round_entries.clear();
+
+        // Deterministic fold of the per-lane RoundStats partials, in
+        // device-index order.  At n_dev = 1 each field receives exactly
+        // one chain of additions (accumulated in the lane in the same
+        // order RoundEngine performs them) on top of zero, so the fold
+        // preserves bit-identity with the single-device engine.
+        for lane in &lanes {
+            rs.gpu_phases.add(&lane.gpu_phases);
+            rs.cpu_phases.validation_s += lane.cpu_validation_s;
+        }
+        drop(lanes);
+
         rs.t_end = round_end;
-        self.t = round_end;
-        self.stats.absorb(&rs);
-        if self.round_log.len() < 10_000 {
-            self.round_log.push(rs);
+        *t = round_end;
+        stats.absorb(&rs);
+        if round_log.len() < 10_000 {
+            round_log.push(rs);
         }
         Ok(())
+    }
+}
+
+/// Disjoint mutable borrows of two lanes (`i != j`), for the pairwise
+/// cross-shard checks on the coordinator thread.
+fn pair_mut<'l, 'a, G>(
+    lanes: &'l mut [Lane<'a, G>],
+    i: usize,
+    j: usize,
+) -> (&'l mut Lane<'a, G>, &'l mut Lane<'a, G>) {
+    assert_ne!(i, j, "pair_mut needs distinct lanes");
+    if i < j {
+        let (a, b) = lanes.split_at_mut(j);
+        (&mut a[i], &mut b[0])
+    } else {
+        let (a, b) = lanes.split_at_mut(i);
+        (&mut b[0], &mut a[j])
     }
 }
 
@@ -811,5 +1140,60 @@ mod tests {
         let mut duo = cluster(2, 0.0);
         duo.run_rounds(3).unwrap();
         assert!(duo.cluster.refresh_bytes > 0, "cluster pulls deltas");
+    }
+
+    /// Threaded vs sequential bit-identity on a contended cluster (the
+    /// cross-shard injection exercises aborts, rollback and the stale
+    /// bookkeeping under threads).
+    #[test]
+    fn threaded_engine_is_bit_identical_to_sequential() {
+        for (n_gpus, cross) in [(2usize, 0.0), (4, 0.0), (4, 0.3)] {
+            let mut seq = cluster(n_gpus, cross);
+            seq.run_rounds(3).unwrap();
+            seq.drain().unwrap();
+
+            let mut thr = cluster(n_gpus, cross);
+            thr.set_threads(n_gpus);
+            assert_eq!(thr.threads(), n_gpus);
+            thr.run_rounds(3).unwrap();
+            thr.drain().unwrap();
+
+            let label = format!("n_gpus={n_gpus}/cross={cross}");
+            assert_eq!(
+                format!("{:?}", seq.stats),
+                format!("{:?}", thr.stats),
+                "{label}: RunStats diverged"
+            );
+            assert_eq!(
+                seq.cpu.stmr().snapshot(),
+                thr.cpu.stmr().snapshot(),
+                "{label}: CPU state diverged"
+            );
+            for d in 0..n_gpus {
+                assert_eq!(
+                    seq.devices[d].stmr(),
+                    thr.devices[d].stmr(),
+                    "{label}: device {d} replica diverged"
+                );
+            }
+            assert_eq!(
+                seq.cluster.cross_checks, thr.cluster.cross_checks,
+                "{label}"
+            );
+            assert_eq!(
+                seq.cluster.refresh_bytes, thr.cluster.refresh_bytes,
+                "{label}"
+            );
+        }
+    }
+
+    #[test]
+    fn thread_setting_clamps_and_oversubscribes_safely() {
+        let mut e = cluster(2, 0.0);
+        e.set_threads(0);
+        assert_eq!(e.threads(), 1, "zero clamps to sequential");
+        e.set_threads(16); // more threads than devices: one per lane
+        e.run_rounds(2).unwrap();
+        assert_eq!(e.stats.rounds_committed, 2);
     }
 }

@@ -10,12 +10,14 @@
 //!   `cluster.n_gpus` / `cluster.shard_bits`);
 //! * [`router::LogRouter`] — scatters the CPU write-set stream to owner
 //!   shards, chunking per device over per-device bus channels;
-//! * [`engine::ClusterEngine`] — drives the per-device round pipelines,
-//!   reusing the single-device validation/merge machinery per shard and
-//!   adding pairwise cross-shard conflict detection (granule bitmaps
-//!   first, word-level escalation on a hit) plus a batched
-//!   delta-coherence refresh — cross-device coherence is expensive
-//!   (Hechtman & Sorin), so everything stays hierarchical and batched;
+//! * [`engine::ClusterEngine`] — drives the per-device round pipelines
+//!   (sequentially, or concurrently on `cluster.threads` OS threads —
+//!   bit-identical either way, DESIGN.md §8), reusing the single-device
+//!   validation/merge machinery per shard and adding pairwise
+//!   cross-shard conflict detection (granule bitmaps first, word-level
+//!   escalation on a hit) plus a batched delta-coherence refresh —
+//!   cross-device coherence is expensive (Hechtman & Sorin), so
+//!   everything stays hierarchical and batched;
 //! * [`stats::ClusterStats`] — per-device breakdowns and cross-shard
 //!   abort accounting.
 //!

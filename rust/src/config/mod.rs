@@ -187,6 +187,12 @@ pub struct SystemConfig {
     pub bmp_shift: u32,
     /// CPU worker threads (paper: 8).
     pub cpu_threads: usize,
+    /// Run the CPU side's `cpu.threads` workers on real OS threads via
+    /// [`crate::coordinator::ParallelCpuDriver`] (`cpu.parallel`; synth
+    /// paths only).  Off by default: the single-driver rate model is the
+    /// paper-reproduction reference, and the parallel driver's per-worker
+    /// clocks/seeds produce a different (still deterministic) trace.
+    pub cpu_parallel: bool,
     /// CPU guest TM.
     pub guest: GuestKind,
     /// Conflict-resolution policy.
@@ -225,6 +231,11 @@ pub struct SystemConfig {
     /// Probability that a GPU update transaction redirects one write into
     /// another shard (cross-shard traffic injection; cluster only).
     pub cross_shard_prob: f64,
+    /// OS worker threads driving the cluster engine's per-device round
+    /// pipelines (`cluster.threads`, CLI `--threads`).  1 = fully
+    /// sequential; results are bit-identical at any setting (DESIGN.md
+    /// §8) — this is purely a wall-clock lever.
+    pub cluster_threads: usize,
     /// Application driven by `shetm run` / the workload builders:
     /// `synth | memcached | bank | kmeans | zipfkv`.  Per-app knobs live in
     /// their own config sections (`[bank]`, `[kmeans]`, `[zipfkv]`,
@@ -239,6 +250,7 @@ impl Default for SystemConfig {
             n_words: 1 << 18,
             bmp_shift: 0,
             cpu_threads: 8,
+            cpu_parallel: false,
             guest: GuestKind::Tiny,
             policy: PolicyKind::FavorCpu,
             period_s: 0.080,
@@ -256,6 +268,7 @@ impl Default for SystemConfig {
             n_gpus: 1,
             shard_bits: 12,
             cross_shard_prob: 0.0,
+            cluster_threads: 1,
             workload: "synth".to_string(),
         }
     }
@@ -266,10 +279,15 @@ impl SystemConfig {
     /// defaults above for missing keys.
     pub fn from_raw(raw: &Raw) -> Result<Self> {
         let d = SystemConfig::default();
+        let cluster_threads: usize = raw.get_or("cluster.threads", d.cluster_threads)?;
+        if cluster_threads == 0 {
+            bail!("cluster.threads must be at least 1 (1 = sequential)");
+        }
         Ok(SystemConfig {
             n_words: raw.get_or("stmr.n_words", d.n_words)?,
             bmp_shift: raw.get_or("stmr.bmp_shift", d.bmp_shift)?,
             cpu_threads: raw.get_or("cpu.threads", d.cpu_threads)?,
+            cpu_parallel: raw.get_bool_or("cpu.parallel", d.cpu_parallel)?,
             guest: match raw.get("cpu.guest") {
                 Some(s) => GuestKind::parse(s)?,
                 None => d.guest,
@@ -301,6 +319,7 @@ impl SystemConfig {
             n_gpus: raw.get_or("cluster.n_gpus", d.n_gpus)?,
             shard_bits: raw.get_or("cluster.shard_bits", d.shard_bits)?,
             cross_shard_prob: raw.get_or("cluster.cross_shard_prob", d.cross_shard_prob)?,
+            cluster_threads,
             workload: raw.get("workload").unwrap_or(&d.workload).to_string(),
         })
     }
@@ -365,13 +384,27 @@ period_ms = 2.5
     #[test]
     fn cluster_keys_parse() {
         let raw = Raw::parse(
-            "[cluster]\nn_gpus = 4\nshard_bits = 8\ncross_shard_prob = 0.05\n",
+            "[cluster]\nn_gpus = 4\nshard_bits = 8\ncross_shard_prob = 0.05\nthreads = 4\n",
         )
         .unwrap();
         let cfg = SystemConfig::from_raw(&raw).unwrap();
         assert_eq!(cfg.n_gpus, 4);
         assert_eq!(cfg.shard_bits, 8);
         assert!((cfg.cross_shard_prob - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.cluster_threads, 4);
+    }
+
+    #[test]
+    fn cluster_threads_defaults_to_sequential() {
+        let cfg = SystemConfig::from_raw(&Raw::new()).unwrap();
+        assert_eq!(cfg.cluster_threads, 1);
+    }
+
+    #[test]
+    fn cluster_threads_zero_is_rejected() {
+        let mut raw = Raw::new();
+        raw.set("cluster.threads=0").unwrap();
+        assert!(SystemConfig::from_raw(&raw).is_err(), "0 threads is invalid");
     }
 
     #[test]

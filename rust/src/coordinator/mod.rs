@@ -7,6 +7,8 @@
 //!   and work stealing;
 //! * [`policy`] — conflict-resolution policies (favor-CPU / favor-GPU /
 //!   anti-starvation);
+//! * [`parallel`] — [`parallel::ParallelCpuDriver`]: real worker threads
+//!   for the CPU side, with a deterministic log-merge order;
 //! * [`stats`] — round and run metrics, incl. the Fig. 4 phase breakdown;
 //! * [`baseline`] — CPU-only / GPU-only solo engines (the paper's
 //!   comparison baselines).
@@ -17,12 +19,14 @@
 pub mod baseline;
 pub mod dispatch;
 pub mod logs;
+pub mod parallel;
 pub mod policy;
 pub mod round;
 pub mod stats;
 
 pub use dispatch::{Affinity, Dispatcher};
 pub use logs::RoundLog;
+pub use parallel::ParallelCpuDriver;
 pub use policy::{Loser, Policy};
 pub use round::{CostModel, CpuDriver, CpuSlice, EngineConfig, GpuDriver, GpuSlice, RoundEngine, Variant};
 pub use stats::{PhaseBreakdown, RoundStats, RunStats};

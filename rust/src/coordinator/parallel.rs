@@ -1,0 +1,250 @@
+//! Real-thread CPU-side execution: [`ParallelCpuDriver`].
+//!
+//! The paper's CPU side is an 8-thread guest TM; the single-device
+//! engines model that with a *rate* multiplier inside one driver
+//! (`cpu.threads` × `1/cpu.txn_ns`).  This wrapper makes the workers
+//! real: it owns one inner [`CpuDriver`] per worker thread and fans every
+//! execution slice out on scoped OS threads, so the CPU slice's real
+//! wall-clock work scales down with core count alongside the threaded
+//! [`ClusterEngine`] lanes (DESIGN.md §8).
+//!
+//! # Determinism contract
+//!
+//! The merged result is deterministic — same seed ⇒ same log, same
+//! stats, same STMR — provided the workers are **data-disjoint**:
+//!
+//! * each worker is built over its own partition of the STMR (so worker
+//!   transactions never conflict with each other and each word is only
+//!   ever written by one worker), and
+//! * each worker has its **own guest-TM instance and commit clock**
+//!   ("per-thread guest-TM instances"): a clock shared across workers
+//!   would hand out timestamps in scheduling order, making the logged
+//!   `ts` values racy.
+//!
+//! Under that contract each worker's slice is a deterministic function of
+//! its own seed, and the merge is deterministic by construction: worker
+//! logs are concatenated **stably by worker index, then commit
+//! timestamp** (each worker's log is already in its commit order, so
+//! concatenation in index order realizes the `(worker, ts)` sort key).
+//! Relaxation vs. the single-clock system: timestamps are totally ordered
+//! *per worker* (hence per address, by disjointness) instead of globally —
+//! exactly what the GPU-side freshness check (§IV-C.2) needs, since it
+//! compares timestamps per word.  [`crate::launch::build_parallel_synth_cpu`]
+//! builds a compliant worker set from a [`SystemConfig`].
+//!
+//! [`ClusterEngine`]: crate::cluster::ClusterEngine
+//! [`SystemConfig`]: crate::config::SystemConfig
+
+use super::round::{CpuDriver, CpuSlice};
+use crate::stm::{SharedStmr, WriteEntry};
+
+/// Fans one CPU execution slice out across per-thread inner drivers.
+///
+/// See the module docs for the determinism contract.  With
+/// `parallel(false)` (or a single worker) the workers run sequentially on
+/// the caller's thread — bit-identical to the threaded run, which is what
+/// `rust/src/coordinator/parallel.rs`'s tests assert.
+pub struct ParallelCpuDriver<C: CpuDriver + Send> {
+    workers: Vec<C>,
+    /// Per-worker log scratch, reused across slices.
+    logs: Vec<Vec<WriteEntry>>,
+    parallel: bool,
+}
+
+impl<C: CpuDriver + Send> ParallelCpuDriver<C> {
+    /// Wrap a non-empty worker set.  All workers must drive the same
+    /// [`SharedStmr`] instance (asserted); keeping their access patterns
+    /// disjoint is the builder's responsibility (see the module docs).
+    pub fn new(workers: Vec<C>) -> Self {
+        assert!(!workers.is_empty(), "need at least one CPU worker");
+        let stmr0 = workers[0].stmr() as *const SharedStmr;
+        for w in &workers {
+            assert!(
+                std::ptr::eq(w.stmr(), stmr0),
+                "all workers must share one SharedStmr"
+            );
+        }
+        let n = workers.len();
+        ParallelCpuDriver {
+            workers,
+            logs: (0..n).map(|_| Vec::new()).collect(),
+            parallel: true,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Toggle real threading (`true` by default).  `false` runs the
+    /// workers sequentially on the caller's thread — same results, no
+    /// spawns; the equivalence tests use it as the oracle.
+    pub fn parallel(mut self, on: bool) -> Self {
+        self.parallel = on;
+        self
+    }
+
+    /// Immutable view of the workers (diagnostics, tests).
+    pub fn workers(&self) -> &[C] {
+        &self.workers
+    }
+}
+
+impl<C: CpuDriver + Send> CpuDriver for ParallelCpuDriver<C> {
+    fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice {
+        for l in &mut self.logs {
+            l.clear();
+        }
+        let mut total = CpuSlice::default();
+        if self.parallel && self.workers.len() > 1 {
+            let slices: Vec<CpuSlice> = std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .workers
+                    .iter_mut()
+                    .zip(self.logs.iter_mut())
+                    .map(|(w, l)| s.spawn(move || w.run(dur_s, l)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("CPU worker panicked"))
+                    .collect()
+            });
+            for sl in &slices {
+                total.commits += sl.commits;
+                total.attempts += sl.attempts;
+            }
+        } else {
+            for (w, l) in self.workers.iter_mut().zip(self.logs.iter_mut()) {
+                let sl = w.run(dur_s, l);
+                total.commits += sl.commits;
+                total.attempts += sl.attempts;
+            }
+        }
+        // Deterministic log merge: stable by worker index, then commit
+        // timestamp (each worker's log is already in its commit order).
+        for l in &self.logs {
+            log.extend_from_slice(l);
+        }
+        total
+    }
+
+    fn stmr(&self) -> &SharedStmr {
+        self.workers[0].stmr()
+    }
+
+    fn set_read_only(&mut self, ro: bool) {
+        for w in &mut self.workers {
+            w.set_read_only(ro);
+        }
+    }
+
+    fn snapshot(&mut self) {
+        // One region-level snapshot: the workers share the SharedStmr and
+        // its internal snapshot slot.  Workers carrying host-side rollback
+        // state beyond the STMR are outside this wrapper's contract.
+        self.workers[0].snapshot();
+    }
+
+    fn rollback(&mut self) {
+        self.workers[0].rollback();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::synth::{SynthCpu, SynthSpec};
+    use crate::stm::tinystm::TinyStm;
+    use crate::stm::GlobalClock;
+    use std::sync::Arc;
+
+    /// Disjoint-partition worker set: `n_workers` SynthCpus over one
+    /// SharedStmr, each with its own TinySTM + clock and its own seed.
+    fn workers(n_words: usize, n_workers: usize) -> ParallelCpuDriver<SynthCpu> {
+        let stmr = Arc::new(SharedStmr::new(n_words));
+        let span = (n_words / 2) / n_workers;
+        let ws = (0..n_workers)
+            .map(|i| {
+                let tm = Arc::new(TinyStm::with_clock(Arc::new(GlobalClock::new())));
+                let spec =
+                    SynthSpec::w1(n_words, 1.0).partitioned(i * span..(i + 1) * span);
+                SynthCpu::new(stmr.clone(), tm, spec, 1, 2e-6, 100 + i as u64)
+            })
+            .collect();
+        ParallelCpuDriver::new(ws)
+    }
+
+    #[test]
+    fn threaded_run_matches_sequential_run() {
+        let mut par = workers(1 << 12, 4);
+        let mut seq = workers(1 << 12, 4).parallel(false);
+        let (mut log_p, mut log_s) = (Vec::new(), Vec::new());
+        for _ in 0..3 {
+            let sp = par.run(0.002, &mut log_p);
+            let ss = seq.run(0.002, &mut log_s);
+            assert_eq!(sp.commits, ss.commits);
+            assert_eq!(sp.attempts, ss.attempts);
+        }
+        assert_eq!(log_p, log_s, "merged logs must be bit-identical");
+        assert_eq!(
+            par.stmr().snapshot(),
+            seq.stmr().snapshot(),
+            "final STMR state must be bit-identical"
+        );
+    }
+
+    #[test]
+    fn merge_is_stable_by_worker_index_then_ts() {
+        let mut d = workers(1 << 12, 4);
+        let mut log = Vec::new();
+        d.run(0.002, &mut log);
+        assert!(!log.is_empty());
+        // Worker partitions are the disjoint quarters of the lower half:
+        // recover each entry's worker from its address, and check that the
+        // merged order is non-decreasing in (worker, ts).
+        let span = (1usize << 11) / 4;
+        let mut last = (0usize, 0i32);
+        for e in &log {
+            let w = (e.addr as usize) / span;
+            assert!(
+                (w, e.ts) >= last,
+                "entry {e:?} out of (worker, ts) order after {last:?}"
+            );
+            last = (w, e.ts);
+        }
+    }
+
+    #[test]
+    fn read_only_mode_reaches_every_worker() {
+        let mut d = workers(1 << 12, 3);
+        d.set_read_only(true);
+        let mut log = Vec::new();
+        let s = d.run(0.002, &mut log);
+        assert!(s.commits > 0);
+        assert!(log.is_empty(), "read-only slices log nothing");
+    }
+
+    #[test]
+    fn snapshot_rollback_round_trips_through_worker_zero() {
+        let mut d = workers(1 << 12, 2);
+        let mut log = Vec::new();
+        d.run(0.001, &mut log);
+        let before = d.stmr().snapshot();
+        d.snapshot();
+        d.run(0.001, &mut log);
+        d.rollback();
+        assert_eq!(d.stmr().snapshot(), before, "rollback restores the region");
+    }
+
+    #[test]
+    #[should_panic(expected = "share one SharedStmr")]
+    fn distinct_stmrs_are_rejected() {
+        let a = workers(1 << 12, 1);
+        let b = workers(1 << 12, 1);
+        let mut ws = Vec::new();
+        ws.extend(a.workers.into_iter());
+        ws.extend(b.workers.into_iter());
+        ParallelCpuDriver::new(ws);
+    }
+}

@@ -97,6 +97,28 @@ impl CpuDriver for Box<dyn CpuDriver> {
     }
 }
 
+impl CpuDriver for Box<dyn CpuDriver + Send> {
+    fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice {
+        (**self).run(dur_s, log)
+    }
+
+    fn stmr(&self) -> &SharedStmr {
+        (**self).stmr()
+    }
+
+    fn set_read_only(&mut self, ro: bool) {
+        (**self).set_read_only(ro)
+    }
+
+    fn snapshot(&mut self) {
+        (**self).snapshot()
+    }
+
+    fn rollback(&mut self) {
+        (**self).rollback()
+    }
+}
+
 /// Result of one GPU execution slice.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct GpuSlice {
@@ -114,6 +136,23 @@ pub struct GpuSlice {
 /// The GPU side: a driver that feeds batches to the device under a compute
 /// budget.
 pub trait GpuDriver {
+    /// Pre-slice hook: the engine calls this on the coordinator thread, in
+    /// device-index order, immediately before every [`Self::run`] slice
+    /// with the same `budget_s` the slice will receive.
+    ///
+    /// Drivers whose batch generation draws from *shared* state (a request
+    /// dispatcher, a shared RNG) must do all of that shared access here and
+    /// stash the drawn work locally, so that [`Self::run`] touches only
+    /// driver-local state.  That is what lets the threaded
+    /// [`ClusterEngine`] run per-device slices concurrently and still be
+    /// bit-identical to the sequential schedule (DESIGN.md §8): shared
+    /// draws happen at a deterministic point in a deterministic order, and
+    /// the parallel phase is data-disjoint.  Drivers with purely local
+    /// generators (the common case) keep the default no-op.
+    ///
+    /// [`ClusterEngine`]: crate::cluster::ClusterEngine
+    fn prepare(&mut self, _budget_s: f64) {}
+
     /// Execute whole batches while they fit in `budget_s` device-seconds.
     fn run(&mut self, device: &mut GpuDevice, budget_s: f64) -> Result<GpuSlice>;
 
@@ -123,6 +162,24 @@ pub trait GpuDriver {
 }
 
 impl GpuDriver for Box<dyn GpuDriver> {
+    fn prepare(&mut self, budget_s: f64) {
+        (**self).prepare(budget_s)
+    }
+
+    fn run(&mut self, device: &mut GpuDevice, budget_s: f64) -> Result<GpuSlice> {
+        (**self).run(device, budget_s)
+    }
+
+    fn on_round_end(&mut self, committed: bool) {
+        (**self).on_round_end(committed)
+    }
+}
+
+impl GpuDriver for Box<dyn GpuDriver + Send> {
+    fn prepare(&mut self, budget_s: f64) {
+        (**self).prepare(budget_s)
+    }
+
     fn run(&mut self, device: &mut GpuDevice, budget_s: f64) -> Result<GpuSlice> {
         (**self).run(device, budget_s)
     }
@@ -368,8 +425,11 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
             rs.cpu_phases.processing_s += seg_dur;
             cpu_cursor += seg_dur;
 
-            // GPU slice covering the same virtual span.
+            // GPU slice covering the same virtual span.  `prepare` runs
+            // first so shared-state draws happen at the same deterministic
+            // point as in the (possibly threaded) cluster engine.
             let budget = (cpu_cursor - gpu_cursor).max(0.0);
+            self.gpu.prepare(budget);
             let gs = self.gpu.run(&mut self.device, budget)?;
             rs.gpu_commits += gs.commits;
             rs.gpu_attempts += gs.attempts;

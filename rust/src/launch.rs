@@ -14,6 +14,7 @@ use crate::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
 use crate::apps::workload::Workload;
 use crate::cluster::{ClusterEngine, ShardMap};
 use crate::config::{GuestKind, SystemConfig};
+use crate::coordinator::parallel::ParallelCpuDriver;
 use crate::coordinator::round::{
     CostModel, CpuDriver, EngineConfig, GpuDriver, RoundEngine, Variant,
 };
@@ -232,6 +233,7 @@ pub fn build_synth_cluster_engine(
         cpu,
         gpus,
     );
+    engine.set_threads(cfg.cluster_threads);
     engine.align_replicas();
     engine
 }
@@ -287,15 +289,18 @@ pub fn build_memcached_cluster_engine(
         cpu,
         gpus,
     );
+    engine.set_threads(cfg.cluster_threads);
     engine.align_replicas();
     engine
 }
 
-/// A single-device engine over boxed workload drivers.
-pub type WorkloadEngine = RoundEngine<Box<dyn CpuDriver>, Box<dyn GpuDriver>>;
+/// A single-device engine over boxed workload drivers (`Send` so the
+/// same driver objects can feed the threaded cluster engine).
+pub type WorkloadEngine = RoundEngine<Box<dyn CpuDriver + Send>, Box<dyn GpuDriver + Send>>;
 
 /// A cluster engine over boxed workload drivers.
-pub type WorkloadClusterEngine = ClusterEngine<Box<dyn CpuDriver>, Box<dyn GpuDriver>>;
+pub type WorkloadClusterEngine =
+    ClusterEngine<Box<dyn CpuDriver + Send>, Box<dyn GpuDriver + Send>>;
 
 /// Shared workload-engine scaffolding: initialized STMR + guest TM +
 /// drivers built through the [`Workload`] trait for `map`'s shard count.
@@ -304,7 +309,7 @@ fn workload_parts(
     w: &dyn Workload,
     map: &ShardMap,
     gpu_batch: usize,
-) -> (Box<dyn CpuDriver>, Vec<Box<dyn GpuDriver>>) {
+) -> (Box<dyn CpuDriver + Send>, Vec<Box<dyn GpuDriver + Send>>) {
     let n = w.n_words();
     let stmr = Arc::new(SharedStmr::new(n));
     let mut words = vec![0; n];
@@ -365,6 +370,133 @@ pub fn build_workload_cluster_engine(
         cpu,
         gpus,
     );
+    engine.set_threads(cfg.cluster_threads);
+    engine.align_replicas();
+    engine
+}
+
+/// Build a [`ParallelCpuDriver`] worker set for the synthetic workload:
+/// `cfg.cpu_threads` [`SynthCpu`] workers over one shared STMR, each
+/// confined to its own contiguous slice of `cpu_spec.partition`, each
+/// with its **own** guest-TM instance and commit clock, each modeling one
+/// hardware thread (`threads = 1`, so the aggregate rate equals the
+/// single-driver configuration's `cpu.threads / cpu.txn_ns`).
+///
+/// This satisfies the determinism contract of
+/// [`crate::coordinator::parallel`]: disjoint partitions + per-worker
+/// clocks ⇒ threaded and sequential execution are bit-identical.
+pub fn build_parallel_synth_cpu(
+    cfg: &SystemConfig,
+    cpu_spec: &SynthSpec,
+) -> ParallelCpuDriver<SynthCpu> {
+    let n_workers = cfg.cpu_threads.max(1);
+    assert!(
+        cpu_spec.partition.len() >= n_workers,
+        "partition of {} words cannot be split across {n_workers} workers",
+        cpu_spec.partition.len()
+    );
+    let stmr = Arc::new(SharedStmr::new(cfg.n_words));
+    let base = cpu_spec.partition.start;
+    let span = (cpu_spec.partition.len() / n_workers).max(1);
+    let workers = (0..n_workers)
+        .map(|i| {
+            let lo = (base + i * span).min(cpu_spec.partition.end - 1);
+            let hi = if i + 1 == n_workers {
+                cpu_spec.partition.end
+            } else {
+                (base + (i + 1) * span).min(cpu_spec.partition.end)
+            };
+            let mut spec = cpu_spec.clone();
+            spec.partition = lo..hi.max(lo + 1);
+            let tm = build_guest(cfg.guest, Arc::new(GlobalClock::new()));
+            SynthCpu::new(
+                stmr.clone(),
+                tm,
+                spec,
+                1,
+                cfg.cpu_txn_s,
+                cfg.seed.wrapping_add(i as u64),
+            )
+        })
+        .collect();
+    ParallelCpuDriver::new(workers)
+}
+
+/// A synth engine whose CPU slice runs on real worker threads.
+pub type ParallelSynthEngine = RoundEngine<ParallelCpuDriver<SynthCpu>, SynthGpu>;
+
+/// A synth cluster engine whose CPU slice runs on real worker threads.
+pub type ParallelSynthClusterEngine = ClusterEngine<ParallelCpuDriver<SynthCpu>, SynthGpu>;
+
+/// [`build_synth_engine`] with the CPU side on real worker threads
+/// (`cpu.parallel`): the single rate-modeled driver is replaced by a
+/// [`ParallelCpuDriver`] over `cfg.cpu_threads` disjoint-partition
+/// workers ([`build_parallel_synth_cpu`]).  The trace differs from the
+/// single-driver engine (per-worker clocks and seeds) but is fully
+/// deterministic, and the aggregate CPU rate is identical.
+pub fn build_parallel_synth_engine(
+    cfg: &SystemConfig,
+    variant: Variant,
+    cpu_spec: SynthSpec,
+    gpu_spec: SynthSpec,
+    gpu_batch: usize,
+    backend: Backend,
+) -> ParallelSynthEngine {
+    let cpu = build_parallel_synth_cpu(cfg, &cpu_spec);
+    let gpu = SynthGpu::new(
+        gpu_spec,
+        gpu_batch,
+        cfg.gpu_kernel_latency_s,
+        cfg.gpu_txn_s,
+        cfg.seed ^ 0x9E37_79B9,
+    );
+    let device = GpuDevice::new(cfg.n_words, cfg.bmp_shift, backend);
+    let mut engine =
+        RoundEngine::new(engine_config(cfg, variant), cost_model(cfg), device, cpu, gpu);
+    engine.align_replicas();
+    engine
+}
+
+/// [`build_synth_cluster_engine`] with the CPU side on real worker
+/// threads (`cpu.parallel`); composes with `cluster.threads`, so both
+/// sides of the platform exploit real parallelism.  Deterministic at any
+/// `cluster.threads` setting, like every engine configuration.
+pub fn build_parallel_synth_cluster_engine(
+    cfg: &SystemConfig,
+    variant: Variant,
+    cpu_spec: SynthSpec,
+    gpu_spec: SynthSpec,
+    gpu_batch: usize,
+    backend: Backend,
+) -> ParallelSynthClusterEngine {
+    let map = shard_map(cfg, cfg.n_words);
+    let cpu = build_parallel_synth_cpu(cfg, &cpu_spec);
+    let mut devices = Vec::with_capacity(map.n_shards());
+    let mut gpus = Vec::with_capacity(map.n_shards());
+    for d in 0..map.n_shards() {
+        let mut spec = gpu_spec.clone().homed(map.clone(), d);
+        if map.n_shards() > 1 {
+            spec = spec.with_cross_shard(cfg.cross_shard_prob);
+        }
+        let seed = cfg.seed ^ 0x9E37_79B9 ^ (d as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        gpus.push(SynthGpu::new(
+            spec,
+            gpu_batch,
+            cfg.gpu_kernel_latency_s,
+            cfg.gpu_txn_s,
+            seed,
+        ));
+        devices.push(GpuDevice::new(cfg.n_words, cfg.bmp_shift, backend.clone()));
+    }
+    let mut engine = ClusterEngine::new(
+        engine_config(cfg, variant),
+        cost_model(cfg),
+        map,
+        devices,
+        cpu,
+        gpus,
+    );
+    engine.set_threads(cfg.cluster_threads);
     engine.align_replicas();
     engine
 }
@@ -490,6 +622,85 @@ mod tests {
             e.drain().unwrap();
             w.check_invariants(e.cpu.stmr()).unwrap();
         }
+    }
+
+    #[test]
+    fn cluster_builders_apply_thread_knob() {
+        let mut c = cfg();
+        c.n_gpus = 2;
+        c.cluster_threads = 2;
+        let n = c.n_words;
+        let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+        let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+        let mut e = build_synth_cluster_engine(
+            &c,
+            Variant::Optimized,
+            cpu_spec,
+            gpu_spec,
+            256,
+            Backend::Native,
+        );
+        assert_eq!(e.threads(), 2);
+        e.run_rounds(2).unwrap();
+        assert_eq!(e.stats.rounds_committed, 2);
+    }
+
+    #[test]
+    fn parallel_synth_cpu_drives_a_round_engine() {
+        let mut c = cfg();
+        c.cpu_threads = 4;
+        let n = c.n_words;
+        let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+        let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+        let cpu = build_parallel_synth_cpu(&c, &cpu_spec);
+        assert_eq!(cpu.n_workers(), 4);
+        // Workers cover the CPU partition disjointly and aggregate to the
+        // modeled 4-thread rate.
+        let gpu = SynthGpu::new(gpu_spec, 256, c.gpu_kernel_latency_s, c.gpu_txn_s, 7);
+        let device = GpuDevice::new(n, c.bmp_shift, Backend::Native);
+        let mut e = RoundEngine::new(
+            engine_config(&c, Variant::Optimized),
+            cost_model(&c),
+            device,
+            cpu,
+            gpu,
+        );
+        e.align_replicas();
+        e.run_rounds(2).unwrap();
+        e.drain().unwrap();
+        assert_eq!(e.stats.rounds_committed, 3, "partitioned => clean rounds");
+        assert!(e.stats.cpu_commits > 0);
+    }
+
+    #[test]
+    fn parallel_synth_cluster_engine_is_thread_count_invariant() {
+        // cpu.parallel composes with cluster.threads: the fully threaded
+        // platform (CPU workers + device lanes) must be bit-identical to
+        // the sequential schedule of the same configuration.
+        let run = |cluster_threads: usize| {
+            let mut c = cfg();
+            c.cpu_threads = 4;
+            c.n_gpus = 2;
+            c.cluster_threads = cluster_threads;
+            let n = c.n_words;
+            let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+            let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+            let mut e = build_parallel_synth_cluster_engine(
+                &c,
+                Variant::Optimized,
+                cpu_spec,
+                gpu_spec,
+                256,
+                Backend::Native,
+            );
+            e.run_rounds(2).unwrap();
+            e.drain().unwrap();
+            (format!("{:?}", e.stats), e.cpu.stmr().snapshot())
+        };
+        let seq = run(1);
+        let thr = run(2);
+        assert_eq!(seq.0, thr.0, "stats diverged");
+        assert_eq!(seq.1, thr.1, "state diverged");
     }
 
     #[test]

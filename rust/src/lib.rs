@@ -8,19 +8,31 @@
 //! while the simulated accelerator's batch compute runs AOT-compiled
 //! jax/Pallas kernels through PJRT.
 //!
-//! Start with [`coordinator::HetmBuilder`] (see `examples/quickstart.rs`) or
-//! the `shetm` binary (`rust/src/main.rs`).
+//! Start with [`coordinator::RoundEngine`] assembled through [`launch`]
+//! (see `examples/quickstart.rs`) or the `shetm` binary
+//! (`rust/src/main.rs`).
 //!
 //! Layout (see DESIGN.md for the full inventory):
 //! - [`stm`] — CPU guest TMs (TinySTM-like, NOrec-like, HTM emulation)
 //! - [`gpu`] — the simulated accelerator device + kernel backends
 //! - [`bus`] — the PCIe interconnect model
 //! - [`runtime`] — PJRT artifact loading/execution
-//! - [`coordinator`] — SHeTM itself: rounds, validation, merge, dispatch
-//! - [`cluster`] — the multi-GPU coordinator: sharded STMR across N devices
-//! - [`apps`] — memcached cache + synthetic workloads
+//! - [`coordinator`] — SHeTM itself: rounds, validation, merge, dispatch,
+//!   plus [`coordinator::parallel`] (real CPU worker threads)
+//! - [`cluster`] — the multi-GPU coordinator: sharded STMR across N
+//!   devices, per-device pipelines on real OS threads (`cluster.threads`)
+//! - [`apps`] — the [`apps::Workload`] trait + application suite
+//!   (synthetic, memcached, bank, kmeans, zipf-kv), each with a built-in
+//!   correctness oracle
 //! - [`config`] — dependency-free config system
 //! - [`util`] — RNG / Zipf / stats / property-test / bench harnesses
+//!
+//! Threading never changes results: the threaded cluster engine and the
+//! [`coordinator::ParallelCpuDriver`] are bit-identical to their
+//! sequential schedules on the same seed (DESIGN.md §8, enforced by
+//! `rust/tests/cluster_equivalence.rs`).
+
+#![warn(missing_docs)]
 
 pub mod apps;
 pub mod bus;

@@ -13,6 +13,7 @@
 //!   --config FILE        TOML-subset config file (see config/mod.rs)
 //!   --set key=value      override any config key (repeatable)
 //!   --rounds N           synchronization rounds to run (default 50)
+//!   --threads N          OS threads for the per-device cluster pipelines
 //!   --basic              use the basic (unoptimized) algorithm variant
 //!   --pjrt               force the PJRT backend from ./artifacts
 //!
@@ -44,6 +45,7 @@ struct Cli {
     basic: bool,
     pjrt: bool,
     gpus: Option<usize>,
+    threads: Option<usize>,
     workload: Option<String>,
 }
 
@@ -69,6 +71,7 @@ fn parse_cli() -> Result<Cli> {
     let mut basic = false;
     let mut pjrt = false;
     let mut gpus = None;
+    let mut threads = None;
     let mut workload = None;
     while let Some(a) = args.next() {
         match a.as_str() {
@@ -95,6 +98,14 @@ fn parse_cli() -> Result<Cli> {
                         .context("--gpus")?,
                 );
             }
+            "--threads" => {
+                threads = Some(
+                    args.next()
+                        .context("--threads needs a number")?
+                        .parse()
+                        .context("--threads")?,
+                );
+            }
             "--workload" => {
                 workload = Some(args.next().context("--workload needs a name")?);
             }
@@ -110,6 +121,7 @@ fn parse_cli() -> Result<Cli> {
         basic,
         pjrt,
         gpus,
+        threads,
         workload,
     })
 }
@@ -188,6 +200,12 @@ fn system_config(cli: &Cli) -> Result<SystemConfig> {
         }
         cfg.n_gpus = g;
     }
+    if let Some(t) = cli.threads {
+        if t == 0 {
+            bail!("--threads must be at least 1");
+        }
+        cfg.cluster_threads = t;
+    }
     Ok(cfg)
 }
 
@@ -232,7 +250,42 @@ fn cmd_synth(cli: &Cli) -> Result<()> {
         if matches!(backend, Backend::Pjrt { .. }) {
             bail!("cluster mode (--gpus > 1) supports the native backend only");
         }
-        let mut engine = launch::build_synth_cluster_engine(
+        let label = format!(
+            "synthetic W1-100% on {} sharded GPUs{}",
+            cfg.n_gpus,
+            if cfg.cpu_parallel { ", parallel CPU" } else { "" }
+        );
+        if cfg.cpu_parallel {
+            // cpu.parallel: the CPU slice fans out over cpu.threads real
+            // worker threads (composes with --threads for the lanes).
+            let mut engine = launch::build_parallel_synth_cluster_engine(
+                &cfg,
+                variant(cli),
+                cpu_spec,
+                gpu_spec,
+                1024,
+                backend,
+            );
+            engine.run_rounds(cli.rounds)?;
+            print_stats(&label, &engine.stats);
+            print_cluster_stats(&engine.stats, &engine.cluster);
+        } else {
+            let mut engine = launch::build_synth_cluster_engine(
+                &cfg,
+                variant(cli),
+                cpu_spec,
+                gpu_spec,
+                1024,
+                backend,
+            );
+            engine.run_rounds(cli.rounds)?;
+            print_stats(&label, &engine.stats);
+            print_cluster_stats(&engine.stats, &engine.cluster);
+        }
+        return Ok(());
+    }
+    if cfg.cpu_parallel {
+        let mut engine = launch::build_parallel_synth_engine(
             &cfg,
             variant(cli),
             cpu_spec,
@@ -241,9 +294,7 @@ fn cmd_synth(cli: &Cli) -> Result<()> {
             backend,
         );
         engine.run_rounds(cli.rounds)?;
-        let label = format!("synthetic W1-100% on {} sharded GPUs", cfg.n_gpus);
-        print_stats(&label, &engine.stats);
-        print_cluster_stats(&engine.stats, &engine.cluster);
+        print_stats("synthetic W1-100%, partitioned, parallel CPU", &engine.stats);
         return Ok(());
     }
     let mut engine =
@@ -399,14 +450,19 @@ OPTIONS:
   --workload NAME   synth|memcached|bank|kmeans|zipfkv (run command)
   --rounds N        synchronization rounds (default 50)
   --gpus N          shard the STMR across N simulated devices (cluster)
+  --threads N       drive the N per-device pipelines on N OS threads
+                    (wall-clock only: results are bit-identical)
   --basic           basic algorithm variant (Fig. 1a)
   --pjrt            use PJRT artifacts from ./artifacts
 
 KEYS (defaults): stmr.n_words=262144 stmr.bmp_shift=0 cpu.threads=8
+  cpu.parallel=false (synth: run the cpu.threads workers on real OS
+  threads via ParallelCpuDriver — deterministic, different trace)
   cpu.guest=tinystm|norec|htm cpu.txn_ns hetm.period_ms=80
   hetm.policy=favor-cpu|favor-gpu|starvation-guard hetm.early_validation
   bus.latency_us bus.gbps gpu.kernel_latency_us gpu.txn_ns
   cluster.n_gpus=1 cluster.shard_bits=12 cluster.cross_shard_prob=0
+  cluster.threads=1
   memcached.n_sets memcached.steal runtime.artifacts seed
   workload=synth|memcached|bank|kmeans|zipfkv plus per-app sections:
   bank.accounts bank.balance bank.max_transfer bank.update_frac

@@ -4,8 +4,9 @@
 //! `python/compile/aot.py` lowers the Layer-2 jax step functions to HLO
 //! *text* under `artifacts/` together with a `manifest.txt`; at startup the
 //! coordinator builds an [`ArtifactStore`] which compiles each module once
-//! on a shared [`xla::PjRtClient`] and hands out [`KernelExec`] handles that
-//! the hot path calls with plain `&[i32]` slices.
+//! on a shared `xla::PjRtClient` (only linked under the `pjrt` cargo
+//! feature) and hands out [`KernelExec`] handles that the hot path calls
+//! with plain `&[i32]` slices.
 //!
 //! Python never runs at request time: after `make artifacts` the Rust binary
 //! is self-contained.

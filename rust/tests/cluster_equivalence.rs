@@ -331,3 +331,141 @@ fn cluster_memcached_serves_from_all_devices() {
         assert!(dev.commits > 0, "device {d} never committed");
     }
 }
+
+// ---------------------------------------------------------------------------
+// Sequential vs threaded engine: golden-trace equivalence.  The threaded
+// ClusterEngine (`cluster.threads = N`) must be bit-identical to the
+// sequential one (`cluster.threads = 1`) on the same seed — same RunStats
+// at full f64 precision, same per-round history, same final CPU state —
+// for EVERY workload × policy at n_gpus ∈ {1, 4}.  Each run also passes
+// the workload's correctness oracle, so threading is checked against the
+// application semantics, not just the trace.  (DESIGN.md §8.)
+// ---------------------------------------------------------------------------
+
+fn workload_trace(
+    name: &str,
+    policy: PolicyKind,
+    n_gpus: usize,
+    threads: usize,
+) -> (String, String, Vec<i32>) {
+    use shetm::apps::workload::from_raw;
+    let raw = Raw::parse(
+        "cpu.txn_ns = 2000\n\
+         gpu.txn_ns = 230\n\
+         hetm.period_ms = 2\n\
+         seed = 11\n\
+         [bank]\n\
+         accounts = 16384\n\
+         [kmeans]\n\
+         points = 2048\n\
+         [zipfkv]\n\
+         keys = 2048\n\
+         [memcached]\n\
+         n_sets = 1024\n",
+    )
+    .unwrap();
+    let mut c = SystemConfig::from_raw(&raw).unwrap();
+    c.n_words = 1 << 14;
+    c.policy = policy;
+    c.n_gpus = n_gpus;
+    c.cluster_threads = threads;
+    // Align shard stripes with the apps' half-splits on small regions.
+    c.shard_bits = 6;
+    let w = from_raw(name, &raw, &c).unwrap();
+    let mut e = launch::build_workload_cluster_engine(
+        &c,
+        Variant::Optimized,
+        w.as_ref(),
+        128,
+        shetm::gpu::Backend::Native,
+    );
+    assert_eq!(e.threads(), threads);
+    e.run_rounds(2).unwrap();
+    e.drain().unwrap();
+    w.check_invariants(e.cpu.stmr())
+        .unwrap_or_else(|err| panic!("{name} oracle failed (threads={threads}): {err}"));
+    let rounds_dbg = e
+        .round_log
+        .iter()
+        .map(|r| format!("{r:?}"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    (format!("{:?}", e.stats), rounds_dbg, e.cpu.stmr().snapshot())
+}
+
+fn assert_threaded_equivalent(name: &str, policy: PolicyKind, n_gpus: usize) {
+    // At n_gpus = 1 this still crosses a real thread boundary: run_lanes
+    // spawns a worker for the single lane whenever threads > 1.
+    let threads = n_gpus.max(2);
+    let seq = workload_trace(name, policy, n_gpus, 1);
+    let thr = workload_trace(name, policy, n_gpus, threads);
+    let label = format!("{name}/{policy:?}/n_gpus={n_gpus}/threads={threads}");
+    assert_eq!(seq.0, thr.0, "{label}: RunStats diverged");
+    assert_eq!(seq.1, thr.1, "{label}: per-round stats diverged");
+    assert_eq!(seq.2, thr.2, "{label}: final CPU state diverged");
+}
+
+#[test]
+fn threaded_matches_sequential_synth() {
+    for policy in [
+        PolicyKind::FavorCpu,
+        PolicyKind::FavorGpu,
+        PolicyKind::CpuWithStarvationGuard,
+    ] {
+        for n_gpus in [1usize, 4] {
+            assert_threaded_equivalent("synth", policy, n_gpus);
+        }
+    }
+}
+
+#[test]
+fn threaded_matches_sequential_memcached() {
+    for policy in [
+        PolicyKind::FavorCpu,
+        PolicyKind::FavorGpu,
+        PolicyKind::CpuWithStarvationGuard,
+    ] {
+        for n_gpus in [1usize, 4] {
+            assert_threaded_equivalent("memcached", policy, n_gpus);
+        }
+    }
+}
+
+#[test]
+fn threaded_matches_sequential_bank() {
+    for policy in [
+        PolicyKind::FavorCpu,
+        PolicyKind::FavorGpu,
+        PolicyKind::CpuWithStarvationGuard,
+    ] {
+        for n_gpus in [1usize, 4] {
+            assert_threaded_equivalent("bank", policy, n_gpus);
+        }
+    }
+}
+
+#[test]
+fn threaded_matches_sequential_kmeans() {
+    for policy in [
+        PolicyKind::FavorCpu,
+        PolicyKind::FavorGpu,
+        PolicyKind::CpuWithStarvationGuard,
+    ] {
+        for n_gpus in [1usize, 4] {
+            assert_threaded_equivalent("kmeans", policy, n_gpus);
+        }
+    }
+}
+
+#[test]
+fn threaded_matches_sequential_zipfkv() {
+    for policy in [
+        PolicyKind::FavorCpu,
+        PolicyKind::FavorGpu,
+        PolicyKind::CpuWithStarvationGuard,
+    ] {
+        for n_gpus in [1usize, 4] {
+            assert_threaded_equivalent("zipfkv", policy, n_gpus);
+        }
+    }
+}

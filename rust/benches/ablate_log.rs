@@ -1,0 +1,179 @@
+//! Log compaction × chunk-filter ablation on the hot-key workload.
+//!
+//! SHeTM's inter-device synchronization cost is dominated by shipping and
+//! validating the CPU write-set log (HeTM §IV-D).  The raw `RoundLog`
+//! ships every committed write verbatim, so a skewed workload pays bus
+//! and validation time proportional to COMMITS; with
+//! `hetm.log_compaction` it pays proportional to the round's write-set
+//! FOOTPRINT, and with `hetm.chunk_filter` chunks that provably cannot
+//! intersect the GPU read-set skip the per-entry validation pass
+//! entirely.  This bench quantifies both levers on `zipfkv` across the
+//! Zipf exponent θ (the hotter the keys, the bigger the compaction win),
+//! asserting the acceptance bar: at θ ≥ 0.9 compaction ships ≥ 2× fewer
+//! entries and compaction+filter spends less validation time than raw —
+//! with the workload's correctness oracle checked on every point.
+//!
+//! Every point is appended to `BENCH_log.json` (working directory, i.e.
+//! the repo root under `cargo bench`); see docs/BENCHMARKS.md for the
+//! schema.  `SHETM_BENCH_FAST=1` shortens the sweep.
+
+mod common;
+
+use shetm::config::{Raw, SystemConfig};
+use shetm::coordinator::round::{CpuDriver, Variant};
+use shetm::gpu::Backend;
+use shetm::launch;
+use shetm::util::bench::Table;
+
+struct Point {
+    theta: f64,
+    compaction: bool,
+    filter: bool,
+    raw_entries: u64,
+    shipped_entries: u64,
+    chunks: u64,
+    chunks_filtered: u64,
+    validation_s: f64,
+    throughput: f64,
+}
+
+fn run_point(theta: f64, compaction: bool, filter: bool, rounds: usize) -> Point {
+    let mut raw = Raw::new();
+    raw.set("zipfkv.keys=2048").unwrap();
+    raw.set(&format!("zipfkv.theta={theta}")).unwrap();
+    raw.set("zipfkv.update_frac=0.5").unwrap();
+    let mut cfg: SystemConfig = common::base_config();
+    // Long periods so one round logs far more commits than one 48 KB
+    // chunk holds — the regime where compaction changes the chunk count.
+    cfg.period_s = 0.020;
+    cfg.log_compaction = compaction;
+    cfg.chunk_filter = filter;
+    let w = shetm::apps::workload::from_raw("zipfkv", &raw, &cfg).unwrap();
+    let mut e = launch::build_workload_engine(
+        &cfg,
+        Variant::Optimized,
+        w.as_ref(),
+        1024,
+        Backend::Native,
+    );
+    e.run_rounds(rounds).expect("ablate_log run");
+    e.drain().expect("ablate_log drain");
+    w.check_invariants(e.cpu.stmr())
+        .expect("zipfkv oracle failed in ablate_log");
+    Point {
+        theta,
+        compaction,
+        filter,
+        raw_entries: e.stats.log_entries_raw,
+        shipped_entries: e.stats.log_entries_shipped,
+        chunks: e.stats.chunks,
+        chunks_filtered: e.stats.chunks_filtered,
+        validation_s: e.stats.gpu_phases.validation_s,
+        throughput: e.stats.throughput(),
+    }
+}
+
+fn json_point(p: &Point) -> String {
+    format!(
+        "{{\"theta\": {}, \"compaction\": {}, \"filter\": {}, \
+         \"raw_entries\": {}, \"shipped_entries\": {}, \"chunks\": {}, \
+         \"chunks_filtered\": {}, \"filtered_chunk_ratio\": {:.4}, \
+         \"gpu_validation_s\": {:.9}, \"virtual_tx_per_s\": {:.3}}}",
+        p.theta,
+        p.compaction,
+        p.filter,
+        p.raw_entries,
+        p.shipped_entries,
+        p.chunks,
+        p.chunks_filtered,
+        if p.chunks == 0 {
+            0.0
+        } else {
+            p.chunks_filtered as f64 / p.chunks as f64
+        },
+        p.validation_s,
+        p.throughput,
+    )
+}
+
+fn main() {
+    let thetas: &[f64] = if common::fast() {
+        &[0.9, 1.2]
+    } else {
+        &[0.5, 0.9, 1.2]
+    };
+    let rounds = if common::fast() { 4 } else { 12 };
+    let modes = [(false, false), (true, false), (false, true), (true, true)];
+
+    let mut json: Vec<String> = Vec::new();
+    for &theta in thetas {
+        let table = Table::new(
+            &format!("ablate_log: zipfkv θ={theta} (compaction × chunk filter)"),
+            &[
+                "compact",
+                "filter",
+                "raw_entries",
+                "shipped",
+                "chunks",
+                "filtered",
+                "gpu_val_ms",
+                "tx_per_s",
+            ],
+        );
+        let mut by_mode = Vec::new();
+        for &(compaction, filter) in &modes {
+            let p = run_point(theta, compaction, filter, rounds);
+            table.row(&[
+                compaction as u8 as f64,
+                filter as u8 as f64,
+                p.raw_entries as f64,
+                p.shipped_entries as f64,
+                p.chunks as f64,
+                p.chunks_filtered as f64,
+                p.validation_s * 1e3,
+                p.throughput,
+            ]);
+            json.push(json_point(&p));
+            by_mode.push(p);
+        }
+        let raw = &by_mode[0];
+        let comp = &by_mode[1];
+        let both = &by_mode[3];
+        assert_eq!(
+            raw.raw_entries, raw.shipped_entries,
+            "raw mode ships everything"
+        );
+        if theta >= 0.9 {
+            // The acceptance bar for the hot path: ≥ 2× fewer shipped
+            // entries and strictly lower validation time.
+            assert!(
+                comp.shipped_entries * 2 <= raw.shipped_entries,
+                "θ={theta}: compaction shipped {} of {} raw entries (< 2x win)",
+                comp.shipped_entries,
+                raw.shipped_entries
+            );
+            assert!(
+                both.validation_s < raw.validation_s,
+                "θ={theta}: compaction+filter validation {} >= raw {}",
+                both.validation_s,
+                raw.validation_s
+            );
+            assert!(
+                both.chunks_filtered > 0,
+                "θ={theta}: partitioned zipfkv chunks must filter"
+            );
+        }
+    }
+
+    let body = format!(
+        "{{\n  \"bench\": \"ablate_log\",\n  \"fast\": {},\n  \"rounds\": {},\n  \
+         \"points\": [\n    {}\n  ]\n}}\n",
+        common::fast(),
+        rounds,
+        json.join(",\n    ")
+    );
+    match std::fs::write("BENCH_log.json", &body) {
+        Ok(()) => println!("\nwrote BENCH_log.json ({} points)", json.len()),
+        Err(e) => eprintln!("\ncould not write BENCH_log.json: {e}"),
+    }
+}

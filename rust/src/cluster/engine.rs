@@ -116,6 +116,13 @@ struct Lane<'a, G> {
     cpu_validation_s: f64,
     /// Own-shard conflicting entries this lane's validation found.
     own_conflicts: u64,
+    /// Lane partial of `RoundStats::chunks_filtered`.
+    chunks_filtered: u64,
+    /// Lane partial of `RoundStats::chunks_skipped_post_abort`.
+    chunks_skipped: u64,
+    /// Basic variant: completion time of this lane's tail log shipping
+    /// (the CPU is blocked until the last shard finishes shipping).
+    ship_end: f64,
     /// Early-validation conflicts seen in the current segment.
     early_conf: u32,
     /// Coarse merge ranges computed while scheduling DtH transfers
@@ -258,7 +265,11 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         let n = devices.len();
         let bmp_shift = devices[0].rs_bmp().shift();
         let policy = Policy::new(cfg.policy, cfg.starvation_limit);
-        let router = LogRouter::new(map.clone(), cfg.chunk_entries);
+        let mut router = LogRouter::new(map.clone(), cfg.chunk_entries);
+        router.set_compaction(cfg.log_compaction);
+        if cfg.chunk_filter {
+            router.set_sig_shift(Some(bmp_shift));
+        }
         ClusterEngine {
             cfg,
             cost,
@@ -390,6 +401,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         let granule_words = (crate::bus::chunking::MERGE_GRANULE_BYTES / 4) as usize;
         let chunk_entries = cfg.chunk_entries;
         let chunk_cost = chunk_entries as f64 * cost.gpu_validate_entry_s;
+        let filter = cfg.chunk_filter;
 
         cpu.set_read_only(policy.cpu_read_only());
         let conditional = policy.conditional_apply();
@@ -424,6 +436,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 gpu_phases: PhaseBreakdown::default(),
                 cpu_validation_s: 0.0,
                 own_conflicts: 0,
+                chunks_filtered: 0,
+                chunks_skipped: 0,
+                ship_end: 0.0,
                 early_conf: 0,
                 coarse: Vec::new(),
                 dth_end: 0.0,
@@ -477,6 +492,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         }
         let exec_end_target = t0 + cfg.period_s;
         let mut early_abort = false;
+        let mut early_conf_total = 0u64;
 
         let mut cpu_cursor = cpu_avail.max(t0);
         rs.cpu_phases.blocked_s += cpu_cursor - t0;
@@ -554,12 +570,24 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                     let arrived =
                         lane.arrivals.iter().filter(|&&a| a <= cpu_cursor).count();
                     let mut conf = 0u32;
-                    for c in lane.chunks.iter().take(arrived) {
-                        conf += lane.dev.early_validate_chunk(c);
-                    }
-                    let vcost = arrived as f64
-                        * chunk_entries as f64
-                        * cost.gpu_validate_entry_s;
+                    let vcost = if filter {
+                        // Signature-prefiltered scan (mirrors RoundEngine).
+                        let mut vcost = 0.0;
+                        for c in lane.chunks.iter().take(arrived) {
+                            vcost += cost.gpu_sig_check_s;
+                            if lane.dev.chunk_provably_clean(c) {
+                                continue;
+                            }
+                            conf += lane.dev.early_validate_chunk(c);
+                            vcost += chunk_entries as f64 * cost.gpu_validate_entry_s;
+                        }
+                        vcost
+                    } else {
+                        for c in lane.chunks.iter().take(arrived) {
+                            conf += lane.dev.early_validate_chunk(c);
+                        }
+                        arrived as f64 * chunk_entries as f64 * cost.gpu_validate_entry_s
+                    };
                     lane.cursor += vcost;
                     lane.gpu_phases.validation_s += vcost;
                     lane.per_dev.phases.validation_s += vcost;
@@ -576,12 +604,12 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 }
                 if conf > 0 {
                     early_abort = true;
+                    early_conf_total = u64::from(conf);
                     rs.early_aborted = true;
                     break;
                 }
             }
         }
-        let _ = early_abort;
 
         // Drain the remaining (tail) chunks of every shard (coordinator
         // thread), then ship them and run own-shard validation per lane.
@@ -591,6 +619,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
 
         // --- Validation phase: own shard -----------------------------------
         run_lanes(threads, &mut lanes, |_, lane| {
+            lane.ship_end = cpu_cursor;
             for c in lane.inbox.drain(..) {
                 let dur = cost.bus_h2d.transfer_secs(c.wire_bytes());
                 let (_, end) = lane.h2d.schedule(cpu_cursor, dur);
@@ -599,6 +628,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 if !optimized {
                     // Basic: the CPU is blocked while shipping its logs.
                     lane.cpu_validation_s += dur;
+                    lane.ship_end = end;
                 }
             }
 
@@ -608,21 +638,53 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 let start = arr.max(lane.cursor);
                 lane.gpu_phases.blocked_s += start - lane.cursor;
                 lane.per_dev.phases.blocked_s += start - lane.cursor;
-                dev_conf += if conditional {
-                    // favor-GPU: check without applying (§IV-E).
-                    u64::from(lane.dev.early_validate_chunk(&lane.chunks[i]))
-                } else {
-                    match lane.dev.validate_chunk(&lane.chunks[i]) {
-                        Ok(n) => u64::from(n),
-                        Err(e) => {
-                            lane.err = Some(format!("validate: {e}"));
-                            return;
+                if early_abort {
+                    // Fate decided by early validation: the chunk still
+                    // lands (apply/rollback needs it) but the per-entry
+                    // pass is skipped (mirrors RoundEngine).
+                    lane.chunks_skipped += 1;
+                    lane.cursor = start;
+                    continue;
+                }
+                let mut vcost = 0.0;
+                let clean = filter && lane.dev.chunk_provably_clean(&lane.chunks[i]);
+                if filter {
+                    vcost += cost.gpu_sig_check_s;
+                }
+                if clean {
+                    lane.chunks_filtered += 1;
+                    lane.per_dev.chunks_filtered += 1;
+                    if !conditional {
+                        // Provably conflict-free: plain scatter apply.
+                        match lane.dev.validate_chunk(&lane.chunks[i]) {
+                            Ok(n) => debug_assert_eq!(
+                                n, 0,
+                                "signature filter must be conservative"
+                            ),
+                            Err(e) => {
+                                lane.err = Some(format!("validate: {e}"));
+                                return;
+                            }
                         }
                     }
-                };
-                lane.cursor = start + chunk_cost;
-                lane.gpu_phases.validation_s += chunk_cost;
-                lane.per_dev.phases.validation_s += chunk_cost;
+                } else {
+                    dev_conf += if conditional {
+                        // favor-GPU: check without applying (§IV-E).
+                        u64::from(lane.dev.early_validate_chunk(&lane.chunks[i]))
+                    } else {
+                        match lane.dev.validate_chunk(&lane.chunks[i]) {
+                            Ok(n) => u64::from(n),
+                            Err(e) => {
+                                lane.err = Some(format!("validate: {e}"));
+                                return;
+                            }
+                        }
+                    };
+                    vcost += chunk_cost;
+                }
+                lane.cursor = start + vcost;
+                lane.gpu_phases.validation_s += vcost;
+                lane.per_dev.phases.validation_s += vcost;
             }
             lane.per_dev.chunks += lane.chunks.len() as u64;
             lane.per_dev.conflict_entries += dev_conf;
@@ -643,7 +705,27 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         if let Some(e) = first_lane_err(&mut lanes) {
             return Err(anyhow!("{e}"));
         }
+        // Basic: the CPU cursor follows the tail shipping it was blocked
+        // on — until the LAST shard's channel finishes (mirrors the
+        // RoundEngine fix; with one lane the fold is the same max).  The
+        // per-device channels ship in parallel, so the span the CPU is
+        // actually blocked for is the max, not the per-channel sum —
+        // recorded here for the multi-device validation_s charge below.
+        let mut basic_ship_span = 0.0;
+        if !optimized {
+            let pre_ship = cpu_cursor;
+            for lane in &lanes {
+                cpu_cursor = cpu_cursor.max(lane.ship_end);
+            }
+            basic_ship_span = cpu_cursor - pre_ship;
+        }
         rs.chunks = lanes.iter().map(|l| l.chunks.len() as u64).sum();
+        rs.log_entries_raw = router.raw_appended_total();
+        rs.log_entries_shipped = router.shipped_total();
+        for lane in &lanes {
+            rs.chunks_filtered += lane.chunks_filtered;
+            rs.chunks_skipped_post_abort += lane.chunks_skipped;
+        }
         let own_conflicts: u64 = lanes.iter().map(|l| l.own_conflicts).sum();
 
         // --- Validation phase: cross-shard ---------------------------------
@@ -652,7 +734,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         // existing scheme's escalation, applied pairwise.  Runs on the
         // coordinator thread: it is O(pairs) and needs cross-lane reads.
         let mut cross_conflicts = 0u64;
-        if n_dev > 1 {
+        if n_dev > 1 && !early_abort {
             // CPU writes applied on shard `o` vs every other device's
             // read-set (a cross-shard GPU read of a CPU-written word).
             for o in 0..n_dev {
@@ -717,7 +799,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             cluster.cross_conflict_entries += cross_conflicts;
         }
 
-        let conflicts = own_conflicts + cross_conflicts;
+        let conflicts = own_conflicts
+            + cross_conflicts
+            + if early_abort { early_conf_total } else { 0 };
         rs.conflict_entries = conflicts;
         if own_conflicts == 0 && cross_conflicts > 0 {
             cluster.rounds_aborted_cross_shard += 1;
@@ -1005,7 +1089,16 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         // preserves bit-identity with the single-device engine.
         for lane in &lanes {
             rs.gpu_phases.add(&lane.gpu_phases);
-            rs.cpu_phases.validation_s += lane.cpu_validation_s;
+        }
+        // Basic-variant CPU shipping charge: at n_dev = 1 the single
+        // lane's per-chunk chain reproduces RoundEngine bit for bit; with
+        // more devices the channels overlap, so the CPU is blocked for
+        // the overlapped span (summing per-channel durations would charge
+        // more time than the round contains).
+        if n_dev == 1 {
+            rs.cpu_phases.validation_s += lanes[0].cpu_validation_s;
+        } else if !optimized {
+            rs.cpu_phases.validation_s += basic_ship_span;
         }
         drop(lanes);
 
@@ -1185,6 +1278,72 @@ mod tests {
                 "{label}"
             );
         }
+    }
+
+    /// Basic-variant tail shipping blocks the CPU for the overlapped span
+    /// of the per-device channels (not the per-channel sum): every CPU
+    /// second is accounted exactly once at ANY cluster size.
+    #[test]
+    fn cluster_basic_tail_shipping_accounts_once() {
+        for n_gpus in [1usize, 2, 4] {
+            let mut e = cluster(n_gpus, 0.0);
+            e.cfg.variant = Variant::Basic;
+            e.run_rounds(3).unwrap();
+            assert!(
+                e.stats.cpu_phases.validation_s > 0.0,
+                "n_gpus={n_gpus}: basic CPU ships logs while blocked"
+            );
+            let total = e.stats.cpu_phases.total();
+            let dur = e.stats.duration_s;
+            assert!(
+                (total - dur).abs() < 1e-9 * dur.max(1.0),
+                "n_gpus={n_gpus}: cpu phase sum {total} != duration {dur}"
+            );
+        }
+    }
+
+    /// Sharded compaction + filtering: per-shard dedup shrinks shipping,
+    /// partitioned chunks filter, and the round outcomes are unchanged —
+    /// threaded identically to sequential.
+    #[test]
+    fn cluster_compaction_and_filter_work_sharded() {
+        let mut raw = cluster(2, 0.0);
+        raw.run_rounds(3).unwrap();
+        let build = |threads: usize| {
+            let mut e = cluster(2, 0.0);
+            e.cfg.log_compaction = true;
+            e.cfg.chunk_filter = true;
+            e.router.set_compaction(true);
+            e.router.set_sig_shift(Some(0));
+            e.set_threads(threads);
+            e.run_rounds(3).unwrap();
+            e
+        };
+        let e = build(1);
+        assert_eq!(e.stats.rounds_committed, 3);
+        assert_eq!(e.stats.log_entries_raw, raw.stats.log_entries_raw);
+        assert!(
+            e.stats.log_entries_shipped * 2 <= e.stats.log_entries_raw,
+            "duplicate-heavy synth log must compact >= 2x: {} of {}",
+            e.stats.log_entries_shipped,
+            e.stats.log_entries_raw
+        );
+        assert_eq!(
+            e.stats.chunks_filtered, e.stats.chunks,
+            "partitioned shards: every chunk provably clean"
+        );
+        assert!(
+            e.cluster.per_device.iter().all(|d| d.chunks_filtered == d.chunks),
+            "per-device filter accounting"
+        );
+        assert!(
+            e.stats.gpu_phases.validation_s < raw.stats.gpu_phases.validation_s,
+            "filtered validation must be cheaper"
+        );
+        // Threaded execution stays bit-identical with the new data path.
+        let thr = build(2);
+        assert_eq!(format!("{:?}", e.stats), format!("{:?}", thr.stats));
+        assert_eq!(e.cpu.stmr().snapshot(), thr.cpu.stmr().snapshot());
     }
 
     #[test]

@@ -47,6 +47,37 @@ impl LogRouter {
         &self.map
     }
 
+    /// Enable/disable per-shard last-write-wins compaction
+    /// (`hetm.log_compaction`) on every shard log.  Per-shard compaction
+    /// composes with the scatter: each device's window dedups over
+    /// exactly the entries routed to it, so the shipped address SET per
+    /// shard — and with it every conflict decision — is unchanged.
+    pub fn set_compaction(&mut self, on: bool) {
+        for log in &mut self.logs {
+            log.set_compaction(on);
+        }
+    }
+
+    /// Enable chunk conflict-prefilter signatures at granule shift
+    /// `shift` on every shard log (`None` disables).
+    pub fn set_sig_shift(&mut self, shift: Option<u32>) {
+        for log in &mut self.logs {
+            log.set_sig_shift(shift);
+        }
+    }
+
+    /// Raw (pre-compaction) entries appended since the last reset, across
+    /// all shards.
+    pub fn raw_appended_total(&self) -> u64 {
+        self.logs.iter().map(|l| l.raw_appended()).sum()
+    }
+
+    /// Live entries drained into chunks since the last reset, across all
+    /// shards.
+    pub fn shipped_total(&self) -> u64 {
+        self.logs.iter().map(|l| l.shipped()).sum()
+    }
+
     /// Number of shards routed to.
     pub fn n_shards(&self) -> usize {
         self.logs.len()
@@ -167,6 +198,33 @@ mod tests {
             assert_eq!(w.vals, g.vals);
             assert_eq!(w.ts, g.ts);
         }
+    }
+
+    #[test]
+    fn per_shard_compaction_dedups_within_each_shard_only() {
+        let map = ShardMap::new(64, 2, 2); // 4-word blocks
+        let mut r = LogRouter::new(map.clone(), 8);
+        r.set_compaction(true);
+        r.set_sig_shift(Some(0));
+        // Addr 1 (shard 0) written three times, addr 4 (shard 1) twice.
+        r.append(&[
+            entry(1, 10, 1),
+            entry(4, 40, 2),
+            entry(1, 11, 3),
+            entry(4, 41, 4),
+            entry(1, 12, 5),
+        ]);
+        assert_eq!(r.raw_appended_total(), 5);
+        let mut c0 = Vec::new();
+        let mut c1 = Vec::new();
+        r.drain_all(0, &mut c0);
+        r.drain_all(1, &mut c1);
+        assert_eq!(c0[0].live(), 1, "shard 0 compacts to one entry");
+        assert_eq!(c0[0].vals[0], 12);
+        assert_eq!(c1[0].live(), 1, "shard 1 compacts to one entry");
+        assert_eq!(c1[0].vals[0], 41);
+        assert!(c0[0].sig.is_some(), "signatures attach per shard");
+        assert_eq!(r.shipped_total(), 2);
     }
 
     #[test]

@@ -23,6 +23,9 @@ pub struct DeviceStats {
     pub batches: u64,
     /// CPU log chunks routed to and validated on this device.
     pub chunks: u64,
+    /// Chunks this device skipped through the signature prefilter
+    /// (`hetm.chunk_filter`).
+    pub chunks_filtered: u64,
     /// Conflicting entries its own-shard validation found.
     pub conflict_entries: u64,
     /// Phase breakdown for this device.

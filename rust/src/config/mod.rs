@@ -202,7 +202,17 @@ pub struct SystemConfig {
     /// Enable early validation (§IV-D).
     pub early_validation: bool,
     /// Early-validation trigger interval, as a fraction of the period.
+    /// Must be finite and in `(0, 1]` (rejected at parse time — `0`,
+    /// negatives or NaN would silently misbehave in `1.0 / frac`).
     pub early_interval_frac: f64,
+    /// Deduplicate the write log last-write-wins before chunking
+    /// (`hetm.log_compaction`): shipped bytes and validation work scale
+    /// with the write-set footprint instead of the commit count.
+    pub log_compaction: bool,
+    /// Attach conflict-prefilter signatures to log chunks and skip the
+    /// per-entry validation pass on provable non-intersection
+    /// (`hetm.chunk_filter`).
+    pub chunk_filter: bool,
     /// Consecutive GPU aborts before the starvation guard engages.
     pub gpu_starvation_limit: u32,
     /// Host->device bus model.
@@ -215,6 +225,9 @@ pub struct SystemConfig {
     pub gpu_txn_s: f64,
     /// GPU cost model: per-log-entry validation time (s).
     pub gpu_validate_entry_s: f64,
+    /// GPU cost model: per-chunk signature-check time (s), charged while
+    /// `hetm.chunk_filter` is on (`gpu.sig_check_ns`).
+    pub gpu_sig_check_s: f64,
     /// CPU cost model: per-transaction execution time (s) per worker.
     /// When `calibrate_cpu` is set the launcher measures this instead.
     pub cpu_txn_s: f64,
@@ -256,6 +269,8 @@ impl Default for SystemConfig {
             period_s: 0.080,
             early_validation: true,
             early_interval_frac: 0.25,
+            log_compaction: false,
+            chunk_filter: false,
             gpu_starvation_limit: 3,
             bus_h2d: BusModel::default(),
             bus_d2h: BusModel::default(),
@@ -263,6 +278,7 @@ impl Default for SystemConfig {
             gpu_txn_s: 90e-9,
             cpu_txn_s: 90e-9,
             gpu_validate_entry_s: 1e-9,
+            gpu_sig_check_s: 250e-9,
             artifacts_dir: String::new(),
             seed: 42,
             n_gpus: 1,
@@ -283,6 +299,17 @@ impl SystemConfig {
         if cluster_threads == 0 {
             bail!("cluster.threads must be at least 1 (1 = sequential)");
         }
+        let early_interval_frac: f64 =
+            raw.get_or("hetm.early_interval_frac", d.early_interval_frac)?;
+        if !early_interval_frac.is_finite()
+            || early_interval_frac <= 0.0
+            || early_interval_frac > 1.0
+        {
+            bail!(
+                "hetm.early_interval_frac must be a finite fraction in (0, 1], \
+                 got {early_interval_frac}"
+            );
+        }
         Ok(SystemConfig {
             n_words: raw.get_or("stmr.n_words", d.n_words)?,
             bmp_shift: raw.get_or("stmr.bmp_shift", d.bmp_shift)?,
@@ -298,7 +325,9 @@ impl SystemConfig {
             },
             period_s: raw.get_or("hetm.period_ms", d.period_s * 1e3)? / 1e3,
             early_validation: raw.get_bool_or("hetm.early_validation", d.early_validation)?,
-            early_interval_frac: raw.get_or("hetm.early_interval_frac", d.early_interval_frac)?,
+            early_interval_frac,
+            log_compaction: raw.get_bool_or("hetm.log_compaction", d.log_compaction)?,
+            chunk_filter: raw.get_bool_or("hetm.chunk_filter", d.chunk_filter)?,
             gpu_starvation_limit: raw.get_or("hetm.gpu_starvation_limit", d.gpu_starvation_limit)?,
             bus_h2d: BusModel {
                 latency_s: raw.get_or("bus.latency_us", d.bus_h2d.latency_s * 1e6)? / 1e6,
@@ -313,6 +342,7 @@ impl SystemConfig {
             gpu_txn_s: raw.get_or("gpu.txn_ns", d.gpu_txn_s * 1e9)? / 1e9,
             gpu_validate_entry_s: raw.get_or("gpu.validate_entry_ns", d.gpu_validate_entry_s * 1e9)?
                 / 1e9,
+            gpu_sig_check_s: raw.get_or("gpu.sig_check_ns", d.gpu_sig_check_s * 1e9)? / 1e9,
             cpu_txn_s: raw.get_or("cpu.txn_ns", d.cpu_txn_s * 1e9)? / 1e9,
             artifacts_dir: raw.get("runtime.artifacts").unwrap_or("").to_string(),
             seed: raw.get_or("seed", d.seed)?,
@@ -405,6 +435,41 @@ period_ms = 2.5
         let mut raw = Raw::new();
         raw.set("cluster.threads=0").unwrap();
         assert!(SystemConfig::from_raw(&raw).is_err(), "0 threads is invalid");
+    }
+
+    #[test]
+    fn early_interval_frac_is_validated_at_parse() {
+        for bad in ["0", "-0.25", "NaN", "inf", "1.5"] {
+            let mut raw = Raw::new();
+            raw.set(&format!("hetm.early_interval_frac={bad}")).unwrap();
+            assert!(
+                SystemConfig::from_raw(&raw).is_err(),
+                "early_interval_frac={bad} must be rejected at parse time"
+            );
+        }
+        for good in ["0.25", "1.0", "0.01"] {
+            let mut raw = Raw::new();
+            raw.set(&format!("hetm.early_interval_frac={good}")).unwrap();
+            assert!(SystemConfig::from_raw(&raw).is_ok(), "{good} is valid");
+        }
+    }
+
+    #[test]
+    fn log_compaction_and_chunk_filter_keys_parse() {
+        let cfg = SystemConfig::from_raw(&Raw::new()).unwrap();
+        assert!(!cfg.log_compaction, "compaction off by default");
+        assert!(!cfg.chunk_filter, "filter off by default");
+        let mut raw = Raw::new();
+        raw.set("hetm.log_compaction=true").unwrap();
+        raw.set("hetm.chunk_filter=true").unwrap();
+        raw.set("gpu.sig_check_ns=500").unwrap();
+        let cfg = SystemConfig::from_raw(&raw).unwrap();
+        assert!(cfg.log_compaction);
+        assert!(cfg.chunk_filter);
+        assert!((cfg.gpu_sig_check_s - 500e-9).abs() < 1e-18);
+        let mut raw = Raw::new();
+        raw.set("hetm.chunk_filter=maybe").unwrap();
+        assert!(SystemConfig::from_raw(&raw).is_err(), "bools are validated");
     }
 
     #[test]

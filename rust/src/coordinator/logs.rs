@@ -4,6 +4,38 @@
 //! periodically drains them into fixed-size [`LogChunk`]s — the 48 KB
 //! transfer units the validation phase streams to the GPU.  The last chunk
 //! of a round is padded with `addr = -1` sentinels.
+//!
+//! # Compaction (`hetm.log_compaction`)
+//!
+//! With compaction enabled, every drain first deduplicates the
+//! not-yet-shipped window last-write-wins per address, so wire bytes and
+//! chunk count scale with the round's *write-set footprint* instead of its
+//! commit count — the decisive lever on hot-key workloads like `zipfkv`,
+//! where thousands of commits rewrite a handful of addresses.  What makes
+//! this sound (DESIGN.md §9):
+//!
+//! * **Apply-order winner.** The survivor for an address is the entry the
+//!   GPU's freshness-guarded replay (`ts >= ts_arr`, later position wins
+//!   ties) would leave: the LAST entry among those carrying the maximal
+//!   `ts`.  Applying the compacted window therefore produces the exact
+//!   final `(stmr, ts_arr)` the raw window produces, and the same holds
+//!   for the favor-CPU `rollback_with_logs` replay, which uses the same
+//!   `>=` rule.
+//! * **Conflict decisions survive.** Validation flags an entry iff its
+//!   address granule is in the GPU read-set bitmap; deduplication keeps
+//!   the address SET of the window intact, so "any conflict" is invariant
+//!   (only the conflicting-entry *count* can shrink).
+//! * **Never across the carried boundary.** Entries carried from the
+//!   previous round's validation window survive a favor-GPU rollback
+//!   (their transactions committed before the aborted round began) while
+//!   this round's entries are truncated; merging across that boundary
+//!   would either resurrect rolled-back values or lose carried ones, so
+//!   compaction only touches `entries[max(drained, carried)..]`.
+//! * **Never across a shipped boundary.** Already-drained entries are on
+//!   the wire; an address they carried that is rewritten later simply
+//!   ships again, exactly as in the raw log.
+
+use std::collections::HashMap;
 
 use crate::bus::chunking::LOG_CHUNK_ENTRIES;
 use crate::gpu::LogChunk;
@@ -20,6 +52,18 @@ pub struct RoundLog {
     /// committed BEFORE the rolled-back round started).
     carried: usize,
     chunk_entries: usize,
+    /// Deduplicate the pending window last-write-wins before draining.
+    compact: bool,
+    /// Granule shift for chunk conflict-prefilter signatures (`None` =
+    /// no signatures).
+    sig_shift: Option<u32>,
+    /// Entries appended since the last reset (the raw, pre-compaction
+    /// shipping load; carry seeds count — they re-ship).
+    raw_appended: u64,
+    /// Live entries actually drained into chunks since the last reset.
+    shipped: u64,
+    /// Dedup scratch: address -> kept index (reused across drains).
+    dedup: HashMap<u32, usize>,
 }
 
 impl RoundLog {
@@ -36,6 +80,11 @@ impl RoundLog {
             drained: 0,
             carried: 0,
             chunk_entries,
+            compact: false,
+            sig_shift: None,
+            raw_appended: 0,
+            shipped: 0,
+            dedup: HashMap::new(),
         }
     }
 
@@ -44,15 +93,40 @@ impl RoundLog {
         self.chunk_entries
     }
 
+    /// Enable/disable last-write-wins compaction of the pending window
+    /// (`hetm.log_compaction`).
+    pub fn set_compaction(&mut self, on: bool) {
+        self.compact = on;
+    }
+
+    /// Whether compaction is enabled.
+    pub fn compaction(&self) -> bool {
+        self.compact
+    }
+
+    /// Enable chunk signatures at granule shift `shift` (`None` disables;
+    /// the engines pass the device bitmap's shift so the signature test
+    /// is exact at the granularity validation checks at).
+    pub fn set_sig_shift(&mut self, shift: Option<u32>) {
+        self.sig_shift = shift;
+    }
+
+    /// Configured signature shift.
+    pub fn sig_shift(&self) -> Option<u32> {
+        self.sig_shift
+    }
+
     /// Append a batch of committed write entries.
     pub fn append(&mut self, entries: &[WriteEntry]) {
         self.entries.extend_from_slice(entries);
+        self.raw_appended += entries.len() as u64;
     }
 
     /// Append a single committed write entry (the cluster log router
     /// scatters entry-by-entry).
     pub fn push(&mut self, entry: WriteEntry) {
         self.entries.push(entry);
+        self.raw_appended += 1;
     }
 
     /// Total entries logged this round.
@@ -70,9 +144,24 @@ impl RoundLog {
         self.entries.len() - self.drained
     }
 
+    /// Entries appended since the last reset — the raw (pre-compaction)
+    /// shipping load, carry seeds included.
+    pub fn raw_appended(&self) -> u64 {
+        self.raw_appended
+    }
+
+    /// Live entries drained into chunks since the last reset (equals
+    /// [`Self::raw_appended`] once fully drained with compaction off).
+    pub fn shipped(&self) -> u64 {
+        self.shipped
+    }
+
     /// Drain as many FULL chunks as available (streaming during the
     /// execution phase ships only complete 48 KB units).
     pub fn drain_full_chunks(&mut self, out: &mut Vec<LogChunk>) {
+        if self.compact {
+            self.compact_pending();
+        }
         while self.entries.len() - self.drained >= self.chunk_entries {
             out.push(self.make_chunk(self.chunk_entries));
         }
@@ -95,6 +184,8 @@ impl RoundLog {
         self.drained = 0;
         self.entries.extend_from_slice(carry);
         self.carried = carry.len();
+        self.raw_appended = carry.len() as u64;
+        self.shipped = 0;
     }
 
     /// Favor-GPU round abort (§IV-E): this round's CPU commits are rolled
@@ -104,11 +195,45 @@ impl RoundLog {
     pub fn truncate_to_carried(&mut self) {
         self.entries.truncate(self.carried);
         self.drained = 0;
+        self.raw_appended = self.carried as u64;
+        self.shipped = 0;
     }
 
     /// View of all entries logged this round (rollback replay needs them).
     pub fn entries(&self) -> &[WriteEntry] {
         &self.entries
+    }
+
+    /// Deduplicate the pending, non-carried window in place, keeping per
+    /// address the entry the freshness-guarded apply would leave (the
+    /// last one whose `ts` ties the maximum) at its first-occurrence
+    /// position.  Distinct addresses commute under apply, so position
+    /// within the window is free.
+    fn compact_pending(&mut self) {
+        let start = self.drained.max(self.carried);
+        if self.entries.len().saturating_sub(start) < 2 {
+            return;
+        }
+        self.dedup.clear();
+        let mut w = start;
+        for r in start..self.entries.len() {
+            let e = self.entries[r];
+            match self.dedup.get(&e.addr) {
+                Some(&i) => {
+                    // Same `>=` rule as the GPU apply: a later entry with
+                    // an equal-or-fresher ts replaces the kept one.
+                    if e.ts >= self.entries[i].ts {
+                        self.entries[i] = e;
+                    }
+                }
+                None => {
+                    self.dedup.insert(e.addr, w);
+                    self.entries[w] = e;
+                    w += 1;
+                }
+            }
+        }
+        self.entries.truncate(w);
     }
 
     fn make_chunk(&mut self, n: usize) -> LogChunk {
@@ -119,7 +244,11 @@ impl RoundLog {
             chunk.vals[i] = e.val;
             chunk.ts[i] = e.ts;
         }
+        if let Some(shift) = self.sig_shift {
+            chunk.build_sig(shift);
+        }
         self.drained += n;
+        self.shipped += n as u64;
         chunk
     }
 }
@@ -145,6 +274,8 @@ mod tests {
         assert_eq!(chunks[2].live(), 2);
         assert_eq!(chunks[2].addrs, vec![8, 9, -1, -1]);
         assert_eq!(log.pending(), 0);
+        assert_eq!(log.raw_appended(), 10);
+        assert_eq!(log.shipped(), 10, "raw mode ships everything");
     }
 
     #[test]
@@ -178,5 +309,95 @@ mod tests {
         assert_eq!(log.chunk_entries(), 4096);
         // 4096 entries * 12 B = 48 KB.
         assert_eq!(LogChunk::empty(log.chunk_entries()).wire_bytes(), 48 * 1024);
+    }
+
+    #[test]
+    fn compaction_keeps_apply_order_winner() {
+        let mut log = RoundLog::with_chunk_entries(8);
+        log.set_compaction(true);
+        // ts sequence 5, 9, 7, 9 on addr 3: the raw `>=` replay would end
+        // on the SECOND ts-9 entry (val 40).
+        log.append(&[
+            entry(3, 10, 5),
+            entry(3, 20, 9),
+            entry(1, 11, 6),
+            entry(3, 30, 7),
+            entry(3, 40, 9),
+        ]);
+        let mut chunks = Vec::new();
+        log.drain_all(&mut chunks);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].live(), 2);
+        assert_eq!(chunks[0].addrs[..2], [3, 1], "first-occurrence order");
+        assert_eq!(chunks[0].vals[..2], [40, 11]);
+        assert_eq!(chunks[0].ts[..2], [9, 6]);
+        assert_eq!(log.raw_appended(), 5);
+        assert_eq!(log.shipped(), 2);
+    }
+
+    #[test]
+    fn compaction_never_merges_across_drained_boundary() {
+        let mut log = RoundLog::with_chunk_entries(2);
+        log.set_compaction(true);
+        log.append(&[entry(1, 10, 1), entry(2, 20, 2)]);
+        let mut chunks = Vec::new();
+        log.drain_full_chunks(&mut chunks);
+        assert_eq!(chunks.len(), 1);
+        // Rewrite addr 1 after it shipped: it must ship AGAIN (the wire
+        // copy cannot be recalled), not merge backwards.
+        log.append(&[entry(1, 11, 3), entry(1, 12, 4)]);
+        log.drain_all(&mut chunks);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[1].live(), 1, "post-ship rewrites still compact");
+        assert_eq!(chunks[1].vals[0], 12);
+    }
+
+    #[test]
+    fn compaction_never_merges_into_carried_prefix() {
+        let mut log = RoundLog::with_chunk_entries(8);
+        log.set_compaction(true);
+        // Carried entry on addr 5, then this-round rewrites of addr 5.
+        log.reset_with_carry(&[entry(5, 50, 3)]);
+        log.append(&[entry(5, 51, 7), entry(5, 52, 8), entry(6, 60, 9)]);
+        let mut chunks = Vec::new();
+        log.drain_all(&mut chunks);
+        // Carried entry ships verbatim; the round's rewrites compact.
+        assert_eq!(chunks[0].live(), 3);
+        assert_eq!(chunks[0].addrs[..3], [5, 5, 6]);
+        assert_eq!(chunks[0].vals[..3], [50, 52, 60]);
+        // A favor-GPU abort must recover exactly the carried prefix.
+        log.truncate_to_carried();
+        assert_eq!(log.entries(), &[entry(5, 50, 3)]);
+        assert_eq!(log.raw_appended(), 1);
+        assert_eq!(log.shipped(), 0);
+    }
+
+    #[test]
+    fn signatures_attach_when_enabled() {
+        let mut log = RoundLog::with_chunk_entries(4);
+        log.set_sig_shift(Some(1));
+        log.append(&[entry(8, 1, 1), entry(9, 2, 2), entry(3, 3, 3)]);
+        let mut chunks = Vec::new();
+        log.drain_all(&mut chunks);
+        let sig = chunks[0].sig.as_ref().expect("signature built");
+        assert_eq!(sig.shift(), 1);
+        assert_eq!(sig.addr_range(), (3, 9));
+        // Disabled by default.
+        let mut plain = RoundLog::with_chunk_entries(4);
+        plain.append(&[entry(1, 1, 1)]);
+        let mut chunks = Vec::new();
+        plain.drain_all(&mut chunks);
+        assert!(chunks[0].sig.is_none());
+    }
+
+    #[test]
+    fn counters_reset_with_carry() {
+        let mut log = RoundLog::with_chunk_entries(4);
+        log.append(&[entry(1, 1, 1), entry(2, 2, 2)]);
+        let mut chunks = Vec::new();
+        log.drain_all(&mut chunks);
+        log.reset_with_carry(&[entry(9, 9, 9)]);
+        assert_eq!(log.raw_appended(), 1, "carry re-ships, so it counts");
+        assert_eq!(log.shipped(), 0);
     }
 }

@@ -51,7 +51,22 @@ pub struct RoundStats {
     pub gpu_batches: u64,
     /// Log chunks shipped and validated.
     pub chunks: u64,
-    /// Conflicting log entries found by validation.
+    /// CPU write-log entries committed into the round log (raw, before
+    /// compaction; carried re-ships count).
+    pub log_entries_raw: u64,
+    /// Log entries actually shipped in chunks (equals `log_entries_raw`
+    /// with `hetm.log_compaction` off).
+    pub log_entries_shipped: u64,
+    /// Chunks whose per-entry validation pass was skipped because their
+    /// signature proved non-intersection (`hetm.chunk_filter`).
+    pub chunks_filtered: u64,
+    /// Chunks whose per-entry validation pass was skipped because an
+    /// early validation had already decided the round's fate (the chunks
+    /// still ship — apply/rollback needs them).
+    pub chunks_skipped_post_abort: u64,
+    /// Conflicting log entries found by validation.  On early-aborted
+    /// rounds this is the early-validation count (the full recount is
+    /// skipped, see `chunks_skipped_post_abort`).
     pub conflict_entries: u64,
     /// Whether inter-device validation succeeded.
     pub committed: bool,
@@ -88,6 +103,14 @@ pub struct RunStats {
     pub discarded_commits: u64,
     /// Total log chunks validated.
     pub chunks: u64,
+    /// Total raw (pre-compaction) CPU log entries.
+    pub log_entries_raw: u64,
+    /// Total log entries shipped in chunks (post-compaction).
+    pub log_entries_shipped: u64,
+    /// Total chunks skipped by the signature prefilter.
+    pub chunks_filtered: u64,
+    /// Total chunks whose validation was skipped after an early abort.
+    pub chunks_skipped_post_abort: u64,
     /// Aggregate CPU phase breakdown.
     pub cpu_phases: PhaseBreakdown,
     /// Aggregate GPU phase breakdown.
@@ -115,6 +138,10 @@ impl RunStats {
         self.gpu_attempts += r.gpu_attempts;
         self.discarded_commits += r.discarded_commits;
         self.chunks += r.chunks;
+        self.log_entries_raw += r.log_entries_raw;
+        self.log_entries_shipped += r.log_entries_shipped;
+        self.chunks_filtered += r.chunks_filtered;
+        self.chunks_skipped_post_abort += r.chunks_skipped_post_abort;
         self.cpu_phases.add(&r.cpu_phases);
         self.gpu_phases.add(&r.gpu_phases);
     }

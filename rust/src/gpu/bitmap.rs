@@ -57,6 +57,26 @@ impl Bitmap {
         self.bits[word >> self.shift] != 0
     }
 
+    /// Test a granule by index; indices past the end (possible when a
+    /// coarser summary rounds a range out) read as unmarked.
+    #[inline]
+    pub fn test_granule(&self, g: usize) -> bool {
+        g < self.bits.len() && self.bits[g] != 0
+    }
+
+    /// Whether any granule overlapping the word range `[start, end)` is
+    /// marked; the range is clamped to the STMR (chunk-signature probes
+    /// may round past the end).
+    pub fn any_in_word_range(&self, start: usize, end: usize) -> bool {
+        let end = end.min(self.n_words);
+        if start >= end {
+            return false;
+        }
+        let g0 = start >> self.shift;
+        let g1 = (end - 1) >> self.shift;
+        self.bits[g0..=g1].iter().any(|&b| b != 0)
+    }
+
     /// Mark a granule directly.
     #[inline]
     pub fn mark_granule(&mut self, g: usize) {
@@ -238,6 +258,20 @@ mod tests {
         assert_eq!(a.intersect_count(&b), 2);
         assert_eq!(b.intersect_count(&a), 2);
         assert_eq!(Bitmap::new(64, 0).intersect_count(&a), 0);
+    }
+
+    #[test]
+    fn any_in_word_range_clamps_and_tests() {
+        let mut b = Bitmap::new(100, 2); // 4-word granules, 25 entries
+        b.mark_word(17); // granule 4 -> words [16, 20)
+        assert!(b.any_in_word_range(16, 20));
+        assert!(b.any_in_word_range(19, 24), "touches granule 4");
+        assert!(!b.any_in_word_range(20, 100));
+        assert!(b.any_in_word_range(0, 1_000), "end clamps to n_words");
+        assert!(!b.any_in_word_range(50, 50), "empty range");
+        assert!(b.test_granule(4));
+        assert!(!b.test_granule(5));
+        assert!(!b.test_granule(10_000), "past-the-end reads unmarked");
     }
 
     #[test]

@@ -215,6 +215,18 @@ impl GpuDevice {
         }
     }
 
+    /// Conflict prefilter (`hetm.chunk_filter`): `true` when the chunk's
+    /// signature PROVES it cannot intersect the current read-set bitmap,
+    /// so the per-entry validation pass can be skipped and the chunk
+    /// applied as a plain scatter.  Conservative: a chunk without a
+    /// signature, or whose signature intersects, is never filtered.
+    pub fn chunk_provably_clean(&self, chunk: &LogChunk) -> bool {
+        match &chunk.sig {
+            Some(sig) => !sig.may_intersect(&self.rs_bmp),
+            None => false,
+        }
+    }
+
     /// Validate a chunk WITHOUT applying it (early validation, §IV-D):
     /// pure bitmap intersection against the current read-set bitmap.
     pub fn early_validate_chunk(&self, chunk: &LogChunk) -> u32 {
@@ -381,6 +393,51 @@ mod tests {
         chunk.ts = vec![1, 1];
         assert_eq!(d.early_validate_chunk(&chunk), 1);
         assert_eq!(d.stmr()[5], 0, "early validation must not apply");
+    }
+
+    #[test]
+    fn chunk_filter_is_conservative_and_exact_at_matching_shift() {
+        let mut d = device(64);
+        d.begin_round();
+        let mut rb = TxnBatch::empty(1, 1, 1);
+        rb.read_idx = vec![40];
+        rb.write_idx = vec![-1];
+        d.run_txn_batch(&rb).unwrap();
+        // Chunk touching only the low half: provably clean.
+        let mut low = LogChunk::empty(4);
+        low.addrs = vec![3, 7, 3, -1];
+        low.build_sig(0);
+        assert!(d.chunk_provably_clean(&low));
+        assert_eq!(d.early_validate_chunk(&low), 0, "filter agrees with scan");
+        // Chunk touching the read word: must not be filtered.
+        let mut hot = LogChunk::empty(4);
+        hot.addrs = vec![3, 40, -1, -1];
+        hot.build_sig(0);
+        assert!(!d.chunk_provably_clean(&hot));
+        // No signature -> never filtered, however clean.
+        let mut bare = LogChunk::empty(2);
+        bare.addrs = vec![3, -1];
+        assert!(!d.chunk_provably_clean(&bare));
+    }
+
+    #[test]
+    fn chunk_filter_coarse_sig_stays_conservative() {
+        // Device bitmap at word granularity, signature sampled coarser:
+        // a near-miss inside the same signature granule must NOT filter.
+        let mut d = device(64);
+        d.begin_round();
+        let mut rb = TxnBatch::empty(1, 1, 1);
+        rb.read_idx = vec![9];
+        rb.write_idx = vec![-1];
+        d.run_txn_batch(&rb).unwrap();
+        let mut c = LogChunk::empty(2);
+        c.addrs = vec![8, -1]; // same 4-word granule as the read of 9
+        c.build_sig(2);
+        assert!(!d.chunk_provably_clean(&c), "coarse sig must stay conservative");
+        let mut far = LogChunk::empty(2);
+        far.addrs = vec![32, -1];
+        far.build_sig(2);
+        assert!(d.chunk_provably_clean(&far));
     }
 
     #[test]

@@ -76,6 +76,113 @@ impl TxnBatch {
     }
 }
 
+/// Cheap conservative summary of a [`LogChunk`]'s address footprint:
+/// the address min/max plus a packed granule bitmap sampled at the
+/// device bitmap's granularity shift.  The validation phase tests it
+/// against the GPU read-set bitmap and skips the per-entry pass when the
+/// signature PROVES the chunk cannot intersect — the signature-based
+/// conflict prefiltering of limited-read/write-set HTMs, applied to
+/// SHeTM's log shipping.  False positives (signature intersects, entries
+/// do not) only cost the ordinary per-entry pass; false negatives are
+/// impossible because every live address is represented at a granularity
+/// at least as coarse as the read-set bitmap tests at.
+#[derive(Debug, Clone)]
+pub struct ChunkSig {
+    /// Granule shift the signature was sampled at: the requested shift,
+    /// coarsened as needed so the packed bitmap stays within
+    /// [`ChunkSig::MAX_GRANULES`] (wide-range chunks — e.g. a shard's
+    /// block-cyclic stripe — would otherwise blow the summary up to the
+    /// size of the full bitmap).
+    shift: u32,
+    /// First granule index the packed bitmap covers.
+    g0: usize,
+    /// Packed bits over granules `[g0, g0 + 64 * bits.len())`.
+    bits: Vec<u64>,
+    /// Smallest live address in the chunk.
+    min_addr: u32,
+    /// Largest live address in the chunk.
+    max_addr: u32,
+}
+
+impl ChunkSig {
+    /// Upper bound on signature granules (4096 bits = 512 B packed): the
+    /// summary stays ~1% of a 48 KB chunk, so its wire footprint is
+    /// legitimately ignored by the cost model, like the chunk header.
+    pub const MAX_GRANULES: usize = 4096;
+
+    /// Summarize a set of live addresses at granule shift `shift` (the
+    /// shift is coarsened until the spanned range fits
+    /// [`Self::MAX_GRANULES`], which stays conservative); `None` for an
+    /// empty chunk (nothing to validate, nothing to prove).
+    pub fn from_addrs(addrs: impl Iterator<Item = u32> + Clone, shift: u32) -> Option<Self> {
+        let mut min_addr = u32::MAX;
+        let mut max_addr = 0u32;
+        let mut any = false;
+        for a in addrs.clone() {
+            any = true;
+            min_addr = min_addr.min(a);
+            max_addr = max_addr.max(a);
+        }
+        if !any {
+            return None;
+        }
+        let mut shift = shift;
+        while ((max_addr >> shift) - (min_addr >> shift)) as usize >= Self::MAX_GRANULES {
+            shift += 1;
+        }
+        let g0 = (min_addr >> shift) as usize;
+        let g1 = (max_addr >> shift) as usize;
+        let mut bits = vec![0u64; (g1 - g0) / 64 + 1];
+        for a in addrs {
+            let g = (a >> shift) as usize - g0;
+            bits[g / 64] |= 1u64 << (g % 64);
+        }
+        Some(ChunkSig {
+            shift,
+            g0,
+            bits,
+            min_addr,
+            max_addr,
+        })
+    }
+
+    /// Address range `[min, max]` covered by the signature.
+    pub fn addr_range(&self) -> (u32, u32) {
+        (self.min_addr, self.max_addr)
+    }
+
+    /// Granule shift the signature was sampled at.
+    pub fn shift(&self) -> u32 {
+        self.shift
+    }
+
+    /// Conservative intersection test against an access bitmap: `false`
+    /// PROVES that no live address of the summarized chunk falls in a
+    /// marked granule of `bmp`.  Exact (and O(set bits)) when
+    /// `self.shift == bmp.shift()` — the way the engines build it;
+    /// otherwise each signature granule probes its whole word range,
+    /// which stays conservative.
+    pub fn may_intersect(&self, bmp: &Bitmap) -> bool {
+        for (wi, &w) in self.bits.iter().enumerate() {
+            let mut w = w;
+            while w != 0 {
+                let bit = w.trailing_zeros() as usize;
+                w &= w - 1;
+                let g = self.g0 + wi * 64 + bit;
+                let hit = if self.shift == bmp.shift() {
+                    bmp.test_granule(g)
+                } else {
+                    bmp.any_in_word_range(g << self.shift, (g + 1) << self.shift)
+                };
+                if hit {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
 /// One chunk of the CPU write-set log, as shipped to the device for
 /// validation (paper §IV-C.2). Fixed length; pad with `addr = -1`.
 #[derive(Debug, Clone)]
@@ -86,6 +193,11 @@ pub struct LogChunk {
     pub vals: Vec<i32>,
     /// Commit timestamps (global CPU clock).
     pub ts: Vec<i32>,
+    /// Optional conflict-prefilter signature (`hetm.chunk_filter`); rides
+    /// along on the wire.  Its packed size is bounded at
+    /// [`ChunkSig::MAX_GRANULES`] bits (512 B, ~1% of the 48 KB chunk),
+    /// so the cost model ignores it, like the chunk header.
+    pub sig: Option<ChunkSig>,
 }
 
 impl LogChunk {
@@ -95,7 +207,17 @@ impl LogChunk {
             addrs: vec![-1; c],
             vals: vec![0; c],
             ts: vec![0; c],
+            sig: None,
         }
+    }
+
+    /// (Re)build the conflict-prefilter signature from the live entries
+    /// at granule shift `shift`.
+    pub fn build_sig(&mut self, shift: u32) {
+        self.sig = ChunkSig::from_addrs(
+            self.addrs.iter().filter(|&&a| a >= 0).map(|&a| a as u32),
+            shift,
+        );
     }
 
     /// Number of live (non-padding) entries.
@@ -132,5 +254,48 @@ impl McBatch {
             val: vec![0; q],
             clk0: 0,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_sig_coarsens_wide_ranges_within_bound() {
+        // A chunk spanning the whole region (block-cyclic shard stripes
+        // produce these) must coarsen instead of allocating a packed
+        // bitmap the size of the device bitmap.
+        let n = 1usize << 18;
+        let sig = ChunkSig::from_addrs([0u32, (n - 1) as u32].into_iter(), 0).unwrap();
+        assert!(sig.shift() > 0, "wide range must coarsen");
+        assert!(
+            sig.bits.len() * 64 <= ChunkSig::MAX_GRANULES,
+            "packed size bounded: {} granules",
+            sig.bits.len() * 64
+        );
+        assert_eq!(sig.addr_range(), (0, (n - 1) as u32));
+        // Coarse signatures stay conservative: a read in the same coarse
+        // granule as a live address must block filtering...
+        let mut near = Bitmap::new(n, 0);
+        near.mark_word(13); // same coarse granule as address 0
+        assert!(sig.may_intersect(&near));
+        // ...while granules the chunk provably never touches test clean.
+        let mut far = Bitmap::new(n, 0);
+        far.mark_word(n / 2);
+        assert!(!sig.may_intersect(&far));
+    }
+
+    #[test]
+    fn chunk_sig_empty_and_exact_shift() {
+        assert!(ChunkSig::from_addrs(std::iter::empty(), 0).is_none());
+        let sig = ChunkSig::from_addrs([4u32, 5, 4].into_iter(), 1).unwrap();
+        assert_eq!(sig.shift(), 1, "narrow ranges keep the requested shift");
+        let mut bmp = Bitmap::new(64, 1);
+        bmp.mark_word(5);
+        assert!(sig.may_intersect(&bmp));
+        bmp.clear();
+        bmp.mark_word(40);
+        assert!(!sig.may_intersect(&bmp));
     }
 }

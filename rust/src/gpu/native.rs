@@ -431,6 +431,7 @@ mod tests {
             addrs: vec![3, 5, 5, -1],
             vals: vec![30, 50, 51, 0],
             ts: vec![10, 7, 5, 0],
+            sig: None,
         };
         let conf = validate_step(&mut stmr, &mut ts_arr, &rs, &chunk);
         assert_eq!(conf, 1, "only addr 3 hits RS");
@@ -449,11 +450,13 @@ mod tests {
             addrs: vec![2],
             vals: vec![20],
             ts: vec![9],
+            sig: None,
         };
         let c2 = LogChunk {
             addrs: vec![2],
             vals: vec![21],
             ts: vec![4],
+            sig: None,
         };
         validate_step(&mut stmr, &mut ts_arr, &rs, &c1);
         validate_step(&mut stmr, &mut ts_arr, &rs, &c2);

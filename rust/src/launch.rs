@@ -71,6 +71,8 @@ pub fn engine_config(cfg: &SystemConfig, variant: Variant) -> EngineConfig {
         early_validation: cfg.early_validation,
         early_points: ((1.0 / cfg.early_interval_frac).round() as usize).max(1) - 1,
         chunk_entries: crate::bus::chunking::LOG_CHUNK_ENTRIES,
+        log_compaction: cfg.log_compaction,
+        chunk_filter: cfg.chunk_filter,
         policy: cfg.policy,
         starvation_limit: cfg.gpu_starvation_limit,
     }
@@ -84,6 +86,7 @@ pub fn cost_model(cfg: &SystemConfig) -> CostModel {
         gpu_kernel_latency_s: cfg.gpu_kernel_latency_s,
         gpu_txn_s: cfg.gpu_txn_s,
         gpu_validate_entry_s: cfg.gpu_validate_entry_s,
+        gpu_sig_check_s: cfg.gpu_sig_check_s,
         ..CostModel::default()
     }
 }
@@ -714,6 +717,22 @@ mod tests {
         for d in 0..8 {
             assert!(m.owned_words(d) > 0);
         }
+    }
+
+    #[test]
+    fn engine_config_maps_compaction_and_filter() {
+        let mut c = cfg();
+        c.log_compaction = true;
+        c.chunk_filter = true;
+        c.gpu_sig_check_s = 123e-9;
+        let ec = engine_config(&c, Variant::Optimized);
+        assert!(ec.log_compaction);
+        assert!(ec.chunk_filter);
+        assert!((cost_model(&c).gpu_sig_check_s - 123e-9).abs() < 1e-18);
+        // Off by default, so existing traces are untouched.
+        let ec = engine_config(&cfg(), Variant::Optimized);
+        assert!(!ec.log_compaction);
+        assert!(!ec.chunk_filter);
     }
 
     #[test]

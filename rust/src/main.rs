@@ -137,6 +137,10 @@ fn print_stats(label: &str, s: &RunStats) {
     println!("  gpu commits       : {} ({} attempts)", s.gpu_commits, s.gpu_attempts);
     println!("  discarded commits : {}", s.discarded_commits);
     println!("  log chunks        : {}", s.chunks);
+    println!(
+        "  log entries       : {} raw -> {} shipped ({} chunks filtered, {} skipped post-abort)",
+        s.log_entries_raw, s.log_entries_shipped, s.chunks_filtered, s.chunks_skipped_post_abort
+    );
     println!("  throughput        : {:.0} tx/s", s.throughput());
     println!("  round abort rate  : {:.3}", s.round_abort_rate());
     let c = &s.cpu_phases;
@@ -168,11 +172,12 @@ fn print_cluster_stats(s: &RunStats, c: &ClusterStats) {
     );
     for (d, dev) in c.per_device.iter().enumerate() {
         println!(
-            "  gpu[{d}]            : {} commits {} batches {} chunks | \
+            "  gpu[{d}]            : {} commits {} batches {} chunks ({} filtered) | \
              proc {:.4} validate {:.4} merge {:.4} blocked {:.4}",
             dev.commits,
             dev.batches,
             dev.chunks,
+            dev.chunks_filtered,
             dev.phases.processing_s,
             dev.phases.validation_s,
             dev.phases.merge_s,
@@ -460,7 +465,12 @@ KEYS (defaults): stmr.n_words=262144 stmr.bmp_shift=0 cpu.threads=8
   threads via ParallelCpuDriver — deterministic, different trace)
   cpu.guest=tinystm|norec|htm cpu.txn_ns hetm.period_ms=80
   hetm.policy=favor-cpu|favor-gpu|starvation-guard hetm.early_validation
+  hetm.early_interval_frac=0.25 (in (0,1])
+  hetm.log_compaction=false (dedup the write log last-write-wins before
+  chunking) hetm.chunk_filter=false (skip per-entry chunk validation on
+  provable non-intersection via chunk signatures)
   bus.latency_us bus.gbps gpu.kernel_latency_us gpu.txn_ns
+  gpu.validate_entry_ns gpu.sig_check_ns=250
   cluster.n_gpus=1 cluster.shard_bits=12 cluster.cross_shard_prob=0
   cluster.threads=1
   memcached.n_sets memcached.steal runtime.artifacts seed

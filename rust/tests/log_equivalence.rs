@@ -1,0 +1,346 @@
+//! Golden equivalence: compacted + filtered log shipping is bit-identical
+//! to raw shipping.
+//!
+//! `hetm.log_compaction` and `hetm.chunk_filter` change WHAT travels over
+//! the bus and how much validation work the model charges — they must
+//! never change what the system computes.  This suite pins that: for
+//! every workload × policy × `n_gpus ∈ {1, 4}`, an engine with both knobs
+//! on must produce the same final STMR state (CPU and every device), the
+//! same conflict decisions (per-round commit flags), and the same commit
+//! counts as the raw engine on the same seed.
+//!
+//! The runs use a **cost-neutralized** configuration: per-entry
+//! validation, signature checks and bus time are zeroed (bandwidth is set
+//! absurdly high so transfer durations vanish below one ulp of the
+//! cursors).  That freezes the virtual-time schedule — which compaction
+//! legitimately shortens, feeding back into the CPU's non-blocking bonus
+//! window and the GPU budgets — so the comparison isolates exactly the
+//! DATA semantics the optimization must preserve: last-write-wins dedup
+//! against the `>=` freshness replay, the carried-prefix boundary under
+//! favor-GPU truncation, signature conservativeness, per-shard scatter
+//! windows, and the post-abort rollback replay.
+//!
+//! **Early validation** is pinned in two flavors (DESIGN.md §9):
+//!
+//! * filter × early validation is bit-identical (a provably-clean chunk
+//!   contributes zero conflicts to the early scan either way), asserted
+//!   over the full policy × n_gpus matrix;
+//! * compaction × early validation preserves every round's commit/abort
+//!   DECISION but may legitimately abort *later* (fewer full chunks are
+//!   in flight mid-round, so an early point can see less — the conflict
+//!   is still caught by that same round's final validation), asserted
+//!   behaviorally rather than bitwise.
+//!
+//! Timing-visible behavior under real costs is exercised by
+//! `benches/ablate_log.rs` and the engine unit tests.
+
+use shetm::config::{PolicyKind, Raw, SystemConfig};
+use shetm::coordinator::round::{CpuDriver, Variant};
+use shetm::launch;
+
+const POLICIES: [PolicyKind; 3] = [
+    PolicyKind::FavorCpu,
+    PolicyKind::FavorGpu,
+    PolicyKind::CpuWithStarvationGuard,
+];
+
+fn neutral_raw() -> Raw {
+    Raw::parse(
+        "cpu.txn_ns = 2000\n\
+         gpu.txn_ns = 230\n\
+         hetm.period_ms = 2\n\
+         seed = 13\n\
+         # Neutralize every cost the compaction/filter path changes, so\n\
+         # the virtual-time schedule (and with it all timing feedback into\n\
+         # the data path) is identical between raw and compacted runs.\n\
+         gpu.validate_entry_ns = 0\n\
+         gpu.sig_check_ns = 0\n\
+         bus.latency_us = 0\n\
+         bus.gbps = 1e30\n\
+         [synth]\n\
+         conflict_prob = 0.01\n\
+         [bank]\n\
+         accounts = 16384\n\
+         [kmeans]\n\
+         points = 2048\n\
+         [zipfkv]\n\
+         keys = 2048\n\
+         theta = 1.1\n\
+         hot_prob = 0.2\n\
+         [memcached]\n\
+         n_sets = 1024\n",
+    )
+    .unwrap()
+}
+
+/// Everything the knobs must not change, in one comparable bundle.
+struct Trace {
+    summary: String,
+    committed_flags: Vec<bool>,
+    cpu_state: Vec<i32>,
+    device_states: Vec<Vec<i32>>,
+    raw_entries: u64,
+    shipped_entries: u64,
+    chunks_filtered: u64,
+    rounds_committed: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    name: &str,
+    policy: PolicyKind,
+    n_gpus: usize,
+    variant: Variant,
+    early_validation: bool,
+    compaction: bool,
+    filter: bool,
+) -> Trace {
+    let raw = neutral_raw();
+    let mut c = SystemConfig::from_raw(&raw).unwrap();
+    c.n_words = 1 << 14;
+    c.policy = policy;
+    c.n_gpus = n_gpus;
+    // Align shard stripes with the apps' half-splits on small regions.
+    c.shard_bits = 6;
+    c.early_validation = early_validation;
+    c.log_compaction = compaction;
+    c.chunk_filter = filter;
+    let w = shetm::apps::workload::from_raw(name, &raw, &c).unwrap();
+    let mut e = launch::build_workload_cluster_engine(
+        &c,
+        variant,
+        w.as_ref(),
+        128,
+        shetm::gpu::Backend::Native,
+    );
+    e.run_rounds(3).unwrap();
+    e.drain().unwrap();
+    w.check_invariants(e.cpu.stmr()).unwrap_or_else(|err| {
+        panic!(
+            "{name}/{policy:?}/n_gpus={n_gpus}/compaction={compaction}/filter={filter}: \
+             oracle failed: {err}"
+        )
+    });
+    Trace {
+        summary: format!(
+            "rounds={} committed={} early_aborted={} cpu={} gpu={} attempts={}/{} \
+             discarded={} duration={:?}",
+            e.stats.rounds,
+            e.stats.rounds_committed,
+            e.stats.rounds_early_aborted,
+            e.stats.cpu_commits,
+            e.stats.gpu_commits,
+            e.stats.cpu_attempts,
+            e.stats.gpu_attempts,
+            e.stats.discarded_commits,
+            e.stats.duration_s,
+        ),
+        committed_flags: e.round_log.iter().map(|r| r.committed).collect(),
+        cpu_state: e.cpu.stmr().snapshot(),
+        device_states: e.devices.iter().map(|d| d.stmr().to_vec()).collect(),
+        raw_entries: e.stats.log_entries_raw,
+        shipped_entries: e.stats.log_entries_shipped,
+        chunks_filtered: e.stats.chunks_filtered,
+        rounds_committed: e.stats.rounds_committed,
+    }
+}
+
+/// Strict bit-identity of the data path: raw vs compacted+filtered, with
+/// early validation off so mid-round chunk availability (which compaction
+/// legitimately changes) cannot shift the abort point.
+fn assert_equivalent(name: &str, policy: PolicyKind, n_gpus: usize, variant: Variant) {
+    let base = run(name, policy, n_gpus, variant, false, false, false);
+    let opt = run(name, policy, n_gpus, variant, false, true, true);
+    let label = format!("{name}/{policy:?}/n_gpus={n_gpus}/{variant:?}");
+    assert_eq!(base.summary, opt.summary, "{label}: commit counts diverged");
+    assert_eq!(
+        base.committed_flags, opt.committed_flags,
+        "{label}: per-round conflict decisions diverged"
+    );
+    assert_eq!(base.cpu_state, opt.cpu_state, "{label}: CPU STMR diverged");
+    for (d, (a, b)) in base
+        .device_states
+        .iter()
+        .zip(&opt.device_states)
+        .enumerate()
+    {
+        assert_eq!(a, b, "{label}: device {d} replica diverged");
+    }
+    // The knobs must actually have engaged (otherwise this suite is
+    // vacuous): raw load identical, shipped load never larger.
+    assert_eq!(base.raw_entries, opt.raw_entries, "{label}");
+    assert!(
+        opt.shipped_entries <= base.shipped_entries,
+        "{label}: compaction grew the log"
+    );
+    assert_eq!(base.chunks_filtered, 0, "{label}: raw run must not filter");
+}
+
+#[test]
+fn compacted_filtered_matches_raw_synth() {
+    for policy in POLICIES {
+        for n_gpus in [1usize, 4] {
+            assert_equivalent("synth", policy, n_gpus, Variant::Optimized);
+        }
+    }
+}
+
+#[test]
+fn compacted_filtered_matches_raw_synth_basic_variant() {
+    // The basic variant's blocking tail shipping takes a different
+    // drain/cursor path; pin it too.
+    for n_gpus in [1usize, 4] {
+        assert_equivalent("synth", PolicyKind::FavorCpu, n_gpus, Variant::Basic);
+    }
+}
+
+#[test]
+fn compacted_filtered_matches_raw_memcached() {
+    for policy in POLICIES {
+        for n_gpus in [1usize, 4] {
+            assert_equivalent("memcached", policy, n_gpus, Variant::Optimized);
+        }
+    }
+}
+
+#[test]
+fn compacted_filtered_matches_raw_bank() {
+    for policy in POLICIES {
+        for n_gpus in [1usize, 4] {
+            assert_equivalent("bank", policy, n_gpus, Variant::Optimized);
+        }
+    }
+}
+
+#[test]
+fn compacted_filtered_matches_raw_kmeans() {
+    for policy in POLICIES {
+        for n_gpus in [1usize, 4] {
+            assert_equivalent("kmeans", policy, n_gpus, Variant::Optimized);
+        }
+    }
+}
+
+#[test]
+fn compacted_filtered_matches_raw_zipfkv() {
+    for policy in POLICIES {
+        for n_gpus in [1usize, 4] {
+            assert_equivalent("zipfkv", policy, n_gpus, Variant::Optimized);
+        }
+    }
+}
+
+#[test]
+fn filter_is_bit_identical_under_early_validation() {
+    // The signature prefilter never changes WHEN chunks ship, and a
+    // provably-clean chunk contributes zero conflicts to an early scan
+    // either way — so with the filter alone, full bit-identity holds even
+    // with early validation on (and the synth conflict injection makes
+    // early aborts actually happen).
+    for policy in POLICIES {
+        for n_gpus in [1usize, 4] {
+            let base = run("synth", policy, n_gpus, Variant::Optimized, true, false, false);
+            let filt = run("synth", policy, n_gpus, Variant::Optimized, true, false, true);
+            let label = format!("synth/{policy:?}/n_gpus={n_gpus}/early-validation");
+            assert_eq!(base.summary, filt.summary, "{label}: stats diverged");
+            assert_eq!(base.committed_flags, filt.committed_flags, "{label}");
+            assert_eq!(base.cpu_state, filt.cpu_state, "{label}: CPU STMR diverged");
+            for (d, (a, b)) in base
+                .device_states
+                .iter()
+                .zip(&filt.device_states)
+                .enumerate()
+            {
+                assert_eq!(a, b, "{label}: device {d} replica diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn compaction_preserves_round_decisions_under_early_validation() {
+    // Compaction can delay mid-round chunk availability, so an early
+    // point may see less and the abort fires later — but every round's
+    // final commit/abort DECISION must be preserved: the conflicting
+    // entries still ship within the round and its final validation sees
+    // them (DESIGN.md §9).  Compare the first round only — after an
+    // abort whose timing differed, the traces legitimately diverge.
+    for policy in POLICIES {
+        for n_gpus in [1usize, 4] {
+            let base = run("synth", policy, n_gpus, Variant::Optimized, true, false, false);
+            let comp = run("synth", policy, n_gpus, Variant::Optimized, true, true, true);
+            let label = format!("synth/{policy:?}/n_gpus={n_gpus}/compaction+early");
+            assert_eq!(
+                base.committed_flags.first(),
+                comp.committed_flags.first(),
+                "{label}: first-round decision flipped"
+            );
+            // Both runs pass their oracles (checked inside run()) and the
+            // abort-certain shape stays abort-certain end to end.
+            assert_eq!(
+                base.rounds_committed == 0,
+                comp.rounds_committed == 0,
+                "{label}: commit-ability diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn compaction_and_filter_actually_engage_on_zipfkv() {
+    // Anti-vacuousness check for the suite: on the hot-key workload the
+    // compacted run must ship measurably fewer entries than it logged,
+    // and the partitioned chunks must hit the signature prefilter.
+    let t = run(
+        "zipfkv",
+        PolicyKind::FavorCpu,
+        1,
+        Variant::Optimized,
+        false,
+        true,
+        true,
+    );
+    assert!(t.raw_entries > 0);
+    assert!(
+        t.shipped_entries < t.raw_entries,
+        "zipfkv hot keys must compact: shipped {} of {}",
+        t.shipped_entries,
+        t.raw_entries
+    );
+    assert!(
+        t.chunks_filtered > 0,
+        "partitioned zipfkv chunks must filter"
+    );
+}
+
+#[test]
+fn threaded_cluster_matches_sequential_with_compaction_and_filter() {
+    // The new data path must stay lane-disjoint: threaded == sequential
+    // with both knobs on, for a contended sharded workload.
+    let raw = neutral_raw();
+    let build = |threads: usize| {
+        let mut c = SystemConfig::from_raw(&raw).unwrap();
+        c.n_words = 1 << 14;
+        c.policy = PolicyKind::FavorCpu;
+        c.n_gpus = 4;
+        c.shard_bits = 6;
+        c.cluster_threads = threads;
+        c.log_compaction = true;
+        c.chunk_filter = true;
+        let w = shetm::apps::workload::from_raw("zipfkv", &raw, &c).unwrap();
+        let mut e = launch::build_workload_cluster_engine(
+            &c,
+            Variant::Optimized,
+            w.as_ref(),
+            128,
+            shetm::gpu::Backend::Native,
+        );
+        e.run_rounds(3).unwrap();
+        e.drain().unwrap();
+        (format!("{:?}", e.stats), e.cpu.stmr().snapshot())
+    };
+    let seq = build(1);
+    let thr = build(4);
+    assert_eq!(seq.0, thr.0, "RunStats diverged across thread counts");
+    assert_eq!(seq.1, thr.1, "CPU state diverged across thread counts");
+}

@@ -422,6 +422,261 @@ fn prop_round_log_chunks_reconstruct_entries() {
     });
 }
 
+/// Drive two identically-fed round logs (raw vs compacted) through a
+/// random append/drain schedule and return their chunks.
+fn chunked_raw_and_compacted(
+    rng: &mut Rng,
+    entries: &[WriteEntry],
+    chunk_entries: usize,
+) -> (Vec<LogChunk>, Vec<LogChunk>) {
+    let mut raw = RoundLog::with_chunk_entries(chunk_entries);
+    let mut comp = RoundLog::with_chunk_entries(chunk_entries);
+    comp.set_compaction(true);
+    let (mut raw_chunks, mut comp_chunks) = (Vec::new(), Vec::new());
+    let mut off = 0;
+    while off < entries.len() {
+        let k = (1 + rng.below_usize(8)).min(entries.len() - off);
+        raw.append(&entries[off..off + k]);
+        comp.append(&entries[off..off + k]);
+        off += k;
+        if rng.chance(0.3) {
+            raw.drain_full_chunks(&mut raw_chunks);
+            comp.drain_full_chunks(&mut comp_chunks);
+        }
+    }
+    raw.drain_all(&mut raw_chunks);
+    comp.drain_all(&mut comp_chunks);
+    assert!(comp.shipped() <= raw.shipped(), "compaction never grows the log");
+    (raw_chunks, comp_chunks)
+}
+
+/// Random dup-heavy entry stream; ts values collide on purpose so the
+/// `>=` tie-break rule is exercised, not just monotonic clocks.
+fn random_entries(rng: &mut Rng, n: usize, addr_space: u64) -> Vec<WriteEntry> {
+    (0..n)
+        .map(|_| WriteEntry {
+            addr: rng.below(addr_space) as u32,
+            val: rng.below(1 << 20) as i32,
+            ts: rng.below(24) as i32,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_compacted_log_validates_and_applies_like_raw() {
+    // Satellite coverage for `hetm.log_compaction`: a compacted log must
+    // validate (same conflict DECISION) and apply (same final stmr and
+    // ts_arr) exactly like the raw log, under arbitrary streaming drain
+    // schedules, duplicate densities and colliding timestamps.
+    forall(Cases::new("compaction_equiv", 80).max_size(400), |rng, size| {
+        let n = 96;
+        let entries = random_entries(rng, size, n as u64 / 2);
+        let chunk_entries = 1 + rng.below_usize(24);
+        let (raw_chunks, comp_chunks) =
+            chunked_raw_and_compacted(rng, &entries, chunk_entries);
+        // Random read-set bitmap to validate against.
+        let mut rs = Bitmap::new(n, 0);
+        for _ in 0..rng.below_usize(8) {
+            rs.mark_word(rng.below_usize(n));
+        }
+        let apply = |chunks: &[LogChunk]| {
+            let mut stmr = vec![0i32; n];
+            let mut ts_arr = vec![0i32; n];
+            let mut conf = 0u32;
+            for c in chunks {
+                conf += native::validate_step(&mut stmr, &mut ts_arr, &rs, c);
+            }
+            (stmr, ts_arr, conf)
+        };
+        let (stmr_r, ts_r, conf_r) = apply(&raw_chunks);
+        let (stmr_c, ts_c, conf_c) = apply(&comp_chunks);
+        if stmr_r != stmr_c {
+            let w = (0..n).find(|&i| stmr_r[i] != stmr_c[i]).unwrap();
+            return Err(format!(
+                "stmr diverges at word {w}: raw={} comp={} (chunk={chunk_entries})",
+                stmr_r[w], stmr_c[w]
+            ));
+        }
+        if ts_r != ts_c {
+            return Err("ts_arr diverges".into());
+        }
+        if (conf_r > 0) != (conf_c > 0) {
+            return Err(format!(
+                "conflict decision diverges: raw={conf_r} comp={conf_c}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compacted_rollback_with_logs_matches_raw() {
+    // Favor-CPU rollback replays the shipped chunks onto the shadow copy;
+    // a compacted log must reproduce the raw replay bit for bit, even
+    // when the device did speculative work that the rollback discards.
+    forall(Cases::new("compaction_rollback", 40).max_size(300), |rng, size| {
+        let n = 96;
+        let entries = random_entries(rng, size, n as u64 / 2);
+        let chunk_entries = 1 + rng.below_usize(24);
+        let (raw_chunks, comp_chunks) =
+            chunked_raw_and_compacted(rng, &entries, chunk_entries);
+        let run = |chunks: &[LogChunk]| -> Result<Vec<i32>, String> {
+            let mut d = GpuDevice::new(n, 0, Backend::Native);
+            d.begin_round();
+            // Speculative GPU writes the rollback must discard.
+            let mut b = TxnBatch::empty(2, 1, 1);
+            b.read_idx = vec![-1, -1];
+            b.write_idx = vec![(n - 1) as i32, (n - 2) as i32];
+            b.write_val = vec![777, 778];
+            b.op = vec![1, 1];
+            d.run_txn_batch(&b).map_err(|e| e.to_string())?;
+            for c in chunks {
+                d.validate_chunk(c).map_err(|e| e.to_string())?;
+            }
+            d.rollback_with_logs(chunks);
+            Ok(d.stmr().to_vec())
+        };
+        let raw_state = run(&raw_chunks)?;
+        let comp_state = run(&comp_chunks)?;
+        if raw_state != comp_state {
+            let w = (0..n).find(|&i| raw_state[i] != comp_state[i]).unwrap();
+            return Err(format!(
+                "rollback diverges at word {w}: raw={} comp={}",
+                raw_state[w], comp_state[w]
+            ));
+        }
+        if raw_state[n - 1] == 777 {
+            return Err("rollback kept a speculative GPU write".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compaction_preserves_carried_prefix_for_favor_gpu() {
+    // The favor-GPU abort path truncates the log back to the carried
+    // prefix; compaction must never merge across that boundary, so the
+    // recovered prefix is the carry VERBATIM whatever was appended or
+    // drained in between.
+    forall(Cases::new("compaction_carry", 60).max_size(200), |rng, size| {
+        let carry_len = rng.below_usize(20);
+        let carry = random_entries(rng, carry_len, 16);
+        let body = random_entries(rng, size, 16);
+        let chunk_entries = 1 + rng.below_usize(16);
+        let mut log = RoundLog::with_chunk_entries(chunk_entries);
+        log.set_compaction(true);
+        log.reset_with_carry(&carry);
+        let mut chunks = Vec::new();
+        let mut off = 0;
+        while off < body.len() {
+            let k = (1 + rng.below_usize(8)).min(body.len() - off);
+            log.append(&body[off..off + k]);
+            off += k;
+            if rng.chance(0.3) {
+                log.drain_full_chunks(&mut chunks);
+            }
+        }
+        log.drain_all(&mut chunks);
+        // Shipped chunks must begin with the carry verbatim (compaction
+        // must not have merged this round's entries into it).
+        let mut shipped = Vec::new();
+        for c in &chunks {
+            for i in 0..c.addrs.len() {
+                if c.addrs[i] >= 0 {
+                    shipped.push(WriteEntry {
+                        addr: c.addrs[i] as u32,
+                        val: c.vals[i],
+                        ts: c.ts[i],
+                    });
+                }
+            }
+        }
+        if shipped.len() < carry.len() || shipped[..carry.len()] != carry[..] {
+            return Err(format!(
+                "carry prefix not shipped verbatim ({} carried, {} shipped)",
+                carry.len(),
+                shipped.len()
+            ));
+        }
+        // Favor-GPU abort: exactly the carry survives.
+        log.truncate_to_carried();
+        if log.entries() != &carry[..] {
+            return Err(format!(
+                "truncate recovered {} entries, carried {}",
+                log.entries().len(),
+                carry.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_router_scatter_compacts_per_shard_like_raw() {
+    // Cluster path: scattering then compacting per shard must apply
+    // identically to the raw scatter — per-shard windows only ever dedup
+    // entries routed to the same device, and shards are address-disjoint.
+    use shetm::cluster::{LogRouter, ShardMap};
+    forall(Cases::new("router_compaction", 40).max_size(300), |rng, size| {
+        let n = 128;
+        let n_shards = 1 + rng.below_usize(4);
+        let map = ShardMap::new(n, n_shards, 2); // 4-word blocks
+        let entries = random_entries(rng, size, n as u64);
+        let chunk_entries = 1 + rng.below_usize(16);
+        let chunks_of = |compact: bool, rng: &mut Rng| {
+            let mut r = LogRouter::new(map.clone(), chunk_entries);
+            r.set_compaction(compact);
+            let mut per_shard: Vec<Vec<LogChunk>> = vec![Vec::new(); n_shards];
+            let mut off = 0;
+            while off < entries.len() {
+                let k = (1 + rng.below_usize(8)).min(entries.len() - off);
+                r.append(&entries[off..off + k]);
+                off += k;
+                if rng.chance(0.3) {
+                    for (s, out) in per_shard.iter_mut().enumerate() {
+                        r.drain_full_chunks(s, out);
+                    }
+                }
+            }
+            for (s, out) in per_shard.iter_mut().enumerate() {
+                r.drain_all(s, out);
+            }
+            per_shard
+        };
+        // Same drain schedule for both (fresh RNG clone via reseed).
+        let seed = rng.next_u64();
+        let raw = chunks_of(false, &mut Rng::new(seed));
+        let comp = chunks_of(true, &mut Rng::new(seed));
+        let apply = |per_shard: &[Vec<LogChunk>]| {
+            let mut stmr = vec![0i32; n];
+            let mut ts_arr = vec![0i32; n];
+            let rs = Bitmap::new(n, 0);
+            for chunks in per_shard {
+                for c in chunks {
+                    native::validate_step(&mut stmr, &mut ts_arr, &rs, c);
+                }
+            }
+            (stmr, ts_arr)
+        };
+        let (stmr_r, ts_r) = apply(&raw);
+        let (stmr_c, ts_c) = apply(&comp);
+        if stmr_r != stmr_c || ts_r != ts_c {
+            return Err(format!("sharded apply diverges (shards={n_shards})"));
+        }
+        // Ownership is respected after compaction.
+        for (s, chunks) in comp.iter().enumerate() {
+            for c in chunks {
+                for &a in &c.addrs {
+                    if a >= 0 && map.owner(a as usize) != s {
+                        return Err(format!("shard {s} shipped foreign word {a}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_solo_baselines_bound_shetm() {
     // SHeTM on a clean partitioned workload must land between the best

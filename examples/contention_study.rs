@@ -14,9 +14,7 @@
 
 use shetm::apps::synth::SynthSpec;
 use shetm::config::{PolicyKind, Raw, SystemConfig};
-use shetm::coordinator::round::Variant;
-use shetm::gpu::Backend;
-use shetm::launch;
+use shetm::session::Hetm;
 
 fn run(
     cfg: &SystemConfig,
@@ -25,27 +23,18 @@ fn run(
     policy: PolicyKind,
 ) -> anyhow::Result<(f64, f64, u64)> {
     let n = cfg.n_words;
-    let mut cfg = cfg.clone();
-    cfg.early_validation = early;
-    cfg.policy = policy;
     let cpu_spec = SynthSpec::w1(n, 1.0)
         .partitioned(0..n / 2)
         .with_conflicts(conflict, n / 2..n);
     let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
-    let mut engine = launch::build_synth_engine(
-        &cfg,
-        Variant::Optimized,
-        cpu_spec,
-        gpu_spec,
-        1024,
-        Backend::Native,
-    );
-    engine.run_rounds(12)?;
-    Ok((
-        engine.stats.throughput(),
-        engine.stats.round_abort_rate(),
-        engine.stats.discarded_commits,
-    ))
+    let mut session = Hetm::from_config(cfg)
+        .early_validation(early)
+        .policy(policy)
+        .synth(cpu_spec, gpu_spec)
+        .build()?;
+    session.run_rounds(12)?;
+    let s = session.stats();
+    Ok((s.throughput(), s.round_abort_rate(), s.discarded_commits))
 }
 
 fn main() -> anyhow::Result<()> {

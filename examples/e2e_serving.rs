@@ -20,10 +20,9 @@ use std::time::Instant;
 
 use shetm::apps::memcached::McConfig;
 use shetm::config::{Raw, SystemConfig};
-use shetm::coordinator::round::{CpuDriver, Variant};
 use shetm::gpu::Backend;
-use shetm::launch;
 use shetm::runtime::ArtifactStore;
+use shetm::session::Hetm;
 
 fn build_cfg() -> anyhow::Result<SystemConfig> {
     let mut raw = Raw::new();
@@ -37,8 +36,10 @@ fn build_cfg() -> anyhow::Result<SystemConfig> {
 fn main() -> anyhow::Result<()> {
     let dir = std::env::var("SHETM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     if !ArtifactStore::available(&dir) {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(2);
+        // Graceful skip (exit 0) so CI can build and run every example
+        // without the compiled-artifact toolchain present.
+        println!("e2e SKIPPED: no PJRT artifacts in {dir:?} — run `make artifacts` first");
+        return Ok(());
     }
 
     let cfg = build_cfg()?;
@@ -55,13 +56,15 @@ fn main() -> anyhow::Result<()> {
         validate: "validate_mc_g0".into(),
         memcached: "memcached".into(),
     };
-    let mut engine =
-        launch::build_memcached_engine(&cfg, Variant::Optimized, mc.clone(), 1024, backend);
+    let mut session = Hetm::from_config(&cfg)
+        .memcached(mc.clone())
+        .backend(backend)
+        .build()?;
     let t1 = Instant::now();
-    engine.run_rounds(rounds)?;
+    session.run_rounds(rounds)?;
     let wall = t1.elapsed();
 
-    let s = &engine.stats;
+    let s = session.stats();
     println!("\n== e2e serving run (PJRT backend) ==");
     println!("  requests served   : {} (cpu {} + gpu {})",
         s.cpu_commits + s.gpu_commits, s.cpu_commits, s.gpu_commits);
@@ -84,18 +87,22 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- Cross-check: identical run on the native mirrors --------------
-    let mut native =
-        launch::build_memcached_engine(&cfg, Variant::Optimized, mc, 1024, Backend::Native);
+    let cpu_commits = s.cpu_commits;
+    let gpu_commits = s.gpu_commits;
+    let mut native = Hetm::from_config(&cfg)
+        .memcached(mc)
+        .backend(Backend::Native)
+        .build()?;
     native.run_rounds(rounds)?;
-    assert_eq!(native.stats.cpu_commits, s.cpu_commits, "CPU commit counts");
-    assert_eq!(native.stats.gpu_commits, s.gpu_commits, "GPU commit counts");
+    assert_eq!(native.stats().cpu_commits, cpu_commits, "CPU commit counts");
+    assert_eq!(native.stats().gpu_commits, gpu_commits, "GPU commit counts");
     assert_eq!(
-        native.device.stmr(),
-        engine.device.stmr(),
+        native.device_stmr(0),
+        session.device_stmr(0),
         "device replicas must be bit-identical across backends"
     );
-    let a = native.cpu.stmr().snapshot();
-    let b = engine.cpu.stmr().snapshot();
+    let a = native.stmr().snapshot();
+    let b = session.stmr().snapshot();
     assert_eq!(a, b, "CPU replicas must be bit-identical across backends");
     println!("\ncross-check vs native mirrors: BIT-IDENTICAL ✓");
     println!("e2e OK");

@@ -7,17 +7,14 @@
 
 use shetm::apps::memcached::McConfig;
 use shetm::config::{Raw, SystemConfig};
-use shetm::coordinator::round::Variant;
-use shetm::gpu::Backend;
-use shetm::launch;
+use shetm::session::Hetm;
 
 fn run(cfg: &SystemConfig, steal: f64, rounds: usize) -> anyhow::Result<()> {
     let mut mc = McConfig::new(1 << 12);
     mc.steal_shift = steal;
-    let mut engine =
-        launch::build_memcached_engine(cfg, Variant::Optimized, mc, 1024, Backend::Native);
-    engine.run_rounds(rounds)?;
-    let s = &engine.stats;
+    let mut session = Hetm::from_config(cfg).memcached(mc).build()?;
+    session.run_rounds(rounds)?;
+    let s = session.stats();
     println!(
         "steal {:>4.0}% | {:>8.2} M req/s | rounds ok {:>3}/{:<3} | \
          cpu {:>8} gpu {:>8} wasted {:>7}",

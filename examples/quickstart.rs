@@ -1,5 +1,6 @@
-//! Quickstart: assemble a SHeTM platform over a synthetic workload, run a
-//! few synchronization rounds and inspect the results.
+//! Quickstart: assemble a SHeTM platform through the `Hetm` builder, run a
+//! few synchronization rounds, commit a transaction of your own through
+//! the `Session`, and inspect the results.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -8,13 +9,12 @@
 //! This is the smallest complete use of the public API: one guest TM on the
 //! CPU side, the simulated accelerator on the other, both halves of the
 //! STMR partitioned so the devices never conflict, the default favor-CPU
-//! policy and the optimized (Fig. 1b) round algorithm.
+//! policy and the optimized (Fig. 1b) round algorithm — all behind one
+//! builder and one facade.
 
 use shetm::apps::synth::SynthSpec;
 use shetm::config::{Raw, SystemConfig};
-use shetm::coordinator::round::{CpuDriver, Variant};
-use shetm::gpu::Backend;
-use shetm::launch;
+use shetm::session::Hetm;
 
 fn main() -> anyhow::Result<()> {
     // 1. Configuration: defaults + a couple of overrides.  Everything here
@@ -32,32 +32,37 @@ fn main() -> anyhow::Result<()> {
     let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
     let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
 
-    // 3. Assemble and run. Backend::Native uses the Rust kernel mirrors;
-    //    pass `--set runtime.artifacts=artifacts` (see e2e_serving.rs) to
-    //    execute the AOT-compiled jax/Pallas kernels through PJRT instead.
-    let mut engine = launch::build_synth_engine(
-        &cfg,
-        Variant::Optimized,
-        cpu_spec,
-        gpu_spec,
-        1024,
-        Backend::Native,
-    );
-    engine.run_rounds(20)?;
+    // 3. Assemble and run.  The builder validates the whole knob
+    //    cross-product up front and picks the engine shape itself; set
+    //    `--set runtime.artifacts=artifacts` (see e2e_serving.rs) to
+    //    execute the AOT-compiled jax/Pallas kernels through PJRT instead
+    //    of the native mirrors.
+    let mut session = Hetm::from_config(&cfg).synth(cpu_spec, gpu_spec).build()?;
+    session.run_rounds(20)?;
 
     // 4. Results.
-    let s = &engine.stats;
+    let s = session.stats();
     println!("rounds committed : {}/{}", s.rounds_committed, s.rounds);
     println!("cpu commits      : {}", s.cpu_commits);
     println!("gpu commits      : {}", s.gpu_commits);
     println!("throughput       : {:.2} M tx/s", s.throughput() / 1e6);
     assert_eq!(s.rounds_committed, s.rounds, "partitioned workload");
 
+    // 5. The paper's single-shared-memory illusion, as an API: an atomic
+    //    CPU-side transaction through the session itself.  It commits
+    //    through the same guest TM the workload uses and ships to the
+    //    device replica with the next round.
+    session.txn(|tx| {
+        let v = tx.read(0)?;
+        tx.write(0, v + 1)
+    })?;
+    session.run_round()?;
+
     // The replicas are guaranteed to agree after draining the commits the
     // CPU made while the last round was validating (§IV-D non-blocking).
-    engine.drain()?;
-    let cpu_view = engine.cpu.stmr().snapshot();
-    assert_eq!(&cpu_view[..], engine.device.stmr());
+    session.drain()?;
+    let cpu_view = session.stmr().snapshot();
+    assert_eq!(&cpu_view[..], session.device_stmr(0));
     println!("replicas agree   : yes ({} words)", cpu_view.len());
     Ok(())
 }

@@ -11,9 +11,7 @@
 mod common;
 
 use shetm::apps::synth::SynthSpec;
-use shetm::coordinator::round::Variant;
-use shetm::gpu::Backend;
-use shetm::launch;
+use shetm::session::Hetm;
 use shetm::util::bench::Table;
 
 fn run(chunk_entries: usize, latency_us: f64, sim_s: f64) -> f64 {
@@ -24,17 +22,13 @@ fn run(chunk_entries: usize, latency_us: f64, sim_s: f64) -> f64 {
     let n = cfg.n_words;
     let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
     let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
-    let mut e = launch::build_synth_engine(
-        &cfg,
-        Variant::Optimized,
-        cpu_spec,
-        gpu_spec,
-        1024,
-        Backend::Native,
-    );
+    let mut e = Hetm::from_config(&cfg)
+        .synth(cpu_spec, gpu_spec)
+        .build()
+        .expect("session");
     e.set_chunk_entries(chunk_entries);
     e.run_for(sim_s).unwrap();
-    e.stats.throughput()
+    e.stats().throughput()
 }
 
 fn main() {

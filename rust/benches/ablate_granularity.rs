@@ -14,9 +14,8 @@ mod common;
 use std::time::Instant;
 
 use shetm::apps::synth::SynthSpec;
-use shetm::coordinator::round::Variant;
-use shetm::gpu::{native, Backend, Bitmap, TxnBatch};
-use shetm::launch;
+use shetm::gpu::{native, Bitmap, TxnBatch};
+use shetm::session::Hetm;
 use shetm::util::bench::Table;
 use shetm::util::Rng;
 
@@ -69,16 +68,12 @@ fn false_abort_rate(shift: u32, sim_s: f64) -> f64 {
     let edge = BLOCK * 256 + BLOCK / 2; // 65664 = 2^7 * 513
     let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..edge);
     let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(edge..2 * edge);
-    let mut e = launch::build_synth_engine(
-        &cfg,
-        Variant::Optimized,
-        cpu_spec,
-        gpu_spec,
-        1024,
-        Backend::Native,
-    );
+    let mut e = Hetm::from_config(&cfg)
+        .synth(cpu_spec, gpu_spec)
+        .build()
+        .expect("session");
     e.run_for(sim_s).unwrap();
-    e.stats.round_abort_rate()
+    e.stats().round_abort_rate()
 }
 
 fn main() {

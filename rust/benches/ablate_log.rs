@@ -20,9 +20,7 @@
 mod common;
 
 use shetm::config::{Raw, SystemConfig};
-use shetm::coordinator::round::{CpuDriver, Variant};
-use shetm::gpu::Backend;
-use shetm::launch;
+use shetm::session::Hetm;
 use shetm::util::bench::Table;
 
 struct Point {
@@ -48,28 +46,26 @@ fn run_point(theta: f64, compaction: bool, filter: bool, rounds: usize) -> Point
     cfg.period_s = 0.020;
     cfg.log_compaction = compaction;
     cfg.chunk_filter = filter;
-    let w = shetm::apps::workload::from_raw("zipfkv", &raw, &cfg).unwrap();
-    let mut e = launch::build_workload_engine(
-        &cfg,
-        Variant::Optimized,
-        w.as_ref(),
-        1024,
-        Backend::Native,
-    );
+    let mut e = Hetm::from_config(&cfg)
+        .workload_named("zipfkv")
+        .app_config(raw)
+        .build()
+        .expect("session");
     e.run_rounds(rounds).expect("ablate_log run");
     e.drain().expect("ablate_log drain");
-    w.check_invariants(e.cpu.stmr())
+    e.check_invariants()
         .expect("zipfkv oracle failed in ablate_log");
+    let s = e.stats();
     Point {
         theta,
         compaction,
         filter,
-        raw_entries: e.stats.log_entries_raw,
-        shipped_entries: e.stats.log_entries_shipped,
-        chunks: e.stats.chunks,
-        chunks_filtered: e.stats.chunks_filtered,
-        validation_s: e.stats.gpu_phases.validation_s,
-        throughput: e.stats.throughput(),
+        raw_entries: s.log_entries_raw,
+        shipped_entries: s.log_entries_shipped,
+        chunks: s.chunks,
+        chunks_filtered: s.chunks_filtered,
+        validation_s: s.gpu_phases.validation_s,
+        throughput: s.throughput(),
     }
 }
 

@@ -24,6 +24,7 @@ use shetm::coordinator::baseline;
 use shetm::coordinator::round::Variant;
 use shetm::gpu::{Backend, GpuDevice};
 use shetm::launch;
+use shetm::session::Hetm;
 use shetm::stm::{GlobalClock, SharedStmr};
 use shetm::util::bench::Table;
 
@@ -33,16 +34,13 @@ fn shetm_thr(update_frac: f64, period_s: f64, variant: Variant, sim_s: f64) -> f
     let n = cfg.n_words;
     let cpu_spec = SynthSpec::w1(n, update_frac).partitioned(0..n / 2);
     let gpu_spec = SynthSpec::w1(n, update_frac).partitioned(n / 2..n);
-    let mut e = launch::build_synth_engine(
-        &cfg,
-        variant,
-        cpu_spec,
-        gpu_spec,
-        1024,
-        Backend::Native,
-    );
+    let mut e = Hetm::from_config(&cfg)
+        .variant(variant)
+        .synth(cpu_spec, gpu_spec)
+        .build()
+        .expect("session");
     e.run_for(sim_s).unwrap();
-    e.stats.throughput()
+    e.stats().throughput()
 }
 
 fn cpu_only_thr(update_frac: f64, sim_s: f64) -> f64 {

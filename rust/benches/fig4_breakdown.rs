@@ -12,8 +12,7 @@ mod common;
 
 use shetm::apps::synth::SynthSpec;
 use shetm::coordinator::round::Variant;
-use shetm::gpu::Backend;
-use shetm::launch;
+use shetm::session::Hetm;
 use shetm::util::bench::Table;
 
 fn main() {
@@ -40,11 +39,13 @@ fn main() {
             let n = cfg.n_words;
             let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
             let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
-            let mut e = launch::build_synth_engine(
-                &cfg, variant, cpu_spec, gpu_spec, 1024, Backend::Native,
-            );
+            let mut e = Hetm::from_config(&cfg)
+                .variant(variant)
+                .synth(cpu_spec, gpu_spec)
+                .build()
+                .expect("session");
             e.run_for(common::sim_time(0.25).max(cfg.period_s * 4.0)).unwrap();
-            let s = &e.stats;
+            let s = e.stats();
             let c = &s.cpu_phases;
             let g = &s.gpu_phases;
             let ct = c.total().max(1e-12);

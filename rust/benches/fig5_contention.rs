@@ -18,9 +18,9 @@ use std::sync::Arc;
 
 use shetm::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
 use shetm::coordinator::baseline;
-use shetm::coordinator::round::Variant;
 use shetm::gpu::{Backend, GpuDevice};
 use shetm::launch;
+use shetm::session::Hetm;
 use shetm::stm::{GlobalClock, SharedStmr};
 use shetm::util::bench::Table;
 
@@ -35,19 +35,16 @@ fn run_shetm(conflict_per_txn: f64, early: bool, sim_s: f64) -> (f64, f64, f64) 
         .partitioned(0..n / 2)
         .with_conflicts(conflict_per_txn, n / 2..n);
     let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
-    let mut e = launch::build_synth_engine(
-        &cfg,
-        Variant::Optimized,
-        cpu_spec,
-        gpu_spec,
-        1024,
-        Backend::Native,
-    );
+    let mut e = Hetm::from_config(&cfg)
+        .synth(cpu_spec, gpu_spec)
+        .build()
+        .expect("session");
     e.run_for(sim_s).unwrap();
+    let s = e.stats();
     (
-        e.stats.throughput(),
-        e.stats.round_abort_rate(),
-        e.stats.discarded_commits as f64,
+        s.throughput(),
+        s.round_abort_rate(),
+        s.discarded_commits as f64,
     )
 }
 

@@ -21,9 +21,8 @@ use std::sync::Arc;
 
 use shetm::apps::memcached::{init_cache_words, McConfig, McCpu, McWorld};
 use shetm::coordinator::baseline;
-use shetm::coordinator::round::Variant;
-use shetm::gpu::Backend;
 use shetm::launch;
+use shetm::session::Hetm;
 use shetm::stm::{GlobalClock, SharedStmr};
 use shetm::util::bench::Table;
 
@@ -72,16 +71,13 @@ fn main() {
             cfg.period_s = p / 1e3;
             let mut mc = McConfig::new(N_SETS);
             mc.steal_shift = steal;
-            let mut e = launch::build_memcached_engine(
-                &cfg,
-                Variant::Optimized,
-                mc,
-                1024,
-                Backend::Native,
-            );
+            let mut e = Hetm::from_config(&cfg)
+                .memcached(mc)
+                .build()
+                .expect("session");
             e.run_for(sim.max(cfg.period_s * 4.0)).unwrap();
-            thr.push(e.stats.throughput() / cpu_ref);
-            ab.push(e.stats.round_abort_rate());
+            thr.push(e.stats().throughput() / cpu_ref);
+            ab.push(e.stats().round_abort_rate());
         }
         t.row(&[p, thr[0], thr[1], thr[2], thr[3], ab[0], ab[1], ab[2], ab[3]]);
     }

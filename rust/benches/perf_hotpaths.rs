@@ -17,11 +17,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use shetm::apps::synth::SynthSpec;
-use shetm::coordinator::round::Variant;
 use shetm::coordinator::RoundLog;
 use shetm::gpu::{native, Backend, Bitmap, GpuDevice, LogChunk, TxnBatch};
-use shetm::launch;
 use shetm::runtime::ArtifactStore;
+use shetm::session::Hetm;
 use shetm::stm::tinystm::TinyStm;
 use shetm::stm::{GlobalClock, GuestTm, SharedStmr};
 use shetm::util::bench::{bench, report};
@@ -147,14 +146,10 @@ fn l3d_round_overhead() {
     let n = cfg.n_words;
     let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
     let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
-    let mut e = launch::build_synth_engine(
-        &cfg,
-        Variant::Optimized,
-        cpu_spec,
-        gpu_spec,
-        1024,
-        Backend::Native,
-    );
+    let mut e = Hetm::from_config(&cfg)
+        .synth(cpu_spec, gpu_spec)
+        .build()
+        .expect("session");
     let iters = if common::fast() { 2_000 } else { 20_000 };
     let r = bench("round-engine empty round", 100, iters as u32, || {
         e.run_round().unwrap();
@@ -164,6 +159,28 @@ fn l3d_round_overhead() {
         "perf L3d engine orchestration                  {:>10.1} ns/round ({:.0} k rounds/s)",
         r.mean.as_nanos() as f64,
         r.per_sec() / 1e3
+    );
+}
+
+fn l3e_snapshot_reuse() {
+    // Favor-GPU snapshot path: `save_snapshot` must reuse its buffer, so
+    // steady-state save/restore cycles are copies, not allocations.  The
+    // first cycle pays the allocation; the reported steady-state cost is
+    // pure memcpy bandwidth.
+    let stmr = SharedStmr::new(N);
+    stmr.save_snapshot();
+    stmr.restore_snapshot();
+    let iters = if common::fast() { 50 } else { 400 };
+    let r = bench("stmr snapshot save+restore (reused buffer)", 3, iters, || {
+        stmr.save_snapshot();
+        stmr.restore_snapshot();
+    });
+    report(&r);
+    let bytes = (N * 4 * 2) as f64; // one load pass + one store pass
+    println!(
+        "perf L3e favor-GPU snapshot cycle              {:>10.1} us/round ({:.1} GB/s)",
+        r.mean.as_secs_f64() * 1e6,
+        bytes / r.mean.as_secs_f64() / 1e9
     );
 }
 
@@ -219,6 +236,7 @@ fn main() {
     l3b_prstm_kernel();
     l3c_validate_kernel();
     l3d_round_overhead();
+    l3e_snapshot_reuse();
     l1_pjrt_dispatch();
     println!("\nperf_hotpaths done");
 }

@@ -33,9 +33,7 @@ mod common;
 use std::time::Instant;
 
 use shetm::apps::synth::SynthSpec;
-use shetm::coordinator::round::Variant;
-use shetm::gpu::Backend;
-use shetm::launch;
+use shetm::session::Hetm;
 use shetm::util::bench::Table;
 
 struct Point {
@@ -92,31 +90,20 @@ fn run_cluster_cfg(
             stats_sig: format!("{s:?}"),
         }
     };
-    if cpu_parallel {
-        let mut e = launch::build_parallel_synth_cluster_engine(
-            &cfg,
-            Variant::Optimized,
-            cpu_spec,
-            gpu_spec,
-            1024,
-            Backend::Native,
-        );
-        let t0 = Instant::now();
-        e.run_for(sim_s).expect("cluster run");
-        point(t0.elapsed().as_secs_f64(), &e.stats, &e.cluster)
-    } else {
-        let mut e = launch::build_synth_cluster_engine(
-            &cfg,
-            Variant::Optimized,
-            cpu_spec,
-            gpu_spec,
-            1024,
-            Backend::Native,
-        );
-        let t0 = Instant::now();
-        e.run_for(sim_s).expect("cluster run");
-        point(t0.elapsed().as_secs_f64(), &e.stats, &e.cluster)
-    }
+    // force_cluster: keep the cluster engine (and its ClusterStats) even
+    // at n_gpus = 1 — the sweep's 1-device points are its baseline.
+    let mut e = Hetm::from_config(&cfg)
+        .synth(cpu_spec, gpu_spec)
+        .force_cluster(true)
+        .build()
+        .expect("session");
+    let t0 = Instant::now();
+    e.run_for(sim_s).expect("cluster run");
+    point(
+        t0.elapsed().as_secs_f64(),
+        e.stats(),
+        e.cluster().expect("cluster stats"),
+    )
 }
 
 fn json_point(sweep: &str, p: &Point, speedup: f64) -> String {

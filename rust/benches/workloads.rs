@@ -11,11 +11,8 @@
 
 mod common;
 
-use shetm::apps::workload::{self, Workload};
 use shetm::config::Raw;
-use shetm::coordinator::round::{CpuDriver, Variant};
-use shetm::gpu::Backend;
-use shetm::launch;
+use shetm::session::Hetm;
 use shetm::util::bench::Table;
 
 struct Point {
@@ -37,27 +34,26 @@ fn run_point(name: &str, update_frac: f64, n_gpus: usize, sim_s: f64) -> Point {
         .unwrap();
     raw.set("zipfkv.keys=32768").unwrap();
     raw.set("kmeans.points=32768").unwrap();
-    let w = workload::from_raw(name, &raw, &cfg).expect("workload");
-    let mut e = launch::build_workload_cluster_engine(
-        &cfg,
-        Variant::Optimized,
-        w.as_ref(),
-        1024,
-        Backend::Native,
-    );
+    let mut e = Hetm::from_config(&cfg)
+        .workload_named(name)
+        .app_config(raw)
+        .force_cluster(true) // the sweep's 1-device points stay on the cluster engine
+        .build()
+        .expect("session");
     if common::fast() {
         e.run_rounds(2).expect("bench rounds");
     } else {
         e.run_for(sim_s).expect("bench run");
     }
     e.drain().expect("drain");
-    w.check_invariants(e.cpu.stmr())
+    e.check_invariants()
         .unwrap_or_else(|err| panic!("{name} oracle violated: {err}"));
+    let s = e.stats();
     Point {
-        throughput: e.stats.throughput(),
-        abort_rate: e.stats.round_abort_rate(),
-        discarded: e.stats.discarded_commits,
-        gpu_commits: e.stats.gpu_commits,
+        throughput: s.throughput(),
+        abort_rate: s.round_abort_rate(),
+        discarded: s.discarded_commits,
+        gpu_commits: s.gpu_commits,
     }
 }
 

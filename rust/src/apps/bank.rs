@@ -195,6 +195,10 @@ impl BankCpu {
 }
 
 impl CpuDriver for BankCpu {
+    fn epoch_reset(&mut self, base: i64) {
+        self.tm.epoch_reset(base);
+    }
+
     fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice {
         let want = dur_s * self.rate() + self.debt;
         let n = want.floor() as u64;

@@ -54,8 +54,8 @@ use crate::stm::{GuestTm, SharedStmr};
 /// use shetm::apps::workload::Workload;
 /// use shetm::cluster::ShardMap;
 /// use shetm::config::{Raw, SystemConfig};
-/// use shetm::coordinator::round::{CpuDriver, CpuSlice, GpuDriver, GpuSlice, Variant};
-/// use shetm::gpu::{Backend, GpuDevice};
+/// use shetm::coordinator::round::{CpuDriver, CpuSlice, GpuDriver, GpuSlice};
+/// use shetm::gpu::GpuDevice;
 /// use shetm::stm::{GuestTm, SharedStmr, WriteEntry};
 ///
 /// struct CountCpu {
@@ -136,13 +136,15 @@ use crate::stm::{GuestTm, SharedStmr};
 ///
 /// let mut cfg = SystemConfig::from_raw(&Raw::new()).unwrap();
 /// cfg.period_s = 0.001;
-/// let w = CounterWorkload;
-/// let mut engine =
-///     shetm::launch::build_workload_engine(&cfg, Variant::Optimized, &w, 32, Backend::Native);
-/// engine.run_rounds(2).unwrap();
-/// engine.drain().unwrap();
-/// w.check_invariants(engine.cpu.stmr()).unwrap();
-/// assert!(engine.cpu.stmr().load(0) > 0, "the counter advanced");
+/// let mut session = shetm::session::Hetm::from_config(&cfg)
+///     .workload(Box::new(CounterWorkload))
+///     .gpu_batch(32)
+///     .build()
+///     .unwrap();
+/// session.run_rounds(2).unwrap();
+/// session.drain().unwrap();
+/// session.check_invariants().unwrap();
+/// assert!(session.stmr().load(0) > 0, "the counter advanced");
 /// ```
 pub trait Workload {
     /// Workload name (labels, diagnostics).
@@ -218,6 +220,16 @@ pub struct SynthWorkload {
 }
 
 impl SynthWorkload {
+    /// Explicit CPU/GPU specs over an `n_words` region (the
+    /// [`crate::session::Hetm::synth`] path).
+    pub fn new(cpu_spec: SynthSpec, gpu_spec: SynthSpec, n_words: usize) -> Self {
+        SynthWorkload {
+            cpu_spec,
+            gpu_spec,
+            n_words,
+        }
+    }
+
     /// Partitioned W1/W2 over `cfg.n_words` from the `[synth]` section:
     /// `reads` (4 = W1, 40 = W2), `update_frac`, `conflict_prob`.
     pub fn from_raw(raw: &Raw, cfg: &SystemConfig) -> Result<Self> {
@@ -304,6 +316,12 @@ pub struct MemcachedWorkload {
 }
 
 impl MemcachedWorkload {
+    /// Explicit cache configuration (the
+    /// [`crate::session::Hetm::memcached`] path).
+    pub fn new(mc: McConfig, seed: u64) -> Self {
+        MemcachedWorkload { mc, seed }
+    }
+
     /// From the `[memcached]` section: `n_sets`, `steal`.
     pub fn from_raw(raw: &Raw, cfg: &SystemConfig) -> Result<Self> {
         let n_sets: usize = raw.get_or("memcached.n_sets", 1usize << 12)?;

@@ -241,6 +241,10 @@ impl ZipfKvCpu {
 }
 
 impl CpuDriver for ZipfKvCpu {
+    fn epoch_reset(&mut self, base: i64) {
+        self.tm.epoch_reset(base);
+    }
+
     fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice {
         let before = log.len();
         let want = dur_s * self.rate() + self.debt;

@@ -356,6 +356,55 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         r
     }
 
+    /// Change the log-chunk size (ablation benches).  Must be called
+    /// between rounds; the router is rebuilt at the new chunking
+    /// (compaction and signature settings are preserved) and re-seeded
+    /// with every shard's carried prefix — commits already counted on
+    /// the CPU still ship next round instead of being silently dropped
+    /// (mirrors `RoundEngine::set_chunk_entries`).
+    pub fn set_chunk_entries(&mut self, n: usize) {
+        self.cfg.chunk_entries = n;
+        let mut carried: Vec<WriteEntry> = Vec::new();
+        for s in 0..self.router.n_shards() {
+            carried.extend_from_slice(self.router.log(s).entries());
+        }
+        let mut router = LogRouter::new(self.map.clone(), n);
+        router.set_compaction(self.cfg.log_compaction);
+        if self.cfg.chunk_filter {
+            router.set_sig_shift(Some(self.devices[0].rs_bmp().shift()));
+        }
+        // Rescattering by owner reproduces each shard's prefix in order
+        // (shards are address-disjoint, so concatenation order across
+        // shards is immaterial).
+        router.reset_with_carry(&carried);
+        self.router = router;
+        self.carry.clear();
+    }
+
+    /// Enqueue externally-committed CPU write entries (the
+    /// [`crate::session::Session::txn`] entry point), mirroring
+    /// [`crate::coordinator::round::RoundEngine::inject_external`]: the
+    /// entries scatter into their owner shards' carried prefixes and ship
+    /// next round; every device (owner included, matching the round
+    /// wrap-up's carry convention — the values live on the CPU only until
+    /// the carry re-ships through validation) is marked stale so the
+    /// delta-coherence refresh covers reads of those words too.
+    pub fn inject_external(&mut self, entries: &[WriteEntry], commits: u64, attempts: u64) {
+        self.router.extend_carried(entries);
+        if self.devices.len() > 1 {
+            // Like the validation-window carry: the values live on the
+            // CPU only until the carry re-ships through validation, so
+            // every device must refresh those words.
+            for e in entries {
+                for stale in &mut self.stale {
+                    stale.mark_word(e.addr as usize);
+                }
+            }
+        }
+        self.stats.cpu_commits += commits;
+        self.stats.cpu_attempts += attempts;
+    }
+
     /// Execute one synchronization round across all devices.
     ///
     /// Per-lane phases run sequentially or on worker threads (see
@@ -1081,6 +1130,19 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         }
         carry.clear();
         round_entries.clear();
+
+        // Epoch reset, mirroring `RoundEngine::run_round`: every shard
+        // log now holds exactly its carried prefix.  Renumber each into
+        // 1..=k, restart the shared commit clock at max(k), and clear the
+        // per-device freshness arrays — timestamps are only compared
+        // within one round and one shard, so results are bit-identical
+        // (and identical to the single-device engine at n_gpus = 1, where
+        // the solo router reproduces its renumbering exactly).
+        let epoch_base = router.rebase_epoch();
+        cpu.epoch_reset(epoch_base);
+        for lane in &mut lanes {
+            lane.dev.epoch_reset();
+        }
 
         // Deterministic fold of the per-lane RoundStats partials, in
         // device-index order.  At n_dev = 1 each field receives exactly

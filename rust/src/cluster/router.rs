@@ -143,6 +143,30 @@ impl LogRouter {
             log.truncate_to_carried();
         }
     }
+
+    /// Round-boundary epoch rebase: renumber every shard's carried prefix
+    /// into `1..=k_shard` ([`RoundLog::rebase_epoch`]) and return the
+    /// maximum base — the value the shared commit clock restarts at, so
+    /// every next-epoch timestamp exceeds every renumbered carried entry.
+    /// Shards are address-disjoint, so per-shard renumbering preserves
+    /// every per-address freshness outcome.
+    pub fn rebase_epoch(&mut self) -> i64 {
+        let mut base = 0i64;
+        for log in &mut self.logs {
+            base = base.max(log.rebase_epoch());
+        }
+        base
+    }
+
+    /// Scatter externally-committed entries into each owner shard's
+    /// carried prefix (the `Session::txn` path; see
+    /// [`RoundLog::extend_carried`]).
+    pub fn extend_carried(&mut self, entries: &[WriteEntry]) {
+        for e in entries {
+            self.logs[self.map.owner(e.addr as usize)]
+                .extend_carried(std::slice::from_ref(e));
+        }
+    }
 }
 
 #[cfg(test)]

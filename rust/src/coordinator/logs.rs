@@ -204,6 +204,41 @@ impl RoundLog {
         &self.entries
     }
 
+    /// Round-boundary epoch rebase: renumber the log's entries into
+    /// timestamps `1..=len` (preserving entry order) and return the new
+    /// clock base.  Called while the log holds only the next round's
+    /// carried prefix, as part of the engines' epoch reset
+    /// ([`crate::stm::GlobalClock::epoch_reset`]).
+    ///
+    /// Per address, entry order equals commit order (one worker owns each
+    /// address), so position-order renumbering preserves every
+    /// `>=`-freshness apply winner and every compaction survivor.
+    pub fn rebase_epoch(&mut self) -> i64 {
+        debug_assert_eq!(self.drained, 0, "rebase only between rounds");
+        for (i, e) in self.entries.iter_mut().enumerate() {
+            e.ts = (i + 1) as i32;
+        }
+        self.entries.len() as i64
+    }
+
+    /// Append externally-committed entries to the carried prefix (the
+    /// [`crate::session::Session::txn`] path).  Between rounds the log
+    /// holds only carried entries, so the append extends that prefix:
+    /// the entries ship with the next round and — like the §IV-D
+    /// validation-window carry — survive a favor-GPU truncation (their
+    /// transactions committed before that round began).
+    pub fn extend_carried(&mut self, entries: &[WriteEntry]) {
+        debug_assert_eq!(self.drained, 0, "external commits land between rounds");
+        debug_assert_eq!(
+            self.entries.len(),
+            self.carried,
+            "between rounds the log is exactly its carried prefix"
+        );
+        self.entries.extend_from_slice(entries);
+        self.carried = self.entries.len();
+        self.raw_appended += entries.len() as u64;
+    }
+
     /// Deduplicate the pending, non-carried window in place, keeping per
     /// address the entry the freshness-guarded apply would leave (the
     /// last one whose `ts` ties the maximum) at its first-occurrence
@@ -388,6 +423,35 @@ mod tests {
         let mut chunks = Vec::new();
         plain.drain_all(&mut chunks);
         assert!(chunks[0].sig.is_none());
+    }
+
+    #[test]
+    fn rebase_renumbers_carried_entries_in_order() {
+        let mut log = RoundLog::with_chunk_entries(4);
+        log.reset_with_carry(&[entry(5, 50, 900), entry(7, 70, 901), entry(5, 51, 905)]);
+        let base = log.rebase_epoch();
+        assert_eq!(base, 3);
+        let ts: Vec<i32> = log.entries().iter().map(|e| e.ts).collect();
+        assert_eq!(ts, vec![1, 2, 3], "position-order renumbering");
+        let vals: Vec<i32> = log.entries().iter().map(|e| e.val).collect();
+        assert_eq!(vals, vec![50, 70, 51], "order and values untouched");
+        // Empty log rebases to base 0.
+        log.reset_with_carry(&[]);
+        assert_eq!(log.rebase_epoch(), 0);
+    }
+
+    #[test]
+    fn extend_carried_joins_the_carried_prefix() {
+        let mut log = RoundLog::with_chunk_entries(4);
+        log.reset_with_carry(&[entry(1, 10, 1)]);
+        log.extend_carried(&[entry(2, 20, 2), entry(3, 30, 3)]);
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.raw_appended(), 3);
+        // The whole prefix survives a favor-GPU truncation.
+        log.append(&[entry(9, 90, 9)]);
+        log.truncate_to_carried();
+        assert_eq!(log.entries().len(), 3);
+        assert_eq!(log.entries()[2], entry(3, 30, 3));
     }
 
     #[test]

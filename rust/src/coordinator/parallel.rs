@@ -149,6 +149,16 @@ impl<C: CpuDriver + Send> CpuDriver for ParallelCpuDriver<C> {
     fn rollback(&mut self) {
         self.workers[0].rollback();
     }
+
+    fn epoch_reset(&mut self, base: i64) {
+        // Every worker owns its own guest TM and commit clock; each
+        // restarts at the same base, so all next-epoch timestamps exceed
+        // every renumbered carried entry.  Per-address ordering is per
+        // worker (disjoint partitions), so the shared rebase is sound.
+        for w in &mut self.workers {
+            w.epoch_reset(base);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -73,6 +73,14 @@ pub trait CpuDriver {
     fn rollback(&mut self) {
         self.stmr().restore_snapshot();
     }
+
+    /// Round-boundary epoch reset: the engine calls this after every
+    /// merge, once all outstanding log entries have been renumbered into
+    /// `1..=base`.  Drivers owning a guest TM forward to
+    /// [`crate::stm::GuestTm::epoch_reset`] so the shared commit clock
+    /// restarts and never exhausts the i32 timestamp range the device
+    /// kernels use.  The default is a no-op (legacy grow-forever clock).
+    fn epoch_reset(&mut self, _base: i64) {}
 }
 
 impl CpuDriver for Box<dyn CpuDriver> {
@@ -95,6 +103,10 @@ impl CpuDriver for Box<dyn CpuDriver> {
     fn rollback(&mut self) {
         (**self).rollback()
     }
+
+    fn epoch_reset(&mut self, base: i64) {
+        (**self).epoch_reset(base)
+    }
 }
 
 impl CpuDriver for Box<dyn CpuDriver + Send> {
@@ -116,6 +128,10 @@ impl CpuDriver for Box<dyn CpuDriver + Send> {
 
     fn rollback(&mut self) {
         (**self).rollback()
+    }
+
+    fn epoch_reset(&mut self, base: i64) {
+        (**self).epoch_reset(base)
     }
 }
 
@@ -354,11 +370,16 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
     }
 
     /// Change the log-chunk size (ablation benches). Must be called
-    /// between rounds; resets any un-drained log state (compaction and
-    /// signature settings are preserved).
+    /// between rounds; the log is rebuilt at the new chunking (compaction
+    /// and signature settings are preserved) and re-seeded with its
+    /// carried prefix — commits already counted on the CPU (the §IV-D
+    /// validation-window carry, [`Self::inject_external`] entries) still
+    /// ship next round instead of being silently dropped.
     pub fn set_chunk_entries(&mut self, n: usize) {
         self.cfg.chunk_entries = n;
+        let carried: Vec<WriteEntry> = self.log.entries().to_vec();
         self.log = Self::make_log(&self.cfg, &self.device);
+        self.log.reset_with_carry(&carried);
         self.carry.clear();
     }
 
@@ -398,6 +419,19 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
         let r = self.run_round();
         self.cfg = saved;
         r
+    }
+
+    /// Enqueue externally-committed CPU write entries (the
+    /// [`crate::session::Session::txn`] entry point).  The guest TM has
+    /// already applied them to the CPU STMR; they ship to the device at
+    /// the start of the next round as *carried* commits — they happened
+    /// before that round began, so, exactly like the §IV-D
+    /// validation-window carry, they survive a favor-GPU round abort.
+    /// Instantaneous in virtual time.
+    pub fn inject_external(&mut self, entries: &[WriteEntry], commits: u64, attempts: u64) {
+        self.log.extend_carried(entries);
+        self.stats.cpu_commits += commits;
+        self.stats.cpu_attempts += attempts;
     }
 
     /// Merge-phase transfer ranges: the GPU write-set rounded out to the
@@ -742,6 +776,15 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
             self.log.reset_with_carry(&self.carry);
         }
         self.carry.clear();
+        // Epoch reset (§IV-B clock): the log now holds exactly the next
+        // round's carried prefix.  Renumber it into 1..=k, restart the
+        // shared commit clock at k, and clear the device freshness array
+        // — timestamps are only ever compared within one round, so this
+        // preserves every validate/apply outcome bit for bit while
+        // keeping the clock inside the i32 range forever.
+        let base = self.log.rebase_epoch();
+        self.cpu.epoch_reset(base);
+        self.device.epoch_reset();
         rs.t_end = round_end;
         self.t = round_end;
         self.stats.absorb(&rs);

@@ -73,6 +73,9 @@ pub struct GpuDevice {
     stmr: Vec<i32>,
     shadow: Vec<i32>,
     ts_arr: Vec<i32>,
+    /// Whether `ts_arr` holds any non-zero freshness stamps (skips the
+    /// epoch-reset memset on rounds that validated nothing).
+    ts_dirty: bool,
     rs_bmp: Bitmap,
     ws_bmp: Bitmap,
     lock_shift: u32,
@@ -89,6 +92,7 @@ impl GpuDevice {
             stmr: vec![0; n_words],
             shadow: vec![0; n_words],
             ts_arr: vec![0; n_words],
+            ts_dirty: false,
             rs_bmp: Bitmap::new(n_words, bmp_shift),
             ws_bmp: Bitmap::new(n_words, bmp_shift),
             lock_shift: 0,
@@ -175,9 +179,21 @@ impl GpuDevice {
         }
     }
 
+    /// Round-boundary epoch reset: clear the freshness timestamp array so
+    /// next round's renumbered CPU timestamps (restarting near 1) still
+    /// compare fresh.  Pairs with [`crate::stm::GlobalClock::epoch_reset`];
+    /// the engines call both after every merge.
+    pub fn epoch_reset(&mut self) {
+        if self.ts_dirty {
+            self.ts_arr.fill(0);
+            self.ts_dirty = false;
+        }
+    }
+
     /// Validate-and-apply one CPU write-log chunk; returns conflict count.
     pub fn validate_chunk(&mut self, chunk: &LogChunk) -> Result<u32> {
         self.activations += 1;
+        self.ts_dirty = true;
         match &self.backend {
             Backend::Native => Ok(native::validate_step(
                 &mut self.stmr,
@@ -295,6 +311,7 @@ impl GpuDevice {
     ///
     /// `cpu_logs` must be the full set of chunks the CPU shipped this round.
     pub fn rollback_with_logs(&mut self, cpu_logs: &[LogChunk]) {
+        self.ts_dirty = true;
         std::mem::swap(&mut self.stmr, &mut self.shadow);
         // Freshness array: the swap discarded validation-phase applies on
         // the working copy; replay brings both the values and the ts_arr

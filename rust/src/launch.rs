@@ -1,9 +1,13 @@
-//! Launcher helpers: assemble engines from a [`SystemConfig`].
+//! Launcher internals: assemble engines from a [`SystemConfig`].
 //!
-//! Used by the `shetm` binary, the examples and the benches so that every
-//! entry point builds the platform the same way: pick the guest TM, pick
-//! the device backend (PJRT artifacts when available, native mirrors
-//! otherwise), wire the workload drivers into a [`RoundEngine`].
+//! **Entry points construct through [`crate::session::Hetm`] now** — one
+//! fluent builder over both engines, with the whole knob cross-product
+//! validated up front.  This module keeps the shared plumbing the builder
+//! runs on (guest/backend/config/shard-map derivation) plus the legacy
+//! `build_*` engine constructors as deprecated shims: they remain the
+//! independent reference the Session-vs-legacy golden equivalence suite
+//! (`rust/tests/session_api.rs`) compares against, and they still return
+//! the concrete engine types for code that needs them.
 
 use std::sync::Arc;
 
@@ -96,6 +100,7 @@ pub fn cost_model(cfg: &SystemConfig) -> CostModel {
 /// `cpu_spec` and `gpu_spec` carry the per-device partitions / conflict
 /// injection; `gpu_batch` must match the compiled artifact's `b` when the
 /// PJRT backend is selected.
+#[deprecated(note = "construct through `session::Hetm::builder().synth(...)` instead")]
 pub fn build_synth_engine(
     cfg: &SystemConfig,
     variant: Variant,
@@ -129,6 +134,7 @@ pub fn build_synth_engine(
 }
 
 /// Assemble a memcached engine (paper §V-D).
+#[deprecated(note = "construct through `session::Hetm::builder().memcached(...)` instead")]
 pub fn build_memcached_engine(
     cfg: &SystemConfig,
     variant: Variant,
@@ -174,8 +180,14 @@ pub fn build_memcached_engine(
 /// panicking in `ShardMap::new`.
 pub fn shard_map(cfg: &SystemConfig, n_words: usize) -> ShardMap {
     let n_gpus = cfg.n_gpus.clamp(1, n_words.max(1));
+    let fits = |bits: u32| {
+        1usize
+            .checked_shl(bits)
+            .and_then(|block| n_gpus.checked_mul(block))
+            .is_some_and(|span| span <= n_words)
+    };
     let mut bits = cfg.shard_bits;
-    while bits > 0 && n_words < n_gpus << bits {
+    while bits > 0 && !fits(bits) {
         bits -= 1;
     }
     ShardMap::new(n_words, n_gpus, bits)
@@ -190,6 +202,7 @@ pub fn shard_map(cfg: &SystemConfig, n_words: usize) -> ShardMap {
 /// `cluster.n_gpus = 1` construction is element-for-element the same as
 /// [`build_synth_engine`] — same seeds, same specs — so the run is
 /// bit-identical to the single-device engine.
+#[deprecated(note = "construct through `session::Hetm::builder().synth(...).gpus(n)` instead")]
 pub fn build_synth_cluster_engine(
     cfg: &SystemConfig,
     variant: Variant,
@@ -245,6 +258,7 @@ pub fn build_synth_cluster_engine(
 /// shard-aware request routing (arrivals go to the device owning their
 /// cache set). Bit-identical to [`build_memcached_engine`] at
 /// `cluster.n_gpus = 1`.
+#[deprecated(note = "construct through `session::Hetm::builder().memcached(...).gpus(n)` instead")]
 pub fn build_memcached_cluster_engine(
     cfg: &SystemConfig,
     variant: Variant,
@@ -307,19 +321,36 @@ pub type WorkloadClusterEngine =
 
 /// Shared workload-engine scaffolding: initialized STMR + guest TM +
 /// drivers built through the [`Workload`] trait for `map`'s shard count.
-fn workload_parts(
+///
+/// Returns the STMR and guest-TM handles alongside the drivers so the
+/// [`crate::session::Session`] facade can offer its `txn` entry point
+/// over the same shared region and commit clock the CPU driver uses.
+/// `epoch_limit` overrides the commit clock's per-round tick budget
+/// (`None` = the default `i32::MAX`; tests force small epochs).
+#[allow(clippy::type_complexity)]
+pub(crate) fn workload_parts_full(
     cfg: &SystemConfig,
     w: &dyn Workload,
     map: &ShardMap,
     gpu_batch: usize,
-) -> (Box<dyn CpuDriver + Send>, Vec<Box<dyn GpuDriver + Send>>) {
+    epoch_limit: Option<i32>,
+) -> (
+    Arc<SharedStmr>,
+    Arc<dyn GuestTm>,
+    Box<dyn CpuDriver + Send>,
+    Vec<Box<dyn GpuDriver + Send>>,
+) {
     let n = w.n_words();
     let stmr = Arc::new(SharedStmr::new(n));
     let mut words = vec![0; n];
     w.init_words(&mut words);
     stmr.install_range(0, &words);
-    let tm = build_guest(cfg.guest, Arc::new(GlobalClock::new()));
-    let (cpu, gpus) = w.build(stmr, tm, map, gpu_batch, cfg);
+    let clock = Arc::new(match epoch_limit {
+        Some(l) => GlobalClock::with_epoch_limit(l),
+        None => GlobalClock::new(),
+    });
+    let tm = build_guest(cfg.guest, clock);
+    let (cpu, gpus) = w.build(stmr.clone(), tm.clone(), map, gpu_batch, cfg);
     assert_eq!(
         gpus.len(),
         map.n_shards(),
@@ -328,10 +359,11 @@ fn workload_parts(
         gpus.len(),
         map.n_shards()
     );
-    (cpu, gpus)
+    (stmr, tm, cpu, gpus)
 }
 
 /// Assemble a single-device engine for any [`Workload`].
+#[deprecated(note = "construct through `session::Hetm::builder().workload(...)` instead")]
 pub fn build_workload_engine(
     cfg: &SystemConfig,
     variant: Variant,
@@ -340,7 +372,7 @@ pub fn build_workload_engine(
     backend: Backend,
 ) -> WorkloadEngine {
     let map = ShardMap::solo(w.n_words());
-    let (cpu, mut gpus) = workload_parts(cfg, w, &map, gpu_batch);
+    let (_, _, cpu, mut gpus) = workload_parts_full(cfg, w, &map, gpu_batch, None);
     let gpu = gpus.remove(0);
     let device = GpuDevice::new(w.n_words(), cfg.bmp_shift, backend);
     let mut engine =
@@ -353,6 +385,7 @@ pub fn build_workload_engine(
 /// devices (bit-identical to [`build_workload_engine`] at `n_gpus = 1`:
 /// a one-shard map makes every rehoming the identity and the cluster
 /// machinery provably inert).
+#[deprecated(note = "construct through `session::Hetm::builder().workload(...).gpus(n)` instead")]
 pub fn build_workload_cluster_engine(
     cfg: &SystemConfig,
     variant: Variant,
@@ -361,7 +394,7 @@ pub fn build_workload_cluster_engine(
     backend: Backend,
 ) -> WorkloadClusterEngine {
     let map = shard_map(cfg, w.n_words());
-    let (cpu, gpus) = workload_parts(cfg, w, &map, gpu_batch);
+    let (_, _, cpu, gpus) = workload_parts_full(cfg, w, &map, gpu_batch, None);
     let devices = (0..map.n_shards())
         .map(|_| GpuDevice::new(w.n_words(), cfg.bmp_shift, backend.clone()))
         .collect();
@@ -425,87 +458,12 @@ pub fn build_parallel_synth_cpu(
     ParallelCpuDriver::new(workers)
 }
 
-/// A synth engine whose CPU slice runs on real worker threads.
-pub type ParallelSynthEngine = RoundEngine<ParallelCpuDriver<SynthCpu>, SynthGpu>;
-
-/// A synth cluster engine whose CPU slice runs on real worker threads.
-pub type ParallelSynthClusterEngine = ClusterEngine<ParallelCpuDriver<SynthCpu>, SynthGpu>;
-
-/// [`build_synth_engine`] with the CPU side on real worker threads
-/// (`cpu.parallel`): the single rate-modeled driver is replaced by a
-/// [`ParallelCpuDriver`] over `cfg.cpu_threads` disjoint-partition
-/// workers ([`build_parallel_synth_cpu`]).  The trace differs from the
-/// single-driver engine (per-worker clocks and seeds) but is fully
-/// deterministic, and the aggregate CPU rate is identical.
-pub fn build_parallel_synth_engine(
-    cfg: &SystemConfig,
-    variant: Variant,
-    cpu_spec: SynthSpec,
-    gpu_spec: SynthSpec,
-    gpu_batch: usize,
-    backend: Backend,
-) -> ParallelSynthEngine {
-    let cpu = build_parallel_synth_cpu(cfg, &cpu_spec);
-    let gpu = SynthGpu::new(
-        gpu_spec,
-        gpu_batch,
-        cfg.gpu_kernel_latency_s,
-        cfg.gpu_txn_s,
-        cfg.seed ^ 0x9E37_79B9,
-    );
-    let device = GpuDevice::new(cfg.n_words, cfg.bmp_shift, backend);
-    let mut engine =
-        RoundEngine::new(engine_config(cfg, variant), cost_model(cfg), device, cpu, gpu);
-    engine.align_replicas();
-    engine
-}
-
-/// [`build_synth_cluster_engine`] with the CPU side on real worker
-/// threads (`cpu.parallel`); composes with `cluster.threads`, so both
-/// sides of the platform exploit real parallelism.  Deterministic at any
-/// `cluster.threads` setting, like every engine configuration.
-pub fn build_parallel_synth_cluster_engine(
-    cfg: &SystemConfig,
-    variant: Variant,
-    cpu_spec: SynthSpec,
-    gpu_spec: SynthSpec,
-    gpu_batch: usize,
-    backend: Backend,
-) -> ParallelSynthClusterEngine {
-    let map = shard_map(cfg, cfg.n_words);
-    let cpu = build_parallel_synth_cpu(cfg, &cpu_spec);
-    let mut devices = Vec::with_capacity(map.n_shards());
-    let mut gpus = Vec::with_capacity(map.n_shards());
-    for d in 0..map.n_shards() {
-        let mut spec = gpu_spec.clone().homed(map.clone(), d);
-        if map.n_shards() > 1 {
-            spec = spec.with_cross_shard(cfg.cross_shard_prob);
-        }
-        let seed = cfg.seed ^ 0x9E37_79B9 ^ (d as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        gpus.push(SynthGpu::new(
-            spec,
-            gpu_batch,
-            cfg.gpu_kernel_latency_s,
-            cfg.gpu_txn_s,
-            seed,
-        ));
-        devices.push(GpuDevice::new(cfg.n_words, cfg.bmp_shift, backend.clone()));
-    }
-    let mut engine = ClusterEngine::new(
-        engine_config(cfg, variant),
-        cost_model(cfg),
-        map,
-        devices,
-        cpu,
-        gpus,
-    );
-    engine.set_threads(cfg.cluster_threads);
-    engine.align_replicas();
-    engine
-}
-
 #[cfg(test)]
 mod tests {
+    // The deprecated engine constructors stay under direct test: they are
+    // the independent reference the Session golden suite compares against.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::config::PolicyKind;
 
@@ -675,36 +633,9 @@ mod tests {
         assert!(e.stats.cpu_commits > 0);
     }
 
-    #[test]
-    fn parallel_synth_cluster_engine_is_thread_count_invariant() {
-        // cpu.parallel composes with cluster.threads: the fully threaded
-        // platform (CPU workers + device lanes) must be bit-identical to
-        // the sequential schedule of the same configuration.
-        let run = |cluster_threads: usize| {
-            let mut c = cfg();
-            c.cpu_threads = 4;
-            c.n_gpus = 2;
-            c.cluster_threads = cluster_threads;
-            let n = c.n_words;
-            let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
-            let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
-            let mut e = build_parallel_synth_cluster_engine(
-                &c,
-                Variant::Optimized,
-                cpu_spec,
-                gpu_spec,
-                256,
-                Backend::Native,
-            );
-            e.run_rounds(2).unwrap();
-            e.drain().unwrap();
-            (format!("{:?}", e.stats), e.cpu.stmr().snapshot())
-        };
-        let seq = run(1);
-        let thr = run(2);
-        assert_eq!(seq.0, thr.0, "stats diverged");
-        assert_eq!(seq.1, thr.1, "state diverged");
-    }
+    // (The cpu.parallel × cluster.threads invariance test moved to
+    // `session::tests`: the parallel engines are built through the
+    // Session builder now.)
 
     #[test]
     fn shard_map_clamps_bits_for_tiny_regions() {

@@ -8,9 +8,10 @@
 //! while the simulated accelerator's batch compute runs AOT-compiled
 //! jax/Pallas kernels through PJRT.
 //!
-//! Start with [`coordinator::RoundEngine`] assembled through [`launch`]
-//! (see `examples/quickstart.rs`) or the `shetm` binary
-//! (`rust/src/main.rs`).
+//! Start with [`session::Hetm`] — the fluent builder returning a
+//! [`session::Session`], one facade over both engines with a
+//! paper-faithful `txn` entry point (see `examples/quickstart.rs`) — or
+//! the `shetm` binary (`rust/src/main.rs`).
 //!
 //! Layout (see DESIGN.md for the full inventory):
 //! - [`stm`] — CPU guest TMs (TinySTM-like, NOrec-like, HTM emulation)
@@ -24,6 +25,8 @@
 //! - [`apps`] — the [`apps::Workload`] trait + application suite
 //!   (synthetic, memcached, bank, kmeans, zipf-kv), each with a built-in
 //!   correctness oracle
+//! - [`session`] — the public front door: the [`session::Hetm`] builder
+//!   and the [`session::Session`] facade over both engines
 //! - [`config`] — dependency-free config system
 //! - [`util`] — RNG / Zipf / stats / property-test / bench harnesses
 //!
@@ -41,6 +44,9 @@ pub mod config;
 pub mod coordinator;
 pub mod gpu;
 pub mod runtime;
+pub mod session;
 pub mod stm;
 pub mod util;
 pub mod launch;
+
+pub use session::{Hetm, Session};

@@ -27,15 +27,15 @@ use anyhow::{bail, Context, Result};
 
 use shetm::apps::memcached::McConfig;
 use shetm::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
-use shetm::apps::Workload;
 use shetm::cluster::ClusterStats;
 use shetm::config::{Raw, SystemConfig};
 use shetm::coordinator::baseline;
-use shetm::coordinator::round::{CpuDriver, Variant};
+use shetm::coordinator::round::Variant;
 use shetm::coordinator::RunStats;
 use shetm::gpu::{Backend, GpuDevice};
 use shetm::launch;
 use shetm::runtime::ArtifactStore;
+use shetm::session::Hetm;
 use shetm::stm::{GlobalClock, SharedStmr};
 
 struct Cli {
@@ -247,65 +247,29 @@ fn cmd_synth(cli: &Cli) -> Result<()> {
     // --set to explore other shapes.
     let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
     let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
-    let backend = launch::build_backend(&cfg, "prstm_r4_g0", "validate_synth_g0", "")?;
-    if matches!(backend, Backend::Pjrt { .. }) && (n != 1 << 18 || cfg.bmp_shift != 0) {
+    if !cfg.artifacts_dir.is_empty() && (n != 1 << 18 || cfg.bmp_shift != 0) {
         bail!("PJRT artifacts are compiled for stmr.n_words=262144, bmp_shift=0");
     }
-    if cfg.n_gpus > 1 {
-        if matches!(backend, Backend::Pjrt { .. }) {
-            bail!("cluster mode (--gpus > 1) supports the native backend only");
-        }
-        let label = format!(
+    let mut session = Hetm::from_config(&cfg)
+        .variant(variant(cli))
+        .synth(cpu_spec, gpu_spec)
+        .build()?;
+    session.run_rounds(cli.rounds)?;
+    let label = if session.is_cluster() {
+        format!(
             "synthetic W1-100% on {} sharded GPUs{}",
-            cfg.n_gpus,
+            session.n_gpus(),
             if cfg.cpu_parallel { ", parallel CPU" } else { "" }
-        );
-        if cfg.cpu_parallel {
-            // cpu.parallel: the CPU slice fans out over cpu.threads real
-            // worker threads (composes with --threads for the lanes).
-            let mut engine = launch::build_parallel_synth_cluster_engine(
-                &cfg,
-                variant(cli),
-                cpu_spec,
-                gpu_spec,
-                1024,
-                backend,
-            );
-            engine.run_rounds(cli.rounds)?;
-            print_stats(&label, &engine.stats);
-            print_cluster_stats(&engine.stats, &engine.cluster);
-        } else {
-            let mut engine = launch::build_synth_cluster_engine(
-                &cfg,
-                variant(cli),
-                cpu_spec,
-                gpu_spec,
-                1024,
-                backend,
-            );
-            engine.run_rounds(cli.rounds)?;
-            print_stats(&label, &engine.stats);
-            print_cluster_stats(&engine.stats, &engine.cluster);
-        }
-        return Ok(());
+        )
+    } else if cfg.cpu_parallel {
+        "synthetic W1-100%, partitioned, parallel CPU".to_string()
+    } else {
+        "synthetic W1-100%, partitioned".to_string()
+    };
+    print_stats(&label, session.stats());
+    if let Some(c) = session.cluster() {
+        print_cluster_stats(session.stats(), c);
     }
-    if cfg.cpu_parallel {
-        let mut engine = launch::build_parallel_synth_engine(
-            &cfg,
-            variant(cli),
-            cpu_spec,
-            gpu_spec,
-            1024,
-            backend,
-        );
-        engine.run_rounds(cli.rounds)?;
-        print_stats("synthetic W1-100%, partitioned, parallel CPU", &engine.stats);
-        return Ok(());
-    }
-    let mut engine =
-        launch::build_synth_engine(&cfg, variant(cli), cpu_spec, gpu_spec, 1024, backend);
-    engine.run_rounds(cli.rounds)?;
-    print_stats("synthetic W1-100%, partitioned", &engine.stats);
     Ok(())
 }
 
@@ -317,27 +281,23 @@ fn cmd_memcached(cli: &Cli) -> Result<()> {
         .context("memcached.n_sets")?;
     let mut mc = McConfig::new(n_sets);
     mc.steal_shift = cli.raw.get_or("memcached.steal", 0.0)?;
-    let backend = launch::build_backend(&cfg, "prstm_r4_g0", "validate_mc_g0", "memcached")?;
-    if matches!(backend, Backend::Pjrt { .. }) && (n_sets != 1 << 15 || cfg.bmp_shift != 0) {
+    if !cfg.artifacts_dir.is_empty() && (n_sets != 1 << 15 || cfg.bmp_shift != 0) {
         bail!("PJRT memcached artifact is compiled for memcached.n_sets=32768, bmp_shift=0");
     }
-    if cfg.n_gpus > 1 {
-        if matches!(backend, Backend::Pjrt { .. }) {
-            bail!("cluster mode (--gpus > 1) supports the native backend only");
-        }
-        let mut engine =
-            launch::build_memcached_cluster_engine(&cfg, variant(cli), mc, 1024, backend);
-        engine.run_rounds(cli.rounds)?;
-        let label = format!("memcachedGPU on {} sharded GPUs", cfg.n_gpus);
-        print_stats(&label, &engine.stats);
-        print_cluster_stats(&engine.stats, &engine.cluster);
-        return Ok(());
+    let mut session = Hetm::from_config(&cfg)
+        .variant(variant(cli))
+        .memcached(mc)
+        .build()?;
+    session.run_rounds(cli.rounds)?;
+    let label = if session.is_cluster() {
+        format!("memcachedGPU on {} sharded GPUs", session.n_gpus())
+    } else {
+        "memcachedGPU on SHeTM".to_string()
+    };
+    print_stats(&label, session.stats());
+    if let Some(c) = session.cluster() {
+        print_cluster_stats(session.stats(), c);
     }
-    let mut engine = launch::build_memcached_engine(&cfg, variant(cli), mc, 1024, backend);
-    engine.run_rounds(cli.rounds)?;
-    print_stats("memcachedGPU on SHeTM", &engine.stats);
-    let world = &engine.cpu;
-    let _ = world;
     Ok(())
 }
 
@@ -353,37 +313,22 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         .workload
         .clone()
         .unwrap_or_else(|| cfg.workload.clone());
-    let w = shetm::apps::workload::from_raw(&name, &cli.raw, &cfg)?;
     let label = format!("workload {name} on {} device(s)", cfg.n_gpus.max(1));
-    if cfg.n_gpus > 1 {
-        let mut engine = launch::build_workload_cluster_engine(
-            &cfg,
-            variant(cli),
-            w.as_ref(),
-            1024,
-            Backend::Native,
-        );
-        engine.run_rounds(cli.rounds)?;
-        engine.drain()?;
-        print_stats(&label, &engine.stats);
-        print_cluster_stats(&engine.stats, &engine.cluster);
-        w.check_invariants(engine.cpu.stmr())
-            .context("correctness oracle FAILED")?;
-    } else {
-        let mut engine = launch::build_workload_engine(
-            &cfg,
-            variant(cli),
-            w.as_ref(),
-            1024,
-            Backend::Native,
-        );
-        engine.run_rounds(cli.rounds)?;
-        engine.drain()?;
-        print_stats(&label, &engine.stats);
-        w.check_invariants(engine.cpu.stmr())
-            .context("correctness oracle FAILED")?;
+    let mut session = Hetm::from_config(&cfg)
+        .variant(variant(cli))
+        .workload_named(&name)
+        .app_config(cli.raw.clone())
+        .build()?;
+    session.run_rounds(cli.rounds)?;
+    session.drain()?;
+    print_stats(&label, session.stats());
+    if let Some(c) = session.cluster() {
+        print_cluster_stats(session.stats(), c);
     }
-    let summary = w.stats_summary();
+    session
+        .check_invariants()
+        .context("correctness oracle FAILED")?;
+    let summary = session.stats_summary();
     if !summary.is_empty() {
         println!("  {summary}");
     }
@@ -456,7 +401,8 @@ OPTIONS:
   --rounds N        synchronization rounds (default 50)
   --gpus N          shard the STMR across N simulated devices (cluster)
   --threads N       drive the N per-device pipelines on N OS threads
-                    (wall-clock only: results are bit-identical)
+                    (wall-clock only: results are bit-identical; N > 1
+                    selects the cluster engine even at --gpus 1)
   --basic           basic algorithm variant (Fig. 1a)
   --pjrt            use PJRT artifacts from ./artifacts
 

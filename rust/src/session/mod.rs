@@ -1,0 +1,1196 @@
+//! The programmer-facing front door: [`Hetm`] (a fluent builder) and
+//! [`Session`] (one facade over both engines).
+//!
+//! The paper's headline contribution is an *abstraction*: "the illusion of
+//! a single memory region, shared among the CPUs and the GPU(s), with
+//! support for atomic transactions."  This module is that abstraction's
+//! API surface.  Instead of picking one of the `launch::build_*`
+//! constructors and programming against two engine types, embedders write:
+//!
+//! ```text
+//! let mut session = Hetm::builder()
+//!     .words(1 << 20)
+//!     .gpus(4)
+//!     .threads(4)
+//!     .guest(GuestKind::Tiny)
+//!     .policy(PolicyKind::FavorCpu)
+//!     .workload(Box::new(my_workload))
+//!     .build()?;
+//! session.run_rounds(50)?;
+//! session.check_invariants()?;
+//! ```
+//!
+//! The builder validates the full knob cross-product up front with typed
+//! [`BuildError`]s (zero threads, zero devices, shard-layout mismatches,
+//! `cpu.parallel` on a non-synthetic workload, PJRT in cluster mode, the
+//! `early_interval_frac` domain — every check that used to live scattered
+//! across `main.rs` and the config parser, in one place) and decides the
+//! engine shape itself: one device → [`RoundEngine`]; several devices, or
+//! `threads > 1`, or an explicit [`Hetm::force_cluster`] →
+//! [`ClusterEngine`].  Construction is **bit-identical** to the legacy
+//! `launch::build_*` paths on the same configuration — enforced by the
+//! golden equivalence suite in `rust/tests/session_api.rs` — so the
+//! `n_gpus = 1` ≡ `RoundEngine` and threaded ≡ sequential guarantees
+//! carry over unchanged.
+//!
+//! [`Session::txn`] is the paper-faithful transaction entry point: a
+//! CPU-side atomic block executed through the session's guest TM against
+//! the shared region, whose write-set ships to the device replicas with
+//! the next synchronization round — the single-shared-memory illusion
+//! without constructing drivers by hand.
+//!
+//! # Example
+//!
+//! ```
+//! use shetm::config::{Raw, SystemConfig};
+//! use shetm::session::Hetm;
+//!
+//! let mut cfg = SystemConfig::from_raw(&Raw::new()).unwrap();
+//! cfg.n_words = 1 << 14; // small region so the doctest runs fast
+//! cfg.cpu_txn_s = 2e-6;
+//! cfg.period_s = 0.004;
+//!
+//! let mut session = Hetm::from_config(&cfg).build().unwrap();
+//! session.run_rounds(2).unwrap();
+//! assert!(session.stats().cpu_commits > 0);
+//!
+//! // The single-shared-memory illusion: an atomic CPU-side transaction
+//! // through the session itself...
+//! let r = session
+//!     .txn(|tx| {
+//!         let v = tx.read(0)?;
+//!         tx.write(0, v + 1)
+//!     })
+//!     .unwrap();
+//! assert!(r.ts > 0);
+//!
+//! // ...whose write lands on the device replica with the next round.
+//! session.run_round().unwrap();
+//! session.drain().unwrap();
+//! assert_eq!(session.stmr().load(0), session.device_stmr(0)[0]);
+//! session.check_invariants().unwrap();
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::apps::memcached::McConfig;
+use crate::apps::synth::{SynthGpu, SynthSpec};
+use crate::apps::workload::{from_raw, gpu_seed, MemcachedWorkload, SynthWorkload, Workload};
+use crate::cluster::{ClusterEngine, ClusterStats, ShardMap};
+use crate::config::{PolicyKind, Raw, SystemConfig};
+use crate::coordinator::round::{CpuDriver, GpuDriver, RoundEngine, Variant};
+use crate::coordinator::stats::{RoundStats, RunStats};
+use crate::gpu::{Backend, GpuDevice};
+use crate::launch::{self, WorkloadClusterEngine, WorkloadEngine};
+use crate::stm::{Abort, GuestTm, SharedStmr, TxOps, TxnResult};
+
+/// A misconfiguration caught by [`Hetm::build`].  Every knob-cross-product
+/// rule lives here, as a typed error instead of a scattered panic or an
+/// ad-hoc `bail!` at some call-site.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BuildError {
+    /// `words` was 0: the STMR must hold at least one word.
+    ZeroWords,
+    /// `cpu_threads` was 0: the CPU side models at least one worker.
+    ZeroCpuThreads,
+    /// `gpus` was 0: the platform needs at least one device.
+    ZeroGpus,
+    /// `threads` was 0 (the `--threads 0` class of error): the cluster
+    /// pipelines need at least one OS thread (1 = sequential).
+    ZeroThreads,
+    /// `gpu_batch` was 0: device kernels execute whole batches.
+    ZeroGpuBatch,
+    /// The execution period must be finite and positive (seconds).
+    InvalidPeriod(f64),
+    /// `early_interval_frac` outside `(0, 1]` (the `hetm.early_interval_frac`
+    /// class of error): `1 / frac` must be a sane early-validation count.
+    InvalidEarlyInterval(f64),
+    /// The starvation-guard policy with a zero abort limit would never
+    /// disengage its read-only mode meaningfully.
+    ZeroStarvationLimit,
+    /// More devices requested than STMR words: at least one word per
+    /// device is the hard floor.
+    GpusExceedWords {
+        /// Devices requested.
+        gpus: usize,
+        /// STMR words available.
+        words: usize,
+    },
+    /// An explicitly-set `shard_bits` does not fit: `gpus << shard_bits`
+    /// exceeds the region, so some device would own no block.  (When
+    /// `shard_bits` is left at its default the builder clamps instead,
+    /// matching the legacy CLI behavior.)
+    ShardLayout {
+        /// Devices requested.
+        gpus: usize,
+        /// Explicit ownership-block shift.
+        shard_bits: u32,
+        /// STMR words available.
+        words: usize,
+    },
+    /// `parallel_cpu` is only implemented for the synthetic workload
+    /// (its disjoint-partition workers satisfy the determinism contract
+    /// of [`crate::coordinator::ParallelCpuDriver`]).
+    ParallelCpuUnsupported {
+        /// The offending workload's name.
+        workload: String,
+    },
+    /// The PJRT backend drives a single device only (cluster mode is
+    /// native-backend).
+    PjrtCluster,
+    /// No PJRT artifacts exist for this workload (only the paper's synth
+    /// and memcached kernels were compiled).
+    PjrtWorkload {
+        /// The offending workload's name.
+        workload: String,
+    },
+    /// The artifact directory was configured but could not be loaded.
+    Artifacts(String),
+    /// Workload resolution failed (unknown name or bad app section).
+    Workload(String),
+    /// `clock_epoch_limit` applies to the shared commit clock; the
+    /// parallel CPU driver owns per-worker clocks instead.
+    EpochLimitUnsupported,
+}
+
+impl std::fmt::Display for BuildError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BuildError::ZeroWords => write!(f, "stmr.n_words must be at least 1"),
+            BuildError::ZeroCpuThreads => write!(f, "cpu.threads must be at least 1"),
+            BuildError::ZeroGpus => write!(f, "cluster.n_gpus must be at least 1"),
+            BuildError::ZeroThreads => {
+                write!(f, "cluster.threads must be at least 1 (1 = sequential)")
+            }
+            BuildError::ZeroGpuBatch => write!(f, "gpu_batch must be at least 1"),
+            BuildError::InvalidPeriod(p) => {
+                write!(f, "hetm.period must be a finite positive duration, got {p}")
+            }
+            BuildError::InvalidEarlyInterval(x) => write!(
+                f,
+                "hetm.early_interval_frac must be a finite fraction in (0, 1], got {x}"
+            ),
+            BuildError::ZeroStarvationLimit => write!(
+                f,
+                "hetm.gpu_starvation_limit must be at least 1 under the \
+                 starvation-guard policy"
+            ),
+            BuildError::GpusExceedWords { gpus, words } => write!(
+                f,
+                "{gpus} devices cannot shard a {words}-word STMR (one word \
+                 per device is the hard floor)"
+            ),
+            BuildError::ShardLayout {
+                gpus,
+                shard_bits,
+                words,
+            } => write!(
+                f,
+                "shard layout does not fit: {gpus} devices x 2^{shard_bits}-word \
+                 ownership blocks exceed the {words}-word STMR; lower \
+                 shard_bits or leave it default to auto-clamp"
+            ),
+            BuildError::ParallelCpuUnsupported { workload } => write!(
+                f,
+                "cpu.parallel is only supported for the synthetic workload \
+                 (got {workload:?}): other drivers do not partition into \
+                 deterministic per-thread workers"
+            ),
+            BuildError::PjrtCluster => {
+                write!(f, "cluster mode (gpus > 1) supports the native backend only")
+            }
+            BuildError::PjrtWorkload { workload } => write!(
+                f,
+                "no PJRT artifacts exist for workload {workload:?} (synth and \
+                 memcached only); unset runtime.artifacts or pick Backend::Native"
+            ),
+            BuildError::Artifacts(msg) => write!(f, "artifact backend unavailable: {msg}"),
+            BuildError::Workload(msg) => write!(f, "workload resolution failed: {msg}"),
+            BuildError::EpochLimitUnsupported => write!(
+                f,
+                "clock_epoch_limit applies to the shared commit clock; \
+                 cpu.parallel workers own per-worker clocks"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for BuildError {}
+
+/// What the session will run: either a named/boxed [`Workload`] or one of
+/// the paper applications with caller-supplied parameters.
+enum AppChoice {
+    /// Resolve by name through [`from_raw`] (uses the per-app config
+    /// sections of [`Hetm::app_config`]).
+    Named(String),
+    /// A caller-built workload.
+    Boxed(Box<dyn Workload>),
+    /// The synthetic workload with explicit CPU/GPU specs.
+    Synth {
+        cpu: Box<SynthSpec>,
+        gpu: Box<SynthSpec>,
+    },
+    /// MemcachedGPU with an explicit cache configuration.
+    Memcached(McConfig),
+}
+
+/// Fluent builder for a [`Session`] — the one front door to the platform.
+///
+/// Start from [`Hetm::builder`] (defaults) or [`Hetm::from_config`] (seed
+/// every knob from a parsed [`SystemConfig`]), chain setters, finish with
+/// [`Hetm::build`].  See the [module docs](self) for the full story and a
+/// runnable example.
+pub struct Hetm {
+    cfg: SystemConfig,
+    raw: Raw,
+    app: AppChoice,
+    variant: Variant,
+    gpu_batch: usize,
+    backend: Option<Backend>,
+    clock_epoch_limit: Option<i32>,
+    shard_bits_explicit: bool,
+    force_cluster: bool,
+}
+
+impl Default for Hetm {
+    fn default() -> Self {
+        Self::builder()
+    }
+}
+
+impl Hetm {
+    /// A builder with the default [`SystemConfig`] and the synthetic
+    /// workload (the paper's partitioned W1-100% configuration).
+    pub fn builder() -> Self {
+        Self::from_config(&SystemConfig::default())
+    }
+
+    /// A builder seeded from a parsed configuration; individual setters
+    /// override afterwards.
+    pub fn from_config(cfg: &SystemConfig) -> Self {
+        Hetm {
+            cfg: cfg.clone(),
+            raw: Raw::new(),
+            app: AppChoice::Named(cfg.workload.clone()),
+            variant: Variant::Optimized,
+            gpu_batch: 1024,
+            backend: None,
+            clock_epoch_limit: None,
+            shard_bits_explicit: false,
+            force_cluster: false,
+        }
+    }
+
+    /// STMR size in words (named workloads may override with their own
+    /// layout, e.g. `bank.accounts`).
+    pub fn words(mut self, n: usize) -> Self {
+        self.cfg.n_words = n;
+        self
+    }
+
+    /// Bitmap granularity shift (granule = `1 << shift` words).
+    pub fn bmp_shift(mut self, shift: u32) -> Self {
+        self.cfg.bmp_shift = shift;
+        self
+    }
+
+    /// Simulated devices the STMR is sharded across (1 = the paper's
+    /// single-device SHeTM).
+    pub fn gpus(mut self, n: usize) -> Self {
+        self.cfg.n_gpus = n;
+        self
+    }
+
+    /// OS worker threads driving the per-device cluster pipelines
+    /// (`cluster.threads`; purely a wall-clock lever — results are
+    /// bit-identical at any setting).  Values above 1 select the cluster
+    /// engine even at one device, so the run crosses a real thread
+    /// boundary.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.cluster_threads = n;
+        self
+    }
+
+    /// Modeled CPU worker threads (`cpu.threads`).
+    pub fn cpu_threads(mut self, n: usize) -> Self {
+        self.cfg.cpu_threads = n;
+        self
+    }
+
+    /// Run the CPU side's workers on real OS threads via
+    /// [`crate::coordinator::ParallelCpuDriver`] (`cpu.parallel`;
+    /// synthetic workload only).
+    pub fn parallel_cpu(mut self, on: bool) -> Self {
+        self.cfg.cpu_parallel = on;
+        self
+    }
+
+    /// CPU guest TM (§IV-B modularity).
+    pub fn guest(mut self, guest: crate::config::GuestKind) -> Self {
+        self.cfg.guest = guest;
+        self
+    }
+
+    /// Inter-device conflict-resolution policy (§IV-E).
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    /// Algorithm variant: basic (Fig. 1a) or optimized SHeTM (Fig. 1b).
+    pub fn variant(mut self, variant: Variant) -> Self {
+        self.variant = variant;
+        self
+    }
+
+    /// Execution-phase duration in seconds.
+    pub fn period_s(mut self, s: f64) -> Self {
+        self.cfg.period_s = s;
+        self
+    }
+
+    /// Execution-phase duration in milliseconds.
+    pub fn period_ms(mut self, ms: f64) -> Self {
+        self.cfg.period_s = ms / 1e3;
+        self
+    }
+
+    /// Workload-generation RNG seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Enable early validation (§IV-D).
+    pub fn early_validation(mut self, on: bool) -> Self {
+        self.cfg.early_validation = on;
+        self
+    }
+
+    /// Early-validation trigger interval as a fraction of the period;
+    /// must be finite and in `(0, 1]` (validated at [`Hetm::build`]).
+    pub fn early_interval_frac(mut self, frac: f64) -> Self {
+        self.cfg.early_interval_frac = frac;
+        self
+    }
+
+    /// Deduplicate the write log last-write-wins before chunking
+    /// (`hetm.log_compaction`).
+    pub fn log_compaction(mut self, on: bool) -> Self {
+        self.cfg.log_compaction = on;
+        self
+    }
+
+    /// Attach conflict-prefilter signatures to log chunks
+    /// (`hetm.chunk_filter`).
+    pub fn chunk_filter(mut self, on: bool) -> Self {
+        self.cfg.chunk_filter = on;
+        self
+    }
+
+    /// Consecutive GPU aborts before the starvation guard engages.
+    pub fn starvation_limit(mut self, n: u32) -> Self {
+        self.cfg.gpu_starvation_limit = n;
+        self
+    }
+
+    /// Shard-ownership block shift (`cluster.shard_bits`): blocks of
+    /// `1 << bits` words.  Setting this explicitly makes a layout that
+    /// does not fit a [`BuildError::ShardLayout`] instead of the default
+    /// auto-clamp.
+    pub fn shard_bits(mut self, bits: u32) -> Self {
+        self.cfg.shard_bits = bits;
+        self.shard_bits_explicit = true;
+        self
+    }
+
+    /// Cross-shard write-injection probability (cluster synth only).
+    pub fn cross_shard_prob(mut self, p: f64) -> Self {
+        self.cfg.cross_shard_prob = p;
+        self
+    }
+
+    /// Device batch size (transactions per kernel activation; must match
+    /// the compiled artifact's `b` under the PJRT backend).
+    pub fn gpu_batch(mut self, n: usize) -> Self {
+        self.gpu_batch = n;
+        self
+    }
+
+    /// Run a caller-built [`Workload`] (the trait is the plug for every
+    /// application; see `rust/src/apps/workload.rs`).
+    pub fn workload(mut self, w: Box<dyn Workload>) -> Self {
+        self.app = AppChoice::Boxed(w);
+        self
+    }
+
+    /// Run a workload by name (`synth | memcached | bank | kmeans |
+    /// zipfkv`), resolved against the per-app sections of
+    /// [`Hetm::app_config`].
+    pub fn workload_named(mut self, name: &str) -> Self {
+        self.app = AppChoice::Named(name.to_string());
+        self
+    }
+
+    /// Per-app config sections (`[bank]`, `[zipfkv]`, ...) for
+    /// [`Hetm::workload_named`].
+    pub fn app_config(mut self, raw: Raw) -> Self {
+        self.raw = raw;
+        self
+    }
+
+    /// Run the synthetic workload with explicit CPU/GPU specs (the
+    /// paper's §V-A..§V-C shapes; conflict injection, partitions).
+    pub fn synth(mut self, cpu_spec: SynthSpec, gpu_spec: SynthSpec) -> Self {
+        self.app = AppChoice::Synth {
+            cpu: Box::new(cpu_spec),
+            gpu: Box::new(gpu_spec),
+        };
+        self
+    }
+
+    /// Run MemcachedGPU with an explicit cache configuration (§V-D).
+    pub fn memcached(mut self, mc: McConfig) -> Self {
+        self.app = AppChoice::Memcached(mc);
+        self
+    }
+
+    /// Force a device backend, skipping the artifact-directory resolution
+    /// (e.g. a preloaded [`Backend::Pjrt`] store).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Override the commit clock's per-round tick budget (tests force a
+    /// small epoch to exercise the round-boundary epoch reset cheaply).
+    pub fn clock_epoch_limit(mut self, limit: i32) -> Self {
+        self.clock_epoch_limit = Some(limit);
+        self
+    }
+
+    /// Always use the cluster engine, even at one device (exposes
+    /// [`ClusterStats`] and the per-device pipeline; bit-identical to the
+    /// single-device engine at `gpus = 1`).
+    pub fn force_cluster(mut self, on: bool) -> Self {
+        self.force_cluster = on;
+        self
+    }
+
+    /// Validate the whole knob cross-product and assemble the [`Session`].
+    pub fn build(self) -> Result<Session, BuildError> {
+        let Hetm {
+            cfg,
+            raw,
+            app,
+            variant,
+            gpu_batch,
+            backend,
+            clock_epoch_limit,
+            shard_bits_explicit,
+            force_cluster,
+        } = self;
+
+        // --- Scalar knob validation (one place, typed) -------------------
+        if cfg.n_words == 0 {
+            return Err(BuildError::ZeroWords);
+        }
+        if cfg.cpu_threads == 0 {
+            return Err(BuildError::ZeroCpuThreads);
+        }
+        if cfg.n_gpus == 0 {
+            return Err(BuildError::ZeroGpus);
+        }
+        if cfg.cluster_threads == 0 {
+            return Err(BuildError::ZeroThreads);
+        }
+        if gpu_batch == 0 {
+            return Err(BuildError::ZeroGpuBatch);
+        }
+        if !cfg.period_s.is_finite() || cfg.period_s <= 0.0 {
+            return Err(BuildError::InvalidPeriod(cfg.period_s));
+        }
+        if !cfg.early_interval_frac.is_finite()
+            || cfg.early_interval_frac <= 0.0
+            || cfg.early_interval_frac > 1.0
+        {
+            return Err(BuildError::InvalidEarlyInterval(cfg.early_interval_frac));
+        }
+        if cfg.policy == PolicyKind::CpuWithStarvationGuard && cfg.gpu_starvation_limit == 0 {
+            return Err(BuildError::ZeroStarvationLimit);
+        }
+
+        // --- Workload resolution -----------------------------------------
+        // Synth specs are kept alongside when `cpu.parallel` needs them.
+        let (workload, synth_specs): (Box<dyn Workload>, Option<(SynthSpec, SynthSpec)>) =
+            match app {
+                AppChoice::Named(name) => {
+                    let w =
+                        from_raw(&name, &raw, &cfg).map_err(|e| BuildError::Workload(e.to_string()))?;
+                    let specs = if name == "synth" {
+                        // Re-derive the specs for the parallel-CPU path.
+                        let sw = SynthWorkload::from_raw(&raw, &cfg)
+                            .map_err(|e| BuildError::Workload(e.to_string()))?;
+                        Some((sw.cpu_spec.clone(), sw.gpu_spec.clone()))
+                    } else {
+                        None
+                    };
+                    (w, specs)
+                }
+                AppChoice::Boxed(w) => (w, None),
+                AppChoice::Synth { cpu, gpu } => {
+                    let cpu = *cpu;
+                    let gpu = *gpu;
+                    let w = SynthWorkload::new(cpu.clone(), gpu.clone(), cfg.n_words);
+                    (Box::new(w), Some((cpu, gpu)))
+                }
+                AppChoice::Memcached(mc) => {
+                    (Box::new(MemcachedWorkload::new(mc, cfg.seed)), None)
+                }
+            };
+        let n_words = workload.n_words();
+        let is_synth = synth_specs.is_some();
+
+        if cfg.cpu_parallel && !is_synth {
+            return Err(BuildError::ParallelCpuUnsupported {
+                workload: workload.name().to_string(),
+            });
+        }
+        if cfg.cpu_parallel && clock_epoch_limit.is_some() {
+            return Err(BuildError::EpochLimitUnsupported);
+        }
+
+        // --- Cluster layout ----------------------------------------------
+        if cfg.n_gpus > n_words {
+            return Err(BuildError::GpusExceedWords {
+                gpus: cfg.n_gpus,
+                words: n_words,
+            });
+        }
+        if shard_bits_explicit && cfg.n_gpus > 1 {
+            // Checked: absurd shifts (e.g. shard_bits = 63) must surface
+            // as the typed error, not an arithmetic-overflow panic.
+            let fits = 1usize
+                .checked_shl(cfg.shard_bits)
+                .and_then(|block| cfg.n_gpus.checked_mul(block))
+                .is_some_and(|span| span <= n_words);
+            if !fits {
+                return Err(BuildError::ShardLayout {
+                    gpus: cfg.n_gpus,
+                    shard_bits: cfg.shard_bits,
+                    words: n_words,
+                });
+            }
+        }
+        let cluster = cfg.n_gpus > 1 || cfg.cluster_threads > 1 || force_cluster;
+
+        // --- Backend resolution ------------------------------------------
+        let backend = match backend {
+            Some(b) => b,
+            None => {
+                if cfg.artifacts_dir.is_empty() {
+                    Backend::Native
+                } else {
+                    let name = workload.name().to_string();
+                    let (prstm, validate, mc_art) = match name.as_str() {
+                        "synth" => ("prstm_r4_g0", "validate_synth_g0", ""),
+                        "memcached" => ("prstm_r4_g0", "validate_mc_g0", "memcached"),
+                        _ => return Err(BuildError::PjrtWorkload { workload: name }),
+                    };
+                    launch::build_backend(&cfg, prstm, validate, mc_art)
+                        .map_err(|e| BuildError::Artifacts(e.to_string()))?
+                }
+            }
+        };
+        if matches!(backend, Backend::Pjrt { .. }) && cluster {
+            return Err(BuildError::PjrtCluster);
+        }
+
+        // --- Assembly (bit-identical to the legacy launch paths) ---------
+        let mut tm_handle: Option<Arc<dyn GuestTm>> = None;
+        let mut stmr_handle: Option<Arc<SharedStmr>> = None;
+        let inner = if cfg.cpu_parallel {
+            // Synthetic workload on real CPU worker threads: mirrors the
+            // former `build_parallel_synth_{,cluster_}engine` construction
+            // exactly (same seeds, same specs), with the drivers boxed.
+            let (cpu_spec, gpu_spec) =
+                synth_specs.expect("parallel_cpu implies synth specs (checked above)");
+            if cluster {
+                let map = launch::shard_map(&cfg, n_words);
+                let cpu: Box<dyn CpuDriver + Send> =
+                    Box::new(launch::build_parallel_synth_cpu(&cfg, &cpu_spec));
+                let mut devices = Vec::with_capacity(map.n_shards());
+                let mut gpus: Vec<Box<dyn GpuDriver + Send>> =
+                    Vec::with_capacity(map.n_shards());
+                for d in 0..map.n_shards() {
+                    let mut spec = gpu_spec.clone().homed(map.clone(), d);
+                    if map.n_shards() > 1 {
+                        spec = spec.with_cross_shard(cfg.cross_shard_prob);
+                    }
+                    gpus.push(Box::new(SynthGpu::new(
+                        spec,
+                        gpu_batch,
+                        cfg.gpu_kernel_latency_s,
+                        cfg.gpu_txn_s,
+                        gpu_seed(cfg.seed, d),
+                    )));
+                    devices.push(GpuDevice::new(n_words, cfg.bmp_shift, backend.clone()));
+                }
+                let mut engine = ClusterEngine::new(
+                    launch::engine_config(&cfg, variant),
+                    launch::cost_model(&cfg),
+                    map,
+                    devices,
+                    cpu,
+                    gpus,
+                );
+                engine.set_threads(cfg.cluster_threads);
+                engine.align_replicas();
+                Inner::Cluster(Box::new(engine))
+            } else {
+                let cpu: Box<dyn CpuDriver + Send> =
+                    Box::new(launch::build_parallel_synth_cpu(&cfg, &cpu_spec));
+                let gpu: Box<dyn GpuDriver + Send> = Box::new(SynthGpu::new(
+                    gpu_spec.clone(),
+                    gpu_batch,
+                    cfg.gpu_kernel_latency_s,
+                    cfg.gpu_txn_s,
+                    gpu_seed(cfg.seed, 0),
+                ));
+                let device = GpuDevice::new(n_words, cfg.bmp_shift, backend);
+                let mut engine = RoundEngine::new(
+                    launch::engine_config(&cfg, variant),
+                    launch::cost_model(&cfg),
+                    device,
+                    cpu,
+                    gpu,
+                );
+                engine.align_replicas();
+                Inner::Single(Box::new(engine))
+            }
+        } else if cluster {
+            let map = launch::shard_map(&cfg, n_words);
+            let (stmr, tm, cpu, gpus) = launch::workload_parts_full(
+                &cfg,
+                workload.as_ref(),
+                &map,
+                gpu_batch,
+                clock_epoch_limit,
+            );
+            tm_handle = Some(tm);
+            stmr_handle = Some(stmr);
+            let devices = (0..map.n_shards())
+                .map(|_| GpuDevice::new(n_words, cfg.bmp_shift, backend.clone()))
+                .collect();
+            let mut engine = ClusterEngine::new(
+                launch::engine_config(&cfg, variant),
+                launch::cost_model(&cfg),
+                map,
+                devices,
+                cpu,
+                gpus,
+            );
+            engine.set_threads(cfg.cluster_threads);
+            engine.align_replicas();
+            Inner::Cluster(Box::new(engine))
+        } else {
+            let map = ShardMap::solo(n_words);
+            let (stmr, tm, cpu, mut gpus) = launch::workload_parts_full(
+                &cfg,
+                workload.as_ref(),
+                &map,
+                gpu_batch,
+                clock_epoch_limit,
+            );
+            tm_handle = Some(tm);
+            stmr_handle = Some(stmr);
+            let gpu = gpus.remove(0);
+            let device = GpuDevice::new(n_words, cfg.bmp_shift, backend);
+            let mut engine = RoundEngine::new(
+                launch::engine_config(&cfg, variant),
+                launch::cost_model(&cfg),
+                device,
+                cpu,
+                gpu,
+            );
+            engine.align_replicas();
+            Inner::Single(Box::new(engine))
+        };
+
+        Ok(Session {
+            inner,
+            workload,
+            tm: tm_handle,
+            txn_stmr: stmr_handle,
+            txn_buf: Vec::new(),
+        })
+    }
+}
+
+/// The engine behind the facade (boxed: the engines are large).
+enum Inner {
+    /// Single-device round engine (the paper's SHeTM).
+    Single(Box<WorkloadEngine>),
+    /// Sharded multi-device cluster engine.
+    Cluster(Box<WorkloadClusterEngine>),
+}
+
+/// A running SHeTM platform: one facade over both engines, built by
+/// [`Hetm`].  See the [module docs](self) for the API story.
+pub struct Session {
+    inner: Inner,
+    workload: Box<dyn Workload>,
+    /// Guest TM handle for [`Session::txn`] (absent under `cpu.parallel`,
+    /// whose workers own per-worker TMs).
+    tm: Option<Arc<dyn GuestTm>>,
+    /// Shared-region handle for [`Session::txn`].
+    txn_stmr: Option<Arc<SharedStmr>>,
+    /// Reused write-entry buffer for [`Session::txn`].
+    txn_buf: Vec<crate::stm::WriteEntry>,
+}
+
+impl Session {
+    /// Execute one synchronization round.
+    pub fn run_round(&mut self) -> Result<()> {
+        match &mut self.inner {
+            Inner::Single(e) => e.run_round(),
+            Inner::Cluster(e) => e.run_round(),
+        }
+    }
+
+    /// Run `n` synchronization rounds.
+    pub fn run_rounds(&mut self, n: usize) -> Result<()> {
+        match &mut self.inner {
+            Inner::Single(e) => e.run_rounds(n),
+            Inner::Cluster(e) => e.run_rounds(n),
+        }
+    }
+
+    /// Run rounds until at least `dur_s` of virtual time has elapsed.
+    pub fn run_for(&mut self, dur_s: f64) -> Result<()> {
+        match &mut self.inner {
+            Inner::Single(e) => e.run_for(dur_s),
+            Inner::Cluster(e) => e.run_for(dur_s),
+        }
+    }
+
+    /// Quiesce: one zero-length round so commits carried from the last
+    /// validation window ship and apply; afterwards the CPU and device
+    /// replicas agree everywhere.
+    pub fn drain(&mut self) -> Result<()> {
+        match &mut self.inner {
+            Inner::Single(e) => e.drain(),
+            Inner::Cluster(e) => e.drain(),
+        }
+    }
+
+    /// Aggregate run statistics (single-device-compatible totals).
+    pub fn stats(&self) -> &RunStats {
+        match &self.inner {
+            Inner::Single(e) => &e.stats,
+            Inner::Cluster(e) => &e.stats,
+        }
+    }
+
+    /// Cluster-only statistics (`None` on the single-device engine).
+    pub fn cluster(&self) -> Option<&ClusterStats> {
+        match &self.inner {
+            Inner::Single(_) => None,
+            Inner::Cluster(e) => Some(&e.cluster),
+        }
+    }
+
+    /// Per-round statistics (most recent rounds, ring-limited).
+    pub fn round_log(&self) -> &[RoundStats] {
+        match &self.inner {
+            Inner::Single(e) => &e.round_log,
+            Inner::Cluster(e) => &e.round_log,
+        }
+    }
+
+    /// The CPU-side STMR replica — the committed truth of the platform.
+    pub fn stmr(&self) -> &SharedStmr {
+        match &self.inner {
+            Inner::Single(e) => e.cpu.stmr(),
+            Inner::Cluster(e) => e.cpu.stmr(),
+        }
+    }
+
+    /// Device `d`'s STMR replica (between a committed `drain` and the
+    /// next round it equals the CPU truth).
+    pub fn device_stmr(&self, d: usize) -> &[i32] {
+        match &self.inner {
+            Inner::Single(e) => {
+                assert_eq!(d, 0, "single-device session");
+                e.device.stmr()
+            }
+            Inner::Cluster(e) => e.devices[d].stmr(),
+        }
+    }
+
+    /// Number of simulated devices.
+    pub fn n_gpus(&self) -> usize {
+        match &self.inner {
+            Inner::Single(_) => 1,
+            Inner::Cluster(e) => e.n_gpus(),
+        }
+    }
+
+    /// OS worker threads driving the per-device pipelines (1 on the
+    /// single-device engine).
+    pub fn threads(&self) -> usize {
+        match &self.inner {
+            Inner::Single(_) => 1,
+            Inner::Cluster(e) => e.threads(),
+        }
+    }
+
+    /// Whether the cluster engine is running underneath.
+    pub fn is_cluster(&self) -> bool {
+        matches!(self.inner, Inner::Cluster(_))
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        match &self.inner {
+            Inner::Single(e) => e.now(),
+            Inner::Cluster(e) => e.now(),
+        }
+    }
+
+    /// Change the log-chunk size (ablation benches); call between rounds.
+    pub fn set_chunk_entries(&mut self, n: usize) {
+        match &mut self.inner {
+            Inner::Single(e) => e.set_chunk_entries(n),
+            Inner::Cluster(e) => e.set_chunk_entries(n),
+        }
+    }
+
+    /// The workload driving this session.
+    pub fn workload(&self) -> &dyn Workload {
+        self.workload.as_ref()
+    }
+
+    /// The workload's name (labels, diagnostics).
+    pub fn workload_name(&self) -> &str {
+        self.workload.name()
+    }
+
+    /// The workload's optional run-summary line.
+    pub fn stats_summary(&self) -> String {
+        self.workload.stats_summary()
+    }
+
+    /// Run the workload's correctness oracle against the committed CPU
+    /// truth.  Call [`Session::drain`] first so carried commits have
+    /// landed.
+    pub fn check_invariants(&self) -> Result<()> {
+        self.workload.check_invariants(self.stmr())
+    }
+
+    /// Execute a CPU-side atomic transaction against the shared region —
+    /// the paper's single-shared-memory illusion as an API.
+    ///
+    /// The body runs through the session's guest TM (same commit clock as
+    /// the workload's driver, so timestamps stay totally ordered),
+    /// retrying on intra-CPU conflicts until commit; its write-set ships
+    /// to the device replicas with the next round as a *carried* commit,
+    /// which also makes it survive a favor-GPU round abort (it committed
+    /// before that round began).  Instantaneous in virtual time.
+    ///
+    /// Errors under `cpu.parallel` (the workers own per-worker TMs, so
+    /// there is no single clock an external transaction could join).
+    pub fn txn<F>(&mut self, mut body: F) -> Result<TxnResult>
+    where
+        F: FnMut(&mut dyn TxOps) -> Result<(), Abort>,
+    {
+        let tm = self.tm.as_ref().ok_or_else(|| {
+            anyhow!("session.txn() is unavailable under cpu.parallel (per-worker clocks)")
+        })?;
+        let stmr = self
+            .txn_stmr
+            .as_ref()
+            .expect("txn_stmr is retained whenever tm is");
+        self.txn_buf.clear();
+        let r = tm.execute_into(stmr, &mut body, &mut self.txn_buf);
+        let attempts = 1 + u64::from(r.retries);
+        match &mut self.inner {
+            Inner::Single(e) => e.inject_external(&self.txn_buf, 1, attempts),
+            Inner::Cluster(e) => e.inject_external(&self.txn_buf, 1, attempts),
+        }
+        Ok(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GuestKind;
+
+    fn cfg() -> SystemConfig {
+        let mut c = SystemConfig::from_raw(&Raw::new()).unwrap();
+        c.n_words = 1 << 14;
+        c.cpu_txn_s = 2e-6;
+        c.period_s = 0.004;
+        c
+    }
+
+    #[test]
+    fn builder_defaults_run_a_synth_session() {
+        let mut s = Hetm::from_config(&cfg()).build().unwrap();
+        assert!(!s.is_cluster());
+        assert_eq!(s.n_gpus(), 1);
+        s.run_rounds(2).unwrap();
+        s.drain().unwrap();
+        assert!(s.stats().cpu_commits > 0);
+        assert!(s.stats().gpu_commits > 0);
+        s.check_invariants().unwrap();
+        assert_eq!(s.workload_name(), "synth");
+    }
+
+    #[test]
+    fn builder_selects_the_cluster_engine_for_multi_gpu() {
+        let mut s = Hetm::from_config(&cfg()).gpus(2).build().unwrap();
+        assert!(s.is_cluster());
+        assert_eq!(s.n_gpus(), 2);
+        s.run_rounds(2).unwrap();
+        assert!(s.cluster().unwrap().per_device.iter().all(|d| d.attempts > 0));
+    }
+
+    #[test]
+    fn threads_knob_upgrades_to_the_cluster_engine() {
+        let s = Hetm::from_config(&cfg()).threads(2).build().unwrap();
+        assert!(s.is_cluster(), "threads > 1 needs the lane machinery");
+        assert_eq!(s.n_gpus(), 1);
+        assert_eq!(s.threads(), 2);
+    }
+
+    #[test]
+    fn force_cluster_exposes_cluster_stats_at_one_device() {
+        let mut s = Hetm::from_config(&cfg()).force_cluster(true).build().unwrap();
+        assert!(s.is_cluster());
+        s.run_rounds(1).unwrap();
+        assert!(s.cluster().is_some());
+    }
+
+    #[test]
+    fn every_guest_and_policy_builds() {
+        for guest in [GuestKind::Tiny, GuestKind::Norec, GuestKind::Htm] {
+            for policy in [
+                PolicyKind::FavorCpu,
+                PolicyKind::FavorGpu,
+                PolicyKind::CpuWithStarvationGuard,
+            ] {
+                let mut s = Hetm::from_config(&cfg())
+                    .guest(guest)
+                    .policy(policy)
+                    .build()
+                    .unwrap();
+                s.run_rounds(1).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn txn_reaches_the_device_replica() {
+        // Confine the drivers to the upper region so word 3 is touched by
+        // the external transaction only.
+        let c = cfg();
+        let n = c.n_words;
+        let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 4..n / 2);
+        let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+        let mut s = Hetm::from_config(&c).synth(cpu_spec, gpu_spec).build().unwrap();
+        s.run_round().unwrap();
+        let r = s
+            .txn(|tx| {
+                let v = tx.read(3)?;
+                tx.write(3, v + 41)
+            })
+            .unwrap();
+        assert!(r.ts > 0);
+        // Visible on the CPU truth immediately...
+        assert_eq!(s.stmr().load(3), 41);
+        // ...and on the device replica after the next round + drain.
+        s.run_round().unwrap();
+        s.drain().unwrap();
+        assert_eq!(s.device_stmr(0)[3], 41);
+        assert_eq!(s.stmr().load(3), 41);
+    }
+
+    #[test]
+    fn txn_survives_a_favor_gpu_abort() {
+        // Conflict-injected CPU spec under favor-GPU: rounds abort the
+        // CPU, but an external txn committed BEFORE a round is carried
+        // and must survive its rollback.
+        let c = cfg();
+        let n = c.n_words;
+        let cpu_spec = SynthSpec::w1(n, 1.0)
+            .partitioned(n / 4..n / 2)
+            .with_conflicts(1.0, n / 2..n);
+        let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+        let mut s = Hetm::from_config(&c)
+            .policy(PolicyKind::FavorGpu)
+            .synth(cpu_spec, gpu_spec)
+            .build()
+            .unwrap();
+        s.txn(|tx| tx.write(7, 1234)).unwrap();
+        s.run_rounds(2).unwrap();
+        s.drain().unwrap();
+        assert_eq!(
+            s.stmr().load(7),
+            1234,
+            "externally committed write must survive favor-GPU rollbacks"
+        );
+    }
+
+    #[test]
+    fn set_chunk_entries_preserves_carried_commits() {
+        // Re-chunking between rounds must not drop the carried prefix:
+        // an external commit made before the call still reaches the
+        // device (regression for the silent-discard bug).
+        let c = cfg();
+        let n = c.n_words;
+        let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 4..n / 2);
+        let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+        for cluster in [false, true] {
+            let mut s = Hetm::from_config(&c)
+                .synth(cpu_spec.clone(), gpu_spec.clone())
+                .force_cluster(cluster)
+                .build()
+                .unwrap();
+            s.txn(|tx| tx.write(5, 777)).unwrap();
+            s.set_chunk_entries(512);
+            s.run_round().unwrap();
+            s.drain().unwrap();
+            assert_eq!(s.stmr().load(5), 777, "cluster={cluster}: CPU value");
+            assert_eq!(s.device_stmr(0)[5], 777, "cluster={cluster}: device value");
+        }
+    }
+
+    #[test]
+    fn shard_layout_overflow_is_a_typed_error() {
+        let c = cfg();
+        assert!(matches!(
+            Hetm::from_config(&c).gpus(2).shard_bits(63).build().err(),
+            Some(BuildError::ShardLayout { .. })
+        ));
+    }
+
+    #[test]
+    fn txn_is_rejected_under_parallel_cpu() {
+        let mut c = cfg();
+        c.cpu_parallel = true;
+        let mut s = Hetm::from_config(&c).build().unwrap();
+        assert!(s.txn(|tx| tx.write(0, 1)).is_err());
+    }
+
+    #[test]
+    fn parallel_cpu_cluster_is_thread_count_invariant() {
+        // cpu.parallel composes with cluster.threads: the fully threaded
+        // platform (CPU workers + device lanes) must be bit-identical to
+        // the sequential schedule of the same configuration.
+        let run = |cluster_threads: usize| {
+            let mut c = cfg();
+            c.cpu_threads = 4;
+            c.n_gpus = 2;
+            c.cluster_threads = cluster_threads;
+            c.cpu_parallel = true;
+            let n = c.n_words;
+            let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+            let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+            let mut s = Hetm::from_config(&c)
+                .synth(cpu_spec, gpu_spec)
+                .gpu_batch(256)
+                .build()
+                .unwrap();
+            s.run_rounds(2).unwrap();
+            s.drain().unwrap();
+            (format!("{:?}", s.stats()), s.stmr().snapshot())
+        };
+        let seq = run(1);
+        let thr = run(2);
+        assert_eq!(seq.0, thr.0, "stats diverged");
+        assert_eq!(seq.1, thr.1, "state diverged");
+    }
+
+    #[test]
+    fn epoch_reset_sustains_tiny_clock_epochs() {
+        // ~16k commits per round; a 20k-tick epoch survives only because
+        // the engines epoch-reset at every round boundary.  Ten rounds
+        // drive ~160k cumulative ticks through the 20k epoch — the
+        // scaled-down equivalent of pushing the legacy clock past
+        // i32::MAX.
+        let mut s = Hetm::from_config(&cfg())
+            .clock_epoch_limit(20_000)
+            .build()
+            .unwrap();
+        s.run_rounds(10).unwrap();
+        s.drain().unwrap();
+        assert!(
+            s.stats().cpu_commits > 20_000,
+            "the run must outlive a single epoch to prove the reset works \
+             (got {} commits)",
+            s.stats().cpu_commits
+        );
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn misconfigurations_return_typed_errors() {
+        let c = cfg();
+        assert_eq!(
+            Hetm::from_config(&c).words(0).build().err(),
+            Some(BuildError::ZeroWords)
+        );
+        assert_eq!(
+            Hetm::from_config(&c).gpus(0).build().err(),
+            Some(BuildError::ZeroGpus)
+        );
+        assert_eq!(
+            Hetm::from_config(&c).threads(0).build().err(),
+            Some(BuildError::ZeroThreads)
+        );
+        assert_eq!(
+            Hetm::from_config(&c).cpu_threads(0).build().err(),
+            Some(BuildError::ZeroCpuThreads)
+        );
+        assert_eq!(
+            Hetm::from_config(&c).gpu_batch(0).build().err(),
+            Some(BuildError::ZeroGpuBatch)
+        );
+        assert!(matches!(
+            Hetm::from_config(&c).period_ms(0.0).build().err(),
+            Some(BuildError::InvalidPeriod(_))
+        ));
+        assert!(matches!(
+            Hetm::from_config(&c).early_interval_frac(1.5).build().err(),
+            Some(BuildError::InvalidEarlyInterval(_))
+        ));
+        assert!(matches!(
+            Hetm::from_config(&c)
+                .parallel_cpu(true)
+                .workload_named("bank")
+                .build()
+                .err(),
+            Some(BuildError::ParallelCpuUnsupported { .. })
+        ));
+        assert!(matches!(
+            Hetm::from_config(&c).workload_named("nope").build().err(),
+            Some(BuildError::Workload(_))
+        ));
+        // Explicit shard_bits that cannot fit is an error; the default is
+        // clamped instead (legacy CLI behavior).
+        assert!(matches!(
+            Hetm::from_config(&c)
+                .words(1 << 10)
+                .gpus(8)
+                .shard_bits(12)
+                .build()
+                .err(),
+            Some(BuildError::ShardLayout { .. })
+        ));
+        assert!(Hetm::from_config(&c).words(1 << 10).gpus(8).build().is_ok());
+    }
+}

@@ -162,6 +162,12 @@ impl TxOps for Tx<'_> {
 }
 
 impl GuestTm for HtmEmu {
+    fn epoch_reset(&self, base: i64) {
+        // The sequence lock is an independent interference counter;
+        // only the RDTSCP-style commit clock restarts.
+        self.clock.epoch_reset(base);
+    }
+
     fn name(&self) -> &'static str {
         "htm-emu"
     }

@@ -63,6 +63,20 @@ pub trait GuestTm: Send + Sync {
     /// Human-readable guest name (diagnostics, bench labels).
     fn name(&self) -> &'static str;
 
+    /// Round-boundary epoch reset (the engines call this after every
+    /// merge): restart the commit clock at `base` — every write-log entry
+    /// still outstanding has been renumbered into `1..=base` by the
+    /// coordinator — and drop any clock-derived metadata (e.g. orec
+    /// versions) so the next round's timestamps start fresh.  Timestamps
+    /// are only ever compared *within* one round (the device freshness
+    /// array resets with the clock), so the reset preserves every
+    /// validate/apply outcome while keeping the clock inside the i32
+    /// range the device kernels use, forever.
+    ///
+    /// The default is a no-op: a guest that ignores the reset keeps the
+    /// legacy grow-forever clock and inherits its epoch-exhaustion limit.
+    fn epoch_reset(&self, _base: i64) {}
+
     /// Execute `body` as a transaction, retrying on conflict until commit.
     ///
     /// On commit, the transaction's write-set — `(addr, value, ts)` exactly
@@ -87,8 +101,17 @@ pub struct SharedStmr {
     words: Box<[AtomicI32]>,
     /// Round-start snapshot slot for the favor-GPU policy (the paper uses
     /// fork/COW); filled by [`Self::save_snapshot`], consumed by
-    /// [`Self::restore_snapshot`].
-    snap: Mutex<Option<Vec<i32>>>,
+    /// [`Self::restore_snapshot`].  The buffer is retained across rounds
+    /// so repeated favor-GPU snapshots are allocation-free once warm.
+    snap: Mutex<SnapSlot>,
+}
+
+/// Reusable snapshot buffer: `valid` flags whether `buf` currently holds
+/// a pending snapshot; the allocation survives a restore.
+#[derive(Default)]
+struct SnapSlot {
+    buf: Vec<i32>,
+    valid: bool,
 }
 
 impl SharedStmr {
@@ -98,7 +121,7 @@ impl SharedStmr {
         v.resize_with(n, || AtomicI32::new(0));
         SharedStmr {
             words: v.into_boxed_slice(),
-            snap: Mutex::new(None),
+            snap: Mutex::new(SnapSlot::default()),
         }
     }
 
@@ -141,20 +164,31 @@ impl SharedStmr {
 
     /// Save an internal full-region snapshot (favor-GPU round start; the
     /// engine charges the fork/COW cost separately via its cost model).
+    ///
+    /// The snapshot buffer is reused across rounds: after the first
+    /// favor-GPU round this is a copy into an existing allocation, not a
+    /// fresh `Vec` per round.
     pub fn save_snapshot(&self) {
-        *self.snap.lock().unwrap() = Some(self.snapshot());
+        let mut slot = self.snap.lock().unwrap();
+        slot.buf.clear();
+        slot.buf
+            .extend(self.words.iter().map(|w| w.load(Ordering::Acquire)));
+        slot.valid = true;
     }
 
     /// Restore and consume the snapshot saved by [`Self::save_snapshot`]
-    /// (favor-GPU round abort). Panics if no snapshot is pending.
+    /// (favor-GPU round abort). Panics if no snapshot is pending.  The
+    /// buffer's allocation is kept for the next round's snapshot.
     pub fn restore_snapshot(&self) {
-        let snap = self
-            .snap
-            .lock()
-            .unwrap()
-            .take()
-            .expect("save_snapshot must precede restore_snapshot");
-        self.install_range(0, &snap);
+        let mut slot = self.snap.lock().unwrap();
+        assert!(
+            slot.valid,
+            "save_snapshot must precede restore_snapshot"
+        );
+        slot.valid = false;
+        for (i, v) in slot.buf.iter().enumerate() {
+            self.words[i].store(*v, Ordering::Release);
+        }
     }
 }
 
@@ -166,15 +200,55 @@ impl std::fmt::Debug for SharedStmr {
 
 /// Global logical commit clock shared by every CPU guest (§IV-B: "a logical
 /// timestamp to totally order the commits of all transactions").
-#[derive(Debug, Default)]
+///
+/// Timestamps live in the i32 range the device kernels use, but the clock
+/// never exhausts it in engine runs: the coordinators perform a
+/// round-boundary **epoch reset** ([`Self::epoch_reset`], reached through
+/// [`GuestTm::epoch_reset`]) after every merge, renumbering the handful of
+/// carried log entries and restarting the count.  Timestamps therefore
+/// stay totally ordered *within* a round — the only scope any freshness
+/// comparison spans — while the clock value stays bounded by one round's
+/// commit volume.  [`Self::tick`] still panics if a single epoch
+/// (i.e. one round) overflows its limit, which is `i32::MAX` by default;
+/// tests force a small limit via [`Self::with_epoch_limit`] to exercise
+/// the reset cheaply.
+#[derive(Debug)]
 pub struct GlobalClock {
     t: AtomicI64,
+    /// Highest timestamp one epoch may reach before [`Self::tick`] panics.
+    limit: i64,
+}
+
+impl Default for GlobalClock {
+    fn default() -> Self {
+        GlobalClock {
+            t: AtomicI64::new(0),
+            limit: i64::from(i32::MAX),
+        }
+    }
 }
 
 impl GlobalClock {
     /// Clock starting at 0 (first commit gets ts 1).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Clock with a custom epoch limit: [`Self::tick`] panics when a
+    /// single epoch exceeds `limit` ticks without an intervening
+    /// [`Self::epoch_reset`].  Lets tests drive the clock past
+    /// `i32::MAX`-equivalent tick volumes in milliseconds.
+    pub fn with_epoch_limit(limit: i32) -> Self {
+        assert!(limit > 0, "epoch limit must be positive");
+        GlobalClock {
+            t: AtomicI64::new(0),
+            limit: i64::from(limit),
+        }
+    }
+
+    /// The configured epoch limit.
+    pub fn epoch_limit(&self) -> i64 {
+        self.limit
     }
 
     /// Current value without advancing.
@@ -185,14 +259,34 @@ impl GlobalClock {
 
     /// Advance and return the new timestamp.
     ///
-    /// Panics if the i32 range the device kernels use is exhausted — at
-    /// one commit per 100 ns that is ~3.5 minutes of saturated commits,
-    /// far beyond any bench round; a production build would epoch-reset
-    /// between rounds.
+    /// Panics if one epoch exhausts the configured limit (`i32::MAX` by
+    /// default — the range the device kernels use).  The engines prevent
+    /// this by epoch-resetting at every round boundary; only a driver
+    /// that commits more than `limit` transactions in a *single round*
+    /// can trip it.
     #[inline]
     pub fn tick(&self) -> i32 {
         let v = self.t.fetch_add(1, Ordering::AcqRel) + 1;
-        i32::try_from(v).expect("global clock exceeded i32 (epoch reset needed)")
+        assert!(
+            v <= self.limit,
+            "global clock exceeded its epoch limit ({}) within one round — \
+             the engine must call epoch_reset() at round boundaries",
+            self.limit
+        );
+        v as i32
+    }
+
+    /// Round-boundary epoch reset: restart the clock at `base`.
+    ///
+    /// The caller (the coordinator, after merge) guarantees that every
+    /// write-log entry still outstanding has been renumbered into
+    /// `1..=base`, and that all clock-derived metadata (guest version
+    /// tables, the device freshness array) is reset alongside — see
+    /// [`GuestTm::epoch_reset`].  Must not be called while transactions
+    /// are in flight.
+    pub fn epoch_reset(&self, base: i64) {
+        debug_assert!((0..=self.limit).contains(&base));
+        self.t.store(base, Ordering::Release);
     }
 }
 
@@ -234,6 +328,54 @@ mod tests {
     #[should_panic(expected = "save_snapshot must precede")]
     fn restore_without_save_panics() {
         SharedStmr::new(2).restore_snapshot();
+    }
+
+    #[test]
+    fn snapshot_buffer_is_reused_across_rounds() {
+        let m = SharedStmr::new(4);
+        m.store(0, 1);
+        m.save_snapshot();
+        m.store(0, 2);
+        m.restore_snapshot();
+        assert_eq!(m.load(0), 1);
+        // Second favor-GPU round: the slot must accept a fresh snapshot
+        // (same buffer, new contents) and restore the LATEST image.
+        m.store(0, 7);
+        m.save_snapshot();
+        m.store(0, 9);
+        m.restore_snapshot();
+        assert_eq!(m.load(0), 7);
+    }
+
+    #[test]
+    fn clock_epoch_reset_restarts_the_count() {
+        let c = GlobalClock::with_epoch_limit(8);
+        for _ in 0..8 {
+            c.tick();
+        }
+        assert_eq!(c.now(), 8);
+        // Round boundary: 3 carried entries renumbered 1..=3.
+        c.epoch_reset(3);
+        assert_eq!(c.now(), 3);
+        assert_eq!(c.tick(), 4);
+        // With per-round resets the clock sustains unbounded cumulative
+        // tick volume under a tiny epoch limit.
+        for _ in 0..100 {
+            c.epoch_reset(0);
+            for _ in 0..8 {
+                c.tick();
+            }
+        }
+        assert_eq!(c.now(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "epoch limit")]
+    fn clock_without_reset_exhausts_its_epoch() {
+        let c = GlobalClock::with_epoch_limit(8);
+        for _ in 0..9 {
+            c.tick();
+        }
     }
 
     #[test]

@@ -141,6 +141,13 @@ impl TxOps for Tx<'_> {
 }
 
 impl GuestTm for NorecStm {
+    fn epoch_reset(&self, base: i64) {
+        // NOrec keeps no clock-derived metadata (the sequence lock is an
+        // independent counter; validation is by value), so only the
+        // commit clock itself restarts.
+        self.clock.epoch_reset(base);
+    }
+
     fn name(&self) -> &'static str {
         "norec"
     }

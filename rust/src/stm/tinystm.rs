@@ -16,7 +16,7 @@
 //! consistent at `rv`, and commit revalidates before write-back.
 
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::{Abort, GlobalClock, GuestTm, SharedStmr, TxOps, TxnResult, WriteEntry};
@@ -38,6 +38,10 @@ pub struct TinyStm {
     orecs: Box<[AtomicU64]>,
     mask: usize,
     clock: Arc<GlobalClock>,
+    /// Clock value at the last epoch reset: if the clock has not ticked
+    /// since, no commit wrote an orec version, so the reset's table sweep
+    /// can be skipped (keeps empty rounds free of the 2^16-store sweep).
+    epoch_mark: AtomicI64,
     /// Max body re-runs before panicking (livelock guard in tests).
     max_retries: u32,
 }
@@ -48,10 +52,12 @@ impl TinyStm {
         let n = 1usize << log2_orecs;
         let mut v = Vec::with_capacity(n);
         v.resize_with(n, || AtomicU64::new(0));
+        let epoch_mark = AtomicI64::new(clock.now());
         TinyStm {
             orecs: v.into_boxed_slice(),
             mask: n - 1,
             clock,
+            epoch_mark,
             max_retries: 1_000_000,
         }
     }
@@ -233,6 +239,23 @@ impl TxOps for Tx<'_> {
 impl GuestTm for TinyStm {
     fn name(&self) -> &'static str {
         "tinystm"
+    }
+
+    fn epoch_reset(&self, base: i64) {
+        // Orec versions are clock values; a clock restart must clear them
+        // or next-epoch reads (rv >= base) would mistake stale versions
+        // for concurrent writers.  No transaction is in flight (the
+        // engines reset at round boundaries), so plain stores suffice.
+        // Commits are the only orec writers and every commit ticks the
+        // clock, so an un-ticked epoch left the table untouched and the
+        // sweep can be skipped — empty rounds stay sweep-free.
+        if self.clock.now() != self.epoch_mark.load(Ordering::Acquire) {
+            for o in self.orecs.iter() {
+                o.store(0, Ordering::Release);
+            }
+        }
+        self.clock.epoch_reset(base);
+        self.epoch_mark.store(base, Ordering::Release);
     }
 
     fn execute_into(

@@ -11,6 +11,11 @@
 //! [`ClusterEngine`]: shetm::cluster::ClusterEngine
 //! [`RoundEngine`]: shetm::coordinator::round::RoundEngine
 
+// This suite deliberately drives the legacy `launch::build_*` engine
+// constructors: they are the independent oracle the Session facade is
+// golden-tested against (see rust/tests/session_api.rs).
+#![allow(deprecated)]
+
 use shetm::apps::synth::SynthSpec;
 use shetm::config::{PolicyKind, Raw, SystemConfig};
 use shetm::coordinator::round::{CpuDriver, Variant};

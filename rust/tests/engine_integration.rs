@@ -1,14 +1,15 @@
 //! Whole-engine integration tests, including the PJRT production path:
 //! the coordinator driving the compiled jax/Pallas artifacts end to end,
-//! cross-checked against the native backend.
+//! cross-checked against the native backend.  Engines are constructed
+//! through the `Session` facade (`Hetm` builder) with an explicit backend.
 
 use shetm::apps::memcached::McConfig;
 use shetm::apps::synth::SynthSpec;
 use shetm::config::{PolicyKind, Raw, SystemConfig};
-use shetm::coordinator::round::{CpuDriver, Variant};
+use shetm::coordinator::round::Variant;
 use shetm::gpu::Backend;
-use shetm::launch;
 use shetm::runtime::ArtifactStore;
+use shetm::session::Hetm;
 
 fn cfg(n: usize) -> SystemConfig {
     let mut raw = Raw::new();
@@ -45,33 +46,27 @@ fn synth_engine_pjrt_matches_native_run() {
     let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
     let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
 
-    let mut pjrt = launch::build_synth_engine(
-        &c,
-        Variant::Optimized,
-        cpu_spec.clone(),
-        gpu_spec.clone(),
-        1024,
-        backend,
-    );
+    let mut pjrt = Hetm::from_config(&c)
+        .synth(cpu_spec.clone(), gpu_spec.clone())
+        .backend(backend)
+        .build()
+        .unwrap();
     pjrt.run_rounds(3).unwrap();
 
-    let mut native = launch::build_synth_engine(
-        &c,
-        Variant::Optimized,
-        cpu_spec,
-        gpu_spec,
-        1024,
-        Backend::Native,
-    );
+    let mut native = Hetm::from_config(&c)
+        .synth(cpu_spec, gpu_spec)
+        .backend(Backend::Native)
+        .build()
+        .unwrap();
     native.run_rounds(3).unwrap();
 
-    assert_eq!(pjrt.stats.cpu_commits, native.stats.cpu_commits);
-    assert_eq!(pjrt.stats.gpu_commits, native.stats.gpu_commits);
-    assert_eq!(pjrt.stats.rounds_committed, 3);
-    assert_eq!(pjrt.device.stmr(), native.device.stmr());
+    assert_eq!(pjrt.stats().cpu_commits, native.stats().cpu_commits);
+    assert_eq!(pjrt.stats().gpu_commits, native.stats().gpu_commits);
+    assert_eq!(pjrt.stats().rounds_committed, 3);
+    assert_eq!(pjrt.device_stmr(0), native.device_stmr(0));
     assert_eq!(
-        pjrt.cpu.stmr().snapshot(),
-        native.cpu.stmr().snapshot(),
+        pjrt.stmr().snapshot(),
+        native.stmr().snapshot(),
         "CPU replicas"
     );
 }
@@ -87,14 +82,18 @@ fn synth_engine_pjrt_conflicting_round_rolls_back() {
         .partitioned(0..n / 2)
         .with_conflicts(0.01, n / 2..n);
     let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
-    let mut e = launch::build_synth_engine(&c, Variant::Optimized, cpu_spec, gpu_spec, 1024, backend);
+    let mut e = Hetm::from_config(&c)
+        .synth(cpu_spec, gpu_spec)
+        .backend(backend)
+        .build()
+        .unwrap();
     e.run_rounds(2).unwrap();
-    assert_eq!(e.stats.rounds_committed, 0, "dense conflicts abort rounds");
-    assert_eq!(e.stats.gpu_commits, 0);
-    assert!(e.stats.discarded_commits > 0);
+    assert_eq!(e.stats().rounds_committed, 0, "dense conflicts abort rounds");
+    assert_eq!(e.stats().gpu_commits, 0);
+    assert!(e.stats().discarded_commits > 0);
     // Rollback correctness: after a drain the replicas agree again.
     e.drain().unwrap();
-    assert_eq!(e.cpu.stmr().snapshot(), e.device.stmr().to_vec());
+    assert_eq!(e.stmr().snapshot(), e.device_stmr(0).to_vec());
 }
 
 #[test]
@@ -107,23 +106,21 @@ fn memcached_engine_pjrt_three_policies() {
         PolicyKind::FavorGpu,
         PolicyKind::CpuWithStarvationGuard,
     ] {
-        let mut c = cfg(1 << 18);
-        c.policy = policy;
+        let c = cfg(1 << 18);
         let mc = McConfig::new(1 << 15);
-        let mut e = launch::build_memcached_engine(
-            &c,
-            Variant::Optimized,
-            mc,
-            1024,
-            backend.clone(),
-        );
+        let mut e = Hetm::from_config(&c)
+            .policy(policy)
+            .memcached(mc)
+            .backend(backend.clone())
+            .build()
+            .unwrap();
         e.run_rounds(2).unwrap();
         assert!(
-            e.stats.cpu_commits + e.stats.gpu_commits > 0,
+            e.stats().cpu_commits + e.stats().gpu_commits > 0,
             "{policy:?}: some requests must be served"
         );
         assert_eq!(
-            e.stats.rounds_committed, 2,
+            e.stats().rounds_committed, 2,
             "{policy:?}: parity workload must not conflict"
         );
     }
@@ -138,11 +135,16 @@ fn basic_variant_pjrt_round_trips() {
     let c = cfg(n);
     let cpu_spec = SynthSpec::w1(n, 0.1).partitioned(0..n / 2);
     let gpu_spec = SynthSpec::w1(n, 0.1).partitioned(n / 2..n);
-    let mut e = launch::build_synth_engine(&c, Variant::Basic, cpu_spec, gpu_spec, 1024, backend);
+    let mut e = Hetm::from_config(&c)
+        .variant(Variant::Basic)
+        .synth(cpu_spec, gpu_spec)
+        .backend(backend)
+        .build()
+        .unwrap();
     e.run_rounds(2).unwrap();
-    assert_eq!(e.stats.rounds_committed, 2);
+    assert_eq!(e.stats().rounds_committed, 2);
     e.drain().unwrap();
-    assert_eq!(e.cpu.stmr().snapshot(), e.device.stmr().to_vec());
+    assert_eq!(e.stmr().snapshot(), e.device_stmr(0).to_vec());
 }
 
 #[test]
@@ -154,8 +156,12 @@ fn wide_read_artifact_drives_w2_workload() {
     let c = cfg(n);
     let cpu_spec = SynthSpec::w2(n, 0.5).partitioned(0..n / 2);
     let gpu_spec = SynthSpec::w2(n, 0.5).partitioned(n / 2..n);
-    let mut e = launch::build_synth_engine(&c, Variant::Optimized, cpu_spec, gpu_spec, 1024, backend);
+    let mut e = Hetm::from_config(&c)
+        .synth(cpu_spec, gpu_spec)
+        .backend(backend)
+        .build()
+        .unwrap();
     e.run_rounds(2).unwrap();
-    assert_eq!(e.stats.rounds_committed, 2);
-    assert!(e.stats.gpu_commits > 0);
+    assert_eq!(e.stats().rounds_committed, 2);
+    assert!(e.stats().gpu_commits > 0);
 }

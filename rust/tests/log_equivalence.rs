@@ -34,6 +34,11 @@
 //! Timing-visible behavior under real costs is exercised by
 //! `benches/ablate_log.rs` and the engine unit tests.
 
+// Drives the legacy `launch::build_*` constructors on purpose: this is a
+// golden suite over the reference engines (Session is golden-tested
+// against them separately, in rust/tests/session_api.rs).
+#![allow(deprecated)]
+
 use shetm::config::{PolicyKind, Raw, SystemConfig};
 use shetm::coordinator::round::{CpuDriver, Variant};
 use shetm::launch;

@@ -9,6 +9,11 @@
 //!   PR-STM — intra-batch committers are conflict-free in priority order;
 //!   validation — freshness-guarded apply equals a timestamp-ordered replay.
 
+// Drives the legacy `launch::build_*` constructors on purpose: property
+// tests over the reference engines (Session is golden-tested against
+// them in rust/tests/session_api.rs).
+#![allow(deprecated)]
+
 use shetm::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
 use shetm::config::{PolicyKind, SystemConfig};
 use shetm::coordinator::round::CpuDriver;

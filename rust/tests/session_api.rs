@@ -1,0 +1,288 @@
+//! Golden equivalence: the `Session` facade is bit-identical to the
+//! legacy `launch::build_*` construction paths.
+//!
+//! The `Hetm` builder replaces fourteen free constructors with one front
+//! door; this suite is what lets it do so safely.  For every workload
+//! (synth, memcached, bank, kmeans, zipfkv) × every conflict-resolution
+//! policy × `n_gpus ∈ {1, 4}`, a `Session` run and a legacy-engine run on
+//! the same configuration must agree on:
+//!
+//! * the full `RunStats` (compared through `Debug`, which prints every
+//!   f64 at full precision),
+//! * per-round commit/abort decisions,
+//! * the final CPU STMR, and
+//! * the final replica of every device.
+//!
+//! Since the legacy constructors are in turn pinned to each other by
+//! `cluster_equivalence.rs` (n_gpus = 1 ≡ RoundEngine) and
+//! `log_equivalence.rs`, this transitively extends every existing golden
+//! guarantee to the new API.  The builder-misconfiguration matrix lives
+//! with the builder (`rust/src/session/mod.rs` tests); the oracle-backed
+//! behavior matrix in `workloads.rs` already runs through `Session`.
+
+#![allow(deprecated)] // the legacy constructors ARE the reference here
+
+use shetm::apps::memcached::McConfig;
+use shetm::apps::synth::SynthSpec;
+use shetm::apps::workload::from_raw;
+use shetm::config::{PolicyKind, Raw, SystemConfig};
+use shetm::coordinator::round::{CpuDriver, Variant};
+use shetm::gpu::Backend;
+use shetm::launch;
+use shetm::session::{Hetm, Session};
+
+const POLICIES: [PolicyKind; 3] = [
+    PolicyKind::FavorCpu,
+    PolicyKind::FavorGpu,
+    PolicyKind::CpuWithStarvationGuard,
+];
+
+const ROUNDS: usize = 3;
+
+fn cfg(policy: PolicyKind, n_gpus: usize) -> SystemConfig {
+    let mut raw = Raw::new();
+    raw.set("cpu.txn_ns=2000").unwrap();
+    raw.set("gpu.txn_ns=230").unwrap();
+    raw.set("hetm.period_ms=2").unwrap();
+    raw.set("cluster.shard_bits=6").unwrap();
+    raw.set("seed=77").unwrap();
+    let mut c = SystemConfig::from_raw(&raw).unwrap();
+    c.n_words = 1 << 14;
+    c.policy = policy;
+    c.n_gpus = n_gpus;
+    c
+}
+
+/// Small app shapes (each app reads only its own section).
+fn app_raw() -> Raw {
+    Raw::parse(
+        "[memcached]\nn_sets = 1024\n\
+         [bank]\naccounts = 8192\ncross_prob = 0.002\n\
+         [kmeans]\npoints = 4096\n\
+         [zipfkv]\nkeys = 4096\nupdate_frac = 0.5\n",
+    )
+    .unwrap()
+}
+
+/// One run's full observable signature.
+struct Sig {
+    stats: String,
+    decisions: Vec<bool>,
+    cpu_stmr: Vec<i32>,
+    device_stmrs: Vec<Vec<i32>>,
+}
+
+fn session_sig(mut s: Session) -> Sig {
+    s.run_rounds(ROUNDS).unwrap();
+    s.drain().unwrap();
+    Sig {
+        stats: format!("{:?}", s.stats()),
+        decisions: s.round_log().iter().map(|r| r.committed).collect(),
+        cpu_stmr: s.stmr().snapshot(),
+        device_stmrs: (0..s.n_gpus()).map(|d| s.device_stmr(d).to_vec()).collect(),
+    }
+}
+
+fn assert_sig_eq(label: &str, a: Sig, b: Sig) {
+    assert_eq!(a.stats, b.stats, "{label}: RunStats diverged");
+    assert_eq!(a.decisions, b.decisions, "{label}: round decisions diverged");
+    assert_eq!(a.cpu_stmr, b.cpu_stmr, "{label}: CPU STMR diverged");
+    assert_eq!(
+        a.device_stmrs, b.device_stmrs,
+        "{label}: device replicas diverged"
+    );
+}
+
+/// The legacy construction for one (workload, cfg) point, as `main.rs`,
+/// the examples and the benches used to write it by hand.
+fn legacy_sig(name: &str, c: &SystemConfig) -> Sig {
+    let raw = app_raw();
+    match name {
+        "synth" => {
+            let n = c.n_words;
+            let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..n / 2);
+            let gpu_spec = SynthSpec::w1(n, 1.0).partitioned(n / 2..n);
+            if c.n_gpus > 1 {
+                let mut e = launch::build_synth_cluster_engine(
+                    c,
+                    Variant::Optimized,
+                    cpu_spec,
+                    gpu_spec,
+                    1024,
+                    Backend::Native,
+                );
+                e.run_rounds(ROUNDS).unwrap();
+                e.drain().unwrap();
+                Sig {
+                    stats: format!("{:?}", e.stats),
+                    decisions: e.round_log.iter().map(|r| r.committed).collect(),
+                    cpu_stmr: e.cpu.stmr().snapshot(),
+                    device_stmrs: e.devices.iter().map(|d| d.stmr().to_vec()).collect(),
+                }
+            } else {
+                let mut e = launch::build_synth_engine(
+                    c,
+                    Variant::Optimized,
+                    cpu_spec,
+                    gpu_spec,
+                    1024,
+                    Backend::Native,
+                );
+                e.run_rounds(ROUNDS).unwrap();
+                e.drain().unwrap();
+                Sig {
+                    stats: format!("{:?}", e.stats),
+                    decisions: e.round_log.iter().map(|r| r.committed).collect(),
+                    cpu_stmr: e.cpu.stmr().snapshot(),
+                    device_stmrs: vec![e.device.stmr().to_vec()],
+                }
+            }
+        }
+        "memcached" => {
+            let mc = McConfig::new(1 << 10);
+            if c.n_gpus > 1 {
+                let mut e = launch::build_memcached_cluster_engine(
+                    c,
+                    Variant::Optimized,
+                    mc,
+                    1024,
+                    Backend::Native,
+                );
+                e.run_rounds(ROUNDS).unwrap();
+                e.drain().unwrap();
+                Sig {
+                    stats: format!("{:?}", e.stats),
+                    decisions: e.round_log.iter().map(|r| r.committed).collect(),
+                    cpu_stmr: e.cpu.stmr().snapshot(),
+                    device_stmrs: e.devices.iter().map(|d| d.stmr().to_vec()).collect(),
+                }
+            } else {
+                let mut e = launch::build_memcached_engine(
+                    c,
+                    Variant::Optimized,
+                    mc,
+                    1024,
+                    Backend::Native,
+                );
+                e.run_rounds(ROUNDS).unwrap();
+                e.drain().unwrap();
+                Sig {
+                    stats: format!("{:?}", e.stats),
+                    decisions: e.round_log.iter().map(|r| r.committed).collect(),
+                    cpu_stmr: e.cpu.stmr().snapshot(),
+                    device_stmrs: vec![e.device.stmr().to_vec()],
+                }
+            }
+        }
+        _ => {
+            let w = from_raw(name, &raw, c).unwrap();
+            if c.n_gpus > 1 {
+                let mut e = launch::build_workload_cluster_engine(
+                    c,
+                    Variant::Optimized,
+                    w.as_ref(),
+                    1024,
+                    Backend::Native,
+                );
+                e.run_rounds(ROUNDS).unwrap();
+                e.drain().unwrap();
+                Sig {
+                    stats: format!("{:?}", e.stats),
+                    decisions: e.round_log.iter().map(|r| r.committed).collect(),
+                    cpu_stmr: e.cpu.stmr().snapshot(),
+                    device_stmrs: e.devices.iter().map(|d| d.stmr().to_vec()).collect(),
+                }
+            } else {
+                let mut e = launch::build_workload_engine(
+                    c,
+                    Variant::Optimized,
+                    w.as_ref(),
+                    1024,
+                    Backend::Native,
+                );
+                e.run_rounds(ROUNDS).unwrap();
+                e.drain().unwrap();
+                Sig {
+                    stats: format!("{:?}", e.stats),
+                    decisions: e.round_log.iter().map(|r| r.committed).collect(),
+                    cpu_stmr: e.cpu.stmr().snapshot(),
+                    device_stmrs: vec![e.device.stmr().to_vec()],
+                }
+            }
+        }
+    }
+}
+
+/// The same point through the builder.
+fn session_for(name: &str, c: &SystemConfig) -> Session {
+    let b = Hetm::from_config(c).app_config(app_raw());
+    match name {
+        "memcached" => b.memcached(McConfig::new(1 << 10)).build().unwrap(),
+        _ => b.workload_named(name).build().unwrap(),
+    }
+}
+
+fn golden(name: &str) {
+    for policy in POLICIES {
+        for n_gpus in [1usize, 4] {
+            let c = cfg(policy, n_gpus);
+            let label = format!("{name}/{policy:?}/n_gpus={n_gpus}");
+            let legacy = legacy_sig(name, &c);
+            let session = session_sig(session_for(name, &c));
+            assert_sig_eq(&label, legacy, session);
+        }
+    }
+}
+
+#[test]
+fn session_matches_legacy_synth() {
+    golden("synth");
+}
+
+#[test]
+fn session_matches_legacy_memcached() {
+    golden("memcached");
+}
+
+#[test]
+fn session_matches_legacy_bank() {
+    golden("bank");
+}
+
+#[test]
+fn session_matches_legacy_kmeans() {
+    golden("kmeans");
+}
+
+#[test]
+fn session_matches_legacy_zipfkv() {
+    golden("zipfkv");
+}
+
+#[test]
+fn session_threaded_equals_sequential() {
+    // The facade preserves the PR-3 guarantee: `threads` is purely a
+    // wall-clock lever.  (threads > 1 upgrades a 1-gpu session to the
+    // cluster engine, which is itself bit-identical to the single-device
+    // engine — both facts covered in one assertion.)
+    for n_gpus in [1usize, 4] {
+        let c = cfg(PolicyKind::FavorCpu, n_gpus);
+        let seq = session_sig(
+            Hetm::from_config(&c)
+                .workload_named("bank")
+                .app_config(app_raw())
+                .force_cluster(true)
+                .build()
+                .unwrap(),
+        );
+        let thr = session_sig(
+            Hetm::from_config(&c)
+                .workload_named("bank")
+                .app_config(app_raw())
+                .threads(4)
+                .build()
+                .unwrap(),
+        );
+        assert_sig_eq(&format!("bank threaded n_gpus={n_gpus}"), seq, thr);
+    }
+}

@@ -9,11 +9,17 @@
 //! the validation / merge / rollback / refresh machinery creates or
 //! destroys money.
 
-use shetm::apps::workload::{from_raw, Workload};
+// `workload_engines_agree_at_one_gpu` intentionally compares the legacy
+// engine constructors against each other (they are the Session suite's
+// independent reference).
+#![allow(deprecated)]
+
+use shetm::apps::workload::from_raw;
 use shetm::config::{PolicyKind, Raw, SystemConfig};
 use shetm::coordinator::round::{CpuDriver, Variant};
 use shetm::gpu::Backend;
 use shetm::launch;
+use shetm::session::Hetm;
 
 const POLICIES: [PolicyKind; 3] = [
     PolicyKind::FavorCpu,
@@ -53,32 +59,35 @@ fn run_and_check(name: &str, policy: PolicyKind, n_gpus: usize, seed: u64) {
 
     if n_gpus == 1 {
         // Exercise the single-device RoundEngine path too.
-        let w = from_raw(name, &raw, &c).unwrap();
-        let mut e =
-            launch::build_workload_engine(&c, Variant::Optimized, w.as_ref(), 256, Backend::Native);
+        let mut e = Hetm::from_config(&c)
+            .workload_named(name)
+            .app_config(raw.clone())
+            .gpu_batch(256)
+            .build()
+            .unwrap();
+        assert!(!e.is_cluster(), "{label}: one device => RoundEngine");
         e.run_rounds(4).unwrap();
         e.drain().unwrap();
         // Surviving commits can be zero when every round aborts under
         // favor-GPU, so liveness is asserted on attempts.
-        assert!(e.stats.cpu_attempts > 0, "{label}: CPU idle");
-        assert!(e.stats.gpu_attempts > 0, "{label}: GPU idle");
-        w.check_invariants(e.cpu.stmr())
+        assert!(e.stats().cpu_attempts > 0, "{label}: CPU idle");
+        assert!(e.stats().gpu_attempts > 0, "{label}: GPU idle");
+        e.check_invariants()
             .unwrap_or_else(|err| panic!("{label} (RoundEngine): {err}"));
     }
-    let w = from_raw(name, &raw, &c).unwrap();
-    let mut e = launch::build_workload_cluster_engine(
-        &c,
-        Variant::Optimized,
-        w.as_ref(),
-        256,
-        Backend::Native,
-    );
+    let mut e = Hetm::from_config(&c)
+        .workload_named(name)
+        .app_config(raw)
+        .gpu_batch(256)
+        .force_cluster(true)
+        .build()
+        .unwrap();
     assert_eq!(e.n_gpus(), n_gpus);
     e.run_rounds(4).unwrap();
     e.drain().unwrap();
-    assert!(e.stats.cpu_attempts > 0, "{label}: CPU idle");
-    assert!(e.stats.gpu_attempts > 0, "{label}: GPU idle");
-    w.check_invariants(e.cpu.stmr())
+    assert!(e.stats().cpu_attempts > 0, "{label}: CPU idle");
+    assert!(e.stats().gpu_attempts > 0, "{label}: GPU idle");
+    e.check_invariants()
         .unwrap_or_else(|err| panic!("{label} (ClusterEngine): {err}"));
 }
 
@@ -122,17 +131,16 @@ fn paper_workloads_pass_their_oracles_too() {
             c.n_words = 1 << 13;
             let raw = Raw::parse("[memcached]\nn_sets = 1024\n[synth]\nconflict_prob = 0.001\n")
                 .unwrap();
-            let w = from_raw(name, &raw, &c).unwrap();
-            let mut e = launch::build_workload_cluster_engine(
-                &c,
-                Variant::Optimized,
-                w.as_ref(),
-                256,
-                Backend::Native,
-            );
+            let mut e = Hetm::from_config(&c)
+                .workload_named(name)
+                .app_config(raw)
+                .gpu_batch(256)
+                .force_cluster(true)
+                .build()
+                .unwrap();
             e.run_rounds(3).unwrap();
             e.drain().unwrap();
-            w.check_invariants(e.cpu.stmr())
+            e.check_invariants()
                 .unwrap_or_else(|err| panic!("{name}/n_gpus={n_gpus}: {err}"));
         }
     }
@@ -154,16 +162,19 @@ fn favor_gpu_end_to_end_via_default_snapshot_path() {
         "[bank]\naccounts = 4096\nupdate_frac = 1.0\ncross_prob = 1.0\n",
     )
     .unwrap();
-    let w = from_raw("bank", &raw, &c).unwrap();
-    let mut e =
-        launch::build_workload_engine(&c, Variant::Optimized, w.as_ref(), 256, Backend::Native);
+    let mut e = Hetm::from_config(&c)
+        .workload_named("bank")
+        .app_config(raw)
+        .gpu_batch(256)
+        .build()
+        .unwrap();
     e.run_rounds(3).unwrap();
-    assert_eq!(e.stats.rounds_committed, 0, "injected conflicts must abort");
-    assert_eq!(e.stats.cpu_commits, 0, "favor-GPU discards CPU commits");
-    assert!(e.stats.gpu_commits > 0, "GPU work survives");
-    assert!(e.stats.discarded_commits > 0);
+    assert_eq!(e.stats().rounds_committed, 0, "injected conflicts must abort");
+    assert_eq!(e.stats().cpu_commits, 0, "favor-GPU discards CPU commits");
+    assert!(e.stats().gpu_commits > 0, "GPU work survives");
+    assert!(e.stats().discarded_commits > 0);
     e.drain().unwrap();
-    w.check_invariants(e.cpu.stmr())
+    e.check_invariants()
         .expect("conservation across favor-GPU rollbacks");
 }
 
@@ -174,19 +185,18 @@ fn favor_gpu_cluster_end_to_end_via_default_snapshot_path() {
         "[bank]\naccounts = 8192\nupdate_frac = 1.0\ncross_prob = 1.0\n",
     )
     .unwrap();
-    let w = from_raw("bank", &raw, &c).unwrap();
-    let mut e = launch::build_workload_cluster_engine(
-        &c,
-        Variant::Optimized,
-        w.as_ref(),
-        256,
-        Backend::Native,
-    );
+    let mut e = Hetm::from_config(&c)
+        .workload_named("bank")
+        .app_config(raw)
+        .gpu_batch(256)
+        .build()
+        .unwrap();
+    assert!(e.is_cluster());
     e.run_rounds(3).unwrap();
-    assert_eq!(e.stats.rounds_committed, 0, "injected conflicts must abort");
-    assert!(e.stats.gpu_commits > 0, "GPU work survives on both shards");
+    assert_eq!(e.stats().rounds_committed, 0, "injected conflicts must abort");
+    assert!(e.stats().gpu_commits > 0, "GPU work survives on both shards");
     e.drain().unwrap();
-    w.check_invariants(e.cpu.stmr())
+    e.check_invariants()
         .expect("conservation across sharded favor-GPU rollbacks");
 }
 

@@ -21,6 +21,8 @@ mod common;
 
 use shetm::config::{Raw, SystemConfig};
 use shetm::session::Hetm;
+use shetm::telemetry::json::Obj;
+use shetm::telemetry::write_bench_json;
 use shetm::util::bench::Table;
 
 struct Point {
@@ -70,26 +72,25 @@ fn run_point(theta: f64, compaction: bool, filter: bool, rounds: usize) -> Point
 }
 
 fn json_point(p: &Point) -> String {
-    format!(
-        "{{\"theta\": {}, \"compaction\": {}, \"filter\": {}, \
-         \"raw_entries\": {}, \"shipped_entries\": {}, \"chunks\": {}, \
-         \"chunks_filtered\": {}, \"filtered_chunk_ratio\": {:.4}, \
-         \"gpu_validation_s\": {:.9}, \"virtual_tx_per_s\": {:.3}}}",
-        p.theta,
-        p.compaction,
-        p.filter,
-        p.raw_entries,
-        p.shipped_entries,
-        p.chunks,
-        p.chunks_filtered,
-        if p.chunks == 0 {
-            0.0
-        } else {
-            p.chunks_filtered as f64 / p.chunks as f64
-        },
-        p.validation_s,
-        p.throughput,
-    )
+    // Serialized via the telemetry JSON builder (the same machinery as
+    // MetricsSnapshot), keeping the documented field names.
+    let ratio = if p.chunks == 0 {
+        0.0
+    } else {
+        p.chunks_filtered as f64 / p.chunks as f64
+    };
+    Obj::new()
+        .f64("theta", p.theta, 2)
+        .bool("compaction", p.compaction)
+        .bool("filter", p.filter)
+        .u64("raw_entries", p.raw_entries)
+        .u64("shipped_entries", p.shipped_entries)
+        .u64("chunks", p.chunks)
+        .u64("chunks_filtered", p.chunks_filtered)
+        .f64("filtered_chunk_ratio", ratio, 4)
+        .f64("gpu_validation_s", p.validation_s, 9)
+        .f64("virtual_tx_per_s", p.throughput, 3)
+        .finish()
 }
 
 fn main() {
@@ -161,15 +162,10 @@ fn main() {
         }
     }
 
-    let body = format!(
-        "{{\n  \"bench\": \"ablate_log\",\n  \"fast\": {},\n  \"rounds\": {},\n  \
-         \"points\": [\n    {}\n  ]\n}}\n",
-        common::fast(),
-        rounds,
-        json.join(",\n    ")
-    );
-    match std::fs::write("BENCH_log.json", &body) {
-        Ok(()) => println!("\nwrote BENCH_log.json ({} points)", json.len()),
+    let n_points = json.len();
+    let extras = [("rounds", format!("{rounds}"))];
+    match write_bench_json("BENCH_log.json", "ablate_log", common::fast(), &extras, json) {
+        Ok(()) => println!("\nwrote BENCH_log.json ({n_points} points)"),
         Err(e) => eprintln!("\ncould not write BENCH_log.json: {e}"),
     }
 }

@@ -34,6 +34,8 @@ use std::time::Instant;
 
 use shetm::apps::synth::SynthSpec;
 use shetm::session::Hetm;
+use shetm::telemetry::json::Obj;
+use shetm::telemetry::write_bench_json;
 use shetm::util::bench::Table;
 
 struct Point {
@@ -107,14 +109,18 @@ fn run_cluster_cfg(
 }
 
 fn json_point(sweep: &str, p: &Point, speedup: f64) -> String {
-    format!(
-        "{{\"sweep\": \"{}\", \"n_gpus\": {}, \"threads\": {}, \
-         \"cross_shard_prob\": {}, \"wall_s\": {:.6}, \
-         \"virtual_tx_per_s\": {:.3}, \"round_abort_rate\": {:.6}, \
-         \"speedup_vs_threads1\": {:.4}}}",
-        sweep, p.n_gpus, p.threads, p.cross_shard_prob, p.wall_s, p.throughput,
-        p.abort_rate, speedup
-    )
+    // Serialized via the telemetry JSON builder (the same machinery as
+    // MetricsSnapshot), keeping the documented field names.
+    Obj::new()
+        .str("sweep", sweep)
+        .u64("n_gpus", p.n_gpus as u64)
+        .u64("threads", p.threads as u64)
+        .f64("cross_shard_prob", p.cross_shard_prob, 3)
+        .f64("wall_s", p.wall_s, 6)
+        .f64("virtual_tx_per_s", p.throughput, 3)
+        .f64("round_abort_rate", p.abort_rate, 6)
+        .f64("speedup_vs_threads1", speedup, 4)
+        .finish()
 }
 
 fn sweep(title: &str, key: &str, cross_shard_prob: f64, sim_s: f64, json: &mut Vec<String>) {
@@ -215,15 +221,10 @@ fn main() {
     sweep("scale_gpus: 10% cross-shard writes", "cross10", 0.10, sim_s, &mut json);
     sweep_cpu_par(sim_s, &mut json);
 
-    let body = format!(
-        "{{\n  \"bench\": \"scale_gpus\",\n  \"fast\": {},\n  \"sim_s\": {},\n  \
-         \"points\": [\n    {}\n  ]\n}}\n",
-        common::fast(),
-        sim_s,
-        json.join(",\n    ")
-    );
-    match std::fs::write("BENCH_scale.json", &body) {
-        Ok(()) => println!("\nwrote BENCH_scale.json ({} points)", json.len()),
+    let n_points = json.len();
+    let extras = [("sim_s", format!("{sim_s}"))];
+    match write_bench_json("BENCH_scale.json", "scale_gpus", common::fast(), &extras, json) {
+        Ok(()) => println!("\nwrote BENCH_scale.json ({n_points} points)"),
         Err(e) => eprintln!("\ncould not write BENCH_scale.json: {e}"),
     }
 }

@@ -73,6 +73,20 @@ use crate::coordinator::round::{CostModel, CpuDriver, EngineConfig, GpuDriver, V
 use crate::coordinator::stats::{PhaseBreakdown, RoundStats, RunStats};
 use crate::gpu::{Bitmap, GpuDevice, LogChunk};
 use crate::stm::WriteEntry;
+use crate::telemetry::{RoundObs, Telemetry};
+
+/// Lane-private telemetry samples, gathered only when a recorder is
+/// installed and folded in device-index order at the round barrier —
+/// observation never perturbs the deterministic schedule (DESIGN.md §11).
+#[derive(Default)]
+struct LaneObs {
+    /// Per-chunk own-shard validation costs, in chunk order.
+    vcost: Vec<f64>,
+    /// Per-chunk H2D log-ship durations, in ship order.
+    ship: Vec<f64>,
+    /// Committed-merge D2H transfer durations, in range order.
+    merge: Vec<f64>,
+}
 
 /// One device's pipeline state for the round in flight: disjoint mutable
 /// borrows of the per-device engine state plus lane-private partials of
@@ -138,6 +152,9 @@ struct Lane<'a, G> {
     refresh_bytes: u64,
     /// Refresh DMAs of this round (folded into `ClusterStats`).
     refresh_transfers: u64,
+    /// Telemetry samples (`None` when the recorder is off — the common
+    /// case pays one pointer of storage and no per-chunk work).
+    obs: Option<LaneObs>,
 }
 
 /// Run `f` over every lane — sequentially when `threads <= 1`, otherwise
@@ -211,6 +228,10 @@ pub struct ClusterEngine<C: CpuDriver, G: GpuDriver> {
     pub cluster: ClusterStats,
     /// Per-round statistics (most recent rounds, ring-limited).
     pub round_log: Vec<RoundStats>,
+    /// Observability hook (off by default; see [`crate::telemetry`]).
+    /// At `n_gpus = 1` the recorded observations are bit-identical to
+    /// [`RoundEngine`]'s (`rust/tests/telemetry.rs` pins this).
+    pub tel: Telemetry,
 
     policy: Policy,
     h2d: Vec<BusTimeline>,
@@ -279,6 +300,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             stats: RunStats::default(),
             cluster: ClusterStats::new(n),
             round_log: Vec::new(),
+            tel: Telemetry::off(),
             policy,
             h2d: (0..n).map(|_| BusTimeline::new()).collect(),
             d2h: (0..n).map(|_| BusTimeline::new()).collect(),
@@ -403,6 +425,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         }
         self.stats.cpu_commits += commits;
         self.stats.cpu_attempts += attempts;
+        if self.tel.enabled() {
+            self.tel.record_txn(entries.len() as u64, attempts, self.t);
+        }
     }
 
     /// Execute one synchronization round across all devices.
@@ -424,6 +449,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             stats,
             cluster,
             round_log,
+            tel,
             policy,
             h2d,
             d2h,
@@ -452,7 +478,12 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         let chunk_cost = chunk_entries as f64 * cost.gpu_validate_entry_s;
         let filter = cfg.chunk_filter;
 
-        cpu.set_read_only(policy.cpu_read_only());
+        // Telemetry samples live in the lanes and fold at the barrier in
+        // device-index order (same shape as every other lane partial).
+        let tel_on = tel.enabled();
+
+        let read_only = policy.cpu_read_only();
+        cpu.set_read_only(read_only);
         let conditional = policy.conditional_apply();
         if conditional {
             // favor-GPU needs a CPU snapshot to roll back to (fork/COW).
@@ -494,6 +525,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 err: None,
                 refresh_bytes: 0,
                 refresh_transfers: 0,
+                obs: tel_on.then(LaneObs::default),
             })
             .collect();
 
@@ -610,6 +642,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                         let dur = cost.bus_h2d.transfer_secs(c.wire_bytes());
                         let (_, end) = lane.h2d.schedule(cpu_cursor, dur);
                         lane.arrivals.push(end);
+                        if let Some(o) = &mut lane.obs {
+                            o.ship.push(dur);
+                        }
                         lane.chunks.push(c);
                     }
                 }
@@ -673,6 +708,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 let dur = cost.bus_h2d.transfer_secs(c.wire_bytes());
                 let (_, end) = lane.h2d.schedule(cpu_cursor, dur);
                 lane.arrivals.push(end);
+                if let Some(o) = &mut lane.obs {
+                    o.ship.push(dur);
+                }
                 lane.chunks.push(c);
                 if !optimized {
                     // Basic: the CPU is blocked while shipping its logs.
@@ -730,6 +768,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                         }
                     };
                     vcost += chunk_cost;
+                }
+                if let Some(o) = &mut lane.obs {
+                    o.vcost.push(vcost);
                 }
                 lane.cursor = start + vcost;
                 lane.gpu_phases.validation_s += vcost;
@@ -917,6 +958,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                     let dur = cost.bus_d2h.transfer_secs(bytes);
                     let (_, end) = lane.d2h.schedule(lane.cursor, dur);
                     dth_end = end;
+                    if let Some(o) = &mut lane.obs {
+                        o.merge.push(dur);
+                    }
                 }
                 lane.dth_end = dth_end;
             });
@@ -1125,6 +1169,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             }
         }
 
+        // Entries carried into the next round (zero when the CPU lost:
+        // its branch already cleared the carry).
+        let carried = carry.len() as u64;
         if !cpu_lost {
             router.reset_with_carry(carry);
         }
@@ -1162,11 +1209,73 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         } else if !optimized {
             rs.cpu_phases.validation_s += basic_ship_span;
         }
+
+        // Telemetry fold: capture the per-lane series in device-index
+        // order before the lane borrows are released.  At n_dev = 1 every
+        // captured value is bitwise equal to what `RoundEngine` records
+        // (single chain, same operation order), so traces and metrics are
+        // bit-identical across the two engines.
+        let tel_data = tel_on.then(|| {
+            let mut dev_phases = Vec::with_capacity(n_dev);
+            let mut dev_commits = Vec::with_capacity(n_dev);
+            let mut chunk_validate = Vec::with_capacity(n_dev);
+            let mut bus_ship = Vec::with_capacity(n_dev);
+            let mut bus_merge = Vec::with_capacity(n_dev);
+            let mut h2d_busy = Vec::with_capacity(n_dev);
+            let mut d2h_busy = Vec::with_capacity(n_dev);
+            for lane in &mut lanes {
+                dev_phases.push(lane.gpu_phases);
+                // Speculative commits as of the verdict: the lane partial
+                // is never zeroed by loser discard.
+                dev_commits.push(lane.gpu_commits);
+                let o = lane.obs.take().unwrap_or_default();
+                chunk_validate.push(o.vcost);
+                bus_ship.push(o.ship);
+                bus_merge.push(o.merge);
+                h2d_busy.push(lane.h2d.busy_total());
+                d2h_busy.push(lane.d2h.busy_total());
+            }
+            (
+                dev_phases,
+                dev_commits,
+                chunk_validate,
+                bus_ship,
+                bus_merge,
+                h2d_busy,
+                d2h_busy,
+            )
+        });
         drop(lanes);
 
         rs.t_end = round_end;
         *t = round_end;
         stats.absorb(&rs);
+        if let Some((
+            dev_phases,
+            dev_commits,
+            chunk_validate,
+            bus_ship,
+            bus_merge,
+            h2d_busy,
+            d2h_busy,
+        )) = &tel_data
+        {
+            tel.record_round(&RoundObs {
+                round: stats.rounds - 1,
+                rs: &rs,
+                read_only,
+                abort_streak: policy.gpu_abort_streak(),
+                epoch_base,
+                carried,
+                dev_phases,
+                dev_commits,
+                chunk_validate_s: chunk_validate,
+                bus_ship_s: bus_ship,
+                bus_merge_s: bus_merge,
+                h2d_busy_s: h2d_busy,
+                d2h_busy_s: d2h_busy,
+            });
+        }
         if round_log.len() < 10_000 {
             round_log.push(rs);
         }

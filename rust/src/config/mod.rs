@@ -255,6 +255,11 @@ pub struct SystemConfig {
     /// `[synth]`, `[memcached]`) and are parsed by
     /// [`crate::apps::workload::from_raw`].
     pub workload: String,
+    /// Enable the telemetry layer (`telemetry.enabled`): metrics registry
+    /// plus — with `shetm run --trace` — the virtual-time trace stream.
+    /// Off by default; off means a no-op recorder and zero overhead
+    /// (DESIGN.md §11).
+    pub telemetry_enabled: bool,
 }
 
 impl Default for SystemConfig {
@@ -286,6 +291,7 @@ impl Default for SystemConfig {
             cross_shard_prob: 0.0,
             cluster_threads: 1,
             workload: "synth".to_string(),
+            telemetry_enabled: false,
         }
     }
 }
@@ -351,6 +357,7 @@ impl SystemConfig {
             cross_shard_prob: raw.get_or("cluster.cross_shard_prob", d.cross_shard_prob)?,
             cluster_threads,
             workload: raw.get("workload").unwrap_or(&d.workload).to_string(),
+            telemetry_enabled: raw.get_bool_or("telemetry.enabled", d.telemetry_enabled)?,
         })
     }
 }

@@ -24,6 +24,7 @@ use crate::bus::{BusModel, BusTimeline};
 use crate::config::PolicyKind;
 use crate::gpu::{GpuDevice, LogChunk};
 use crate::stm::{SharedStmr, WriteEntry};
+use crate::telemetry::{RoundObs, Telemetry};
 
 /// Algorithm variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -311,6 +312,10 @@ pub struct RoundEngine<C: CpuDriver, G: GpuDriver> {
     pub stats: RunStats,
     /// Per-round statistics (most recent rounds, ring-limited).
     pub round_log: Vec<RoundStats>,
+    /// Telemetry recorder (no-op unless installed by the session
+    /// builder).  Observations are gathered only when
+    /// `tel.enabled()`; a disabled recorder costs one branch per round.
+    pub tel: Telemetry,
 
     policy: Policy,
     h2d: BusTimeline,
@@ -342,6 +347,7 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
             gpu,
             stats: RunStats::default(),
             round_log: Vec::new(),
+            tel: Telemetry::off(),
             policy,
             h2d: BusTimeline::new(),
             d2h: BusTimeline::new(),
@@ -432,6 +438,9 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
         self.log.extend_carried(entries);
         self.stats.cpu_commits += commits;
         self.stats.cpu_attempts += attempts;
+        if self.tel.enabled() {
+            self.tel.record_txn(entries.len() as u64, attempts, self.t);
+        }
     }
 
     /// Merge-phase transfer ranges: the GPU write-set rounded out to the
@@ -451,7 +460,16 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
         };
         let n_bytes = (self.device.n_words() * 4) as u64;
 
-        self.cpu.set_read_only(self.policy.cpu_read_only());
+        // Telemetry scratch: per-chunk cost samples gathered only when a
+        // recorder is installed, folded into one `record_round` at the
+        // round barrier (same shape as the cluster engine's lane fold).
+        let tel_on = self.tel.enabled();
+        let mut obs_vcost: Vec<f64> = Vec::new();
+        let mut obs_ship: Vec<f64> = Vec::new();
+        let mut obs_merge: Vec<f64> = Vec::new();
+
+        let read_only = self.policy.cpu_read_only();
+        self.cpu.set_read_only(read_only);
         if self.policy.conditional_apply() {
             // favor-GPU needs a CPU snapshot to roll back to (fork/COW).
             self.cpu.snapshot();
@@ -516,6 +534,9 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
                     let dur = self.cost.bus_h2d.transfer_secs(c.wire_bytes());
                     let (_, end) = self.h2d.schedule(cpu_cursor, dur);
                     arrivals.push(end);
+                    if tel_on {
+                        obs_ship.push(dur);
+                    }
                 }
             }
 
@@ -570,6 +591,9 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
                 let dur = self.cost.bus_h2d.transfer_secs(c.wire_bytes());
                 let (_, end) = self.h2d.schedule(cpu_cursor, dur);
                 arrivals.push(end);
+                if tel_on {
+                    obs_ship.push(dur);
+                }
                 if !optimized {
                     // Basic: the CPU is blocked while shipping its logs.
                     rs.cpu_phases.validation_s += dur;
@@ -620,6 +644,9 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
                 };
                 vcost += chunk_cost;
             }
+            if tel_on {
+                obs_vcost.push(vcost);
+            }
             gpu_cursor = start + vcost;
             rs.gpu_phases.validation_s += vcost;
         }
@@ -654,6 +681,9 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
         }
 
         // --- Merge phase ---------------------------------------------------
+        // Speculative commits as of the verdict, before loser-discard
+        // zeroing (the per-device series the trace reports).
+        let dev_commits_pre = rs.gpu_commits;
         let ok = conflicts == 0;
         rs.committed = ok;
         let round_end;
@@ -680,6 +710,9 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
                 let dur = self.cost.bus_d2h.transfer_secs(bytes);
                 let (_, end) = self.d2h.schedule(gpu_cursor, dur);
                 dth_end = end;
+                if tel_on {
+                    obs_merge.push(dur);
+                }
                 let data = &self.device.stmr()[s..e];
                 self.cpu.stmr().install_range(s, data);
             }
@@ -772,6 +805,9 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
         let cpu_lost = !ok && self.policy.loser() == Loser::Cpu;
         self.policy.on_round(ok);
         self.gpu.on_round_end(ok);
+        // Entries carried into the next round (zero when the CPU lost:
+        // its branch already cleared the carry).
+        let carried = self.carry.len() as u64;
         if !cpu_lost {
             self.log.reset_with_carry(&self.carry);
         }
@@ -788,6 +824,33 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
         rs.t_end = round_end;
         self.t = round_end;
         self.stats.absorb(&rs);
+        if tel_on {
+            // Derive the round's telemetry at the barrier, purely from
+            // per-round data — the cluster engine emits bit-identical
+            // observations at n_gpus = 1 (see DESIGN.md §11).
+            let dev_phases = [rs.gpu_phases];
+            let dev_commits = [dev_commits_pre];
+            let chunk_validate = [std::mem::take(&mut obs_vcost)];
+            let bus_ship = [std::mem::take(&mut obs_ship)];
+            let bus_merge = [std::mem::take(&mut obs_merge)];
+            let h2d_busy = [self.h2d.busy_total()];
+            let d2h_busy = [self.d2h.busy_total()];
+            self.tel.record_round(&RoundObs {
+                round: self.stats.rounds - 1,
+                rs: &rs,
+                read_only,
+                abort_streak: self.policy.gpu_abort_streak(),
+                epoch_base: base,
+                carried,
+                dev_phases: &dev_phases,
+                dev_commits: &dev_commits,
+                chunk_validate_s: &chunk_validate,
+                bus_ship_s: &bus_ship,
+                bus_merge_s: &bus_merge,
+                h2d_busy_s: &h2d_busy,
+                d2h_busy_s: &d2h_busy,
+            });
+        }
         if self.round_log.len() < 10_000 {
             self.round_log.push(rs);
         }

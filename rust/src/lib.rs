@@ -46,6 +46,7 @@ pub mod gpu;
 pub mod runtime;
 pub mod session;
 pub mod stm;
+pub mod telemetry;
 pub mod util;
 pub mod launch;
 

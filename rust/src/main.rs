@@ -16,6 +16,7 @@
 //!   --threads N          OS threads for the per-device cluster pipelines
 //!   --basic              use the basic (unoptimized) algorithm variant
 //!   --pjrt               force the PJRT backend from ./artifacts
+//!   --trace FILE         write a Perfetto-loadable virtual-time trace
 //!
 //! Example:
 //!   shetm synth --set hetm.period_ms=80 --set cpu.guest=norec --rounds 100
@@ -27,16 +28,15 @@ use anyhow::{bail, Context, Result};
 
 use shetm::apps::memcached::McConfig;
 use shetm::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
-use shetm::cluster::ClusterStats;
 use shetm::config::{Raw, SystemConfig};
 use shetm::coordinator::baseline;
 use shetm::coordinator::round::Variant;
-use shetm::coordinator::RunStats;
 use shetm::gpu::{Backend, GpuDevice};
 use shetm::launch;
 use shetm::runtime::ArtifactStore;
-use shetm::session::Hetm;
+use shetm::session::{Hetm, Session};
 use shetm::stm::{GlobalClock, SharedStmr};
+use shetm::telemetry::MetricsSnapshot;
 
 struct Cli {
     cmd: String,
@@ -47,6 +47,7 @@ struct Cli {
     gpus: Option<usize>,
     threads: Option<usize>,
     workload: Option<String>,
+    trace: Option<String>,
 }
 
 fn parse_cli() -> Result<Cli> {
@@ -73,6 +74,7 @@ fn parse_cli() -> Result<Cli> {
     let mut gpus = None;
     let mut threads = None;
     let mut workload = None;
+    let mut trace = None;
     while let Some(a) = args.next() {
         match a.as_str() {
             "--config" => {
@@ -109,6 +111,9 @@ fn parse_cli() -> Result<Cli> {
             "--workload" => {
                 workload = Some(args.next().context("--workload needs a name")?);
             }
+            "--trace" => {
+                trace = Some(args.next().context("--trace needs an output file")?);
+            }
             "--basic" => basic = true,
             "--pjrt" => pjrt = true,
             other => bail!("unknown argument {other:?} (try `shetm help`)"),
@@ -123,67 +128,23 @@ fn parse_cli() -> Result<Cli> {
         gpus,
         threads,
         workload,
+        trace,
     })
 }
 
-fn print_stats(label: &str, s: &RunStats) {
-    println!("== {label} ==");
-    println!(
-        "  rounds            : {} ({} committed, {} early-aborted)",
-        s.rounds, s.rounds_committed, s.rounds_early_aborted
-    );
-    println!("  virtual duration  : {:.4} s", s.duration_s);
-    println!("  cpu commits       : {} ({} attempts)", s.cpu_commits, s.cpu_attempts);
-    println!("  gpu commits       : {} ({} attempts)", s.gpu_commits, s.gpu_attempts);
-    println!("  discarded commits : {}", s.discarded_commits);
-    println!("  log chunks        : {}", s.chunks);
-    println!(
-        "  log entries       : {} raw -> {} shipped ({} chunks filtered, {} skipped post-abort)",
-        s.log_entries_raw, s.log_entries_shipped, s.chunks_filtered, s.chunks_skipped_post_abort
-    );
-    println!("  throughput        : {:.0} tx/s", s.throughput());
-    println!("  round abort rate  : {:.3}", s.round_abort_rate());
-    let c = &s.cpu_phases;
-    let g = &s.gpu_phases;
-    println!(
-        "  cpu phases (s)    : proc {:.4} validate {:.4} merge {:.4} blocked {:.4}",
-        c.processing_s, c.validation_s, c.merge_s, c.blocked_s
-    );
-    println!(
-        "  gpu phases (s)    : proc {:.4} validate {:.4} merge {:.4} blocked {:.4}",
-        g.processing_s, g.validation_s, g.merge_s, g.blocked_s
-    );
-}
-
-fn print_cluster_stats(s: &RunStats, c: &ClusterStats) {
-    println!(
-        "  cross-shard       : {} checks, {} escalations, {} conflict entries",
-        c.cross_checks, c.cross_escalations, c.cross_conflict_entries
-    );
-    println!(
-        "  cross-shard aborts: {} rounds ({:.3} of all rounds)",
-        c.rounds_aborted_cross_shard,
-        c.cross_shard_abort_rate(s.rounds)
-    );
-    println!(
-        "  refresh traffic   : {} KiB in {} DMAs",
-        c.refresh_bytes / 1024,
-        c.refresh_transfers
-    );
-    for (d, dev) in c.per_device.iter().enumerate() {
-        println!(
-            "  gpu[{d}]            : {} commits {} batches {} chunks ({} filtered) | \
-             proc {:.4} validate {:.4} merge {:.4} blocked {:.4}",
-            dev.commits,
-            dev.batches,
-            dev.chunks,
-            dev.chunks_filtered,
-            dev.phases.processing_s,
-            dev.phases.validation_s,
-            dev.phases.merge_s,
-            dev.phases.blocked_s
-        );
+/// Render the session's results (stats block, cluster block, histogram
+/// lines, workload summary) from one [`MetricsSnapshot`] — the single
+/// serializer shared with the session API and the benches — and write
+/// the trace file when `--trace` was given.
+fn report(cli: &Cli, label: &str, session: &Session) -> Result<()> {
+    println!("{}", session.metrics_snapshot(label).render_text());
+    if let Some(path) = &cli.trace {
+        session
+            .write_trace(path)
+            .with_context(|| format!("writing trace to {path}"))?;
+        println!("  trace             : {path}");
     }
+    Ok(())
 }
 
 fn variant(cli: &Cli) -> Variant {
@@ -253,6 +214,7 @@ fn cmd_synth(cli: &Cli) -> Result<()> {
     let mut session = Hetm::from_config(&cfg)
         .variant(variant(cli))
         .synth(cpu_spec, gpu_spec)
+        .trace(cli.trace.is_some())
         .build()?;
     session.run_rounds(cli.rounds)?;
     let label = if session.is_cluster() {
@@ -266,11 +228,7 @@ fn cmd_synth(cli: &Cli) -> Result<()> {
     } else {
         "synthetic W1-100%, partitioned".to_string()
     };
-    print_stats(&label, session.stats());
-    if let Some(c) = session.cluster() {
-        print_cluster_stats(session.stats(), c);
-    }
-    Ok(())
+    report(cli, &label, &session)
 }
 
 fn cmd_memcached(cli: &Cli) -> Result<()> {
@@ -287,6 +245,7 @@ fn cmd_memcached(cli: &Cli) -> Result<()> {
     let mut session = Hetm::from_config(&cfg)
         .variant(variant(cli))
         .memcached(mc)
+        .trace(cli.trace.is_some())
         .build()?;
     session.run_rounds(cli.rounds)?;
     let label = if session.is_cluster() {
@@ -294,11 +253,7 @@ fn cmd_memcached(cli: &Cli) -> Result<()> {
     } else {
         "memcachedGPU on SHeTM".to_string()
     };
-    print_stats(&label, session.stats());
-    if let Some(c) = session.cluster() {
-        print_cluster_stats(session.stats(), c);
-    }
-    Ok(())
+    report(cli, &label, &session)
 }
 
 /// `shetm run [--workload NAME] [--gpus N]`: drive any [`shetm::apps`]
@@ -318,20 +273,14 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         .variant(variant(cli))
         .workload_named(&name)
         .app_config(cli.raw.clone())
+        .trace(cli.trace.is_some())
         .build()?;
     session.run_rounds(cli.rounds)?;
     session.drain()?;
-    print_stats(&label, session.stats());
-    if let Some(c) = session.cluster() {
-        print_cluster_stats(session.stats(), c);
-    }
+    report(cli, &label, &session)?;
     session
         .check_invariants()
         .context("correctness oracle FAILED")?;
-    let summary = session.stats_summary();
-    if !summary.is_empty() {
-        println!("  {summary}");
-    }
     println!("  invariants        : OK ({name} oracle passed)");
     Ok(())
 }
@@ -353,7 +302,11 @@ fn cmd_baselines(cli: &Cli) -> Result<()> {
         cfg.seed,
     );
     let cpu_stats = baseline::run_cpu_only(&mut cpu, dur, cfg.period_s);
-    print_stats("CPU-only (uninstrumented guest)", &cpu_stats);
+    println!(
+        "{}",
+        MetricsSnapshot::from_run_stats("CPU-only (uninstrumented guest)", &cpu_stats)
+            .render_text()
+    );
 
     let mut gpu = SynthGpu::new(
         SynthSpec::w1(n, 1.0),
@@ -365,7 +318,10 @@ fn cmd_baselines(cli: &Cli) -> Result<()> {
     let mut device = GpuDevice::new(n, cfg.bmp_shift, Backend::Native);
     let cost = launch::cost_model(&cfg);
     let gpu_stats = baseline::run_gpu_only(&mut gpu, &mut device, &cost, dur, cfg.period_s)?;
-    print_stats("GPU-only (double buffering)", &gpu_stats);
+    println!(
+        "{}",
+        MetricsSnapshot::from_run_stats("GPU-only (double buffering)", &gpu_stats).render_text()
+    );
     Ok(())
 }
 
@@ -405,6 +361,9 @@ OPTIONS:
                     selects the cluster engine even at --gpus 1)
   --basic           basic algorithm variant (Fig. 1a)
   --pjrt            use PJRT artifacts from ./artifacts
+  --trace FILE      write a Perfetto-loadable virtual-time trace (JSON;
+                    implies telemetry; deterministic — bit-identical
+                    across --threads N; see docs/OBSERVABILITY.md)
 
 KEYS (defaults): stmr.n_words=262144 stmr.bmp_shift=0 cpu.threads=8
   cpu.parallel=false (synth: run the cpu.threads workers on real OS
@@ -419,6 +378,8 @@ KEYS (defaults): stmr.n_words=262144 stmr.bmp_shift=0 cpu.threads=8
   gpu.validate_entry_ns gpu.sig_check_ns=250
   cluster.n_gpus=1 cluster.shard_bits=12 cluster.cross_shard_prob=0
   cluster.threads=1
+  telemetry.enabled=false (labeled metrics + latency histograms at every
+  round barrier; zero-overhead when off)
   memcached.n_sets memcached.steal runtime.artifacts seed
   workload=synth|memcached|bank|kmeans|zipfkv plus per-app sections:
   bank.accounts bank.balance bank.max_transfer bank.update_frac

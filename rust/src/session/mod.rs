@@ -85,6 +85,7 @@ use crate::coordinator::stats::{RoundStats, RunStats};
 use crate::gpu::{Backend, GpuDevice};
 use crate::launch::{self, WorkloadClusterEngine, WorkloadEngine};
 use crate::stm::{Abort, GuestTm, SharedStmr, TxOps, TxnResult};
+use crate::telemetry::{Collector, MetricsSnapshot, Telemetry};
 
 /// A misconfiguration caught by [`Hetm::build`].  Every knob-cross-product
 /// rule lives here, as a typed error instead of a scattered panic or an
@@ -252,6 +253,7 @@ pub struct Hetm {
     clock_epoch_limit: Option<i32>,
     shard_bits_explicit: bool,
     force_cluster: bool,
+    trace: bool,
 }
 
 impl Default for Hetm {
@@ -280,6 +282,7 @@ impl Hetm {
             clock_epoch_limit: None,
             shard_bits_explicit: false,
             force_cluster: false,
+            trace: false,
         }
     }
 
@@ -479,6 +482,25 @@ impl Hetm {
         self
     }
 
+    /// Enable the telemetry collector (`telemetry.enabled`): labeled
+    /// counters, gauges, and latency histograms gathered at every round
+    /// barrier.  Off by default — the engines then skip all observation
+    /// work (one branch per round; DESIGN.md §11).
+    pub fn telemetry(mut self, on: bool) -> Self {
+        self.cfg.telemetry_enabled = on;
+        self
+    }
+
+    /// Additionally buffer the virtual-time trace stream (implies
+    /// telemetry; export with [`Session::trace_json`] /
+    /// [`Session::write_trace`], or `shetm run --trace FILE`).  The
+    /// stream is deterministic: bit-identical across `--threads N` and
+    /// across engines at one device.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
     /// Validate the whole knob cross-product and assemble the [`Session`].
     pub fn build(self) -> Result<Session, BuildError> {
         let Hetm {
@@ -491,6 +513,7 @@ impl Hetm {
             clock_epoch_limit,
             shard_bits_explicit,
             force_cluster,
+            trace,
         } = self;
 
         // --- Scalar knob validation (one place, typed) -------------------
@@ -611,7 +634,7 @@ impl Hetm {
         // --- Assembly (bit-identical to the legacy launch paths) ---------
         let mut tm_handle: Option<Arc<dyn GuestTm>> = None;
         let mut stmr_handle: Option<Arc<SharedStmr>> = None;
-        let inner = if cfg.cpu_parallel {
+        let mut inner = if cfg.cpu_parallel {
             // Synthetic workload on real CPU worker threads: mirrors the
             // former `build_parallel_synth_{,cluster_}engine` construction
             // exactly (same seeds, same specs), with the drivers boxed.
@@ -718,6 +741,16 @@ impl Hetm {
             engine.align_replicas();
             Inner::Single(Box::new(engine))
         };
+
+        // Telemetry is installed after assembly so the constructors stay
+        // bit-identical to the legacy launch paths; observation never
+        // participates in the deterministic schedule.
+        if cfg.telemetry_enabled || trace {
+            match &mut inner {
+                Inner::Single(e) => e.tel = Telemetry::collecting(trace),
+                Inner::Cluster(e) => e.tel = Telemetry::collecting(trace),
+            }
+        }
 
         Ok(Session {
             inner,
@@ -881,6 +914,48 @@ impl Session {
     /// The workload's optional run-summary line.
     pub fn stats_summary(&self) -> String {
         self.workload.stats_summary()
+    }
+
+    /// The active telemetry collector (`None` when telemetry is off).
+    pub fn collector(&self) -> Option<&Collector> {
+        match &self.inner {
+            Inner::Single(e) => e.tel.collector(),
+            Inner::Cluster(e) => e.tel.collector(),
+        }
+    }
+
+    /// Export everything this run produced as one [`MetricsSnapshot`] —
+    /// the single serializer behind `shetm`'s stats block, the JSON and
+    /// Prometheus exports, and the bench files.
+    pub fn metrics_snapshot(&self, label: &str) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot::from_run_stats(label, self.stats());
+        snap.meta = vec![
+            ("workload".to_string(), self.workload_name().to_string()),
+            ("n_gpus".to_string(), self.n_gpus().to_string()),
+            ("threads".to_string(), self.threads().to_string()),
+        ];
+        snap.cluster = self.cluster().cloned();
+        snap.registry = self.collector().map(|c| c.registry().clone());
+        snap.workload_summary = self.stats_summary();
+        snap
+    }
+
+    /// The buffered virtual-time trace as a Perfetto-loadable JSON
+    /// document (`None` unless the session was built with
+    /// [`Hetm::trace`]).
+    pub fn trace_json(&self) -> Option<String> {
+        self.collector().and_then(|c| c.trace_json())
+    }
+
+    /// Write the trace document to `path` (errors when tracing was not
+    /// enabled on this session).
+    pub fn write_trace(&self, path: &str) -> Result<()> {
+        let mut doc = self.trace_json().ok_or_else(|| {
+            anyhow!("tracing was not enabled on this session (Hetm::trace)")
+        })?;
+        doc.push('\n');
+        std::fs::write(path, doc)?;
+        Ok(())
     }
 
     /// Run the workload's correctness oracle against the committed CPU
@@ -1135,6 +1210,36 @@ mod tests {
             s.stats().cpu_commits
         );
         s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn telemetry_collects_and_snapshots() {
+        let mut s = Hetm::from_config(&cfg())
+            .telemetry(true)
+            .trace(true)
+            .build()
+            .unwrap();
+        s.run_rounds(2).unwrap();
+        s.drain().unwrap(); // the drain is a round too
+        let c = s.collector().expect("collector must be active");
+        assert_eq!(c.registry().counter("hetm_rounds_total"), 3);
+        let snap = s.metrics_snapshot("t");
+        assert!(snap.render_text().contains("hist hetm_round_latency_seconds"));
+        assert!(snap.to_json().contains("\"hetm_rounds_total\":3"));
+        assert!(snap.to_prometheus().contains("# TYPE hetm_rounds_total counter"));
+        let doc = s.trace_json().expect("trace requested");
+        assert!(crate::telemetry::validate_trace(&doc).unwrap() > 0);
+    }
+
+    #[test]
+    fn telemetry_off_has_no_collector() {
+        let mut s = Hetm::from_config(&cfg()).build().unwrap();
+        s.run_rounds(1).unwrap();
+        assert!(s.collector().is_none());
+        assert!(s.trace_json().is_none());
+        assert!(s.write_trace("/nonexistent/never-written.json").is_err());
+        let snap = s.metrics_snapshot("off");
+        assert!(snap.registry.is_none());
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! Tiny deterministic JSON builders (serde is unavailable offline).
+//!
+//! Every machine-readable artifact in the repo — `MetricsSnapshot`
+//! exports, trace events, and the `BENCH_*.json` files written by the
+//! benches — is rendered through these builders so that the byte layout
+//! is identical across runs and platforms.  Floats are always formatted
+//! with an explicit, fixed number of decimals; map keys appear in the
+//! order fields were added (callers add them in a deterministic order).
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Builder for one JSON object; fields render in insertion order.
+#[derive(Debug, Clone)]
+pub struct Obj {
+    buf: String,
+}
+
+impl Default for Obj {
+    fn default() -> Self {
+        Obj::new()
+    }
+}
+
+impl Obj {
+    /// Start an empty object.
+    pub fn new() -> Self {
+        Obj { buf: String::from("{") }
+    }
+
+    fn key(&mut self, k: &str) {
+        if self.buf.len() > 1 {
+            self.buf.push(',');
+        }
+        self.buf.push('"');
+        self.buf.push_str(&escape(k));
+        self.buf.push_str("\":");
+    }
+
+    /// Add a string field.
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        self.key(k);
+        self.buf.push('"');
+        self.buf.push_str(&escape(v));
+        self.buf.push('"');
+        self
+    }
+
+    /// Add an unsigned integer field.
+    pub fn u64(mut self, k: &str, v: u64) -> Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    /// Add a signed integer field.
+    pub fn i64(mut self, k: &str, v: i64) -> Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    /// Add a float field with a fixed number of decimals (deterministic).
+    pub fn f64(mut self, k: &str, v: f64, decimals: usize) -> Self {
+        self.key(k);
+        self.buf.push_str(&format!("{v:.decimals$}"));
+        self
+    }
+
+    /// Add a boolean field.
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Add a field whose value is pre-rendered JSON (object, array, number).
+    pub fn raw(mut self, k: &str, json: &str) -> Self {
+        self.key(k);
+        self.buf.push_str(json);
+        self
+    }
+
+    /// Finish the object and return its JSON text.
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+/// Builder for one JSON array of pre-rendered elements.
+#[derive(Debug, Clone, Default)]
+pub struct Arr {
+    items: Vec<String>,
+}
+
+impl Arr {
+    /// Start an empty array.
+    pub fn new() -> Self {
+        Arr::default()
+    }
+
+    /// Append a pre-rendered JSON value.
+    pub fn push(&mut self, json: String) {
+        self.items.push(json);
+    }
+
+    /// Render on one line: `[a,b,c]`.
+    pub fn finish(self) -> String {
+        format!("[{}]", self.items.join(","))
+    }
+
+    /// Render with one element per line (used for `points` in bench files).
+    pub fn finish_lines(self) -> String {
+        if self.items.is_empty() {
+            return "[]".to_string();
+        }
+        format!("[\n{}\n]", self.items.join(",\n"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_renders_in_order() {
+        let o = Obj::new()
+            .str("name", "a\"b")
+            .u64("n", 3)
+            .f64("x", 1.5, 3)
+            .bool("ok", true)
+            .raw("inner", "[1,2]")
+            .finish();
+        assert_eq!(o, r#"{"name":"a\"b","n":3,"x":1.500,"ok":true,"inner":[1,2]}"#);
+    }
+
+    #[test]
+    fn array_renders_lines() {
+        let mut a = Arr::new();
+        a.push("{\"i\":0}".into());
+        a.push("{\"i\":1}".into());
+        assert_eq!(a.finish_lines(), "[\n{\"i\":0},\n{\"i\":1}\n]");
+        assert_eq!(Arr::new().finish(), "[]");
+    }
+
+    #[test]
+    fn escape_handles_controls() {
+        assert_eq!(escape("a\nb\t\u{1}"), "a\\nb\\t\\u0001");
+    }
+}

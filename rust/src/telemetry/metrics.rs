@@ -1,0 +1,343 @@
+//! Labeled metrics registry: counters, gauges, and deterministic
+//! log-linear histograms.
+//!
+//! The histogram is the part that has to be engineered carefully: the
+//! cluster engine observes per-chunk costs on per-lane scratch buffers
+//! and folds them into the registry in device-index order at the round
+//! barrier, so **merge must be exactly order-insensitive** or threaded
+//! runs would diverge from sequential ones.  We get that by construction:
+//!
+//! * bucketing is pure bit manipulation on the `f64` (biased exponent +
+//!   top two mantissa bits → 4 linear sub-buckets per octave), so every
+//!   value maps to one bucket with no platform-dependent rounding;
+//! * bucket counts are `u64` and the running sum is fixed-point `i128`
+//!   picoseconds, so merge is integer addition — commutative and
+//!   associative down to the last bit;
+//! * min/max use `f64::min`/`max`, which are commutative for the
+//!   non-NaN values we record.
+//!
+//! Quantiles (p50/p99/p999) report the lower edge of the bucket holding
+//! the target rank — a deterministic value, accurate to the ~6% bucket
+//! width, which is plenty for round-latency and bus-cost distributions.
+
+use std::collections::BTreeMap;
+
+use super::json::Obj;
+
+/// First biased exponent tracked (2^-40 ≈ 0.9 ps when values are seconds).
+const E0: i64 = 983;
+/// Octaves covered: exponents 2^-40 .. 2^10 (≈ 17 minutes of virtual time).
+const OCTAVES: usize = 51;
+/// Linear sub-buckets per octave (top two mantissa bits).
+const SUBS: usize = 4;
+/// Total bucket count; out-of-range values clamp to the edge buckets.
+pub const HIST_BUCKETS: usize = OCTAVES * SUBS;
+
+/// Deterministic log-linear histogram over non-negative `f64` samples
+/// (by convention: seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    /// Exact running sum in fixed-point picoseconds (1e-12).
+    sum_ps: i128,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum_ps: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Map a value to its bucket index (pure bit manipulation; total).
+    pub fn bucket_index(v: f64) -> usize {
+        if !v.is_finite() || v <= 0.0 {
+            return 0;
+        }
+        let bits = v.to_bits();
+        let e = ((bits >> 52) & 0x7ff) as i64; // biased exponent
+        let sub = ((bits >> 50) & 0x3) as i64; // top 2 mantissa bits
+        ((e - E0) * SUBS as i64 + sub).clamp(0, HIST_BUCKETS as i64 - 1) as usize
+    }
+
+    /// Lower edge of bucket `idx`, reconstructed exactly from the index.
+    pub fn bucket_lower(idx: usize) -> f64 {
+        let idx = idx.min(HIST_BUCKETS - 1);
+        let e = (E0 + (idx / SUBS) as i64) as u64;
+        let sub = (idx % SUBS) as u64;
+        f64::from_bits((e << 52) | (sub << 50))
+    }
+
+    /// Record one sample.
+    pub fn observe(&mut self, v: f64) {
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum_ps += (v * 1e12).round() as i128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram in.  Exactly commutative and associative.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ps += other.sum_ps;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of bucket counts (equals `count()` when conservation holds).
+    pub fn bucket_total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Raw bucket counts (for the property tests).
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Mean sample value in seconds (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            (self.sum_ps as f64 / 1e12) / self.count as f64
+        }
+    }
+
+    /// Smallest sample (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile estimate: lower edge of the bucket holding rank `⌈q·n⌉`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_lower(i);
+            }
+        }
+        Self::bucket_lower(HIST_BUCKETS - 1)
+    }
+
+    /// Render as a JSON object (count, sum, min/max, key quantiles).
+    pub fn to_json(&self) -> String {
+        Obj::new()
+            .u64("count", self.count)
+            .f64("sum_s", self.sum_ps as f64 / 1e12, 9)
+            .f64("min_s", self.min(), 9)
+            .f64("max_s", self.max(), 9)
+            .f64("p50_s", self.quantile(0.50), 9)
+            .f64("p99_s", self.quantile(0.99), 9)
+            .f64("p999_s", self.quantile(0.999), 9)
+            .finish()
+    }
+}
+
+/// Labeled metrics registry.  Names follow Prometheus conventions with
+/// inline labels, e.g. `hetm_bus_h2d_seconds{device="0"}`; `BTreeMap`
+/// keys give every renderer a deterministic iteration order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        MetricsRegistry::default()
+    }
+
+    /// Increment a counter by `by` (creating it at zero first).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set a gauge to `v`.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Record one histogram sample.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().observe(v);
+    }
+
+    /// Fold a pre-built histogram into `name` (used for per-lane scratch).
+    pub fn merge_histogram(&mut self, name: &str, h: &Histogram) {
+        self.histograms.entry(name.to_string()).or_default().merge(h);
+    }
+
+    /// Current counter value (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Current gauge value (None when absent).
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Histogram by name.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Iterate counters in name order.
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Iterate gauges in name order.
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Iterate histograms in name order.
+    pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.histograms.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_total() {
+        let vals = [
+            0.0,
+            -1.0,
+            f64::NAN,
+            1e-15,
+            2.3e-9,
+            1e-6,
+            0.5e-3,
+            1.0,
+            999.0,
+            1e9,
+        ];
+        for v in vals {
+            let i = Histogram::bucket_index(v);
+            assert!(i < HIST_BUCKETS);
+        }
+        // Monotone over positives.
+        let mut last = 0;
+        for k in 0..200 {
+            let v = 1e-12 * 1.5f64.powi(k);
+            let i = Histogram::bucket_index(v);
+            assert!(i >= last, "bucket index must be monotone");
+            last = i;
+        }
+    }
+
+    #[test]
+    fn bucket_lower_bounds_its_members() {
+        for v in [3.7e-9, 1.2e-4, 0.25, 7.5] {
+            let i = Histogram::bucket_index(v);
+            assert!(Histogram::bucket_lower(i) <= v);
+            if i + 1 < HIST_BUCKETS {
+                assert!(Histogram::bucket_lower(i + 1) > v);
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_and_mean() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.observe(i as f64 * 1e-6); // 1µs..1ms
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.bucket_total(), 1000);
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 3e-4 && p50 <= 5.2e-4, "p50 {p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 > 8e-4 && p99 <= 1.1e-3, "p99 {p99}");
+        assert!((h.mean() - 5.005e-4).abs() < 1e-6);
+        assert!((h.min() - 1e-6).abs() < 1e-12);
+        assert!((h.max() - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_matches_single_stream() {
+        let vals: Vec<f64> = (0..500).map(|i| 1e-7 * (i as f64 + 0.5)).collect();
+        let mut whole = Histogram::new();
+        for &v in &vals {
+            whole.observe(v);
+        }
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for (i, &v) in vals.iter().enumerate() {
+            if i % 3 == 0 {
+                a.observe(v);
+            } else {
+                b.observe(v);
+            }
+        }
+        let mut merged = Histogram::new();
+        merged.merge(&b);
+        merged.merge(&a);
+        assert_eq!(merged, whole);
+    }
+
+    #[test]
+    fn registry_basics() {
+        let mut r = MetricsRegistry::new();
+        r.inc("hetm_rounds_total", 2);
+        r.inc("hetm_rounds_total", 1);
+        r.set_gauge("hetm_virtual_time_seconds", 1.25);
+        r.observe("hetm_round_latency_seconds", 0.002);
+        assert_eq!(r.counter("hetm_rounds_total"), 3);
+        assert_eq!(r.gauge("hetm_virtual_time_seconds"), Some(1.25));
+        assert_eq!(r.histogram("hetm_round_latency_seconds").unwrap().count(), 1);
+        assert!(!r.is_empty());
+    }
+}

@@ -1,0 +1,469 @@
+//! Observability layer: metrics registry, virtual-time trace stream,
+//! and the `MetricsSnapshot` exporter (DESIGN.md §11).
+//!
+//! ## Shape
+//!
+//! Both engines own a [`Telemetry`] handle (a boxed [`Recorder`]).  The
+//! default is [`NullRecorder`] — one `enabled()` branch per round and
+//! zero allocation, so telemetry-off runs are unobservably close to the
+//! pre-telemetry engine.  When the session builder enables telemetry the
+//! handle holds a [`Collector`], which maintains a [`MetricsRegistry`]
+//! and (optionally) a [`trace::TraceEvent`] buffer.
+//!
+//! ## Determinism contract
+//!
+//! Everything the collector records is derived **at the round barrier on
+//! the coordinator thread** from per-round deterministic data:
+//!
+//! * the finished [`RoundStats`],
+//! * per-device partials (phase breakdowns, pre-discard commit counts,
+//!   per-chunk cost samples) gathered from the cluster lanes and folded
+//!   **in device-index order**, mirroring how the engines already fold
+//!   `gpu_phases`,
+//! * the epoch base / carry length captured at the existing reset points.
+//!
+//! No event is emitted inline from interleaved lane execution, so the
+//! trace and registry are bit-identical across `--threads N` and across
+//! `RoundEngine` vs. `ClusterEngine` at `n_gpus = 1` — the property the
+//! `telemetry.rs` golden suite pins.
+
+pub mod json;
+pub mod metrics;
+pub mod snapshot;
+pub mod trace;
+
+pub use metrics::{Histogram, MetricsRegistry};
+pub use snapshot::{bench_doc, write_bench_json, MetricsSnapshot};
+pub use trace::{validate_trace, TraceEvent};
+
+use crate::coordinator::{PhaseBreakdown, RoundStats};
+
+use json::Obj;
+use trace::{virt_ns, TID_COORD, TID_CPU, TID_GPU_BASE};
+
+/// Everything one finished round exposes to the recorder.  Slices are
+/// per-device, in device index order (`len() == 1` on the single-device
+/// engine).
+#[derive(Debug)]
+pub struct RoundObs<'a> {
+    /// Zero-based round index.
+    pub round: u64,
+    /// The round's finished statistics (surviving commits only).
+    pub rs: &'a RoundStats,
+    /// Whether the policy held the CPU read-only this round.
+    pub read_only: bool,
+    /// Policy's consecutive-GPU-abort streak after this round.
+    pub abort_streak: u32,
+    /// Epoch base returned by the round-boundary log rebase.
+    pub epoch_base: i64,
+    /// Write-log entries carried into the next round (bonus window).
+    pub carried: u64,
+    /// Per-device phase breakdowns for this round.
+    pub dev_phases: &'a [PhaseBreakdown],
+    /// Per-device speculative commits BEFORE loser-discard zeroing.
+    pub dev_commits: &'a [u64],
+    /// Per-device per-chunk validation costs (seconds).
+    pub chunk_validate_s: &'a [Vec<f64>],
+    /// Per-device per-chunk H2D log-ship durations (seconds).
+    pub bus_ship_s: &'a [Vec<f64>],
+    /// Per-device D2H merge transfer durations (seconds).
+    pub bus_merge_s: &'a [Vec<f64>],
+    /// Per-device cumulative H2D bus busy time (seconds).
+    pub h2d_busy_s: &'a [f64],
+    /// Per-device cumulative D2H bus busy time (seconds).
+    pub d2h_busy_s: &'a [f64],
+}
+
+/// Sink for engine observations.  The engines call it unconditionally;
+/// implementations decide whether anything is kept.
+pub trait Recorder: Send {
+    /// True when the engine should spend effort gathering observations
+    /// (per-chunk sample buffers, per-device partials).
+    fn enabled(&self) -> bool;
+
+    /// Record one finished round (called at the round barrier).
+    fn record_round(&mut self, obs: &RoundObs<'_>);
+
+    /// Record one externally injected transaction (`session.txn()`).
+    fn record_txn(&mut self, entries: u64, attempts: u64, now: f64);
+
+    /// Downcast to the standard collector, if this recorder is one.
+    fn as_collector(&self) -> Option<&Collector> {
+        None
+    }
+}
+
+/// The no-op recorder: telemetry off.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn record_round(&mut self, _obs: &RoundObs<'_>) {}
+    fn record_txn(&mut self, _entries: u64, _attempts: u64, _now: f64) {}
+}
+
+/// The standard recorder: labeled metrics plus (optionally) the
+/// virtual-time trace stream.
+#[derive(Debug, Clone, Default)]
+pub struct Collector {
+    registry: MetricsRegistry,
+    trace_on: bool,
+    events: Vec<TraceEvent>,
+    n_devices: usize,
+}
+
+impl Collector {
+    /// A collector; `trace` additionally buffers trace events.
+    pub fn new(trace: bool) -> Self {
+        Collector {
+            trace_on: trace,
+            ..Collector::default()
+        }
+    }
+
+    /// The metrics recorded so far.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    /// Buffered trace events (empty unless tracing was requested).
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Render the buffered events as a Perfetto-loadable JSON document
+    /// (None when tracing was not requested).
+    pub fn trace_json(&self) -> Option<String> {
+        self.trace_on
+            .then(|| trace::render_trace(&self.events, self.n_devices.max(1)))
+    }
+
+    fn phase_spans(&mut self, tid: u32, t_start: f64, p: &PhaseBreakdown) {
+        let mut cursor = t_start;
+        for (name, dur) in [
+            ("processing", p.processing_s),
+            ("validation", p.validation_s),
+            ("merge", p.merge_s),
+            ("blocked", p.blocked_s),
+        ] {
+            if dur > 0.0 {
+                self.events.push(TraceEvent::span(
+                    name,
+                    tid,
+                    virt_ns(cursor),
+                    virt_ns(cursor + dur) - virt_ns(cursor),
+                    String::new(),
+                ));
+            }
+            cursor += dur;
+        }
+    }
+
+    fn trace_round(&mut self, obs: &RoundObs<'_>) {
+        let rs = obs.rs;
+        let (start, end) = (virt_ns(rs.t_start), virt_ns(rs.t_end));
+        self.events.push(TraceEvent::span(
+            "round",
+            TID_COORD,
+            start,
+            end - start,
+            Obj::new()
+                .u64("round", obs.round)
+                .bool("committed", rs.committed)
+                .bool("early_aborted", rs.early_aborted)
+                .u64("conflict_entries", rs.conflict_entries)
+                .u64("cpu_commits", rs.cpu_commits)
+                .u64("gpu_commits", rs.gpu_commits)
+                .u64("discarded_commits", rs.discarded_commits)
+                .finish(),
+        ));
+        if obs.read_only {
+            self.events.push(TraceEvent::instant(
+                "cpu_read_only",
+                TID_CPU,
+                start,
+                Obj::new().u64("round", obs.round).finish(),
+            ));
+        }
+        self.phase_spans(TID_CPU, rs.t_start, &rs.cpu_phases);
+        for (d, p) in obs.dev_phases.iter().enumerate() {
+            self.phase_spans(TID_GPU_BASE + d as u32, rs.t_start, p);
+        }
+        self.events.push(TraceEvent::instant(
+            "validate",
+            TID_COORD,
+            end,
+            Obj::new()
+                .str("verdict", if rs.committed { "commit" } else { "abort" })
+                .u64("conflict_entries", rs.conflict_entries)
+                .finish(),
+        ));
+        if rs.early_aborted {
+            self.events.push(TraceEvent::instant(
+                "early_abort",
+                TID_COORD,
+                end,
+                Obj::new().u64("round", obs.round).finish(),
+            ));
+        }
+        if obs.carried > 0 {
+            self.events.push(TraceEvent::instant(
+                "carry_rebase",
+                TID_COORD,
+                end,
+                Obj::new().u64("entries", obs.carried).finish(),
+            ));
+        }
+        self.events.push(TraceEvent::instant(
+            "epoch_reset",
+            TID_COORD,
+            end,
+            Obj::new().i64("base", obs.epoch_base).finish(),
+        ));
+    }
+}
+
+impl Recorder for Collector {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record_round(&mut self, obs: &RoundObs<'_>) {
+        let rs = obs.rs;
+        self.n_devices = self.n_devices.max(obs.dev_phases.len());
+        let r = &mut self.registry;
+        r.inc("hetm_rounds_total", 1);
+        r.inc("hetm_rounds_committed_total", rs.committed as u64);
+        r.inc("hetm_rounds_early_aborted_total", rs.early_aborted as u64);
+        r.inc("hetm_rounds_cpu_read_only_total", obs.read_only as u64);
+        r.inc("hetm_cpu_commits_total", rs.cpu_commits);
+        r.inc("hetm_cpu_attempts_total", rs.cpu_attempts);
+        r.inc("hetm_gpu_commits_total", rs.gpu_commits);
+        r.inc("hetm_gpu_attempts_total", rs.gpu_attempts);
+        r.inc("hetm_discarded_commits_total", rs.discarded_commits);
+        r.inc("hetm_log_chunks_total", rs.chunks);
+        r.inc("hetm_log_entries_raw_total", rs.log_entries_raw);
+        r.inc("hetm_log_entries_shipped_total", rs.log_entries_shipped);
+        r.inc("hetm_chunks_filtered_total", rs.chunks_filtered);
+        r.inc("hetm_chunks_skipped_total", rs.chunks_skipped_post_abort);
+        r.inc("hetm_conflict_entries_total", rs.conflict_entries);
+        r.inc("hetm_carried_entries_total", obs.carried);
+        r.set_gauge("hetm_virtual_time_seconds", rs.t_end);
+        r.set_gauge("hetm_policy_abort_streak", obs.abort_streak as f64);
+        r.observe("hetm_round_latency_seconds", rs.t_end - rs.t_start);
+        for (phase, dur) in [
+            ("processing", rs.cpu_phases.processing_s),
+            ("validation", rs.cpu_phases.validation_s),
+            ("merge", rs.cpu_phases.merge_s),
+            ("blocked", rs.cpu_phases.blocked_s),
+        ] {
+            r.observe(&format!("hetm_cpu_phase_seconds{{phase=\"{phase}\"}}"), dur);
+        }
+        for (d, commits) in obs.dev_commits.iter().enumerate() {
+            r.inc(&format!("hetm_device_commits_total{{device=\"{d}\"}}"), *commits);
+        }
+        for (d, samples) in obs.chunk_validate_s.iter().enumerate() {
+            let name = format!("hetm_chunk_validation_seconds{{device=\"{d}\"}}");
+            for &v in samples {
+                r.observe(&name, v);
+            }
+        }
+        for (d, samples) in obs.bus_ship_s.iter().enumerate() {
+            let name = format!("hetm_bus_h2d_seconds{{device=\"{d}\"}}");
+            for &v in samples {
+                r.observe(&name, v);
+            }
+        }
+        for (d, samples) in obs.bus_merge_s.iter().enumerate() {
+            let name = format!("hetm_bus_d2h_seconds{{device=\"{d}\"}}");
+            for &v in samples {
+                r.observe(&name, v);
+            }
+        }
+        for (d, &busy) in obs.h2d_busy_s.iter().enumerate() {
+            r.set_gauge(&format!("hetm_bus_h2d_busy_seconds{{device=\"{d}\"}}"), busy);
+        }
+        for (d, &busy) in obs.d2h_busy_s.iter().enumerate() {
+            r.set_gauge(&format!("hetm_bus_d2h_busy_seconds{{device=\"{d}\"}}"), busy);
+        }
+        if self.trace_on {
+            self.trace_round(obs);
+        }
+    }
+
+    fn record_txn(&mut self, entries: u64, attempts: u64, now: f64) {
+        self.registry.inc("hetm_txn_external_total", 1);
+        self.registry.inc("hetm_txn_external_attempts_total", attempts);
+        self.registry.inc("hetm_txn_external_entries_total", entries);
+        if self.trace_on {
+            self.events.push(TraceEvent::instant(
+                "txn",
+                TID_CPU,
+                virt_ns(now),
+                Obj::new().u64("entries", entries).u64("attempts", attempts).finish(),
+            ));
+        }
+    }
+
+    fn as_collector(&self) -> Option<&Collector> {
+        Some(self)
+    }
+}
+
+/// The engine-side telemetry handle: a boxed [`Recorder`], no-op by
+/// default.
+pub struct Telemetry {
+    rec: Box<dyn Recorder>,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry")
+            .field("enabled", &self.enabled())
+            .finish()
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::off()
+    }
+}
+
+impl Telemetry {
+    /// Disabled telemetry (the engines' default).
+    pub fn off() -> Self {
+        Telemetry {
+            rec: Box::new(NullRecorder),
+        }
+    }
+
+    /// Telemetry backed by the standard [`Collector`]; `trace` also
+    /// buffers the virtual-time trace stream.
+    pub fn collecting(trace: bool) -> Self {
+        Telemetry {
+            rec: Box::new(Collector::new(trace)),
+        }
+    }
+
+    /// Telemetry backed by a custom recorder.
+    pub fn with_recorder(rec: Box<dyn Recorder>) -> Self {
+        Telemetry { rec }
+    }
+
+    /// True when the engine should gather observations this round.
+    pub fn enabled(&self) -> bool {
+        self.rec.enabled()
+    }
+
+    /// Forward one finished round.
+    pub fn record_round(&mut self, obs: &RoundObs<'_>) {
+        self.rec.record_round(obs);
+    }
+
+    /// Forward one injected transaction.
+    pub fn record_txn(&mut self, entries: u64, attempts: u64, now: f64) {
+        self.rec.record_txn(entries, attempts, now);
+    }
+
+    /// Access the standard collector, when active.
+    pub fn collector(&self) -> Option<&Collector> {
+        self.rec.as_collector()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs_fixture(rs: &RoundStats) -> (Vec<PhaseBreakdown>, Vec<u64>) {
+        (vec![rs.gpu_phases], vec![rs.gpu_commits])
+    }
+
+    fn round_stats() -> RoundStats {
+        let mut rs = RoundStats::default();
+        rs.t_start = 0.0;
+        rs.t_end = 0.002;
+        rs.cpu_commits = 10;
+        rs.cpu_attempts = 11;
+        rs.gpu_commits = 40;
+        rs.gpu_attempts = 41;
+        rs.chunks = 2;
+        rs.log_entries_raw = 20;
+        rs.log_entries_shipped = 20;
+        rs.committed = true;
+        rs.cpu_phases.processing_s = 0.0015;
+        rs.cpu_phases.blocked_s = 0.0005;
+        rs.gpu_phases.processing_s = 0.002;
+        rs
+    }
+
+    #[test]
+    fn null_recorder_is_off() {
+        let mut t = Telemetry::off();
+        assert!(!t.enabled());
+        let rs = round_stats();
+        let (phases, commits) = obs_fixture(&rs);
+        t.record_round(&RoundObs {
+            round: 0,
+            rs: &rs,
+            read_only: false,
+            abort_streak: 0,
+            epoch_base: 0,
+            carried: 0,
+            dev_phases: &phases,
+            dev_commits: &commits,
+            chunk_validate_s: &[],
+            bus_ship_s: &[],
+            bus_merge_s: &[],
+            h2d_busy_s: &[],
+            d2h_busy_s: &[],
+        });
+        assert!(t.collector().is_none());
+    }
+
+    #[test]
+    fn collector_records_counters_and_trace() {
+        let mut t = Telemetry::collecting(true);
+        assert!(t.enabled());
+        let rs = round_stats();
+        let (phases, commits) = obs_fixture(&rs);
+        let vcost = vec![vec![1e-5, 2e-5]];
+        let ship = vec![vec![3e-5]];
+        t.record_round(&RoundObs {
+            round: 0,
+            rs: &rs,
+            read_only: true,
+            abort_streak: 0,
+            epoch_base: 7,
+            carried: 3,
+            dev_phases: &phases,
+            dev_commits: &commits,
+            chunk_validate_s: &vcost,
+            bus_ship_s: &ship,
+            bus_merge_s: &[],
+            h2d_busy_s: &[3e-5],
+            d2h_busy_s: &[0.0],
+        });
+        t.record_txn(2, 1, 0.002);
+        let c = t.collector().unwrap();
+        let r = c.registry();
+        assert_eq!(r.counter("hetm_rounds_total"), 1);
+        assert_eq!(r.counter("hetm_cpu_commits_total"), 10);
+        assert_eq!(r.counter("hetm_rounds_cpu_read_only_total"), 1);
+        assert_eq!(r.counter("hetm_txn_external_entries_total"), 2);
+        assert_eq!(
+            r.histogram("hetm_chunk_validation_seconds{device=\"0\"}").unwrap().count(),
+            2
+        );
+        let doc = c.trace_json().unwrap();
+        assert!(validate_trace(&doc).unwrap() >= 6);
+        assert!(doc.contains("\"name\":\"carry_rebase\""));
+        assert!(doc.contains("\"name\":\"epoch_reset\""));
+        assert!(doc.contains("\"name\":\"cpu_read_only\""));
+        assert!(doc.contains("\"name\":\"txn\""));
+    }
+}

@@ -1,0 +1,400 @@
+//! `MetricsSnapshot` — the single exporter for run results.
+//!
+//! One snapshot captures everything a run produced: the aggregate
+//! [`RunStats`], the per-device [`ClusterStats`] (cluster engine only),
+//! the live [`MetricsRegistry`] (when telemetry was enabled), and the
+//! workload's own oracle summary line.  Every consumer renders from it:
+//!
+//! * `shetm` (main.rs) prints [`MetricsSnapshot::render_text`] — the
+//!   human-readable block previously hand-rolled in two places;
+//! * `--trace`/tooling exports [`MetricsSnapshot::to_json`] and
+//!   [`MetricsSnapshot::to_prometheus`];
+//! * the benches write `BENCH_*.json` through [`write_bench_json`].
+
+use std::fmt::Write as _;
+
+use crate::cluster::ClusterStats;
+use crate::coordinator::RunStats;
+
+use super::json::{Arr, Obj};
+use super::metrics::MetricsRegistry;
+
+/// A point-in-time export of one run's statistics and metrics.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Human-readable run label (printed as the `== label ==` header).
+    pub label: String,
+    /// Deterministic key/value metadata (workload, n_gpus, threads, ...).
+    pub meta: Vec<(String, String)>,
+    /// Aggregate engine statistics.
+    pub run: RunStats,
+    /// Per-device statistics (cluster engine only).
+    pub cluster: Option<ClusterStats>,
+    /// Telemetry registry contents (None when telemetry was off).
+    pub registry: Option<MetricsRegistry>,
+    /// The workload's `stats_summary()` line ("" when it has none).
+    pub workload_summary: String,
+}
+
+impl MetricsSnapshot {
+    /// Snapshot of bare [`RunStats`] (baselines and tools that have no
+    /// session — no cluster stats, no registry, no workload summary).
+    pub fn from_run_stats(label: &str, run: &RunStats) -> Self {
+        MetricsSnapshot {
+            label: label.to_string(),
+            meta: Vec::new(),
+            run: run.clone(),
+            cluster: None,
+            registry: None,
+            workload_summary: String::new(),
+        }
+    }
+
+    /// Render the human-readable stats block (the format `shetm`
+    /// subcommands print after a run).
+    pub fn render_text(&self) -> String {
+        let s = &self.run;
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.label);
+        let _ = writeln!(
+            out,
+            "  rounds            : {} ({} committed, {} early-aborted)",
+            s.rounds, s.rounds_committed, s.rounds_early_aborted
+        );
+        let _ = writeln!(out, "  virtual duration  : {:.4} s", s.duration_s);
+        let _ = writeln!(
+            out,
+            "  cpu commits       : {} ({} attempts)",
+            s.cpu_commits, s.cpu_attempts
+        );
+        let _ = writeln!(
+            out,
+            "  gpu commits       : {} ({} attempts)",
+            s.gpu_commits, s.gpu_attempts
+        );
+        let _ = writeln!(out, "  discarded commits : {}", s.discarded_commits);
+        let _ = writeln!(out, "  log chunks        : {}", s.chunks);
+        let _ = writeln!(
+            out,
+            "  log entries       : {} raw -> {} shipped ({} chunks filtered, {} skipped post-abort)",
+            s.log_entries_raw, s.log_entries_shipped, s.chunks_filtered, s.chunks_skipped_post_abort
+        );
+        let _ = writeln!(out, "  throughput        : {:.0} tx/s", s.throughput());
+        let _ = writeln!(out, "  round abort rate  : {:.3}", s.round_abort_rate());
+        let c = &s.cpu_phases;
+        let g = &s.gpu_phases;
+        let _ = writeln!(
+            out,
+            "  cpu phases (s)    : proc {:.4} validate {:.4} merge {:.4} blocked {:.4}",
+            c.processing_s, c.validation_s, c.merge_s, c.blocked_s
+        );
+        let _ = writeln!(
+            out,
+            "  gpu phases (s)    : proc {:.4} validate {:.4} merge {:.4} blocked {:.4}",
+            g.processing_s, g.validation_s, g.merge_s, g.blocked_s
+        );
+        if let Some(cl) = &self.cluster {
+            let _ = writeln!(
+                out,
+                "  cross-shard       : {} checks, {} escalations, {} conflict entries",
+                cl.cross_checks, cl.cross_escalations, cl.cross_conflict_entries
+            );
+            let _ = writeln!(
+                out,
+                "  cross-shard aborts: {} rounds ({:.3} of all rounds)",
+                cl.rounds_aborted_cross_shard,
+                cl.cross_shard_abort_rate(s.rounds)
+            );
+            let _ = writeln!(
+                out,
+                "  refresh traffic   : {} KiB in {} DMAs",
+                cl.refresh_bytes / 1024,
+                cl.refresh_transfers
+            );
+            for (d, dev) in cl.per_device.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "  gpu[{d}]            : {} commits {} batches {} chunks ({} filtered) | \
+                     proc {:.4} validate {:.4} merge {:.4} blocked {:.4}",
+                    dev.commits,
+                    dev.batches,
+                    dev.chunks,
+                    dev.chunks_filtered,
+                    dev.phases.processing_s,
+                    dev.phases.validation_s,
+                    dev.phases.merge_s,
+                    dev.phases.blocked_s
+                );
+            }
+        }
+        if let Some(reg) = &self.registry {
+            for (name, h) in reg.histograms() {
+                let _ = writeln!(
+                    out,
+                    "  hist {name}: n={} p50={:.6} p99={:.6} p999={:.6} max={:.6}",
+                    h.count(),
+                    h.quantile(0.50),
+                    h.quantile(0.99),
+                    h.quantile(0.999),
+                    h.max()
+                );
+            }
+        }
+        if !self.workload_summary.is_empty() {
+            let _ = writeln!(out, "  {}", self.workload_summary);
+        }
+        out.pop(); // drop the trailing newline for println! callers
+        out
+    }
+
+    fn phases_json(p: &crate::coordinator::PhaseBreakdown) -> String {
+        Obj::new()
+            .f64("processing_s", p.processing_s, 9)
+            .f64("validation_s", p.validation_s, 9)
+            .f64("merge_s", p.merge_s, 9)
+            .f64("blocked_s", p.blocked_s, 9)
+            .finish()
+    }
+
+    fn run_json(s: &RunStats) -> String {
+        Obj::new()
+            .u64("rounds", s.rounds)
+            .u64("rounds_committed", s.rounds_committed)
+            .u64("rounds_early_aborted", s.rounds_early_aborted)
+            .f64("duration_s", s.duration_s, 9)
+            .u64("cpu_commits", s.cpu_commits)
+            .u64("cpu_attempts", s.cpu_attempts)
+            .u64("gpu_commits", s.gpu_commits)
+            .u64("gpu_attempts", s.gpu_attempts)
+            .u64("discarded_commits", s.discarded_commits)
+            .u64("chunks", s.chunks)
+            .u64("log_entries_raw", s.log_entries_raw)
+            .u64("log_entries_shipped", s.log_entries_shipped)
+            .u64("chunks_filtered", s.chunks_filtered)
+            .u64("chunks_skipped_post_abort", s.chunks_skipped_post_abort)
+            .f64("throughput_tx_per_s", s.throughput(), 3)
+            .f64("round_abort_rate", s.round_abort_rate(), 6)
+            .raw("cpu_phases", &Self::phases_json(&s.cpu_phases))
+            .raw("gpu_phases", &Self::phases_json(&s.gpu_phases))
+            .finish()
+    }
+
+    fn cluster_json(s: &RunStats, c: &ClusterStats) -> String {
+        let mut devs = Arr::new();
+        for dev in &c.per_device {
+            devs.push(
+                Obj::new()
+                    .u64("commits", dev.commits)
+                    .u64("attempts", dev.attempts)
+                    .u64("batches", dev.batches)
+                    .u64("chunks", dev.chunks)
+                    .u64("chunks_filtered", dev.chunks_filtered)
+                    .u64("conflict_entries", dev.conflict_entries)
+                    .u64("refresh_bytes", dev.refresh_bytes)
+                    .u64("refresh_transfers", dev.refresh_transfers)
+                    .raw("phases", &Self::phases_json(&dev.phases))
+                    .finish(),
+            );
+        }
+        Obj::new()
+            .u64("cross_checks", c.cross_checks)
+            .u64("cross_escalations", c.cross_escalations)
+            .u64("cross_conflict_entries", c.cross_conflict_entries)
+            .u64("rounds_aborted_cross_shard", c.rounds_aborted_cross_shard)
+            .f64("cross_shard_abort_rate", c.cross_shard_abort_rate(s.rounds), 6)
+            .u64("refresh_bytes", c.refresh_bytes)
+            .u64("refresh_transfers", c.refresh_transfers)
+            .raw("per_device", &devs.finish())
+            .finish()
+    }
+
+    /// Export everything as one JSON document.
+    pub fn to_json(&self) -> String {
+        let mut meta = Obj::new();
+        for (k, v) in &self.meta {
+            meta = meta.str(k, v);
+        }
+        let mut o = Obj::new()
+            .str("label", &self.label)
+            .raw("meta", &meta.finish())
+            .raw("run", &Self::run_json(&self.run));
+        if let Some(c) = &self.cluster {
+            o = o.raw("cluster", &Self::cluster_json(&self.run, c));
+        }
+        if !self.workload_summary.is_empty() {
+            o = o.str("workload_summary", &self.workload_summary);
+        }
+        if let Some(reg) = &self.registry {
+            let mut counters = Obj::new();
+            for (k, v) in reg.counters() {
+                counters = counters.u64(k, v);
+            }
+            let mut gauges = Obj::new();
+            for (k, v) in reg.gauges() {
+                gauges = gauges.f64(k, v, 9);
+            }
+            let mut hists = Obj::new();
+            for (k, h) in reg.histograms() {
+                hists = hists.raw(k, &h.to_json());
+            }
+            o = o.raw(
+                "metrics",
+                &Obj::new()
+                    .raw("counters", &counters.finish())
+                    .raw("gauges", &gauges.finish())
+                    .raw("histograms", &hists.finish())
+                    .finish(),
+            );
+        }
+        o.finish()
+    }
+
+    /// Export the registry in the Prometheus text exposition format.
+    /// Histograms are rendered as summaries (`quantile` labels).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let Some(reg) = &self.registry else {
+            return out;
+        };
+        let mut last_type: Option<(String, &str)> = None;
+        let mut type_line = |out: &mut String, name: &str, kind: &'static str| {
+            let base = name.split('{').next().unwrap_or(name).to_string();
+            if last_type.as_ref().map(|(b, k)| (b.as_str(), *k)) != Some((base.as_str(), kind)) {
+                let _ = writeln!(out, "# TYPE {base} {kind}");
+                last_type = Some((base, kind));
+            }
+        };
+        for (name, v) in reg.counters() {
+            type_line(&mut out, name, "counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, v) in reg.gauges() {
+            type_line(&mut out, name, "gauge");
+            let _ = writeln!(out, "{name} {v:.9}");
+        }
+        for (name, h) in reg.histograms() {
+            type_line(&mut out, name, "summary");
+            let (base, labels) = match name.split_once('{') {
+                Some((b, rest)) => (b, rest.trim_end_matches('}')),
+                None => (name, ""),
+            };
+            let with = |extra: &str| {
+                if labels.is_empty() {
+                    format!("{base}{{{extra}}}")
+                } else {
+                    format!("{base}{{{labels},{extra}}}")
+                }
+            };
+            for (q, label) in [(0.5, "0.5"), (0.99, "0.99"), (0.999, "0.999")] {
+                let _ = writeln!(
+                    out,
+                    "{} {:.9}",
+                    with(&format!("quantile=\"{label}\"")),
+                    h.quantile(q)
+                );
+            }
+            let _ = writeln!(out, "{base}_sum{{{labels}}} {:.9}", h.mean() * h.count() as f64);
+            let _ = writeln!(out, "{base}_count{{{labels}}} {}", h.count());
+        }
+        out
+    }
+}
+
+/// Assemble one `BENCH_*.json` document: a `bench` name, the `fast`
+/// flag, extra top-level fields (pre-rendered JSON values), and the
+/// measurement points, one object per line.
+pub fn bench_doc(bench: &str, fast: bool, extras: &[(&str, String)], points: Vec<String>) -> String {
+    let mut o = Obj::new().str("bench", bench).bool("fast", fast);
+    for (k, v) in extras {
+        o = o.raw(k, v);
+    }
+    let mut arr = Arr::new();
+    for p in points {
+        arr.push(p);
+    }
+    o.raw("points", &arr.finish_lines()).finish()
+}
+
+/// Write a bench document to `path` (with a trailing newline).
+pub fn write_bench_json(
+    path: &str,
+    bench: &str,
+    fast: bool,
+    extras: &[(&str, String)],
+    points: Vec<String>,
+) -> std::io::Result<()> {
+    let mut doc = bench_doc(bench, fast, extras, points);
+    doc.push('\n');
+    std::fs::write(path, doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> RunStats {
+        let mut s = RunStats::default();
+        s.rounds = 4;
+        s.rounds_committed = 3;
+        s.duration_s = 0.008;
+        s.cpu_commits = 120;
+        s.cpu_attempts = 125;
+        s.gpu_commits = 300;
+        s.gpu_attempts = 310;
+        s.chunks = 6;
+        s
+    }
+
+    #[test]
+    fn text_render_has_expected_lines() {
+        let snap = MetricsSnapshot::from_run_stats("demo", &stats());
+        let text = snap.render_text();
+        assert!(text.starts_with("== demo =="));
+        assert!(text.contains("  rounds            : 4 (3 committed, 0 early-aborted)"));
+        assert!(text.contains("  throughput        : 52500 tx/s"));
+        assert!(!text.ends_with('\n'));
+    }
+
+    #[test]
+    fn json_is_well_formed_and_complete() {
+        let mut snap = MetricsSnapshot::from_run_stats("demo", &stats());
+        let mut reg = MetricsRegistry::new();
+        reg.inc("hetm_rounds_total", 4);
+        reg.observe("hetm_round_latency_seconds", 0.002);
+        snap.registry = Some(reg);
+        snap.meta.push(("workload".into(), "bank".into()));
+        let j = snap.to_json();
+        assert!(j.contains("\"label\":\"demo\""));
+        assert!(j.contains("\"workload\":\"bank\""));
+        assert!(j.contains("\"hetm_rounds_total\":4"));
+        assert!(j.contains("\"p50_s\":"));
+    }
+
+    #[test]
+    fn prometheus_renders_types_and_quantiles() {
+        let mut snap = MetricsSnapshot::from_run_stats("demo", &stats());
+        let mut reg = MetricsRegistry::new();
+        reg.inc("hetm_rounds_total", 4);
+        reg.set_gauge("hetm_virtual_time_seconds", 0.008);
+        reg.observe("hetm_bus_h2d_seconds{device=\"0\"}", 1.5e-4);
+        snap.registry = Some(reg);
+        let p = snap.to_prometheus();
+        assert!(p.contains("# TYPE hetm_rounds_total counter"));
+        assert!(p.contains("hetm_rounds_total 4"));
+        assert!(p.contains("# TYPE hetm_bus_h2d_seconds summary"));
+        assert!(p.contains("hetm_bus_h2d_seconds{device=\"0\",quantile=\"0.5\"}"));
+        assert!(p.contains("hetm_bus_h2d_seconds_count{device=\"0\"} 1"));
+    }
+
+    #[test]
+    fn bench_doc_layout() {
+        let doc = bench_doc(
+            "scale_gpus",
+            true,
+            &[("sim_s", "0.0625".to_string())],
+            vec!["{\"n\":1}".to_string(), "{\"n\":2}".to_string()],
+        );
+        assert!(doc.starts_with("{\"bench\":\"scale_gpus\",\"fast\":true,\"sim_s\":0.0625,"));
+        assert!(doc.contains("\"points\":[\n{\"n\":1},\n{\"n\":2}\n]"));
+    }
+}

@@ -1,0 +1,266 @@
+//! Chrome/Perfetto-compatible trace events stamped in **virtual time**.
+//!
+//! The collector derives every event at the round barrier, on the
+//! coordinator thread, purely from per-round deterministic data (the
+//! `RoundStats` plus per-device partials folded in device-index order) —
+//! never inline from interleaved execution.  That is what makes the
+//! emitted stream bit-identical across `--threads N` and across the
+//! single-device vs. cluster engines at `n_gpus = 1`.
+//!
+//! ## File format
+//!
+//! The writer emits a *valid JSON array with exactly one event object
+//! per line* (the "JSON Array Format" of the Chrome trace spec, laid out
+//! line-wise).  `chrome://tracing` and [ui.perfetto.dev] load it
+//! directly, while line-oriented tools (`jq`, grep, the schema
+//! validator below) can still process it one event per line.
+//!
+//! ## Timestamps
+//!
+//! Virtual-time seconds are converted once, deterministically:
+//! `ns = round(t * 1e9)`, rendered as microseconds with exactly three
+//! decimals (`ns / 1000 . ns % 1000`).  Two runs that agree on the f64
+//! virtual times agree on every emitted byte.
+//!
+//! [ui.perfetto.dev]: https://ui.perfetto.dev
+
+use super::json::Obj;
+
+/// Trace process id (single simulated process).
+pub const PID: u32 = 1;
+/// Thread id for the coordinator timeline.
+pub const TID_COORD: u32 = 0;
+/// Thread id for the CPU timeline.
+pub const TID_CPU: u32 = 1;
+/// Thread id for device `d` is `TID_GPU_BASE + d`.
+pub const TID_GPU_BASE: u32 = 100;
+
+/// Convert virtual-time seconds to integer nanoseconds (deterministic).
+pub fn virt_ns(t: f64) -> u64 {
+    (t * 1e9).round().max(0.0) as u64
+}
+
+/// Render nanoseconds as the Chrome `ts`/`dur` microsecond field with
+/// exactly three decimals.
+pub fn micros(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// One trace event.  `ph` is `'X'` (complete span) or `'i'` (instant);
+/// metadata events are synthesized by the renderer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Event name (static: the schema enumerates them).
+    pub name: &'static str,
+    /// Phase: `'X'` span or `'i'` instant.
+    pub ph: char,
+    /// Thread id ([`TID_COORD`], [`TID_CPU`], or `TID_GPU_BASE + d`).
+    pub tid: u32,
+    /// Start timestamp in virtual nanoseconds.
+    pub ts_ns: u64,
+    /// Duration in virtual nanoseconds (spans only; 0 for instants).
+    pub dur_ns: u64,
+    /// Pre-rendered JSON object for `args` (empty string = omitted).
+    pub args: String,
+}
+
+impl TraceEvent {
+    /// A complete span.
+    pub fn span(name: &'static str, tid: u32, ts_ns: u64, dur_ns: u64, args: String) -> Self {
+        TraceEvent { name, ph: 'X', tid, ts_ns, dur_ns, args }
+    }
+
+    /// A thread-scoped instant event.
+    pub fn instant(name: &'static str, tid: u32, ts_ns: u64, args: String) -> Self {
+        TraceEvent { name, ph: 'i', tid, ts_ns, dur_ns: 0, args }
+    }
+
+    fn render(&self) -> String {
+        let mut o = Obj::new()
+            .str("name", self.name)
+            .str("cat", "hetm")
+            .str("ph", &self.ph.to_string())
+            .u64("pid", PID as u64)
+            .u64("tid", self.tid as u64)
+            .raw("ts", &micros(self.ts_ns));
+        if self.ph == 'X' {
+            o = o.raw("dur", &micros(self.dur_ns));
+        }
+        if self.ph == 'i' {
+            o = o.str("s", "t");
+        }
+        if !self.args.is_empty() {
+            o = o.raw("args", &self.args);
+        }
+        o.finish()
+    }
+}
+
+fn metadata(name: &'static str, tid: u32, value: &str) -> String {
+    Obj::new()
+        .str("name", name)
+        .str("ph", "M")
+        .u64("pid", PID as u64)
+        .u64("tid", tid as u64)
+        .raw("args", &Obj::new().str("name", value).finish())
+        .finish()
+}
+
+/// Render a full trace document: metadata naming the process and the
+/// coordinator/cpu/gpu timelines for `n_devices` devices, followed by
+/// `events`, one JSON object per line inside a valid JSON array.
+pub fn render_trace(events: &[TraceEvent], n_devices: usize) -> String {
+    let mut lines: Vec<String> = Vec::with_capacity(events.len() + n_devices + 3);
+    lines.push(metadata("process_name", TID_COORD, "shetm"));
+    lines.push(metadata("thread_name", TID_COORD, "coordinator"));
+    lines.push(metadata("thread_name", TID_CPU, "cpu"));
+    for d in 0..n_devices {
+        let name = format!("gpu{d}");
+        lines.push(metadata("thread_name", TID_GPU_BASE + d as u32, &name));
+    }
+    for e in events {
+        lines.push(e.render());
+    }
+    let mut out = String::from("[\n");
+    let last = lines.len().saturating_sub(1);
+    for (i, l) in lines.into_iter().enumerate() {
+        out.push_str(&l);
+        out.push_str(if i == last { "\n" } else { ",\n" });
+    }
+    out.push(']');
+    out
+}
+
+/// Check that a JSON value on one line is structurally sound: balanced
+/// braces/brackets outside string literals, no stray quotes.
+fn balanced(line: &str) -> bool {
+    let (mut depth, mut in_str, mut esc) = (0i32, false, false);
+    for c in line.chars() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' | '[' => depth += 1,
+            '}' | ']' => depth -= 1,
+            _ => {}
+        }
+        if depth < 0 {
+            return false;
+        }
+    }
+    depth == 0 && !in_str
+}
+
+/// Validate a trace document against the schema in
+/// `docs/OBSERVABILITY.md`; returns the number of non-metadata events.
+///
+/// Checked per line: the array framing, JSON balance, required fields
+/// (`name`, `ph`, `pid`, `tid`), a known phase (`M`/`X`/`i`), `ts` + `dur`
+/// on spans, and `ts` + thread scope on instants.
+pub fn validate_trace(text: &str) -> Result<usize, String> {
+    let mut lines = text.lines();
+    if lines.next().map(str::trim) != Some("[") {
+        return Err("trace must start with a '[' line".into());
+    }
+    let mut events = 0usize;
+    let mut closed = false;
+    for (i, raw) in lines.enumerate() {
+        let line = raw.trim();
+        if line == "]" {
+            closed = true;
+            continue;
+        }
+        if closed {
+            return Err(format!("line {}: content after closing ']'", i + 2));
+        }
+        let obj = line.strip_suffix(',').unwrap_or(line);
+        let err = |msg: &str| Err(format!("line {}: {msg}: {obj}", i + 2));
+        if !obj.starts_with('{') || !obj.ends_with('}') {
+            return err("event is not a JSON object");
+        }
+        if !balanced(obj) {
+            return err("unbalanced JSON");
+        }
+        for field in ["\"name\":\"", "\"ph\":\"", "\"pid\":", "\"tid\":"] {
+            if !obj.contains(field) {
+                return err(&format!("missing required field {field}"));
+            }
+        }
+        let ph = obj
+            .split("\"ph\":\"")
+            .nth(1)
+            .and_then(|s| s.chars().next())
+            .ok_or_else(|| format!("line {}: bad ph", i + 2))?;
+        match ph {
+            'M' => {}
+            'X' => {
+                if !obj.contains("\"ts\":") || !obj.contains("\"dur\":") {
+                    return err("span missing ts/dur");
+                }
+                events += 1;
+            }
+            'i' => {
+                if !obj.contains("\"ts\":") || !obj.contains("\"s\":\"t\"") {
+                    return err("instant missing ts or thread scope");
+                }
+                events += 1;
+            }
+            other => return err(&format!("unknown phase {other:?}")),
+        }
+    }
+    if !closed {
+        return Err("trace must end with a ']' line".into());
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micros_formatting_is_exact() {
+        assert_eq!(micros(0), "0.000");
+        assert_eq!(micros(1_234_567), "1234.567");
+        assert_eq!(micros(999), "0.999");
+        assert_eq!(virt_ns(0.002), 2_000_000);
+    }
+
+    #[test]
+    fn render_and_validate_round_trip() {
+        let events = vec![
+            TraceEvent::span("round", TID_COORD, 0, 2_000_000, Obj::new().u64("round", 0).finish()),
+            TraceEvent::span("processing", TID_CPU, 0, 1_500_000, String::new()),
+            TraceEvent::instant("epoch_reset", TID_COORD, 2_000_000, Obj::new().i64("base", 7).finish()),
+        ];
+        let doc = render_trace(&events, 2);
+        assert_eq!(validate_trace(&doc).unwrap(), 3);
+        assert!(doc.contains("\"name\":\"gpu1\""));
+        // Perfetto-loadable: the whole document is one valid JSON array.
+        assert!(doc.starts_with("[\n") && doc.ends_with(']'));
+    }
+
+    #[test]
+    fn validator_rejects_garbage() {
+        assert!(validate_trace("not a trace").is_err());
+        assert!(validate_trace("[\n{\"name\":\"x\"}\n]").is_err());
+        let bad_ph = "[\n{\"name\":\"x\",\"ph\":\"Q\",\"pid\":1,\"tid\":0}\n]";
+        assert!(validate_trace(bad_ph).unwrap_err().contains("unknown phase"));
+        let unbalanced = "[\n{\"name\":\"x\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\"args\":{\n]";
+        assert!(validate_trace(unbalanced).is_err());
+    }
+
+    #[test]
+    fn empty_trace_validates() {
+        let doc = render_trace(&[], 0);
+        assert_eq!(validate_trace(&doc).unwrap(), 0);
+    }
+}

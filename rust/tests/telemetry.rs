@@ -1,0 +1,221 @@
+//! Determinism of observation (DESIGN.md §11).
+//!
+//! Telemetry must never weaken the platform's determinism guarantees, so
+//! this suite pins:
+//!
+//! * **Trace bit-identity across threading and engines** — for every
+//!   workload (synth, memcached, bank, kmeans, zipfkv) × every
+//!   conflict-resolution policy × `n_gpus ∈ {1, 4}`, the virtual-time
+//!   trace stream and the metrics registry of a `--threads 4` run are
+//!   byte-for-byte identical to the sequential run of the same
+//!   configuration.  At `n_gpus = 1` the sequential run uses the
+//!   single-device `RoundEngine` and the threaded run the
+//!   `ClusterEngine`, so the same assertion also pins cross-engine
+//!   identity of observation.
+//! * **Histogram merge algebra** — merging per-lane histograms is
+//!   order-insensitive (commutative + associative, exactly — the buckets
+//!   are integers and the sum is fixed-point) and conserves bucket
+//!   counts, so folding per-device series in any grouping yields one
+//!   canonical registry.
+//! * **Trace schema** — every emitted document passes the same validator
+//!   the CI smoke runs (`telemetry::validate_trace`).
+
+use shetm::config::{PolicyKind, Raw, SystemConfig};
+use shetm::session::Hetm;
+use shetm::telemetry::{validate_trace, Histogram, MetricsRegistry};
+use shetm::util::prop::{forall, Cases};
+use shetm::util::Rng;
+
+const POLICIES: [PolicyKind; 3] = [
+    PolicyKind::FavorCpu,
+    PolicyKind::FavorGpu,
+    PolicyKind::CpuWithStarvationGuard,
+];
+
+const WORKLOADS: [&str; 5] = ["synth", "memcached", "bank", "kmeans", "zipfkv"];
+
+const ROUNDS: usize = 3;
+
+fn cfg(policy: PolicyKind, n_gpus: usize) -> SystemConfig {
+    let mut raw = Raw::new();
+    raw.set("cpu.txn_ns=2000").unwrap();
+    raw.set("gpu.txn_ns=230").unwrap();
+    raw.set("hetm.period_ms=2").unwrap();
+    raw.set("cluster.shard_bits=6").unwrap();
+    raw.set("seed=77").unwrap();
+    let mut c = SystemConfig::from_raw(&raw).unwrap();
+    c.n_words = 1 << 14;
+    c.policy = policy;
+    c.n_gpus = n_gpus;
+    c
+}
+
+/// Small app shapes (each app reads only its own section) — the same
+/// fixture the `session_api.rs` golden suite uses.
+fn app_raw() -> Raw {
+    Raw::parse(
+        "[memcached]\nn_sets = 1024\n\
+         [bank]\naccounts = 8192\ncross_prob = 0.002\n\
+         [kmeans]\npoints = 4096\n\
+         [zipfkv]\nkeys = 4096\nupdate_frac = 0.5\n",
+    )
+    .unwrap()
+}
+
+/// Run one traced session and return (trace document, registry).
+fn traced_run(name: &str, policy: PolicyKind, n_gpus: usize, threads: usize) -> (String, MetricsRegistry) {
+    let mut c = cfg(policy, n_gpus);
+    c.cluster_threads = threads;
+    let mut s = Hetm::from_config(&c)
+        .workload_named(name)
+        .app_config(app_raw())
+        .trace(true)
+        .build()
+        .unwrap();
+    s.run_rounds(ROUNDS).unwrap();
+    s.drain().unwrap();
+    let doc = s.trace_json().expect("trace requested");
+    let reg = s.collector().expect("collector active").registry().clone();
+    (doc, reg)
+}
+
+#[test]
+fn trace_is_bit_identical_across_threads_and_engines() {
+    for name in WORKLOADS {
+        for policy in POLICIES {
+            for n_gpus in [1usize, 4] {
+                let label = format!("{name}/{policy:?}/gpus={n_gpus}");
+                let (seq_doc, seq_reg) = traced_run(name, policy, n_gpus, 1);
+                let (thr_doc, thr_reg) = traced_run(name, policy, n_gpus, 4);
+                assert_eq!(
+                    seq_doc, thr_doc,
+                    "{label}: trace stream diverged between --threads 1 and --threads 4"
+                );
+                assert_eq!(
+                    seq_reg, thr_reg,
+                    "{label}: metrics registry diverged between --threads 1 and --threads 4"
+                );
+                let events = validate_trace(&seq_doc)
+                    .unwrap_or_else(|e| panic!("{label}: invalid trace: {e}"));
+                assert!(
+                    events >= ROUNDS,
+                    "{label}: expected at least one event per round, got {events}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn trace_carries_round_and_phase_spans() {
+    let (doc, reg) = traced_run("synth", PolicyKind::FavorCpu, 1, 1);
+    for needle in [
+        "\"name\":\"round\"",
+        "\"name\":\"processing\"",
+        "\"name\":\"validate\"",
+        "\"name\":\"epoch_reset\"",
+        "\"name\":\"thread_name\"",
+    ] {
+        assert!(doc.contains(needle), "trace missing {needle}");
+    }
+    // The drain is a round too.
+    assert_eq!(reg.counter("hetm_rounds_total"), ROUNDS as u64 + 1);
+    assert!(reg
+        .histogram("hetm_round_latency_seconds")
+        .is_some_and(|h| h.count() == ROUNDS as u64 + 1));
+}
+
+/// Deterministic positive sample spanning ~24 orders of magnitude (the
+/// histogram's log-linear buckets cover 2^-40..2^11).
+fn sample(rng: &mut Rng) -> f64 {
+    let mantissa = 1.0 + rng.below(1_000_000) as f64 / 1_000_000.0;
+    let exp = rng.below(25) as i32 - 12;
+    mantissa * 10f64.powi(exp)
+}
+
+#[test]
+fn histogram_merge_is_order_insensitive_and_conserves_counts() {
+    forall(Cases::new("hist_merge", 200).max_size(64), |rng, size| {
+        // `parts` per-lane histograms with `size` observations each.
+        let parts: Vec<Histogram> = (0..1 + rng.below(6) as usize)
+            .map(|_| {
+                let mut h = Histogram::new();
+                for _ in 0..size {
+                    h.observe(sample(rng));
+                }
+                h
+            })
+            .collect();
+        let total: u64 = parts.iter().map(|h| h.count()).sum();
+
+        // Fold forward, fold reverse, and fold as a balanced tree.
+        let fold = |hs: &[Histogram]| {
+            let mut acc = Histogram::new();
+            for h in hs {
+                acc.merge(h);
+            }
+            acc
+        };
+        let fwd = fold(&parts);
+        let rev = {
+            let mut r = parts.clone();
+            r.reverse();
+            fold(&r)
+        };
+        let tree = {
+            let mut level = parts.clone();
+            while level.len() > 1 {
+                let mut next = Vec::new();
+                for pair in level.chunks(2) {
+                    let mut m = pair[0].clone();
+                    if let Some(b) = pair.get(1) {
+                        m.merge(b);
+                    }
+                    next.push(m);
+                }
+                level = next;
+            }
+            level.pop().unwrap_or_default()
+        };
+
+        if fwd != rev {
+            return Err("forward and reverse folds differ".to_string());
+        }
+        if fwd != tree {
+            return Err("sequential and tree folds differ".to_string());
+        }
+        if fwd.count() != total {
+            return Err(format!(
+                "merge lost observations: {} of {total}",
+                fwd.count()
+            ));
+        }
+        if fwd.bucket_total() != total {
+            return Err(format!(
+                "bucket counts not conserved: {} of {total}",
+                fwd.bucket_total()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn registry_histograms_survive_roundtrip_quantiles() {
+    // Quantiles are monotone and bracketed by min/max — the properties
+    // the snapshot's p50/p99/p999 columns rely on.
+    forall(Cases::new("hist_quantiles", 100).max_size(128), |rng, size| {
+        let mut h = Histogram::new();
+        for _ in 0..size.max(1) {
+            h.observe(sample(rng));
+        }
+        let (p50, p99, p999) = (h.quantile(0.5), h.quantile(0.99), h.quantile(0.999));
+        if !(p50 <= p99 && p99 <= p999) {
+            return Err(format!("quantiles not monotone: {p50} {p99} {p999}"));
+        }
+        if p999 > h.max() {
+            return Err(format!("p999 {p999} above max {}", h.max()));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""Compare a freshly generated BENCH_*.json against the committed baseline.
+
+Usage:
+    scripts/check_perf.py BASELINE CURRENT
+
+Exit status 0 when CURRENT is schema-valid and no deterministic metric
+regresses more than the tolerance versus BASELINE; 1 otherwise.
+
+Policy (documented in docs/BENCHMARKS.md):
+
+* Only *virtual-time* metrics are compared — they are deterministic for a
+  given configuration, so any drift is a real behavior change, not noise.
+  Wall-clock fields (``wall_s``, ``speedup_vs_threads1``) depend on the
+  host and are never gated.
+* Tolerance is 25% relative, in the *bad* direction only (improvements
+  never fail the check).  Deterministic metrics should normally be
+  bit-identical run-to-run; the headroom exists so intentional
+  engine-behavior changes inside one PR do not hard-block CI — a larger
+  shift must come with a baseline update, which the diff then documents.
+* A baseline marked ``"provisional": true`` (or with no points) cannot
+  gate anything: the check validates CURRENT's schema, prints a notice
+  asking for the baseline to be regenerated on real hardware, and passes.
+* Points are matched by identity keys (the sweep coordinates); a point
+  present in the baseline but missing from CURRENT is a failure — sweeps
+  must not silently shrink.
+"""
+
+import json
+import sys
+
+# Per-bench identity keys (the sweep coordinates that name a point) and
+# the deterministic metrics gated on it.  direction: +1 = higher is
+# better (throughput-like), -1 = lower is better (cost-like).
+BENCHES = {
+    "scale_gpus": {
+        "identity": ("sweep", "n_gpus", "threads", "cross_shard_prob"),
+        "metrics": {
+            "virtual_tx_per_s": +1,
+            "round_abort_rate": -1,
+        },
+        "schema": (
+            "sweep",
+            "n_gpus",
+            "threads",
+            "cross_shard_prob",
+            "wall_s",
+            "virtual_tx_per_s",
+            "round_abort_rate",
+            "speedup_vs_threads1",
+        ),
+    },
+    "ablate_log": {
+        "identity": ("theta", "compaction", "filter"),
+        "metrics": {
+            "virtual_tx_per_s": +1,
+            "shipped_entries": -1,
+            "gpu_validation_s": -1,
+            "chunks": -1,
+        },
+        "schema": (
+            "theta",
+            "compaction",
+            "filter",
+            "raw_entries",
+            "shipped_entries",
+            "chunks",
+            "chunks_filtered",
+            "filtered_chunk_ratio",
+            "gpu_validation_s",
+            "virtual_tx_per_s",
+        ),
+    },
+}
+
+TOLERANCE = 0.25
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"check_perf: cannot load {path}: {e}")
+
+
+def check_schema(doc, path):
+    bench = doc.get("bench")
+    if bench not in BENCHES:
+        sys.exit(f"check_perf: {path}: unknown bench {bench!r}")
+    spec = BENCHES[bench]
+    points = doc.get("points")
+    if not isinstance(points, list):
+        sys.exit(f"check_perf: {path}: 'points' must be a list")
+    for i, p in enumerate(points):
+        missing = [k for k in spec["schema"] if k not in p]
+        if missing:
+            sys.exit(f"check_perf: {path}: point {i} missing fields {missing}")
+    return bench, spec, points
+
+
+def key_of(point, identity):
+    return tuple(json.dumps(point[k]) for k in identity)
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__.strip())
+    base_path, cur_path = sys.argv[1], sys.argv[2]
+    base, cur = load(base_path), load(cur_path)
+
+    bench, spec, cur_points = check_schema(cur, cur_path)
+    base_bench, _, base_points = check_schema(base, base_path)
+    if bench != base_bench:
+        sys.exit(f"check_perf: bench mismatch: {base_bench!r} vs {bench!r}")
+
+    if base.get("provisional") or not base_points:
+        print(
+            f"check_perf: NOTICE: baseline {base_path} is provisional/empty — "
+            f"schema of {cur_path} validated ({len(cur_points)} points), no "
+            "perf gate applied. Regenerate the baseline on real hardware and "
+            "commit it to arm the gate."
+        )
+        return
+
+    if base.get("fast") != cur.get("fast"):
+        print(
+            "check_perf: NOTICE: fast-mode flag differs between baseline "
+            "and current run; sweeps are not comparable, skipping gate."
+        )
+        return
+
+    cur_by_key = {key_of(p, spec["identity"]): p for p in cur_points}
+    failures = []
+    for bp in base_points:
+        key = key_of(bp, spec["identity"])
+        cp = cur_by_key.get(key)
+        ident = ", ".join(f"{k}={bp[k]}" for k in spec["identity"])
+        if cp is None:
+            failures.append(f"point [{ident}] missing from current run")
+            continue
+        for metric, direction in spec["metrics"].items():
+            b, c = float(bp[metric]), float(cp[metric])
+            if b == 0.0:
+                # No meaningful relative delta; only flag regressions from
+                # an exact zero (e.g. abort rate was 0, now isn't).
+                bad = direction < 0 and c > 0.0
+                rel = float("inf") if bad else 0.0
+            else:
+                rel = (c - b) / abs(b)
+                bad = rel * direction < -TOLERANCE
+            if bad:
+                failures.append(
+                    f"[{ident}] {metric}: {b:g} -> {c:g} "
+                    f"({rel * 100.0:+.1f}%, tolerance {TOLERANCE * 100.0:.0f}%)"
+                )
+
+    if failures:
+        print(f"check_perf: FAIL ({bench}): {len(failures)} regression(s)")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
+    print(
+        f"check_perf: OK ({bench}): {len(base_points)} baseline points "
+        f"within {TOLERANCE * 100.0:.0f}% on deterministic metrics"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -3,9 +3,25 @@
 
 use shetm::config::{Raw, SystemConfig};
 
-/// True when a quick smoke run was requested (`SHETM_BENCH_FAST=1`).
+/// True when a quick smoke run was requested via `SHETM_BENCH_FAST`.
+///
+/// Accepts `1`/`true`/`yes` (on) and `0`/`false`/`no`/empty (off),
+/// case-insensitively.  Anything else aborts loudly: a typo like
+/// `SHETM_BENCH_FAST=yse` silently running the full multi-minute sweep —
+/// or CI silently gating against a full-sweep baseline with fast points —
+/// is worse than an error.
 pub fn fast() -> bool {
-    std::env::var("SHETM_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+    let Ok(v) = std::env::var("SHETM_BENCH_FAST") else {
+        return false;
+    };
+    match v.to_ascii_lowercase().as_str() {
+        "1" | "true" | "yes" => true,
+        "0" | "false" | "no" | "" => false,
+        other => panic!(
+            "SHETM_BENCH_FAST={other:?} is not recognized: use 1/true/yes \
+             or 0/false/no"
+        ),
+    }
 }
 
 /// The scaled-testbed base configuration every figure bench starts from

@@ -565,11 +565,9 @@ mod tests {
         assert!(s.batches > 0 && s.commits > 0);
         let sum: i64 = d.stmr().iter().map(|&v| v as i64).sum();
         assert_eq!(sum, total, "device-side adds conserve the total");
-        // All GPU writes stay in the upper half.
-        for (w, &v) in d.ws_bmp().as_slice().iter().enumerate() {
-            if v != 0 {
-                assert!(w >= n / 2);
-            }
+        // All GPU writes stay in the upper half (shift 0: granule == word).
+        for w in d.ws_bmp().iter_marked() {
+            assert!(w >= n / 2);
         }
     }
 

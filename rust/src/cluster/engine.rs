@@ -88,6 +88,25 @@ struct LaneObs {
     merge: Vec<f64>,
 }
 
+/// Per-lane round-lifetime buffers, owned by the engine and lent to the
+/// [`Lane`] for the round in flight (DESIGN.md §12 arena): steady-state
+/// rounds reuse the capacity grown in earlier rounds instead of
+/// allocating.  The retired `LogChunk` buffers themselves go back to the
+/// owning shard's [`RoundLog`] pool via [`LogRouter::recycle`].
+#[derive(Default)]
+struct LaneBufs {
+    /// Backing store for [`Lane::chunks`].
+    chunks: Vec<LogChunk>,
+    /// Backing store for [`Lane::arrivals`].
+    arrivals: Vec<f64>,
+    /// Backing store for [`Lane::inbox`].
+    inbox: Vec<LogChunk>,
+    /// Backing store for [`Lane::coarse`].
+    coarse: Vec<(usize, usize)>,
+    /// Backing store for [`Lane::conf`].
+    conf: Vec<u32>,
+}
+
 /// One device's pipeline state for the round in flight: disjoint mutable
 /// borrows of the per-device engine state plus lane-private partials of
 /// the shared [`RoundStats`].  Lanes never touch each other's fields, so a
@@ -142,6 +161,9 @@ struct Lane<'a, G> {
     /// Coarse merge ranges computed while scheduling DtH transfers
     /// (reused by the coordinator-thread install).
     coarse: Vec<(usize, usize)>,
+    /// Per-chunk conflict-count scratch for the batched validation fast
+    /// paths ([`GpuDevice::early_validate_chunks_into`]).
+    conf: Vec<u32>,
     /// Phase output: completion time of this lane's last bus transfer.
     dth_end: f64,
     /// First error raised inside a parallel phase (deferred to the next
@@ -254,6 +276,12 @@ pub struct ClusterEngine<C: CpuDriver, G: GpuDriver> {
     /// OS worker threads driving the per-device lane phases (1 = fully
     /// sequential; results are identical at any setting).
     threads: usize,
+    /// Per-lane round-lifetime buffers (DESIGN.md §12 arena), lent to the
+    /// lanes each round and taken back at wrap-up.
+    lane_bufs: Vec<LaneBufs>,
+    /// Coordinator-thread scratch for exact dirty-range scans (merge
+    /// installs, stale-map bookkeeping).
+    exact: Vec<(usize, usize)>,
 }
 
 impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
@@ -314,6 +342,8 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             cpu_ws: (0..n).map(|_| Bitmap::new(map.n_words(), bmp_shift)).collect(),
             map,
             threads: 1,
+            lane_bufs: (0..n).map(|_| LaneBufs::default()).collect(),
+            exact: Vec::new(),
         }
     }
 
@@ -330,10 +360,18 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
     /// Set the number of OS worker threads driving the per-device lane
     /// phases (config key `cluster.threads`, CLI `--threads`).  Clamped to
     /// at least 1; values above `n_gpus` spawn one thread per device.
-    /// Purely a wall-clock lever: results are bit-identical at any
-    /// setting (DESIGN.md §8).
+    /// Threads left over after one-per-lane also engage intra-device
+    /// parallel conflict counting ([`GpuDevice::set_validate_threads`])
+    /// when a device's chunk backlog is large enough to amortize the
+    /// spawns.  Purely a wall-clock lever: results are bit-identical at
+    /// any setting (DESIGN.md §8 and §12 — conflict counts are integer
+    /// sums, associative in any fold order).
     pub fn set_threads(&mut self, n: usize) {
         self.threads = n.max(1);
+        let per_dev = (self.threads / self.devices.len()).max(1);
+        for d in &mut self.devices {
+            d.set_validate_threads(per_dev);
+        }
     }
 
     /// Current worker-thread setting (see [`Self::set_threads`]).
@@ -462,6 +500,8 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             stale,
             cpu_ws,
             threads,
+            lane_bufs,
+            exact,
         } = self;
         let threads = *threads;
         let cost = *cost;
@@ -490,6 +530,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             cpu.snapshot();
         }
 
+        // Round-lifetime buffers come from the engine-owned arena (taken
+        // here, returned at wrap-up): steady-state rounds reuse last
+        // round's capacity instead of allocating (DESIGN.md §12).
         let mut lanes: Vec<Lane<'_, G>> = devices
             .iter_mut()
             .zip(gpus.iter_mut())
@@ -498,7 +541,8 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             .zip(stale.iter_mut())
             .zip(cpu_ws.iter_mut())
             .zip(cluster.per_device.iter_mut())
-            .map(|((((((dev, gpu), h2d), d2h), stale), cpu_ws), per_dev)| Lane {
+            .zip(lane_bufs.iter_mut())
+            .map(|(((((((dev, gpu), h2d), d2h), stale), cpu_ws), per_dev), bufs)| Lane {
                 dev,
                 gpu,
                 h2d,
@@ -507,9 +551,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 cpu_ws,
                 per_dev,
                 cursor: t0,
-                chunks: Vec::new(),
-                arrivals: Vec::new(),
-                inbox: Vec::new(),
+                chunks: std::mem::take(&mut bufs.chunks),
+                arrivals: std::mem::take(&mut bufs.arrivals),
+                inbox: std::mem::take(&mut bufs.inbox),
                 gpu_commits: 0,
                 gpu_attempts: 0,
                 gpu_batches: 0,
@@ -520,7 +564,8 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 chunks_skipped: 0,
                 ship_end: 0.0,
                 early_conf: 0,
-                coarse: Vec::new(),
+                coarse: std::mem::take(&mut bufs.coarse),
+                conf: std::mem::take(&mut bufs.conf),
                 dth_end: 0.0,
                 err: None,
                 refresh_bytes: 0,
@@ -537,9 +582,10 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         {
             let cpu_stmr = cpu.stmr();
             run_lanes(threads, &mut lanes, |_, lane| {
-                let ranges = lane.stale.dirty_word_ranges_coarse(granule_words);
+                lane.stale
+                    .dirty_word_ranges_coarse_into(granule_words, &mut lane.coarse);
                 let mut refresh_end = t0;
-                for &(s, e) in &ranges {
+                for &(s, e) in lane.coarse.iter() {
                     let bytes = ((e - s) * 4) as u64;
                     let dur = cost.bus_h2d.transfer_secs(bytes);
                     let (_, end) = lane.h2d.schedule(t0, dur);
@@ -667,9 +713,17 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                         }
                         vcost
                     } else {
-                        for c in lane.chunks.iter().take(arrived) {
-                            conf += lane.dev.early_validate_chunk(c);
-                        }
+                        // Batched fast path (DESIGN.md §12): one flat
+                        // conflict-count pass per arrived chunk, fanned
+                        // over the device's validate lanes when the
+                        // backlog is large enough.  Integer partials sum
+                        // in chunk order — bit-identical to the scalar
+                        // loop.
+                        lane.dev.early_validate_chunks_into(
+                            &lane.chunks[..arrived],
+                            &mut lane.conf,
+                        );
+                        conf += lane.conf.iter().sum::<u32>();
                         arrived as f64 * chunk_entries as f64 * cost.gpu_validate_entry_s
                     };
                     lane.cursor += vcost;
@@ -843,10 +897,12 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                     ld.per_dev.phases.validation_s += probe;
                     if lo.cpu_ws.intersects(ld.dev.rs_bmp()) {
                         cluster.cross_escalations += 1;
-                        let mut n_conf = 0u64;
-                        for c in &lo.chunks {
-                            n_conf += u64::from(ld.dev.early_validate_chunk(c));
-                        }
+                        // Escalated word-level scan, batched over the
+                        // owner's chunks (DESIGN.md §12): per-chunk
+                        // integer counts fold in chunk order, so the sum
+                        // is bit-identical to the scalar loop.
+                        ld.dev.early_validate_chunks_into(&lo.chunks, &mut ld.conf);
+                        let n_conf: u64 = ld.conf.iter().map(|&c| u64::from(c)).sum();
                         let vcost = lo.chunks.len() as f64 * chunk_cost;
                         ld.cursor += vcost;
                         ld.gpu_phases.validation_s += vcost;
@@ -951,7 +1007,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             // CPU truth on the coordinator thread in device-index order —
             // the deterministic serialization point of the merge.
             run_lanes(threads, &mut lanes, |_, lane| {
-                lane.coarse = lane.dev.ws_bmp().dirty_word_ranges_coarse(granule_words);
+                lane.dev
+                    .ws_bmp()
+                    .dirty_word_ranges_coarse_into(granule_words, &mut lane.coarse);
                 let mut dth_end = lane.cursor;
                 for &(s, e) in &lane.coarse {
                     let bytes = ((e - s) * 4) as u64;
@@ -978,8 +1036,8 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                         cpu.stmr().install_range(s, data);
                     }
                 } else {
-                    let exact = lane.dev.ws_bmp().dirty_word_ranges();
-                    for &(s, e) in &exact {
+                    lane.dev.ws_bmp().dirty_word_ranges_into(exact);
+                    for &(s, e) in exact.iter() {
                         let data = &lane.dev.stmr()[s..e];
                         cpu.stmr().install_range(s, data);
                     }
@@ -1039,12 +1097,11 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                         {
                             let cpu_stmr = cpu.stmr();
                             run_lanes(threads, &mut lanes, |_, lane| {
-                                let ranges = lane
-                                    .dev
+                                lane.dev
                                     .ws_bmp()
-                                    .dirty_word_ranges_coarse(granule_words);
+                                    .dirty_word_ranges_coarse_into(granule_words, &mut lane.coarse);
                                 let mut h2d_end = lane.cursor;
-                                for &(s, e) in &ranges {
+                                for &(s, e) in lane.coarse.iter() {
                                     let bytes = ((e - s) * 4) as u64;
                                     let dur = cost.bus_h2d.transfer_secs(bytes);
                                     let (_, end) = lane.h2d.schedule(lane.cursor, dur);
@@ -1083,8 +1140,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                     router.truncate_to_carried();
                     let snap_cost = n_bytes as f64 / cost.cpu_snapshot_bytes_per_s;
                     run_lanes(threads, &mut lanes, |_, lane| {
-                        lane.coarse =
-                            lane.dev.ws_bmp().dirty_word_ranges_coarse(granule_words);
+                        lane.dev
+                            .ws_bmp()
+                            .dirty_word_ranges_coarse_into(granule_words, &mut lane.coarse);
                         let mut dth_end = lane.cursor + snap_cost;
                         for &(s, e) in &lane.coarse {
                             let bytes = ((e - s) * 4) as u64;
@@ -1102,8 +1160,8 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                                 cpu.stmr().install_range(s, data);
                             }
                         } else {
-                            let exact = lane.dev.ws_bmp().dirty_word_ranges();
-                            for &(s, e) in &exact {
+                            lane.dev.ws_bmp().dirty_word_ranges_into(exact);
+                            for &(s, e) in exact.iter() {
                                 let data = &lane.dev.stmr()[s..e];
                                 cpu.stmr().install_range(s, data);
                             }
@@ -1131,12 +1189,12 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         if n_dev > 1 {
             if ok || cpu_lost {
                 // Surviving device writes: every OTHER device is stale.
-                let all_exact: Vec<Vec<(usize, usize)>> = lanes
-                    .iter()
-                    .map(|l| l.dev.ws_bmp().dirty_word_ranges())
-                    .collect();
-                for (d, exact) in all_exact.iter().enumerate() {
-                    for &(s, e) in exact {
+                // One reused range scan per device; stale marks are
+                // idempotent set-bits, so the per-device interleaving is
+                // immaterial to the resulting bitmaps.
+                for d in 0..n_dev {
+                    lanes[d].dev.ws_bmp().dirty_word_ranges_into(exact);
+                    for &(s, e) in exact.iter() {
                         for (o, lane) in lanes.iter_mut().enumerate() {
                             if o == d {
                                 continue;
@@ -1245,6 +1303,20 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 d2h_busy,
             )
         });
+
+        // Retire the round buffers into the engine arena: the routed
+        // chunk buffers go back to their shard log's pool (reused by next
+        // round's `make_chunk`), the vectors keep their capacity in
+        // `lane_bufs` — steady-state rounds allocate nothing (§12).
+        for (d, (lane, bufs)) in lanes.iter_mut().zip(lane_bufs.iter_mut()).enumerate() {
+            router.recycle(d, &mut lane.chunks);
+            lane.arrivals.clear();
+            bufs.chunks = std::mem::take(&mut lane.chunks);
+            bufs.arrivals = std::mem::take(&mut lane.arrivals);
+            bufs.inbox = std::mem::take(&mut lane.inbox);
+            bufs.coarse = std::mem::take(&mut lane.coarse);
+            bufs.conf = std::mem::take(&mut lane.conf);
+        }
         drop(lanes);
 
         rs.t_end = round_end;

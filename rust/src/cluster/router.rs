@@ -111,6 +111,13 @@ impl LogRouter {
         self.logs[shard].drain_all(out);
     }
 
+    /// Return retired chunk buffers to one shard log's arena pool
+    /// ([`RoundLog::recycle`]): next round's drains on that shard reuse
+    /// the allocations instead of growing fresh ones.
+    pub fn recycle(&mut self, shard: usize, chunks: &mut Vec<LogChunk>) {
+        self.logs[shard].recycle(chunks);
+    }
+
     /// Entries logged this round across all shards.
     pub fn len_total(&self) -> usize {
         self.logs.iter().map(|l| l.len()).sum()

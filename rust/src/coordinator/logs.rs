@@ -64,6 +64,10 @@ pub struct RoundLog {
     shipped: u64,
     /// Dedup scratch: address -> kept index (reused across drains).
     dedup: HashMap<u32, usize>,
+    /// Retired chunk buffers awaiting reuse (DESIGN.md §12 arena): the
+    /// engines hand back each round's chunks via [`Self::recycle`], so
+    /// steady-state drains allocate nothing.
+    pool: Vec<LogChunk>,
 }
 
 impl RoundLog {
@@ -85,6 +89,7 @@ impl RoundLog {
             raw_appended: 0,
             shipped: 0,
             dedup: HashMap::new(),
+            pool: Vec::new(),
         }
     }
 
@@ -271,9 +276,24 @@ impl RoundLog {
         self.entries.truncate(w);
     }
 
+    /// Return a round's retired chunks to the arena so later drains reuse
+    /// their buffers (chunks of a stale size are dropped at reuse time).
+    pub fn recycle(&mut self, chunks: &mut Vec<LogChunk>) {
+        self.pool.append(chunks);
+    }
+
     fn make_chunk(&mut self, n: usize) -> LogChunk {
         debug_assert!(n <= self.chunk_entries);
-        let mut chunk = LogChunk::empty(self.chunk_entries);
+        let mut chunk = match self.pool.pop() {
+            Some(mut c) if c.addrs.len() == self.chunk_entries => {
+                c.addrs.fill(-1);
+                c.vals.fill(0);
+                c.ts.fill(0);
+                c.sig = None;
+                c
+            }
+            _ => LogChunk::empty(self.chunk_entries),
+        };
         for (i, e) in self.entries[self.drained..self.drained + n].iter().enumerate() {
             chunk.addrs[i] = e.addr as i32;
             chunk.vals[i] = e.val;
@@ -463,5 +483,42 @@ mod tests {
         log.reset_with_carry(&[entry(9, 9, 9)]);
         assert_eq!(log.raw_appended(), 1, "carry re-ships, so it counts");
         assert_eq!(log.shipped(), 0);
+    }
+
+    /// Recycled chunk buffers come back fully reset (stale entries, pad
+    /// values, signatures all cleared) and stale-size buffers retired by
+    /// `set_chunk_entries` are never reused.
+    #[test]
+    fn recycled_chunks_reset_and_respect_chunk_size() {
+        let mut log = RoundLog::with_chunk_entries(4);
+        log.set_sig_shift(Some(0));
+        log.append(&(0..6).map(|i| entry(i, i as i32 + 10, 1)).collect::<Vec<_>>());
+        let mut chunks = Vec::new();
+        log.drain_all(&mut chunks);
+        assert_eq!(chunks.len(), 2);
+        assert!(chunks.iter().all(|c| c.sig.is_some()));
+        log.recycle(&mut chunks);
+        assert!(chunks.is_empty(), "recycle drains the retired buffers");
+
+        // Next round's drains must produce chunks indistinguishable from
+        // fresh allocations.
+        log.reset_with_carry(&[]);
+        log.append(&[entry(2, 99, 1)]);
+        log.drain_all(&mut chunks);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].addrs, vec![2, -1, -1, -1]);
+        assert_eq!(chunks[0].vals, vec![99, 0, 0, 0]);
+        assert_eq!(chunks[0].ts, vec![1, 0, 0, 0]);
+        assert_eq!(chunks[0].live(), 1);
+
+        // Defensive: a pooled buffer of the wrong shape (possible only
+        // across engine reconfiguration) is dropped, never reused.
+        log.recycle(&mut chunks);
+        let mut stale_size = vec![LogChunk::empty(8)];
+        log.recycle(&mut stale_size);
+        log.append(&[entry(3, 33, 1)]);
+        log.drain_all(&mut chunks);
+        assert_eq!(chunks[0].addrs.len(), 4, "stale-size pool entry not reused");
+        assert_eq!(chunks[0].addrs[0], 3);
     }
 }

@@ -327,6 +327,14 @@ pub struct RoundEngine<C: CpuDriver, G: GpuDriver> {
     log: RoundLog,
     carry: Vec<WriteEntry>,
     scratch: Vec<WriteEntry>,
+    /// Round-lifetime buffers, reused across rounds (DESIGN.md §12
+    /// arena): shipped chunks + their bus-arrival times, merge transfer
+    /// ranges, and per-chunk early-validation conflict counts.  Steady
+    /// state rounds allocate nothing.
+    chunks: Vec<LogChunk>,
+    arrivals: Vec<f64>,
+    ranges: Vec<(usize, usize)>,
+    early_conf: Vec<u32>,
 }
 
 impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
@@ -356,6 +364,10 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
             log,
             carry: Vec::new(),
             scratch: Vec::new(),
+            chunks: Vec::new(),
+            arrivals: Vec::new(),
+            ranges: Vec::new(),
+            early_conf: Vec::new(),
         }
     }
 
@@ -444,10 +456,13 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
     }
 
     /// Merge-phase transfer ranges: the GPU write-set rounded out to the
-    /// paper's 16 KB transfer granularity and coalesced (§IV-D).
-    fn merge_ranges(&self) -> Vec<(usize, usize)> {
+    /// paper's 16 KB transfer granularity and coalesced (§IV-D), scanned
+    /// into the reused `self.ranges` buffer.
+    fn merge_ranges_into(&mut self) {
         let granule_words = (crate::bus::chunking::MERGE_GRANULE_BYTES / 4) as usize;
-        self.device.ws_bmp().dirty_word_ranges_coarse(granule_words)
+        self.device
+            .ws_bmp()
+            .dirty_word_ranges_coarse_into(granule_words, &mut self.ranges);
     }
 
     /// Execute one synchronization round.
@@ -486,8 +501,10 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
         }
         let exec_end_target = t0 + self.cfg.period_s;
 
-        let mut chunks: Vec<LogChunk> = Vec::new();
-        let mut arrivals: Vec<f64> = Vec::new();
+        // Arena buffers: recycled at the previous round's wrap-up, so
+        // these clears are no-ops in steady state.
+        self.chunks.clear();
+        self.arrivals.clear();
         let mut early_abort = false;
         let mut early_conf = 0u64;
 
@@ -528,12 +545,12 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
 
             // Non-blocking log streaming (§IV-D): ship full chunks now.
             if optimized {
-                let n0 = chunks.len();
-                self.log.drain_full_chunks(&mut chunks);
-                for c in &chunks[n0..] {
+                let n0 = self.chunks.len();
+                self.log.drain_full_chunks(&mut self.chunks);
+                for c in &self.chunks[n0..] {
                     let dur = self.cost.bus_h2d.transfer_secs(c.wire_bytes());
                     let (_, end) = self.h2d.schedule(cpu_cursor, dur);
-                    arrivals.push(end);
+                    self.arrivals.push(end);
                     if tel_on {
                         obs_ship.push(dur);
                     }
@@ -543,13 +560,13 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
             // Early validation between segments (§IV-D): check arrived
             // chunks against the current read-set bitmap without applying.
             if optimized && self.cfg.early_validation && s + 1 < segments {
-                let arrived = arrivals.iter().filter(|&&a| a <= cpu_cursor).count();
+                let arrived = self.arrivals.iter().filter(|&&a| a <= cpu_cursor).count();
                 let mut conf = 0u32;
                 let cost = if self.cfg.chunk_filter {
                     // Signature-prefiltered scan: a provably-clean chunk
                     // pays only the per-chunk signature test.
                     let mut cost = 0.0;
-                    for c in chunks.iter().take(arrived) {
+                    for c in self.chunks.iter().take(arrived) {
                         cost += self.cost.gpu_sig_check_s;
                         if self.device.chunk_provably_clean(c) {
                             continue;
@@ -560,9 +577,12 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
                     }
                     cost
                 } else {
-                    for c in chunks.iter().take(arrived) {
-                        conf += self.device.early_validate_chunk(c);
-                    }
+                    // Unfiltered: one batched, read-only scan — fanned
+                    // over the device's validate-thread budget, summed in
+                    // chunk order (bit-identical to the scalar loop).
+                    self.device
+                        .early_validate_chunks_into(&self.chunks[..arrived], &mut self.early_conf);
+                    conf += self.early_conf.iter().sum::<u32>();
                     arrived as f64
                         * self.cfg.chunk_entries as f64
                         * self.cost.gpu_validate_entry_s
@@ -584,13 +604,13 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
 
         // Drain the remaining (tail) chunks.
         {
-            let n0 = chunks.len();
-            self.log.drain_all(&mut chunks);
+            let n0 = self.chunks.len();
+            self.log.drain_all(&mut self.chunks);
             let mut ship_end = cpu_cursor;
-            for c in &chunks[n0..] {
+            for c in &self.chunks[n0..] {
                 let dur = self.cost.bus_h2d.transfer_secs(c.wire_bytes());
                 let (_, end) = self.h2d.schedule(cpu_cursor, dur);
-                arrivals.push(end);
+                self.arrivals.push(end);
                 if tel_on {
                     obs_ship.push(dur);
                 }
@@ -611,7 +631,7 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
         let mut conflicts = 0u64;
         let chunk_cost = self.cfg.chunk_entries as f64 * self.cost.gpu_validate_entry_s;
         let filter = self.cfg.chunk_filter;
-        for (c, &arr) in chunks.iter().zip(&arrivals) {
+        for (c, &arr) in self.chunks.iter().zip(&self.arrivals) {
             let start = arr.max(gpu_cursor);
             rs.gpu_phases.blocked_s += start - gpu_cursor;
             if early_abort {
@@ -653,7 +673,7 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
         if early_abort {
             conflicts += early_conf;
         }
-        rs.chunks = chunks.len() as u64;
+        rs.chunks = self.chunks.len() as u64;
         rs.log_entries_raw = self.log.raw_appended();
         rs.log_entries_shipped = self.log.shipped();
         rs.conflict_entries = conflicts;
@@ -690,11 +710,13 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
         if ok {
             if conditional {
                 // favor-GPU deferred apply: now that validation succeeded,
-                // apply the CPU log chunks to the device replica.
-                for c in &chunks {
+                // apply the CPU log chunks to the device replica.  The
+                // applies stay sequential in shipping order — the `>=`
+                // freshness rule is order-dependent.
+                for c in &self.chunks {
                     self.device.validate_chunk(c)?;
                 }
-                let cost = chunks.len() as f64 * chunk_cost;
+                let cost = self.chunks.len() as f64 * chunk_cost;
                 gpu_cursor += cost;
                 rs.gpu_phases.merge_s += cost;
             }
@@ -703,9 +725,9 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
             // replica.  (Post-validation, the GPU's words equal the CPU's
             // everywhere the GPU did not write, so rounding ranges out to
             // coarse granules copies only agreeing bytes.)
-            let ranges = self.merge_ranges();
+            self.merge_ranges_into();
             let mut dth_end = gpu_cursor;
-            for &(s, e) in &ranges {
+            for &(s, e) in &self.ranges {
                 let bytes = ((e - s) * 4) as u64;
                 let dur = self.cost.bus_d2h.transfer_secs(bytes);
                 let (_, end) = self.d2h.schedule(gpu_cursor, dur);
@@ -741,8 +763,8 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
                     rs.gpu_commits = 0;
                     if optimized {
                         // Shadow + CPU-log replay (§IV-D rollback latency).
-                        self.device.rollback_with_logs(&chunks);
-                        let cost = chunks.len() as f64 * chunk_cost;
+                        self.device.rollback_with_logs(&self.chunks);
+                        let cost = self.chunks.len() as f64 * chunk_cost;
                         gpu_cursor += cost;
                         rs.gpu_phases.merge_s += cost;
                         round_end = gpu_cursor;
@@ -750,9 +772,9 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
                     } else {
                         // Basic: re-copy every GPU-dirty region from the CPU
                         // (16 KB merge granularity, as in the merge phase).
-                        let ranges = self.merge_ranges();
+                        self.merge_ranges_into();
                         let mut h2d_end = gpu_cursor;
-                        for &(s, e) in &ranges {
+                        for &(s, e) in &self.ranges {
                             let bytes = ((e - s) * 4) as u64;
                             let dur = self.cost.bus_h2d.transfer_secs(bytes);
                             let (_, end) = self.h2d.schedule(gpu_cursor, dur);
@@ -782,9 +804,9 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
                     self.carry.clear();
                     self.log.truncate_to_carried();
                     let snap_cost = n_bytes as f64 / self.cost.cpu_snapshot_bytes_per_s;
-                    let ranges = self.merge_ranges();
+                    self.merge_ranges_into();
                     let mut dth_end = gpu_cursor + snap_cost;
-                    for &(s, e) in &ranges {
+                    for &(s, e) in &self.ranges {
                         let bytes = ((e - s) * 4) as u64;
                         let dur = self.cost.bus_d2h.transfer_secs(bytes);
                         let (_, end) = self.d2h.schedule(dth_end, dur);
@@ -805,6 +827,10 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
         let cpu_lost = !ok && self.policy.loser() == Loser::Cpu;
         self.policy.on_round(ok);
         self.gpu.on_round_end(ok);
+        // Retire this round's chunk buffers into the log's arena so next
+        // round's drains reuse them instead of allocating.
+        self.log.recycle(&mut self.chunks);
+        self.arrivals.clear();
         // Entries carried into the next round (zero when the CPU lost:
         // its branch already cleared the carry).
         let carried = self.carry.len() as u64;

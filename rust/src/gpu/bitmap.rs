@@ -6,26 +6,40 @@
 //! paper) at the price of false-positive conflicts — the trade-off Figure 2
 //! and our `ablate_granularity` bench quantify.
 //!
-//! Entries are `i32` 0/1 (not packed bits) to stay layout-identical with
-//! the PJRT kernel tensors, letting the device hand its bitmap to the
-//! artifact without conversion.
+//! Granules are stored **packed**, 64 per `u64` word, so the whole-bitmap
+//! operations the engines lean on (`intersects`, `intersect_count`,
+//! `count`, `is_empty`, the dirty-range scans) run word-parallel with
+//! `count_ones`/`trailing_zeros` over 1/32nd of the memory the previous
+//! one-`i32`-per-granule layout touched (DESIGN.md §12).  The PJRT
+//! kernels still consume the flat i32 tensor layout; that interchange is
+//! now an explicit boundary — [`Bitmap::to_tensor`] /
+//! [`Bitmap::from_tensor`] — instead of a borrowed slice of the native
+//! representation.
+//!
+//! Representation invariant: bits at granule indices `>= len()` in the
+//! final storage word are always zero, so the word-parallel scans never
+//! need a tail mask.
 
 /// A granule-tracking bitmap over an STMR of `n_words` words.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Bitmap {
     shift: u32,
     n_words: usize,
-    bits: Vec<i32>,
+    /// Number of granule entries (`n_words.div_ceil(1 << shift)`).
+    n_granules: usize,
+    /// Packed storage: granule `g` lives at bit `g & 63` of `bits[g >> 6]`.
+    bits: Vec<u64>,
 }
 
 impl Bitmap {
     /// Create an empty bitmap; granularity is `1 << shift` words.
     pub fn new(n_words: usize, shift: u32) -> Self {
-        let len = n_words.div_ceil(1 << shift);
+        let n_granules = n_words.div_ceil(1 << shift);
         Bitmap {
             shift,
             n_words,
-            bits: vec![0; len],
+            n_granules,
+            bits: vec![0; n_granules.div_ceil(64)],
         }
     }
 
@@ -36,32 +50,42 @@ impl Bitmap {
 
     /// Number of granule entries.
     pub fn len(&self) -> usize {
-        self.bits.len()
+        self.n_granules
     }
 
     /// True if no granule is marked.
     pub fn is_empty(&self) -> bool {
-        self.bits.iter().all(|&b| b == 0)
+        self.bits.iter().all(|&w| w == 0)
+    }
+
+    /// The packed storage words (64 granules per entry; tail bits zero).
+    /// Hot loops (`native::validate_step`) hoist this and the shift once
+    /// instead of paying the accessor per entry.
+    #[inline]
+    pub(crate) fn words(&self) -> &[u64] {
+        &self.bits
     }
 
     /// Mark the granule containing `word`.
     #[inline]
     pub fn mark_word(&mut self, word: usize) {
         debug_assert!(word < self.n_words);
-        self.bits[word >> self.shift] = 1;
+        let g = word >> self.shift;
+        self.bits[g >> 6] |= 1u64 << (g & 63);
     }
 
     /// Test the granule containing `word`.
     #[inline]
     pub fn test_word(&self, word: usize) -> bool {
-        self.bits[word >> self.shift] != 0
+        let g = word >> self.shift;
+        self.bits[g >> 6] >> (g & 63) & 1 != 0
     }
 
     /// Test a granule by index; indices past the end (possible when a
     /// coarser summary rounds a range out) read as unmarked.
     #[inline]
     pub fn test_granule(&self, g: usize) -> bool {
-        g < self.bits.len() && self.bits[g] != 0
+        g < self.n_granules && self.bits[g >> 6] >> (g & 63) & 1 != 0
     }
 
     /// Whether any granule overlapping the word range `[start, end)` is
@@ -74,13 +98,22 @@ impl Bitmap {
         }
         let g0 = start >> self.shift;
         let g1 = (end - 1) >> self.shift;
-        self.bits[g0..=g1].iter().any(|&b| b != 0)
+        let (w0, w1) = (g0 >> 6, g1 >> 6);
+        let head = !0u64 << (g0 & 63);
+        let tail = !0u64 >> (63 - (g1 & 63));
+        if w0 == w1 {
+            return self.bits[w0] & head & tail != 0;
+        }
+        self.bits[w0] & head != 0
+            || self.bits[w1] & tail != 0
+            || self.bits[w0 + 1..w1].iter().any(|&w| w != 0)
     }
 
     /// Mark a granule directly.
     #[inline]
     pub fn mark_granule(&mut self, g: usize) {
-        self.bits[g] = 1;
+        debug_assert!(g < self.n_granules);
+        self.bits[g >> 6] |= 1u64 << (g & 63);
     }
 
     /// Clear all marks (start of a new synchronization round).
@@ -88,20 +121,54 @@ impl Bitmap {
         self.bits.fill(0);
     }
 
-    /// Count of marked granules.
+    /// Count of marked granules (word-parallel popcount).
     pub fn count(&self) -> usize {
-        self.bits.iter().filter(|&&b| b != 0).count()
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
     }
 
-    /// Raw tensor view (for the PJRT kernels).
-    pub fn as_slice(&self) -> &[i32] {
-        &self.bits
+    /// Expand to the flat i32 tensor layout (one 0/1 entry per granule)
+    /// the PJRT kernels consume.  The packed representation never crosses
+    /// the artifact boundary; this is the explicit conversion.
+    pub fn to_tensor(&self) -> Vec<i32> {
+        let mut out = Vec::new();
+        self.to_tensor_into(&mut out);
+        out
     }
 
-    /// Replace contents from a kernel output tensor.
-    pub fn set_from_slice(&mut self, data: &[i32]) {
-        assert_eq!(data.len(), self.bits.len(), "bitmap tensor shape");
-        self.bits.copy_from_slice(data);
+    /// [`Bitmap::to_tensor`] into a caller-reused buffer.
+    pub fn to_tensor_into(&self, out: &mut Vec<i32>) {
+        out.clear();
+        out.resize(self.n_granules, 0);
+        for g in self.iter_marked() {
+            out[g] = 1;
+        }
+    }
+
+    /// Replace contents from a kernel output tensor (one entry per
+    /// granule; any non-zero value reads as marked).
+    pub fn from_tensor(&mut self, data: &[i32]) {
+        assert_eq!(data.len(), self.n_granules, "bitmap tensor shape");
+        self.bits.fill(0);
+        for (g, &v) in data.iter().enumerate() {
+            if v != 0 {
+                self.bits[g >> 6] |= 1u64 << (g & 63);
+            }
+        }
+    }
+
+    /// Iterate the indices of marked granules in ascending order.
+    pub fn iter_marked(&self) -> impl Iterator<Item = usize> + '_ {
+        self.bits.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    return None;
+                }
+                let bit = w.trailing_zeros() as usize;
+                w &= w - 1;
+                Some((wi << 6) | bit)
+            })
+        })
     }
 
     /// Word range `[start, end)` covered by granule `g`, clamped to the STMR.
@@ -111,31 +178,73 @@ impl Bitmap {
         (start, end)
     }
 
+    /// First marked granule at index `>= from`, if any.
+    fn next_set(&self, from: usize) -> Option<usize> {
+        if from >= self.n_granules {
+            return None;
+        }
+        let mut wi = from >> 6;
+        let mut w = self.bits[wi] & (!0u64 << (from & 63));
+        loop {
+            if w != 0 {
+                // Tail bits are always zero, so this is < n_granules.
+                return Some((wi << 6) | w.trailing_zeros() as usize);
+            }
+            wi += 1;
+            if wi >= self.bits.len() {
+                return None;
+            }
+            w = self.bits[wi];
+        }
+    }
+
+    /// First unmarked granule at index `>= from` (clamped to `len()`).
+    fn next_clear(&self, from: usize) -> usize {
+        let mut wi = from >> 6;
+        let mut w = !self.bits[wi] & (!0u64 << (from & 63));
+        loop {
+            if w != 0 {
+                return ((wi << 6) | w.trailing_zeros() as usize).min(self.n_granules);
+            }
+            wi += 1;
+            if wi >= self.bits.len() {
+                return self.n_granules;
+            }
+            w = !self.bits[wi];
+        }
+    }
+
     /// Iterate maximal runs of consecutive marked granules as word ranges
     /// `[start, end)` — the transfer-coalescing the paper's GPU-controller
     /// performs in the merge phase (§IV-D).
     pub fn dirty_word_ranges(&self) -> Vec<(usize, usize)> {
         let mut out = Vec::new();
-        let mut i = 0usize;
-        while i < self.bits.len() {
-            if self.bits[i] != 0 {
-                let run_start = i;
-                while i < self.bits.len() && self.bits[i] != 0 {
-                    i += 1;
-                }
-                let (s, _) = self.granule_words(run_start);
-                let (_, e) = self.granule_words(i - 1);
-                out.push((s, e));
-            } else {
-                i += 1;
-            }
-        }
+        self.dirty_word_ranges_into(&mut out);
         out
+    }
+
+    /// [`Bitmap::dirty_word_ranges`] into a caller-reused buffer (cleared
+    /// first), so steady-state merge phases allocate nothing.
+    pub fn dirty_word_ranges_into(&self, out: &mut Vec<(usize, usize)>) {
+        out.clear();
+        let mut g = 0usize;
+        while let Some(run_start) = self.next_set(g) {
+            let run_end = self.next_clear(run_start);
+            out.push((run_start << self.shift, (run_end << self.shift).min(self.n_words)));
+            g = run_end;
+        }
     }
 
     /// Total words covered by marked granules.
     pub fn dirty_words(&self) -> usize {
-        self.dirty_word_ranges().iter().map(|(s, e)| e - s).sum()
+        let mut total = 0usize;
+        let mut g = 0usize;
+        while let Some(run_start) = self.next_set(g) {
+            let run_end = self.next_clear(run_start);
+            total += (run_end << self.shift).min(self.n_words) - (run_start << self.shift);
+            g = run_end;
+        }
+        total
     }
 
     /// Dirty word ranges rounded out to `granule_words` boundaries and
@@ -143,9 +252,25 @@ impl Bitmap {
     /// (16 KB, §IV-D): fine-grained conflict tracking would otherwise
     /// shatter the DtH copy into thousands of latency-dominated DMAs.
     pub fn dirty_word_ranges_coarse(&self, granule_words: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        self.dirty_word_ranges_coarse_into(granule_words, &mut out);
+        out
+    }
+
+    /// [`Bitmap::dirty_word_ranges_coarse`] into a caller-reused buffer
+    /// (cleared first).
+    pub fn dirty_word_ranges_coarse_into(
+        &self,
+        granule_words: usize,
+        out: &mut Vec<(usize, usize)>,
+    ) {
         assert!(granule_words > 0);
-        let mut out: Vec<(usize, usize)> = Vec::new();
-        for (s, e) in self.dirty_word_ranges() {
+        out.clear();
+        let mut g = 0usize;
+        while let Some(run_start) = self.next_set(g) {
+            let run_end = self.next_clear(run_start);
+            let s = run_start << self.shift;
+            let e = (run_end << self.shift).min(self.n_words);
             let s = (s / granule_words) * granule_words;
             let e = e.div_ceil(granule_words) * granule_words;
             let e = e.min(self.n_words);
@@ -153,30 +278,28 @@ impl Bitmap {
                 Some(last) if s <= last.1 => last.1 = last.1.max(e),
                 _ => out.push((s, e)),
             }
+            g = run_end;
         }
-        out
     }
 
     /// Number of granules marked in BOTH bitmaps — the word-level
     /// escalation of the cluster's pairwise cross-shard check (exact at
-    /// `shift = 0`, where one granule is one word).
+    /// `shift = 0`, where one granule is one word).  Word-parallel: 64
+    /// granules per AND + popcount.
     pub fn intersect_count(&self, other: &Bitmap) -> usize {
-        assert_eq!(self.bits.len(), other.bits.len(), "bitmap shapes differ");
+        assert_eq!(self.n_granules, other.n_granules, "bitmap shapes differ");
         self.bits
             .iter()
             .zip(&other.bits)
-            .filter(|&(&a, &b)| a != 0 && b != 0)
-            .count()
+            .map(|(&a, &b)| (a & b).count_ones() as usize)
+            .sum()
     }
 
     /// Whether any marked granule of `self` is also marked in `other`
     /// (bitmap-level intersection; used by early-validation fast paths).
     pub fn intersects(&self, other: &Bitmap) -> bool {
-        assert_eq!(self.bits.len(), other.bits.len(), "bitmap shapes differ");
-        self.bits
-            .iter()
-            .zip(&other.bits)
-            .any(|(&a, &b)| a != 0 && b != 0)
+        assert_eq!(self.n_granules, other.n_granules, "bitmap shapes differ");
+        self.bits.iter().zip(&other.bits).any(|(&a, &b)| a & b != 0)
     }
 }
 
@@ -237,6 +360,19 @@ mod tests {
     }
 
     #[test]
+    fn dirty_ranges_cross_storage_word_boundaries() {
+        // A run spanning the 64-granule packing boundary must stay one
+        // range, and adjacent-but-separate runs must stay two.
+        let mut b = Bitmap::new(256, 0);
+        for g in 60..70 {
+            b.mark_granule(g);
+        }
+        b.mark_granule(128); // exactly on a storage-word boundary
+        assert_eq!(b.dirty_word_ranges(), vec![(60, 70), (128, 129)]);
+        assert_eq!(b.dirty_words(), 11);
+    }
+
+    #[test]
     fn clear_resets() {
         let mut b = Bitmap::new(64, 0);
         b.mark_word(3);
@@ -275,6 +411,17 @@ mod tests {
     }
 
     #[test]
+    fn any_in_word_range_spans_storage_words() {
+        let mut b = Bitmap::new(1 << 10, 0); // 1024 granules, 16 storage words
+        b.mark_word(200);
+        assert!(b.any_in_word_range(0, 1 << 10));
+        assert!(b.any_in_word_range(190, 210));
+        assert!(b.any_in_word_range(200, 201));
+        assert!(!b.any_in_word_range(0, 200));
+        assert!(!b.any_in_word_range(201, 1 << 10));
+    }
+
+    #[test]
     fn intersects_detects_overlap() {
         let mut a = Bitmap::new(64, 1);
         let mut b = Bitmap::new(64, 1);
@@ -283,5 +430,37 @@ mod tests {
         assert!(!a.intersects(&b));
         b.mark_word(11); // same granule as 10 (shift 1)
         assert!(a.intersects(&b));
+    }
+
+    #[test]
+    fn tensor_boundary_round_trips() {
+        let mut b = Bitmap::new(200, 1); // 100 granules
+        b.mark_granule(0);
+        b.mark_granule(63);
+        b.mark_granule(64);
+        b.mark_granule(99);
+        let t = b.to_tensor();
+        assert_eq!(t.len(), 100);
+        assert_eq!(t.iter().filter(|&&v| v != 0).count(), 4);
+        let mut c = Bitmap::new(200, 1);
+        c.from_tensor(&t);
+        assert_eq!(b, c);
+        // Non-zero tensor entries read as marked (kernel outputs may use
+        // any non-zero sentinel).
+        let mut t2 = vec![0i32; 100];
+        t2[7] = 3;
+        c.from_tensor(&t2);
+        assert!(c.test_granule(7));
+        assert_eq!(c.count(), 1);
+    }
+
+    #[test]
+    fn iter_marked_is_ascending_and_complete() {
+        let mut b = Bitmap::new(300, 0);
+        for g in [0usize, 1, 63, 64, 65, 127, 128, 299] {
+            b.mark_granule(g);
+        }
+        let got: Vec<usize> = b.iter_marked().collect();
+        assert_eq!(got, vec![0, 1, 63, 64, 65, 127, 128, 299]);
     }
 }

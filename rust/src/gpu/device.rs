@@ -79,6 +79,13 @@ pub struct GpuDevice {
     rs_bmp: Bitmap,
     ws_bmp: Bitmap,
     lock_shift: u32,
+    /// Thread budget for intra-device parallel chunk validation (set by
+    /// the cluster from its `threads` knob; 1 = sequential).
+    validate_threads: usize,
+    /// Reused scratch for the packed-bitmap → i32-tensor expansion at the
+    /// PJRT boundary (steady-state rounds allocate nothing).
+    rs_tensor: Vec<i32>,
+    ws_tensor: Vec<i32>,
     /// Count of kernel activations (diagnostics / cost accounting).
     pub activations: u64,
 }
@@ -96,8 +103,19 @@ impl GpuDevice {
             rs_bmp: Bitmap::new(n_words, bmp_shift),
             ws_bmp: Bitmap::new(n_words, bmp_shift),
             lock_shift: 0,
+            validate_threads: 1,
+            rs_tensor: Vec::new(),
+            ws_tensor: Vec::new(),
             activations: 0,
         }
+    }
+
+    /// Set the thread budget for intra-device parallel chunk validation.
+    /// Only engages on scans large enough to amortize the spawns
+    /// ([`native::PAR_VALIDATE_MIN_ENTRIES`]); results are bit-identical
+    /// at any budget.
+    pub fn set_validate_threads(&mut self, threads: usize) {
+        self.validate_threads = threads.max(1);
     }
 
     /// STMR length in words.
@@ -154,10 +172,12 @@ impl GpuDevice {
             Backend::Pjrt { store, prstm, .. } => {
                 let exec = store.get(prstm)?;
                 self.check_prstm_shape(exec, batch)?;
+                self.rs_bmp.to_tensor_into(&mut self.rs_tensor);
+                self.ws_bmp.to_tensor_into(&mut self.ws_tensor);
                 let outs = exec.run(&[
                     TensorI32::vec(&self.stmr),
-                    TensorI32::vec(self.rs_bmp.as_slice()),
-                    TensorI32::vec(self.ws_bmp.as_slice()),
+                    TensorI32::vec(&self.rs_tensor),
+                    TensorI32::vec(&self.ws_tensor),
                     TensorI32::mat(&batch.read_idx, batch.b, batch.r),
                     TensorI32::mat(&batch.write_idx, batch.b, batch.w),
                     TensorI32::mat(&batch.write_val, batch.b, batch.w),
@@ -169,8 +189,8 @@ impl GpuDevice {
                     .try_into()
                     .map_err(|v: Vec<_>| anyhow::anyhow!("prstm arity {}", v.len()))?;
                 self.stmr = stmr;
-                self.rs_bmp.set_from_slice(&rs);
-                self.ws_bmp.set_from_slice(&ws);
+                self.rs_bmp.from_tensor(&rs);
+                self.ws_bmp.from_tensor(&ws);
                 Ok(BatchOutcome {
                     commit,
                     n_commits: u32::try_from(n[0]).context("negative commit count")?,
@@ -195,12 +215,20 @@ impl GpuDevice {
         self.activations += 1;
         self.ts_dirty = true;
         match &self.backend {
-            Backend::Native => Ok(native::validate_step(
-                &mut self.stmr,
-                &mut self.ts_arr,
-                &self.rs_bmp,
-                chunk,
-            )),
+            Backend::Native => {
+                // SoA split (DESIGN.md §12): read-only conflict scan —
+                // fanned over `validate_threads` for oversized chunks —
+                // then the in-order freshness-apply pass.
+                let n_conf = if self.validate_threads > 1
+                    && chunk.addrs.len() >= native::PAR_VALIDATE_MIN_ENTRIES
+                {
+                    native::conflict_count_par(&self.rs_bmp, &chunk.addrs, self.validate_threads)
+                } else {
+                    native::conflict_count(&self.rs_bmp, &chunk.addrs)
+                };
+                native::apply_chunk(&mut self.stmr, &mut self.ts_arr, chunk);
+                Ok(n_conf)
+            }
             Backend::Pjrt {
                 store, validate, ..
             } => {
@@ -213,10 +241,11 @@ impl GpuDevice {
                         c
                     );
                 }
+                self.rs_bmp.to_tensor_into(&mut self.rs_tensor);
                 let outs = exec.run(&[
                     TensorI32::vec(&self.stmr),
                     TensorI32::vec(&self.ts_arr),
-                    TensorI32::vec(self.rs_bmp.as_slice()),
+                    TensorI32::vec(&self.rs_tensor),
                     TensorI32::vec(&chunk.addrs),
                     TensorI32::vec(&chunk.vals),
                     TensorI32::vec(&chunk.ts),
@@ -246,13 +275,15 @@ impl GpuDevice {
     /// Validate a chunk WITHOUT applying it (early validation, §IV-D):
     /// pure bitmap intersection against the current read-set bitmap.
     pub fn early_validate_chunk(&self, chunk: &LogChunk) -> u32 {
-        let mut n = 0u32;
-        for &a in &chunk.addrs {
-            if a >= 0 && self.rs_bmp.test_word(a as usize) {
-                n += 1;
-            }
-        }
-        n
+        native::conflict_count(&self.rs_bmp, &chunk.addrs)
+    }
+
+    /// [`GpuDevice::early_validate_chunk`] for a batch of chunks at once,
+    /// fanned across the device's `validate_threads` budget; `out[i]`
+    /// receives chunk `i`'s conflict count.  Bit-identical to calling the
+    /// scalar form in order (the scan is read-only).
+    pub fn early_validate_chunks_into(&self, chunks: &[LogChunk], out: &mut Vec<u32>) {
+        native::conflict_counts_into(&self.rs_bmp, chunks, self.validate_threads, out);
     }
 
     /// Execute one memcached request batch.
@@ -281,10 +312,12 @@ impl GpuDevice {
                     bail!("memcached artifact n_sets mismatch");
                 }
                 let clk0 = [batch.clk0];
+                self.rs_bmp.to_tensor_into(&mut self.rs_tensor);
+                self.ws_bmp.to_tensor_into(&mut self.ws_tensor);
                 let outs = exec.run(&[
                     TensorI32::vec(&self.stmr),
-                    TensorI32::vec(self.rs_bmp.as_slice()),
-                    TensorI32::vec(self.ws_bmp.as_slice()),
+                    TensorI32::vec(&self.rs_tensor),
+                    TensorI32::vec(&self.ws_tensor),
                     TensorI32::vec(&batch.op),
                     TensorI32::vec(&batch.key),
                     TensorI32::vec(&batch.val),
@@ -294,8 +327,8 @@ impl GpuDevice {
                     .try_into()
                     .map_err(|v: Vec<_>| anyhow::anyhow!("memcached arity {}", v.len()))?;
                 self.stmr = stmr;
-                self.rs_bmp.set_from_slice(&rs);
-                self.ws_bmp.set_from_slice(&ws);
+                self.rs_bmp.from_tensor(&rs);
+                self.ws_bmp.from_tensor(&ws);
                 Ok(McOutcome {
                     out_val,
                     commit,
@@ -318,16 +351,7 @@ impl GpuDevice {
         // to the CPU-aligned state (ts entries are monotonic, so replay
         // with >= reproduces them).
         for chunk in cpu_logs {
-            for (i, &a) in chunk.addrs.iter().enumerate() {
-                if a < 0 {
-                    continue;
-                }
-                let a = a as usize;
-                if chunk.ts[i] >= self.ts_arr[a] {
-                    self.ts_arr[a] = chunk.ts[i];
-                    self.stmr[a] = chunk.vals[i];
-                }
-            }
+            native::apply_chunk(&mut self.stmr, &mut self.ts_arr, chunk);
         }
     }
 

@@ -111,6 +111,13 @@ pub enum BuildError {
     /// The starvation-guard policy with a zero abort limit would never
     /// disengage its read-only mode meaningfully.
     ZeroStarvationLimit,
+    /// The STMR is too large for the engine's wire formats: chunk and
+    /// batch address channels (`LogChunk::addrs`, `TxnBatch::read_idx`)
+    /// are `i32`, so every word index must fit in an `i32`.
+    StmrTooLarge {
+        /// STMR words requested.
+        words: usize,
+    },
     /// More devices requested than STMR words: at least one word per
     /// device is the hard floor.
     GpusExceedWords {
@@ -177,6 +184,13 @@ impl std::fmt::Display for BuildError {
                 f,
                 "hetm.gpu_starvation_limit must be at least 1 under the \
                  starvation-guard policy"
+            ),
+            BuildError::StmrTooLarge { words } => write!(
+                f,
+                "stmr.n_words = {words} exceeds the i32 address channels \
+                 (log chunks and device batches index words as i32; the \
+                 maximum supported STMR is {} words)",
+                i32::MAX
             ),
             BuildError::GpusExceedWords { gpus, words } => write!(
                 f,
@@ -574,6 +588,12 @@ impl Hetm {
                 }
             };
         let n_words = workload.n_words();
+        // Word addresses travel through i32 channels (`LogChunk::addrs`,
+        // `TxnBatch::read_idx`, ...): an STMR whose indices overflow them
+        // would alias or go negative silently — reject it up front.
+        if n_words > i32::MAX as usize {
+            return Err(BuildError::StmrTooLarge { words: n_words });
+        }
         let is_synth = synth_specs.is_some();
 
         if cfg.cpu_parallel && !is_synth {
@@ -1252,6 +1272,17 @@ mod tests {
         assert_eq!(
             Hetm::from_config(&c).gpus(0).build().err(),
             Some(BuildError::ZeroGpus)
+        );
+        // An STMR whose word indices overflow the i32 chunk/batch address
+        // channels must be rejected before anything is allocated.
+        assert_eq!(
+            Hetm::from_config(&c)
+                .words(i32::MAX as usize + 1)
+                .build()
+                .err(),
+            Some(BuildError::StmrTooLarge {
+                words: i32::MAX as usize + 1
+            })
         );
         assert_eq!(
             Hetm::from_config(&c).threads(0).build().err(),

@@ -1,0 +1,266 @@
+//! Property tests pinning the packed `u64` [`Bitmap`] to a naive
+//! reference model of the legacy one-`i32`-per-granule layout.
+//!
+//! The packed representation (DESIGN.md §12) must be observationally
+//! identical to the flat layout across every operation the engines use:
+//! mark/test, intersection probes, counts, dirty-range scans (exact and
+//! coarse), the marked-granule iterator, and the tensor interchange
+//! boundary.  Cases sweep random shifts and STMR sizes that do NOT divide
+//! evenly into granules or storage words, so the edge-of-STMR granule and
+//! the partial final `u64` are exercised constantly.
+
+use shetm::gpu::Bitmap;
+use shetm::util::prop::{forall, Cases};
+use shetm::util::Rng;
+
+/// The pre-§12 reference: one `i32` per granule, scalar loops throughout.
+/// Every method is a direct transcription of the documented semantics.
+struct Model {
+    shift: u32,
+    n_words: usize,
+    marks: Vec<i32>,
+}
+
+impl Model {
+    fn new(n_words: usize, shift: u32) -> Self {
+        Model {
+            shift,
+            n_words,
+            marks: vec![0; n_words.div_ceil(1 << shift)],
+        }
+    }
+
+    fn mark_word(&mut self, w: usize) {
+        let g = w >> self.shift;
+        self.marks[g] = 1;
+    }
+
+    fn mark_granule(&mut self, g: usize) {
+        self.marks[g] = 1;
+    }
+
+    fn test_word(&self, w: usize) -> bool {
+        self.marks[w >> self.shift] != 0
+    }
+
+    fn test_granule(&self, g: usize) -> bool {
+        g < self.marks.len() && self.marks[g] != 0
+    }
+
+    fn count(&self) -> usize {
+        self.marks.iter().filter(|&&m| m != 0).count()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    fn any_in_word_range(&self, start: usize, end: usize) -> bool {
+        let end = end.min(self.n_words);
+        (start..end).any(|w| self.test_word(w))
+    }
+
+    fn intersect_count(&self, other: &Model) -> usize {
+        self.marks
+            .iter()
+            .zip(&other.marks)
+            .filter(|(&a, &b)| a != 0 && b != 0)
+            .count()
+    }
+
+    fn iter_marked(&self) -> Vec<usize> {
+        (0..self.marks.len()).filter(|&g| self.marks[g] != 0).collect()
+    }
+
+    fn dirty_word_ranges(&self) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for g in self.iter_marked() {
+            let s = g << self.shift;
+            let e = ((g + 1) << self.shift).min(self.n_words);
+            match out.last_mut() {
+                Some(last) if last.1 == s => last.1 = e,
+                _ => out.push((s, e)),
+            }
+        }
+        out
+    }
+
+    fn dirty_word_ranges_coarse(&self, granule_words: usize) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for (s, e) in self.dirty_word_ranges() {
+            let s = (s / granule_words) * granule_words;
+            let e = (e.div_ceil(granule_words) * granule_words).min(self.n_words);
+            match out.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => out.push((s, e)),
+            }
+        }
+        out
+    }
+}
+
+/// Build a (Bitmap, Model) pair with random marks at an adversarial
+/// shape: `n_words` is offset from granule and storage-word multiples so
+/// the final granule is partial and the final `u64` holds a partial run.
+fn random_pair(rng: &mut Rng, size: usize) -> (Bitmap, Model) {
+    let shift = rng.below(9) as u32; // granules of 1..=256 words
+    // Sizes straddling granule (1 << shift) and storage (64 << shift)
+    // boundaries, including exact multiples.
+    let base = (size.max(1)) * (1 << shift);
+    let n_words = match rng.below(4) {
+        0 => base,                           // exact granule multiple
+        1 => base + 1 + rng.below_usize(1 << shift), // ragged tail
+        2 => 64 << shift,                    // exactly one storage word
+        _ => (64 << shift) + 1,              // one bit into the next word
+    }
+    .max(1);
+    let mut bmp = Bitmap::new(n_words, shift);
+    let mut model = Model::new(n_words, shift);
+    assert_eq!(bmp.len(), model.marks.len(), "granule counts");
+    let n_marks = rng.below_usize(size.max(1) * 2 + 1);
+    for _ in 0..n_marks {
+        if rng.chance(0.5) {
+            let w = rng.below_usize(n_words);
+            bmp.mark_word(w);
+            model.mark_word(w);
+        } else {
+            let g = rng.below_usize(bmp.len());
+            bmp.mark_granule(g);
+            model.mark_granule(g);
+        }
+    }
+    // Bias toward the edge-of-STMR granule: the representation invariant
+    // (zero tail bits) lives or dies here.
+    if rng.chance(0.5) {
+        bmp.mark_word(n_words - 1);
+        model.mark_word(n_words - 1);
+    }
+    (bmp, model)
+}
+
+#[test]
+fn packed_bitmap_matches_flat_model_on_observers() {
+    forall(Cases::new("bitmap_observers", 300).max_size(96), |rng, size| {
+        let (bmp, model) = random_pair(rng, size);
+        if bmp.count() != model.count() {
+            return Err(format!("count {} != {}", bmp.count(), model.count()));
+        }
+        if bmp.is_empty() != model.is_empty() {
+            return Err("is_empty diverged".into());
+        }
+        for w in 0..model.n_words.min(512) {
+            if bmp.test_word(w) != model.test_word(w) {
+                return Err(format!("test_word({w}) diverged"));
+            }
+        }
+        // test_granule including past-the-end probes (coarse signature
+        // rounding can ask for them; both sides must say "unmarked").
+        for g in 0..model.marks.len() + 70 {
+            if bmp.test_granule(g) != model.test_granule(g) {
+                return Err(format!("test_granule({g}) diverged"));
+            }
+        }
+        let got: Vec<usize> = bmp.iter_marked().collect();
+        if got != model.iter_marked() {
+            return Err(format!("iter_marked {:?} != {:?}", got, model.iter_marked()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_bitmap_matches_flat_model_on_ranges() {
+    forall(Cases::new("bitmap_ranges", 300).max_size(96), |rng, size| {
+        let (bmp, model) = random_pair(rng, size);
+        let got = bmp.dirty_word_ranges();
+        let want = model.dirty_word_ranges();
+        if got != want {
+            return Err(format!("dirty_word_ranges {got:?} != {want:?}"));
+        }
+        let total: usize = got.iter().map(|&(s, e)| e - s).sum();
+        if bmp.dirty_words() != total {
+            return Err(format!("dirty_words {} != {total}", bmp.dirty_words()));
+        }
+        for granule_words in [1usize, 3, 64, 4096] {
+            let got = bmp.dirty_word_ranges_coarse(granule_words);
+            let want = model.dirty_word_ranges_coarse(granule_words);
+            if got != want {
+                return Err(format!(
+                    "coarse({granule_words}) {got:?} != {want:?}"
+                ));
+            }
+        }
+        // Random probes, including ranges rounded past the end and empty
+        // ranges — both clamp.
+        for _ in 0..32 {
+            let s = rng.below_usize(model.n_words + 8);
+            let e = s + rng.below_usize(model.n_words + 8);
+            if bmp.any_in_word_range(s, e) != model.any_in_word_range(s, e) {
+                return Err(format!("any_in_word_range({s}, {e}) diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_bitmap_matches_flat_model_on_intersections() {
+    forall(Cases::new("bitmap_intersect", 300).max_size(96), |rng, size| {
+        let (mut a, ma) = random_pair(rng, size);
+        // Second operand must share the shape; re-mark a fresh pair.
+        let mut b = Bitmap::new(ma.n_words, ma.shift);
+        let mut mb = Model::new(ma.n_words, ma.shift);
+        for _ in 0..rng.below_usize(size.max(1) * 2 + 1) {
+            let w = rng.below_usize(ma.n_words);
+            b.mark_word(w);
+            mb.mark_word(w);
+        }
+        let got = a.intersect_count(&b);
+        let want = ma.intersect_count(&mb);
+        if got != want {
+            return Err(format!("intersect_count {got} != {want}"));
+        }
+        if a.intersects(&b) != (want > 0) {
+            return Err("intersects diverged from intersect_count".into());
+        }
+        a.clear();
+        if !a.is_empty() || a.intersect_count(&b) != 0 {
+            return Err("clear left marks behind".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_bitmap_tensor_boundary_round_trips() {
+    forall(Cases::new("bitmap_tensor", 200).max_size(96), |rng, size| {
+        let (bmp, model) = random_pair(rng, size);
+        let t = bmp.to_tensor();
+        if t.len() != model.marks.len() {
+            return Err(format!("tensor len {} != {}", t.len(), model.marks.len()));
+        }
+        for (g, (&got, &want)) in t.iter().zip(&model.marks).enumerate() {
+            if (got != 0) != (want != 0) {
+                return Err(format!("tensor granule {g}: {got} vs {want}"));
+            }
+        }
+        // from_tensor canonicalizes any non-zero to a set bit, so a
+        // round trip through arbitrary non-zero values is identity.
+        let noisy: Vec<i32> = t
+            .iter()
+            .map(|&v| if v != 0 { 1 + rng.below(1000) as i32 } else { 0 })
+            .collect();
+        let mut back = Bitmap::new(model.n_words, model.shift);
+        back.from_tensor(&noisy);
+        if back != bmp {
+            return Err("tensor round trip not identity".into());
+        }
+        // granule_words covers the STMR exactly, clamped at the edge.
+        let (s0, _) = bmp.granule_words(0);
+        let (_, e_last) = bmp.granule_words(bmp.len() - 1);
+        if s0 != 0 || e_last != model.n_words {
+            return Err(format!("granule_words cover [{s0}, {e_last})"));
+        }
+        Ok(())
+    });
+}

@@ -267,8 +267,8 @@ fn prop_prstm_committers_serialize_by_priority() {
             }
         }
         // WS ⊆ RS on the bitmaps.
-        for (g, (&wbit, &rbit)) in ws.as_slice().iter().zip(rs.as_slice()).enumerate() {
-            if wbit != 0 && rbit == 0 {
+        for g in ws.iter_marked() {
+            if !rs.test_granule(g) {
                 return Err(format!("granule {g}: WS set but RS clear"));
             }
         }

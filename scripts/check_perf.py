@@ -23,10 +23,16 @@ Policy (documented in docs/BENCHMARKS.md):
   asking for the baseline to be regenerated on real hardware, and passes.
 * Points are matched by identity keys (the sweep coordinates); a point
   present in the baseline but missing from CURRENT is a failure — sweeps
-  must not silently shrink.
+  must not silently shrink — and a point present in CURRENT but absent
+  from the baseline is equally a failure — a grown sweep means the
+  baseline no longer describes the bench and must be regenerated.
+* A metric value that is not a finite number (NaN, infinity, or
+  non-numeric JSON) is a hard failure with a diagnostic naming the file,
+  point and metric — never a traceback, and never a silent pass.
 """
 
 import json
+import math
 import sys
 
 # Per-bench identity keys (the sweep coordinates that name a point) and
@@ -103,6 +109,24 @@ def key_of(point, identity):
     return tuple(json.dumps(point[k]) for k in identity)
 
 
+def metric_value(point, metric, path, ident):
+    """A metric as a finite float, or a diagnostic exit (no traceback)."""
+    raw = point[metric]
+    try:
+        val = float(raw)
+    except (TypeError, ValueError):
+        sys.exit(
+            f"check_perf: {path}: point [{ident}] metric {metric!r} is "
+            f"not numeric: {raw!r}"
+        )
+    if not math.isfinite(val):
+        sys.exit(
+            f"check_perf: {path}: point [{ident}] metric {metric!r} is "
+            f"not finite: {raw!r}"
+        )
+    return val
+
+
 def main():
     if len(sys.argv) != 3:
         sys.exit(__doc__.strip())
@@ -131,7 +155,17 @@ def main():
         return
 
     cur_by_key = {key_of(p, spec["identity"]): p for p in cur_points}
+    base_keys = {key_of(p, spec["identity"]) for p in base_points}
     failures = []
+    # Sweep-shape check both ways: the gate only means something when the
+    # two runs cover the same points.
+    for p in cur_points:
+        if key_of(p, spec["identity"]) not in base_keys:
+            ident = ", ".join(f"{k}={p[k]}" for k in spec["identity"])
+            failures.append(
+                f"point [{ident}] present in current run but absent from "
+                f"baseline — regenerate {base_path}"
+            )
     for bp in base_points:
         key = key_of(bp, spec["identity"])
         cp = cur_by_key.get(key)
@@ -140,7 +174,8 @@ def main():
             failures.append(f"point [{ident}] missing from current run")
             continue
         for metric, direction in spec["metrics"].items():
-            b, c = float(bp[metric]), float(cp[metric])
+            b = metric_value(bp, metric, base_path, ident)
+            c = metric_value(cp, metric, cur_path, ident)
             if b == 0.0:
                 # No meaningful relative delta; only flag regressions from
                 # an exact zero (e.g. abort rate was 0, now isn't).

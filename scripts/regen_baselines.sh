@@ -1,0 +1,27 @@
+#!/usr/bin/env sh
+# Regenerate the committed perf-gate baselines (BENCH_scale.json and
+# BENCH_log.json at the repo root) from real runs, then self-check them
+# with scripts/check_perf.py.
+#
+# The gated metrics are virtual-time deterministic (docs/BENCHMARKS.md),
+# so ANY machine produces valid baseline numbers — wall-clock fields are
+# recorded but never gated.  Baselines are recorded in fast mode to
+# match what CI's perf-smoke job runs.
+#
+# Usage: scripts/regen_baselines.sh
+# Then review the diff and commit both files — committing measured
+# (non-provisional) baselines arms the perf gate directly; until then
+# CI arms itself by measuring at the merge-base commit.
+set -eu
+cd "$(dirname "$0")/.."
+
+SHETM_BENCH_FAST=1 cargo bench --bench scale_gpus
+SHETM_BENCH_FAST=1 cargo bench --bench ablate_log
+
+# Self-comparison validates the schema and confirms the files are
+# armed (a provisional/empty result would only print a notice).
+python3 scripts/check_perf.py BENCH_scale.json BENCH_scale.json
+python3 scripts/check_perf.py BENCH_log.json BENCH_log.json
+
+echo "Baselines regenerated. Review and commit:"
+git status --short BENCH_scale.json BENCH_log.json

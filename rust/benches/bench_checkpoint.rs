@@ -1,0 +1,162 @@
+//! Checkpoint overhead vs `durability.interval_rounds` (DESIGN.md §13).
+//!
+//! The durability pipeline snapshots only the pages dirtied since the
+//! previous checkpoint, so its cost has two independent axes: how often
+//! the barrier pays a write (the interval) and how many bytes each write
+//! ships (dirty footprint, amortized by less frequent checkpoints into
+//! larger but fewer extents).  This bench sweeps the interval on the
+//! bank workload and reports, per point, the checkpoint count, total
+//! bytes, extents, WAL entries and the wall-clock cost of the whole run
+//! — while asserting the design's headline invariant on every point:
+//! checkpointing costs ZERO virtual time, so `RunStats` is bit-identical
+//! to the durability-off reference.
+//!
+//! Every point is appended to `BENCH_checkpoint.json` (working
+//! directory); see docs/BENCHMARKS.md for the schema.
+//! `SHETM_BENCH_FAST=1` shortens the sweep.
+
+mod common;
+
+use shetm::config::Raw;
+use shetm::session::Hetm;
+use shetm::telemetry::json::Obj;
+use shetm::telemetry::write_bench_json;
+use shetm::util::bench::Table;
+
+struct Point {
+    interval: u64,
+    checkpoints: u64,
+    bytes: u64,
+    extents: u64,
+    wal_entries: u64,
+    wall_s: f64,
+    stats: String,
+    throughput: f64,
+}
+
+fn app_raw() -> Raw {
+    Raw::parse("[bank]\naccounts = 65536\ncross_prob = 0.002\n").unwrap()
+}
+
+/// One sweep point.  `interval == 0` disables checkpointing entirely
+/// (journal-only) and doubles as the bit-identity reference; the true
+/// durability-off reference (no directory at all) is run separately.
+fn run_point(interval: u64, rounds: usize, dir: Option<&std::path::Path>) -> Point {
+    let mut cfg = common::base_config();
+    cfg.period_s = 0.004;
+    if let Some(d) = dir {
+        cfg.checkpoint_dir = d.to_string_lossy().into_owned();
+        cfg.checkpoint_interval_rounds = interval;
+    }
+    let started = std::time::Instant::now();
+    let mut s = Hetm::from_config(&cfg)
+        .workload_named("bank")
+        .app_config(app_raw())
+        .telemetry(true)
+        .build()
+        .expect("session");
+    s.run_rounds(rounds).expect("bench_checkpoint run");
+    s.drain().expect("bench_checkpoint drain");
+    let wall_s = started.elapsed().as_secs_f64();
+    s.check_invariants()
+        .expect("bank oracle failed in bench_checkpoint");
+    let reg = s.collector().expect("telemetry on").registry();
+    Point {
+        interval,
+        checkpoints: reg.counter("hetm_checkpoints_total"),
+        bytes: reg.counter("hetm_checkpoint_bytes_total"),
+        extents: reg.counter("hetm_checkpoint_extents_total"),
+        wal_entries: reg.counter("hetm_checkpoint_wal_entries_total"),
+        wall_s,
+        stats: format!("{:?}", s.stats()),
+        throughput: s.stats().throughput(),
+    }
+}
+
+fn json_point(p: &Point, rounds: usize) -> String {
+    Obj::new()
+        .u64("interval_rounds", p.interval)
+        .u64("rounds", rounds as u64)
+        .u64("checkpoints", p.checkpoints)
+        .u64("checkpoint_bytes", p.bytes)
+        .u64("checkpoint_extents", p.extents)
+        .u64("checkpoint_wal_entries", p.wal_entries)
+        .f64("wall_s", p.wall_s, 6)
+        .f64("virtual_tx_per_s", p.throughput, 3)
+        .finish()
+}
+
+fn main() {
+    let rounds = if common::fast() { 8 } else { 32 };
+    let intervals: &[u64] = if common::fast() {
+        &[1, 4]
+    } else {
+        &[1, 2, 4, 8]
+    };
+
+    let reference = run_point(0, rounds, None);
+    let table = Table::new(
+        "bench_checkpoint: bank, checkpoint overhead vs interval_rounds",
+        &[
+            "interval",
+            "ckpts",
+            "bytes",
+            "extents",
+            "wal_entries",
+            "wall_ms",
+            "tx_per_s",
+        ],
+    );
+    table.row(&[
+        0.0,
+        0.0,
+        0.0,
+        0.0,
+        0.0,
+        reference.wall_s * 1e3,
+        reference.throughput,
+    ]);
+
+    let mut json: Vec<String> = vec![json_point(&reference, rounds)];
+    for &interval in intervals {
+        let dir = std::env::temp_dir().join(format!(
+            "shetm-bench-checkpoint-{}-{interval}",
+            std::process::id()
+        ));
+        let p = run_point(interval, rounds, Some(&dir));
+        let _ = std::fs::remove_dir_all(&dir);
+        table.row(&[
+            interval as f64,
+            p.checkpoints as f64,
+            p.bytes as f64,
+            p.extents as f64,
+            p.wal_entries as f64,
+            p.wall_s * 1e3,
+            p.throughput,
+        ]);
+        assert_eq!(
+            p.stats, reference.stats,
+            "interval={interval}: durability perturbed the simulation"
+        );
+        assert_eq!(
+            p.checkpoints,
+            (rounds as u64 + 1) / interval, // +1: drain runs one more round
+            "interval={interval}: unexpected checkpoint count"
+        );
+        assert!(p.bytes > 0, "interval={interval}: no bytes recorded");
+        json.push(json_point(&p, rounds));
+    }
+
+    let n_points = json.len();
+    let extras = [("rounds", format!("{rounds}"))];
+    match write_bench_json(
+        "BENCH_checkpoint.json",
+        "bench_checkpoint",
+        common::fast(),
+        &extras,
+        json,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_checkpoint.json ({n_points} points)"),
+        Err(e) => eprintln!("\ncould not write BENCH_checkpoint.json: {e}"),
+    }
+}

@@ -178,6 +178,13 @@ pub trait Workload {
     fn stats_summary(&self) -> String {
         String::new()
     }
+
+    /// Called once after `Session::recover` has rebuilt and verified the
+    /// session, with the recovered carried log (all shards concatenated).
+    /// Workloads that buffer oracle state outside the STMR (e.g. the
+    /// zipf-kv round-buffered version oracle) rebuild it here instead of
+    /// tripping over the crash gap.  Default: nothing to rebuild.
+    fn on_recovered(&self, _carried: &[crate::stm::WriteEntry]) {}
 }
 
 /// Per-device GPU seed derivation: device 0 keeps the single-engine seed

@@ -145,6 +145,19 @@ impl ZkTrace {
     pub fn surviving(&self) -> &[WriteEntry] {
         &self.committed
     }
+
+    /// Post-recovery repair: the round in flight at the crash is gone, so
+    /// its pending tail must never be promoted; and if the trace has no
+    /// promoted history at all (recovery replay recorded nothing — e.g. a
+    /// future snapshot-restore path), the recovered carried log is itself
+    /// a sound oracle seed: every carried entry is a committed CPU write
+    /// already reflected in the recovered STMR.
+    fn on_recovered(&mut self, carried: &[WriteEntry]) {
+        self.pending.clear();
+        if self.committed.is_empty() {
+            self.committed.extend_from_slice(carried);
+        }
+    }
 }
 
 /// CPU-side zipf-kv driver.
@@ -546,6 +559,10 @@ impl Workload for ZipfKvWorkload {
             t.rounds_discarded
         )
     }
+
+    fn on_recovered(&self, carried: &[crate::stm::WriteEntry]) {
+        self.trace.lock().unwrap().on_recovered(carried);
+    }
 }
 
 #[cfg(test)]
@@ -619,6 +636,38 @@ mod tests {
         // The v=5 entry is gone, so v=1 after it is NOT a violation.
         let stmr = SharedStmr::new(w.n_words());
         stmr.store(1, 1);
+        w.check_invariants(&stmr).unwrap();
+    }
+
+    #[test]
+    fn recovery_drops_pending_and_seeds_empty_trace() {
+        let w = wl(64);
+        let carried = [WriteEntry {
+            addr: 2,
+            val: 3,
+            ts: 1,
+        }];
+        {
+            // The round in flight at the crash never survives it.
+            let mut t = w.trace.lock().unwrap();
+            t.record(&[WriteEntry {
+                addr: 1,
+                val: 9,
+                ts: 1,
+            }]);
+        }
+        w.on_recovered(&carried);
+        {
+            let t = w.trace.lock().unwrap();
+            assert_eq!(t.pending.len(), 0, "crash gap discards pending");
+            assert_eq!(t.surviving(), &carried[..], "carried log seeds the oracle");
+        }
+        // Seeding is idempotent and never clobbers replayed history.
+        w.on_recovered(&[]);
+        assert_eq!(w.trace.lock().unwrap().surviving(), &carried[..]);
+        // The seeded oracle accepts a state at least as fresh as carried.
+        let stmr = SharedStmr::new(w.n_words());
+        stmr.store(2, 3);
         w.check_invariants(&stmr).unwrap();
     }
 

@@ -254,6 +254,11 @@ pub struct ClusterEngine<C: CpuDriver, G: GpuDriver> {
     /// At `n_gpus = 1` the recorded observations are bit-identical to
     /// [`RoundEngine`]'s (`rust/tests/telemetry.rs` pins this).
     pub tel: Telemetry,
+    /// Durability hook (checkpoints at the round barrier, mirroring
+    /// [`RoundEngine`]).  `None` unless the session builder configured a
+    /// checkpoint directory; the off path costs one `Option` test per
+    /// round.
+    pub dur: Option<Box<crate::durability::DurabilityHook>>,
 
     policy: Policy,
     h2d: Vec<BusTimeline>,
@@ -329,6 +334,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             cluster: ClusterStats::new(n),
             round_log: Vec::new(),
             tel: Telemetry::off(),
+            dur: None,
             policy,
             h2d: (0..n).map(|_| BusTimeline::new()).collect(),
             d2h: (0..n).map(|_| BusTimeline::new()).collect(),
@@ -488,6 +494,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             cluster,
             round_log,
             tel,
+            dur,
             policy,
             h2d,
             d2h,
@@ -1179,6 +1186,21 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
 
         // --- Round wrap-up -------------------------------------------------
         let cpu_lost = !ok && policy.loser() == Loser::Cpu;
+        // Fold this round's write footprint into the durability dirty
+        // accumulator while the shard logs, carry, and device write-set
+        // bitmaps are still intact (mirrors `RoundEngine::run_round`;
+        // over-approximation is safe, so rolled-back writes need no
+        // special casing).
+        if let Some(hook) = dur.as_mut() {
+            for s in 0..router.n_shards() {
+                hook.mark_entries(router.log(s).entries());
+            }
+            hook.mark_entries(carry);
+            hook.mark_entries(round_entries);
+            for lane in &lanes {
+                hook.mark_device(lane.dev.ws_bmp());
+            }
+        }
         policy.on_round(ok);
         for lane in &mut lanes {
             lane.gpu.on_round_end(ok);
@@ -1348,10 +1370,39 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 d2h_busy_s: d2h_busy,
             });
         }
+        // Round-barrier checkpoint (DESIGN.md §13), mirroring
+        // `RoundEngine::run_round`: runs after the epoch rebase so each
+        // shard log holds exactly the renumbered carried prefix the WAL
+        // must copy; zero virtual-time cost, no statistics touched, so
+        // durability-on runs stay bit-identical to durability-off runs.
+        if dur.as_ref().is_some_and(|d| d.due(stats.rounds)) {
+            let stats_fnv = crate::durability::stats_digest(stats);
+            let hook = dur.as_mut().expect("durability hook present");
+            let carried_shards: Vec<&[WriteEntry]> = (0..router.n_shards())
+                .map(|s| router.log(s).entries())
+                .collect();
+            if let Some(sum) = hook.maybe_checkpoint(
+                stats.rounds,
+                *t,
+                epoch_base,
+                &carried_shards,
+                cpu.stmr(),
+                stats_fnv,
+            )? {
+                tel.record_checkpoint(&sum);
+            }
+        }
         if round_log.len() < 10_000 {
             round_log.push(rs);
         }
         Ok(())
+    }
+
+    /// Shard `s`'s carried write-log prefix that will seed the next round
+    /// (renumbered `ts = 1..=k` by the epoch rebase).  Recovery compares
+    /// these against the checkpoint's per-shard WAL copy.
+    pub fn carried_entries(&self, s: usize) -> &[WriteEntry] {
+        self.router.log(s).entries()
     }
 }
 

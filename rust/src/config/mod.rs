@@ -260,6 +260,21 @@ pub struct SystemConfig {
     /// Off by default; off means a no-op recorder and zero overhead
     /// (DESIGN.md §11).
     pub telemetry_enabled: bool,
+    /// Checkpoint directory (`durability.checkpoint_dir`, CLI
+    /// `--checkpoint-dir`).  Empty = durability off (the default): no
+    /// journal, no checkpoints, zero overhead.
+    pub checkpoint_dir: String,
+    /// Checkpoint every N rounds (`durability.interval_rounds`; 0 =
+    /// journal-only, never checkpoint).  Only meaningful with a
+    /// checkpoint directory.
+    pub checkpoint_interval_rounds: u64,
+    /// Fault-injection point (`durability.crash_point`, or the
+    /// `SHETM_CRASH_POINT` env var via the CLI); empty = no fault.  See
+    /// [`crate::durability::CrashPoint::parse`] for the spellings.
+    pub crash_point: String,
+    /// First checkpoint round at which `crash_point` fires
+    /// (`durability.crash_round` / `SHETM_CRASH_ROUND`).
+    pub crash_round: u64,
 }
 
 impl Default for SystemConfig {
@@ -292,6 +307,10 @@ impl Default for SystemConfig {
             cluster_threads: 1,
             workload: "synth".to_string(),
             telemetry_enabled: false,
+            checkpoint_dir: String::new(),
+            checkpoint_interval_rounds: 1,
+            crash_point: String::new(),
+            crash_round: 0,
         }
     }
 }
@@ -358,6 +377,17 @@ impl SystemConfig {
             cluster_threads,
             workload: raw.get("workload").unwrap_or(&d.workload).to_string(),
             telemetry_enabled: raw.get_bool_or("telemetry.enabled", d.telemetry_enabled)?,
+            checkpoint_dir: raw
+                .get("durability.checkpoint_dir")
+                .unwrap_or(&d.checkpoint_dir)
+                .to_string(),
+            checkpoint_interval_rounds: raw
+                .get_or("durability.interval_rounds", d.checkpoint_interval_rounds)?,
+            crash_point: raw
+                .get("durability.crash_point")
+                .unwrap_or(&d.crash_point)
+                .to_string(),
+            crash_round: raw.get_or("durability.crash_round", d.crash_round)?,
         })
     }
 }
@@ -477,6 +507,24 @@ period_ms = 2.5
         let mut raw = Raw::new();
         raw.set("hetm.chunk_filter=maybe").unwrap();
         assert!(SystemConfig::from_raw(&raw).is_err(), "bools are validated");
+    }
+
+    #[test]
+    fn durability_keys_parse() {
+        let cfg = SystemConfig::from_raw(&Raw::new()).unwrap();
+        assert!(cfg.checkpoint_dir.is_empty(), "durability off by default");
+        assert_eq!(cfg.checkpoint_interval_rounds, 1);
+        assert!(cfg.crash_point.is_empty());
+        let raw = Raw::parse(
+            "[durability]\ncheckpoint_dir = \"/tmp/ck\"\ninterval_rounds = 3\n\
+             crash_point = \"mid-wal-append\"\ncrash_round = 2\n",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.checkpoint_dir, "/tmp/ck");
+        assert_eq!(cfg.checkpoint_interval_rounds, 3);
+        assert_eq!(cfg.crash_point, "mid-wal-append");
+        assert_eq!(cfg.crash_round, 2);
     }
 
     #[test]

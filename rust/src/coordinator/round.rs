@@ -316,6 +316,10 @@ pub struct RoundEngine<C: CpuDriver, G: GpuDriver> {
     /// builder).  Observations are gathered only when
     /// `tel.enabled()`; a disabled recorder costs one branch per round.
     pub tel: Telemetry,
+    /// Durability hook (checkpoints at the round barrier).  `None` unless
+    /// the session builder configured a checkpoint directory; the off
+    /// path costs one `Option` test per round.
+    pub dur: Option<Box<crate::durability::DurabilityHook>>,
 
     policy: Policy,
     h2d: BusTimeline,
@@ -356,6 +360,7 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
             stats: RunStats::default(),
             round_log: Vec::new(),
             tel: Telemetry::off(),
+            dur: None,
             policy,
             h2d: BusTimeline::new(),
             d2h: BusTimeline::new(),
@@ -825,6 +830,17 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
 
         // --- Round wrap-up -------------------------------------------------
         let cpu_lost = !ok && self.policy.loser() == Loser::Cpu;
+        // Fold this round's write footprint into the durability dirty
+        // accumulator while it is still intact: the CPU log (carried
+        // prefix included), the next round's carry, and the device
+        // write-set bitmap.  Over-approximation is safe (extra clean
+        // pages in a checkpoint), so rolled-back writes need no special
+        // casing.
+        if let Some(dur) = &mut self.dur {
+            dur.mark_entries(self.log.entries());
+            dur.mark_entries(&self.carry);
+            dur.mark_device(self.device.ws_bmp());
+        }
         self.policy.on_round(ok);
         self.gpu.on_round_end(ok);
         // Retire this round's chunk buffers into the log's arena so next
@@ -877,10 +893,37 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
                 d2h_busy_s: &d2h_busy,
             });
         }
+        // Round-barrier checkpoint (DESIGN.md §13).  Runs after the epoch
+        // rebase so the log holds exactly the renumbered carried prefix
+        // the WAL must copy; costs zero virtual time and touches no
+        // statistics, so durability-on runs stay bit-identical to
+        // durability-off runs.
+        if self.dur.as_ref().is_some_and(|d| d.due(self.stats.rounds)) {
+            let stats_fnv = crate::durability::stats_digest(&self.stats);
+            let dur = self.dur.as_mut().expect("durability hook present");
+            let carried_shards = [self.log.entries()];
+            if let Some(sum) = dur.maybe_checkpoint(
+                self.stats.rounds,
+                self.t,
+                base,
+                &carried_shards,
+                self.cpu.stmr(),
+                stats_fnv,
+            )? {
+                self.tel.record_checkpoint(&sum);
+            }
+        }
         if self.round_log.len() < 10_000 {
             self.round_log.push(rs);
         }
         Ok(())
+    }
+
+    /// The carried write-log prefix that will seed the next round
+    /// (renumbered `ts = 1..=k` by the epoch rebase).  Recovery compares
+    /// this against the checkpoint's WAL copy to prove bit-identity.
+    pub fn carried_entries(&self) -> &[WriteEntry] {
+        self.log.entries()
     }
 }
 

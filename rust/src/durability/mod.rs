@@ -1,0 +1,1065 @@
+//! Round-boundary incremental checkpoints + deterministic crash recovery.
+//!
+//! SHeTM's synchronization barrier already maintains exactly the state a
+//! durability layer needs: packed dirty-granule bitmaps (which STMR pages
+//! changed) and the carried write-log prefix (validation-window commits
+//! that survive even a favor-GPU round abort).  This module piggybacks on
+//! that barrier — it never adds a synchronization point of its own:
+//!
+//! * [`DurabilityHook`] — owned by both engines; accumulates the round's
+//!   write footprint into a cross-round dirty [`Bitmap`] and, every
+//!   `durability.interval_rounds` rounds, writes one checkpoint:
+//!   - `ckpt-NNNNNNNN.pages` — dirty STMR extents (full image for the
+//!     first checkpoint of a chain), FNV-1a-checksummed;
+//!   - `ckpt-NNNNNNNN.wal`   — a write-ahead copy of the per-shard
+//!     carried log (the §IV-D validation-window prefix), checksummed;
+//!   - `ckpt-NNNNNNNN.manifest` — round, epoch base, virtual clock,
+//!     per-file sizes/checksums, `prev` chain link, and a trailing
+//!     whole-manifest checksum.  The manifest is written **last**: its
+//!     valid checksum line is the checkpoint's commit point.
+//! * [`ExternalJournal`] — a write-ahead journal of
+//!   [`crate::session::Session::txn`] injections (and `drain` barriers),
+//!   so recovery can replay them at the recorded round boundaries.
+//! * [`load_latest`] — scans a checkpoint directory for the newest
+//!   checkpoint whose *entire* chain (manifest, pages, WAL, every
+//!   ancestor) validates, reconstructs the STMR image base→…→newest, and
+//!   cross-checks it against the manifest's whole-image checksum; torn or
+//!   corrupted checkpoints fall back to the previous complete one.
+//! * [`CrashPoint`] / [`FaultPlan`] — a deterministic fault-injection
+//!   layer that tears or corrupts checkpoint files at every interesting
+//!   point and then simulates process death (an error that unwinds out of
+//!   `run_round`; `SHETM_CRASH_KILL=1` upgrades it to a real `exit(3)`
+//!   for CLI sweeps).  Zero-cost when no plan is armed: the engines test
+//!   one `Option` per round.
+//!
+//! Recovery (`Session::recover`) is **replay-based**: engine drivers hold
+//! unserializable host state (RNGs, rate debt, oracle traces), but every
+//! run is deterministic in virtual time, so the recovered session is
+//! rebuilt from the same configuration, re-run to the checkpointed round
+//! with journaled external transactions re-injected at their recorded
+//! boundaries, and then *verified bit-exactly* against the checkpoint
+//! (STMR words, `RunStats` digest, per-shard carried log, virtual clock).
+//! Checkpoint I/O costs zero virtual time and touches no statistics, so a
+//! durability-enabled run is bit-identical to a durability-off run.
+//! See DESIGN.md §13 for the full catalog of formats and invariants.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::stats::RunStats;
+use crate::gpu::bitmap::Bitmap;
+use crate::stm::{SharedStmr, WriteEntry};
+
+/// Marker every simulated-crash error message starts with; tests and the
+/// CLI detect an injected crash (vs a real failure) with
+/// [`is_simulated_crash`].
+pub const CRASH_MARKER: &str = "simulated crash";
+
+/// Magic first line of a checkpoint manifest.
+const MANIFEST_MAGIC: &str = "shetm-checkpoint v1";
+
+/// FNV-1a 64-bit over a byte slice (dependency-free checksum; the same
+/// polynomial everywhere a checkpoint file carries a trailer).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Digest of a full `RunStats` through its `Debug` form (which prints
+/// every f64 at full precision), used to pin recovered statistics
+/// bit-exactly to the checkpointed ones.
+pub fn stats_digest(stats: &RunStats) -> u64 {
+    fnv1a(format!("{stats:?}").as_bytes())
+}
+
+/// True if `err` is an injected [`FaultPlan`] crash rather than a real
+/// engine failure.
+pub fn is_simulated_crash(err: &anyhow::Error) -> bool {
+    err.to_string().contains(CRASH_MARKER)
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// Where, within one checkpoint write, the injected crash fires.
+///
+/// The write order is pages → WAL → manifest (manifest last = commit
+/// point), so each variant leaves a distinct torn state behind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// Die after writing only the first half of the pages file.
+    MidPageWrite,
+    /// Die after the pages file, before the WAL.
+    AfterPages,
+    /// Die after writing only the first half of the WAL file.
+    MidWalAppend,
+    /// Die after the WAL, before the manifest.
+    AfterWal,
+    /// Die after writing only half of the manifest (no checksum line).
+    MidManifest,
+    /// Complete the checkpoint, then flip one byte of the pages file.
+    CorruptPageByte,
+    /// Complete the checkpoint, then flip one byte of the manifest.
+    CorruptManifestByte,
+    /// Complete the checkpoint intact, then die between rounds.
+    AfterCheckpoint,
+}
+
+impl CrashPoint {
+    /// Every crash point, in write order (test matrices sweep this).
+    pub const ALL: [CrashPoint; 8] = [
+        CrashPoint::MidPageWrite,
+        CrashPoint::AfterPages,
+        CrashPoint::MidWalAppend,
+        CrashPoint::AfterWal,
+        CrashPoint::MidManifest,
+        CrashPoint::CorruptPageByte,
+        CrashPoint::CorruptManifestByte,
+        CrashPoint::AfterCheckpoint,
+    ];
+
+    /// Parse the config/CLI spelling (`durability.crash_point`).
+    pub fn parse(s: &str) -> Result<CrashPoint> {
+        Ok(match s {
+            "mid-page-write" => CrashPoint::MidPageWrite,
+            "after-pages" => CrashPoint::AfterPages,
+            "mid-wal-append" => CrashPoint::MidWalAppend,
+            "after-wal" => CrashPoint::AfterWal,
+            "mid-manifest" => CrashPoint::MidManifest,
+            "corrupt-page-byte" => CrashPoint::CorruptPageByte,
+            "corrupt-manifest-byte" => CrashPoint::CorruptManifestByte,
+            "after-checkpoint" => CrashPoint::AfterCheckpoint,
+            other => bail!(
+                "unknown crash point {other:?} (mid-page-write|after-pages|\
+                 mid-wal-append|after-wal|mid-manifest|corrupt-page-byte|\
+                 corrupt-manifest-byte|after-checkpoint)"
+            ),
+        })
+    }
+
+    /// The config/CLI spelling accepted by [`CrashPoint::parse`].
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CrashPoint::MidPageWrite => "mid-page-write",
+            CrashPoint::AfterPages => "after-pages",
+            CrashPoint::MidWalAppend => "mid-wal-append",
+            CrashPoint::AfterWal => "after-wal",
+            CrashPoint::MidManifest => "mid-manifest",
+            CrashPoint::CorruptPageByte => "corrupt-page-byte",
+            CrashPoint::CorruptManifestByte => "corrupt-manifest-byte",
+            CrashPoint::AfterCheckpoint => "after-checkpoint",
+        }
+    }
+
+    /// Whether crashing here leaves the in-flight checkpoint unusable,
+    /// forcing recovery to fall back to the previous complete one.
+    /// Every point does except [`CrashPoint::AfterCheckpoint`], which
+    /// fires after the manifest (the commit point) is durable.
+    pub fn tears_checkpoint(&self) -> bool {
+        !matches!(self, CrashPoint::AfterCheckpoint)
+    }
+}
+
+/// An armed fault: fire `point` at the first checkpoint whose round is
+/// `>= at_round`.  One-shot by construction — firing kills the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Where within the checkpoint write to crash.
+    pub point: CrashPoint,
+    /// First checkpoint round at which the fault is eligible.
+    pub at_round: u64,
+}
+
+/// Simulate process death at `point`: leave whatever torn files exist on
+/// disk and unwind.  `SHETM_CRASH_KILL=1` turns the unwind into a real
+/// `exit(3)` so CLI sweeps can exercise hard kills.
+fn crash(point: CrashPoint, round: u64) -> anyhow::Error {
+    if std::env::var("SHETM_CRASH_KILL").as_deref() == Ok("1") {
+        eprintln!("{CRASH_MARKER}: {} at checkpoint round {round}", point.as_str());
+        std::process::exit(3);
+    }
+    anyhow!(
+        "{CRASH_MARKER}: {} at checkpoint round {round}",
+        point.as_str()
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint writer (the engine-side hook)
+// ---------------------------------------------------------------------------
+
+/// Summary of one written checkpoint, fed to telemetry
+/// (`hetm_checkpoint_*` counters).
+#[derive(Debug, Clone, Copy)]
+pub struct CheckpointSummary {
+    /// Round the checkpoint captured.
+    pub round: u64,
+    /// Whether this was a full-image checkpoint (chain base).
+    pub full: bool,
+    /// Total bytes written (pages + WAL + manifest).
+    pub bytes: u64,
+    /// Dirty extents snapshot into the pages file.
+    pub extents: u64,
+    /// STMR words those extents cover.
+    pub dirty_words: u64,
+    /// Carried-log entries copied into the WAL.
+    pub wal_entries: u64,
+    /// Wall-clock write duration in microseconds.  Real time, not virtual
+    /// — excluded from every determinism comparison; checkpoints cost
+    /// zero *virtual* time by design.
+    pub write_micros: u64,
+}
+
+/// Engine-side checkpoint pipeline: dirty accumulation across rounds plus
+/// the barrier-time writer.  Installed into an engine's `dur` slot by the
+/// session builder when a checkpoint directory is configured; engines
+/// without one pay a single `Option` test per round.
+pub struct DurabilityHook {
+    dir: PathBuf,
+    /// Checkpoint every this many rounds (0 = journal-only, never
+    /// checkpoint).
+    interval_rounds: u64,
+    plan: Option<FaultPlan>,
+    /// Granules written since the last complete checkpoint (union of CPU
+    /// log footprints and device write-set bitmaps; over-approximation is
+    /// safe, under-approximation is caught by the manifest's whole-image
+    /// checksum at load time).
+    dirty: Bitmap,
+    /// Round of the previous complete checkpoint (chain link); `None`
+    /// until the first one, which therefore snapshots the full image.
+    prev: Option<u64>,
+    /// Reused extent scratch.
+    ranges: Vec<(usize, usize)>,
+}
+
+impl DurabilityHook {
+    /// Create the hook, ensuring `dir` exists.  `n_words`/`shift` must
+    /// match the engine devices' bitmaps so write-set unions line up.
+    pub fn new(
+        dir: &Path,
+        interval_rounds: u64,
+        n_words: usize,
+        shift: u32,
+        plan: Option<FaultPlan>,
+    ) -> Result<Self> {
+        fs::create_dir_all(dir)
+            .map_err(|e| anyhow!("checkpoint dir {}: {e}", dir.display()))?;
+        Ok(DurabilityHook {
+            dir: dir.to_path_buf(),
+            interval_rounds,
+            plan,
+            dirty: Bitmap::new(n_words, shift),
+            prev: None,
+            ranges: Vec::new(),
+        })
+    }
+
+    /// Continue an existing chain: the next checkpoint links `prev = round`
+    /// and snapshots only pages dirtied after it (recovery re-arm).
+    pub fn resume_from(&mut self, round: u64) {
+        self.prev = Some(round);
+        self.dirty.clear();
+    }
+
+    /// The checkpoint directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Fold a write-log slice into the dirty accumulator.
+    pub fn mark_entries(&mut self, entries: &[WriteEntry]) {
+        for e in entries {
+            self.dirty.mark_word(e.addr as usize);
+        }
+    }
+
+    /// Fold a device write-set bitmap into the dirty accumulator.
+    pub fn mark_device(&mut self, ws: &Bitmap) {
+        self.dirty.union_with(ws);
+    }
+
+    /// Whether a checkpoint is due at `round` (engines pre-check this to
+    /// keep the barrier hot path free of slice assembly).
+    pub fn due(&self, round: u64) -> bool {
+        self.interval_rounds > 0 && round > 0 && round % self.interval_rounds == 0
+    }
+
+    /// Barrier-time entry point: write a checkpoint if one is due.
+    ///
+    /// Must be called after the round's epoch rebase, so each shard of
+    /// `carried` holds exactly the entries (renumbered `ts = 1..=k`) that
+    /// will seed the next round — the prefix recovery replays through
+    /// `inject_external`.  Returns the summary for telemetry, or `None`
+    /// when no checkpoint was due.
+    pub fn maybe_checkpoint(
+        &mut self,
+        round: u64,
+        t: f64,
+        epoch_base: i64,
+        carried: &[&[WriteEntry]],
+        stmr: &SharedStmr,
+        stats_fnv: u64,
+    ) -> Result<Option<CheckpointSummary>> {
+        if !self.due(round) {
+            return Ok(None);
+        }
+        let started = std::time::Instant::now();
+        let full = self.prev.is_none();
+        let mut ranges = std::mem::take(&mut self.ranges);
+        ranges.clear();
+        if full {
+            ranges.push((0, stmr.len()));
+        } else {
+            self.dirty.dirty_word_ranges_into(&mut ranges);
+        }
+        let point = self
+            .plan
+            .filter(|p| round >= p.at_round)
+            .map(|p| p.point);
+
+        // --- pages ---------------------------------------------------------
+        let mut pages: Vec<u8> = Vec::new();
+        let mut dirty_words = 0u64;
+        for &(s, e) in &ranges {
+            pages.extend_from_slice(&(s as u32).to_le_bytes());
+            pages.extend_from_slice(&((e - s) as u32).to_le_bytes());
+            for w in s..e {
+                pages.extend_from_slice(&stmr.load(w).to_le_bytes());
+            }
+            dirty_words += (e - s) as u64;
+        }
+        let pages_sum = fnv1a(&pages);
+        pages.extend_from_slice(&pages_sum.to_le_bytes());
+
+        // --- WAL -----------------------------------------------------------
+        let mut wal: Vec<u8> = Vec::new();
+        wal.extend_from_slice(&(carried.len() as u32).to_le_bytes());
+        let mut wal_entries = 0u64;
+        for shard in carried {
+            wal.extend_from_slice(&(shard.len() as u32).to_le_bytes());
+            for e in *shard {
+                wal.extend_from_slice(&e.addr.to_le_bytes());
+                wal.extend_from_slice(&e.val.to_le_bytes());
+                wal.extend_from_slice(&e.ts.to_le_bytes());
+            }
+            wal_entries += shard.len() as u64;
+        }
+        let wal_sum = fnv1a(&wal);
+        wal.extend_from_slice(&wal_sum.to_le_bytes());
+
+        // --- manifest (built fully before any file is written) -------------
+        let pages_name = format!("ckpt-{round:08}.pages");
+        let wal_name = format!("ckpt-{round:08}.wal");
+        let mut image_sum = 0xcbf2_9ce4_8422_2325u64;
+        for w in 0..stmr.len() {
+            for b in stmr.load(w).to_le_bytes() {
+                image_sum ^= u64::from(b);
+                image_sum = image_sum.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        let mut man = String::new();
+        man.push_str(MANIFEST_MAGIC);
+        man.push('\n');
+        man.push_str(&format!("round = {round}\n"));
+        match self.prev {
+            Some(p) => man.push_str(&format!("prev = {p}\n")),
+            None => man.push_str("prev = none\n"),
+        }
+        man.push_str(&format!("epoch_base = {epoch_base}\n"));
+        man.push_str(&format!("t_bits = {:016x}\n", t.to_bits()));
+        man.push_str(&format!("n_words = {}\n", stmr.len()));
+        man.push_str(&format!("n_shards = {}\n", carried.len()));
+        man.push_str(&format!("stats_fnv = {stats_fnv:016x}\n"));
+        man.push_str(&format!("stmr_fnv = {image_sum:016x}\n"));
+        man.push_str(&format!(
+            "pages = {pages_name} {} {pages_sum:016x}\n",
+            pages.len()
+        ));
+        man.push_str(&format!("wal = {wal_name} {} {wal_sum:016x}\n", wal.len()));
+        let man_sum = fnv1a(man.as_bytes());
+        let man_full = format!("{man}checksum = {man_sum:016x}\n");
+        let man_name = format!("ckpt-{round:08}.manifest");
+
+        // --- write in commit order, tearing at the armed point -------------
+        let pages_path = self.dir.join(&pages_name);
+        if point == Some(CrashPoint::MidPageWrite) {
+            fs::write(&pages_path, &pages[..pages.len() / 2])?;
+            return Err(crash(CrashPoint::MidPageWrite, round));
+        }
+        fs::write(&pages_path, &pages)?;
+        if point == Some(CrashPoint::AfterPages) {
+            return Err(crash(CrashPoint::AfterPages, round));
+        }
+        let wal_path = self.dir.join(&wal_name);
+        if point == Some(CrashPoint::MidWalAppend) {
+            fs::write(&wal_path, &wal[..wal.len() / 2])?;
+            return Err(crash(CrashPoint::MidWalAppend, round));
+        }
+        fs::write(&wal_path, &wal)?;
+        if point == Some(CrashPoint::AfterWal) {
+            return Err(crash(CrashPoint::AfterWal, round));
+        }
+        let man_path = self.dir.join(&man_name);
+        if point == Some(CrashPoint::MidManifest) {
+            fs::write(&man_path, &man.as_bytes()[..man.len() / 2])?;
+            return Err(crash(CrashPoint::MidManifest, round));
+        }
+        fs::write(&man_path, man_full.as_bytes())?;
+        match point {
+            Some(CrashPoint::CorruptPageByte) => {
+                flip_byte(&pages_path)?;
+                return Err(crash(CrashPoint::CorruptPageByte, round));
+            }
+            Some(CrashPoint::CorruptManifestByte) => {
+                flip_byte(&man_path)?;
+                return Err(crash(CrashPoint::CorruptManifestByte, round));
+            }
+            Some(CrashPoint::AfterCheckpoint) => {
+                return Err(crash(CrashPoint::AfterCheckpoint, round));
+            }
+            _ => {}
+        }
+
+        // --- commit: advance the chain, reset accumulation ------------------
+        self.prev = Some(round);
+        self.dirty.clear();
+        let summary = CheckpointSummary {
+            round,
+            full,
+            bytes: (pages.len() + wal.len() + man_full.len()) as u64,
+            extents: ranges.len() as u64,
+            dirty_words,
+            wal_entries,
+            write_micros: started.elapsed().as_micros() as u64,
+        };
+        self.ranges = ranges;
+        Ok(Some(summary))
+    }
+}
+
+/// XOR the middle byte of `path` with 0xFF (deterministic corruption).
+fn flip_byte(path: &Path) -> Result<()> {
+    let mut bytes = fs::read(path)?;
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    fs::write(path, &bytes)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint loader
+// ---------------------------------------------------------------------------
+
+/// A fully-validated checkpoint, reconstructed from its chain.
+#[derive(Debug, Clone)]
+pub struct LoadedCheckpoint {
+    /// Round the checkpoint captured.
+    pub round: u64,
+    /// Chain link to the previous checkpoint (`None` for a chain base).
+    pub prev: Option<u64>,
+    /// Epoch base at the barrier (carried-prefix length after rebase).
+    pub epoch_base: i64,
+    /// Virtual time at the barrier (bit-exact f64).
+    pub t: f64,
+    /// STMR size in words.
+    pub n_words: usize,
+    /// `RunStats` digest at the barrier ([`stats_digest`]).
+    pub stats_fnv: u64,
+    /// Full STMR image, reconstructed base→…→newest.
+    pub image: Vec<i32>,
+    /// Per-shard carried log at the barrier (the WAL copy).
+    pub carried: Vec<Vec<WriteEntry>>,
+}
+
+struct Manifest {
+    round: u64,
+    prev: Option<u64>,
+    epoch_base: i64,
+    t: f64,
+    n_words: usize,
+    n_shards: usize,
+    stats_fnv: u64,
+    stmr_fnv: u64,
+    pages_name: String,
+    pages_len: usize,
+    pages_sum: u64,
+    wal_name: String,
+    wal_len: usize,
+    wal_sum: u64,
+}
+
+fn parse_hex(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad hex {s:?}: {e}"))
+}
+
+fn read_manifest(dir: &Path, round: u64) -> Result<Manifest> {
+    let path = dir.join(format!("ckpt-{round:08}.manifest"));
+    let text = fs::read_to_string(&path)
+        .map_err(|e| anyhow!("manifest {}: {e}", path.display()))?;
+    // The trailing checksum line is the commit point: recompute FNV over
+    // everything before it.
+    let idx = text
+        .rfind("checksum = ")
+        .ok_or_else(|| anyhow!("manifest {round}: no checksum line"))?;
+    let declared = parse_hex(
+        text[idx + "checksum = ".len()..]
+            .trim_end_matches('\n')
+            .trim(),
+    )?;
+    let actual = fnv1a(text[..idx].as_bytes());
+    if declared != actual {
+        bail!("manifest {round}: checksum mismatch ({declared:016x} != {actual:016x})");
+    }
+    let mut lines = text.lines();
+    if lines.next() != Some(MANIFEST_MAGIC) {
+        bail!("manifest {round}: bad magic");
+    }
+    let mut m = Manifest {
+        round: u64::MAX,
+        prev: None,
+        epoch_base: 0,
+        t: 0.0,
+        n_words: 0,
+        n_shards: 0,
+        stats_fnv: 0,
+        stmr_fnv: 0,
+        pages_name: String::new(),
+        pages_len: 0,
+        pages_sum: 0,
+        wal_name: String::new(),
+        wal_len: 0,
+        wal_sum: 0,
+    };
+    for line in lines {
+        let Some((k, v)) = line.split_once(" = ") else {
+            continue;
+        };
+        match k {
+            "round" => m.round = v.parse()?,
+            "prev" => m.prev = if v == "none" { None } else { Some(v.parse()?) },
+            "epoch_base" => m.epoch_base = v.parse()?,
+            "t_bits" => m.t = f64::from_bits(parse_hex(v)?),
+            "n_words" => m.n_words = v.parse()?,
+            "n_shards" => m.n_shards = v.parse()?,
+            "stats_fnv" => m.stats_fnv = parse_hex(v)?,
+            "stmr_fnv" => m.stmr_fnv = parse_hex(v)?,
+            "pages" | "wal" => {
+                let mut it = v.split_whitespace();
+                let (name, len, sum) = (
+                    it.next().ok_or_else(|| anyhow!("manifest {round}: bad {k}"))?,
+                    it.next().ok_or_else(|| anyhow!("manifest {round}: bad {k}"))?,
+                    it.next().ok_or_else(|| anyhow!("manifest {round}: bad {k}"))?,
+                );
+                if k == "pages" {
+                    m.pages_name = name.to_string();
+                    m.pages_len = len.parse()?;
+                    m.pages_sum = parse_hex(sum)?;
+                } else {
+                    m.wal_name = name.to_string();
+                    m.wal_len = len.parse()?;
+                    m.wal_sum = parse_hex(sum)?;
+                }
+            }
+            _ => {}
+        }
+    }
+    if m.round != round {
+        bail!("manifest {round}: names round {}", m.round);
+    }
+    if m.n_words == 0 || m.pages_name.is_empty() || m.wal_name.is_empty() {
+        bail!("manifest {round}: incomplete");
+    }
+    Ok(m)
+}
+
+/// Read + checksum-verify a payload file declared by a manifest, returning
+/// the bytes *without* the 8-byte FNV trailer.
+fn read_payload(dir: &Path, name: &str, declared_len: usize, declared_sum: u64) -> Result<Vec<u8>> {
+    let path = dir.join(name);
+    let bytes = fs::read(&path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    if bytes.len() != declared_len || bytes.len() < 8 {
+        bail!("{name}: size {} != declared {declared_len}", bytes.len());
+    }
+    let body = &bytes[..bytes.len() - 8];
+    let trailer = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    let sum = fnv1a(body);
+    if sum != trailer || sum != declared_sum {
+        bail!("{name}: checksum mismatch");
+    }
+    Ok(body.to_vec())
+}
+
+/// Apply a pages payload's extents onto `image`.
+fn overlay_pages(image: &mut [i32], body: &[u8]) -> Result<usize> {
+    let mut i = 0usize;
+    let mut extents = 0usize;
+    while i < body.len() {
+        if body.len() - i < 8 {
+            bail!("pages: truncated extent header");
+        }
+        let start = u32::from_le_bytes(body[i..i + 4].try_into().unwrap()) as usize;
+        let len = u32::from_le_bytes(body[i + 4..i + 8].try_into().unwrap()) as usize;
+        i += 8;
+        if body.len() - i < len * 4 || start + len > image.len() {
+            bail!("pages: extent [{start}, +{len}) out of bounds");
+        }
+        for w in 0..len {
+            image[start + w] =
+                i32::from_le_bytes(body[i + 4 * w..i + 4 * w + 4].try_into().unwrap());
+        }
+        i += len * 4;
+        extents += 1;
+    }
+    Ok(extents)
+}
+
+fn parse_wal(body: &[u8], n_shards: usize) -> Result<Vec<Vec<WriteEntry>>> {
+    if body.len() < 4 {
+        bail!("wal: truncated");
+    }
+    let declared = u32::from_le_bytes(body[..4].try_into().unwrap()) as usize;
+    if declared != n_shards {
+        bail!("wal: shard count {declared} != manifest {n_shards}");
+    }
+    let mut i = 4usize;
+    let mut out = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        if body.len() - i < 4 {
+            bail!("wal: truncated shard header");
+        }
+        let n = u32::from_le_bytes(body[i..i + 4].try_into().unwrap()) as usize;
+        i += 4;
+        if body.len() - i < n * 12 {
+            bail!("wal: truncated entries");
+        }
+        let mut shard = Vec::with_capacity(n);
+        for e in 0..n {
+            let b = &body[i + 12 * e..i + 12 * e + 12];
+            shard.push(WriteEntry {
+                addr: u32::from_le_bytes(b[..4].try_into().unwrap()),
+                val: i32::from_le_bytes(b[4..8].try_into().unwrap()),
+                ts: i32::from_le_bytes(b[8..12].try_into().unwrap()),
+            });
+        }
+        i += n * 12;
+        out.push(shard);
+    }
+    if i != body.len() {
+        bail!("wal: trailing garbage");
+    }
+    Ok(out)
+}
+
+/// Load checkpoint `round` by walking its `prev` chain to the base and
+/// overlaying extents oldest-first; every file of every link must
+/// validate, and the reconstructed image must match the newest manifest's
+/// whole-image checksum.
+fn load_chain(dir: &Path, round: u64) -> Result<LoadedCheckpoint> {
+    let newest = read_manifest(dir, round)?;
+    let mut chain = vec![newest];
+    while let Some(p) = chain.last().unwrap().prev {
+        let cur = chain.last().unwrap().round;
+        if p >= cur {
+            bail!("checkpoint {cur}: non-decreasing prev link {p}");
+        }
+        let m = read_manifest(dir, p)?;
+        if m.n_words != chain[0].n_words || m.n_shards != chain[0].n_shards {
+            bail!("checkpoint {p}: shape differs from {round}");
+        }
+        chain.push(m);
+    }
+    let mut image = vec![0i32; chain[0].n_words];
+    for m in chain.iter().rev() {
+        let body = read_payload(dir, &m.pages_name, m.pages_len, m.pages_sum)?;
+        overlay_pages(&mut image, &body)?;
+    }
+    let newest = &chain[0];
+    let mut sum = 0xcbf2_9ce4_8422_2325u64;
+    for w in &image {
+        for b in w.to_le_bytes() {
+            sum ^= u64::from(b);
+            sum = sum.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    if sum != newest.stmr_fnv {
+        bail!(
+            "checkpoint {round}: reconstructed image checksum {sum:016x} != \
+             manifest {:016x} (dirty-page under-approximation?)",
+            newest.stmr_fnv
+        );
+    }
+    let wal_body = read_payload(dir, &newest.wal_name, newest.wal_len, newest.wal_sum)?;
+    let carried = parse_wal(&wal_body, newest.n_shards)?;
+    Ok(LoadedCheckpoint {
+        round: newest.round,
+        prev: newest.prev,
+        epoch_base: newest.epoch_base,
+        t: newest.t,
+        n_words: newest.n_words,
+        stats_fnv: newest.stats_fnv,
+        image,
+        carried,
+    })
+}
+
+/// Newest checkpoint in `dir` whose entire chain validates, or `None` if
+/// the directory holds no usable checkpoint (missing dir included).
+/// Torn/corrupted newer checkpoints are skipped — the fall-back the
+/// crash-injection suite exercises at every [`CrashPoint`].
+pub fn load_latest(dir: &Path) -> Result<Option<LoadedCheckpoint>> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(None),
+    };
+    let mut rounds: Vec<u64> = Vec::new();
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(num) = name
+            .strip_prefix("ckpt-")
+            .and_then(|s| s.strip_suffix(".manifest"))
+        {
+            if let Ok(r) = num.parse::<u64>() {
+                rounds.push(r);
+            }
+        }
+    }
+    rounds.sort_unstable();
+    for &r in rounds.iter().rev() {
+        if let Ok(ck) = load_chain(dir, r) {
+            return Ok(Some(ck));
+        }
+    }
+    Ok(None)
+}
+
+// ---------------------------------------------------------------------------
+// External-transaction journal
+// ---------------------------------------------------------------------------
+
+/// What a journal record replays as.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecordKind {
+    /// A `Session::txn` injection (entries re-executed through the guest
+    /// TM, stats re-injected through `inject_external`).
+    Txn,
+    /// A `Session::drain` barrier (replayed as a drain).
+    Drain,
+}
+
+/// One journaled event: `kind` happened after `after_round` rounds had
+/// completed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalRecord {
+    /// Event kind.
+    pub kind: RecordKind,
+    /// Rounds completed when the event happened (its replay position).
+    pub after_round: u64,
+    /// Commits `inject_external` was credited with (txn records).
+    pub commits: u64,
+    /// Attempts `inject_external` was credited with (txn records).
+    pub attempts: u64,
+    /// The transaction's committed write-set (empty for read-only txns
+    /// and drain records).
+    pub entries: Vec<WriteEntry>,
+}
+
+/// Append-only write-ahead journal of external events (`external.log` in
+/// the checkpoint directory).  Each record carries its own FNV trailer;
+/// a torn tail (crash mid-append) is detected and dropped at load.
+pub struct ExternalJournal {
+    file: fs::File,
+}
+
+/// Path of the journal inside a checkpoint directory.
+pub fn journal_path(dir: &Path) -> PathBuf {
+    dir.join("external.log")
+}
+
+fn encode_record(rec: &JournalRecord) -> Vec<u8> {
+    let mut b = Vec::with_capacity(37 + rec.entries.len() * 12);
+    b.push(match rec.kind {
+        RecordKind::Txn => 0u8,
+        RecordKind::Drain => 1u8,
+    });
+    b.extend_from_slice(&rec.after_round.to_le_bytes());
+    b.extend_from_slice(&rec.commits.to_le_bytes());
+    b.extend_from_slice(&rec.attempts.to_le_bytes());
+    b.extend_from_slice(&(rec.entries.len() as u32).to_le_bytes());
+    for e in &rec.entries {
+        b.extend_from_slice(&e.addr.to_le_bytes());
+        b.extend_from_slice(&e.val.to_le_bytes());
+        b.extend_from_slice(&e.ts.to_le_bytes());
+    }
+    let sum = fnv1a(&b);
+    b.extend_from_slice(&sum.to_le_bytes());
+    b
+}
+
+impl ExternalJournal {
+    /// Open (append/create) the journal of `dir`, creating `dir` if
+    /// needed.
+    pub fn open(dir: &Path) -> Result<Self> {
+        fs::create_dir_all(dir)
+            .map_err(|e| anyhow!("checkpoint dir {}: {e}", dir.display()))?;
+        let file = fs::OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(journal_path(dir))
+            .map_err(|e| anyhow!("journal {}: {e}", journal_path(dir).display()))?;
+        Ok(ExternalJournal { file })
+    }
+
+    /// Durably append one record (write + fsync: the journal is the
+    /// write-ahead half of the recovery contract).
+    pub fn append(&mut self, rec: &JournalRecord) -> Result<()> {
+        self.file.write_all(&encode_record(rec))?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    /// Read every intact record of `dir`'s journal, in append order.
+    /// Stops at the first torn or checksum-failing record (a crash
+    /// mid-append); a missing journal reads as empty.
+    pub fn load(dir: &Path) -> Result<Vec<JournalRecord>> {
+        let bytes = match fs::read(journal_path(dir)) {
+            Ok(b) => b,
+            Err(_) => return Ok(Vec::new()),
+        };
+        let mut out = Vec::new();
+        let mut i = 0usize;
+        while bytes.len() - i >= 37 {
+            let kind = match bytes[i] {
+                0 => RecordKind::Txn,
+                1 => RecordKind::Drain,
+                _ => break,
+            };
+            let after_round = u64::from_le_bytes(bytes[i + 1..i + 9].try_into().unwrap());
+            let commits = u64::from_le_bytes(bytes[i + 9..i + 17].try_into().unwrap());
+            let attempts = u64::from_le_bytes(bytes[i + 17..i + 25].try_into().unwrap());
+            let n = u32::from_le_bytes(bytes[i + 25..i + 29].try_into().unwrap()) as usize;
+            let body_len = 29 + n * 12;
+            if bytes.len() - i < body_len + 8 {
+                break;
+            }
+            let declared = u64::from_le_bytes(
+                bytes[i + body_len..i + body_len + 8].try_into().unwrap(),
+            );
+            if fnv1a(&bytes[i..i + body_len]) != declared {
+                break;
+            }
+            let mut entries = Vec::with_capacity(n);
+            for e in 0..n {
+                let b = &bytes[i + 29 + 12 * e..i + 29 + 12 * e + 12];
+                entries.push(WriteEntry {
+                    addr: u32::from_le_bytes(b[..4].try_into().unwrap()),
+                    val: i32::from_le_bytes(b[4..8].try_into().unwrap()),
+                    ts: i32::from_le_bytes(b[8..12].try_into().unwrap()),
+                });
+            }
+            out.push(JournalRecord {
+                kind,
+                after_round,
+                commits,
+                attempts,
+                entries,
+            });
+            i += body_len + 8;
+        }
+        Ok(out)
+    }
+
+    /// Drop every record at or beyond the recovery horizon (they postdate
+    /// the checkpoint being recovered to — the lost tail), rewriting the
+    /// journal in place.  Returns the surviving records.
+    pub fn truncate_from(dir: &Path, horizon: u64) -> Result<Vec<JournalRecord>> {
+        let records = Self::load(dir)?;
+        let kept: Vec<JournalRecord> = records
+            .into_iter()
+            .filter(|r| r.after_round < horizon)
+            .collect();
+        let mut bytes = Vec::new();
+        for r in &kept {
+            bytes.extend_from_slice(&encode_record(r));
+        }
+        fs::write(journal_path(dir), &bytes)?;
+        Ok(kept)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "shetm-durability-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn entry(addr: u32, val: i32, ts: i32) -> WriteEntry {
+        WriteEntry { addr, val, ts }
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Standard FNV-1a 64 vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn crash_point_spellings_round_trip() {
+        for p in CrashPoint::ALL {
+            assert_eq!(CrashPoint::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(CrashPoint::parse("nope").is_err());
+    }
+
+    #[test]
+    fn full_then_incremental_checkpoint_round_trips() {
+        let dir = tmpdir("roundtrip");
+        let stmr = SharedStmr::new(256);
+        for w in 0..256 {
+            stmr.store(w, w as i32);
+        }
+        let mut hook = DurabilityHook::new(&dir, 1, 256, 0, None).unwrap();
+        let carried = [entry(3, 30, 1), entry(9, 90, 2)];
+        let s1 = hook
+            .maybe_checkpoint(1, 0.5, 2, &[&carried], &stmr, 77)
+            .unwrap()
+            .unwrap();
+        assert!(s1.full);
+        assert_eq!(s1.extents, 1);
+        assert_eq!(s1.wal_entries, 2);
+        // Round 2 dirties two words.
+        stmr.store(5, -5);
+        stmr.store(200, -200);
+        hook.mark_entries(&[entry(5, -5, 1), entry(200, -200, 2)]);
+        let s2 = hook
+            .maybe_checkpoint(2, 0.75, 0, &[&[]], &stmr, 78)
+            .unwrap()
+            .unwrap();
+        assert!(!s2.full);
+        assert_eq!(s2.dirty_words, 2);
+        let ck = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(ck.round, 2);
+        assert_eq!(ck.prev, Some(1));
+        assert_eq!(ck.stats_fnv, 78);
+        assert_eq!(ck.t.to_bits(), 0.75f64.to_bits());
+        assert_eq!(ck.image, stmr.snapshot());
+        assert_eq!(ck.carried, vec![Vec::<WriteEntry>::new()]);
+    }
+
+    #[test]
+    fn torn_newest_falls_back_to_previous_complete() {
+        let dir = tmpdir("fallback");
+        let stmr = SharedStmr::new(64);
+        let mut hook = DurabilityHook::new(&dir, 1, 64, 0, None).unwrap();
+        hook.maybe_checkpoint(1, 0.1, 0, &[&[]], &stmr, 1)
+            .unwrap()
+            .unwrap();
+        stmr.store(0, 42);
+        hook.mark_entries(&[entry(0, 42, 1)]);
+        // Round 2's checkpoint tears mid-page-write.
+        hook.plan = Some(FaultPlan {
+            point: CrashPoint::MidPageWrite,
+            at_round: 2,
+        });
+        let err = hook
+            .maybe_checkpoint(2, 0.2, 0, &[&[]], &stmr, 2)
+            .unwrap_err();
+        assert!(is_simulated_crash(&err), "{err}");
+        let ck = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(ck.round, 1, "torn round 2 must be skipped");
+        assert_eq!(ck.image[0], 0, "round 1 predates the store");
+    }
+
+    #[test]
+    fn every_corruption_is_detected() {
+        let dir = tmpdir("corrupt");
+        let stmr = SharedStmr::new(64);
+        stmr.store(7, 7);
+        let mut hook = DurabilityHook::new(&dir, 1, 64, 0, None).unwrap();
+        hook.maybe_checkpoint(1, 0.1, 0, &[&[entry(7, 7, 1)]], &stmr, 1)
+            .unwrap()
+            .unwrap();
+        for name in ["ckpt-00000001.pages", "ckpt-00000001.wal", "ckpt-00000001.manifest"] {
+            let path = dir.join(name);
+            let orig = fs::read(&path).unwrap();
+            flip_byte(&path).unwrap();
+            assert!(
+                load_latest(&dir).unwrap().is_none(),
+                "corrupted {name} must invalidate the only checkpoint"
+            );
+            fs::write(&path, &orig).unwrap();
+            assert!(load_latest(&dir).unwrap().is_some(), "restored {name}");
+        }
+    }
+
+    #[test]
+    fn journal_round_trips_and_drops_torn_tail() {
+        let dir = tmpdir("journal");
+        let recs = vec![
+            JournalRecord {
+                kind: RecordKind::Txn,
+                after_round: 1,
+                commits: 1,
+                attempts: 2,
+                entries: vec![entry(4, 44, 3)],
+            },
+            JournalRecord {
+                kind: RecordKind::Drain,
+                after_round: 2,
+                commits: 0,
+                attempts: 0,
+                entries: vec![],
+            },
+            JournalRecord {
+                kind: RecordKind::Txn,
+                after_round: 3,
+                commits: 1,
+                attempts: 1,
+                entries: vec![],
+            },
+        ];
+        {
+            let mut j = ExternalJournal::open(&dir).unwrap();
+            for r in &recs {
+                j.append(r).unwrap();
+            }
+        }
+        assert_eq!(ExternalJournal::load(&dir).unwrap(), recs);
+        // Tear the tail mid-record: only intact prefixes survive.
+        let path = journal_path(&dir);
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert_eq!(ExternalJournal::load(&dir).unwrap(), recs[..2]);
+        // Horizon truncation drops the post-checkpoint tail on disk.
+        let kept = ExternalJournal::truncate_from(&dir, 2).unwrap();
+        assert_eq!(kept, recs[..1]);
+        assert_eq!(ExternalJournal::load(&dir).unwrap(), recs[..1]);
+    }
+
+    #[test]
+    fn empty_or_missing_dir_loads_none() {
+        let dir = tmpdir("empty");
+        assert!(load_latest(&dir).unwrap().is_none());
+        assert!(load_latest(&dir.join("missing")).unwrap().is_none());
+        assert!(ExternalJournal::load(&dir).unwrap().is_empty());
+    }
+}

@@ -301,6 +301,20 @@ impl Bitmap {
         assert_eq!(self.n_granules, other.n_granules, "bitmap shapes differ");
         self.bits.iter().zip(&other.bits).any(|(&a, &b)| a & b != 0)
     }
+
+    /// OR every granule of `other` into `self` (word-parallel).  Both
+    /// bitmaps must share shape AND granularity: with differing shifts
+    /// equal granule indices would alias different word ranges, so this
+    /// is asserted rather than converted.  Used by the durability layer
+    /// to fold per-round device write-sets into the cross-round dirty
+    /// accumulator that selects checkpoint pages.
+    pub fn union_with(&mut self, other: &Bitmap) {
+        assert_eq!(self.n_granules, other.n_granules, "bitmap shapes differ");
+        assert_eq!(self.shift, other.shift, "bitmap granularities differ");
+        for (a, &b) in self.bits.iter_mut().zip(&other.bits) {
+            *a |= b;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -452,6 +466,31 @@ mod tests {
         c.from_tensor(&t2);
         assert!(c.test_granule(7));
         assert_eq!(c.count(), 1);
+    }
+
+    #[test]
+    fn union_with_ors_and_checks_shape() {
+        let mut a = Bitmap::new(300, 1);
+        let mut b = Bitmap::new(300, 1);
+        a.mark_word(10);
+        b.mark_word(10); // shared granule stays a single mark
+        b.mark_word(64);
+        b.mark_word(299);
+        a.union_with(&b);
+        let got: Vec<usize> = a.iter_marked().collect();
+        assert_eq!(got, vec![5, 32, 149]);
+        // The union accumulates across rounds: clearing the source must
+        // not clear the accumulator.
+        b.clear();
+        assert_eq!(a.count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "granularities differ")]
+    fn union_with_rejects_mismatched_shift() {
+        let mut a = Bitmap::new(256, 0);
+        let b = Bitmap::new(512, 1); // same granule count, different shift
+        a.union_with(&b);
     }
 
     #[test]

@@ -27,6 +27,9 @@
 //!   correctness oracle
 //! - [`session`] — the public front door: the [`session::Hetm`] builder
 //!   and the [`session::Session`] facade over both engines
+//! - [`durability`] — round-boundary incremental checkpoints, the
+//!   external-txn write-ahead journal, crash-point fault injection, and
+//!   the replay-based `Session::recover` machinery (DESIGN.md §13)
 //! - [`config`] — dependency-free config system
 //! - [`util`] — RNG / Zipf / stats / property-test / bench harnesses
 //!
@@ -42,6 +45,7 @@ pub mod bus;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod durability;
 pub mod gpu;
 pub mod runtime;
 pub mod session;

@@ -17,6 +17,8 @@
 //!   --basic              use the basic (unoptimized) algorithm variant
 //!   --pjrt               force the PJRT backend from ./artifacts
 //!   --trace FILE         write a Perfetto-loadable virtual-time trace
+//!   --checkpoint-dir DIR write round-boundary checkpoints under DIR
+//!   --recover            resume `run` from the newest checkpoint in DIR
 //!
 //! Example:
 //!   shetm synth --set hetm.period_ms=80 --set cpu.guest=norec --rounds 100
@@ -48,6 +50,8 @@ struct Cli {
     threads: Option<usize>,
     workload: Option<String>,
     trace: Option<String>,
+    checkpoint_dir: Option<String>,
+    recover: bool,
 }
 
 fn parse_cli() -> Result<Cli> {
@@ -75,6 +79,8 @@ fn parse_cli() -> Result<Cli> {
     let mut threads = None;
     let mut workload = None;
     let mut trace = None;
+    let mut checkpoint_dir = None;
+    let mut recover = false;
     while let Some(a) = args.next() {
         match a.as_str() {
             "--config" => {
@@ -114,6 +120,10 @@ fn parse_cli() -> Result<Cli> {
             "--trace" => {
                 trace = Some(args.next().context("--trace needs an output file")?);
             }
+            "--checkpoint-dir" => {
+                checkpoint_dir = Some(args.next().context("--checkpoint-dir needs a path")?);
+            }
+            "--recover" => recover = true,
             "--basic" => basic = true,
             "--pjrt" => pjrt = true,
             other => bail!("unknown argument {other:?} (try `shetm help`)"),
@@ -129,6 +139,8 @@ fn parse_cli() -> Result<Cli> {
         threads,
         workload,
         trace,
+        checkpoint_dir,
+        recover,
     })
 }
 
@@ -171,6 +183,21 @@ fn system_config(cli: &Cli) -> Result<SystemConfig> {
             bail!("--threads must be at least 1");
         }
         cfg.cluster_threads = t;
+    }
+    if let Some(d) = &cli.checkpoint_dir {
+        cfg.checkpoint_dir = d.clone();
+    }
+    // CI-friendly fault injection: the crash plan can ride in on the
+    // environment so a sweep script does not have to rewrite configs.
+    if let Ok(p) = std::env::var("SHETM_CRASH_POINT") {
+        if !p.is_empty() {
+            cfg.crash_point = p;
+        }
+    }
+    if let Ok(r) = std::env::var("SHETM_CRASH_ROUND") {
+        if !r.is_empty() {
+            cfg.crash_round = r.parse().context("SHETM_CRASH_ROUND")?;
+        }
     }
     Ok(cfg)
 }
@@ -260,22 +287,44 @@ fn cmd_memcached(cli: &Cli) -> Result<()> {
 /// workload through its `Workload` implementation and verify its
 /// correctness oracle afterwards — the run FAILS if the invariant breaks.
 fn cmd_run(cli: &Cli) -> Result<()> {
-    let cfg = system_config(cli)?;
+    let mut cfg = system_config(cli)?;
     if cli.pjrt || !cfg.artifacts_dir.is_empty() {
         bail!("`shetm run` drives the native backend only (drop --pjrt)");
+    }
+    if cli.recover && cfg.checkpoint_dir.is_empty() {
+        bail!("--recover needs --checkpoint-dir (or durability.checkpoint_dir)");
+    }
+    if cli.recover {
+        // The recovery run finishes the job; re-arming the same crash
+        // plan would just kill it again at the next due checkpoint.
+        cfg.crash_point = String::new();
     }
     let name = cli
         .workload
         .clone()
         .unwrap_or_else(|| cfg.workload.clone());
     let label = format!("workload {name} on {} device(s)", cfg.n_gpus.max(1));
-    let mut session = Hetm::from_config(&cfg)
+    let builder = Hetm::from_config(&cfg)
         .variant(variant(cli))
         .workload_named(&name)
         .app_config(cli.raw.clone())
-        .trace(cli.trace.is_some())
-        .build()?;
-    session.run_rounds(cli.rounds)?;
+        .trace(cli.trace.is_some());
+    let mut session = if cli.recover {
+        let dir = cfg.checkpoint_dir.clone();
+        let session = builder.recover(&dir)?;
+        println!(
+            "recovered from {dir} at round {} (virtual t = {:.6}s)",
+            session.stats().rounds,
+            session.now()
+        );
+        session
+    } else {
+        builder.build()?
+    };
+    let done = session.stats().rounds as usize;
+    if done < cli.rounds {
+        session.run_rounds(cli.rounds - done)?;
+    }
     session.drain()?;
     report(cli, &label, &session)?;
     session
@@ -364,6 +413,23 @@ OPTIONS:
   --trace FILE      write a Perfetto-loadable virtual-time trace (JSON;
                     implies telemetry; deterministic — bit-identical
                     across --threads N; see docs/OBSERVABILITY.md)
+  --checkpoint-dir DIR
+                    write incremental round-boundary checkpoints + the
+                    external-txn journal under DIR (DESIGN.md §13);
+                    checkpoint I/O costs zero virtual time, so results
+                    stay bit-identical to a run without it
+  --recover         (run command) resume from the newest complete
+                    checkpoint in the checkpoint dir, replay the journal
+                    prefix, verify bit-exactly, then run the remaining
+                    rounds; crash injection is disabled on this run
+
+ENVIRONMENT:
+  SHETM_CRASH_POINT   arm deterministic fault injection at a checkpoint:
+                      mid-page-write|after-pages|mid-wal-append|after-wal|
+                      mid-manifest|corrupt-page-byte|corrupt-manifest-byte|
+                      after-checkpoint (overrides durability.crash_point)
+  SHETM_CRASH_ROUND   first round the armed crash may fire at (default 0)
+  SHETM_CRASH_KILL=1  crash via process exit(3) instead of an error
 
 KEYS (defaults): stmr.n_words=262144 stmr.bmp_shift=0 cpu.threads=8
   cpu.parallel=false (synth: run the cpu.threads workers on real OS
@@ -380,6 +446,8 @@ KEYS (defaults): stmr.n_words=262144 stmr.bmp_shift=0 cpu.threads=8
   cluster.threads=1
   telemetry.enabled=false (labeled metrics + latency histograms at every
   round barrier; zero-overhead when off)
+  durability.checkpoint_dir= (empty = off) durability.interval_rounds=1
+  durability.crash_point= durability.crash_round=0
   memcached.n_sets memcached.steal runtime.artifacts seed
   workload=synth|memcached|bank|kmeans|zipfkv plus per-app sections:
   bank.accounts bank.balance bank.max_transfer bank.update_frac

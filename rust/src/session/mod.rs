@@ -73,7 +73,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::apps::memcached::McConfig;
 use crate::apps::synth::{SynthGpu, SynthSpec};
@@ -82,9 +82,12 @@ use crate::cluster::{ClusterEngine, ClusterStats, ShardMap};
 use crate::config::{PolicyKind, Raw, SystemConfig};
 use crate::coordinator::round::{CpuDriver, GpuDriver, RoundEngine, Variant};
 use crate::coordinator::stats::{RoundStats, RunStats};
+use crate::durability::{
+    self, CrashPoint, DurabilityHook, ExternalJournal, FaultPlan, JournalRecord, RecordKind,
+};
 use crate::gpu::{Backend, GpuDevice};
 use crate::launch::{self, WorkloadClusterEngine, WorkloadEngine};
-use crate::stm::{Abort, GuestTm, SharedStmr, TxOps, TxnResult};
+use crate::stm::{Abort, GuestTm, SharedStmr, TxOps, TxnResult, WriteEntry};
 use crate::telemetry::{Collector, MetricsSnapshot, Telemetry};
 
 /// A misconfiguration caught by [`Hetm::build`].  Every knob-cross-product
@@ -161,6 +164,10 @@ pub enum BuildError {
     /// `clock_epoch_limit` applies to the shared commit clock; the
     /// parallel CPU driver owns per-worker clocks instead.
     EpochLimitUnsupported,
+    /// The durability layer could not be armed (unparsable
+    /// `durability.crash_point`, or the checkpoint directory/journal
+    /// could not be created).
+    Durability(String),
 }
 
 impl std::fmt::Display for BuildError {
@@ -228,6 +235,7 @@ impl std::fmt::Display for BuildError {
                 "clock_epoch_limit applies to the shared commit clock; \
                  cpu.parallel workers own per-worker clocks"
             ),
+            BuildError::Durability(msg) => write!(f, "durability setup failed: {msg}"),
         }
     }
 }
@@ -515,6 +523,42 @@ impl Hetm {
         self
     }
 
+    /// Enable durability (`durability.checkpoint_dir`, CLI
+    /// `--checkpoint-dir`): incremental checkpoints at the round barrier
+    /// plus a write-ahead journal of [`Session::txn`] injections, all
+    /// under `dir`.  Recover with [`Hetm::recover`].  Checkpoints cost
+    /// zero virtual time, so results stay bit-identical to a
+    /// durability-off run (DESIGN.md §13).
+    pub fn checkpoint_dir(mut self, dir: &str) -> Self {
+        self.cfg.checkpoint_dir = dir.to_string();
+        self
+    }
+
+    /// Checkpoint every `rounds` rounds (`durability.interval_rounds`;
+    /// default 1, 0 = journal-only).
+    pub fn checkpoint_interval(mut self, rounds: u64) -> Self {
+        self.cfg.checkpoint_interval_rounds = rounds;
+        self
+    }
+
+    /// Arm a deterministic fault: crash at `point` at the first
+    /// checkpoint whose round is `>= at_round` (the crash-injection test
+    /// harness; see [`CrashPoint`]).
+    pub fn crash_plan(mut self, point: CrashPoint, at_round: u64) -> Self {
+        self.cfg.crash_point = point.as_str().to_string();
+        self.cfg.crash_round = at_round;
+        self
+    }
+
+    /// Recover from the newest complete checkpoint under `dir` and return
+    /// a session resumed at that round — bit-identical to a run that
+    /// never crashed — with durability re-armed on the same directory.
+    /// With no usable checkpoint the session starts fresh at round 0.
+    /// Shorthand for [`Session::recover`].
+    pub fn recover(self, dir: &str) -> Result<Session> {
+        Session::recover(self, dir)
+    }
+
     /// Validate the whole knob cross-product and assemble the [`Session`].
     pub fn build(self) -> Result<Session, BuildError> {
         let Hetm {
@@ -772,14 +816,40 @@ impl Hetm {
             }
         }
 
-        Ok(Session {
+        let mut session = Session {
             inner,
             workload,
             tm: tm_handle,
             txn_stmr: stmr_handle,
             txn_buf: Vec::new(),
-        })
+            journal: None,
+        };
+        if !cfg.checkpoint_dir.is_empty() {
+            let plan =
+                crash_plan_from(&cfg).map_err(|e| BuildError::Durability(e.to_string()))?;
+            session
+                .arm_durability(
+                    &cfg.checkpoint_dir,
+                    cfg.checkpoint_interval_rounds,
+                    plan,
+                    None,
+                )
+                .map_err(|e| BuildError::Durability(e.to_string()))?;
+        }
+        Ok(session)
     }
+}
+
+/// Resolve the configured fault plan (`durability.crash_point` /
+/// `crash_round`); empty = none.
+fn crash_plan_from(cfg: &SystemConfig) -> Result<Option<FaultPlan>> {
+    if cfg.crash_point.is_empty() {
+        return Ok(None);
+    }
+    Ok(Some(FaultPlan {
+        point: CrashPoint::parse(&cfg.crash_point)?,
+        at_round: cfg.crash_round,
+    }))
 }
 
 /// The engine behind the facade (boxed: the engines are large).
@@ -802,6 +872,9 @@ pub struct Session {
     txn_stmr: Option<Arc<SharedStmr>>,
     /// Reused write-entry buffer for [`Session::txn`].
     txn_buf: Vec<crate::stm::WriteEntry>,
+    /// Write-ahead journal of external events, armed with durability
+    /// (`None` = durability off).
+    journal: Option<ExternalJournal>,
 }
 
 impl Session {
@@ -833,6 +906,19 @@ impl Session {
     /// validation window ship and apply; afterwards the CPU and device
     /// replicas agree everywhere.
     pub fn drain(&mut self) -> Result<()> {
+        // Write-ahead: the drain round may itself write a checkpoint, and
+        // a crash inside it must recover to a journal that still replays
+        // this drain at the right boundary.
+        let rounds = self.stats().rounds;
+        if let Some(j) = &mut self.journal {
+            j.append(&JournalRecord {
+                kind: RecordKind::Drain,
+                after_round: rounds,
+                commits: 0,
+                attempts: 0,
+                entries: Vec::new(),
+            })?;
+        }
         match &mut self.inner {
             Inner::Single(e) => e.drain(),
             Inner::Cluster(e) => e.drain(),
@@ -1009,13 +1095,221 @@ impl Session {
             .as_ref()
             .expect("txn_stmr is retained whenever tm is");
         self.txn_buf.clear();
+        let rounds = match &self.inner {
+            Inner::Single(e) => e.stats.rounds,
+            Inner::Cluster(e) => e.stats.rounds,
+        };
         let r = tm.execute_into(stmr, &mut body, &mut self.txn_buf);
         let attempts = 1 + u64::from(r.retries);
         match &mut self.inner {
             Inner::Single(e) => e.inject_external(&self.txn_buf, 1, attempts),
             Inner::Cluster(e) => e.inject_external(&self.txn_buf, 1, attempts),
         }
+        if let Some(j) = &mut self.journal {
+            j.append(&JournalRecord {
+                kind: RecordKind::Txn,
+                after_round: rounds,
+                commits: 1,
+                attempts,
+                entries: self.txn_buf.clone(),
+            })?;
+        }
         Ok(r)
+    }
+
+    /// Per-shard carried write-log prefix, as it will seed the next round
+    /// (one shard on the single-device engine).  Recovery compares this
+    /// against the checkpoint's WAL copy; tests use it to pin
+    /// bit-identity after a recover.
+    pub fn carried_entries(&self) -> Vec<Vec<WriteEntry>> {
+        match &self.inner {
+            Inner::Single(e) => vec![e.carried_entries().to_vec()],
+            Inner::Cluster(e) => (0..e.n_gpus())
+                .map(|s| e.carried_entries(s).to_vec())
+                .collect(),
+        }
+    }
+
+    /// Replay one journaled external transaction: re-execute its recorded
+    /// write-set through the guest TM (ticking the clock exactly as the
+    /// original did) and re-inject the recorded statistics.  Read-only
+    /// transactions left no entries and never ticked the clock, so for
+    /// them the stats injection alone is exact.
+    fn replay_external(&mut self, rec: &JournalRecord) -> Result<()> {
+        if rec.entries.is_empty() {
+            match &mut self.inner {
+                Inner::Single(e) => e.inject_external(&[], rec.commits, rec.attempts),
+                Inner::Cluster(e) => e.inject_external(&[], rec.commits, rec.attempts),
+            }
+            return Ok(());
+        }
+        let tm = self.tm.as_ref().ok_or_else(|| {
+            anyhow!("cannot replay an external transaction under cpu.parallel")
+        })?;
+        let stmr = self
+            .txn_stmr
+            .as_ref()
+            .expect("txn_stmr is retained whenever tm is");
+        self.txn_buf.clear();
+        let entries = &rec.entries;
+        let _ = tm.execute_into(
+            stmr,
+            &mut |tx: &mut dyn TxOps| {
+                for e in entries {
+                    tx.write(e.addr as usize, e.val)?;
+                }
+                Ok(())
+            },
+            &mut self.txn_buf,
+        );
+        // The replayed commit must regenerate the journaled write-set bit
+        // for bit — same addresses, values, AND timestamps (the clock
+        // history up to here is identical by induction).
+        if self.txn_buf != rec.entries {
+            bail!(
+                "recovery divergence: replayed external txn write-set \
+                 differs from the journal (after round {})",
+                rec.after_round
+            );
+        }
+        match &mut self.inner {
+            Inner::Single(e) => e.inject_external(&self.txn_buf, rec.commits, rec.attempts),
+            Inner::Cluster(e) => e.inject_external(&self.txn_buf, rec.commits, rec.attempts),
+        }
+        Ok(())
+    }
+
+    /// Install the durability hook + journal on this session's engine.
+    /// Shared by [`Hetm::build`] (fresh chain) and [`Session::recover`]
+    /// (resume an existing chain at `resume_from`).
+    fn arm_durability(
+        &mut self,
+        dir: &str,
+        interval_rounds: u64,
+        plan: Option<FaultPlan>,
+        resume_from: Option<u64>,
+    ) -> Result<()> {
+        let path = std::path::Path::new(dir);
+        let n_words = self.stmr().len();
+        let shift = match &self.inner {
+            Inner::Single(e) => e.device.rs_bmp().shift(),
+            Inner::Cluster(e) => e.devices[0].rs_bmp().shift(),
+        };
+        let mut hook = DurabilityHook::new(path, interval_rounds, n_words, shift, plan)?;
+        if let Some(r) = resume_from {
+            hook.resume_from(r);
+        }
+        match &mut self.inner {
+            Inner::Single(e) => e.dur = Some(Box::new(hook)),
+            Inner::Cluster(e) => e.dur = Some(Box::new(hook)),
+        }
+        self.journal = Some(ExternalJournal::open(path)?);
+        Ok(())
+    }
+
+    /// Recover a session from the newest complete checkpoint under `dir`.
+    ///
+    /// Engine drivers hold unserializable host state (RNG streams, rate
+    /// debt, oracle traces), but every run is deterministic in virtual
+    /// time — so recovery **replays**: it builds a fresh session from
+    /// `builder` (durability suppressed), re-runs rounds to the
+    /// checkpointed round with the journaled external transactions and
+    /// drains re-applied at their recorded boundaries, then verifies the
+    /// result bit-exactly against the checkpoint (STMR words, `RunStats`
+    /// digest, virtual clock, per-shard carried log) — any divergence is
+    /// an error, never a silent approximation.  The journal's lost tail
+    /// (events after the checkpoint) is truncated, the workload's
+    /// [`Workload::on_recovered`] hook runs, and durability is re-armed
+    /// to continue the same checkpoint chain.  With no usable checkpoint
+    /// the session starts fresh at round 0.
+    ///
+    /// `builder` must carry the same configuration as the crashed run —
+    /// a different config diverges and errors.  An armed crash plan is
+    /// preserved, but only fires at checkpoints *after* the recovered
+    /// round (earlier ones already happened).
+    pub fn recover(builder: Hetm, dir: &str) -> Result<Session> {
+        let path = std::path::Path::new(dir);
+        let mut b = builder;
+        let interval = b.cfg.checkpoint_interval_rounds;
+        let plan = crash_plan_from(&b.cfg)?;
+        // The replayed prefix must not re-checkpoint or re-journal: run
+        // it bare, arm durability after verification.
+        b.cfg.checkpoint_dir = String::new();
+        let mut s = b.build()?;
+        let Some(ck) = durability::load_latest(path)? else {
+            // Nothing durable survived the crash: restart from the
+            // initial state and drop the stale journal.
+            ExternalJournal::truncate_from(path, 0)?;
+            s.arm_durability(dir, interval, plan, None)?;
+            return Ok(s);
+        };
+        let records = ExternalJournal::load(path)?;
+        for rec in &records {
+            if rec.after_round >= ck.round {
+                // Lost tail: the event postdates the checkpoint.
+                break;
+            }
+            while s.stats().rounds < rec.after_round {
+                s.run_round()?;
+            }
+            match rec.kind {
+                RecordKind::Txn => s.replay_external(rec)?,
+                RecordKind::Drain => s.drain()?,
+            }
+        }
+        while s.stats().rounds < ck.round {
+            s.run_round()?;
+        }
+
+        // --- Bit-exact verification against the checkpoint ---------------
+        if s.stmr().len() != ck.n_words {
+            bail!(
+                "recovery divergence: STMR is {} words, checkpoint {} has {}",
+                s.stmr().len(),
+                ck.round,
+                ck.n_words
+            );
+        }
+        if s.stmr().snapshot() != ck.image {
+            bail!(
+                "recovery divergence: replayed STMR differs from checkpoint {}",
+                ck.round
+            );
+        }
+        let digest = durability::stats_digest(s.stats());
+        if digest != ck.stats_fnv {
+            bail!(
+                "recovery divergence: replayed stats digest {digest:016x} != \
+                 checkpoint {:016x}",
+                ck.stats_fnv
+            );
+        }
+        if s.now().to_bits() != ck.t.to_bits() {
+            bail!(
+                "recovery divergence: replayed clock {} != checkpoint {}",
+                s.now(),
+                ck.t
+            );
+        }
+        let carried = s.carried_entries();
+        if carried.len() != ck.carried.len() {
+            bail!(
+                "recovery divergence: {} shards replayed, checkpoint has {}",
+                carried.len(),
+                ck.carried.len()
+            );
+        }
+        for (i, (got, want)) in carried.iter().zip(&ck.carried).enumerate() {
+            if got != want {
+                bail!("recovery divergence: shard {i} carried log differs");
+            }
+        }
+
+        let all: Vec<WriteEntry> = ck.carried.iter().flatten().copied().collect();
+        s.workload.on_recovered(&all);
+        ExternalJournal::truncate_from(path, ck.round)?;
+        s.arm_durability(dir, interval, plan, Some(ck.round))?;
+        Ok(s)
     }
 }
 
@@ -1260,6 +1554,20 @@ mod tests {
         assert!(s.write_trace("/nonexistent/never-written.json").is_err());
         let snap = s.metrics_snapshot("off");
         assert!(snap.registry.is_none());
+    }
+
+    #[test]
+    fn bad_crash_point_is_a_typed_error() {
+        let mut c = cfg();
+        c.checkpoint_dir = std::env::temp_dir()
+            .join(format!("shetm-session-dur-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        c.crash_point = "explode".to_string();
+        assert!(matches!(
+            Hetm::from_config(&c).build().err(),
+            Some(BuildError::Durability(_))
+        ));
     }
 
     #[test]

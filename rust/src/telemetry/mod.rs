@@ -87,6 +87,11 @@ pub trait Recorder: Send {
     /// Record one externally injected transaction (`session.txn()`).
     fn record_txn(&mut self, entries: u64, attempts: u64, now: f64);
 
+    /// Record one written checkpoint (called at the round barrier when
+    /// durability is on).  Default: ignore — existing recorders keep
+    /// working unchanged.
+    fn record_checkpoint(&mut self, _sum: &crate::durability::CheckpointSummary) {}
+
     /// Downcast to the standard collector, if this recorder is one.
     fn as_collector(&self) -> Option<&Collector> {
         None
@@ -308,6 +313,21 @@ impl Recorder for Collector {
         }
     }
 
+    fn record_checkpoint(&mut self, sum: &crate::durability::CheckpointSummary) {
+        let r = &mut self.registry;
+        r.inc("hetm_checkpoints_total", 1);
+        r.inc("hetm_checkpoint_bytes_total", sum.bytes);
+        r.inc("hetm_checkpoint_extents_total", sum.extents);
+        r.inc("hetm_checkpoint_wal_entries_total", sum.wal_entries);
+        // Wall-clock write cost, for operators sizing
+        // `durability.interval_rounds`.  Real time, not virtual — it
+        // never enters trace events, so traces stay deterministic.
+        r.observe(
+            "hetm_checkpoint_write_seconds",
+            sum.write_micros as f64 * 1e-6,
+        );
+    }
+
     fn as_collector(&self) -> Option<&Collector> {
         Some(self)
     }
@@ -367,6 +387,11 @@ impl Telemetry {
     /// Forward one injected transaction.
     pub fn record_txn(&mut self, entries: u64, attempts: u64, now: f64) {
         self.rec.record_txn(entries, attempts, now);
+    }
+
+    /// Forward one written checkpoint.
+    pub fn record_checkpoint(&mut self, sum: &crate::durability::CheckpointSummary) {
+        self.rec.record_checkpoint(sum);
     }
 
     /// Access the standard collector, when active.

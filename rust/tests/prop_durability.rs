@@ -1,0 +1,280 @@
+//! Property tests for the durability layer's on-disk formats (DESIGN.md
+//! §13): checkpoint manifests, page extents, the carried-log WAL and the
+//! external-transaction journal.
+//!
+//! Three families, each over `util::prop::forall` (deterministic seeds,
+//! size-ramped cases, linear shrinking):
+//!
+//! * **Dirty selection ≡ full snapshot** — a [`DurabilityHook`] driven
+//!   over random write sequences at random intervals and bitmap
+//!   granularities must reconstruct, through its incremental extent
+//!   chain, exactly the STMR image a full snapshot would have captured
+//!   at the last checkpoint.
+//! * **Corruption is detected, never absorbed** — flip one byte (or
+//!   truncate at a random offset) in any checkpoint file and loading
+//!   must fall back to the previous complete checkpoint; restore the
+//!   byte and the newest loads again.
+//! * **Journal round-trips and tolerates torn tails** — random record
+//!   sequences survive encode/decode bit-exactly; truncating the file at
+//!   any byte offset yields exactly the longest intact record prefix.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use shetm::durability::{
+    journal_path, load_latest, DurabilityHook, ExternalJournal, JournalRecord, RecordKind,
+};
+use shetm::stm::{SharedStmr, WriteEntry};
+use shetm::util::prop::{forall, Cases};
+use shetm::util::rng::Rng;
+
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let n = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "shetm-prop-durability-{tag}-{}-{n}",
+        std::process::id()
+    ))
+}
+
+/// Random write entries against `stmr`, applied and returned.
+fn random_writes(rng: &mut Rng, stmr: &SharedStmr, max: u64) -> Vec<WriteEntry> {
+    let n = rng.below(max + 1);
+    let mut out = Vec::with_capacity(n as usize);
+    for i in 0..n {
+        let addr = rng.below(stmr.len() as u64) as u32;
+        let val = rng.next_u64() as i32;
+        stmr.store(addr as usize, val);
+        out.push(WriteEntry {
+            addr,
+            val,
+            ts: (i + 1) as i32,
+        });
+    }
+    out
+}
+
+#[test]
+fn dirty_selection_matches_full_snapshot_reference() {
+    forall(
+        Cases::new("dirty_selection_matches_full_snapshot", 48).max_size(48),
+        |rng, size| {
+            let dir = tmpdir("select");
+            let n_words = 64 << rng.below(3); // 64 | 128 | 256
+            let shift = rng.below(4) as u32; // page granularity 1..8 words
+            let interval = 1 + rng.below(3); // checkpoint every 1..3 rounds
+            let stmr = SharedStmr::new(n_words);
+            let mut hook =
+                DurabilityHook::new(&dir, interval, n_words, shift, None).unwrap();
+            let rounds = 1 + rng.below(9);
+            // Reference model: a full snapshot taken at each checkpoint.
+            let mut reference: Option<(u64, Vec<i32>, Vec<WriteEntry>)> = None;
+            for round in 1..=rounds {
+                let entries = random_writes(rng, &stmr, size as u64);
+                hook.mark_entries(&entries);
+                let carried: [&[WriteEntry]; 1] = [&entries];
+                let sum = hook
+                    .maybe_checkpoint(round, round as f64, 0, &carried, &stmr, round * 31)
+                    .unwrap();
+                if sum.is_some() {
+                    reference = Some((round, stmr.snapshot(), entries.clone()));
+                }
+            }
+            let loaded = load_latest(&dir).unwrap();
+            let _ = std::fs::remove_dir_all(&dir);
+            match (reference, loaded) {
+                (None, None) => Ok(()),
+                (None, Some(ck)) => Err(format!("phantom checkpoint at round {}", ck.round)),
+                (Some((r, _, _)), None) => Err(format!("checkpoint at round {r} unloadable")),
+                (Some((r, image, carried)), Some(ck)) => {
+                    if ck.round != r {
+                        return Err(format!("round {} loaded, {r} written", ck.round));
+                    }
+                    if ck.image != image {
+                        return Err(format!(
+                            "incremental chain diverged from full snapshot at round {r} \
+                             (n_words={n_words} shift={shift} interval={interval})"
+                        ));
+                    }
+                    if ck.carried.len() != 1 || ck.carried[0] != carried {
+                        return Err(format!("carried WAL diverged at round {r}"));
+                    }
+                    if ck.stats_fnv != r * 31 {
+                        return Err("stats digest not preserved".to_string());
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+/// Write two checkpoints (rounds 1 and 2, distinct images), then attack
+/// the newest; loading must fall back to round 1, and restoring the
+/// original bytes must bring round 2 back.
+#[test]
+fn any_single_byte_corruption_falls_back_to_previous_checkpoint() {
+    forall(
+        Cases::new("one_byte_corruption_falls_back", 64).max_size(64),
+        |rng, size| {
+            let dir = tmpdir("corrupt");
+            let n_words = 128;
+            let stmr = SharedStmr::new(n_words);
+            let mut hook = DurabilityHook::new(&dir, 1, n_words, 0, None).unwrap();
+            let mut image1 = Vec::new();
+            for round in 1..=2u64 {
+                let entries = random_writes(rng, &stmr, size as u64 + 1);
+                hook.mark_entries(&entries);
+                let carried: [&[WriteEntry]; 1] = [&entries];
+                hook.maybe_checkpoint(round, round as f64, 0, &carried, &stmr, round)
+                    .unwrap()
+                    .expect("interval 1: always due");
+                if round == 1 {
+                    image1 = stmr.snapshot();
+                }
+            }
+            let image2 = stmr.snapshot();
+            // Pick one of the newest checkpoint's three files at random.
+            let victim = dir.join(format!(
+                "ckpt-{:08}.{}",
+                2,
+                ["pages", "wal", "manifest"][rng.below(3) as usize]
+            ));
+            let pristine = std::fs::read(&victim).unwrap();
+            let attacked = if rng.below(2) == 0 && !pristine.is_empty() {
+                // Flip one byte in place.
+                let mut b = pristine.clone();
+                let i = rng.below(b.len() as u64) as usize;
+                b[i] ^= 0xFF;
+                b
+            } else {
+                // Truncate at a random offset (possibly to zero).
+                pristine[..rng.below(pristine.len() as u64) as usize].to_vec()
+            };
+            std::fs::write(&victim, &attacked).unwrap();
+            let fell_back = load_latest(&dir).unwrap();
+            std::fs::write(&victim, &pristine).unwrap();
+            let restored = load_latest(&dir).unwrap();
+            let _ = std::fs::remove_dir_all(&dir);
+
+            let fb = fell_back.ok_or("corruption rejected BOTH checkpoints")?;
+            if fb.round != 1 || fb.image != image1 {
+                return Err(format!(
+                    "fallback loaded round {} (wanted pristine round 1)",
+                    fb.round
+                ));
+            }
+            let re = restored.ok_or("restored checkpoint failed to load")?;
+            if re.round != 2 || re.image != image2 {
+                return Err("restored newest checkpoint diverged".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+fn random_record(rng: &mut Rng, size: usize) -> JournalRecord {
+    let kind = if rng.below(4) == 0 {
+        RecordKind::Drain
+    } else {
+        RecordKind::Txn
+    };
+    let n = if kind == RecordKind::Drain {
+        0
+    } else {
+        rng.below(size as u64 + 1)
+    };
+    JournalRecord {
+        kind,
+        after_round: rng.below(32),
+        commits: rng.below(8),
+        attempts: rng.below(8),
+        entries: (0..n)
+            .map(|i| WriteEntry {
+                addr: rng.below(1 << 16) as u32,
+                val: rng.next_u64() as i32,
+                ts: (i + 1) as i32,
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn journal_round_trips_and_truncation_keeps_longest_intact_prefix() {
+    forall(
+        Cases::new("journal_torn_tail", 64).max_size(16),
+        |rng, size| {
+            let dir = tmpdir("journal");
+            let records: Vec<JournalRecord> = (0..1 + rng.below(8))
+                .map(|_| random_record(rng, size))
+                .collect();
+            {
+                let mut j = ExternalJournal::open(&dir).unwrap();
+                for r in &records {
+                    j.append(r).unwrap();
+                }
+            }
+            if ExternalJournal::load(&dir).unwrap() != records {
+                let _ = std::fs::remove_dir_all(&dir);
+                return Err("journal did not round-trip".to_string());
+            }
+            // Tear the file at a random byte offset; the loadable prefix
+            // is exactly the records that fit inside it (encoded record
+            // length: 37-byte header + 12 bytes per entry).
+            let bytes = std::fs::read(journal_path(&dir)).unwrap();
+            let cut = rng.below(bytes.len() as u64 + 1) as usize;
+            std::fs::write(journal_path(&dir), &bytes[..cut]).unwrap();
+            let mut expect = Vec::new();
+            let mut off = 0usize;
+            for r in &records {
+                off += 37 + 12 * r.entries.len();
+                if off > cut {
+                    break;
+                }
+                expect.push(r.clone());
+            }
+            let got = ExternalJournal::load(&dir).unwrap();
+            let _ = std::fs::remove_dir_all(&dir);
+            if got != expect {
+                return Err(format!(
+                    "torn at byte {cut}: loaded {} records, expected {}",
+                    got.len(),
+                    expect.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn truncate_from_drops_exactly_the_lost_tail() {
+    forall(Cases::new("journal_horizon", 48).max_size(8), |rng, size| {
+        let dir = tmpdir("horizon");
+        let records: Vec<JournalRecord> = (0..1 + rng.below(10))
+            .map(|_| random_record(rng, size))
+            .collect();
+        {
+            let mut j = ExternalJournal::open(&dir).unwrap();
+            for r in &records {
+                j.append(r).unwrap();
+            }
+        }
+        let horizon = rng.below(33);
+        let kept = ExternalJournal::truncate_from(&dir, horizon).unwrap();
+        let reloaded = ExternalJournal::load(&dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        let expect: Vec<JournalRecord> = records
+            .iter()
+            .filter(|r| r.after_round < horizon)
+            .cloned()
+            .collect();
+        if kept != expect {
+            return Err(format!("horizon {horizon}: wrong records returned"));
+        }
+        if reloaded != expect {
+            return Err(format!("horizon {horizon}: wrong records on disk"));
+        }
+        Ok(())
+    });
+}

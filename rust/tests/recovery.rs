@@ -1,0 +1,370 @@
+//! Crash-injection golden suite for the durability pipeline (DESIGN.md
+//! §13).
+//!
+//! The contract under test: a run that checkpoints, crashes at an
+//! arbitrary fault point, and recovers with [`Hetm::recover`] must end
+//! **bit-identical** to a run that was never interrupted — the full
+//! `RunStats` debug string, the per-round commit/abort decisions, the
+//! final CPU STMR and every device replica.  Not "close", not
+//! "equivalent modulo counters": identical.
+//!
+//! The driver injects external transactions ([`Session::txn`]) at fixed
+//! round boundaries so the write-ahead journal is always load-bearing:
+//! recovery must replay the journaled prefix and the driver must redo
+//! the lost tail, exactly once each.  Every [`CrashPoint`] is exercised
+//! on the synthetic workload for both engines (`n_gpus ∈ {1, 4}`) and
+//! two policies; the oracle-backed workloads (bank, zipfkv) sweep all
+//! three policies over the two highest-value points — a torn WAL
+//! (forces fallback to the previous complete checkpoint) and a crash
+//! just after a complete checkpoint (forces recovery at the latest
+//! round).  `check_invariants` must pass after every recovery.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use shetm::config::{PolicyKind, Raw, SystemConfig};
+use shetm::durability::{is_simulated_crash, CrashPoint};
+use shetm::session::{Hetm, Session};
+
+const ROUNDS: usize = 6;
+const INTERVAL: u64 = 2; // checkpoints at rounds 2, 4, 6
+const CRASH_ROUND: u64 = 4; // round 2's checkpoint completes, 4 crashes
+
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let n = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "shetm-recovery-{tag}-{}-{n}",
+        std::process::id()
+    ))
+}
+
+fn cfg(policy: PolicyKind, n_gpus: usize) -> SystemConfig {
+    let mut raw = Raw::new();
+    raw.set("cpu.txn_ns=2000").unwrap();
+    raw.set("gpu.txn_ns=230").unwrap();
+    raw.set("hetm.period_ms=2").unwrap();
+    raw.set("cluster.shard_bits=6").unwrap();
+    raw.set("seed=77").unwrap();
+    let mut c = SystemConfig::from_raw(&raw).unwrap();
+    c.n_words = 1 << 14;
+    c.policy = policy;
+    c.n_gpus = n_gpus;
+    c
+}
+
+/// Small app shapes (each app reads only its own section).
+fn app_raw() -> Raw {
+    Raw::parse(
+        "[bank]\naccounts = 8192\ncross_prob = 0.002\n\
+         [zipfkv]\nkeys = 4096\nupdate_frac = 0.5\n",
+    )
+    .unwrap()
+}
+
+fn builder(name: &str, c: &SystemConfig) -> Hetm {
+    Hetm::from_config(c).workload_named(name).app_config(app_raw())
+}
+
+/// One run's full observable signature.
+#[derive(PartialEq)]
+struct Sig {
+    stats: String,
+    decisions: Vec<bool>,
+    cpu_stmr: Vec<i32>,
+    device_stmrs: Vec<Vec<i32>>,
+}
+
+fn sig_of(s: &Session) -> Sig {
+    Sig {
+        stats: format!("{:?}", s.stats()),
+        decisions: s.round_log().iter().map(|r| r.committed).collect(),
+        cpu_stmr: s.stmr().snapshot(),
+        device_stmrs: (0..s.n_gpus()).map(|d| s.device_stmr(d).to_vec()).collect(),
+    }
+}
+
+fn assert_sig_eq(label: &str, a: &Sig, b: &Sig) {
+    assert_eq!(a.stats, b.stats, "{label}: RunStats diverged");
+    assert_eq!(a.decisions, b.decisions, "{label}: round decisions diverged");
+    assert_eq!(a.cpu_stmr, b.cpu_stmr, "{label}: CPU STMR diverged");
+    assert_eq!(
+        a.device_stmrs, b.device_stmrs,
+        "{label}: device replicas diverged"
+    );
+}
+
+/// The driver's external-transaction schedule: a keep-value write after
+/// rounds 1 and 3 (exercises write-set journaling and replay) and a
+/// read-only transaction after round 2 (exercises the stats-only record
+/// shape).  Keyed by absolute round number so a resumed driver redoes
+/// exactly the boundaries the crash lost.
+fn inject(s: &mut Session, r: usize) {
+    match r {
+        1 | 3 => {
+            s.txn(|tx| {
+                let v = tx.read(0)?;
+                tx.write(0, v)
+            })
+            .unwrap();
+        }
+        2 => {
+            s.txn(|tx| {
+                tx.read(0)?;
+                Ok(())
+            })
+            .unwrap();
+        }
+        _ => {}
+    }
+}
+
+/// Run rounds `from+1 ..= to` one at a time with the injection schedule.
+/// A resumed driver stands at the `from` boundary, so it first redoes
+/// that boundary's transaction (the crash lost it: checkpoints happen
+/// inside the round, before the boundary).
+fn drive(s: &mut Session, from: usize, to: usize) -> anyhow::Result<()> {
+    if from > 0 {
+        inject(s, from);
+    }
+    for r in from + 1..=to {
+        s.run_rounds(1)?;
+        inject(s, r);
+    }
+    Ok(())
+}
+
+/// The uninterrupted reference run (no durability at all).
+fn golden_sig(name: &str, c: &SystemConfig) -> Sig {
+    let mut s = builder(name, c).build().unwrap();
+    drive(&mut s, 0, ROUNDS).unwrap();
+    s.drain().unwrap();
+    s.check_invariants().unwrap();
+    sig_of(&s)
+}
+
+/// Crash at `point` during round `CRASH_ROUND`'s checkpoint, recover,
+/// finish the run, and compare bit-exactly against the golden run.
+fn crash_recover_case(name: &str, c: &SystemConfig, point: CrashPoint, golden: &Sig) {
+    let label = format!(
+        "{name}/{:?}/n_gpus={}/{}",
+        c.policy,
+        c.n_gpus,
+        point.as_str()
+    );
+    let dir = tmpdir(&label.replace('/', "-"));
+    let dir_s = dir.to_string_lossy().into_owned();
+
+    // The doomed run: checkpoint every INTERVAL rounds, crash armed.
+    let mut cc = c.clone();
+    cc.checkpoint_dir = dir_s.clone();
+    cc.checkpoint_interval_rounds = INTERVAL;
+    cc.crash_point = point.as_str().to_string();
+    cc.crash_round = CRASH_ROUND;
+    let mut doomed = builder(name, &cc).build().unwrap();
+    let err = drive(&mut doomed, 0, ROUNDS).expect_err(&format!("{label}: crash never fired"));
+    assert!(
+        is_simulated_crash(&err),
+        "{label}: expected a simulated crash, got: {err:#}"
+    );
+    drop(doomed);
+
+    // Recover (crash disarmed) and finish the job.
+    let mut rc = cc.clone();
+    rc.crash_point = String::new();
+    let mut s = builder(name, &rc)
+        .recover(&dir_s)
+        .unwrap_or_else(|e| panic!("{label}: recovery failed: {e:#}"));
+    let resumed = s.stats().rounds as usize;
+    assert!(
+        resumed == 2 || resumed == 4,
+        "{label}: recovered at unexpected round {resumed}"
+    );
+    if point.tears_checkpoint() {
+        assert_eq!(resumed, 2, "{label}: torn checkpoint must fall back");
+    } else {
+        assert_eq!(resumed, 4, "{label}: complete checkpoint must win");
+    }
+    drive(&mut s, resumed, ROUNDS).unwrap();
+    s.drain().unwrap();
+    assert_sig_eq(&label, golden, &sig_of(&s));
+    s.check_invariants()
+        .unwrap_or_else(|e| panic!("{label}: oracle failed after recovery: {e:#}"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Every crash point, both engines, on the synthetic workload.
+#[test]
+fn synth_survives_every_crash_point() {
+    for policy in [PolicyKind::FavorCpu, PolicyKind::FavorGpu] {
+        for n_gpus in [1usize, 4] {
+            let c = cfg(policy, n_gpus);
+            let golden = golden_sig("synth", &c);
+            for point in CrashPoint::ALL {
+                crash_recover_case("synth", &c, point, &golden);
+            }
+        }
+    }
+}
+
+/// Oracle-backed workloads over all policies at the two highest-value
+/// points: a torn WAL (fallback path) and a crash right after a complete
+/// checkpoint (latest-round path).
+#[test]
+fn bank_survives_crashes_under_every_policy() {
+    for policy in [
+        PolicyKind::FavorCpu,
+        PolicyKind::FavorGpu,
+        PolicyKind::CpuWithStarvationGuard,
+    ] {
+        for n_gpus in [1usize, 4] {
+            let c = cfg(policy, n_gpus);
+            let golden = golden_sig("bank", &c);
+            for point in [CrashPoint::MidWalAppend, CrashPoint::AfterCheckpoint] {
+                crash_recover_case("bank", &c, point, &golden);
+            }
+        }
+    }
+}
+
+/// Regression for the round-buffered zipfkv version oracle: recovery
+/// rebuilds its state from the recovered carried log instead of
+/// panicking on the crash gap.  `check_invariants` inside
+/// `crash_recover_case` is the assertion.
+#[test]
+fn zipfkv_oracle_survives_recovery() {
+    for policy in [
+        PolicyKind::FavorCpu,
+        PolicyKind::FavorGpu,
+        PolicyKind::CpuWithStarvationGuard,
+    ] {
+        for n_gpus in [1usize, 4] {
+            let c = cfg(policy, n_gpus);
+            let golden = golden_sig("zipfkv", &c);
+            for point in [CrashPoint::MidWalAppend, CrashPoint::AfterCheckpoint] {
+                crash_recover_case("zipfkv", &c, point, &golden);
+            }
+        }
+    }
+}
+
+/// Checkpoint I/O costs zero virtual time and touches no statistics:
+/// durability on ≡ durability off, bit for bit, and the checkpoint files
+/// actually appear.
+#[test]
+fn durability_is_invisible_to_the_simulation() {
+    for n_gpus in [1usize, 4] {
+        let c = cfg(PolicyKind::FavorCpu, n_gpus);
+        let golden = golden_sig("bank", &c);
+        let dir = tmpdir(&format!("invisible-{n_gpus}"));
+        let mut cc = c.clone();
+        cc.checkpoint_dir = dir.to_string_lossy().into_owned();
+        cc.checkpoint_interval_rounds = INTERVAL;
+        let mut s = builder("bank", &cc).build().unwrap();
+        drive(&mut s, 0, ROUNDS).unwrap();
+        s.drain().unwrap();
+        assert_sig_eq(&format!("durability-on n_gpus={n_gpus}"), &golden, &sig_of(&s));
+        let manifests = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref()
+                    .unwrap()
+                    .file_name()
+                    .to_string_lossy()
+                    .ends_with(".manifest")
+            })
+            .count();
+        assert!(manifests >= 3, "expected checkpoints at rounds 2, 4, 6");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A crash before ANY checkpoint completed: recovery restarts from the
+/// initial state, drops the stale journal, and the rerun still matches
+/// the golden run.
+#[test]
+fn crash_before_first_checkpoint_restarts_fresh() {
+    let c = cfg(PolicyKind::FavorCpu, 1);
+    let golden = golden_sig("bank", &c);
+    let dir = tmpdir("fresh");
+    let dir_s = dir.to_string_lossy().into_owned();
+    let mut cc = c.clone();
+    cc.checkpoint_dir = dir_s.clone();
+    cc.checkpoint_interval_rounds = INTERVAL;
+    cc.crash_point = CrashPoint::MidPageWrite.as_str().to_string();
+    cc.crash_round = 0; // fires at the FIRST checkpoint (round 2)
+    let mut doomed = builder("bank", &cc).build().unwrap();
+    let err = drive(&mut doomed, 0, ROUNDS).expect_err("crash never fired");
+    assert!(is_simulated_crash(&err));
+    drop(doomed);
+
+    let mut rc = cc.clone();
+    rc.crash_point = String::new();
+    let mut s = builder("bank", &rc).recover(&dir_s).unwrap();
+    assert_eq!(s.stats().rounds, 0, "nothing durable: must restart fresh");
+    drive(&mut s, 0, ROUNDS).unwrap();
+    s.drain().unwrap();
+    assert_sig_eq("fresh-restart", &golden, &sig_of(&s));
+    s.check_invariants().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Crash, recover, then crash AGAIN at a later checkpoint and recover
+/// once more — the checkpoint chain keeps extending across incarnations.
+#[test]
+fn double_crash_double_recovery() {
+    let c = cfg(PolicyKind::FavorGpu, 4);
+    let golden = golden_sig("bank", &c);
+    let dir = tmpdir("double");
+    let dir_s = dir.to_string_lossy().into_owned();
+    let mut cc = c.clone();
+    cc.checkpoint_dir = dir_s.clone();
+    cc.checkpoint_interval_rounds = INTERVAL;
+    cc.crash_point = CrashPoint::AfterWal.as_str().to_string();
+    cc.crash_round = 2;
+    let mut doomed = builder("bank", &cc).build().unwrap();
+    let err = drive(&mut doomed, 0, ROUNDS).expect_err("first crash never fired");
+    assert!(is_simulated_crash(&err));
+    drop(doomed);
+
+    // Second incarnation: recovers (torn round-2 → fresh), crashes at 4.
+    let mut cc2 = cc.clone();
+    cc2.crash_point = CrashPoint::AfterCheckpoint.as_str().to_string();
+    cc2.crash_round = 4;
+    let mut doomed2 = builder("bank", &cc2).recover(&dir_s).unwrap();
+    let from = doomed2.stats().rounds as usize;
+    assert_eq!(from, 0, "manifest never committed: nothing durable");
+    let err = drive(&mut doomed2, from, ROUNDS).expect_err("second crash never fired");
+    assert!(is_simulated_crash(&err));
+    drop(doomed2);
+
+    let mut rc = cc.clone();
+    rc.crash_point = String::new();
+    let mut s = builder("bank", &rc).recover(&dir_s).unwrap();
+    assert_eq!(s.stats().rounds, 4, "round-4 checkpoint completed");
+    drive(&mut s, 4, ROUNDS).unwrap();
+    s.drain().unwrap();
+    assert_sig_eq("double-crash", &golden, &sig_of(&s));
+    s.check_invariants().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Checkpoint work is visible in telemetry (counters + duration
+/// histogram) without perturbing the deterministic metrics.
+#[test]
+fn checkpoints_are_counted_in_telemetry() {
+    let dir = tmpdir("telemetry");
+    let mut c = cfg(PolicyKind::FavorCpu, 1);
+    c.checkpoint_dir = dir.to_string_lossy().into_owned();
+    c.checkpoint_interval_rounds = INTERVAL;
+    let mut s = builder("bank", &c).telemetry(true).build().unwrap();
+    drive(&mut s, 0, ROUNDS).unwrap();
+    s.drain().unwrap();
+    let reg = s.collector().expect("telemetry on").registry();
+    assert!(
+        reg.counter("hetm_checkpoints_total") >= 3,
+        "checkpoints at rounds 2, 4, 6"
+    );
+    assert!(reg.counter("hetm_checkpoint_bytes_total") > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,242 @@
+//! Elastic shard layout under a skewed zipf-kv CPU hotspot (DESIGN.md
+//! §14): static stripe vs cost-model initial layout vs the online
+//! round-barrier rebalancer.
+//!
+//! The workload is the pathological case for any static layout: the CPU
+//! hot pool strides exactly one stripe period (`n_gpus` ownership blocks'
+//! worth of keys), so EVERY hot key lives on blocks owned by the same
+//! device and ~90% of the shipped log concentrates there.  A
+//! cost-model layout reshapes block *counts*, not block *identities*, so
+//! it cannot help either — only the online rebalancer, which watches
+//! per-block heat and migrates the hot blocks at the round barrier, can
+//! spread the load.  The `drift` flavor additionally walks the hotspot
+//! one block per round, forcing the rebalancer to keep chasing it.
+//!
+//! Every arm is oracle-checked (`check_invariants`), and the rebalancer
+//! arm is run at `cluster.threads ∈ {1, 4}` and asserted bit-identical —
+//! elasticity must not cost determinism.  The headline gate (enforced by
+//! scripts/check_perf.py over `BENCH_rebalance.json`): on the stationary
+//! hotspot the rebalancer's cumulative max/mean shipped-entry imbalance
+//! is at least 2x lower than the static stripe's.  (On the drifting
+//! flavor the *cumulative* gauge self-balances even statically — the hot
+//! device rotates — so the gate applies to the stationary point only;
+//! the drifting rows are reported for the migration-tracking evidence.)
+//!
+//! `SHETM_BENCH_FAST=1` shortens the simulated horizon.
+
+mod common;
+
+use std::time::Instant;
+
+use shetm::config::Raw;
+use shetm::session::Hetm;
+use shetm::telemetry::json::Obj;
+use shetm::telemetry::write_bench_json;
+use shetm::util::bench::Table;
+
+const N_GPUS: usize = 4;
+/// 2 words per key: the STMR spans `2 * KEYS = 32768` words.
+const KEYS: usize = 1 << 14;
+/// 128-word ownership blocks = 64 keys per block, 256 blocks, 64/device.
+const SHARD_BITS: u32 = 7;
+/// One stripe period in keys (`N_GPUS` blocks): hot keys spaced by this
+/// all alias onto ONE device of the striped layout.
+const STRIDE: usize = N_GPUS * (1 << (SHARD_BITS - 1));
+/// One ownership block's worth of keys (the drifting flavor's step).
+const DRIFT_BLOCK: usize = 1 << (SHARD_BITS - 1);
+
+#[derive(Clone, Copy, PartialEq)]
+enum Arm {
+    /// Striped layout, rebalancer off — the pre-elastic baseline.
+    Static,
+    /// Load-proportional initial layout from `cluster.dev_speed`,
+    /// rebalancer off: the layout machinery without the online loop.
+    CostModel,
+    /// Striped initial layout + online round-barrier rebalancer.
+    Rebalance,
+}
+
+impl Arm {
+    fn name(self) -> &'static str {
+        match self {
+            Arm::Static => "static",
+            Arm::CostModel => "costmodel",
+            Arm::Rebalance => "rebalance",
+        }
+    }
+}
+
+struct Point {
+    arm: Arm,
+    drift: usize,
+    threads: usize,
+    wall_s: f64,
+    throughput: f64,
+    abort_rate: f64,
+    imbalance: f64,
+    migrations: u64,
+    granules_moved: u64,
+    migrated_kib: f64,
+    layout_epoch: u64,
+    /// Full-precision RunStats rendering (cross-thread-count identity).
+    stats_sig: String,
+}
+
+fn app_raw(drift: usize) -> Raw {
+    Raw::parse(&format!(
+        "[zipfkv]\nkeys = {KEYS}\nupdate_frac = 0.5\ntheta = 0.99\n\
+         cpu_hot_prob = 0.9\nhot_keys = 16\nhot_stride = {STRIDE}\n\
+         drift = {drift}\n"
+    ))
+    .expect("zipfkv app raw")
+}
+
+fn run(arm: Arm, drift: usize, threads: usize, sim_s: f64) -> Point {
+    let mut cfg = common::base_config();
+    cfg.period_s = 0.004;
+    cfg.n_gpus = N_GPUS;
+    cfg.shard_bits = SHARD_BITS;
+    cfg.cluster_threads = threads;
+    match arm {
+        Arm::Static => {}
+        Arm::CostModel => cfg.dev_speed = vec![2.0, 1.0, 1.0, 1.0],
+        Arm::Rebalance => {
+            cfg.rebalance = true;
+            cfg.rebalance_interval = 1;
+        }
+    }
+    let mut s = Hetm::from_config(&cfg)
+        .workload_named("zipfkv")
+        .app_config(app_raw(drift))
+        .build()
+        .expect("session");
+    let t0 = Instant::now();
+    s.run_for(sim_s).expect("cluster run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    s.check_invariants().expect("zipfkv oracle after the run");
+    let layout_epoch = s.layout_desc().map_or(0, |d| d.epoch);
+    let st = s.stats();
+    let c = s.cluster().expect("cluster stats");
+    Point {
+        arm,
+        drift,
+        threads,
+        wall_s,
+        throughput: st.throughput(),
+        abort_rate: st.round_abort_rate(),
+        imbalance: c.shipped_imbalance(),
+        migrations: c.migrations,
+        granules_moved: c.granules_moved,
+        migrated_kib: c.migrated_bytes as f64 / 1024.0,
+        layout_epoch,
+        stats_sig: format!("{st:?}"),
+    }
+}
+
+fn json_point(p: &Point) -> String {
+    Obj::new()
+        .str("arm", p.arm.name())
+        .u64("drift_keys", p.drift as u64)
+        .u64("threads", p.threads as u64)
+        .f64("wall_s", p.wall_s, 6)
+        .f64("virtual_tx_per_s", p.throughput, 3)
+        .f64("round_abort_rate", p.abort_rate, 6)
+        .f64("shard_imbalance", p.imbalance, 6)
+        .u64("migrations", p.migrations)
+        .u64("granules_moved", p.granules_moved)
+        .f64("migrated_kib", p.migrated_kib, 3)
+        .u64("layout_epoch", p.layout_epoch)
+        .finish()
+}
+
+fn main() {
+    let sim_s = common::sim_time(0.2);
+    let mut json: Vec<String> = Vec::new();
+
+    let table = Table::new(
+        "bench_rebalance: zipf-kv stripe-aliased CPU hotspot, 4 devices",
+        &[
+            "drift",
+            "arm",
+            "tx_per_s",
+            "abort_rate",
+            "imbalance",
+            "migrations",
+            "blocks",
+            "moved_KiB",
+        ],
+    );
+
+    let mut stationary: Vec<Point> = Vec::new();
+    for drift in [0usize, DRIFT_BLOCK] {
+        for arm in [Arm::Static, Arm::CostModel, Arm::Rebalance] {
+            let p = run(arm, drift, 1, sim_s);
+            // The arm column is categorical; encode it by index so the
+            // all-f64 table stays usable (0 static / 1 costmodel / 2
+            // rebalance), with the real name in the JSON rows.
+            let arm_ix = match arm {
+                Arm::Static => 0.0,
+                Arm::CostModel => 1.0,
+                Arm::Rebalance => 2.0,
+            };
+            table.row(&[
+                drift as f64,
+                arm_ix,
+                p.throughput,
+                p.abort_rate,
+                p.imbalance,
+                p.migrations as f64,
+                p.granules_moved as f64,
+                p.migrated_kib,
+            ]);
+            if arm == Arm::Rebalance {
+                // Elasticity must not cost determinism: the threaded run
+                // is bit-identical to the sequential one.
+                let thr = run(arm, drift, N_GPUS, sim_s);
+                assert_eq!(
+                    p.stats_sig, thr.stats_sig,
+                    "rebalancer run diverged across cluster.threads \
+                     (drift={drift})"
+                );
+                json.push(json_point(&thr));
+            } else {
+                // Only the rebalancer may move blocks.
+                assert_eq!(p.migrations, 0, "{} arm migrated", p.arm.name());
+                assert_eq!(p.layout_epoch, 0, "{} arm bumped the epoch", p.arm.name());
+            }
+            json.push(json_point(&p));
+            if drift == 0 {
+                stationary.push(p);
+            }
+        }
+    }
+
+    // Headline gate on the stationary hotspot: the rebalancer must at
+    // least halve the static stripe's cumulative shipped imbalance, and
+    // it must have actually migrated something to earn that.
+    let st = &stationary[0];
+    let rb = &stationary[2];
+    assert!(
+        rb.migrations >= 1,
+        "stationary hotspot never triggered a migration"
+    );
+    assert!(
+        rb.imbalance * 2.0 <= st.imbalance,
+        "rebalancer imbalance {:.3} is not >=2x below static {:.3}",
+        rb.imbalance,
+        st.imbalance
+    );
+    println!(
+        "\nstationary hotspot: static imbalance {:.3} -> rebalanced {:.3} \
+         ({} migrations, {} blocks)",
+        st.imbalance, rb.imbalance, rb.migrations, rb.granules_moved
+    );
+
+    let n_points = json.len();
+    let extras = [("sim_s", format!("{sim_s}"))];
+    match write_bench_json("BENCH_rebalance.json", "bench_rebalance", common::fast(), &extras, json)
+    {
+        Ok(()) => println!("wrote BENCH_rebalance.json ({n_points} points)"),
+        Err(e) => eprintln!("could not write BENCH_rebalance.json: {e}"),
+    }
+}

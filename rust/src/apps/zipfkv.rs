@@ -56,6 +56,21 @@ pub struct ZipfKvConfig {
     /// Probability a GPU update targets a hot key regardless of its owner
     /// shard (cross-shard write traffic; cluster only).
     pub hot_prob: f64,
+    /// Probability a CPU update targets the CPU-side hot pool instead of
+    /// the zipf draw (`0.0` = off, the default — the RNG stream is then
+    /// untouched, preserving bit-identity with pre-knob runs).  The pool
+    /// concentrates CPU write traffic — and with it the shipped-entry
+    /// load the elastic rebalancer watches — onto few ownership blocks.
+    pub cpu_hot_prob: f64,
+    /// Key step between CPU hot-pool members (`0` = dense pool).  Setting
+    /// it to `n_shards` blocks' worth of keys aliases the whole pool onto
+    /// ONE device of a striped layout — the worst case the rebalancer
+    /// exists to fix, since a migrated layout can spread those same
+    /// blocks across devices.
+    pub hot_stride: usize,
+    /// Keys the CPU hot-pool base advances per synchronization round
+    /// (`0` = stationary): the drifting hotspot of the rebalance bench.
+    pub drift: usize,
 }
 
 impl ZipfKvConfig {
@@ -68,6 +83,9 @@ impl ZipfKvConfig {
             reads: 4,
             hot_keys: 16,
             hot_prob: 0.0,
+            cpu_hot_prob: 0.0,
+            hot_stride: 0,
+            drift: 0,
         }
     }
 
@@ -81,6 +99,9 @@ impl ZipfKvConfig {
             reads: raw.get_or("zipfkv.reads", d.reads)?,
             hot_keys: raw.get_or("zipfkv.hot_keys", d.hot_keys)?,
             hot_prob: raw.get_or("zipfkv.hot_prob", d.hot_prob)?,
+            cpu_hot_prob: raw.get_or("zipfkv.cpu_hot_prob", d.cpu_hot_prob)?,
+            hot_stride: raw.get_or("zipfkv.hot_stride", d.hot_stride)?,
+            drift: raw.get_or("zipfkv.drift", d.drift)?,
         })
     }
 
@@ -176,6 +197,9 @@ pub struct ZipfKvCpu {
     zipf: Zipf,
     read_only: bool,
     debt: f64,
+    /// Current base of the CPU hot pool; advances by `cfg.drift` keys
+    /// per synchronization round (the drifting hotspot).
+    hot_base: usize,
 }
 
 impl ZipfKvCpu {
@@ -205,6 +229,7 @@ impl ZipfKvCpu {
             zipf,
             read_only: false,
             debt: 0.0,
+            hot_base: 0,
         }
     }
 
@@ -217,10 +242,26 @@ impl ZipfKvCpu {
         self.partition.start + self.zipf.sample(&mut self.rng) as usize
     }
 
+    /// Draw from the CPU hot pool: `hot_keys` keys spaced `hot_stride`
+    /// apart (dense when 0) starting at the drifting `hot_base`.
+    fn hot_key(&mut self) -> usize {
+        let len = self.partition.len();
+        let pool = self.cfg.hot_keys.min(len).max(1);
+        let i = self.rng.below_usize(pool);
+        let step = self.cfg.hot_stride.max(1);
+        self.partition.start + (self.hot_base + i * step) % len
+    }
+
     fn run_one(&mut self, log: &mut Vec<WriteEntry>) -> u32 {
         let update = !self.read_only && self.rng.chance(self.cfg.update_frac);
         if update {
-            let k = self.sample_key();
+            // The `> 0.0` short-circuit keeps the RNG stream untouched at
+            // the default, preserving bit-identity with pre-knob runs.
+            let k = if self.cfg.cpu_hot_prob > 0.0 && self.rng.chance(self.cfg.cpu_hot_prob) {
+                self.hot_key()
+            } else {
+                self.sample_key()
+            };
             let (vw, verw) = (self.cfg.val_w(k), self.cfg.ver_w(k));
             let val = self.rng.below(1 << 20) as i32;
             let r = self.tm.execute_into(
@@ -256,6 +297,9 @@ impl ZipfKvCpu {
 impl CpuDriver for ZipfKvCpu {
     fn epoch_reset(&mut self, base: i64) {
         self.tm.epoch_reset(base);
+        if self.cfg.drift > 0 {
+            self.hot_base = (self.hot_base + self.cfg.drift) % self.partition.len();
+        }
     }
 
     fn run(&mut self, dur_s: f64, log: &mut Vec<WriteEntry>) -> CpuSlice {

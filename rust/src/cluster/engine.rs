@@ -228,6 +228,33 @@ fn first_lane_err<G>(lanes: &mut [Lane<'_, G>]) -> Option<String> {
     lanes.iter_mut().find_map(|l| l.err.take())
 }
 
+/// Online-rebalancer tuning (config keys `cluster.rebalance*`): how
+/// often the coordinator inspects per-device load at the round barrier,
+/// how much speed-normalized imbalance it tolerates, and how many
+/// ownership blocks one migration may move (DESIGN.md §14).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RebalanceCfg {
+    /// Rounds per observation window: a decision is made every
+    /// `interval` committed-or-aborted rounds (favor-GPU abort rounds
+    /// are skipped — see the barrier step in `run_round`).
+    pub interval: usize,
+    /// Trigger threshold: migrate only when the hottest device's
+    /// speed-normalized shipped-entry load exceeds `threshold × mean`.
+    pub threshold: f64,
+    /// Maximum ownership blocks one migration ships.
+    pub max_granules: usize,
+}
+
+impl Default for RebalanceCfg {
+    fn default() -> Self {
+        RebalanceCfg {
+            interval: 4,
+            threshold: 1.25,
+            max_granules: 8,
+        }
+    }
+}
+
 /// The sharded SHeTM cluster engine.
 pub struct ClusterEngine<C: CpuDriver, G: GpuDriver> {
     /// Engine configuration (variant, period, policy, ...), shared by all
@@ -287,6 +314,23 @@ pub struct ClusterEngine<C: CpuDriver, G: GpuDriver> {
     /// Coordinator-thread scratch for exact dirty-range scans (merge
     /// installs, stale-map bookkeeping).
     exact: Vec<(usize, usize)>,
+    /// Per-device cost models derived from the baseline `cost` and the
+    /// relative speed factors ([`CostModel::scaled`]); at the default
+    /// uniform speeds every element equals `cost` bitwise, so the
+    /// heterogeneous plumbing preserves bit-identity with the
+    /// pre-per-device engine.
+    costs: Vec<CostModel>,
+    /// Relative device speed factors (`1.0` = baseline); the rebalancer
+    /// normalizes its shipped-entry load signal by these.
+    speeds: Vec<f64>,
+    /// Online round-barrier rebalancer tuning (`None` = off, the
+    /// default — the off path costs one `Option` test per round).
+    rebal: Option<RebalanceCfg>,
+    /// Per-device shipped-entry accumulator over the current rebalance
+    /// observation window.
+    win_shipped: Vec<u64>,
+    /// Rounds elapsed since the last rebalance decision.
+    rounds_since_rebal: usize,
 }
 
 impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
@@ -350,7 +394,54 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             threads: 1,
             lane_bufs: (0..n).map(|_| LaneBufs::default()).collect(),
             exact: Vec::new(),
+            costs: vec![cost; n],
+            speeds: vec![1.0; n],
+            rebal: None,
+            win_shipped: vec![0; n],
+            rounds_since_rebal: 0,
         }
+    }
+
+    /// Install per-device relative speed factors (config key
+    /// `cluster.dev_speed`).  The per-device cost models derive from the
+    /// baseline via [`CostModel::scaled`] — factor `1.0` keeps the
+    /// baseline bit-exactly — and the rebalancer normalizes its load
+    /// signal by these factors, so a fast device is expected to carry
+    /// proportionally more shipped entries before it counts as hot.
+    /// Panics unless exactly one finite positive factor per device is
+    /// given.
+    pub fn set_dev_speeds(&mut self, speeds: &[f64]) {
+        assert_eq!(
+            speeds.len(),
+            self.devices.len(),
+            "one speed factor per device"
+        );
+        assert!(
+            speeds.iter().all(|s| s.is_finite() && *s > 0.0),
+            "device speed factors must be finite and positive"
+        );
+        self.speeds = speeds.to_vec();
+        self.costs = speeds.iter().map(|&s| self.cost.scaled(s)).collect();
+    }
+
+    /// Current per-device speed factors (see [`Self::set_dev_speeds`]).
+    pub fn dev_speeds(&self) -> &[f64] {
+        &self.speeds
+    }
+
+    /// Enable (`Some`) or disable (`None`) the online round-barrier
+    /// rebalancer (DESIGN.md §14).  Enabling turns on the router's
+    /// per-block heat window, the signal used to pick migration targets.
+    pub fn set_rebalance(&mut self, cfg: Option<RebalanceCfg>) {
+        self.rebal = cfg;
+        if cfg.is_some() {
+            self.router.enable_heat();
+        }
+    }
+
+    /// Current rebalancer setting (see [`Self::set_rebalance`]).
+    pub fn rebalance(&self) -> Option<RebalanceCfg> {
+        self.rebal
     }
 
     /// Number of devices in the cluster.
@@ -444,6 +535,11 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         // shards is immaterial).
         router.reset_with_carry(&carried);
         self.router = router;
+        if self.rebal.is_some() {
+            // The rebuilt router must keep feeding the rebalancer's heat
+            // window (the old router's partial window is discarded).
+            self.router.enable_heat();
+        }
         self.carry.clear();
     }
 
@@ -509,9 +605,19 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             threads,
             lane_bufs,
             exact,
+            costs,
+            speeds,
+            rebal,
+            win_shipped,
+            rounds_since_rebal,
         } = self;
         let threads = *threads;
         let cost = *cost;
+        // Shared-slice reborrow: the lane closures capture the per-device
+        // models read-only (at uniform speeds `costs[d] == cost` bitwise,
+        // so every device-side charge below matches the pre-per-device
+        // arithmetic exactly).
+        let costs: &[CostModel] = costs;
         let optimized = cfg.variant == Variant::Optimized;
         let n_dev = devices.len();
         let t0 = *t;
@@ -522,7 +628,6 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         let n_bytes = (map.n_words() * 4) as u64;
         let granule_words = (crate::bus::chunking::MERGE_GRANULE_BYTES / 4) as usize;
         let chunk_entries = cfg.chunk_entries;
-        let chunk_cost = chunk_entries as f64 * cost.gpu_validate_entry_s;
         let filter = cfg.chunk_filter;
 
         // Telemetry samples live in the lanes and fold at the barrier in
@@ -588,13 +693,14 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         // own H2D channel.  The CPU truth is read-only here.
         {
             let cpu_stmr = cpu.stmr();
-            run_lanes(threads, &mut lanes, |_, lane| {
+            run_lanes(threads, &mut lanes, |d, lane| {
+                let c = &costs[d];
                 lane.stale
                     .dirty_word_ranges_coarse_into(granule_words, &mut lane.coarse);
                 let mut refresh_end = t0;
                 for &(s, e) in lane.coarse.iter() {
                     let bytes = ((e - s) * 4) as u64;
-                    let dur = cost.bus_h2d.transfer_secs(bytes);
+                    let dur = c.bus_h2d.transfer_secs(bytes);
                     let (_, end) = lane.h2d.schedule(t0, dur);
                     refresh_end = end;
                     let fresh: Vec<i32> = (s..e).map(|w| cpu_stmr.load(w)).collect();
@@ -613,7 +719,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 lane.cursor = refresh_end;
                 if optimized {
                     // Shadow copy (DtD) before the device may process (§IV-D).
-                    let dtd = n_bytes as f64 / cost.gpu_dtd_bytes_per_s;
+                    let dtd = n_bytes as f64 / c.gpu_dtd_bytes_per_s;
                     lane.cursor += dtd;
                     lane.gpu_phases.merge_s += dtd;
                     lane.per_dev.phases.merge_s += dtd;
@@ -668,7 +774,8 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             // non-blocking log streaming (§IV-D) on each shard's own bus
             // channel, plus per-device early validation — one lane phase.
             let do_early = optimized && cfg.early_validation && s + 1 < segments;
-            run_lanes(threads, &mut lanes, |_, lane| {
+            run_lanes(threads, &mut lanes, |d, lane| {
+                let c = &costs[d];
                 let budget = (cpu_cursor - lane.cursor).max(0.0);
                 let gs = match lane.gpu.run(lane.dev, budget) {
                     Ok(gs) => gs,
@@ -691,14 +798,14 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
 
                 // Ship this shard's full chunks now (§IV-D streaming).
                 if optimized {
-                    for c in lane.inbox.drain(..) {
-                        let dur = cost.bus_h2d.transfer_secs(c.wire_bytes());
+                    for chunk in lane.inbox.drain(..) {
+                        let dur = c.bus_h2d.transfer_secs(chunk.wire_bytes());
                         let (_, end) = lane.h2d.schedule(cpu_cursor, dur);
                         lane.arrivals.push(end);
                         if let Some(o) = &mut lane.obs {
                             o.ship.push(dur);
                         }
-                        lane.chunks.push(c);
+                        lane.chunks.push(chunk);
                     }
                 }
 
@@ -710,13 +817,13 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                     let vcost = if filter {
                         // Signature-prefiltered scan (mirrors RoundEngine).
                         let mut vcost = 0.0;
-                        for c in lane.chunks.iter().take(arrived) {
-                            vcost += cost.gpu_sig_check_s;
-                            if lane.dev.chunk_provably_clean(c) {
+                        for chunk in lane.chunks.iter().take(arrived) {
+                            vcost += c.gpu_sig_check_s;
+                            if lane.dev.chunk_provably_clean(chunk) {
                                 continue;
                             }
-                            conf += lane.dev.early_validate_chunk(c);
-                            vcost += chunk_entries as f64 * cost.gpu_validate_entry_s;
+                            conf += lane.dev.early_validate_chunk(chunk);
+                            vcost += chunk_entries as f64 * c.gpu_validate_entry_s;
                         }
                         vcost
                     } else {
@@ -731,7 +838,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                             &mut lane.conf,
                         );
                         conf += lane.conf.iter().sum::<u32>();
-                        arrived as f64 * chunk_entries as f64 * cost.gpu_validate_entry_s
+                        arrived as f64 * chunk_entries as f64 * c.gpu_validate_entry_s
                     };
                     lane.cursor += vcost;
                     lane.gpu_phases.validation_s += vcost;
@@ -763,16 +870,18 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         }
 
         // --- Validation phase: own shard -----------------------------------
-        run_lanes(threads, &mut lanes, |_, lane| {
+        run_lanes(threads, &mut lanes, |d, lane| {
+            let c = &costs[d];
+            let chunk_cost = chunk_entries as f64 * c.gpu_validate_entry_s;
             lane.ship_end = cpu_cursor;
-            for c in lane.inbox.drain(..) {
-                let dur = cost.bus_h2d.transfer_secs(c.wire_bytes());
+            for chunk in lane.inbox.drain(..) {
+                let dur = c.bus_h2d.transfer_secs(chunk.wire_bytes());
                 let (_, end) = lane.h2d.schedule(cpu_cursor, dur);
                 lane.arrivals.push(end);
                 if let Some(o) = &mut lane.obs {
                     o.ship.push(dur);
                 }
-                lane.chunks.push(c);
+                lane.chunks.push(chunk);
                 if !optimized {
                     // Basic: the CPU is blocked while shipping its logs.
                     lane.cpu_validation_s += dur;
@@ -797,7 +906,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 let mut vcost = 0.0;
                 let clean = filter && lane.dev.chunk_provably_clean(&lane.chunks[i]);
                 if filter {
-                    vcost += cost.gpu_sig_check_s;
+                    vcost += c.gpu_sig_check_s;
                 }
                 if clean {
                     lane.chunks_filtered += 1;
@@ -844,8 +953,8 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             // Cross-shard probe operand: this shard's routed CPU writes.
             if n_dev > 1 {
                 lane.cpu_ws.clear();
-                for c in &lane.chunks {
-                    for &a in &c.addrs {
+                for chunk in &lane.chunks {
+                    for &a in &chunk.addrs {
                         if a >= 0 {
                             lane.cpu_ws.mark_word(a as usize);
                         }
@@ -873,6 +982,13 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         rs.chunks = lanes.iter().map(|l| l.chunks.len() as u64).sum();
         rs.log_entries_raw = router.raw_appended_total();
         rs.log_entries_shipped = router.shipped_total();
+        // Per-device shipped-entry accounting: the load signal behind the
+        // `cluster_shard_imbalance` gauge and the rebalancer's window.
+        for (d, lane) in lanes.iter_mut().enumerate() {
+            let shipped = router.log(d).shipped();
+            lane.per_dev.shipped_entries += shipped;
+            win_shipped[d] += shipped;
+        }
         for lane in &lanes {
             rs.chunks_filtered += lane.chunks_filtered;
             rs.chunks_skipped_post_abort += lane.chunks_skipped;
@@ -898,7 +1014,9 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                     }
                     cluster.cross_checks += 1;
                     let (lo, ld) = pair_mut(&mut lanes, o, d);
-                    let probe = lo.cpu_ws.len() as f64 * cost.gpu_validate_entry_s;
+                    // Probe and escalation run on device `d`: charge them
+                    // at that device's rates.
+                    let probe = lo.cpu_ws.len() as f64 * costs[d].gpu_validate_entry_s;
                     ld.cursor += probe;
                     ld.gpu_phases.validation_s += probe;
                     ld.per_dev.phases.validation_s += probe;
@@ -910,7 +1028,8 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                         // is bit-identical to the scalar loop.
                         ld.dev.early_validate_chunks_into(&lo.chunks, &mut ld.conf);
                         let n_conf: u64 = ld.conf.iter().map(|&c| u64::from(c)).sum();
-                        let vcost = lo.chunks.len() as f64 * chunk_cost;
+                        let vcost = lo.chunks.len() as f64
+                            * (chunk_entries as f64 * costs[d].gpu_validate_entry_s);
                         ld.cursor += vcost;
                         ld.gpu_phases.validation_s += vcost;
                         ld.per_dev.phases.validation_s += vcost;
@@ -924,13 +1043,18 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 for j in (i + 1)..n_dev {
                     cluster.cross_checks += 1;
                     let (li, lj) = pair_mut(&mut lanes, i, j);
-                    let probe = li.dev.ws_bmp().len() as f64 * cost.gpu_validate_entry_s;
-                    li.cursor += probe;
-                    lj.cursor += probe;
-                    li.gpu_phases.validation_s += probe;
-                    lj.gpu_phases.validation_s += probe;
-                    li.per_dev.phases.validation_s += probe;
-                    lj.per_dev.phases.validation_s += probe;
+                    // Both devices scan the same operand, each at its own
+                    // rate (identical charges on a uniform cluster).
+                    let probe_i =
+                        li.dev.ws_bmp().len() as f64 * costs[i].gpu_validate_entry_s;
+                    let probe_j =
+                        li.dev.ws_bmp().len() as f64 * costs[j].gpu_validate_entry_s;
+                    li.cursor += probe_i;
+                    lj.cursor += probe_j;
+                    li.gpu_phases.validation_s += probe_i;
+                    lj.gpu_phases.validation_s += probe_j;
+                    li.per_dev.phases.validation_s += probe_i;
+                    lj.per_dev.phases.validation_s += probe_j;
                     let wr = li.dev.ws_bmp().intersect_count(lj.dev.rs_bmp())
                         + lj.dev.ws_bmp().intersect_count(li.dev.rs_bmp());
                     let ww = li.dev.ws_bmp().intersect_count(lj.dev.ws_bmp());
@@ -940,12 +1064,12 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                         // Escalation tier: the word-level exchange rescans
                         // both devices' bitmaps — charge it, like the
                         // CPU-vs-device escalation above.
-                        li.cursor += probe;
-                        lj.cursor += probe;
-                        li.gpu_phases.validation_s += probe;
-                        lj.gpu_phases.validation_s += probe;
-                        li.per_dev.phases.validation_s += probe;
-                        lj.per_dev.phases.validation_s += probe;
+                        li.cursor += probe_i;
+                        lj.cursor += probe_j;
+                        li.gpu_phases.validation_s += probe_i;
+                        lj.gpu_phases.validation_s += probe_j;
+                        li.per_dev.phases.validation_s += probe_i;
+                        lj.per_dev.phases.validation_s += probe_j;
                     }
                 }
             }
@@ -988,18 +1112,19 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         // --- Merge phase ---------------------------------------------------
         let ok = conflicts == 0;
         rs.committed = ok;
-        let round_end;
+        let mut round_end;
         if ok {
             if conditional {
                 // favor-GPU deferred apply, per owner shard.
-                run_lanes(threads, &mut lanes, |_, lane| {
+                run_lanes(threads, &mut lanes, |d, lane| {
                     for i in 0..lane.chunks.len() {
                         if let Err(e) = lane.dev.validate_chunk(&lane.chunks[i]) {
                             lane.err = Some(format!("deferred apply: {e}"));
                             return;
                         }
                     }
-                    let mcost = lane.chunks.len() as f64 * chunk_cost;
+                    let mcost = lane.chunks.len() as f64
+                        * (chunk_entries as f64 * costs[d].gpu_validate_entry_s);
                     lane.cursor += mcost;
                     lane.gpu_phases.merge_s += mcost;
                     lane.per_dev.phases.merge_s += mcost;
@@ -1013,14 +1138,14 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
             // on every device's own channel), then the install into the
             // CPU truth on the coordinator thread in device-index order —
             // the deterministic serialization point of the merge.
-            run_lanes(threads, &mut lanes, |_, lane| {
+            run_lanes(threads, &mut lanes, |d, lane| {
                 lane.dev
                     .ws_bmp()
                     .dirty_word_ranges_coarse_into(granule_words, &mut lane.coarse);
                 let mut dth_end = lane.cursor;
                 for &(s, e) in &lane.coarse {
                     let bytes = ((e - s) * 4) as u64;
-                    let dur = cost.bus_d2h.transfer_secs(bytes);
+                    let dur = costs[d].bus_d2h.transfer_secs(bytes);
                     let (_, end) = lane.d2h.schedule(lane.cursor, dur);
                     dth_end = end;
                     if let Some(o) = &mut lane.obs {
@@ -1088,9 +1213,10 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                     rs.gpu_commits = 0;
                     if optimized {
                         // Shadow + per-shard CPU-log replay (§IV-D).
-                        run_lanes(threads, &mut lanes, |_, lane| {
+                        run_lanes(threads, &mut lanes, |d, lane| {
                             lane.dev.rollback_with_logs(&lane.chunks);
-                            let mcost = lane.chunks.len() as f64 * chunk_cost;
+                            let mcost = lane.chunks.len() as f64
+                                * (chunk_entries as f64 * costs[d].gpu_validate_entry_s);
                             lane.cursor += mcost;
                             lane.gpu_phases.merge_s += mcost;
                             lane.per_dev.phases.merge_s += mcost;
@@ -1103,14 +1229,14 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                         // CPU truth is read-only during this phase).
                         {
                             let cpu_stmr = cpu.stmr();
-                            run_lanes(threads, &mut lanes, |_, lane| {
+                            run_lanes(threads, &mut lanes, |d, lane| {
                                 lane.dev
                                     .ws_bmp()
                                     .dirty_word_ranges_coarse_into(granule_words, &mut lane.coarse);
                                 let mut h2d_end = lane.cursor;
                                 for &(s, e) in lane.coarse.iter() {
                                     let bytes = ((e - s) * 4) as u64;
-                                    let dur = cost.bus_h2d.transfer_secs(bytes);
+                                    let dur = costs[d].bus_h2d.transfer_secs(bytes);
                                     let (_, end) = lane.h2d.schedule(lane.cursor, dur);
                                     h2d_end = end;
                                     for w in s..e {
@@ -1146,14 +1272,14 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                     carry.clear();
                     router.truncate_to_carried();
                     let snap_cost = n_bytes as f64 / cost.cpu_snapshot_bytes_per_s;
-                    run_lanes(threads, &mut lanes, |_, lane| {
+                    run_lanes(threads, &mut lanes, |d, lane| {
                         lane.dev
                             .ws_bmp()
                             .dirty_word_ranges_coarse_into(granule_words, &mut lane.coarse);
                         let mut dth_end = lane.cursor + snap_cost;
                         for &(s, e) in &lane.coarse {
                             let bytes = ((e - s) * 4) as u64;
-                            let dur = cost.bus_d2h.transfer_secs(bytes);
+                            let dur = costs[d].bus_d2h.transfer_secs(bytes);
                             let (_, end) = lane.d2h.schedule(dth_end, dur);
                             dth_end = end;
                         }
@@ -1244,6 +1370,94 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 for e in carry.iter() {
                     for lane in lanes.iter_mut() {
                         lane.stale.mark_word(e.addr as usize);
+                    }
+                }
+            }
+        }
+
+        // --- Elastic rebalance step (DESIGN.md §14) ------------------------
+        // Runs at the quiesced barrier, BEFORE the carry re-scatters, so
+        // the freshly installed table governs next round's routing from
+        // the first entry (the carried-log remap comes for free).
+        // Favor-GPU abort rounds are skipped: `truncate_to_carried` left
+        // per-shard carried prefixes scattered under the OLD table, and
+        // migrating here would orphan them.  Correctness needs no page
+        // copy — every device holds a full replica kept current by the
+        // stale-mark protocol above — so the migration charges one
+        // modeled bulk DMA on the recipient's H2D channel and installs
+        // the next layout epoch.
+        *rounds_since_rebal += 1;
+        if let Some(rb) = *rebal {
+            if !cpu_lost && *rounds_since_rebal >= rb.interval {
+                *rounds_since_rebal = 0;
+                let heat = router.take_heat();
+                let loads: Vec<f64> = win_shipped
+                    .iter()
+                    .zip(speeds.iter())
+                    .map(|(&s, &v)| s as f64 / v)
+                    .collect();
+                for w in win_shipped.iter_mut() {
+                    *w = 0;
+                }
+                let total: f64 = loads.iter().sum();
+                let mut donor = 0usize;
+                let mut recipient = 0usize;
+                for d in 1..n_dev {
+                    if loads[d] > loads[donor] {
+                        donor = d;
+                    }
+                    if loads[d] < loads[recipient] {
+                        recipient = d;
+                    }
+                }
+                let mean = total / n_dev as f64;
+                if total > 0.0 && donor != recipient && loads[donor] > rb.threshold * mean {
+                    // Hottest donor-owned blocks by observed heat (ties to
+                    // the lowest block id), capped so the donor keeps at
+                    // least one block.
+                    let shift = map.shard_bits();
+                    let view = map.view();
+                    let mut held = 0usize;
+                    let mut cand: Vec<(u64, usize)> = Vec::new();
+                    for (b, &h) in heat.iter().enumerate() {
+                        if view.owner(b << shift) != donor {
+                            continue;
+                        }
+                        held += 1;
+                        if h > 0 {
+                            cand.push((h, b));
+                        }
+                    }
+                    drop(view);
+                    cand.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+                    let take = cand
+                        .len()
+                        .min(rb.max_granules)
+                        .min(held.saturating_sub(1));
+                    let blocks: Vec<usize> = cand[..take].iter().map(|&(_, b)| b).collect();
+                    if !blocks.is_empty() {
+                        // Crash injection BEFORE anything installs: the
+                        // simulated death leaves no durable trace of the
+                        // migration, and deterministic replay re-makes
+                        // the identical decision (`stats.rounds` has not
+                        // absorbed this round yet, hence the +1).
+                        if let Some(hook) = dur.as_ref() {
+                            hook.crash_mid_migration(stats.rounds + 1)?;
+                        }
+                        let block_words = map.block_words();
+                        let mut words = 0usize;
+                        for &b in &blocks {
+                            let start = b << shift;
+                            words += block_words.min(map.n_words() - start);
+                        }
+                        let bytes = (words * 4) as u64;
+                        let dma = cost.bus_h2d.transfer_secs(bytes);
+                        let (_, end) = lanes[recipient].h2d.schedule(round_end, dma);
+                        round_end = round_end.max(end);
+                        map.migrate(&blocks, recipient);
+                        cluster.migrations += 1;
+                        cluster.granules_moved += blocks.len() as u64;
+                        cluster.migrated_bytes += bytes;
                     }
                 }
             }
@@ -1388,6 +1602,7 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
                 &carried_shards,
                 cpu.stmr(),
                 stats_fnv,
+                Some(&map.desc()),
             )? {
                 tel.record_checkpoint(&sum);
             }
@@ -1648,5 +1863,83 @@ mod tests {
         e.set_threads(16); // more threads than devices: one per lane
         e.run_rounds(2).unwrap();
         assert_eq!(e.stats.rounds_committed, 2);
+    }
+
+    /// A CPU workload pinned to the first ownership block ships every
+    /// entry to one device; the rebalancer must notice and move the hot
+    /// block off it at the round barrier.
+    #[test]
+    fn rebalancer_migrates_hot_blocks_off_the_loaded_device() {
+        let n = 1 << 14;
+        let map = ShardMap::new(n, 4, 8); // 256-word blocks, 64 blocks
+        let stmr = Arc::new(SharedStmr::new(n));
+        let tm = Arc::new(TinyStm::with_clock(Arc::new(GlobalClock::new())));
+        // All CPU writes land in block 0, owned (stripe) by device 0.
+        let cpu_spec = SynthSpec::w1(n, 1.0).partitioned(0..256);
+        let cpu = SynthCpu::new(stmr, tm, cpu_spec, 8, 2e-6, 42);
+        let mut devices = Vec::new();
+        let mut gpus = Vec::new();
+        for d in 0..4 {
+            let spec = SynthSpec::w1(n, 1.0)
+                .partitioned(n / 2..n)
+                .homed(map.clone(), d);
+            devices.push(GpuDevice::new(n, 0, Backend::Native));
+            gpus.push(SynthGpu::new(spec, 256, 20e-6, 230e-9, 7 + d as u64));
+        }
+        let cfg = EngineConfig {
+            period_s: 0.004,
+            early_validation: false,
+            policy: PolicyKind::FavorCpu,
+            ..Default::default()
+        };
+        let mut e = ClusterEngine::new(cfg, CostModel::default(), map, devices, cpu, gpus);
+        e.align_replicas();
+        e.set_rebalance(Some(RebalanceCfg { interval: 1, threshold: 1.25, max_granules: 4 }));
+        e.run_rounds(3).unwrap();
+        assert_eq!(e.stats.rounds_committed, 3);
+        // The hot block ping-pongs between donor and recipient under
+        // interval = 1, so assert the mechanism fired rather than any
+        // particular final owner.
+        assert!(e.cluster.migrations >= 1, "hot block never migrated");
+        assert!(e.map.epoch() >= 1, "migration must bump the layout epoch");
+        assert!(e.cluster.granules_moved >= 1);
+        assert!(e.cluster.migrated_bytes > 0, "page shipping must be modeled");
+        assert_eq!(e.cluster.rounds_aborted_cross_shard, 0);
+    }
+
+    /// `set_dev_speeds(&[1.0, ..])` scales every per-device cost model by
+    /// one, which is a bitwise no-op: the run must stay bit-identical to
+    /// an engine that never heard of device speeds.
+    #[test]
+    fn uniform_dev_speeds_are_bit_identical_to_default() {
+        let mut base = cluster(4, 0.3);
+        base.run_rounds(3).unwrap();
+        base.drain().unwrap();
+        let mut tuned = cluster(4, 0.3);
+        tuned.set_dev_speeds(&[1.0; 4]);
+        tuned.run_rounds(3).unwrap();
+        tuned.drain().unwrap();
+        assert_eq!(format!("{:?}", base.stats), format!("{:?}", tuned.stats));
+        assert_eq!(base.cpu.stmr().snapshot(), tuned.cpu.stmr().snapshot());
+        for d in 0..4 {
+            assert_eq!(
+                base.devices[d].stmr(),
+                tuned.devices[d].stmr(),
+                "device {d} replica"
+            );
+        }
+    }
+
+    /// The per-device shipped-entry gauges partition the run total: their
+    /// sum must equal `log_entries_shipped` exactly, and a CPU whose
+    /// writes stripe uniformly keeps the imbalance gauge near 1.
+    #[test]
+    fn per_device_shipped_entries_sum_to_the_total() {
+        let mut e = cluster(4, 0.0);
+        e.run_rounds(3).unwrap();
+        let per_dev: u64 = e.cluster.per_device.iter().map(|d| d.shipped_entries).sum();
+        assert_eq!(per_dev, e.stats.log_entries_shipped, "gauges must partition the total");
+        assert!(e.stats.log_entries_shipped > 0, "CPU writes must ship");
+        assert!(e.cluster.shipped_imbalance() >= 1.0, "max/mean is at least 1");
     }
 }

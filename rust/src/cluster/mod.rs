@@ -6,8 +6,12 @@
 //! devices, and the single-device synchronization round generalizes to a
 //! per-device pipeline fleet under one CPU:
 //!
-//! * [`shard::ShardMap`] — word-range → device ownership (configurable via
-//!   `cluster.n_gpus` / `cluster.shard_bits`);
+//! * [`shard::ShardLayout`] — versioned word-range → device ownership
+//!   (configurable via `cluster.n_gpus` / `cluster.shard_bits`): an
+//!   explicit block → device table with a monotone layout epoch, striped
+//!   by default, load-proportional under per-device speed factors
+//!   (`cluster.dev_speed`), and rewritten online by the round-barrier
+//!   rebalancer (`cluster.rebalance`, DESIGN.md §14);
 //! * [`router::LogRouter`] — scatters the CPU write-set stream to owner
 //!   shards, chunking per device over per-device bus channels;
 //! * [`engine::ClusterEngine`] — drives the per-device round pipelines
@@ -30,7 +34,7 @@ pub mod router;
 pub mod shard;
 pub mod stats;
 
-pub use engine::ClusterEngine;
+pub use engine::{ClusterEngine, RebalanceCfg};
 pub use router::LogRouter;
-pub use shard::ShardMap;
+pub use shard::{LayoutDesc, LayoutView, ShardLayout, ShardMap};
 pub use stats::{ClusterStats, DeviceStats};

@@ -2,12 +2,23 @@
 //!
 //! The CPU side of the cluster is unchanged from the single-device system:
 //! one guest TM, one global commit clock, one stream of `(addr, val, ts)`
-//! write entries.  The router splits that stream by [`ShardMap::owner`]
-//! into per-device [`RoundLog`]s, each of which chunks independently into
+//! write entries.  The router splits that stream by
+//! [`ShardLayout::owner`](super::shard::ShardLayout::owner) into
+//! per-device [`RoundLog`]s, each of which chunks independently into
 //! the paper's 48 KB transfer units and ships over that device's own
 //! host-to-device bus channel.  Order is preserved within each device's
 //! log, so the per-shard validation sees CPU commits in timestamp order
 //! exactly as the single-device validation does.
+//!
+//! The router holds a shared handle to the cluster's versioned
+//! [`ShardLayout`](super::shard::ShardLayout): when the round-barrier
+//! rebalancer installs a new layout epoch, the next batch scatters by the
+//! new table with no router surgery.  Each scatter loop takes one layout
+//! view per batch, so a batch is routed under exactly one epoch.  When
+//! the rebalancer is enabled the router also keeps a per-ownership-block
+//! **heat** counter (entries routed per block since the last decision
+//! window) — the signal the coordinator uses to pick which blocks to
+//! migrate.
 //!
 //! With one shard the router is a plain [`RoundLog`] wrapper: every entry
 //! routes to device 0 in arrival order, producing bit-identical chunks.
@@ -26,6 +37,9 @@ pub struct LogRouter {
     routed: u64,
     /// Scratch: per-shard slices of a carry batch (avoids reallocating).
     carry_buf: Vec<Vec<WriteEntry>>,
+    /// Per-ownership-block routed-entry counters for the rebalancer
+    /// (`None` keeps the default path allocation-free and branch-cheap).
+    heat: Option<Vec<u64>>,
 }
 
 impl LogRouter {
@@ -39,6 +53,29 @@ impl LogRouter {
                 .collect(),
             routed: 0,
             carry_buf: (0..n).map(|_| Vec::new()).collect(),
+            heat: None,
+        }
+    }
+
+    /// Enable per-block heat tracking (the rebalancer's migration-target
+    /// signal).  Counters start at zero; [`LogRouter::take_heat`] reads
+    /// and resets them per decision window.
+    pub fn enable_heat(&mut self) {
+        if self.heat.is_none() {
+            self.heat = Some(vec![0; self.map.n_blocks()]);
+        }
+    }
+
+    /// Per-block routed-entry counts since the last call, resetting the
+    /// window (empty slice when heat tracking is off).
+    pub fn take_heat(&mut self) -> Vec<u64> {
+        match &mut self.heat {
+            Some(h) => {
+                let out = h.clone();
+                h.iter_mut().for_each(|c| *c = 0);
+                out
+            }
+            None => Vec::new(),
         }
     }
 
@@ -93,10 +130,19 @@ impl LogRouter {
         &self.logs[shard]
     }
 
-    /// Route a batch of committed entries to their owners, in order.
+    /// Route a batch of committed entries to their owners, in order.  The
+    /// batch scatters under one layout view (the epoch current when the
+    /// call starts), and feeds the per-block heat window when tracking is
+    /// enabled.
     pub fn append(&mut self, entries: &[WriteEntry]) {
+        let view = self.map.view();
+        let shift = self.map.shard_bits();
         for e in entries {
-            self.logs[self.map.owner(e.addr as usize)].push(*e);
+            let w = e.addr as usize;
+            if let Some(h) = &mut self.heat {
+                h[w >> shift] += 1;
+            }
+            self.logs[view.owner(w)].push(*e);
         }
         self.routed += entries.len() as u64;
     }
@@ -135,8 +181,9 @@ impl LogRouter {
         for buf in &mut self.carry_buf {
             buf.clear();
         }
+        let view = self.map.view();
         for e in carry {
-            self.carry_buf[self.map.owner(e.addr as usize)].push(*e);
+            self.carry_buf[view.owner(e.addr as usize)].push(*e);
         }
         for (log, buf) in self.logs.iter_mut().zip(&self.carry_buf) {
             log.reset_with_carry(buf);
@@ -169,9 +216,9 @@ impl LogRouter {
     /// carried prefix (the `Session::txn` path; see
     /// [`RoundLog::extend_carried`]).
     pub fn extend_carried(&mut self, entries: &[WriteEntry]) {
+        let view = self.map.view();
         for e in entries {
-            self.logs[self.map.owner(e.addr as usize)]
-                .extend_carried(std::slice::from_ref(e));
+            self.logs[view.owner(e.addr as usize)].extend_carried(std::slice::from_ref(e));
         }
     }
 }
@@ -275,5 +322,36 @@ mod tests {
         r.drain_all(0, &mut c0);
         assert_eq!(c0[0].addrs[0], 0);
         assert_eq!(c0[0].vals[0], 10);
+    }
+
+    #[test]
+    fn heat_window_counts_per_block_and_resets() {
+        let map = ShardMap::new(64, 2, 2); // 16 blocks of 4 words
+        let mut r = LogRouter::new(map, 4);
+        assert!(r.take_heat().is_empty(), "off by default");
+        r.enable_heat();
+        r.append(&[entry(0, 1, 1), entry(1, 2, 2), entry(4, 3, 3)]);
+        let h = r.take_heat();
+        assert_eq!(h.len(), 16);
+        assert_eq!(h[0], 2, "two entries in block 0");
+        assert_eq!(h[1], 1, "one entry in block 1");
+        assert_eq!(r.take_heat(), vec![0u64; 16], "window resets");
+    }
+
+    #[test]
+    fn scatter_follows_a_migrated_layout() {
+        let map = ShardMap::new(64, 2, 2);
+        let mut r = LogRouter::new(map.clone(), 8);
+        assert_eq!(map.owner(0), 0);
+        map.migrate(&[0], 1); // block 0 (words 0..4) now on device 1
+        r.append(&[entry(0, 7, 1), entry(4, 8, 2)]);
+        let mut c1 = Vec::new();
+        r.drain_all(1, &mut c1);
+        let on_dev1: Vec<i32> = c1
+            .iter()
+            .flat_map(|c| c.addrs.iter().copied().filter(|&a| a >= 0))
+            .collect();
+        assert_eq!(on_dev1, vec![0, 4], "both blocks route to device 1 now");
+        assert_eq!(r.log(0).len(), 0);
     }
 }

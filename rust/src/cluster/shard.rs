@@ -1,33 +1,187 @@
-//! Word-range → device ownership map for the sharded STMR.
+//! Versioned word-range → device ownership layout for the sharded STMR.
 //!
-//! The region is cut into fixed blocks of `1 << shard_bits` words and the
-//! blocks are striped round-robin across the `n_shards` devices —
-//! `owner(word) = (word >> shard_bits) % n_shards`.  Striping (rather than
-//! one contiguous slab per device) keeps every device's share of a
-//! partitioned workload balanced no matter how the apps partition the
-//! region, and the block size aligns with the paper's 16 KB transfer
-//! granule when `shard_bits = 12` (4096 words = 16 KB), so ownership
-//! boundaries and merge-DMA boundaries coincide.
+//! The region is cut into fixed blocks of `1 << shard_bits` words.  Where
+//! the old `ShardMap` *computed* ownership (`owner(word) = (word >>
+//! shard_bits) % n_shards`), [`ShardLayout`] *stores* it: an explicit
+//! block → device table plus a monotonically increasing **layout epoch**.
+//! The default constructors fill the table with exactly the old stripe —
+//! bit-identical behavior for every consumer — but the table can also be
+//! built load-proportionally from per-device speed weights
+//! ([`ShardLayout::proportional`]) and rewritten online by the cluster
+//! engine's round-barrier rebalancer ([`ShardLayout::migrate`]).
 //!
-//! With `n_shards = 1` every helper degenerates to the identity — the
-//! single-device configuration is bit-for-bit the existing coordinator.
+//! Handles are cheap to clone and **share** the table: the log router,
+//! the engine and the shard-homed workload generators all observe a
+//! migration the moment the coordinator installs the next epoch.  Installs
+//! happen only at quiesced round barriers (never while lanes run), so
+//! every reader of one round sees one consistent epoch and results stay
+//! bit-identical at any `cluster.threads` setting.
+//!
+//! The block size aligns with the paper's 16 KB transfer granule when
+//! `shard_bits = 12` (4096 words = 16 KB), so ownership boundaries and
+//! merge-DMA boundaries coincide.  With `n_shards = 1` every helper
+//! degenerates to the identity — the single-device configuration is
+//! bit-for-bit the existing coordinator.
 
-/// Ownership map: word index → shard (device) id.
+use std::sync::{Arc, RwLock};
+
+/// The historical name of the ownership map; today an alias for the
+/// versioned [`ShardLayout`] (same constructors, same striped defaults).
+pub type ShardMap = ShardLayout;
+
+/// One immutable version of the ownership table.  Readers hold an `Arc`
+/// snapshot; [`ShardLayout::migrate`] installs a successor instead of
+/// mutating in place.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct ShardMap {
+struct Table {
+    /// Layout version: 0 for the initial layout, +1 per migration.
+    epoch: u64,
+    /// Owner device of each ownership block, indexed by block id.
+    owners: Vec<u32>,
+    /// Blocks owned by each device, ascending (rehome / range index).
+    by_shard: Vec<Vec<u32>>,
+}
+
+impl Table {
+    fn from_owners(epoch: u64, owners: Vec<u32>, n_shards: usize) -> Self {
+        let mut by_shard = vec![Vec::new(); n_shards];
+        for (b, &d) in owners.iter().enumerate() {
+            by_shard[d as usize].push(b as u32);
+        }
+        Table {
+            epoch,
+            owners,
+            by_shard,
+        }
+    }
+}
+
+/// Versioned ownership layout: word index → shard (device) id, consulted
+/// through a shared, atomically replaceable table.
+pub struct ShardLayout {
     n_words: usize,
     n_shards: usize,
     shard_bits: u32,
+    table: Arc<RwLock<Arc<Table>>>,
 }
 
-impl ShardMap {
-    /// Build a map over `n_words` with `n_shards` devices and
-    /// `1 << shard_bits`-word blocks.
+/// Handles share the table: a clone observes every later migration.
+impl Clone for ShardLayout {
+    fn clone(&self) -> Self {
+        ShardLayout {
+            n_words: self.n_words,
+            n_shards: self.n_shards,
+            shard_bits: self.shard_bits,
+            table: Arc::clone(&self.table),
+        }
+    }
+}
+
+impl std::fmt::Debug for ShardLayout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let t = self.snapshot();
+        f.debug_struct("ShardLayout")
+            .field("n_words", &self.n_words)
+            .field("n_shards", &self.n_shards)
+            .field("shard_bits", &self.shard_bits)
+            .field("epoch", &t.epoch)
+            .finish()
+    }
+}
+
+impl PartialEq for ShardLayout {
+    fn eq(&self, other: &Self) -> bool {
+        self.n_words == other.n_words
+            && self.n_shards == other.n_shards
+            && self.shard_bits == other.shard_bits
+            && *self.snapshot() == *other.snapshot()
+    }
+}
+impl Eq for ShardLayout {}
+
+impl ShardLayout {
+    /// Build the classic striped layout over `n_words` with `n_shards`
+    /// devices and `1 << shard_bits`-word blocks: block `b` is owned by
+    /// `b % n_shards`, exactly the arithmetic the pre-versioned map used.
     ///
     /// Panics unless every shard owns at least one full block
     /// (`n_words >= n_shards << shard_bits`) — a thinner region cannot be
     /// meaningfully sharded at this granularity.
     pub fn new(n_words: usize, n_shards: usize, shard_bits: u32) -> Self {
+        Self::check_dims(n_words, n_shards, shard_bits);
+        let n_blocks = n_words.div_ceil(1usize << shard_bits);
+        let owners = (0..n_blocks).map(|b| (b % n_shards) as u32).collect();
+        Self::from_table(n_words, n_shards, shard_bits, 0, owners)
+    }
+
+    /// The single-device identity layout.
+    pub fn solo(n_words: usize) -> Self {
+        Self::new(n_words, 1, 0)
+    }
+
+    /// Build a load-proportional layout: blocks are dealt by weighted
+    /// round robin over `weights` (one positive relative speed per
+    /// device), so a device rated `2.0` receives twice the blocks of a
+    /// device rated `1.0`.  **Equal weights reproduce the stripe of
+    /// [`ShardLayout::new`] exactly** (weighted round robin with uniform
+    /// weights degenerates to round robin), so the cost-model layout is a
+    /// strict generalization of the default.  Every shard is guaranteed
+    /// at least one block (deterministically taken from the largest
+    /// holding when extreme weights would starve one).
+    pub fn proportional(n_words: usize, n_shards: usize, shard_bits: u32, weights: &[f64]) -> Self {
+        Self::check_dims(n_words, n_shards, shard_bits);
+        assert_eq!(weights.len(), n_shards, "one weight per shard");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w > 0.0),
+            "device speed weights must be finite and positive"
+        );
+        let n_blocks = n_words.div_ceil(1usize << shard_bits);
+        let total: f64 = weights.iter().sum();
+        let mut credit = vec![0.0f64; n_shards];
+        let mut owners = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            for (c, w) in credit.iter_mut().zip(weights) {
+                *c += w;
+            }
+            // Argmax with ties to the lowest index: deterministic.
+            let mut win = 0usize;
+            for d in 1..n_shards {
+                if credit[d] > credit[win] {
+                    win = d;
+                }
+            }
+            credit[win] -= total;
+            owners.push(win as u32);
+        }
+        // Extreme weights can starve a shard of blocks entirely; give
+        // every starved shard (ascending) the last block of whichever
+        // shard holds the most (ties to the lowest index).
+        let mut held = vec![0usize; n_shards];
+        for &d in &owners {
+            held[d as usize] += 1;
+        }
+        for d in 0..n_shards {
+            if held[d] > 0 {
+                continue;
+            }
+            let mut donor = 0usize;
+            for s in 1..n_shards {
+                if held[s] > held[donor] {
+                    donor = s;
+                }
+            }
+            let b = owners
+                .iter()
+                .rposition(|&o| o as usize == donor)
+                .expect("donor holds a block");
+            owners[b] = d as u32;
+            held[donor] -= 1;
+            held[d] += 1;
+        }
+        Self::from_table(n_words, n_shards, shard_bits, 0, owners)
+    }
+
+    fn check_dims(n_words: usize, n_shards: usize, shard_bits: u32) {
         assert!(n_shards >= 1, "need at least one shard");
         assert!(shard_bits < usize::BITS, "shard_bits out of range");
         assert!(
@@ -36,16 +190,26 @@ impl ShardMap {
              {}-word block each (lower cluster.shard_bits)",
             1usize << shard_bits
         );
-        ShardMap {
+    }
+
+    fn from_table(
+        n_words: usize,
+        n_shards: usize,
+        shard_bits: u32,
+        epoch: u64,
+        owners: Vec<u32>,
+    ) -> Self {
+        let table = Table::from_owners(epoch, owners, n_shards);
+        ShardLayout {
             n_words,
             n_shards,
             shard_bits,
+            table: Arc::new(RwLock::new(Arc::new(table))),
         }
     }
 
-    /// The single-device identity map.
-    pub fn solo(n_words: usize) -> Self {
-        Self::new(n_words, 1, 0)
+    fn snapshot(&self) -> Arc<Table> {
+        Arc::clone(&self.table.read().expect("layout lock poisoned"))
     }
 
     /// STMR size in words.
@@ -73,30 +237,56 @@ impl ShardMap {
         self.n_words.div_ceil(self.block_words())
     }
 
+    /// Current layout epoch (0 = initial; bumped by every migration).
+    pub fn epoch(&self) -> u64 {
+        self.snapshot().epoch
+    }
+
     /// The device owning `word`.
     #[inline]
     pub fn owner(&self, word: usize) -> usize {
         debug_assert!(word < self.n_words);
-        (word >> self.shard_bits) % self.n_shards
+        if self.n_shards == 1 {
+            return 0;
+        }
+        self.table.read().expect("layout lock poisoned").owners[word >> self.shard_bits] as usize
     }
 
-    /// Remap `word` to the nearest word (same in-block offset) owned by
-    /// `shard` — the shard-aware workload generators draw uniformly over
-    /// the whole region and rehome each access, which keeps their RNG
-    /// streams identical across cluster sizes.  Identity when the map is
-    /// [`ShardMap::solo`]-shaped.
+    /// A borrowed snapshot of the current table for batch lookups: one
+    /// lock acquisition amortized over a whole scatter loop, reading the
+    /// epoch that was current when the view was taken.
+    pub fn view(&self) -> LayoutView {
+        LayoutView {
+            table: self.snapshot(),
+            n_words: self.n_words,
+            shard_bits: self.shard_bits,
+        }
+    }
+
+    /// Remap `word` to a word (same in-block offset) owned by `shard` —
+    /// the shard-aware workload generators draw uniformly over the whole
+    /// region and rehome each access, which keeps their RNG streams
+    /// identical across cluster sizes.  On a striped table this selects
+    /// the same block as the old stripe arithmetic did (the `word`'s own
+    /// stripe cycle, stepped back at the tail), so homed generators are
+    /// bit-identical; on a migrated table it deterministically indexes
+    /// the target shard's block list.  Identity when the layout is
+    /// [`ShardLayout::solo`]-shaped.
     pub fn rehome(&self, word: usize, shard: usize) -> usize {
         debug_assert!(word < self.n_words);
         debug_assert!(shard < self.n_shards);
-        let block = word >> self.shard_bits;
-        let mut b = block - block % self.n_shards + shard;
-        // The rounded block may start past the region's end (tail stripe):
-        // step back one whole stripe. At most one step is ever needed —
-        // the aligned base block starts in-range by construction.
-        while (b << self.shard_bits) >= self.n_words {
-            b -= self.n_shards;
+        if self.n_shards == 1 {
+            return word;
         }
-        let start = b << self.shard_bits;
+        let t = self.table.read().expect("layout lock poisoned");
+        let blocks = &t.by_shard[shard];
+        debug_assert!(!blocks.is_empty(), "every shard owns at least one block");
+        // On a striped table `blocks == [shard, shard + n, shard + 2n, …]`
+        // and this index reproduces the old `block - block % n + shard`
+        // (clamping covers the tail step-back, which the old loop took at
+        // most once).
+        let idx = ((word >> self.shard_bits) / self.n_shards).min(blocks.len() - 1);
+        let start = (blocks[idx] as usize) << self.shard_bits;
         let len = (self.n_words - start).min(self.block_words());
         start + (word & (self.block_words() - 1)) % len
     }
@@ -109,19 +299,159 @@ impl ShardMap {
     /// Maximal word ranges `[start, end)` owned by `shard`, ascending.
     pub fn owned_ranges(&self, shard: usize) -> Vec<(usize, usize)> {
         assert!(shard < self.n_shards);
-        let mut out = Vec::new();
-        let mut b = shard;
-        while b < self.n_blocks() {
-            let s = b << self.shard_bits;
-            let e = ((b + 1) << self.shard_bits).min(self.n_words);
-            // Consecutive blocks coalesce only when n_shards == 1.
+        let t = self.snapshot();
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for &b in &t.by_shard[shard] {
+            let s = (b as usize) << self.shard_bits;
+            let e = ((b as usize + 1) << self.shard_bits).min(self.n_words);
             match out.last_mut() {
                 Some(last) if last.1 == s => last.1 = e,
                 _ => out.push((s, e)),
             }
-            b += self.n_shards;
         }
         out
+    }
+
+    /// Install the next layout epoch with `blocks` reassigned to device
+    /// `to`, and return the epoch now current.  Moves that would leave a
+    /// shard with no blocks are skipped (every shard must keep at least
+    /// one block for [`ShardLayout::rehome`]); if nothing changes the
+    /// epoch is not bumped.  Every clone of this handle observes the new
+    /// table immediately — callers (the engine's round-barrier
+    /// rebalancer) must only invoke this while the lanes are quiesced.
+    pub fn migrate(&self, blocks: &[usize], to: usize) -> u64 {
+        assert!(to < self.n_shards, "target shard out of range");
+        let mut guard = self.table.write().expect("layout lock poisoned");
+        let cur = &**guard;
+        let mut owners = cur.owners.clone();
+        let mut held = vec![0usize; self.n_shards];
+        for &d in &owners {
+            held[d as usize] += 1;
+        }
+        let mut changed = false;
+        for &b in blocks {
+            assert!(b < owners.len(), "block {b} out of range");
+            let from = owners[b] as usize;
+            if from == to || held[from] <= 1 {
+                continue;
+            }
+            owners[b] = to as u32;
+            held[from] -= 1;
+            held[to] += 1;
+            changed = true;
+        }
+        if !changed {
+            return cur.epoch;
+        }
+        let next = Table::from_owners(cur.epoch + 1, owners, self.n_shards);
+        *guard = Arc::new(next);
+        guard.epoch
+    }
+
+    /// Serializable description of the current table (checkpoint
+    /// manifests record this; recovery verifies the replayed layout
+    /// against it bit-exactly).
+    pub fn desc(&self) -> LayoutDesc {
+        let t = self.snapshot();
+        LayoutDesc {
+            epoch: t.epoch,
+            shard_bits: self.shard_bits,
+            owners: t.owners.clone(),
+        }
+    }
+}
+
+/// An immutable point-in-time view of a [`ShardLayout`] table, for batch
+/// scatter loops (one lock acquisition per batch instead of per word).
+pub struct LayoutView {
+    table: Arc<Table>,
+    n_words: usize,
+    shard_bits: u32,
+}
+
+impl LayoutView {
+    /// The device owning `word` in this view.
+    #[inline]
+    pub fn owner(&self, word: usize) -> usize {
+        debug_assert!(word < self.n_words);
+        self.table.owners[word >> self.shard_bits] as usize
+    }
+
+    /// The layout epoch this view captured.
+    pub fn epoch(&self) -> u64 {
+        self.table.epoch
+    }
+}
+
+/// A layout snapshot in serializable form: the epoch, the block shift and
+/// the per-block owner table.  [`LayoutDesc::to_rle`]/[`LayoutDesc::parse_rle`]
+/// round-trip the owner table through the compact `owner*count,...`
+/// run-length text the checkpoint manifest stores.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayoutDesc {
+    /// Layout epoch at capture time.
+    pub epoch: u64,
+    /// Block-size shift (block = `1 << shard_bits` words).
+    pub shard_bits: u32,
+    /// Owner device of each ownership block.
+    pub owners: Vec<u32>,
+}
+
+impl LayoutDesc {
+    /// The single-device description (`RoundEngine` has no shard map; its
+    /// layout is one epoch-0 block table owned entirely by device 0).
+    pub fn solo(n_words: usize) -> Self {
+        LayoutDesc {
+            epoch: 0,
+            shard_bits: 0,
+            owners: vec![0; n_words],
+        }
+    }
+
+    /// Number of shards this description spans (max owner + 1).
+    pub fn n_shards(&self) -> usize {
+        self.owners.iter().map(|&d| d as usize + 1).max().unwrap_or(1)
+    }
+
+    /// Run-length encode the owner table as `owner*count` runs joined by
+    /// commas (e.g. a 4-device stripe of 8 blocks is
+    /// `0*1,1*1,2*1,3*1,0*1,1*1,2*1,3*1`).
+    pub fn to_rle(&self) -> String {
+        let mut out = String::new();
+        let mut i = 0usize;
+        while i < self.owners.len() {
+            let d = self.owners[i];
+            let mut j = i + 1;
+            while j < self.owners.len() && self.owners[j] == d {
+                j += 1;
+            }
+            if !out.is_empty() {
+                out.push(',');
+            }
+            out.push_str(&format!("{d}*{}", j - i));
+            i = j;
+        }
+        out
+    }
+
+    /// Decode a [`LayoutDesc::to_rle`] string back into an owner table
+    /// (`None` on malformed text — recovery treats that as no layout
+    /// record, like a pre-versioned checkpoint).
+    pub fn parse_rle(s: &str) -> Option<Vec<u32>> {
+        let mut owners = Vec::new();
+        if s.is_empty() {
+            return Some(owners);
+        }
+        for run in s.split(',') {
+            let (d, n) = run.split_once('*')?;
+            let d: u32 = d.parse().ok()?;
+            let n: usize = n.parse().ok()?;
+            if n == 0 {
+                return None;
+            }
+            owners.extend(std::iter::repeat_n(d, n));
+        }
+        Some(owners)
     }
 }
 
@@ -138,6 +468,7 @@ mod tests {
         }
         assert_eq!(m.owned_words(0), 1000);
         assert_eq!(m.owned_ranges(0), vec![(0, 1000)]);
+        assert_eq!(m.epoch(), 0);
     }
 
     #[test]
@@ -163,6 +494,28 @@ mod tests {
                 assert!(r < 64);
                 assert_eq!(m.owner(r), d, "word {w} -> shard {d} gave {r}");
                 assert_eq!(r & 3, w & 3, "in-block offset preserved");
+            }
+        }
+    }
+
+    #[test]
+    fn rehome_matches_legacy_stripe_arithmetic() {
+        // The exact formula ShardMap used before the table: chosen block
+        // is the word's own stripe cycle, stepped back at the tail.
+        for (n_words, n_shards, bits) in [(64usize, 4usize, 2u32), (70, 2, 4), (100, 3, 3)] {
+            let m = ShardLayout::new(n_words, n_shards, bits);
+            for w in 0..n_words {
+                for d in 0..n_shards {
+                    let block = w >> bits;
+                    let mut b = block - block % n_shards + d;
+                    while (b << bits) >= n_words {
+                        b -= n_shards;
+                    }
+                    let start = b << bits;
+                    let len = (n_words - start).min(1 << bits);
+                    let legacy = start + (w & ((1 << bits) - 1)) % len;
+                    assert_eq!(m.rehome(w, d), legacy, "word {w} shard {d}");
+                }
             }
         }
     }
@@ -200,5 +553,109 @@ mod tests {
     #[should_panic(expected = "cannot give")]
     fn too_small_region_is_rejected() {
         ShardMap::new(16, 4, 4);
+    }
+
+    #[test]
+    fn proportional_with_equal_weights_is_the_stripe() {
+        for (n_words, n_shards, bits) in [(64usize, 4usize, 2u32), (70, 2, 4), (100, 3, 3)] {
+            let striped = ShardLayout::new(n_words, n_shards, bits);
+            let prop =
+                ShardLayout::proportional(n_words, n_shards, bits, &vec![1.0; n_shards]);
+            assert_eq!(striped, prop, "uniform WRR must reproduce the stripe");
+        }
+    }
+
+    #[test]
+    fn proportional_follows_weights() {
+        // 16 blocks, speeds 3:1 -> the fast device gets ~12 of them.
+        let m = ShardLayout::proportional(64, 2, 2, &[3.0, 1.0]);
+        let fast = m.owned_ranges(0).iter().map(|(s, e)| e - s).sum::<usize>();
+        let slow = m.owned_ranges(1).iter().map(|(s, e)| e - s).sum::<usize>();
+        assert_eq!(fast + slow, 64);
+        assert!(fast >= 44, "3:1 weights must skew the deal, got {fast}/{slow}");
+        assert!(slow >= 4, "the slow device still owns blocks");
+    }
+
+    #[test]
+    fn proportional_never_starves_a_shard() {
+        let m = ShardLayout::proportional(64, 4, 2, &[1000.0, 1.0, 1.0, 1.0]);
+        for d in 0..4 {
+            assert!(m.owned_words(d) > 0, "shard {d} must own at least a block");
+        }
+    }
+
+    #[test]
+    fn migrate_moves_ownership_and_bumps_epoch() {
+        let m = ShardLayout::new(64, 4, 2);
+        let clone = m.clone(); // shares the table
+        assert_eq!(m.owner(0), 0);
+        let e1 = m.migrate(&[0], 3);
+        assert_eq!(e1, 1);
+        assert_eq!(m.owner(0), 3, "block 0 now owned by device 3");
+        assert_eq!(clone.owner(0), 3, "clones observe the migration");
+        assert_eq!(clone.epoch(), 1);
+        // Rehome still lands on the owner under the migrated table.
+        for w in 0..64 {
+            for d in 0..4 {
+                assert_eq!(m.owner(m.rehome(w, d)), d);
+            }
+        }
+        // No-op move: epoch stays.
+        assert_eq!(m.migrate(&[0], 3), 1);
+    }
+
+    #[test]
+    fn migrate_never_empties_a_shard() {
+        let m = ShardLayout::new(16, 4, 2); // exactly one block per shard
+        let e = m.migrate(&[1], 0); // would empty shard 1: skipped
+        assert_eq!(e, 0, "emptying move must be a no-op");
+        assert_eq!(m.owner(4), 1);
+    }
+
+    #[test]
+    fn owned_ranges_coalesce_adjacent_blocks_after_migration() {
+        let m = ShardLayout::new(64, 2, 2);
+        m.migrate(&[1], 0); // device 0 now owns blocks 0,1,2 contiguously? 0,1 and 2 (even)
+        let r = m.owned_ranges(0);
+        assert_eq!(r[0], (0, 12), "blocks 0..3 coalesce into one range");
+        let mut seen = vec![0u32; 64];
+        for d in 0..2 {
+            for (s, e) in m.owned_ranges(d) {
+                for w in s..e {
+                    seen[w] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "still a partition");
+    }
+
+    #[test]
+    fn layout_desc_rle_round_trips() {
+        let m = ShardLayout::new(100, 3, 3);
+        m.migrate(&[4, 7], 0);
+        let d = m.desc();
+        assert_eq!(d.epoch, 1);
+        let rle = d.to_rle();
+        assert_eq!(LayoutDesc::parse_rle(&rle).unwrap(), d.owners);
+        assert_eq!(LayoutDesc::parse_rle(""), Some(vec![]));
+        assert_eq!(LayoutDesc::parse_rle("junk"), None);
+        assert_eq!(LayoutDesc::parse_rle("0*0"), None);
+        let solo = LayoutDesc::solo(5);
+        assert_eq!(solo.to_rle(), "0*5");
+        assert_eq!(solo.n_shards(), 1);
+    }
+
+    #[test]
+    fn view_matches_owner_and_pins_epoch() {
+        let m = ShardLayout::new(64, 4, 2);
+        let v = m.view();
+        for w in 0..64 {
+            assert_eq!(v.owner(w), m.owner(w));
+        }
+        assert_eq!(v.epoch(), 0);
+        m.migrate(&[0], 2);
+        assert_eq!(v.owner(0), 0, "a view is a point-in-time snapshot");
+        assert_eq!(m.owner(0), 2);
+        assert_eq!(m.view().epoch(), 1);
     }
 }

@@ -34,6 +34,10 @@ pub struct DeviceStats {
     pub refresh_bytes: u64,
     /// Refresh DMAs issued.
     pub refresh_transfers: u64,
+    /// CPU log entries shipped to this device (drained into chunks) —
+    /// the load signal behind the `cluster_shard_imbalance` gauge and
+    /// the elastic rebalancer's observation window.
+    pub shipped_entries: u64,
 }
 
 /// Aggregate cluster statistics over a run.
@@ -55,6 +59,12 @@ pub struct ClusterStats {
     pub refresh_bytes: u64,
     /// Total refresh DMAs issued.
     pub refresh_transfers: u64,
+    /// Layout migrations the round-barrier rebalancer installed.
+    pub migrations: u64,
+    /// Ownership blocks moved across those migrations.
+    pub granules_moved: u64,
+    /// Bytes the migration DMAs shipped (modeled bulk page copies).
+    pub migrated_bytes: u64,
 }
 
 impl ClusterStats {
@@ -74,6 +84,25 @@ impl ClusterStats {
             self.rounds_aborted_cross_shard as f64 / rounds as f64
         }
     }
+
+    /// Max/mean ratio of per-device shipped entries (the
+    /// `cluster_shard_imbalance` gauge): `1.0` is a perfectly balanced
+    /// cluster, `n_shards` means every entry landed on one device, and
+    /// `0.0` means nothing has shipped yet.
+    pub fn shipped_imbalance(&self) -> f64 {
+        let max = self
+            .per_device
+            .iter()
+            .map(|d| d.shipped_entries)
+            .max()
+            .unwrap_or(0);
+        let total: u64 = self.per_device.iter().map(|d| d.shipped_entries).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mean = total as f64 / self.per_device.len() as f64;
+        max as f64 / mean
+    }
 }
 
 #[cfg(test)]
@@ -85,6 +114,21 @@ mod tests {
         let s = ClusterStats::new(4);
         assert_eq!(s.per_device.len(), 4);
         assert_eq!(s.cross_checks, 0);
+    }
+
+    #[test]
+    fn shipped_imbalance_is_max_over_mean() {
+        let mut s = ClusterStats::new(4);
+        assert_eq!(s.shipped_imbalance(), 0.0, "no traffic yet");
+        for (d, n) in [(0usize, 70u64), (1, 10), (2, 10), (3, 10)] {
+            s.per_device[d].shipped_entries = n;
+        }
+        // max = 70, mean = 25 -> 2.8
+        assert!((s.shipped_imbalance() - 2.8).abs() < 1e-12);
+        for d in &mut s.per_device {
+            d.shipped_entries = 25;
+        }
+        assert!((s.shipped_imbalance() - 1.0).abs() < 1e-12, "balanced");
     }
 
     #[test]

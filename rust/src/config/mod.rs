@@ -249,6 +249,29 @@ pub struct SystemConfig {
     /// sequential; results are bit-identical at any setting (DESIGN.md
     /// §8) — this is purely a wall-clock lever.
     pub cluster_threads: usize,
+    /// Enable the online round-barrier rebalancer (`cluster.rebalance`,
+    /// CLI `--rebalance`): migrate hot ownership blocks from the most
+    /// loaded device to the least loaded one at the synchronization
+    /// barrier (DESIGN.md §14).  Off by default — the layout then stays
+    /// bit-identical to the static striped one.
+    pub rebalance: bool,
+    /// Rounds per rebalancer observation window
+    /// (`cluster.rebalance_interval`; must be ≥ 1).
+    pub rebalance_interval: usize,
+    /// Migrate only when the hottest device's windowed load exceeds this
+    /// multiple of the mean (`cluster.rebalance_threshold`; finite,
+    /// > 1.0 — at 1.0 the trigger would fire on any nonzero traffic).
+    pub rebalance_threshold: f64,
+    /// Ownership blocks moved per migration at most
+    /// (`cluster.rebalance_granules`; must be ≥ 1).
+    pub rebalance_granules: usize,
+    /// Per-device relative speed factors (`cluster.dev_speed`, a
+    /// comma-separated list like `"1.0,2.0,1.0,1.0"`).  Empty = uniform
+    /// cluster (the default, bit-identical to pre-heterogeneity builds).
+    /// When set, its length must equal `cluster.n_gpus`; each factor
+    /// scales that device's cost model and weighs the initial
+    /// load-proportional shard layout.
+    pub dev_speed: Vec<f64>,
     /// Application driven by `shetm run` / the workload builders:
     /// `synth | memcached | bank | kmeans | zipfkv`.  Per-app knobs live in
     /// their own config sections (`[bank]`, `[kmeans]`, `[zipfkv]`,
@@ -305,6 +328,11 @@ impl Default for SystemConfig {
             shard_bits: 12,
             cross_shard_prob: 0.0,
             cluster_threads: 1,
+            rebalance: false,
+            rebalance_interval: 4,
+            rebalance_threshold: 1.25,
+            rebalance_granules: 8,
+            dev_speed: Vec::new(),
             workload: "synth".to_string(),
             telemetry_enabled: false,
             checkpoint_dir: String::new(),
@@ -324,6 +352,50 @@ impl SystemConfig {
         if cluster_threads == 0 {
             bail!("cluster.threads must be at least 1 (1 = sequential)");
         }
+        let n_gpus: usize = raw.get_or("cluster.n_gpus", d.n_gpus)?;
+        let rebalance_interval: usize =
+            raw.get_or("cluster.rebalance_interval", d.rebalance_interval)?;
+        if rebalance_interval == 0 {
+            bail!("cluster.rebalance_interval must be at least 1 round");
+        }
+        let rebalance_threshold: f64 =
+            raw.get_or("cluster.rebalance_threshold", d.rebalance_threshold)?;
+        if !rebalance_threshold.is_finite() || rebalance_threshold <= 1.0 {
+            bail!(
+                "cluster.rebalance_threshold must be a finite multiple > 1.0, \
+                 got {rebalance_threshold}"
+            );
+        }
+        let rebalance_granules: usize =
+            raw.get_or("cluster.rebalance_granules", d.rebalance_granules)?;
+        if rebalance_granules == 0 {
+            bail!("cluster.rebalance_granules must be at least 1 block");
+        }
+        let dev_speed: Vec<f64> = match raw.get("cluster.dev_speed") {
+            None => Vec::new(),
+            Some(s) if s.trim().is_empty() => Vec::new(),
+            Some(s) => {
+                let mut v = Vec::with_capacity(n_gpus);
+                for part in s.split(',') {
+                    let f: f64 = part
+                        .trim()
+                        .parse()
+                        .map_err(|e| anyhow!("cluster.dev_speed entry {part:?}: {e}"))?;
+                    if !f.is_finite() || f <= 0.0 {
+                        bail!("cluster.dev_speed factors must be finite and positive, got {f}");
+                    }
+                    v.push(f);
+                }
+                if v.len() != n_gpus {
+                    bail!(
+                        "cluster.dev_speed lists {} factors but cluster.n_gpus = {n_gpus} \
+                         (one factor per device)",
+                        v.len()
+                    );
+                }
+                v
+            }
+        };
         let early_interval_frac: f64 =
             raw.get_or("hetm.early_interval_frac", d.early_interval_frac)?;
         if !early_interval_frac.is_finite()
@@ -371,10 +443,15 @@ impl SystemConfig {
             cpu_txn_s: raw.get_or("cpu.txn_ns", d.cpu_txn_s * 1e9)? / 1e9,
             artifacts_dir: raw.get("runtime.artifacts").unwrap_or("").to_string(),
             seed: raw.get_or("seed", d.seed)?,
-            n_gpus: raw.get_or("cluster.n_gpus", d.n_gpus)?,
+            n_gpus,
             shard_bits: raw.get_or("cluster.shard_bits", d.shard_bits)?,
             cross_shard_prob: raw.get_or("cluster.cross_shard_prob", d.cross_shard_prob)?,
             cluster_threads,
+            rebalance: raw.get_bool_or("cluster.rebalance", d.rebalance)?,
+            rebalance_interval,
+            rebalance_threshold,
+            rebalance_granules,
+            dev_speed,
             workload: raw.get("workload").unwrap_or(&d.workload).to_string(),
             telemetry_enabled: raw.get_bool_or("telemetry.enabled", d.telemetry_enabled)?,
             checkpoint_dir: raw
@@ -459,6 +536,59 @@ period_ms = 2.5
         assert_eq!(cfg.shard_bits, 8);
         assert!((cfg.cross_shard_prob - 0.05).abs() < 1e-12);
         assert_eq!(cfg.cluster_threads, 4);
+    }
+
+    #[test]
+    fn rebalance_keys_parse_and_default_off() {
+        let cfg = SystemConfig::from_raw(&Raw::new()).unwrap();
+        assert!(!cfg.rebalance, "rebalancer is opt-in");
+        assert_eq!(cfg.rebalance_interval, 4);
+        assert!((cfg.rebalance_threshold - 1.25).abs() < 1e-12);
+        assert_eq!(cfg.rebalance_granules, 8);
+        assert!(cfg.dev_speed.is_empty(), "uniform cluster by default");
+
+        let raw = Raw::parse(
+            "[cluster]\nn_gpus = 2\nrebalance = true\nrebalance_interval = 2\n\
+             rebalance_threshold = 1.5\nrebalance_granules = 3\ndev_speed = \"1.0, 2.0\"\n",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_raw(&raw).unwrap();
+        assert!(cfg.rebalance);
+        assert_eq!(cfg.rebalance_interval, 2);
+        assert!((cfg.rebalance_threshold - 1.5).abs() < 1e-12);
+        assert_eq!(cfg.rebalance_granules, 3);
+        assert_eq!(cfg.dev_speed, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn rebalance_knobs_are_validated() {
+        for bad in [
+            "cluster.rebalance_interval=0",
+            "cluster.rebalance_threshold=1.0",
+            "cluster.rebalance_threshold=NaN",
+            "cluster.rebalance_granules=0",
+        ] {
+            let mut raw = Raw::new();
+            raw.set(bad).unwrap();
+            assert!(SystemConfig::from_raw(&raw).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn dev_speed_must_match_n_gpus_and_be_positive() {
+        let mut raw = Raw::new();
+        raw.set("cluster.n_gpus=4").unwrap();
+        raw.set("cluster.dev_speed=1.0,2.0").unwrap();
+        assert!(
+            SystemConfig::from_raw(&raw).is_err(),
+            "2 factors for 4 devices must be rejected"
+        );
+        for bad in ["0.0,1.0,1.0,1.0", "-1.0,1.0,1.0,1.0", "inf,1.0,1.0,1.0"] {
+            let mut raw = Raw::new();
+            raw.set("cluster.n_gpus=4").unwrap();
+            raw.set(&format!("cluster.dev_speed={bad}")).unwrap();
+            assert!(SystemConfig::from_raw(&raw).is_err(), "{bad} must be rejected");
+        }
     }
 
     #[test]

@@ -233,6 +233,30 @@ pub struct CostModel {
     pub cpu_snapshot_bytes_per_s: f64,
 }
 
+impl CostModel {
+    /// Derive a per-device model from this baseline and a relative
+    /// compute-speed factor (`1.0` = the baseline device).  Compute
+    /// terms (kernel latency, per-transaction time, per-entry
+    /// validation, signature checks) divide by `speed` and the
+    /// device-local copy bandwidth multiplies by it; bus bandwidths and
+    /// the CPU-side snapshot rate describe the host interconnect and
+    /// are left untouched.  `scaled(1.0)` is a bitwise identity (IEEE
+    /// `x / 1.0 == x`), which keeps uniform clusters bit-identical to
+    /// the pre-heterogeneous code path.
+    pub fn scaled(&self, speed: f64) -> CostModel {
+        CostModel {
+            bus_h2d: self.bus_h2d,
+            bus_d2h: self.bus_d2h,
+            gpu_kernel_latency_s: self.gpu_kernel_latency_s / speed,
+            gpu_txn_s: self.gpu_txn_s / speed,
+            gpu_validate_entry_s: self.gpu_validate_entry_s / speed,
+            gpu_sig_check_s: self.gpu_sig_check_s / speed,
+            gpu_dtd_bytes_per_s: self.gpu_dtd_bytes_per_s * speed,
+            cpu_snapshot_bytes_per_s: self.cpu_snapshot_bytes_per_s,
+        }
+    }
+}
+
 impl Default for CostModel {
     fn default() -> Self {
         CostModel {
@@ -909,6 +933,7 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
                 &carried_shards,
                 self.cpu.stmr(),
                 stats_fnv,
+                None,
             )? {
                 self.tel.record_checkpoint(&sum);
             }

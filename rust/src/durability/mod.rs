@@ -111,11 +111,19 @@ pub enum CrashPoint {
     CorruptManifestByte,
     /// Complete the checkpoint intact, then die between rounds.
     AfterCheckpoint,
+    /// Die at the cluster round barrier in the middle of a shard
+    /// migration: the rebalancer has picked a move and scheduled the page
+    /// DMA, but the next layout epoch is not yet installed.  Fired by the
+    /// cluster engine (not the checkpoint writer), so it leaves no torn
+    /// checkpoint files — recovery replays from the last complete
+    /// checkpoint and the deterministic rebalancer re-makes the same
+    /// decision (DESIGN.md §14).
+    MidMigration,
 }
 
 impl CrashPoint {
     /// Every crash point, in write order (test matrices sweep this).
-    pub const ALL: [CrashPoint; 8] = [
+    pub const ALL: [CrashPoint; 9] = [
         CrashPoint::MidPageWrite,
         CrashPoint::AfterPages,
         CrashPoint::MidWalAppend,
@@ -124,6 +132,7 @@ impl CrashPoint {
         CrashPoint::CorruptPageByte,
         CrashPoint::CorruptManifestByte,
         CrashPoint::AfterCheckpoint,
+        CrashPoint::MidMigration,
     ];
 
     /// Parse the config/CLI spelling (`durability.crash_point`).
@@ -137,10 +146,11 @@ impl CrashPoint {
             "corrupt-page-byte" => CrashPoint::CorruptPageByte,
             "corrupt-manifest-byte" => CrashPoint::CorruptManifestByte,
             "after-checkpoint" => CrashPoint::AfterCheckpoint,
+            "mid-migration" => CrashPoint::MidMigration,
             other => bail!(
                 "unknown crash point {other:?} (mid-page-write|after-pages|\
                  mid-wal-append|after-wal|mid-manifest|corrupt-page-byte|\
-                 corrupt-manifest-byte|after-checkpoint)"
+                 corrupt-manifest-byte|after-checkpoint|mid-migration)"
             ),
         })
     }
@@ -156,15 +166,17 @@ impl CrashPoint {
             CrashPoint::CorruptPageByte => "corrupt-page-byte",
             CrashPoint::CorruptManifestByte => "corrupt-manifest-byte",
             CrashPoint::AfterCheckpoint => "after-checkpoint",
+            CrashPoint::MidMigration => "mid-migration",
         }
     }
 
     /// Whether crashing here leaves the in-flight checkpoint unusable,
     /// forcing recovery to fall back to the previous complete one.
-    /// Every point does except [`CrashPoint::AfterCheckpoint`], which
-    /// fires after the manifest (the commit point) is durable.
+    /// Every point does except [`CrashPoint::AfterCheckpoint`] and
+    /// [`CrashPoint::MidMigration`], which fire outside the checkpoint
+    /// write (after the manifest commit point / at the migration barrier).
     pub fn tears_checkpoint(&self) -> bool {
-        !matches!(self, CrashPoint::AfterCheckpoint)
+        !matches!(self, CrashPoint::AfterCheckpoint | CrashPoint::MidMigration)
     }
 }
 
@@ -292,13 +304,33 @@ impl DurabilityHook {
         self.interval_rounds > 0 && round > 0 && round % self.interval_rounds == 0
     }
 
+    /// Cluster-engine entry point for the migration fault: simulate
+    /// process death if a [`CrashPoint::MidMigration`] plan is armed and
+    /// `round` (same numbering as [`DurabilityHook::maybe_checkpoint`])
+    /// has reached its eligibility.  Called by the rebalancer after the
+    /// move is chosen and the page DMA scheduled, before the new layout
+    /// epoch installs — so nothing durable records the aborted migration
+    /// and deterministic replay re-makes the identical decision.
+    pub fn crash_mid_migration(&self, round: u64) -> Result<()> {
+        if let Some(p) = self.plan {
+            if p.point == CrashPoint::MidMigration && round >= p.at_round {
+                return Err(crash(CrashPoint::MidMigration, round));
+            }
+        }
+        Ok(())
+    }
+
     /// Barrier-time entry point: write a checkpoint if one is due.
     ///
     /// Must be called after the round's epoch rebase, so each shard of
     /// `carried` holds exactly the entries (renumbered `ts = 1..=k`) that
     /// will seed the next round — the prefix recovery replays through
-    /// `inject_external`.  Returns the summary for telemetry, or `None`
-    /// when no checkpoint was due.
+    /// `inject_external`.  `layout` is the cluster engine's versioned
+    /// shard-ownership table at the barrier (`None` on the single-device
+    /// engine, and accepted as absent by the lenient manifest parser for
+    /// pre-versioned checkpoints); recovery restores and verifies it
+    /// bit-exactly.  Returns the summary for telemetry, or `None` when no
+    /// checkpoint was due.
     pub fn maybe_checkpoint(
         &mut self,
         round: u64,
@@ -307,6 +339,7 @@ impl DurabilityHook {
         carried: &[&[WriteEntry]],
         stmr: &SharedStmr,
         stats_fnv: u64,
+        layout: Option<&crate::cluster::shard::LayoutDesc>,
     ) -> Result<Option<CheckpointSummary>> {
         if !self.due(round) {
             return Ok(None);
@@ -379,6 +412,13 @@ impl DurabilityHook {
         man.push_str(&format!("n_shards = {}\n", carried.len()));
         man.push_str(&format!("stats_fnv = {stats_fnv:016x}\n"));
         man.push_str(&format!("stmr_fnv = {image_sum:016x}\n"));
+        if let Some(l) = layout {
+            // Versioned shard layout (DESIGN.md §14): covered by the
+            // trailing whole-manifest checksum like every other line.
+            man.push_str(&format!("layout_epoch = {}\n", l.epoch));
+            man.push_str(&format!("layout_bits = {}\n", l.shard_bits));
+            man.push_str(&format!("layout = {}\n", l.to_rle()));
+        }
         man.push_str(&format!(
             "pages = {pages_name} {} {pages_sum:016x}\n",
             pages.len()
@@ -477,6 +517,9 @@ pub struct LoadedCheckpoint {
     pub image: Vec<i32>,
     /// Per-shard carried log at the barrier (the WAL copy).
     pub carried: Vec<Vec<WriteEntry>>,
+    /// Versioned shard layout at the barrier (`None` for single-device
+    /// checkpoints and pre-versioned manifests).
+    pub layout: Option<crate::cluster::shard::LayoutDesc>,
 }
 
 struct Manifest {
@@ -494,6 +537,9 @@ struct Manifest {
     wal_name: String,
     wal_len: usize,
     wal_sum: u64,
+    layout_epoch: Option<u64>,
+    layout_bits: u32,
+    layout_rle: Option<String>,
 }
 
 fn parse_hex(s: &str) -> Result<u64> {
@@ -537,6 +583,9 @@ fn read_manifest(dir: &Path, round: u64) -> Result<Manifest> {
         wal_name: String::new(),
         wal_len: 0,
         wal_sum: 0,
+        layout_epoch: None,
+        layout_bits: 0,
+        layout_rle: None,
     };
     for line in lines {
         let Some((k, v)) = line.split_once(" = ") else {
@@ -551,6 +600,9 @@ fn read_manifest(dir: &Path, round: u64) -> Result<Manifest> {
             "n_shards" => m.n_shards = v.parse()?,
             "stats_fnv" => m.stats_fnv = parse_hex(v)?,
             "stmr_fnv" => m.stmr_fnv = parse_hex(v)?,
+            "layout_epoch" => m.layout_epoch = Some(v.parse()?),
+            "layout_bits" => m.layout_bits = v.parse()?,
+            "layout" => m.layout_rle = Some(v.to_string()),
             "pages" | "wal" => {
                 let mut it = v.split_whitespace();
                 let (name, len, sum) = (
@@ -698,6 +750,27 @@ fn load_chain(dir: &Path, round: u64) -> Result<LoadedCheckpoint> {
     }
     let wal_body = read_payload(dir, &newest.wal_name, newest.wal_len, newest.wal_sum)?;
     let carried = parse_wal(&wal_body, newest.n_shards)?;
+    let layout = match (&newest.layout_rle, newest.layout_epoch) {
+        (Some(rle), Some(epoch)) => {
+            let owners = crate::cluster::shard::LayoutDesc::parse_rle(rle)
+                .ok_or_else(|| anyhow!("checkpoint {round}: malformed layout table"))?;
+            let expect = newest
+                .n_words
+                .div_ceil(1usize << newest.layout_bits.min(usize::BITS - 1));
+            if owners.len() != expect {
+                bail!(
+                    "checkpoint {round}: layout covers {} blocks, expected {expect}",
+                    owners.len()
+                );
+            }
+            Some(crate::cluster::shard::LayoutDesc {
+                epoch,
+                shard_bits: newest.layout_bits,
+                owners,
+            })
+        }
+        _ => None,
+    };
     Ok(LoadedCheckpoint {
         round: newest.round,
         prev: newest.prev,
@@ -707,6 +780,7 @@ fn load_chain(dir: &Path, round: u64) -> Result<LoadedCheckpoint> {
         stats_fnv: newest.stats_fnv,
         image,
         carried,
+        layout,
     })
 }
 
@@ -940,7 +1014,7 @@ mod tests {
         let mut hook = DurabilityHook::new(&dir, 1, 256, 0, None).unwrap();
         let carried = [entry(3, 30, 1), entry(9, 90, 2)];
         let s1 = hook
-            .maybe_checkpoint(1, 0.5, 2, &[&carried], &stmr, 77)
+            .maybe_checkpoint(1, 0.5, 2, &[&carried], &stmr, 77, None)
             .unwrap()
             .unwrap();
         assert!(s1.full);
@@ -951,7 +1025,7 @@ mod tests {
         stmr.store(200, -200);
         hook.mark_entries(&[entry(5, -5, 1), entry(200, -200, 2)]);
         let s2 = hook
-            .maybe_checkpoint(2, 0.75, 0, &[&[]], &stmr, 78)
+            .maybe_checkpoint(2, 0.75, 0, &[&[]], &stmr, 78, None)
             .unwrap()
             .unwrap();
         assert!(!s2.full);
@@ -970,7 +1044,7 @@ mod tests {
         let dir = tmpdir("fallback");
         let stmr = SharedStmr::new(64);
         let mut hook = DurabilityHook::new(&dir, 1, 64, 0, None).unwrap();
-        hook.maybe_checkpoint(1, 0.1, 0, &[&[]], &stmr, 1)
+        hook.maybe_checkpoint(1, 0.1, 0, &[&[]], &stmr, 1, None)
             .unwrap()
             .unwrap();
         stmr.store(0, 42);
@@ -981,7 +1055,7 @@ mod tests {
             at_round: 2,
         });
         let err = hook
-            .maybe_checkpoint(2, 0.2, 0, &[&[]], &stmr, 2)
+            .maybe_checkpoint(2, 0.2, 0, &[&[]], &stmr, 2, None)
             .unwrap_err();
         assert!(is_simulated_crash(&err), "{err}");
         let ck = load_latest(&dir).unwrap().unwrap();
@@ -995,7 +1069,7 @@ mod tests {
         let stmr = SharedStmr::new(64);
         stmr.store(7, 7);
         let mut hook = DurabilityHook::new(&dir, 1, 64, 0, None).unwrap();
-        hook.maybe_checkpoint(1, 0.1, 0, &[&[entry(7, 7, 1)]], &stmr, 1)
+        hook.maybe_checkpoint(1, 0.1, 0, &[&[entry(7, 7, 1)]], &stmr, 1, None)
             .unwrap()
             .unwrap();
         for name in ["ckpt-00000001.pages", "ckpt-00000001.wal", "ckpt-00000001.manifest"] {

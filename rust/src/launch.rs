@@ -16,7 +16,7 @@ use anyhow::{bail, Result};
 use crate::apps::memcached::{init_cache_words, McConfig, McCpu, McGpu, McWorld};
 use crate::apps::synth::{SynthCpu, SynthGpu, SynthSpec};
 use crate::apps::workload::Workload;
-use crate::cluster::{ClusterEngine, ShardMap};
+use crate::cluster::{ClusterEngine, RebalanceCfg, ShardMap};
 use crate::config::{GuestKind, SystemConfig};
 use crate::coordinator::parallel::ParallelCpuDriver;
 use crate::coordinator::round::{
@@ -178,6 +178,12 @@ pub fn build_memcached_engine(
 /// `n_gpus` itself is capped at the region size — one word per device is
 /// the hard floor — so absurd `--gpus` values degrade instead of
 /// panicking in `ShardMap::new`.
+///
+/// With `cluster.dev_speed` factors configured the initial layout is the
+/// load-proportional [`ShardMap::proportional`] (a faster device starts
+/// with proportionally more blocks); uniform factors reproduce the
+/// default stripe exactly, so setting `dev_speed = "1,1,..,1"` is
+/// bit-identical to leaving it unset.
 pub fn shard_map(cfg: &SystemConfig, n_words: usize) -> ShardMap {
     let n_gpus = cfg.n_gpus.clamp(1, n_words.max(1));
     let fits = |bits: u32| {
@@ -190,7 +196,34 @@ pub fn shard_map(cfg: &SystemConfig, n_words: usize) -> ShardMap {
     while bits > 0 && !fits(bits) {
         bits -= 1;
     }
-    ShardMap::new(n_words, n_gpus, bits)
+    if n_gpus > 1 && cfg.dev_speed.len() == n_gpus {
+        ShardMap::proportional(n_words, n_gpus, bits, &cfg.dev_speed)
+    } else {
+        ShardMap::new(n_words, n_gpus, bits)
+    }
+}
+
+/// Wire the cluster-only config knobs into a built engine: worker
+/// threads, per-device speed factors (scaled cost models), and the
+/// round-barrier rebalancer (DESIGN.md §14).  Speed factors are applied
+/// only when their count matches the (possibly clamped) device count —
+/// `shard_map` may have reduced `n_gpus` on tiny regions, and a stale
+/// factor list must not panic the builder there.
+pub fn apply_cluster_knobs<C: CpuDriver, G: GpuDriver + Send>(
+    cfg: &SystemConfig,
+    engine: &mut ClusterEngine<C, G>,
+) {
+    engine.set_threads(cfg.cluster_threads);
+    if !cfg.dev_speed.is_empty() && cfg.dev_speed.len() == engine.n_gpus() {
+        engine.set_dev_speeds(&cfg.dev_speed);
+    }
+    if cfg.rebalance {
+        engine.set_rebalance(Some(RebalanceCfg {
+            interval: cfg.rebalance_interval,
+            threshold: cfg.rebalance_threshold,
+            max_granules: cfg.rebalance_granules,
+        }));
+    }
 }
 
 /// Assemble a synthetic-workload cluster engine over `cluster.n_gpus`
@@ -249,7 +282,7 @@ pub fn build_synth_cluster_engine(
         cpu,
         gpus,
     );
-    engine.set_threads(cfg.cluster_threads);
+    apply_cluster_knobs(cfg, &mut engine);
     engine.align_replicas();
     engine
 }
@@ -306,7 +339,7 @@ pub fn build_memcached_cluster_engine(
         cpu,
         gpus,
     );
-    engine.set_threads(cfg.cluster_threads);
+    apply_cluster_knobs(cfg, &mut engine);
     engine.align_replicas();
     engine
 }
@@ -406,7 +439,7 @@ pub fn build_workload_cluster_engine(
         cpu,
         gpus,
     );
-    engine.set_threads(cfg.cluster_threads);
+    apply_cluster_knobs(cfg, &mut engine);
     engine.align_replicas();
     engine
 }

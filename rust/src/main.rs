@@ -52,6 +52,7 @@ struct Cli {
     trace: Option<String>,
     checkpoint_dir: Option<String>,
     recover: bool,
+    rebalance: bool,
 }
 
 fn parse_cli() -> Result<Cli> {
@@ -81,6 +82,7 @@ fn parse_cli() -> Result<Cli> {
     let mut trace = None;
     let mut checkpoint_dir = None;
     let mut recover = false;
+    let mut rebalance = false;
     while let Some(a) = args.next() {
         match a.as_str() {
             "--config" => {
@@ -124,6 +126,7 @@ fn parse_cli() -> Result<Cli> {
                 checkpoint_dir = Some(args.next().context("--checkpoint-dir needs a path")?);
             }
             "--recover" => recover = true,
+            "--rebalance" => rebalance = true,
             "--basic" => basic = true,
             "--pjrt" => pjrt = true,
             other => bail!("unknown argument {other:?} (try `shetm help`)"),
@@ -141,6 +144,7 @@ fn parse_cli() -> Result<Cli> {
         trace,
         checkpoint_dir,
         recover,
+        rebalance,
     })
 }
 
@@ -186,6 +190,9 @@ fn system_config(cli: &Cli) -> Result<SystemConfig> {
     }
     if let Some(d) = &cli.checkpoint_dir {
         cfg.checkpoint_dir = d.clone();
+    }
+    if cli.rebalance {
+        cfg.rebalance = true;
     }
     // CI-friendly fault injection: the crash plan can ride in on the
     // environment so a sweep script does not have to rewrite configs.
@@ -421,13 +428,19 @@ OPTIONS:
   --recover         (run command) resume from the newest complete
                     checkpoint in the checkpoint dir, replay the journal
                     prefix, verify bit-exactly, then run the remaining
-                    rounds; crash injection is disabled on this run
+                    rounds; crash injection is disabled on this run;
+                    --gpus / cluster.shard_bits must match the
+                    checkpoint's recorded shard layout
+  --rebalance       enable the online round-barrier shard rebalancer
+                    (cluster only; DESIGN.md §14): migrate hot ownership
+                    blocks from the most to the least loaded device
 
 ENVIRONMENT:
   SHETM_CRASH_POINT   arm deterministic fault injection at a checkpoint:
                       mid-page-write|after-pages|mid-wal-append|after-wal|
                       mid-manifest|corrupt-page-byte|corrupt-manifest-byte|
-                      after-checkpoint (overrides durability.crash_point)
+                      after-checkpoint|mid-migration (overrides
+                      durability.crash_point)
   SHETM_CRASH_ROUND   first round the armed crash may fire at (default 0)
   SHETM_CRASH_KILL=1  crash via process exit(3) instead of an error
 
@@ -443,7 +456,10 @@ KEYS (defaults): stmr.n_words=262144 stmr.bmp_shift=0 cpu.threads=8
   bus.latency_us bus.gbps gpu.kernel_latency_us gpu.txn_ns
   gpu.validate_entry_ns gpu.sig_check_ns=250
   cluster.n_gpus=1 cluster.shard_bits=12 cluster.cross_shard_prob=0
-  cluster.threads=1
+  cluster.threads=1 cluster.rebalance=false cluster.rebalance_interval=4
+  cluster.rebalance_threshold=1.25 cluster.rebalance_granules=8
+  cluster.dev_speed= (comma list, e.g. \"1,2,1,1\": per-device speed
+  factors — scaled cost models + load-proportional initial layout)
   telemetry.enabled=false (labeled metrics + latency histograms at every
   round barrier; zero-overhead when off)
   durability.checkpoint_dir= (empty = off) durability.interval_rounds=1
@@ -453,4 +469,5 @@ KEYS (defaults): stmr.n_words=262144 stmr.bmp_shift=0 cpu.threads=8
   bank.accounts bank.balance bank.max_transfer bank.update_frac
   bank.cross_prob kmeans.k kmeans.dim kmeans.points kmeans.probe
   kmeans.hot_prob zipfkv.keys zipfkv.theta zipfkv.update_frac
-  zipfkv.hot_keys zipfkv.hot_prob";
+  zipfkv.hot_keys zipfkv.hot_prob zipfkv.cpu_hot_prob zipfkv.hot_stride
+  zipfkv.drift";

@@ -141,6 +141,29 @@ pub enum BuildError {
         /// STMR words available.
         words: usize,
     },
+    /// `dev_speed` does not describe the cluster: one finite positive
+    /// factor per device is required.
+    DevSpeed {
+        /// Factors supplied.
+        factors: usize,
+        /// Devices configured.
+        gpus: usize,
+    },
+    /// [`Session::recover`] was invoked with a configuration whose shard
+    /// layout shape contradicts the checkpoint's recorded one (device
+    /// count or ownership-block shift).  Replaying under a different
+    /// layout would route every log chunk differently and is guaranteed
+    /// to diverge, so it is rejected before any replay work.
+    LayoutMismatch {
+        /// Devices this session is configured for.
+        gpus: usize,
+        /// Ownership-block shift this session would build.
+        shard_bits: u32,
+        /// Devices the checkpoint was written by.
+        ck_gpus: usize,
+        /// Ownership-block shift the checkpoint recorded.
+        ck_shard_bits: u32,
+    },
     /// `parallel_cpu` is only implemented for the synthetic workload
     /// (its disjoint-partition workers satisfy the determinism contract
     /// of [`crate::coordinator::ParallelCpuDriver`]).
@@ -213,6 +236,24 @@ impl std::fmt::Display for BuildError {
                 "shard layout does not fit: {gpus} devices x 2^{shard_bits}-word \
                  ownership blocks exceed the {words}-word STMR; lower \
                  shard_bits or leave it default to auto-clamp"
+            ),
+            BuildError::DevSpeed { factors, gpus } => write!(
+                f,
+                "cluster.dev_speed lists {factors} factors for {gpus} devices \
+                 (one finite positive factor per device is required)"
+            ),
+            BuildError::LayoutMismatch {
+                gpus,
+                shard_bits,
+                ck_gpus,
+                ck_shard_bits,
+            } => write!(
+                f,
+                "recovery layout mismatch: the checkpoint was written by \
+                 {ck_gpus} devices with 2^{ck_shard_bits}-word ownership \
+                 blocks, but this session is configured for {gpus} devices \
+                 with 2^{shard_bits}-word blocks; recover with the original \
+                 --gpus / cluster.shard_bits"
             ),
             BuildError::ParallelCpuUnsupported { workload } => write!(
                 f,
@@ -437,6 +478,37 @@ impl Hetm {
         self
     }
 
+    /// Enable the online round-barrier rebalancer (`cluster.rebalance`):
+    /// migrate hot ownership blocks from the most loaded device to the
+    /// least loaded one at the synchronization barrier (DESIGN.md §14).
+    /// Off by default — the layout then stays bit-identical to the
+    /// static one.
+    pub fn rebalance(mut self, on: bool) -> Self {
+        self.cfg.rebalance = on;
+        self
+    }
+
+    /// Rebalancer tuning: observation window in rounds, trigger
+    /// threshold (migrate when the hottest device's windowed load
+    /// exceeds `threshold` × the mean), and the per-migration cap on
+    /// moved ownership blocks.
+    pub fn rebalance_tuning(mut self, interval: usize, threshold: f64, granules: usize) -> Self {
+        self.cfg.rebalance_interval = interval;
+        self.cfg.rebalance_threshold = threshold;
+        self.cfg.rebalance_granules = granules;
+        self
+    }
+
+    /// Per-device relative speed factors (`cluster.dev_speed`): each
+    /// factor scales that device's cost model, and the initial shard
+    /// layout becomes load-proportional ([`ShardMap::proportional`]).
+    /// One finite positive factor per device (validated at
+    /// [`Hetm::build`]); empty = uniform cluster.
+    pub fn dev_speeds(mut self, speeds: &[f64]) -> Self {
+        self.cfg.dev_speed = speeds.to_vec();
+        self
+    }
+
     /// Device batch size (transactions per kernel activation; must match
     /// the compiled artifact's `b` under the PJRT backend).
     pub fn gpu_batch(mut self, n: usize) -> Self {
@@ -602,6 +674,15 @@ impl Hetm {
         if cfg.policy == PolicyKind::CpuWithStarvationGuard && cfg.gpu_starvation_limit == 0 {
             return Err(BuildError::ZeroStarvationLimit);
         }
+        if !cfg.dev_speed.is_empty()
+            && (cfg.dev_speed.len() != cfg.n_gpus
+                || cfg.dev_speed.iter().any(|s| !s.is_finite() || *s <= 0.0))
+        {
+            return Err(BuildError::DevSpeed {
+                factors: cfg.dev_speed.len(),
+                gpus: cfg.n_gpus,
+            });
+        }
 
         // --- Workload resolution -----------------------------------------
         // Synth specs are kept alongside when `cpu.parallel` needs them.
@@ -733,7 +814,7 @@ impl Hetm {
                     cpu,
                     gpus,
                 );
-                engine.set_threads(cfg.cluster_threads);
+                launch::apply_cluster_knobs(&cfg, &mut engine);
                 engine.align_replicas();
                 Inner::Cluster(Box::new(engine))
             } else {
@@ -779,7 +860,7 @@ impl Hetm {
                 cpu,
                 gpus,
             );
-            engine.set_threads(cfg.cluster_threads);
+            launch::apply_cluster_knobs(&cfg, &mut engine);
             engine.align_replicas();
             Inner::Cluster(Box::new(engine))
         } else {
@@ -989,6 +1070,17 @@ impl Session {
     /// Whether the cluster engine is running underneath.
     pub fn is_cluster(&self) -> bool {
         matches!(self.inner, Inner::Cluster(_))
+    }
+
+    /// Descriptor of the versioned shard layout — epoch, block shift,
+    /// and the block → device owner table (`None` on the single-device
+    /// engine, which has no layout to version).  The epoch starts at 0
+    /// and bumps once per installed migration.
+    pub fn layout_desc(&self) -> Option<crate::cluster::LayoutDesc> {
+        match &self.inner {
+            Inner::Single(_) => None,
+            Inner::Cluster(e) => Some(e.map.desc()),
+        }
     }
 
     /// Current virtual time.
@@ -1243,6 +1335,33 @@ impl Session {
             s.arm_durability(dir, interval, plan, None)?;
             return Ok(s);
         };
+        // --- Typed layout-shape gate (before any replay work) ------------
+        // A different device count or block shift cannot replay the
+        // checkpointed run: every log chunk would route differently.
+        // Shape mismatches are caller configuration errors, so they get
+        // the typed [`BuildError::LayoutMismatch`]; epoch/owner-table
+        // divergence after a shape-correct replay is an internal error
+        // and stays a divergence bail below.
+        let built = s.layout_desc();
+        let built_gpus = s.n_gpus();
+        let ck_gpus = ck
+            .layout
+            .as_ref()
+            .map_or(ck.carried.len(), |l| l.n_shards());
+        let built_bits = built.as_ref().map_or(0, |l| l.shard_bits);
+        let ck_bits = ck.layout.as_ref().map_or(0, |l| l.shard_bits);
+        if built_gpus != ck_gpus
+            || (ck_gpus > 1 && ck.layout.is_some() && built_bits != ck_bits)
+        {
+            return Err(BuildError::LayoutMismatch {
+                gpus: built_gpus,
+                shard_bits: built_bits,
+                ck_gpus,
+                ck_shard_bits: ck_bits,
+            }
+            .into());
+        }
+
         let records = ExternalJournal::load(path)?;
         for rec in &records {
             if rec.after_round >= ck.round {
@@ -1302,6 +1421,27 @@ impl Session {
         for (i, (got, want)) in carried.iter().zip(&ck.carried).enumerate() {
             if got != want {
                 bail!("recovery divergence: shard {i} carried log differs");
+            }
+        }
+        // The shard layout must have replayed bit-exactly too: the
+        // deterministic rebalancer re-makes every migration, so epoch
+        // and owner table land exactly where the checkpoint recorded
+        // them (DESIGN.md §14).
+        if let Some(want) = &ck.layout {
+            match s.layout_desc() {
+                Some(got) if got == *want => {}
+                Some(got) => bail!(
+                    "recovery divergence: replayed shard layout (epoch {}) \
+                     differs from checkpoint layout (epoch {}) — was the \
+                     rebalancer configured differently?",
+                    got.epoch,
+                    want.epoch
+                ),
+                None => bail!(
+                    "recovery divergence: checkpoint {} records a shard \
+                     layout but the session is single-device",
+                    ck.round
+                ),
             }
         }
 

@@ -111,6 +111,15 @@ impl MetricsSnapshot {
                 cl.refresh_bytes / 1024,
                 cl.refresh_transfers
             );
+            let _ = writeln!(
+                out,
+                "  shard imbalance   : {:.3} max/mean shipped | {} migrations, \
+                 {} blocks, {} KiB",
+                cl.shipped_imbalance(),
+                cl.migrations,
+                cl.granules_moved,
+                cl.migrated_bytes / 1024
+            );
             for (d, dev) in cl.per_device.iter().enumerate() {
                 let _ = writeln!(
                     out,
@@ -192,6 +201,7 @@ impl MetricsSnapshot {
                     .u64("conflict_entries", dev.conflict_entries)
                     .u64("refresh_bytes", dev.refresh_bytes)
                     .u64("refresh_transfers", dev.refresh_transfers)
+                    .u64("shipped_entries", dev.shipped_entries)
                     .raw("phases", &Self::phases_json(&dev.phases))
                     .finish(),
             );
@@ -204,6 +214,10 @@ impl MetricsSnapshot {
             .f64("cross_shard_abort_rate", c.cross_shard_abort_rate(s.rounds), 6)
             .u64("refresh_bytes", c.refresh_bytes)
             .u64("refresh_transfers", c.refresh_transfers)
+            .f64("shard_imbalance", c.shipped_imbalance(), 6)
+            .u64("migrations", c.migrations)
+            .u64("granules_moved", c.granules_moved)
+            .u64("migrated_bytes", c.migrated_bytes)
             .raw("per_device", &devs.finish())
             .finish()
     }
@@ -253,6 +267,20 @@ impl MetricsSnapshot {
     /// Histograms are rendered as summaries (`quantile` labels).
     pub fn to_prometheus(&self) -> String {
         let mut out = String::new();
+        // The shard-balance family is derived from `ClusterStats` rather
+        // than the live registry, so it exports even with telemetry off.
+        if let Some(cl) = &self.cluster {
+            let _ = writeln!(out, "# TYPE cluster_shard_imbalance gauge");
+            let _ = writeln!(
+                out,
+                "cluster_shard_imbalance {:.9}",
+                cl.shipped_imbalance()
+            );
+            let _ = writeln!(out, "# TYPE cluster_migrations_total counter");
+            let _ = writeln!(out, "cluster_migrations_total {}", cl.migrations);
+            let _ = writeln!(out, "# TYPE cluster_granules_moved_total counter");
+            let _ = writeln!(out, "cluster_granules_moved_total {}", cl.granules_moved);
+        }
         let Some(reg) = &self.registry else {
             return out;
         };
@@ -384,6 +412,29 @@ mod tests {
         assert!(p.contains("# TYPE hetm_bus_h2d_seconds summary"));
         assert!(p.contains("hetm_bus_h2d_seconds{device=\"0\",quantile=\"0.5\"}"));
         assert!(p.contains("hetm_bus_h2d_seconds_count{device=\"0\"} 1"));
+    }
+
+    #[test]
+    fn shard_balance_family_exports_without_a_registry() {
+        let mut snap = MetricsSnapshot::from_run_stats("demo", &stats());
+        let mut cl = crate::cluster::ClusterStats::new(2);
+        cl.per_device[0].shipped_entries = 30;
+        cl.per_device[1].shipped_entries = 10;
+        cl.migrations = 2;
+        cl.granules_moved = 5;
+        cl.migrated_bytes = 4096;
+        snap.cluster = Some(cl);
+        let text = snap.render_text();
+        assert!(text.contains("shard imbalance   : 1.500 max/mean shipped"));
+        assert!(text.contains("2 migrations, 5 blocks, 4 KiB"));
+        let j = snap.to_json();
+        assert!(j.contains("\"shard_imbalance\":1.500000"));
+        assert!(j.contains("\"migrations\":2"));
+        assert!(j.contains("\"shipped_entries\":30"));
+        let p = snap.to_prometheus();
+        assert!(p.contains("# TYPE cluster_shard_imbalance gauge"));
+        assert!(p.contains("cluster_shard_imbalance 1.5"));
+        assert!(p.contains("cluster_migrations_total 2"));
     }
 
     #[test]

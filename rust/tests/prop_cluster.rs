@@ -9,7 +9,7 @@
 //!   lossless (same multiset of entries), places every entry on its
 //!   owner's log, and preserves per-shard arrival order.
 
-use shetm::cluster::{LogRouter, ShardMap};
+use shetm::cluster::{LayoutDesc, LogRouter, ShardMap};
 use shetm::stm::WriteEntry;
 use shetm::util::prop::{forall, Cases};
 use shetm::util::Rng;
@@ -158,6 +158,138 @@ fn routing_then_reassembly_is_lossless() {
                 want.len(),
                 have.len()
             ));
+        }
+        Ok(())
+    });
+}
+
+/// Check the partition invariant on `map`'s current table: every word is
+/// owned by exactly one shard, `owned_ranges` agrees with `owner()`, and
+/// no shard has been starved of its last block.
+fn check_partition(map: &ShardMap) -> Result<(), String> {
+    let mut owners = vec![usize::MAX; map.n_words()];
+    for shard in 0..map.n_shards() {
+        let ranges = map.owned_ranges(shard);
+        if ranges.is_empty() {
+            return Err(format!("shard {shard} starved of blocks in {map:?}"));
+        }
+        for (s, e) in ranges {
+            for w in s..e {
+                if owners[w] != usize::MAX {
+                    return Err(format!("word {w} owned twice in {map:?}"));
+                }
+                owners[w] = shard;
+            }
+        }
+    }
+    for (w, &o) in owners.iter().enumerate() {
+        if o == usize::MAX {
+            return Err(format!("word {w} unowned in {map:?}"));
+        }
+        if o != map.owner(w) {
+            return Err(format!(
+                "word {w}: ranges say {o}, owner() says {} in {map:?}",
+                map.owner(w)
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Random migrations never break the partition, never starve a shard,
+/// and bump the layout epoch monotonically (at most +1 per call; exactly
+/// +0 when nothing moved).  Clones share the table, so an old handle must
+/// observe every new epoch.
+#[test]
+fn migration_keeps_the_partition_and_epochs_monotone() {
+    forall(Cases::new("migration_partition", 120), |rng, size| {
+        let map = draw_map(rng, size);
+        let old_handle = map.clone();
+        if map.epoch() != 0 {
+            return Err(format!("fresh layout at epoch {}", map.epoch()));
+        }
+        let mut last = 0u64;
+        for _ in 0..8 {
+            let n_moves = 1 + rng.below_usize(3);
+            let blocks: Vec<usize> = (0..n_moves)
+                .map(|_| rng.below_usize(map.n_blocks()))
+                .collect();
+            let to = rng.below_usize(map.n_shards());
+            let epoch = map.migrate(&blocks, to);
+            if epoch < last || epoch > last + 1 {
+                return Err(format!(
+                    "epoch jumped {last} -> {epoch} migrating {blocks:?} to {to}"
+                ));
+            }
+            last = epoch;
+            if old_handle.epoch() != epoch {
+                return Err(format!(
+                    "stale clone at epoch {} after install of {epoch}",
+                    old_handle.epoch()
+                ));
+            }
+            check_partition(&map)?;
+        }
+        Ok(())
+    });
+}
+
+/// Scattering a stream through a migrated layout is indistinguishable
+/// from scattering through a static layout with the same owner table:
+/// every entry lands on the shard `desc().owners` names, losslessly.
+/// The manifest RLE codec must round-trip that same table bit-exactly.
+#[test]
+fn migrated_scatter_matches_the_equivalent_static_table() {
+    forall(Cases::new("migrated_scatter", 100), |rng, size| {
+        let map = draw_map(rng, size);
+        // The router's handle shares the table: migrations done after
+        // construction govern the scatter of later appends.
+        let mut router = LogRouter::new(map.clone(), 1 + rng.below_usize(8));
+        for _ in 0..4 {
+            let b = rng.below_usize(map.n_blocks());
+            let to = rng.below_usize(map.n_shards());
+            map.migrate(&[b], to);
+        }
+        let desc = map.desc();
+        if LayoutDesc::parse_rle(&desc.to_rle()).as_ref() != Some(&desc.owners) {
+            return Err(format!("RLE round-trip mangled {:?}", desc.owners));
+        }
+
+        let n_entries = rng.below_usize(4 * size + 8);
+        let entries: Vec<WriteEntry> = (0..n_entries)
+            .map(|i| WriteEntry {
+                addr: rng.below_usize(map.n_words()) as u32,
+                val: rng.below(1 << 20) as i32,
+                ts: i as i32 + 1,
+            })
+            .collect();
+        router.append(&entries);
+
+        let mut seen = 0usize;
+        for shard in 0..map.n_shards() {
+            let mut chunks = Vec::new();
+            router.drain_all(shard, &mut chunks);
+            for c in &chunks {
+                for &a in c.addrs.iter() {
+                    if a < 0 {
+                        continue;
+                    }
+                    seen += 1;
+                    // The static equivalent: a plain table lookup on the
+                    // frozen descriptor must name this exact shard.
+                    let block = (a as usize) >> desc.shard_bits;
+                    if desc.owners[block] as usize != shard {
+                        return Err(format!(
+                            "word {a} on shard {shard}, static table says {} \
+                             (epoch {})",
+                            desc.owners[block], desc.epoch
+                        ));
+                    }
+                }
+            }
+        }
+        if seen != entries.len() {
+            return Err(format!("routed {seen} of {} entries", entries.len()));
         }
         Ok(())
     });

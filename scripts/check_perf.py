@@ -56,6 +56,27 @@ BENCHES = {
             "speedup_vs_threads1",
         ),
     },
+    "bench_rebalance": {
+        "identity": ("arm", "drift_keys", "threads"),
+        "metrics": {
+            "virtual_tx_per_s": +1,
+            "round_abort_rate": -1,
+            "shard_imbalance": -1,
+        },
+        "schema": (
+            "arm",
+            "drift_keys",
+            "threads",
+            "wall_s",
+            "virtual_tx_per_s",
+            "round_abort_rate",
+            "shard_imbalance",
+            "migrations",
+            "granules_moved",
+            "migrated_kib",
+            "layout_epoch",
+        ),
+    },
     "ablate_log": {
         "identity": ("theta", "compaction", "filter"),
         "metrics": {

@@ -1,7 +1,7 @@
 #!/usr/bin/env sh
-# Regenerate the committed perf-gate baselines (BENCH_scale.json and
-# BENCH_log.json at the repo root) from real runs, then self-check them
-# with scripts/check_perf.py.
+# Regenerate the committed perf-gate baselines (BENCH_scale.json,
+# BENCH_log.json and BENCH_rebalance.json at the repo root) from real
+# runs, then self-check them with scripts/check_perf.py.
 #
 # The gated metrics are virtual-time deterministic (docs/BENCHMARKS.md),
 # so ANY machine produces valid baseline numbers — wall-clock fields are
@@ -17,11 +17,13 @@ cd "$(dirname "$0")/.."
 
 SHETM_BENCH_FAST=1 cargo bench --bench scale_gpus
 SHETM_BENCH_FAST=1 cargo bench --bench ablate_log
+SHETM_BENCH_FAST=1 cargo bench --bench bench_rebalance
 
 # Self-comparison validates the schema and confirms the files are
 # armed (a provisional/empty result would only print a notice).
 python3 scripts/check_perf.py BENCH_scale.json BENCH_scale.json
 python3 scripts/check_perf.py BENCH_log.json BENCH_log.json
+python3 scripts/check_perf.py BENCH_rebalance.json BENCH_rebalance.json
 
 echo "Baselines regenerated. Review and commit:"
-git status --short BENCH_scale.json BENCH_log.json
+git status --short BENCH_scale.json BENCH_log.json BENCH_rebalance.json

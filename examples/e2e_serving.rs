@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
     let rounds = 6;
 
     // --- PJRT run: the production path --------------------------------
+    // audit:allow(D2, reason = "demo prints real artifact-load and serving wall time; nothing feeds deterministic state")
     let t0 = Instant::now();
     let store = ArtifactStore::load(&dir)?;
     println!("loaded + compiled {} artifacts in {:?}", store.names().len(), t0.elapsed());
@@ -60,6 +61,7 @@ fn main() -> anyhow::Result<()> {
         .memcached(mc.clone())
         .backend(backend)
         .build()?;
+    // audit:allow(D2, reason = "demo prints real artifact-load and serving wall time; nothing feeds deterministic state")
     let t1 = Instant::now();
     session.run_rounds(rounds)?;
     let wall = t1.elapsed();

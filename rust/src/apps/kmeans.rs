@@ -473,6 +473,7 @@ pub struct KmeansWorkload {
 impl KmeansWorkload {
     /// Wrap a config; `seed` fixes the point coordinates.
     pub fn new(cfg: KmeansConfig, seed: u64) -> Self {
+        // audit:allow(D6, reason = "documented constructor contract: an invalid config is a caller bug, and validate()'s message names the bad knob")
         cfg.validate().expect("invalid kmeans config");
         let mut acc_totals = vec![0i64; cfg.dim];
         for p in 0..cfg.n_points {

@@ -312,7 +312,7 @@ impl CpuDriver for McCpu {
         let mut attempts = 0u64;
         let mut hits = 0u64;
         for _ in 0..n {
-            let req = self.world.lock().unwrap().pop_cpu();
+            let req = crate::util::sync::lock(&self.world).pop_cpu();
             if self.read_only && req.op == 1 {
                 // Starvation guard: defer update transactions (§IV-E).
                 self.deferred.push(req);
@@ -324,12 +324,12 @@ impl CpuDriver for McCpu {
             hits += hit as u64;
         }
         if !self.read_only && !self.deferred.is_empty() {
-            let mut w = self.world.lock().unwrap();
+            let mut w = crate::util::sync::lock(&self.world);
             for req in self.deferred.drain(..) {
                 w.dispatcher.submit(req, Affinity::Cpu);
             }
         }
-        self.world.lock().unwrap().get_hits += hits;
+        crate::util::sync::lock(&self.world).get_hits += hits;
         CpuSlice { commits, attempts }
     }
 
@@ -434,7 +434,7 @@ impl GpuDriver for McGpu {
             return;
         }
         let mut pulled: Vec<McRequest> = Vec::with_capacity(need);
-        self.world.lock().unwrap().pop_gpu(self.dev, need, &mut pulled);
+        crate::util::sync::lock(&self.world).pop_gpu(self.dev, need, &mut pulled);
         self.prefetch.extend(pulled);
     }
 
@@ -461,10 +461,7 @@ impl GpuDriver for McGpu {
                 }
             }
             if reqs.len() < self.batch {
-                self.world
-                    .lock()
-                    .unwrap()
-                    .pop_gpu(self.dev, self.batch, &mut reqs);
+                crate::util::sync::lock(&self.world).pop_gpu(self.dev, self.batch, &mut reqs);
             }
             let mut b = McBatch::empty(self.batch);
             for (i, r) in reqs.iter().enumerate() {
@@ -487,7 +484,7 @@ impl GpuDriver for McGpu {
                     }
                 }
             }
-            self.world.lock().unwrap().get_hits += hits;
+            crate::util::sync::lock(&self.world).get_hits += hits;
             out.commits += r.n_commits as u64;
             out.attempts += self.batch as u64;
             out.batches += 1;

@@ -313,7 +313,7 @@ impl CpuDriver for ZipfKvCpu {
         }
         // Feed the oracle's trace with exactly what this slice logged.
         if log.len() > before {
-            self.trace.lock().unwrap().record(&log[before..]);
+            crate::util::sync::lock(&self.trace).record(&log[before..]);
         }
         CpuSlice {
             commits: n,
@@ -466,7 +466,7 @@ impl GpuDriver for ZipfKvGpu {
         // Device 0 owns the round boundary of the oracle trace (every
         // device sees the same `committed` for a given round).
         if self.dev == 0 {
-            self.trace.lock().unwrap().round_end(committed);
+            crate::util::sync::lock(&self.trace).round_end(committed);
         }
     }
 }
@@ -546,10 +546,13 @@ impl Workload for ZipfKvWorkload {
         if stmr.len() != self.cfg.n_words() {
             bail!("zipfkv: STMR size mismatch");
         }
-        let trace = self.trace.lock().unwrap();
+        let trace = crate::util::sync::lock(&self.trace);
         // Per-key version monotonicity over the surviving CPU write log
         // (record order == the guest TM's commit order).
-        let mut last: std::collections::HashMap<u32, (i32, i32)> = Default::default();
+        // BTreeMap, not HashMap: the oracle iterates `last` below, and a
+        // Default-hashed order would make the first-reported failure (and
+        // any diagnostic output) vary run to run.
+        let mut last: std::collections::BTreeMap<u32, (i32, i32)> = Default::default();
         for e in trace.surviving() {
             if e.addr as usize % 2 == 0 {
                 continue; // value word
@@ -595,7 +598,7 @@ impl Workload for ZipfKvWorkload {
     }
 
     fn stats_summary(&self) -> String {
-        let t = self.trace.lock().unwrap();
+        let t = crate::util::sync::lock(&self.trace);
         format!(
             "zipfkv trace: {} surviving entries, {} rounds promoted, {} discarded",
             t.surviving().len(),
@@ -605,7 +608,7 @@ impl Workload for ZipfKvWorkload {
     }
 
     fn on_recovered(&self, carried: &[crate::stm::WriteEntry]) {
-        self.trace.lock().unwrap().on_recovered(carried);
+        crate::util::sync::lock(&self.trace).on_recovered(carried);
     }
 }
 

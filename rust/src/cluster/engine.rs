@@ -1589,9 +1589,8 @@ impl<C: CpuDriver, G: GpuDriver + Send> ClusterEngine<C, G> {
         // shard log holds exactly the renumbered carried prefix the WAL
         // must copy; zero virtual-time cost, no statistics touched, so
         // durability-on runs stay bit-identical to durability-off runs.
-        if dur.as_ref().is_some_and(|d| d.due(stats.rounds)) {
+        if let Some(hook) = dur.as_mut().filter(|d| d.due(stats.rounds)) {
             let stats_fnv = crate::durability::stats_digest(stats);
-            let hook = dur.as_mut().expect("durability hook present");
             let carried_shards: Vec<&[WriteEntry]> = (0..router.n_shards())
                 .map(|s| router.log(s).entries())
                 .collect();

@@ -132,8 +132,16 @@ impl<T> Dispatcher<T> {
                 && !self.cpu_q.is_empty()
                 && rng.chance(self.gpu_steal_prob)
             {
-                out.push(self.cpu_q.pop_front().unwrap());
-                self.stolen += 1;
+                // The emptiness check above also gates the RNG draw, so
+                // it must stay in the condition; this match only replaces
+                // the unwrap it used to justify.
+                match self.cpu_q.pop_front() {
+                    Some(r) => {
+                        out.push(r);
+                        self.stolen += 1;
+                    }
+                    None => break,
+                }
             } else {
                 break;
             }

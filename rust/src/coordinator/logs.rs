@@ -63,6 +63,7 @@ pub struct RoundLog {
     /// Live entries actually drained into chunks since the last reset.
     shipped: u64,
     /// Dedup scratch: address -> kept index (reused across drains).
+    // audit:allow(D1, reason = "lookup-only index (get/insert, never iterated); output order is driven by the entries vec")
     dedup: HashMap<u32, usize>,
     /// Retired chunk buffers awaiting reuse (DESIGN.md §12 arena): the
     /// engines hand back each round's chunks via [`Self::recycle`], so
@@ -88,6 +89,7 @@ impl RoundLog {
             sig_shift: None,
             raw_appended: 0,
             shipped: 0,
+            // audit:allow(D1, reason = "lookup-only index (get/insert, never iterated); output order is driven by the entries vec")
             dedup: HashMap::new(),
             pool: Vec::new(),
         }

@@ -107,7 +107,12 @@ impl<C: CpuDriver + Send> CpuDriver for ParallelCpuDriver<C> {
                     .collect();
                 handles
                     .into_iter()
-                    .map(|h| h.join().expect("CPU worker panicked"))
+                    .map(|h| match h.join() {
+                        Ok(slice) => slice,
+                        // Re-raise the worker's own panic payload on the
+                        // coordinator thread instead of a generic expect.
+                        Err(payload) => std::panic::resume_unwind(payload),
+                    })
                     .collect()
             });
             for sl in &slices {

@@ -922,9 +922,8 @@ impl<C: CpuDriver, G: GpuDriver> RoundEngine<C, G> {
         // the WAL must copy; costs zero virtual time and touches no
         // statistics, so durability-on runs stay bit-identical to
         // durability-off runs.
-        if self.dur.as_ref().is_some_and(|d| d.due(self.stats.rounds)) {
+        if let Some(dur) = self.dur.as_mut().filter(|d| d.due(self.stats.rounds)) {
             let stats_fnv = crate::durability::stats_digest(&self.stats);
-            let dur = self.dur.as_mut().expect("durability hook present");
             let carried_shards = [self.log.entries()];
             if let Some(sum) = dur.maybe_checkpoint(
                 self.stats.rounds,

@@ -344,6 +344,11 @@ impl DurabilityHook {
         if !self.due(round) {
             return Ok(None);
         }
+        // Wall clock is deliberate here: `write_micros` feeds only the
+        // `hetm_checkpoint_write_wall_seconds` histogram, which the
+        // deterministic snapshot view and perf gates exclude by the
+        // "wall" naming convention (DESIGN.md §15).
+        // audit:allow(D2, reason = "wall-clock-only checkpoint-write cost; excluded from deterministic snapshots and perf gates")
         let started = std::time::Instant::now();
         let full = self.prev.is_none();
         let mut ranges = std::mem::take(&mut self.ranges);
@@ -632,6 +637,41 @@ fn read_manifest(dir: &Path, round: u64) -> Result<Manifest> {
     Ok(m)
 }
 
+/// Little-endian field readers for the checkpoint/WAL wire format.
+/// Every call site length-checks its record first, so a short slice is
+/// file corruption the caller reports as a typed error, never a panic.
+fn le_u32(b: &[u8], off: usize) -> Result<u32> {
+    match b.get(off..off + 4) {
+        Some(s) => Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]])),
+        None => bail!("truncated u32 field at byte {off}"),
+    }
+}
+
+fn le_i32(b: &[u8], off: usize) -> Result<i32> {
+    match b.get(off..off + 4) {
+        Some(s) => Ok(i32::from_le_bytes([s[0], s[1], s[2], s[3]])),
+        None => bail!("truncated i32 field at byte {off}"),
+    }
+}
+
+fn le_u64(b: &[u8], off: usize) -> Result<u64> {
+    match b.get(off..off + 8) {
+        Some(s) => Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ])),
+        None => bail!("truncated u64 field at byte {off}"),
+    }
+}
+
+/// Decode one 12-byte wire entry (`addr: u32, val: i32, ts: i32`, LE).
+fn le_entry(b: &[u8], off: usize) -> Result<WriteEntry> {
+    Ok(WriteEntry {
+        addr: le_u32(b, off)?,
+        val: le_i32(b, off + 4)?,
+        ts: le_i32(b, off + 8)?,
+    })
+}
+
 /// Read + checksum-verify a payload file declared by a manifest, returning
 /// the bytes *without* the 8-byte FNV trailer.
 fn read_payload(dir: &Path, name: &str, declared_len: usize, declared_sum: u64) -> Result<Vec<u8>> {
@@ -641,7 +681,7 @@ fn read_payload(dir: &Path, name: &str, declared_len: usize, declared_sum: u64) 
         bail!("{name}: size {} != declared {declared_len}", bytes.len());
     }
     let body = &bytes[..bytes.len() - 8];
-    let trailer = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    let trailer = le_u64(&bytes, bytes.len() - 8)?;
     let sum = fnv1a(body);
     if sum != trailer || sum != declared_sum {
         bail!("{name}: checksum mismatch");
@@ -657,15 +697,14 @@ fn overlay_pages(image: &mut [i32], body: &[u8]) -> Result<usize> {
         if body.len() - i < 8 {
             bail!("pages: truncated extent header");
         }
-        let start = u32::from_le_bytes(body[i..i + 4].try_into().unwrap()) as usize;
-        let len = u32::from_le_bytes(body[i + 4..i + 8].try_into().unwrap()) as usize;
+        let start = le_u32(body, i)? as usize;
+        let len = le_u32(body, i + 4)? as usize;
         i += 8;
         if body.len() - i < len * 4 || start + len > image.len() {
             bail!("pages: extent [{start}, +{len}) out of bounds");
         }
         for w in 0..len {
-            image[start + w] =
-                i32::from_le_bytes(body[i + 4 * w..i + 4 * w + 4].try_into().unwrap());
+            image[start + w] = le_i32(body, i + 4 * w)?;
         }
         i += len * 4;
         extents += 1;
@@ -677,7 +716,7 @@ fn parse_wal(body: &[u8], n_shards: usize) -> Result<Vec<Vec<WriteEntry>>> {
     if body.len() < 4 {
         bail!("wal: truncated");
     }
-    let declared = u32::from_le_bytes(body[..4].try_into().unwrap()) as usize;
+    let declared = le_u32(body, 0)? as usize;
     if declared != n_shards {
         bail!("wal: shard count {declared} != manifest {n_shards}");
     }
@@ -687,19 +726,14 @@ fn parse_wal(body: &[u8], n_shards: usize) -> Result<Vec<Vec<WriteEntry>>> {
         if body.len() - i < 4 {
             bail!("wal: truncated shard header");
         }
-        let n = u32::from_le_bytes(body[i..i + 4].try_into().unwrap()) as usize;
+        let n = le_u32(body, i)? as usize;
         i += 4;
         if body.len() - i < n * 12 {
             bail!("wal: truncated entries");
         }
         let mut shard = Vec::with_capacity(n);
         for e in 0..n {
-            let b = &body[i + 12 * e..i + 12 * e + 12];
-            shard.push(WriteEntry {
-                addr: u32::from_le_bytes(b[..4].try_into().unwrap()),
-                val: i32::from_le_bytes(b[4..8].try_into().unwrap()),
-                ts: i32::from_le_bytes(b[8..12].try_into().unwrap()),
-            });
+            shard.push(le_entry(body, i + 12 * e)?);
         }
         i += n * 12;
         out.push(shard);
@@ -716,9 +750,10 @@ fn parse_wal(body: &[u8], n_shards: usize) -> Result<Vec<Vec<WriteEntry>>> {
 /// whole-image checksum.
 fn load_chain(dir: &Path, round: u64) -> Result<LoadedCheckpoint> {
     let newest = read_manifest(dir, round)?;
+    let mut cur = newest.round;
+    let mut prev = newest.prev;
     let mut chain = vec![newest];
-    while let Some(p) = chain.last().unwrap().prev {
-        let cur = chain.last().unwrap().round;
+    while let Some(p) = prev {
         if p >= cur {
             bail!("checkpoint {cur}: non-decreasing prev link {p}");
         }
@@ -726,6 +761,8 @@ fn load_chain(dir: &Path, round: u64) -> Result<LoadedCheckpoint> {
         if m.n_words != chain[0].n_words || m.n_shards != chain[0].n_shards {
             bail!("checkpoint {p}: shape differs from {round}");
         }
+        cur = m.round;
+        prev = m.prev;
         chain.push(m);
     }
     let mut image = vec![0i32; chain[0].n_words];
@@ -917,28 +954,21 @@ impl ExternalJournal {
                 1 => RecordKind::Drain,
                 _ => break,
             };
-            let after_round = u64::from_le_bytes(bytes[i + 1..i + 9].try_into().unwrap());
-            let commits = u64::from_le_bytes(bytes[i + 9..i + 17].try_into().unwrap());
-            let attempts = u64::from_le_bytes(bytes[i + 17..i + 25].try_into().unwrap());
-            let n = u32::from_le_bytes(bytes[i + 25..i + 29].try_into().unwrap()) as usize;
+            let after_round = le_u64(&bytes, i + 1)?;
+            let commits = le_u64(&bytes, i + 9)?;
+            let attempts = le_u64(&bytes, i + 17)?;
+            let n = le_u32(&bytes, i + 25)? as usize;
             let body_len = 29 + n * 12;
             if bytes.len() - i < body_len + 8 {
                 break;
             }
-            let declared = u64::from_le_bytes(
-                bytes[i + body_len..i + body_len + 8].try_into().unwrap(),
-            );
+            let declared = le_u64(&bytes, i + body_len)?;
             if fnv1a(&bytes[i..i + body_len]) != declared {
                 break;
             }
             let mut entries = Vec::with_capacity(n);
             for e in 0..n {
-                let b = &bytes[i + 29 + 12 * e..i + 29 + 12 * e + 12];
-                entries.push(WriteEntry {
-                    addr: u32::from_le_bytes(b[..4].try_into().unwrap()),
-                    val: i32::from_le_bytes(b[4..8].try_into().unwrap()),
-                    ts: i32::from_le_bytes(b[8..12].try_into().unwrap()),
-                });
+                entries.push(le_entry(&bytes, i + 29 + 12 * e)?);
             }
             out.push(JournalRecord {
                 kind,

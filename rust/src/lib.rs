@@ -39,6 +39,10 @@
 //! `rust/tests/cluster_equivalence.rs`).
 
 #![warn(missing_docs)]
+// Panic- and determinism-policy (DESIGN.md §15): the only unsafe block
+// is the justified byte-reinterpretation in `runtime::exec` (PJRT
+// literal construction), which carries a local `#[allow(unsafe_code)]`.
+#![deny(unsafe_code)]
 
 pub mod apps;
 pub mod bus;

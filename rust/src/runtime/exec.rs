@@ -100,6 +100,12 @@ impl KernelExec {
             // through `vec1(..).reshape(..)` copies the buffer twice
             // (§Perf L1 optimization, EXPERIMENTS.md).
             let dims: Vec<usize> = t.dims.iter().map(|&d| d as usize).collect();
+            // The crate denies `unsafe_code`; this is the one justified
+            // exception: xla-rs takes untyped bytes, so the i32 slice is
+            // reinterpreted in place (same allocation, same length in
+            // bytes, i32 has no padding or invalid bit patterns) to avoid
+            // copying every tensor an extra time on the hot path.
+            #[allow(unsafe_code)]
             let bytes = unsafe {
                 std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
             };
@@ -112,7 +118,7 @@ impl KernelExec {
             literals.push(lit);
         }
 
-        let exe = self.exe.lock().expect("executable mutex poisoned");
+        let exe = crate::util::sync::lock(&self.exe);
         let result = exe
             .execute::<xla::Literal>(&literals)
             .map_err(|e| anyhow!("executing {}: {e:?}", self.meta.name))?;

@@ -783,8 +783,17 @@ impl Hetm {
             // Synthetic workload on real CPU worker threads: mirrors the
             // former `build_parallel_synth_{,cluster_}engine` construction
             // exactly (same seeds, same specs), with the drivers boxed.
-            let (cpu_spec, gpu_spec) =
-                synth_specs.expect("parallel_cpu implies synth specs (checked above)");
+            let (cpu_spec, gpu_spec) = match synth_specs {
+                Some(specs) => specs,
+                // Unreachable: `cpu_parallel && !is_synth` was rejected
+                // during validation; keep the typed error anyway so the
+                // builder can never panic on a refactor of that check.
+                None => {
+                    return Err(BuildError::ParallelCpuUnsupported {
+                        workload: workload.name().to_string(),
+                    })
+                }
+            };
             if cluster {
                 let map = launch::shard_map(&cfg, n_words);
                 let cpu: Box<dyn CpuDriver + Send> =
@@ -1185,7 +1194,7 @@ impl Session {
         let stmr = self
             .txn_stmr
             .as_ref()
-            .expect("txn_stmr is retained whenever tm is");
+            .ok_or_else(|| anyhow!("txn_stmr missing while tm is present (builder invariant)"))?;
         self.txn_buf.clear();
         let rounds = match &self.inner {
             Inner::Single(e) => e.stats.rounds,
@@ -1241,7 +1250,7 @@ impl Session {
         let stmr = self
             .txn_stmr
             .as_ref()
-            .expect("txn_stmr is retained whenever tm is");
+            .ok_or_else(|| anyhow!("txn_stmr missing while tm is present (builder invariant)"))?;
         self.txn_buf.clear();
         let entries = &rec.entries;
         let _ = tm.execute_into(

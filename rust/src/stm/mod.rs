@@ -169,7 +169,7 @@ impl SharedStmr {
     /// favor-GPU round this is a copy into an existing allocation, not a
     /// fresh `Vec` per round.
     pub fn save_snapshot(&self) {
-        let mut slot = self.snap.lock().unwrap();
+        let mut slot = crate::util::sync::lock(&self.snap);
         slot.buf.clear();
         slot.buf
             .extend(self.words.iter().map(|w| w.load(Ordering::Acquire)));
@@ -180,7 +180,7 @@ impl SharedStmr {
     /// (favor-GPU round abort). Panics if no snapshot is pending.  The
     /// buffer's allocation is kept for the next round's snapshot.
     pub fn restore_snapshot(&self) {
-        let mut slot = self.snap.lock().unwrap();
+        let mut slot = crate::util::sync::lock(&self.snap);
         assert!(
             slot.valid,
             "save_snapshot must precede restore_snapshot"

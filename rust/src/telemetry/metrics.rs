@@ -210,6 +210,43 @@ impl MetricsRegistry {
         self.histograms.entry(name.to_string()).or_default().merge(h);
     }
 
+    /// Is `name` a wall-clock metric?  By convention (DESIGN.md §15)
+    /// any metric whose name contains `_wall` measures host real time:
+    /// it may vary between bit-identical runs and is excluded from
+    /// deterministic comparison ([`Self::deterministic`]) and from perf
+    /// gating (`scripts/check_perf.py`).
+    pub fn is_wall_clock(name: &str) -> bool {
+        name.contains("_wall")
+    }
+
+    /// The deterministic view of this registry: every metric except the
+    /// wall-clock family ([`Self::is_wall_clock`]).  Two runs of the
+    /// same configuration and seed must produce *equal* deterministic
+    /// views — `rust/tests/telemetry.rs` pins this with checkpoints
+    /// enabled (whose write histogram is wall-clock).
+    pub fn deterministic(&self) -> MetricsRegistry {
+        MetricsRegistry {
+            counters: self
+                .counters
+                .iter()
+                .filter(|(k, _)| !Self::is_wall_clock(k))
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+            gauges: self
+                .gauges
+                .iter()
+                .filter(|(k, _)| !Self::is_wall_clock(k))
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+            histograms: self
+                .histograms
+                .iter()
+                .filter(|(k, _)| !Self::is_wall_clock(k))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+        }
+    }
+
     /// Current counter value (0 when absent).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)

@@ -321,9 +321,11 @@ impl Recorder for Collector {
         r.inc("hetm_checkpoint_wal_entries_total", sum.wal_entries);
         // Wall-clock write cost, for operators sizing
         // `durability.interval_rounds`.  Real time, not virtual — it
-        // never enters trace events, so traces stay deterministic.
+        // never enters trace events, and the `_wall_` name marks it for
+        // exclusion from deterministic snapshot comparison and perf
+        // gating (MetricsRegistry::deterministic, DESIGN.md §15).
         r.observe(
-            "hetm_checkpoint_write_seconds",
+            "hetm_checkpoint_write_wall_seconds",
             sum.write_micros as f64 * 1e-6,
         );
     }

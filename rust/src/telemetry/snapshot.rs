@@ -50,6 +50,18 @@ impl MetricsSnapshot {
         }
     }
 
+    /// This snapshot with wall-clock metrics removed from the registry
+    /// ([`MetricsRegistry::deterministic`]): the view to diff when
+    /// comparing two runs for bit-identical behavior — wall-clock
+    /// families (e.g. `hetm_checkpoint_write_wall_seconds`) measure the
+    /// host, not the engine, and legitimately differ between otherwise
+    /// identical runs (DESIGN.md §15).
+    pub fn deterministic(&self) -> MetricsSnapshot {
+        let mut s = self.clone();
+        s.registry = s.registry.map(|r| r.deterministic());
+        s
+    }
+
     /// Render the human-readable stats block (the format `shetm`
     /// subcommands print after a run).
     pub fn render_text(&self) -> String {

@@ -9,6 +9,7 @@ pub mod bench;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod zipf;
 
 pub use rng::Rng;

@@ -80,7 +80,7 @@ pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p / 100.0) * samples.len() as f64).ceil() as usize;
     samples[rank.clamp(1, samples.len()) - 1]
 }

@@ -1,0 +1,67 @@
+//! Poison-explicit lock acquisition.
+//!
+//! The panic-policy audit rule (D6, DESIGN.md §15) bans bare
+//! `.unwrap()`/`.expect()` in library code.  Lock poisoning is the one
+//! case where crashing *is* the policy — a worker panicked while
+//! holding shared engine state, so no consistent continuation exists —
+//! but that decision should live in one audited place with a uniform
+//! diagnostic, not in dozens of ad-hoc `lock().unwrap()` calls.  These
+//! helpers make the poison check explicit and keep call sites clean.
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Acquire `m`, panicking with a uniform diagnostic if a previous
+/// holder panicked (deliberate crash-on-poison policy; see module docs).
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(e) => panic!("mutex poisoned by a panicking holder: {e}"),
+    }
+}
+
+/// Read-acquire `l`, panicking with a uniform diagnostic on poison.
+pub fn read_lock<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    match l.read() {
+        Ok(g) => g,
+        Err(e) => panic!("rwlock poisoned by a panicking holder: {e}"),
+    }
+}
+
+/// Write-acquire `l`, panicking with a uniform diagnostic on poison.
+pub fn write_lock<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    match l.write() {
+        Ok(g) => g,
+        Err(e) => panic!("rwlock poisoned by a panicking holder: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locks_pass_through() {
+        let m = Mutex::new(3);
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 4);
+        let l = RwLock::new(7);
+        assert_eq!(*read_lock(&l), 7);
+        *write_lock(&l) = 8;
+        assert_eq!(*read_lock(&l), 8);
+    }
+
+    #[test]
+    fn poisoned_mutex_panics_with_policy_message() {
+        let m = std::sync::Arc::new(Mutex::new(0));
+        let m2 = std::sync::Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison it");
+        })
+        .join();
+        let got = std::panic::catch_unwind(|| {
+            let _ = lock(&m);
+        });
+        assert!(got.is_err(), "lock() must crash on poison");
+    }
+}

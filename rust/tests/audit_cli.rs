@@ -1,0 +1,142 @@
+//! Golden tests for the `shetm-audit` static-analysis binary.
+//!
+//! Two gates in one file:
+//!
+//! 1. The fixture corpus under `rust/tests/audit_fixtures/` — a
+//!    miniature repo tree with at least one known-bad snippet per rule
+//!    D1–D6 plus pragma'd, clean, whitelisted and test-exempt variants
+//!    — must produce *exactly* the pinned diagnostics (rule id, file,
+//!    line, message) and exit codes.  Any lexer or scoping change that
+//!    shifts a single finding fails here first, not in CI on the real
+//!    tree.
+//! 2. The real tree itself must be audit-clean: `--deny` over this
+//!    repository exits 0.  This is the same invocation the CI `audit`
+//!    job runs, so a violation is caught by `cargo test` locally
+//!    before it ever reaches CI.
+
+use std::path::Path;
+use std::process::{Command, Output};
+
+/// Run the audit binary (built by cargo for this same package) with
+/// the given arguments.
+fn audit(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_shetm-audit"))
+        .args(args)
+        .output()
+        .expect("spawn shetm-audit")
+}
+
+fn repo_root() -> &'static str {
+    env!("CARGO_MANIFEST_DIR")
+}
+
+fn fixtures_root() -> String {
+    Path::new(repo_root())
+        .join("rust/tests/audit_fixtures")
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8(out.stdout.clone()).expect("audit output is UTF-8")
+}
+
+/// The full, sorted diagnostic stream for the fixture corpus.  Pinned
+/// verbatim: file, line, rule id and message, ordered by
+/// (file, line, rule) exactly as the binary sorts them.
+const EXPECTED: &[&str] = &[
+    "rust/src/cluster/shard_math.rs:4: D5: unchecked shift in shard-layout arithmetic — overflow wraps in release; use checked_shl/checked_mul or pragma the proven-guarded site",
+    "rust/src/cluster/shard_math.rs:8: D5: unchecked multiply in shard-layout arithmetic — overflow wraps in release; use checked_mul or pragma the proven-bounded site",
+    "rust/src/cluster/shard_math.rs:12: D5: narrowing `as u32` cast in shard-layout arithmetic — use try_into or pragma the proven-bounded site",
+    "rust/src/coordinator/d1_hash.rs:7: D1: HashMap in deterministic path — iteration order is ambient; use BTreeMap/BTreeSet or a sorted collect",
+    "rust/src/coordinator/d1_hash.rs:10: D1: HashSet in deterministic path — iteration order is ambient; use BTreeMap/BTreeSet or a sorted collect",
+    "rust/src/coordinator/d1_hash.rs:11: D1: HashSet in deterministic path — iteration order is ambient; use BTreeMap/BTreeSet or a sorted collect",
+    "rust/src/coordinator/d2_clock.rs:4: D2: Instant::now outside util/bench.rs / rust/benches — wall clock leaks into deterministic state",
+    "rust/src/coordinator/d2_clock.rs:8: D2: SystemTime read — wall clock leaks into deterministic state",
+    "rust/src/coordinator/d3_float.rs:4: D3: .sum::<f64>() — float accumulation order must be fixed; use the ordered fold helpers",
+    "rust/src/coordinator/d3_float.rs:8: D3: float fold — accumulation order must be fixed; use the ordered fold helpers",
+    "rust/src/coordinator/d4_rand.rs:4: D4: RandomState — ambient entropy; seeds must flow from config",
+    "rust/src/coordinator/pragma_bad.rs:6: PRAGMA: malformed audit:allow pragma — reason must be non-empty",
+    "rust/src/coordinator/pragma_bad.rs:7: D1: HashMap in deterministic path — iteration order is ambient; use BTreeMap/BTreeSet or a sorted collect",
+    "rust/src/coordinator/pragma_bad.rs:11: PRAGMA: unused audit:allow(D6) — the finding it suppressed is gone; remove it",
+    "rust/src/coordinator/pragma_bad.rs:16: PRAGMA: malformed audit:allow pragma — expected `audit:allow(<rule>, reason = \"...\")`",
+    "rust/src/session/d6_panic.rs:5: D6: .unwrap() in library code — return a typed error, restructure, or pragma with a reason",
+    "rust/src/session/d6_panic.rs:9: D6: .expect() in library code — return a typed error, restructure, or pragma with a reason",
+];
+
+#[test]
+fn fixtures_produce_exactly_the_pinned_diagnostics() {
+    let out = audit(&["--root", &fixtures_root(), "--deny"]);
+    assert_eq!(out.status.code(), Some(1), "--deny with findings must exit 1");
+
+    let mut expected = EXPECTED.join("\n");
+    expected.push_str("\nshetm-audit: 17 finding(s) in 9 files scanned\n");
+    assert_eq!(stdout_of(&out), expected);
+}
+
+#[test]
+fn every_rule_has_a_true_positive_in_the_corpus() {
+    // Belt and braces over the verbatim pin above: if the corpus or
+    // EXPECTED ever shrinks, this names the rule that lost coverage.
+    for rule in ["D1", "D2", "D3", "D4", "D5", "D6", "PRAGMA"] {
+        let tag = format!(": {rule}: ");
+        assert!(
+            EXPECTED.iter().any(|l| l.contains(&tag)),
+            "no pinned true-positive diagnostic for rule {rule}"
+        );
+    }
+}
+
+#[test]
+fn report_mode_exits_zero_but_still_prints_findings() {
+    let out = audit(&["--root", &fixtures_root()]);
+    assert_eq!(out.status.code(), Some(0), "without --deny findings only report");
+    let text = stdout_of(&out);
+    assert!(text.contains("17 finding(s) in 9 files scanned (report-only; use --deny to gate)"));
+}
+
+#[test]
+fn whitelisted_and_test_tree_fixtures_are_clean() {
+    // util/bench.rs may read Instant (D2 whitelist); the test tree is
+    // exempt from the panic policy (D6 scope is rust/src only).
+    let out = audit(&[
+        "--root",
+        &fixtures_root(),
+        "--deny",
+        "rust/src/util/bench.rs",
+        "rust/tests/test_code_ok.rs",
+    ]);
+    assert_eq!(out.status.code(), Some(0));
+    assert_eq!(stdout_of(&out), "shetm-audit: clean (2 files)\n");
+}
+
+#[test]
+fn real_tree_is_audit_clean() {
+    // The exact CI invocation: every finding on the live tree is
+    // either fixed or carries a justified pragma.
+    let out = audit(&["--root", repo_root(), "--deny"]);
+    let text = stdout_of(&out);
+    assert_eq!(out.status.code(), Some(0), "real tree has unsuppressed findings:\n{text}");
+    assert!(
+        text.starts_with("shetm-audit: clean ("),
+        "unexpected audit output:\n{text}"
+    );
+}
+
+#[test]
+fn list_rules_names_the_full_catalog() {
+    let out = audit(&["--list-rules"]);
+    assert_eq!(out.status.code(), Some(0));
+    let text = stdout_of(&out);
+    for rule in ["D1", "D2", "D3", "D4", "D5", "D6"] {
+        assert!(text.contains(rule), "--list-rules is missing {rule}");
+    }
+}
+
+#[test]
+fn unknown_flag_is_a_usage_error() {
+    let out = audit(&["--frobnicate"]);
+    assert_eq!(out.status.code(), Some(2), "unknown flags must exit 2 with usage");
+    let err = String::from_utf8(out.stderr.clone()).expect("stderr is UTF-8");
+    assert!(err.contains("shetm-audit [--root DIR]"), "usage text missing:\n{err}");
+}

@@ -1,0 +1,23 @@
+//! Audit fixture — D5: unchecked shard-layout arithmetic.
+
+pub fn bad_shift(n_shards: usize, shard_bits: u32) -> usize {
+    n_shards << shard_bits
+}
+
+pub fn bad_mul(a: usize, b: usize) -> usize {
+    a * b
+}
+
+pub fn bad_narrow(block: usize) -> u32 {
+    block as u32
+}
+
+pub fn allowed_shift(shard_bits: u32) -> usize {
+    assert!(shard_bits < usize::BITS);
+    // audit:allow(D5, reason = "shift guarded by the assert directly above")
+    1usize << shard_bits
+}
+
+pub fn clean_checked(a: usize, b: usize) -> Option<usize> {
+    a.checked_mul(b)
+}

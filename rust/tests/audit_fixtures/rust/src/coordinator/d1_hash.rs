@@ -1,0 +1,21 @@
+//! Audit fixture — D1: Default-hashed collections in deterministic paths.
+//! Never compiled; scanned by `shetm-audit` via `--root`.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+pub struct Bad {
+    pub index: HashMap<u32, usize>,
+}
+
+pub fn bad_set() -> HashSet<u32> {
+    HashSet::new()
+}
+
+pub struct AllowedScratch {
+    // audit:allow(D1, reason = "lookup-only scratch, never iterated")
+    pub scratch: HashMap<u32, u32>,
+}
+
+pub fn clean(m: &BTreeMap<u32, u32>) -> u32 {
+    m.values().copied().sum()
+}

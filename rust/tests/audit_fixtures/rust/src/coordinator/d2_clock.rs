@@ -1,0 +1,17 @@
+//! Audit fixture — D2: wall-clock reads outside the bench whitelist.
+
+pub fn bad_instant() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn bad_system_time() -> u64 {
+    match std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH) {
+        Ok(d) => d.as_secs(),
+        Err(_) => 0,
+    }
+}
+
+pub fn allowed_wall_cost() -> std::time::Instant {
+    // audit:allow(D2, reason = "wall-clock-only metric, excluded from deterministic snapshots")
+    std::time::Instant::now()
+}

@@ -1,0 +1,18 @@
+//! Audit fixture — D3: unordered float reductions in deterministic paths.
+
+pub fn bad_sum(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>()
+}
+
+pub fn bad_fold(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0, |a, b| a + b)
+}
+
+pub fn clean_integer_sum(xs: &[u64]) -> u64 {
+    xs.iter().sum::<u64>()
+}
+
+pub fn allowed(xs: &[f64]) -> f64 {
+    // audit:allow(D3, reason = "single-threaded slice order is the fixed order here")
+    xs.iter().sum::<f64>()
+}

@@ -1,0 +1,14 @@
+//! Audit fixture — D4: ambient randomness (seeds must flow from config).
+
+pub fn bad_hasher() -> u64 {
+    let state = std::collections::hash_map::RandomState::new();
+    let _ = state;
+    0
+}
+
+pub fn allowed_entropy() -> u64 {
+    // audit:allow(D4, reason = "debug-only cache keying, never observable in results")
+    let state = std::collections::hash_map::RandomState::new();
+    let _ = state;
+    0
+}

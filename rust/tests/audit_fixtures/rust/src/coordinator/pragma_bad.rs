@@ -1,0 +1,18 @@
+//! Audit fixture — pragma hygiene: malformed and unused pragmas are findings.
+
+use std::collections::HashMap;
+
+pub struct BadReason {
+    // audit:allow(D1, reason = "")
+    pub index: HashMap<u32, usize>,
+}
+
+pub fn unused_pragma() -> u32 {
+    // audit:allow(D6, reason = "suppresses nothing on the next line")
+    41 + 1
+}
+
+pub mod nested {
+    // audit:allow(D1)
+    pub fn missing_reason_form() {}
+}

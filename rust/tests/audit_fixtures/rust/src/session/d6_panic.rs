@@ -1,0 +1,23 @@
+//! Audit fixture — D6: panic policy in library code.
+
+/// Doc comments may show `.unwrap()` freely — the lexer strips them.
+pub fn bad_unwrap(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn bad_expect(v: Option<u32>) -> u32 {
+    v.expect("fixture")
+}
+
+pub fn allowed_unwrap(v: Option<u32>) -> u32 {
+    // audit:allow(D6, reason = "fixture-proven invariant: caller checked is_some")
+    v.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        assert_eq!(Some(1).unwrap(), 1);
+    }
+}

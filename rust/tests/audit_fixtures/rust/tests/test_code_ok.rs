@@ -1,0 +1,5 @@
+//! Audit fixture — the test tree is exempt from the panic policy (D6).
+
+pub fn helper(v: Option<u32>) -> u32 {
+    v.unwrap()
+}

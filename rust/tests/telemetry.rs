@@ -219,3 +219,65 @@ fn registry_histograms_survive_roundtrip_quantiles() {
         Ok(())
     });
 }
+
+/// Regression for the wall-clock exclusion rule (D2, DESIGN.md §15).
+///
+/// Checkpoints time their real disk writes into the
+/// `hetm_checkpoint_write_wall_seconds` histogram — the one legitimate
+/// wall-clock metric — so with durability armed, two identical runs
+/// must still agree on the *deterministic* registry view
+/// ([`MetricsRegistry::deterministic`]), and that view must strip the
+/// wall family that `scripts/check_perf.py` is likewise forbidden from
+/// gating.
+#[test]
+fn durability_runs_have_identical_deterministic_snapshots() {
+    let run = |tag: &str| {
+        let dir = std::env::temp_dir().join(format!(
+            "shetm-telemetry-wall-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut c = cfg(PolicyKind::FavorCpu, 2);
+        c.checkpoint_dir = dir.to_string_lossy().into_owned();
+        c.checkpoint_interval_rounds = 1;
+        let mut s = Hetm::from_config(&c)
+            .workload_named("zipfkv")
+            .app_config(app_raw())
+            .trace(true)
+            .build()
+            .unwrap();
+        s.run_rounds(ROUNDS).unwrap();
+        s.drain().unwrap();
+        let snap = s.metrics_snapshot("wall-test");
+        drop(s);
+        let _ = std::fs::remove_dir_all(&dir);
+        snap
+    };
+    let a = run("a");
+    let b = run("b");
+    let ra = a.registry.clone().expect("telemetry was on");
+    let rb = b.registry.clone().expect("telemetry was on");
+    assert!(
+        ra.histogram("hetm_checkpoint_write_wall_seconds").is_some(),
+        "checkpoints ran, so the wall-clock write histogram must exist"
+    );
+    assert!(
+        ra.deterministic()
+            .histogram("hetm_checkpoint_write_wall_seconds")
+            .is_none(),
+        "the deterministic view must strip the wall-clock family"
+    );
+    assert_eq!(
+        ra.deterministic(),
+        rb.deterministic(),
+        "identical durability-on runs diverged outside the wall-clock family"
+    );
+    assert!(
+        a.deterministic()
+            .registry
+            .expect("telemetry was on")
+            .histogram("hetm_checkpoint_write_wall_seconds")
+            .is_none(),
+        "MetricsSnapshot::deterministic must apply the same filter"
+    );
+}

@@ -12,7 +12,9 @@ Policy (documented in docs/BENCHMARKS.md):
 * Only *virtual-time* metrics are compared — they are deterministic for a
   given configuration, so any drift is a real behavior change, not noise.
   Wall-clock fields (``wall_s``, ``speedup_vs_threads1``) depend on the
-  host and are never gated.
+  host and are never gated — enforced: a gate metric matching the
+  wall-clock naming markers aborts the check as a misconfiguration
+  (see ``WALL_CLOCK_MARKERS`` and DESIGN.md §15).
 * Tolerance is 25% relative, in the *bad* direction only (improvements
   never fail the check).  Deterministic metrics should normally be
   bit-identical run-to-run; the headroom exists so intentional
@@ -102,6 +104,25 @@ BENCHES = {
 
 TOLERANCE = 0.25
 
+# Wall-clock metric convention (DESIGN.md §15): any field whose name
+# contains one of these markers measures host real time, varies between
+# bit-identical runs, and must NEVER be gated.  The Rust side applies the
+# same convention in MetricsRegistry::deterministic.
+WALL_CLOCK_MARKERS = ("wall", "speedup")
+
+
+def check_gate_config():
+    """Refuse to run with a wall-clock metric configured as a gate."""
+    for bench, spec in BENCHES.items():
+        for metric in spec["metrics"]:
+            if any(m in metric for m in WALL_CLOCK_MARKERS):
+                sys.exit(
+                    f"check_perf: misconfiguration: {bench} gates "
+                    f"{metric!r}, which is a wall-clock metric (marker "
+                    f"match on {WALL_CLOCK_MARKERS}); only deterministic "
+                    "virtual-time metrics may be gated"
+                )
+
 
 def load(path):
     try:
@@ -151,6 +172,7 @@ def metric_value(point, metric, path, ident):
 def main():
     if len(sys.argv) != 3:
         sys.exit(__doc__.strip())
+    check_gate_config()
     base_path, cur_path = sys.argv[1], sys.argv[2]
     base, cur = load(base_path), load(cur_path)
 

@@ -1,0 +1,740 @@
+//! `shetm-audit` — a dependency-free determinism & panic-safety linter.
+//!
+//! Every guarantee this reproduction sells (threaded ≡ sequential,
+//! cluster ≡ round engine at `n_gpus = 1`, recovery bit-identical to an
+//! uninterrupted run) rests on hand-maintained conventions: fixed-order
+//! folds, virtual time, seeded RNG, ordered collections.  Nothing used
+//! to check them statically — one `HashMap` iteration or wall-clock
+//! read in an engine path silently breaks replay.  This binary
+//! tokenizes every `.rs` file under `rust/src`, `rust/tests`,
+//! `rust/benches` and `examples/` with a small hand-rolled lexer (so
+//! comments, strings and `#[cfg(test)]` bodies never produce false
+//! positives) and enforces the rule catalog of DESIGN.md §15:
+//!
+//! * **D1** — no `HashMap`/`HashSet` (Default-hashed collections) in
+//!   deterministic paths (`coordinator/`, `cluster/`, `gpu/`,
+//!   `session/`, `durability/`, `apps/`).  Use `BTreeMap`/`BTreeSet`,
+//!   a sorted collect, or a justified pragma.
+//! * **D2** — no `Instant::now`/`SystemTime` outside the wall-clock
+//!   whitelist (`rust/src/util/bench.rs`, `rust/benches/**`).
+//! * **D3** — no unordered float reductions (`.sum::<f64>()`, float
+//!   `fold`) in deterministic paths; use the fixed-order fold helpers.
+//! * **D4** — no ambient randomness (`RandomState`, entropy-seeded
+//!   RNGs) anywhere; seeds flow from config.
+//! * **D5** — no unchecked `<<`/`*` arithmetic or narrowing `as` casts
+//!   in shard-layout code (`cluster/*shard*`), the PR-5/PR-9 overflow
+//!   bug class.
+//! * **D6** — panic policy: no `.unwrap()`/`.expect()` in library code
+//!   (`rust/src/**` minus the `shetm` CLI, tests and benches).
+//!
+//! Deliberate exceptions are suppressed per line with
+//! `// audit:allow(<rule>, reason = "...")` — the reason is mandatory
+//! and must be non-empty; a malformed or unused pragma is itself a
+//! finding, so suppressions cannot rot.
+//!
+//! Zero dependencies, std only; offline-safe by construction.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Rule catalog: id and the one-line summary printed by `--list-rules`.
+const RULES: &[(&str, &str)] = &[
+    ("D1", "HashMap/HashSet in a deterministic path (use BTreeMap/BTreeSet or pragma)"),
+    ("D2", "Instant::now/SystemTime outside the bench wall-clock whitelist"),
+    ("D3", "unordered float reduction (.sum::<f64>() / float fold) in a deterministic path"),
+    ("D4", "ambient randomness (RandomState, entropy-seeded RNG); seeds must flow from config"),
+    ("D5", "unchecked <</* arithmetic or narrowing `as` cast in shard-layout code"),
+    ("D6", ".unwrap()/.expect() in library code (type the error or pragma with a reason)"),
+];
+
+/// Entropy-sourced identifiers D4 rejects wherever they appear.
+const D4_IDENTS: &[&str] = &["RandomState", "thread_rng", "from_entropy", "OsRng", "rand_core"];
+
+/// Narrowing cast targets D5 rejects (usize/u64 shard arithmetic must
+/// not silently truncate).
+const D5_NARROW: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// Directories under `rust/src/` whose code must replay bit-identically.
+const DET_DIRS: &[&str] = &["coordinator", "cluster", "gpu", "session", "durability", "apps"];
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Ident,
+    Num,
+    Punct,
+}
+
+struct Tok {
+    s: String,
+    line: u32,
+    kind: Kind,
+    /// Inside a `#[cfg(test)]` item body (rules D1/D3/D5/D6 skip these).
+    test: bool,
+}
+
+#[derive(PartialEq, Eq, PartialOrd, Ord)]
+struct Finding {
+    file: String,
+    line: u32,
+    rule: &'static str,
+    msg: String,
+}
+
+struct Pragma {
+    line: u32,
+    rule: String,
+    /// Line the pragma suppresses (same line for trailing comments, the
+    /// next code-bearing line for comment-only lines).
+    target: u32,
+    used: bool,
+    /// Parse error, reported as a PRAGMA finding.
+    bad: Option<&'static str>,
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+/// Tokenize Rust source, discarding comments, strings and char
+/// literals so rule matching never fires on prose or payload text.
+fn lex(src: &str) -> Vec<Tok> {
+    let c: Vec<char> = src.chars().collect();
+    let n = c.len();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut out = Vec::new();
+    while i < n {
+        let ch = c[i];
+        if ch == '\n' {
+            line += 1;
+            i += 1;
+        } else if ch.is_whitespace() {
+            i += 1;
+        } else if ch == '/' && i + 1 < n && c[i + 1] == '/' {
+            while i < n && c[i] != '\n' {
+                i += 1;
+            }
+        } else if ch == '/' && i + 1 < n && c[i + 1] == '*' {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if c[i] == '/' && i + 1 < n && c[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if c[i] == '*' && i + 1 < n && c[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if c[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+        } else if ch == '"' {
+            i = skip_string(&c, i, &mut line);
+        } else if ch == '\'' {
+            // Lifetime ('a) vs char literal ('x', '\n', '\u{1F600}').
+            if i + 2 < n && (c[i + 1].is_alphabetic() || c[i + 1] == '_') && c[i + 2] != '\'' {
+                i += 2;
+                while i < n && (c[i].is_alphanumeric() || c[i] == '_') {
+                    i += 1;
+                }
+            } else {
+                i += 1;
+                while i < n && c[i] != '\'' {
+                    if c[i] == '\\' {
+                        i += 1;
+                    }
+                    if i < n && c[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                i += 1;
+            }
+        } else if ch.is_alphabetic() || ch == '_' {
+            let start = i;
+            while i < n && (c[i].is_alphanumeric() || c[i] == '_') {
+                i += 1;
+            }
+            let word: String = c[start..i].iter().collect();
+            // Raw/byte string prefixes: r"..", r#".."#, b"..", br#".."#.
+            if (word == "r" || word == "b" || word == "br")
+                && i < n
+                && (c[i] == '"' || (word != "b" && c[i] == '#'))
+            {
+                i = skip_raw_string(&c, i, &mut line);
+            } else if word == "b" && i < n && c[i] == '\'' {
+                i += 2; // b'x' / b'\n'
+                while i < n && c[i] != '\'' {
+                    if c[i] == '\\' {
+                        i += 1;
+                    }
+                    i += 1;
+                }
+                i += 1;
+            } else {
+                out.push(Tok { s: word, line, kind: Kind::Ident, test: false });
+            }
+        } else if ch.is_ascii_digit() {
+            let start = i;
+            while i < n && (c[i].is_alphanumeric() || c[i] == '_' || c[i] == '.') {
+                i += 1;
+            }
+            out.push(Tok { s: c[start..i].iter().collect(), line, kind: Kind::Num, test: false });
+        } else {
+            // Combine only the multi-char operators the rules inspect.
+            let two: String = c[i..n.min(i + 2)].iter().collect();
+            if two == "::" || two == "<<" {
+                let three: String = c[i..n.min(i + 3)].iter().collect();
+                let op = if three == "<<=" { three } else { two };
+                i += op.len();
+                out.push(Tok { s: op, line, kind: Kind::Punct, test: false });
+            } else {
+                out.push(Tok { s: ch.to_string(), line, kind: Kind::Punct, test: false });
+            }
+        }
+    }
+    out
+}
+
+/// Skip a `"…"` literal starting at `i` (the opening quote); returns
+/// the index just past the closing quote.
+fn skip_string(c: &[char], mut i: usize, line: &mut u32) -> usize {
+    let n = c.len();
+    i += 1;
+    while i < n && c[i] != '"' {
+        if c[i] == '\\' {
+            i += 1;
+        }
+        if i < n && c[i] == '\n' {
+            *line += 1;
+        }
+        i += 1;
+    }
+    i + 1
+}
+
+/// Skip a raw (byte) string starting at the `#`/`"` after its prefix.
+fn skip_raw_string(c: &[char], mut i: usize, line: &mut u32) -> usize {
+    let n = c.len();
+    let mut hashes = 0usize;
+    while i < n && c[i] == '#' {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // opening quote
+    loop {
+        if i >= n {
+            return i;
+        }
+        if c[i] == '\n' {
+            *line += 1;
+        }
+        if c[i] == '"' {
+            let mut k = 0usize;
+            while k < hashes && i + 1 + k < n && c[i + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return i + 1 + hashes;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Mark every token inside a `#[cfg(test)]` item body (or a
+/// `#[cfg(test)] use …;`) as test code.
+fn mark_test_scopes(toks: &mut [Tok]) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_cfg_test_attr(toks, i) {
+            // Skip this and any stacked attributes, then swallow the
+            // item: up to the matching `}` of its first block, or the
+            // `;` for block-less items.
+            let start = i;
+            let mut j = i;
+            while j < toks.len() && toks[j].s == "#" {
+                j = skip_attr(toks, j);
+            }
+            let mut end = j;
+            while end < toks.len() && toks[end].s != "{" && toks[end].s != ";" {
+                end += 1;
+            }
+            if end < toks.len() && toks[end].s == "{" {
+                let mut depth = 0i32;
+                while end < toks.len() {
+                    if toks[end].s == "{" {
+                        depth += 1;
+                    } else if toks[end].s == "}" {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    end += 1;
+                }
+            }
+            let stop = (end + 1).min(toks.len());
+            for t in &mut toks[start..stop] {
+                t.test = true;
+            }
+            i = stop;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Does `#` at `i` open exactly `#[cfg(test)]`?
+fn is_cfg_test_attr(toks: &[Tok], i: usize) -> bool {
+    let want = ["#", "[", "cfg", "(", "test", ")", "]"];
+    toks.len() >= i + want.len() && want.iter().enumerate().all(|(k, w)| toks[i + k].s == *w)
+}
+
+/// Skip an attribute `#[...]` starting at `i`; returns the index past `]`.
+fn skip_attr(toks: &[Tok], mut i: usize) -> usize {
+    i += 1; // '#'
+    if i >= toks.len() || toks[i].s != "[" {
+        return i;
+    }
+    let mut depth = 0i32;
+    while i < toks.len() {
+        if toks[i].s == "[" {
+            depth += 1;
+        } else if toks[i].s == "]" {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    i
+}
+
+// ---------------------------------------------------------------------------
+// Pragmas
+// ---------------------------------------------------------------------------
+
+/// Parse every `audit:allow(...)` pragma in the raw source.  `code_lines`
+/// holds the (sorted) set of lines bearing at least one token, used to
+/// resolve a comment-only pragma to the next code line.
+///
+/// Only text after a `//` on the line is considered — a pragma lives in
+/// a line comment by definition, and string literals quoting the
+/// grammar (the golden tests pin diagnostic text verbatim) must not
+/// parse as pragmas.
+fn parse_pragmas(src: &str, code_lines: &[u32]) -> Vec<Pragma> {
+    let mut out = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let line = idx as u32 + 1;
+        let comment_at = match raw.find("//") {
+            Some(c) => c,
+            None => continue,
+        };
+        let own_line = raw[..comment_at].trim().is_empty();
+        let mut rest = &raw[comment_at..];
+        while let Some(pos) = rest.find("audit:allow(") {
+            let after = &rest[pos + "audit:allow(".len()..];
+            let target = if own_line {
+                code_lines.iter().copied().find(|&l| l > line).unwrap_or(line)
+            } else {
+                line
+            };
+            out.push(parse_one_pragma(after, line, target));
+            rest = after;
+        }
+    }
+    out
+}
+
+/// Parse the pragma body after `audit:allow(`.
+fn parse_one_pragma(body: &str, line: u32, target: u32) -> Pragma {
+    let mut p = Pragma { line, rule: String::new(), target, used: false, bad: None };
+    let rule_end = match body.find(',') {
+        Some(e) => e,
+        None => {
+            p.bad = Some("expected `audit:allow(<rule>, reason = \"...\")`");
+            return p;
+        }
+    };
+    let rule = body[..rule_end].trim();
+    if !RULES.iter().any(|(id, _)| *id == rule) {
+        p.bad = Some("unknown rule id");
+        return p;
+    }
+    p.rule = rule.to_string();
+    let rest = body[rule_end + 1..].trim_start();
+    let rest = match rest.strip_prefix("reason") {
+        Some(r) => r.trim_start(),
+        None => {
+            p.bad = Some("missing `reason = \"...\"`");
+            return p;
+        }
+    };
+    let rest = match rest.strip_prefix('=') {
+        Some(r) => r.trim_start(),
+        None => {
+            p.bad = Some("missing `=` after `reason`");
+            return p;
+        }
+    };
+    let rest = match rest.strip_prefix('"') {
+        Some(r) => r,
+        None => {
+            p.bad = Some("reason must be a quoted string");
+            return p;
+        }
+    };
+    match rest.find('"') {
+        Some(0) => p.bad = Some("reason must be non-empty"),
+        Some(_) => {}
+        None => p.bad = Some("unterminated reason string"),
+    }
+    p
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+/// Per-file scope flags derived from the root-relative path.
+struct Scope {
+    /// D1/D3 apply: `rust/src/{coordinator,cluster,gpu,session,durability,apps}/`.
+    det_path: bool,
+    /// D2 exempt: `rust/src/util/bench.rs` and `rust/benches/**`.
+    wall_ok: bool,
+    /// D5 applies: shard-layout files (`rust/src/cluster/*shard*`).
+    shard: bool,
+    /// D6 applies: `rust/src/**` minus the `shetm` CLI (`rust/src/main.rs`).
+    lib: bool,
+}
+
+impl Scope {
+    fn of(rel: &str) -> Scope {
+        let in_src = rel.starts_with("rust/src/");
+        let det_path = in_src
+            && DET_DIRS.iter().any(|d| rel.starts_with(&format!("rust/src/{d}/")));
+        Scope {
+            det_path,
+            wall_ok: rel == "rust/src/util/bench.rs" || rel.starts_with("rust/benches/"),
+            shard: in_src && rel.contains("cluster/") && file_name_of(rel).contains("shard"),
+            lib: in_src && rel != "rust/src/main.rs",
+        }
+    }
+}
+
+fn file_name_of(rel: &str) -> &str {
+    rel.rsplit('/').next().unwrap_or(rel)
+}
+
+/// Lines that are pure `use` declarations: imports alone don't break
+/// determinism, the *usage* does (and is flagged where it happens).
+fn use_lines(src: &str) -> Vec<bool> {
+    src.lines()
+        .map(|l| {
+            let t = l.trim_start();
+            t.starts_with("use ") || t.starts_with("pub use ")
+        })
+        .collect()
+}
+
+fn check_file(rel: &str, src: &str, findings: &mut Vec<Finding>) {
+    let scope = Scope::of(rel);
+    let mut toks = lex(src);
+    mark_test_scopes(&mut toks);
+    let imports = use_lines(src);
+    let is_import = |line: u32| imports.get(line as usize - 1).copied().unwrap_or(false);
+
+    let mut code_lines: Vec<u32> = toks.iter().map(|t| t.line).collect();
+    code_lines.dedup();
+    let mut pragmas = parse_pragmas(src, &code_lines);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    let mut push = |line: u32, rule: &'static str, msg: String| {
+        raw.push(Finding { file: rel.to_string(), line, rule, msg });
+    };
+
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        let ident = t.kind == Kind::Ident;
+
+        // D1 — Default-hashed collections in deterministic paths.
+        if scope.det_path
+            && !t.test
+            && ident
+            && (t.s == "HashMap" || t.s == "HashSet")
+            && !is_import(t.line)
+        {
+            push(t.line, "D1", format!(
+                "{} in deterministic path — iteration order is ambient; use BTreeMap/BTreeSet or a sorted collect",
+                t.s
+            ));
+        }
+
+        // D2 — wall-clock reads outside the bench whitelist.
+        if !scope.wall_ok && ident && !is_import(t.line) {
+            if t.s == "SystemTime" {
+                push(t.line, "D2", "SystemTime read — wall clock leaks into deterministic state".to_string());
+            } else if t.s == "Instant"
+                && i + 2 < n
+                && toks[i + 1].s == "::"
+                && toks[i + 2].s == "now"
+            {
+                push(t.line, "D2", "Instant::now outside util/bench.rs / rust/benches — wall clock leaks into deterministic state".to_string());
+            }
+        }
+
+        // D3 — unordered float reductions in deterministic paths.
+        if scope.det_path && !t.test && ident {
+            if t.s == "sum"
+                && i + 4 < n
+                && toks[i + 1].s == "::"
+                && toks[i + 2].s == "<"
+                && (toks[i + 3].s == "f64" || toks[i + 3].s == "f32")
+            {
+                push(t.line, "D3", format!(
+                    ".sum::<{}>() — float accumulation order must be fixed; use the ordered fold helpers",
+                    toks[i + 3].s
+                ));
+            }
+            if t.s == "fold"
+                && i >= 1
+                && toks[i - 1].s == "."
+                && i + 2 < n
+                && toks[i + 1].s == "("
+                && toks[i + 2].kind == Kind::Num
+                && toks[i + 2].s.contains('.')
+            {
+                push(t.line, "D3", "float fold — accumulation order must be fixed; use the ordered fold helpers".to_string());
+            }
+        }
+
+        // D4 — ambient randomness, everywhere.
+        if ident && D4_IDENTS.contains(&t.s.as_str()) && !is_import(t.line) {
+            push(t.line, "D4", format!("{} — ambient entropy; seeds must flow from config", t.s));
+        }
+
+        // D5 — shard-layout arithmetic.
+        if scope.shard && !t.test {
+            if t.s == "<<" || t.s == "<<=" {
+                push(t.line, "D5", "unchecked shift in shard-layout arithmetic — overflow wraps in release; use checked_shl/checked_mul or pragma the proven-guarded site".to_string());
+            }
+            if ident && t.s == "as" && i + 1 < n && D5_NARROW.contains(&toks[i + 1].s.as_str()) {
+                push(t.line, "D5", format!(
+                    "narrowing `as {}` cast in shard-layout arithmetic — use try_into or pragma the proven-bounded site",
+                    toks[i + 1].s
+                ));
+            }
+            if t.s == "*"
+                && i >= 1
+                && i + 1 < n
+                && binary_operand(&toks[i - 1], true)
+                && binary_operand(&toks[i + 1], false)
+            {
+                push(t.line, "D5", "unchecked multiply in shard-layout arithmetic — overflow wraps in release; use checked_mul or pragma the proven-bounded site".to_string());
+            }
+        }
+
+        // D6 — panic policy in library code.
+        if scope.lib
+            && !t.test
+            && ident
+            && (t.s == "unwrap" || t.s == "expect")
+            && i >= 1
+            && toks[i - 1].s == "."
+            && i + 1 < n
+            && toks[i + 1].s == "("
+        {
+            push(t.line, "D6", format!(
+                ".{}() in library code — return a typed error, restructure, or pragma with a reason",
+                t.s
+            ));
+        }
+
+        i += 1;
+    }
+
+    // Apply suppressions; surface bad and unused pragmas.
+    for f in raw {
+        let hit = pragmas
+            .iter_mut()
+            .find(|p| p.bad.is_none() && p.rule == f.rule && p.target == f.line);
+        if let Some(p) = hit {
+            p.used = true;
+        } else {
+            findings.push(f);
+        }
+    }
+    for p in &pragmas {
+        if let Some(why) = p.bad {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: p.line,
+                rule: "PRAGMA",
+                msg: format!("malformed audit:allow pragma — {why}"),
+            });
+        } else if !p.used {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: p.line,
+                rule: "PRAGMA",
+                msg: format!("unused audit:allow({}) — the finding it suppressed is gone; remove it", p.rule),
+            });
+        }
+    }
+}
+
+/// Can this token be the left/right operand of a binary `*`?  Filters
+/// out derefs (`*x`, `&**g`) where the left neighbour is an operator.
+fn binary_operand(t: &Tok, left: bool) -> bool {
+    match t.kind {
+        Kind::Ident => t.s != "as" && t.s != "mut" && t.s != "dyn" && t.s != "const",
+        Kind::Num => true,
+        Kind::Punct => {
+            if left {
+                t.s == ")" || t.s == "]"
+            } else {
+                t.s == "("
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// Scan roots relative to `--root`: the crate's source, test, bench and
+/// example trees.  `tools/` (this binary) and `audit_fixtures/`
+/// corpora are exempt by construction — fixtures are scanned only when
+/// named explicitly via `--root`.
+const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            if p.file_name().is_some_and(|n| n == "audit_fixtures") {
+                continue;
+            }
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn usage() -> &'static str {
+    "shetm-audit [--root DIR] [--deny] [--list-rules] [PATH...]\n\
+     \n\
+     Lints the tree under --root (default `.`) against the determinism\n\
+     rules of DESIGN.md §15.  PATH arguments (relative to --root)\n\
+     restrict the scan; the default covers rust/src, rust/tests,\n\
+     rust/benches and examples.  --deny exits 1 when any unsuppressed\n\
+     finding remains (the CI mode)."
+}
+
+fn main() -> ExitCode {
+    let mut deny = false;
+    let mut root = PathBuf::from(".");
+    let mut picks: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--deny" => deny = true,
+            "--root" => match args.next() {
+                Some(d) => root = PathBuf::from(d),
+                None => {
+                    eprintln!("shetm-audit: --root needs a directory\n{}", usage());
+                    return ExitCode::from(2);
+                }
+            },
+            "--list-rules" => {
+                for (id, what) in RULES {
+                    println!("{id}  {what}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            _ if a.starts_with('-') => {
+                eprintln!("shetm-audit: unknown flag {a}\n{}", usage());
+                return ExitCode::from(2);
+            }
+            _ => picks.push(a),
+        }
+    }
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    let roots: Vec<String> = if picks.is_empty() {
+        SCAN_ROOTS.iter().map(|s| s.to_string()).collect()
+    } else {
+        picks
+    };
+    for r in &roots {
+        let p = root.join(r);
+        if p.is_dir() {
+            collect_rs(&p, &mut files);
+        } else if p.is_file() {
+            files.push(p);
+        }
+    }
+    if files.is_empty() {
+        eprintln!("shetm-audit: nothing to scan under {}", root.display());
+        return ExitCode::from(2);
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in &files {
+        let src = match fs::read_to_string(f) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("shetm-audit: cannot read {}: {e}", f.display());
+                return ExitCode::from(2);
+            }
+        };
+        let rel = f
+            .strip_prefix(&root)
+            .unwrap_or(f)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        check_file(&rel, &src, &mut findings);
+    }
+
+    findings.sort();
+    for f in &findings {
+        println!("{}:{}: {}: {}", f.file, f.line, f.rule, f.msg);
+    }
+    if findings.is_empty() {
+        println!("shetm-audit: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "shetm-audit: {} finding(s) in {} files scanned{}",
+            findings.len(),
+            files.len(),
+            if deny { "" } else { " (report-only; use --deny to gate)" }
+        );
+        if deny {
+            ExitCode::FAILURE
+        } else {
+            ExitCode::SUCCESS
+        }
+    }
+}
